@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `python/` importable so the suite can run
+as `pytest python/tests/` from the repository root (the Makefile's
+`make test` cds into python/ instead; both work)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,164 @@
+//! End-to-end driver: every layer of the system on a real small workload.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example end_to_end
+//! ```
+//!
+//! Proves the full stack composes (recorded in EXPERIMENTS.md):
+//!
+//! 1. **Data** — benchmark stand-ins with the paper's Table-1 shapes;
+//! 2. **λ grid search** via the eq. 7/8 LOO shortcut on the training fold;
+//! 3. **Selection** with the paper's O(kmn) greedy RLS on the **native**
+//!    engine AND through the **PJRT artifacts** (Pallas score kernel +
+//!    rank-1 update compiled from HLO text) — results must agree exactly;
+//! 4. **Quality** — greedy vs random test accuracy (the Fig-4..9 claim);
+//! 5. **Scaling** — measured runtime vs m showing the linear trend
+//!    (the Fig-3 claim);
+//! 6. **Serving** — the selected sparse model answers batched requests on
+//!    both the native path and the PJRT `predict` artifact.
+
+use greedy_rls::bench::time_once;
+use greedy_rls::coordinator::{self, cv, grid, serve, EngineKind};
+use greedy_rls::data::{registry, synthetic};
+use greedy_rls::metrics::{accuracy, Loss};
+use greedy_rls::rng::Pcg64;
+use greedy_rls::runtime::Runtime;
+use greedy_rls::select::{
+    greedy::GreedyRls, random::RandomSelector, SelectionConfig, Selector,
+};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== greedy RLS end-to-end driver ===\n");
+
+    // ---------------------------------------------------------------- 1
+    let ds = registry::load("australian", false, 42)?;
+    println!(
+        "[1] dataset {}: m={} n={}",
+        ds.name,
+        ds.n_examples(),
+        ds.n_features()
+    );
+    let mut rng = Pcg64::seeded(7);
+    let (tr, te) = greedy_rls::data::folds::train_test_split(
+        ds.n_examples(),
+        0.25,
+        &mut rng,
+    );
+    let mut train = ds.subset(&tr);
+    let mut test = ds.subset(&te);
+    let stats = train.standardize();
+    test.apply_standardization(&stats);
+
+    // ---------------------------------------------------------------- 2
+    let (lambda, crit) = grid::search(
+        &train.x,
+        &train.y,
+        &grid::default_grid(),
+        Loss::ZeroOne,
+    );
+    println!(
+        "[2] λ grid search (full-feature LOO): λ={lambda} \
+         (LOO errors {crit:.0}/{})",
+        train.n_examples()
+    );
+
+    // ---------------------------------------------------------------- 3
+    let k = 8.min(train.n_features());
+    let cfg = SelectionConfig { k, lambda, loss: Loss::ZeroOne };
+    let native = GreedyRls.select(&train.x, &train.y, &cfg)?;
+    println!("[3] native engine selected:  {:?}", native.selected);
+
+    let rt = Runtime::open("artifacts")?;
+    let pjrt = coordinator::select_with_engine(
+        EngineKind::Pjrt,
+        Some(&rt),
+        &train.x,
+        &train.y,
+        &cfg,
+    )?;
+    println!("    PJRT engine selected:    {:?}", pjrt.selected);
+    anyhow::ensure!(
+        native.selected == pjrt.selected,
+        "engine disagreement!"
+    );
+    let max_dw = native
+        .weights
+        .iter()
+        .zip(&pjrt.weights)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0_f64, f64::max);
+    println!("    engines agree; max |Δw| = {max_dw:.2e}");
+
+    // ---------------------------------------------------------------- 4
+    let p_greedy = native.predictor();
+    let acc_greedy = accuracy(&test.y, &p_greedy.predict_matrix(&test.x));
+    let rnd = RandomSelector { seed: 1 }.select(&train.x, &train.y, &cfg)?;
+    let acc_rnd = accuracy(&test.y, &rnd.predictor().predict_matrix(&test.x));
+    println!(
+        "[4] test accuracy with k={k}: greedy {acc_greedy:.3} vs random \
+         {acc_rnd:.3}"
+    );
+
+    // full 10-fold protocol on a second dataset (paper §4.2, one figure)
+    let ds2 = registry::load("german.numer", false, 42)?;
+    let curves = cv::run_cv(&ds2, 10, 12, 42)?;
+    println!(
+        "    german.numer 10-fold: k=12 greedy {:.3} random {:.3} \
+         (LOO est. {:.3})",
+        curves.greedy_test[11], curves.random_test[11], curves.greedy_loo[11]
+    );
+
+    // ---------------------------------------------------------------- 5
+    println!("[5] runtime scaling (n=500, k=20, two-Gaussian data):");
+    let mut last: Option<f64> = None;
+    for m in [500usize, 1000, 2000, 4000] {
+        let sds = synthetic::two_gaussians(m, 500, 25, 1.0, 3);
+        let scfg = SelectionConfig { k: 20, lambda: 1.0, loss: Loss::ZeroOne };
+        let secs = time_once(|| {
+            GreedyRls.select(&sds.x, &sds.y, &scfg).unwrap();
+        });
+        let ratio = last.map(|p| secs / p).unwrap_or(f64::NAN);
+        println!(
+            "      m={m:>5}: {secs:>7.3}s{}",
+            if ratio.is_nan() {
+                String::new()
+            } else {
+                format!("  (×{ratio:.2} for ×2 data — linear ⇒ ≈2)")
+            }
+        );
+        last = Some(secs);
+    }
+
+    // ---------------------------------------------------------------- 6
+    let (pred_n, stats_n) = serve::serve_native(&p_greedy, &test.x, 32);
+    let (pred_p, stats_p) = serve::serve_pjrt(&rt, &p_greedy, &test.x, 32)?;
+    let agree = pred_n
+        .iter()
+        .zip(&pred_p)
+        .all(|(a, b)| (a - b).abs() < 1e-9);
+    println!(
+        "[6] serving {} test examples (batch 32):",
+        test.n_examples()
+    );
+    println!(
+        "      native: p50 {:.2}µs/batch, {:.0} ex/s",
+        stats_n.p50_batch_s * 1e6,
+        stats_n.throughput
+    );
+    println!(
+        "      pjrt:   p50 {:.2}µs/batch, {:.0} ex/s   (same predictions: {agree})",
+        stats_p.p50_batch_s * 1e6,
+        stats_p.throughput
+    );
+    anyhow::ensure!(agree, "serving paths disagree");
+    let _ = &ds; // original dataset retained for future extensions
+
+    // persist + reload the model as a deployment artifact
+    let path = std::env::temp_dir().join("end_to_end_model.txt");
+    coordinator::save_model(&p_greedy, &path)?;
+    let reloaded = coordinator::load_model(&path)?;
+    anyhow::ensure!(reloaded.selected == p_greedy.selected);
+    println!("\nmodel persisted to {} and reloaded OK", path.display());
+    println!("\n=== end-to-end: all layers compose ===");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Feature-quality experiment (paper §4.2, Figures 4–9).
+//!
+//! ```sh
+//! cargo run --release --offline --example feature_quality [-- --datasets a,b]
+//! ```
+//!
+//! Stratified 10-fold CV on each benchmark dataset: per fold, grid-search
+//! λ by full-feature LOO, then select features greedily, plotting test
+//! accuracy after every added feature for greedy vs the random baseline.
+
+use greedy_rls::coordinator::cv;
+use greedy_rls::data::registry;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let datasets: Vec<String> = args
+        .iter()
+        .position(|a| a == "--datasets")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v.split(',').map(|s| s.to_string()).collect())
+        .unwrap_or_else(|| {
+            registry::names().iter().map(|s| s.to_string()).collect()
+        });
+
+    for name in &datasets {
+        let ds = registry::load(name, false, 42)?;
+        let k_max = ds.n_features().min(40);
+        println!(
+            "\n# Figure {}: {name} (m={}, n={}), 10-fold stratified CV",
+            match name.as_str() {
+                "adult" => "4",
+                "australian" => "5",
+                "colon-cancer" => "6",
+                "german.numer" => "7",
+                "ijcnn1" => "8",
+                "mnist5" => "9",
+                _ => "-",
+            },
+            ds.n_examples(),
+            ds.n_features()
+        );
+        let folds = if ds.n_examples() < 100 { 5 } else { 10 };
+        let curves = cv::run_cv(&ds, folds, k_max, 42)?;
+        println!("k\tgreedy_test\trandom_test\tstd");
+        for (i, k) in curves.ks.iter().enumerate() {
+            println!(
+                "{k}\t{:.4}\t{:.4}\t{:.4}",
+                curves.greedy_test[i],
+                curves.random_test[i],
+                curves.greedy_test_std[i]
+            );
+        }
+        let last = curves.ks.len() - 1;
+        println!(
+            "# greedy {:.3} vs random {:.3} at k={} — greedy dominates: {}",
+            curves.greedy_test[last],
+            curves.random_test[last],
+            curves.ks[last],
+            curves
+                .greedy_test
+                .iter()
+                .zip(&curves.random_test)
+                .filter(|(g, r)| g >= r)
+                .count()
+                >= curves.ks.len() / 2
+        );
+    }
+    Ok(())
+}

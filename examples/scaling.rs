@@ -1,0 +1,62 @@
+//! Runtime-scaling experiment (paper §4.1, Figures 1–3).
+//!
+//! ```sh
+//! cargo run --release --offline --example scaling [-- --full]
+//! ```
+//!
+//! Greedy RLS vs the low-rank updated LS-SVM baseline on two-Gaussian
+//! synthetic data with n=1000 features, selecting k=50 — the paper's exact
+//! workload. The full paper grid (m to 50 000) takes a while on one vCPU;
+//! the default is a reduced grid, `--full` runs the paper's.
+
+use greedy_rls::bench::time_once;
+use greedy_rls::data::synthetic::two_gaussians;
+use greedy_rls::metrics::Loss;
+use greedy_rls::select::{
+    greedy::GreedyRls, lowrank::LowRankLsSvm, SelectionConfig, Selector,
+};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n, k) = (1000usize, 50usize);
+    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+
+    // Fig 1/2 workload: m = 500..5000, both methods.
+    let ms_both: &[usize] = if full {
+        &[500, 1000, 1500, 2000, 2500, 3000, 3500, 4000, 4500, 5000]
+    } else {
+        &[500, 1000, 1500, 2000]
+    };
+    println!("# Figures 1–2: greedy RLS vs low-rank updated LS-SVM");
+    println!("# n={n} features, k={k} selected, two-Gaussian data");
+    println!("m\tgreedy_s\tlowrank_s\tratio");
+    for &m in ms_both {
+        let ds = two_gaussians(m, n, 50, 1.0, 42);
+        let t_g = time_once(|| {
+            GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        });
+        let t_l = time_once(|| {
+            LowRankLsSvm.select(&ds.x, &ds.y, &cfg).unwrap();
+        });
+        println!("{m}\t{t_g:.3}\t{t_l:.3}\t{:.1}", t_l / t_g);
+    }
+
+    // Fig 3 workload: greedy only, larger m.
+    let ms_large: &[usize] = if full {
+        &[1000, 5000, 10000, 20000, 30000, 40000, 50000]
+    } else {
+        &[1000, 2000, 5000, 10000]
+    };
+    println!("\n# Figure 3: greedy RLS alone, larger training sets");
+    println!("m\tgreedy_s\ts_per_km");
+    for &m in ms_large {
+        let ds = two_gaussians(m, n, 50, 1.0, 43);
+        let t_g = time_once(|| {
+            GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        });
+        // seconds per (k·m·n/1e9): constant ⇒ linear scaling in m
+        let unit = t_g / (k as f64 * m as f64 * n as f64 / 1e9);
+        println!("{m}\t{t_g:.3}\t{unit:.3}");
+    }
+    println!("\n# constant s_per_km across rows ⇒ the paper's O(kmn) claim");
+}

@@ -1,0 +1,118 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. (See /opt/xla-example/README.)
+
+Every entry point is lowered with ``return_tuple=True`` so the Rust side
+always unwraps a tuple, and at every (m, n) bucket listed in BUCKETS.
+A manifest (artifacts/manifest.tsv) records entry name, file, shapes and
+argument order so the runtime never guesses.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (m, n) shape buckets for the selection-loop entry points. The runtime
+# pads a real (m, n) job into the smallest enclosing bucket; padding is
+# exact (DESIGN.md §5). Buckets are kept modest because the CPU PJRT
+# compile happens once per (entry, bucket) at coordinator startup.
+BUCKETS = [
+    (64, 128),
+    (256, 256),
+    (512, 1024),
+    (1024, 2048),
+]
+
+# (k, t) buckets for the serving entry points.
+PREDICT_BUCKETS = [(64, 256), (128, 1024)]
+TRAIN_BUCKETS = [(64, 256), (128, 1024)]  # (k, m)
+
+SELECTION_ENTRIES = ["init_state", "score_step", "commit_step"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry: str, *shape_args) -> str:
+    fn = model.ENTRY_POINTS[entry]
+    lowered = jax.jit(fn).lower(*model.example_args(entry, *shape_args))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=None,
+        help="comma list of MxN selection buckets, e.g. 256x256,1024x2048",
+    )
+    args = ap.parse_args()
+
+    buckets = BUCKETS
+    if args.buckets:
+        buckets = [
+            tuple(int(x) for x in b.split("x")) for b in args.buckets.split(",")
+        ]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+
+    for m, n in buckets:
+        for entry in SELECTION_ENTRIES:
+            name = f"{entry}_m{m}_n{n}"
+            text = lower_entry(entry, m, n)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(text)
+            manifest.append((entry, f"{name}.hlo.txt", f"m={m}", f"n={n}"))
+            print(f"wrote {path}  ({len(text)} chars)")
+
+    for k, t in PREDICT_BUCKETS:
+        name = f"predict_k{k}_t{t}"
+        lowered = jax.jit(model.predict).lower(
+            *model.example_args("predict", 0, 0, k=k, t=t)
+        )
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        manifest.append(("predict", f"{name}.hlo.txt", f"k={k}", f"t={t}"))
+        print(f"wrote {path}")
+
+    for k, m in TRAIN_BUCKETS:
+        name = f"train_dual_k{k}_m{m}"
+        lowered = jax.jit(model.train_dual).lower(
+            *model.example_args("train_dual", m, 0, k=k)
+        )
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        manifest.append(("train_dual", f"{name}.hlo.txt", f"k={k}", f"m={m}"))
+        print(f"wrote {path}")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as fh:
+        fh.write("# entry\tfile\tdim1\tdim2\tdtype=f64\treturn_tuple=1\n")
+        for row in manifest:
+            fh.write("\t".join(row) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

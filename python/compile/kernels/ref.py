@@ -1,0 +1,175 @@
+"""Pure-jnp / numpy oracles for the greedy-RLS kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must agree with the functions here (pytest enforces it, with
+hypothesis sweeping shapes / dtypes / regularization).
+
+Notation follows the paper (Pahikkala, Airola, Salakoski 2010):
+
+    X  : (n, m)  feature matrix, X[i, j] = value of feature i on example j
+    y  : (m,)    labels (+-1 for classification, real for regression)
+    C  : (m, n)  cache matrix  C = G X^T,  G = (K + lam I)^{-1}
+    a  : (m,)    dual variables  a = G y
+    d  : (m,)    diag(G)
+
+For the empty feature set, K = 0 so G = I/lam and the caches initialize to
+    C0 = X^T / lam,   a0 = y / lam,   d0 = 1/lam.
+
+Scoring a candidate feature i (eqs. 14, 15, 17 and (8) of the paper):
+
+    v      = X[i, :]
+    c      = C[:, i]
+    u      = c / (1 + v.c)
+    a~     = a - u (v.a)
+    d~     = d - u * c
+    p_j    = y_j - a~_j / d~_j          (LOO prediction for example j)
+    e_i    = sum_j loss(y_j, p_j)
+
+Committing the winning feature b (SMW rank-1 downdate of G):
+
+    a <- a~,  d <- d~,  C <- C - u (v^T C)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+BIG = 1e30  # sentinel for masked-out candidates (avoids inf-arithmetic NaNs)
+
+
+# ---------------------------------------------------------------------------
+# Candidate scoring
+# ---------------------------------------------------------------------------
+
+
+def loo_scores_ref(X, C, a, d, y, cand_mask, ex_mask):
+    """LOO error of S+{i} for every candidate i, vectorized over features.
+
+    Returns (e_sq, e_01):
+      e_sq[i] = sum_j ex_mask[j] * (y_j - p_j)^2
+      e_01[i] = sum_j ex_mask[j] * [y_j * p_j <= 0]   (an example predicted
+                exactly 0 counts as an error)
+    Candidates with cand_mask == 0 score BIG in both outputs.
+    """
+    X = jnp.asarray(X)
+    C = jnp.asarray(C)
+    vc = jnp.sum(X * C.T, axis=1)  # (n,)  v_i . C[:, i]
+    va = X @ a  # (n,)  v_i . a
+    denom = 1.0 + vc
+    U = C / denom[None, :]  # (m, n) u vectors, one per candidate
+    A = a[:, None] - U * va[None, :]  # (m, n) updated dual variables
+    D = d[:, None] - U * C  # (m, n) updated diag(G)
+    P = y[:, None] - A / D  # (m, n) LOO predictions
+    resid = y[:, None] - P
+    e_sq = jnp.sum(ex_mask[:, None] * resid * resid, axis=0)
+    correct = (y[:, None] * P) > 0.0
+    e_01 = jnp.sum(ex_mask[:, None] * jnp.where(correct, 0.0, 1.0), axis=0)
+    big = jnp.asarray(BIG, dtype=e_sq.dtype)
+    e_sq = jnp.where(cand_mask > 0, e_sq, big)
+    e_01 = jnp.where(cand_mask > 0, e_01, big)
+    return e_sq, e_01
+
+
+# ---------------------------------------------------------------------------
+# Rank-1 cache update
+# ---------------------------------------------------------------------------
+
+
+def rank1_update_ref(C, u, w):
+    """C <- C - u w^T  (the commit-step cache update)."""
+    return C - u[:, None] * w[None, :]
+
+
+def commit_ref(X, C, a, d, b):
+    """Full commit of feature index b: returns (C', a', d')."""
+    v = X[b, :]
+    c = C[:, b]
+    u = c / (1.0 + v @ c)
+    a2 = a - u * (v @ a)
+    d2 = d - u * c
+    w = X[b, :] @ C  # v^T C, shape (n,)
+    C2 = rank1_update_ref(C, u, w)
+    return C2, a2, d2
+
+
+def init_state_ref(X, y, lam):
+    """Caches for the empty feature set."""
+    C0 = X.T / lam
+    a0 = y / lam
+    d0 = jnp.full(y.shape, 1.0 / lam, dtype=X.dtype)
+    return C0, a0, d0
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracles (no shortcuts at all) — used only in tests
+# ---------------------------------------------------------------------------
+
+
+def rls_dual_train_np(Xs, y, lam):
+    """Dual RLS (eq. 4): returns (a, G) with G = (Xs^T Xs + lam I)^{-1}."""
+    Xs = np.asarray(Xs, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    m = Xs.shape[1]
+    K = Xs.T @ Xs
+    G = np.linalg.inv(K + lam * np.eye(m))
+    return G @ y, G
+
+
+def brute_force_loo_np(Xs, y, lam):
+    """LOO predictions by literally retraining m times (Algorithm 1 inner
+    loop). Xs: (|S|, m). Returns p: (m,)."""
+    Xs = np.asarray(Xs, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    s, m = Xs.shape
+    p = np.zeros(m)
+    for j in range(m):
+        keep = [t for t in range(m) if t != j]
+        Xl = Xs[:, keep]
+        yl = y[keep]
+        # primal (eq. 3): w = (X X^T + lam I)^{-1} X y
+        w = np.linalg.solve(Xl @ Xl.T + lam * np.eye(s), Xl @ yl)
+        p[j] = w @ Xs[:, j]
+    return p
+
+
+def greedy_rls_np(X, y, lam, k, classification=False):
+    """Reference greedy RLS (Algorithm 3 verbatim, numpy float64).
+
+    Returns (selected_indices, w_dense) where w_dense is the n-vector with
+    the learned weights scattered into selected positions.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    n, m = X.shape
+    a = y / lam
+    d = np.full(m, 1.0 / lam)
+    C = X.T / lam
+    selected: list[int] = []
+    for _ in range(k):
+        best, best_e = -1, np.inf
+        for i in range(n):
+            if i in selected:
+                continue
+            v = X[i]
+            c = C[:, i]
+            u = c / (1.0 + v @ c)
+            a2 = a - u * (v @ a)
+            d2 = d - u * c
+            p = y - a2 / d2
+            if classification:
+                e = float(np.sum((y * p) <= 0.0))
+            else:
+                e = float(np.sum((y - p) ** 2))
+            if e < best_e:
+                best_e, best = e, i
+        v = X[best]
+        c = C[:, best]
+        u = c / (1.0 + v @ c)
+        a = a - u * (v @ a)
+        d = d - u * c
+        C = C - np.outer(u, v @ C)
+        selected.append(best)
+    w = np.zeros(n)
+    w[selected] = X[selected] @ a
+    return selected, w

@@ -1,0 +1,123 @@
+"""Layer-1 Pallas kernel: LOO scoring of every candidate feature.
+
+This is the hot spot of greedy RLS: one selection round evaluates all n
+candidate features against the current caches (C, a, d) in O(mn) work.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the candidate dimension n is
+tiled into blocks of ``block_n`` columns. Each grid step holds in VMEM
+
+    X block : (block_n, m)   the candidate feature value vectors v_i
+    C block : (m, block_n)   the cached columns C[:, i] = (G X^T)[:, i]
+    a, d, y, ex_mask : (m,)  broadcast to every candidate in the block
+
+and produces two (block_n,) score rows. The per-candidate math is pure
+element-wise VPU work plus an m-reduction — G (m x m) is never formed,
+which is exactly the paper's memory insight restated as a BlockSpec.
+
+VMEM budget per grid step at f32, m = 2048, block_n = 128:
+    X block 1 MiB + C block 1 MiB + vectors ~32 KiB + (m, block_n)
+    temporaries ~3 MiB  =>  ~5 MiB, comfortably inside the ~16 MiB/core
+    budget; block_n is the single tuning knob if m grows.
+
+interpret=True is mandatory here: the environment's PJRT CPU plugin cannot
+run Mosaic custom-calls, so the kernel lowers to plain HLO. The BlockSpec
+structure is still the real-TPU schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BIG
+
+
+def _score_block(x_ref, c_ref, a_ref, d_ref, y_ref, cmask_ref, emask_ref,
+                 e_sq_ref, e_01_ref):
+    """One block of candidates: compute both loss rows.
+
+    Shapes inside the kernel:
+        x_ref     (block_n, m)
+        c_ref     (m, block_n)
+        a/d/y/emask_ref (m,)
+        cmask_ref (block_n,)
+        e_*_ref   (block_n,)
+    """
+    xb = x_ref[...]
+    cb = c_ref[...]
+    a = a_ref[...]
+    d = d_ref[...]
+    y = y_ref[...]
+    emask = emask_ref[...]
+    cmask = cmask_ref[...]
+
+    # v_i . C[:, i] and v_i . a for every candidate i in the block.
+    vc = jnp.sum(xb * cb.T, axis=1)  # (block_n,)
+    va = xb @ a  # (block_n,)
+
+    denom = 1.0 + vc
+    u = cb / denom[None, :]  # (m, block_n)
+    a_t = a[:, None] - u * va[None, :]  # updated dual variables
+    d_t = d[:, None] - u * cb  # updated diag(G)
+    p = y[:, None] - a_t / d_t  # LOO predictions
+
+    resid = y[:, None] - p
+    e_sq = jnp.sum(emask[:, None] * resid * resid, axis=0)
+    wrong = jnp.where((y[:, None] * p) > 0.0, 0.0, 1.0)
+    e_01 = jnp.sum(emask[:, None] * wrong, axis=0)
+
+    big = jnp.asarray(BIG, dtype=e_sq.dtype)
+    e_sq_ref[...] = jnp.where(cmask > 0, e_sq, big)
+    e_01_ref[...] = jnp.where(cmask > 0, e_01, big)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def loo_scores(X, C, a, d, y, cand_mask, ex_mask, *, block_n: int = 128):
+    """Pallas-blocked LOO scores for all candidates.
+
+    Args:
+        X: (n, m) feature matrix (feature-major, as in the paper).
+        C: (m, n) cache matrix G X^T.
+        a: (m,) dual variables.
+        d: (m,) diag(G).
+        y: (m,) labels.
+        cand_mask: (n,) 1.0 for evaluable candidates, 0.0 for
+            already-selected / padded features (scored BIG).
+        ex_mask: (m,) 1.0 for real examples, 0.0 for padding rows.
+        block_n: candidate-dimension tile size; n must be divisible by it
+            (the AOT buckets guarantee this; tests sweep odd sizes via the
+            runtime's padding path).
+
+    Returns:
+        (e_sq, e_01): each (n,), the summed squared / zero-one LOO losses.
+    """
+    n, m = X.shape
+    if n % block_n != 0:
+        # Fall back to one block over everything (tiny test shapes).
+        block_n = n
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _score_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),  # X
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),  # C
+            pl.BlockSpec((m,), lambda i: (0,)),  # a
+            pl.BlockSpec((m,), lambda i: (0,)),  # d
+            pl.BlockSpec((m,), lambda i: (0,)),  # y
+            pl.BlockSpec((block_n,), lambda i: (i,)),  # cand_mask
+            pl.BlockSpec((m,), lambda i: (0,)),  # ex_mask
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), X.dtype),
+            jax.ShapeDtypeStruct((n,), X.dtype),
+        ],
+        interpret=True,
+    )(X, C, a, d, y, cand_mask, ex_mask)

@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: rank-1 cache update  C <- C - u w^T.
+
+The commit step of greedy RLS (Algorithm 3, line 29). This is the second
+O(mn) operation per selection round; u = C[:, b] / (1 + v.C[:, b]) is an
+m-vector and w = v^T C an n-vector, both computed by the caller (Layer 2),
+so the kernel itself is a pure streaming rank-1 downdate.
+
+TPU mapping: tile the n (column) dimension; each grid step updates an
+(m, block_n) slab of C in place of a VMEM-resident tile, reading the
+broadcast u once. Bandwidth-bound by design — one read + one write of C.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rank1_block(c_ref, u_ref, w_ref, out_ref):
+    out_ref[...] = c_ref[...] - u_ref[...][:, None] * w_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def rank1_update(C, u, w, *, block_n: int = 256):
+    """C - u w^T, tiled over columns.
+
+    Args:
+        C: (m, n) cache matrix.
+        u: (m,) update vector (already divided by 1 + v.c).
+        w: (n,) row vector v^T C.
+        block_n: column tile width; n must divide (AOT buckets guarantee).
+
+    Returns: the updated (m, n) matrix.
+    """
+    m, n = C.shape
+    if n % block_n != 0:
+        block_n = n
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _rank1_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), C.dtype),
+        interpret=True,
+    )(C, u, w)

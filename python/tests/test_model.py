@@ -1,0 +1,178 @@
+"""Layer-2 entry points: shapes, semantics, and full-loop equivalence.
+
+The decisive test drives a complete greedy selection using only the AOT
+entry points (init_state / score_step / commit_step), exactly as the Rust
+coordinator will, and requires the selected sequence and final weights to
+match the verbatim-Algorithm-3 numpy reference.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def drive_selection(X, y, lam, k, classification=True):
+    """Run greedy RLS through the L2 entry points (the L3 control flow)."""
+    n, m = X.shape
+    C, a, d = model.init_state(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray([lam])
+    )
+    cmask = np.ones(n)
+    emask = np.ones(m)
+    selected = []
+    for _ in range(k):
+        e_sq, e_01 = model.score_step(
+            jnp.asarray(X), C, a, d, jnp.asarray(y),
+            jnp.asarray(cmask), jnp.asarray(emask),
+        )
+        scores = np.asarray(e_01 if classification else e_sq)
+        b = int(np.argmin(scores))
+        C, a, d = model.commit_step(
+            jnp.asarray(X), C, a, d, jnp.asarray(b, dtype=jnp.int32)
+        )
+        cmask[b] = 0.0
+        selected.append(b)
+    w = np.zeros(n)
+    w[selected] = X[selected, :] @ np.asarray(a)
+    return selected, w
+
+
+class TestInitState:
+    def test_values(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(5, 7))
+        y = rng.normal(size=7)
+        C, a, d = model.init_state(
+            jnp.asarray(X), jnp.asarray(y), jnp.asarray([2.0])
+        )
+        np.testing.assert_allclose(C, X.T / 2.0)
+        np.testing.assert_allclose(a, y / 2.0)
+        np.testing.assert_allclose(d, np.full(7, 0.5))
+
+
+class TestCommitStep:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(2, 20),
+        m=st.integers(2, 20),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        lam = 1.0
+        X = rng.normal(size=(n, m))
+        y = rng.normal(size=m)
+        C = X.T / lam
+        a = y / lam
+        d = np.full(m, 1.0 / lam)
+        b = int(rng.integers(n))
+        C2, a2, d2 = model.commit_step(
+            jnp.asarray(X), jnp.asarray(C), jnp.asarray(a), jnp.asarray(d),
+            jnp.asarray(b, dtype=jnp.int32),
+        )
+        Cr, ar, dr = ref.commit_ref(X, C, a, d, b)
+        np.testing.assert_allclose(C2, Cr, rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(a2, ar, rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(d2, dr, rtol=1e-10, atol=1e-10)
+
+
+class TestFullSelectionLoop:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_equivalent_to_reference_regression(self, seed):
+        rng = np.random.default_rng(seed)
+        n, m, k, lam = 12, 15, 4, 1.0
+        X = rng.normal(size=(n, m))
+        y = rng.normal(size=m)
+        sel, w = drive_selection(X, y, lam, k, classification=False)
+        sel_ref, w_ref = ref.greedy_rls_np(X, y, lam, k, classification=False)
+        assert sel == sel_ref
+        np.testing.assert_allclose(w, w_ref, rtol=1e-8, atol=1e-8)
+
+    def test_equivalent_to_reference_classification(self):
+        rng = np.random.default_rng(42)
+        n, m, k, lam = 10, 30, 5, 0.5
+        X = rng.normal(size=(n, m))
+        y = np.where(rng.normal(size=m) > 0, 1.0, -1.0)
+        # plant two informative features so ties are unlikely
+        X[0] += y * 1.5
+        X[3] += y * 1.0
+        sel, w = drive_selection(X, y, lam, k, classification=True)
+        sel_ref, w_ref = ref.greedy_rls_np(X, y, lam, k, classification=True)
+        assert sel == sel_ref
+        np.testing.assert_allclose(w, w_ref, rtol=1e-8, atol=1e-8)
+        assert 0 in sel[:2]  # the planted feature is found early
+
+    def test_selected_equals_wrapper_bruteforce(self):
+        """Greedy RLS == Algorithm 1 (retrain per fold, per candidate)."""
+        rng = np.random.default_rng(1)
+        n, m, k, lam = 6, 9, 3, 0.7
+        X = rng.normal(size=(n, m))
+        y = rng.normal(size=m)
+        sel, _ = drive_selection(X, y, lam, k, classification=False)
+        S = []
+        for _ in range(k):
+            best, best_e = -1, np.inf
+            for i in range(n):
+                if i in S:
+                    continue
+                p = ref.brute_force_loo_np(X[S + [i], :], y, lam)
+                e = float(np.sum((y - p) ** 2))
+                if e < best_e:
+                    best_e, best = e, i
+            S.append(best)
+        assert sel == S
+
+
+class TestPredictAndTrainDual:
+    def test_predict(self):
+        rng = np.random.default_rng(3)
+        w = rng.normal(size=8)
+        Xt = rng.normal(size=(8, 5))
+        got = model.predict(jnp.asarray(w), jnp.asarray(Xt))
+        np.testing.assert_allclose(got, w @ Xt, rtol=1e-12)
+
+    def test_predict_zero_padding_rows_are_inert(self):
+        rng = np.random.default_rng(4)
+        w = np.zeros(8)
+        w[:3] = rng.normal(size=3)
+        Xt = np.zeros((8, 5))
+        Xt[:3] = rng.normal(size=(3, 5))
+        got = model.predict(jnp.asarray(w), jnp.asarray(Xt))
+        np.testing.assert_allclose(got, w[:3] @ Xt[:3], rtol=1e-12)
+
+    def test_train_dual_matches_numpy(self):
+        rng = np.random.default_rng(5)
+        k, m, lam = 4, 12, 0.9
+        Xs = rng.normal(size=(k, m))
+        y = rng.normal(size=m)
+        w, a = model.train_dual(
+            jnp.asarray(Xs), jnp.asarray(y), jnp.asarray([lam])
+        )
+        a_np, _ = ref.rls_dual_train_np(Xs, y, lam)
+        np.testing.assert_allclose(a, a_np, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(w, Xs @ a_np, rtol=1e-9, atol=1e-9)
+
+    def test_train_dual_equals_primal(self):
+        """eq. (3) == eq. (4)."""
+        rng = np.random.default_rng(6)
+        k, m, lam = 5, 9, 1.7
+        Xs = rng.normal(size=(k, m))
+        y = rng.normal(size=m)
+        w_dual, _ = model.train_dual(
+            jnp.asarray(Xs), jnp.asarray(y), jnp.asarray([lam])
+        )
+        w_primal = np.linalg.solve(Xs @ Xs.T + lam * np.eye(k), Xs @ y)
+        np.testing.assert_allclose(w_dual, w_primal, rtol=1e-9, atol=1e-9)

@@ -1,0 +1,100 @@
+"""Pallas rank-1 update kernel vs the oracle, and SMW-identity checks."""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import rank1_update, ref  # noqa: E402
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+class TestRank1Kernel:
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 48),
+        n=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        C = rng.normal(size=(m, n))
+        u = rng.normal(size=m)
+        w = rng.normal(size=n)
+        got = rank1_update(jnp.asarray(C), jnp.asarray(u), jnp.asarray(w))
+        np.testing.assert_allclose(
+            got, ref.rank1_update_ref(C, u, w), rtol=1e-12, atol=1e-12
+        )
+
+    @pytest.mark.parametrize("block_n", [1, 3, 16, 256])
+    def test_block_sizes(self, block_n):
+        rng = np.random.default_rng(0)
+        C = rng.normal(size=(7, 12))
+        u = rng.normal(size=7)
+        w = rng.normal(size=12)
+        got = rank1_update(
+            jnp.asarray(C), jnp.asarray(u), jnp.asarray(w), block_n=block_n
+        )
+        np.testing.assert_allclose(got, ref.rank1_update_ref(C, u, w),
+                                   rtol=1e-12)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(1)
+        C = rng.normal(size=(9, 5)).astype(dtype)
+        u = rng.normal(size=9).astype(dtype)
+        w = rng.normal(size=5).astype(dtype)
+        got = rank1_update(jnp.asarray(C), jnp.asarray(u), jnp.asarray(w))
+        assert np.asarray(got).dtype == dtype
+        tol = 1e-6 if dtype == np.float32 else 1e-12
+        np.testing.assert_allclose(got, ref.rank1_update_ref(C, u, w),
+                                   rtol=tol, atol=tol)
+
+    def test_zero_u_is_identity(self):
+        rng = np.random.default_rng(2)
+        C = rng.normal(size=(6, 6))
+        got = rank1_update(
+            jnp.asarray(C), jnp.zeros(6), jnp.asarray(rng.normal(size=6))
+        )
+        np.testing.assert_array_equal(np.asarray(got), C)
+
+
+class TestSMWIdentities:
+    """The cache updates must track the explicitly re-inverted G.
+
+    After committing features S in any order:
+        G  = (X_S^T X_S + lam I)^{-1}
+        C == G X^T,  a == G y,  d == diag(G)
+    """
+
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(3, 14),
+        m=st.integers(3, 14),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_caches_equal_explicit_inverse(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        lam = float(10 ** rng.uniform(-1, 1))
+        X = rng.normal(size=(n, m))
+        y = np.where(rng.normal(size=m) > 0, 1.0, -1.0)
+        C = X.T / lam
+        a = y / lam
+        d = np.full(m, 1.0 / lam)
+        steps = min(3, n)
+        chosen = rng.choice(n, size=steps, replace=False)
+        for b in chosen:
+            C, a, d = (np.asarray(t)
+                       for t in ref.commit_ref(X, C, a, d, int(b)))
+        Xs = X[list(chosen), :]
+        G = np.linalg.inv(Xs.T @ Xs + lam * np.eye(m))
+        np.testing.assert_allclose(C, G @ X.T, rtol=1e-8, atol=1e-8)
+        np.testing.assert_allclose(a, G @ y, rtol=1e-8, atol=1e-8)
+        np.testing.assert_allclose(d, np.diag(G), rtol=1e-8, atol=1e-8)

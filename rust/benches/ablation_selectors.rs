@@ -1,0 +1,105 @@
+//! Ablation: selection *strategy* quality (paper §5 design space).
+//!
+//! The paper argues greedy forward selection is the right default and
+//! sketches alternatives (backward elimination, floating search,
+//! corrective/FoBa steps, n-fold criteria). This bench puts them side by
+//! side on planted-sparse problems: support recovery rate, held-out
+//! accuracy, and wall time — quantifying the cost/benefit of each
+//! refinement over plain greedy RLS.
+
+use greedy_rls::bench::{time_once, CellValue, Table};
+use greedy_rls::coordinator::cv;
+use greedy_rls::data::synthetic::planted_sparse;
+use greedy_rls::metrics::{accuracy, Loss};
+use greedy_rls::rng::Pcg64;
+use greedy_rls::select::{
+    backward::BackwardElimination, floating::FloatingForward, foba::Foba,
+    greedy::GreedyRls, nfold::NFoldGreedy, random::RandomSelector,
+    SelectionConfig, Selector,
+};
+
+fn main() {
+    let trials = 5u64;
+    let (m, n, s) = (240usize, 40usize, 6usize);
+    let cfg = SelectionConfig { k: s, lambda: 1.0, loss: Loss::ZeroOne };
+
+    let selectors: Vec<(&str, Box<dyn Selector>)> = vec![
+        ("greedy-rls", Box::new(GreedyRls)),
+        ("random", Box::new(RandomSelector { seed: 3 })),
+        ("foba(ν=.5)", Box::new(Foba::default())),
+        ("nfold(10)", Box::new(NFoldGreedy { folds: 10, seed: 3 })),
+        ("backward", Box::new(BackwardElimination)),
+        ("floating", Box::new(FloatingForward::default())),
+    ];
+
+    let mut table = Table::new(
+        &format!(
+            "Ablation — selection strategies (m={m}, n={n}, {s} informative, \
+             k={s}, {trials} trials)"
+        ),
+        &["selector", "mean_test_acc", "informative_hit_rate", "mean_s"],
+    );
+
+    for (name, sel) in &selectors {
+        let mut accs = Vec::new();
+        let mut hits = 0usize;
+        let mut secs = 0.0;
+        for t in 0..trials {
+            let ds = planted_sparse("abl", m, n, s, 1.0, 0.9, 0.05, 100 + t);
+            // identify planted rows by construction: strongest |corr|
+            let mut corr: Vec<(usize, f64)> = (0..n)
+                .map(|i| {
+                    let row = ds.x.row(i);
+                    let c: f64 = row
+                        .iter()
+                        .zip(&ds.y)
+                        .map(|(&v, &l)| v * l)
+                        .sum::<f64>()
+                        / m as f64;
+                    (i, c.abs())
+                })
+                .collect();
+            corr.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let informative: Vec<usize> =
+                corr.iter().take(s).map(|&(i, _)| i).collect();
+
+            let mut rng = Pcg64::new(t, 71);
+            let (tr, te) = greedy_rls::data::folds::train_test_split(
+                m, 0.25, &mut rng,
+            );
+            let mut train = ds.subset(&tr);
+            let mut test = ds.subset(&te);
+            let st = train.standardize();
+            test.apply_standardization(&st);
+
+            let mut result = None;
+            secs += time_once(|| {
+                result = Some(sel.select(&train.x, &train.y, &cfg));
+            });
+            let r = result.unwrap().expect("select");
+            let p = r.predictor().predict_matrix(&test.x);
+            accs.push(accuracy(&test.y, &p));
+            hits += r
+                .selected
+                .iter()
+                .filter(|i| informative.contains(i))
+                .count();
+        }
+        let mean_acc = accs.iter().sum::<f64>() / accs.len() as f64;
+        table.row(&Table::cells(&[
+            CellValue::Str(name.to_string()),
+            CellValue::F3(mean_acc),
+            CellValue::F3(hits as f64 / (trials as usize * s) as f64),
+            CellValue::F3(secs / trials as f64),
+        ]));
+    }
+    table.print();
+    let _ = table.write_csv("ablation_selectors");
+
+    // sanity anchor: greedy must be near the top and random at the bottom
+    println!(
+        "\nexpected ordering: every informed strategy ≫ random; corrective \
+         variants (foba/floating/backward) ≥ greedy at extra cost."
+    );
+    let _ = cv::holdout_accuracy; // public-API anchor used by other benches
+}

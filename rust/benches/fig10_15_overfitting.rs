@@ -1,0 +1,92 @@
+//! Figures 10–15: test vs LOO accuracy per number of selected features
+//! (paper §4.3 — how much does the LOO selection criterion overfit?).
+//!
+//! Expected shape: on large-m datasets (adult, australian, ijcnn1,
+//! mnist5) the two curves nearly coincide; on colon-cancer (m=62,
+//! n=2000) and to a lesser degree german.numer the LOO estimate is
+//! visibly over-optimistic — "reliable feature selection can be
+//! problematic on small high-dimensional data sets".
+
+use greedy_rls::bench::{CellValue, Table};
+use greedy_rls::coordinator::cv;
+use greedy_rls::data::registry;
+use greedy_rls::rng::Pcg64;
+
+fn main() {
+    let full = std::env::var("GREEDY_RLS_BENCH_FULL").is_ok();
+    let figure_of = |name: &str| match name {
+        "adult" => 10,
+        "australian" => 11,
+        "colon-cancer" => 12,
+        "german.numer" => 13,
+        "ijcnn1" => 14,
+        "mnist5" => 15,
+        _ => 0,
+    };
+
+    let mut gaps: Vec<(String, usize, usize, f64)> = Vec::new();
+    for spec in registry::SPECS {
+        let mut ds = registry::load(spec.name, false, 42).expect("load");
+        let cap = if full { usize::MAX } else { 1500 };
+        if ds.n_examples() > cap {
+            let mut rng = Pcg64::seeded(11);
+            let idx = rng.choose_distinct(ds.n_examples(), cap);
+            ds = ds.subset(&idx);
+        }
+        let folds = if ds.n_examples() < 100 { 5 } else if full { 10 } else { 5 };
+        let kmax = ds.n_features().min(if full { 40 } else { 16 });
+        let curves = cv::run_cv(&ds, folds, kmax, 43).expect("cv");
+
+        let mut table = Table::new(
+            &format!(
+                "Fig {} — {} (m={}, n={}), test vs LOO accuracy",
+                figure_of(spec.name),
+                spec.name,
+                ds.n_examples(),
+                ds.n_features()
+            ),
+            &["k", "test_acc", "loo_acc", "gap"],
+        );
+        let mut max_gap = 0.0_f64;
+        for (i, k) in curves.ks.iter().enumerate() {
+            let gap = curves.greedy_loo[i] - curves.greedy_test[i];
+            max_gap = max_gap.max(gap);
+            table.row(&Table::cells(&[
+                CellValue::Usize(*k),
+                CellValue::F3(curves.greedy_test[i]),
+                CellValue::F3(curves.greedy_loo[i]),
+                CellValue::F3(gap),
+            ]));
+        }
+        table.print();
+        let _ = table.write_csv(&format!(
+            "fig{}_{}_overfit",
+            figure_of(spec.name),
+            spec.name.replace(['.', '-'], "_")
+        ));
+        gaps.push((
+            spec.name.to_string(),
+            ds.n_examples(),
+            ds.n_features(),
+            max_gap,
+        ));
+    }
+
+    println!("\n== overfitting summary (max LOO − test gap) ==");
+    for (name, m, n, gap) in &gaps {
+        println!(
+            "{name:<14} m={m:<6} n={n:<5} max gap {gap:+.3} {}",
+            if *gap > 0.08 { "<-- LOO over-optimistic" } else { "" }
+        );
+    }
+    let colon = gaps.iter().find(|g| g.0 == "colon-cancer").unwrap();
+    let big: Vec<&(String, usize, usize, f64)> =
+        gaps.iter().filter(|g| g.1 >= 600).collect();
+    let avg_big: f64 =
+        big.iter().map(|g| g.3).sum::<f64>() / big.len() as f64;
+    println!(
+        "\nshape check: colon-cancer gap {:+.3} vs large-m average {:+.3} \
+         (paper: small-m/high-n overfits, large-m tracks)",
+        colon.3, avg_big
+    );
+}

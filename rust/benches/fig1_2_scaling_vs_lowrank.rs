@@ -1,0 +1,82 @@
+//! Figures 1 & 2: running time of greedy RLS (Algorithm 3) vs the
+//! low-rank updated LS-SVM (Algorithm 2) as the training-set size m grows.
+//!
+//! Paper workload: two-Gaussian data, n = 1000 features, k = 50 selected,
+//! m = 500..5000. The baseline is O(km²n) — on this single-vCPU testbed
+//! the paper's exact grid would run for hours (as it did for the authors:
+//! their Fig. 1 y-axis tops out near 10⁴ CPU-seconds), so the default
+//! grid is scaled down; set `GREEDY_RLS_BENCH_FULL=1` for the paper's.
+//!
+//! Expected shape (not absolute seconds): the baseline's log-log slope vs
+//! m ≈ 2 (quadratic), greedy's ≈ 1 (linear), with greedy faster
+//! everywhere and the gap widening as m grows.
+
+use greedy_rls::bench::{time_once, CellValue, Table};
+use greedy_rls::data::synthetic::two_gaussians;
+use greedy_rls::metrics::Loss;
+use greedy_rls::select::{
+    greedy::GreedyRls, lowrank::LowRankLsSvm, SelectionConfig, Selector,
+};
+
+fn log_log_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    // least-squares slope of log y on log x
+    let lx: Vec<f64> = xs.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|v| v.ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let cov: f64 = lx.iter().zip(&ly).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let var: f64 = lx.iter().map(|a| (a - mx) * (a - mx)).sum();
+    cov / var
+}
+
+fn main() {
+    let full = std::env::var("GREEDY_RLS_BENCH_FULL").is_ok();
+    let (n, k, ms): (usize, usize, Vec<usize>) = if full {
+        (
+            1000,
+            50,
+            vec![500, 1000, 1500, 2000, 2500, 3000, 3500, 4000, 4500, 5000],
+        )
+    } else {
+        (200, 10, vec![300, 600, 900, 1200])
+    };
+
+    let mut table = Table::new(
+        &format!("Fig 1/2 — runtime vs m (n={n}, k={k}, two-Gaussian)"),
+        &["m", "greedy_s", "lowrank_s", "speedup", "log10_greedy", "log10_lowrank"],
+    );
+    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+    let (mut tg, mut tl) = (Vec::new(), Vec::new());
+    for &m in &ms {
+        let ds = two_gaussians(m, n, 50.min(n), 1.0, 42);
+        let t_g = time_once(|| {
+            GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        });
+        let t_l = time_once(|| {
+            LowRankLsSvm.select(&ds.x, &ds.y, &cfg).unwrap();
+        });
+        tg.push(t_g);
+        tl.push(t_l);
+        table.row(&Table::cells(&[
+            CellValue::Usize(m),
+            CellValue::F3(t_g),
+            CellValue::F3(t_l),
+            CellValue::F3(t_l / t_g),
+            CellValue::F3(t_g.log10()),
+            CellValue::F3(t_l.log10()),
+        ]));
+    }
+    table.print();
+    let _ = table.write_csv("fig1_2_scaling_vs_lowrank");
+
+    let ms_f: Vec<f64> = ms.iter().map(|&m| m as f64).collect();
+    let slope_g = log_log_slope(&ms_f, &tg);
+    let slope_l = log_log_slope(&ms_f, &tl);
+    println!("\nlog-log slope vs m: greedy {slope_g:.2} (paper: ≈1, linear)");
+    println!("log-log slope vs m: lowrank {slope_l:.2} (paper: ≈2, quadratic)");
+    println!(
+        "shape check: lowrank slope − greedy slope = {:.2} (expect ≈ +1)",
+        slope_l - slope_g
+    );
+}

@@ -1,0 +1,55 @@
+//! Figure 3: greedy RLS running time alone, scaling m into the tens of
+//! thousands (the regime where the Algorithm-2 baseline is infeasible —
+//! the paper reports 50 features from 1000 at m = 50 000 in "a bit less
+//! than twelve minutes" on a 2009 desktop).
+//!
+//! Default grid caps at m = 20 000 on this single-vCPU box; set
+//! `GREEDY_RLS_BENCH_FULL=1` for the paper's m = 50 000 endpoint.
+//! Shape check: seconds per unit of k·m·n must stay constant (linearity).
+
+use greedy_rls::bench::{time_once, CellValue, Table};
+use greedy_rls::data::synthetic::two_gaussians;
+use greedy_rls::metrics::Loss;
+use greedy_rls::select::{greedy::GreedyRls, SelectionConfig, Selector};
+
+fn main() {
+    let full = std::env::var("GREEDY_RLS_BENCH_FULL").is_ok();
+    let (n, k) = (1000usize, 50usize);
+    let ms: Vec<usize> = if full {
+        vec![1000, 5000, 10000, 20000, 30000, 40000, 50000]
+    } else {
+        vec![1000, 2000, 5000, 10000, 20000]
+    };
+    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+
+    let mut table = Table::new(
+        &format!("Fig 3 — greedy RLS runtime, n={n}, k={k}"),
+        &["m", "seconds", "ns_per_kmn", "gflops"],
+    );
+    let mut units = Vec::new();
+    for &m in &ms {
+        let ds = two_gaussians(m, n, 50, 1.0, 43);
+        let secs = time_once(|| {
+            GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        });
+        // per-round work ≈ score pass (6 mul+add × mn) + commit (4 × mn)
+        let flops = k as f64 * m as f64 * n as f64 * 10.0;
+        let unit = secs * 1e9 / (k as f64 * m as f64 * n as f64);
+        units.push(unit);
+        table.row(&Table::cells(&[
+            CellValue::Usize(m),
+            CellValue::F3(secs),
+            CellValue::F3(unit),
+            CellValue::F3(flops / secs / 1e9),
+        ]));
+    }
+    table.print();
+    let _ = table.write_csv("fig3_large_scale");
+
+    let spread = units.iter().cloned().fold(f64::MIN, f64::max)
+        / units.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "\nns per k·m·n spread across the grid: ×{spread:.2} \
+         (≈1 ⇒ the paper's O(kmn) linear-scaling claim holds)"
+    );
+}

@@ -1,0 +1,71 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf input).
+//!
+//! Per selection round, greedy RLS does exactly two O(mn) passes:
+//!
+//! * **score**: for each candidate, stream (x_i, c_i) twice — ≈6 flops
+//!   and 2×16 bytes per (feature, example) pair;
+//! * **commit**: stream every cache row once — w_i = v·c_i then the
+//!   fused axpy — ≈4 flops and 24 bytes (16 read + 8 write) per pair.
+//!
+//! Both are memory-bandwidth-bound; this bench reports achieved GB/s and
+//! GFLOP/s so the §Perf roofline discussion has hard numbers.
+
+use greedy_rls::bench::{time, CellValue, Table};
+use greedy_rls::data::synthetic::two_gaussians;
+use greedy_rls::metrics::Loss;
+use greedy_rls::select::greedy::GreedyState;
+
+fn main() {
+    let mut table = Table::new(
+        "Microbench — per-round hot paths",
+        &[
+            "m",
+            "n",
+            "score_ms",
+            "score_gbps",
+            "score_gflops",
+            "commit_ms",
+            "commit_gbps",
+        ],
+    );
+    for (m, n) in [(1000usize, 1000usize), (2000, 1000), (4000, 1000), (2000, 4000)] {
+        let ds = two_gaussians(m, n, 50, 1.0, 3);
+        let st = GreedyState::init(&ds.x, &ds.y, 1.0);
+
+        let score = time(1, 5, || {
+            std::hint::black_box(st.score_all(&ds.x, &ds.y, Loss::ZeroOne));
+        });
+        // bytes: X row + C row, each m f64, per candidate, streamed twice
+        // (pass 1 dots, pass 2 loss) → 4 × 8 × m × n
+        let score_bytes = 4.0 * 8.0 * m as f64 * n as f64;
+        let score_flops = 10.0 * m as f64 * n as f64;
+
+        // pure commit cost: one long-lived state, commit a fresh feature
+        // per repetition (each commit is the same O(mn) regardless of |S|)
+        let mut st2 = GreedyState::init(&ds.x, &ds.y, 1.0);
+        let mut next = 0usize;
+        let commit = time(1, 5, || {
+            st2.commit(&ds.x, next);
+            next += 1;
+        });
+        // commit streams every C row read+write plus X row read ≈ 3×8×mn
+        let commit_bytes = 3.0 * 8.0 * m as f64 * n as f64;
+
+        table.row(&Table::cells(&[
+            CellValue::Usize(m),
+            CellValue::Usize(n),
+            CellValue::F3(score.median_s * 1e3),
+            CellValue::F3(score_bytes / score.median_s / 1e9),
+            CellValue::F3(score_flops / score.median_s / 1e9),
+            CellValue::F3(commit.median_s * 1e3),
+            CellValue::F3(commit_bytes / commit.median_s / 1e9),
+        ]));
+    }
+    table.print();
+    let _ = table.write_csv("microbench_hotpath");
+    println!(
+        "\nscore streams 32·m·n bytes per round, commit 24·m·n; achieved \
+         GB/s against this box's streaming bandwidth is the roofline \
+         ratio recorded in EXPERIMENTS.md §Perf."
+    );
+}

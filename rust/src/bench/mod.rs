@@ -1,0 +1,208 @@
+//! Measurement harness for the paper-figure benches.
+//!
+//! `criterion` is not in the offline crate cache, so `rust/benches/*`
+//! (built with `harness = false`) use this module instead: warmup,
+//! repeated timing, robust summary statistics, and aligned table / CSV
+//! emission so each bench prints the same rows/series as the paper's
+//! figures.
+
+use std::time::Instant;
+
+/// Timing summary over repetitions.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    /// Median seconds per run.
+    pub median_s: f64,
+    /// Minimum seconds per run.
+    pub min_s: f64,
+    /// Mean seconds per run.
+    pub mean_s: f64,
+    /// Sample standard deviation.
+    pub std_s: f64,
+    /// Number of measured repetitions.
+    pub reps: usize,
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `reps` measured ones.
+pub fn time<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Sample {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&times)
+}
+
+/// Time a single run (large workloads where repetition is unaffordable).
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+fn summarize(times: &[f64]) -> Sample {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let reps = sorted.len();
+    let median_s = if reps % 2 == 1 {
+        sorted[reps / 2]
+    } else {
+        0.5 * (sorted[reps / 2 - 1] + sorted[reps / 2])
+    };
+    let mean = sorted.iter().sum::<f64>() / reps as f64;
+    let std = if reps > 1 {
+        (sorted.iter().map(|t| (t - mean).powi(2)).sum::<f64>()
+            / (reps - 1) as f64)
+            .sqrt()
+    } else {
+        0.0
+    };
+    Sample { median_s, min_s: sorted[0], mean_s: mean, std_s: std, reps }
+}
+
+/// A long-format results table (one row per measured configuration)
+/// printed both human-readable and as CSV for downstream plotting.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format common cell types.
+    pub fn cells(parts: &[CellValue]) -> Vec<String> {
+        parts.iter().map(|c| c.render()).collect()
+    }
+
+    /// Print the aligned table followed by a CSV block.
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+        println!("\n-- CSV: {} --", self.title);
+        println!("{}", self.columns.join(","));
+        for row in &self.rows {
+            println!("{}", row.join(","));
+        }
+    }
+
+    /// Write the CSV block to a file under `bench_results/`.
+    pub fn write_csv(&self, stem: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("bench_results")?;
+        let path = std::path::Path::new("bench_results")
+            .join(format!("{stem}.csv"));
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+/// Typed cell values with sensible default formatting.
+pub enum CellValue {
+    Int(i64),
+    Usize(usize),
+    F3(f64),
+    F6(f64),
+    Str(String),
+}
+
+impl CellValue {
+    fn render(&self) -> String {
+        match self {
+            CellValue::Int(v) => v.to_string(),
+            CellValue::Usize(v) => v.to_string(),
+            CellValue::F3(v) => format!("{v:.3}"),
+            CellValue::F6(v) => format!("{v:.6}"),
+            CellValue::Str(s) => s.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_positive_durations() {
+        let s = time(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.median_s >= 0.0);
+        assert!(s.min_s <= s.median_s);
+        assert_eq!(s.reps, 5);
+    }
+
+    #[test]
+    fn summarize_median_even_odd() {
+        let s = summarize(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median_s, 2.0);
+        let s = summarize(&[4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.median_s, 2.5);
+    }
+
+    #[test]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn cells_render() {
+        let cells = Table::cells(&[
+            CellValue::Int(-3),
+            CellValue::Usize(7),
+            CellValue::F3(1.23456),
+            CellValue::Str("x".into()),
+        ]);
+        assert_eq!(cells, vec!["-3", "7", "1.235", "x"]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Command-line interface (hand-rolled; `clap` unavailable offline).
+//!
+//! Flag conventions: `--name value` or `--name=value`; `--flag` with no
+//! value is boolean true. The first non-flag token is the subcommand.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context};
+
+/// Parsed command line: subcommand + flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Subcommand (first positional token).
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value style: `--k 5` unless next token is a flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags
+                                .insert(stripped.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Raw flag lookup.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Boolean flag (present and not "false").
+    pub fn has(&self, name: &str) -> bool {
+        matches!(self.get(name), Some(v) if v != "false")
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// Required typed flag.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self
+            .get(name)
+            .with_context(|| format!("missing required flag --{name}"))?;
+        v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+/// Usage text shared by `--help` and error paths.
+pub const USAGE: &str = "\
+greedy-rls — linear-time greedy forward feature selection for RLS
+(Pahikkala, Airola, Salakoski 2010), three-layer Rust + JAX + Pallas.
+
+USAGE: greedy-rls <command> [flags]
+
+COMMANDS
+  select     run greedy RLS on a dataset, print/save the sparse model
+             --dataset NAME | --synthetic M,N   --k K  [--lambda L]
+             [--loss 01|squared] [--engine native|pjrt] [--out FILE]
+             [--seed S] [--full]
+  cv         paper §4.2 protocol: stratified CV accuracy curves
+             --dataset NAME [--folds 10] [--kmax K] [--seed S] [--full]
+  scaling    paper §4.1 runtime scaling experiment
+             [--sizes 500,1000,...] [--n 1000] [--k 50] [--baseline]
+  serve      batched predictions with a saved model
+             --model FILE --dataset NAME [--batch 64] [--engine native|pjrt]
+  compare    run every selection algorithm on one dataset side by side
+             --dataset NAME | --synthetic M,N  [--k 5] [--lambda 1.0]
+  datasets   print the benchmark registry (paper Table 1)
+  check      verify artifacts: compile all buckets, cross-check PJRT
+             against the native engine on a probe problem
+  help       this text
+
+Artifacts: run `make artifacts` once; the binary never invokes Python.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["select", "--k", "5", "--dataset", "adult"]);
+        assert_eq!(a.command.as_deref(), Some("select"));
+        assert_eq!(a.get("k"), Some("5"));
+        assert_eq!(a.get("dataset"), Some("adult"));
+    }
+
+    #[test]
+    fn equals_style() {
+        let a = parse(&["cv", "--folds=10", "--kmax=20"]);
+        assert_eq!(a.get_or("folds", 0usize).unwrap(), 10);
+        assert_eq!(a.get_or("kmax", 0usize).unwrap(), 20);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["scaling", "--baseline", "--n", "100"]);
+        assert!(a.has("baseline"));
+        assert!(!a.has("full"));
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 100);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // `--exp -3` — the value starts with '-' but not '--'
+        let a = parse(&["x", "--exp", "-3"]);
+        assert_eq!(a.get_or("exp", 0i32).unwrap(), -3);
+    }
+
+    #[test]
+    fn typed_errors_are_reported() {
+        let a = parse(&["x", "--k", "banana"]);
+        assert!(a.get_or("k", 1usize).is_err());
+        assert!(a.require::<usize>("missing").is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["x", "--sizes", "500,1000, 2000"]);
+        assert_eq!(
+            a.get_list("sizes").unwrap(),
+            vec!["500", "1000", "2000"]
+        );
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["cmd", "pos1", "--f", "v", "pos2"]);
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+}

@@ -1,0 +1,277 @@
+//! Cross-validation orchestration — the paper's §4.2/§4.3 protocol.
+//!
+//! For each stratified fold: standardize with training statistics, pick λ
+//! by full-feature LOO grid search on the training folds, then run the
+//! incremental selection and record, **after every added feature**, the
+//! LOO accuracy estimate on the training folds and the accuracy on the
+//! held-out test fold. Figures 4–9 plot test accuracy for greedy vs
+//! random; Figures 10–15 plot LOO vs test accuracy for greedy.
+
+use anyhow::Result;
+
+use crate::data::{folds::Folds, Dataset};
+use crate::linalg::{dot, Matrix};
+use crate::metrics::{accuracy, mean_std, Loss};
+use crate::rng::Pcg64;
+use crate::select::{argmin, greedy::GreedyState, SelectionConfig, Selector};
+
+/// How the next feature is chosen each round.
+#[derive(Clone, Debug)]
+pub enum Order {
+    /// Greedy LOO argmin (the paper's method).
+    Greedy,
+    /// A fixed feature order (random baseline: a shuffled permutation).
+    Fixed(Vec<usize>),
+}
+
+/// Accuracy trajectory of one selection run.
+#[derive(Clone, Debug)]
+pub struct Curve {
+    /// Test accuracy after 1..=k features.
+    pub test_acc: Vec<f64>,
+    /// LOO accuracy estimate on the training folds after 1..=k features.
+    pub loo_acc: Vec<f64>,
+    /// Selected features in order.
+    pub selected: Vec<usize>,
+}
+
+/// Run one incremental selection, recording per-round accuracies.
+///
+/// `x_train`/`x_test` are feature-major; the LOO accuracy is derived from
+/// the zero-one LOO criterion of the *chosen* feature each round (exactly
+/// the estimate the selection itself maximizes, as in §4.3).
+pub fn selection_curve(
+    x_train: &Matrix,
+    y_train: &[f64],
+    x_test: &Matrix,
+    y_test: &[f64],
+    lambda: f64,
+    k: usize,
+    order: &Order,
+) -> Curve {
+    let m = y_train.len() as f64;
+    let mut st = GreedyState::init(x_train, y_train, lambda);
+    let mut test_acc = Vec::with_capacity(k);
+    let mut loo_acc = Vec::with_capacity(k);
+    for round in 0..k {
+        let b = match order {
+            Order::Greedy => {
+                let scores = st.score_all(x_train, y_train, Loss::ZeroOne);
+                argmin(&scores).expect("candidates remain")
+            }
+            Order::Fixed(perm) => perm[round],
+        };
+        // LOO zero-one criterion of the *committed* set S ∪ {b}:
+        let v = x_train.row(b);
+        let c = &st.ct[b * st.m..(b + 1) * st.m];
+        let e01 = crate::select::greedy::score_candidate(
+            v,
+            c,
+            &st.a,
+            &st.d,
+            y_train,
+            Loss::ZeroOne,
+        );
+        loo_acc.push(1.0 - e01 / m);
+        st.commit(x_train, b);
+
+        // test accuracy of the current model
+        let mut p = vec![0.0; y_test.len()];
+        for (&i, _) in st.selected.iter().zip(0..) {
+            let w = dot(x_train.row(i), &st.a);
+            for (pj, &xv) in p.iter_mut().zip(x_test.row(i)) {
+                *pj += w * xv;
+            }
+        }
+        test_acc.push(accuracy(y_test, &p));
+    }
+    Curve { test_acc, loo_acc, selected: st.selected }
+}
+
+/// Mean ± std accuracy curves over folds (what the figures plot).
+#[derive(Clone, Debug)]
+pub struct CvCurves {
+    /// k values 1..=k_max.
+    pub ks: Vec<usize>,
+    /// Mean test accuracy per k, greedy selection.
+    pub greedy_test: Vec<f64>,
+    /// Std of the above.
+    pub greedy_test_std: Vec<f64>,
+    /// Mean LOO accuracy per k, greedy selection.
+    pub greedy_loo: Vec<f64>,
+    /// Mean test accuracy per k, random selection baseline.
+    pub random_test: Vec<f64>,
+    /// λ chosen per fold by the grid search.
+    pub lambdas: Vec<f64>,
+}
+
+/// Full §4.2 protocol on one dataset.
+///
+/// `folds` stratified folds, λ grid-searched per fold on the training
+/// data, curves averaged over folds. `k_max` caps the number of selection
+/// rounds (the paper runs to n; large-n datasets cap for tractability).
+pub fn run_cv(
+    ds: &Dataset,
+    folds: usize,
+    k_max: usize,
+    seed: u64,
+) -> Result<CvCurves> {
+    let k_max = k_max.min(ds.n_features());
+    let mut rng = Pcg64::new(seed, 71);
+    let f = Folds::stratified(&ds.y, folds, &mut rng);
+    let grid = super::grid::default_grid();
+
+    let mut greedy_test = vec![Vec::new(); k_max];
+    let mut greedy_loo = vec![Vec::new(); k_max];
+    let mut random_test = vec![Vec::new(); k_max];
+    let mut lambdas = Vec::new();
+
+    for (train_idx, test_idx) in f.splits() {
+        let mut train = ds.subset(&train_idx);
+        let mut test = ds.subset(&test_idx);
+        let stats = train.standardize();
+        test.apply_standardization(&stats);
+
+        let (lam, _) =
+            super::grid::search(&train.x, &train.y, &grid, Loss::ZeroOne);
+        lambdas.push(lam);
+
+        let gc = selection_curve(
+            &train.x, &train.y, &test.x, &test.y, lam, k_max, &Order::Greedy,
+        );
+        let mut perm: Vec<usize> = (0..ds.n_features()).collect();
+        rng.shuffle(&mut perm);
+        let rc = selection_curve(
+            &train.x,
+            &train.y,
+            &test.x,
+            &test.y,
+            lam,
+            k_max,
+            &Order::Fixed(perm),
+        );
+        for k in 0..k_max {
+            greedy_test[k].push(gc.test_acc[k]);
+            greedy_loo[k].push(gc.loo_acc[k]);
+            random_test[k].push(rc.test_acc[k]);
+        }
+    }
+
+    let summarize = |per_k: &[Vec<f64>]| -> (Vec<f64>, Vec<f64>) {
+        per_k
+            .iter()
+            .map(|xs| mean_std(xs))
+            .unzip()
+    };
+    let (g_mean, g_std) = summarize(&greedy_test);
+    let (l_mean, _) = summarize(&greedy_loo);
+    let (r_mean, _) = summarize(&random_test);
+    Ok(CvCurves {
+        ks: (1..=k_max).collect(),
+        greedy_test: g_mean,
+        greedy_test_std: g_std,
+        greedy_loo: l_mean,
+        random_test: r_mean,
+        lambdas,
+    })
+}
+
+/// Convenience: single train/test split evaluation of a selection config
+/// (used by examples and the serving path).
+pub fn holdout_accuracy(
+    ds: &Dataset,
+    test_fraction: f64,
+    cfg: &SelectionConfig,
+    seed: u64,
+) -> Result<(f64, Vec<usize>)> {
+    let mut rng = Pcg64::new(seed, 73);
+    let (train_idx, test_idx) =
+        crate::data::folds::train_test_split(ds.n_examples(), test_fraction, &mut rng);
+    let mut train = ds.subset(&train_idx);
+    let mut test = ds.subset(&test_idx);
+    let stats = train.standardize();
+    test.apply_standardization(&stats);
+    let r = crate::select::greedy::GreedyRls
+        .select(&train.x, &train.y, cfg)
+        .map_err(anyhow::Error::from)?;
+    let p = r.predictor().predict_matrix(&test.x);
+    Ok((accuracy(&test.y, &p), r.selected))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_curve_matches_selector_output() {
+        let ds = crate::data::synthetic::two_gaussians(80, 12, 4, 1.5, 5);
+        let (tr, te): (Vec<usize>, Vec<usize>) =
+            ((0..60).collect(), (60..80).collect());
+        let train = ds.subset(&tr);
+        let test = ds.subset(&te);
+        let c = selection_curve(
+            &train.x, &train.y, &test.x, &test.y, 1.0, 5, &Order::Greedy,
+        );
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let r = crate::select::greedy::GreedyRls
+            .select(&train.x, &train.y, &cfg)
+            .unwrap();
+        assert_eq!(c.selected, r.selected);
+        // LOO accuracy must equal 1 − criterion/m
+        let m = train.n_examples() as f64;
+        for (acc, round) in c.loo_acc.iter().zip(&r.rounds) {
+            assert!((acc - (1.0 - round.criterion / m)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fixed_order_is_respected() {
+        let ds = crate::data::synthetic::two_gaussians(40, 8, 3, 1.0, 6);
+        let perm = vec![7, 0, 3];
+        let c = selection_curve(
+            &ds.x, &ds.y, &ds.x, &ds.y, 1.0, 3, &Order::Fixed(perm.clone()),
+        );
+        assert_eq!(c.selected, perm);
+    }
+
+    #[test]
+    fn cv_shapes_and_sanity() {
+        let ds = crate::data::synthetic::planted_sparse(
+            "t", 120, 15, 4, 1.2, 0.9, 0.05, 7,
+        );
+        let cv = run_cv(&ds, 4, 8, 42).unwrap();
+        assert_eq!(cv.ks.len(), 8);
+        assert_eq!(cv.greedy_test.len(), 8);
+        assert_eq!(cv.lambdas.len(), 4);
+        for acc in cv.greedy_test.iter().chain(&cv.random_test) {
+            assert!((0.0..=1.0).contains(acc));
+        }
+        // greedy with enough features should beat 0.5 clearly
+        assert!(cv.greedy_test[7] > 0.6, "{:?}", cv.greedy_test);
+    }
+
+    #[test]
+    fn greedy_beats_random_on_planted_data() {
+        let ds = crate::data::synthetic::planted_sparse(
+            "t", 150, 30, 3, 1.5, 1.0, 0.02, 9,
+        );
+        let cv = run_cv(&ds, 4, 3, 1).unwrap();
+        // with only 3 of 30 features selectable, greedy (which finds the
+        // 3 planted ones) must dominate random
+        assert!(
+            cv.greedy_test[2] > cv.random_test[2] + 0.1,
+            "greedy {:?} random {:?}",
+            cv.greedy_test,
+            cv.random_test
+        );
+    }
+
+    #[test]
+    fn holdout_runs() {
+        let ds = crate::data::synthetic::two_gaussians(100, 10, 4, 2.0, 8);
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne };
+        let (acc, sel) = holdout_accuracy(&ds, 0.3, &cfg, 3).unwrap();
+        assert_eq!(sel.len(), 4);
+        assert!(acc > 0.6, "acc {acc}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Layer-3 coordinator: engines, cross-validation, model lifecycle.
+//!
+//! The paper's contribution is the selection algorithm itself, so Layer 3
+//! is the machinery a team would deploy around it:
+//!
+//! * [`EngineKind`] — run selection on the native Rust engine or through
+//!   the AOT-compiled PJRT artifacts (identical results, checked by
+//!   integration tests);
+//! * [`cv`] — the paper's §4.2/§4.3 experimental protocol (stratified
+//!   k-fold, per-fold λ grid search, accuracy-vs-#features curves);
+//! * [`grid`] — regularization grid search with the LOO shortcut;
+//! * [`serve`] — load a selected sparse model and answer batched
+//!   prediction requests (native or PJRT path);
+//! * model persistence in a dependency-free text format.
+
+pub mod cv;
+pub mod grid;
+pub mod serve;
+
+use anyhow::Context;
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::rls::Predictor;
+use crate::runtime::{engine::PjrtGreedy, Runtime};
+use crate::select::{
+    greedy::GreedyRls, SelectionConfig, SelectionResult, Selector,
+};
+
+/// Which engine executes the O(mn) selection math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust Algorithm 3 (fastest on this CPU testbed).
+    Native,
+    /// AOT artifacts through PJRT (the three-layer architecture's hot
+    /// path; Pallas kernel semantics, no Python at runtime).
+    Pjrt,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(EngineKind::Native),
+            "pjrt" => Ok(EngineKind::Pjrt),
+            other => Err(format!("unknown engine {other:?}")),
+        }
+    }
+}
+
+/// Run greedy RLS on the chosen engine. For [`EngineKind::Pjrt`] a
+/// [`Runtime`] must be supplied (artifacts built via `make artifacts`).
+pub fn select_with_engine(
+    engine: EngineKind,
+    runtime: Option<&Runtime>,
+    x: &Matrix,
+    y: &[f64],
+    cfg: &SelectionConfig,
+) -> anyhow::Result<SelectionResult> {
+    match engine {
+        EngineKind::Native => GreedyRls.select(x, y, cfg),
+        EngineKind::Pjrt => {
+            let rt = runtime
+                .context("PJRT engine requested but no runtime supplied")?;
+            PjrtGreedy::new(rt).select(x, y, cfg)
+        }
+    }
+}
+
+/// Train a final sparse model on a dataset with the given config
+/// (selection + weights), ready for serving.
+pub fn fit(
+    engine: EngineKind,
+    runtime: Option<&Runtime>,
+    ds: &Dataset,
+    cfg: &SelectionConfig,
+) -> anyhow::Result<Predictor> {
+    let r = select_with_engine(engine, runtime, &ds.x, &ds.y, cfg)?;
+    Ok(r.predictor())
+}
+
+// ---------------------------------------------------------------------------
+// Model persistence (text format; no serde facade in the offline cache)
+// ---------------------------------------------------------------------------
+
+/// Serialize a predictor to the `greedy-rls-model v1` text format.
+pub fn model_to_string(p: &Predictor) -> String {
+    let mut out = String::from("greedy-rls-model v1\n");
+    for (&i, &w) in p.selected.iter().zip(&p.weights) {
+        out.push_str(&format!("{i} {w:.17e}\n"));
+    }
+    out
+}
+
+/// Parse the text format back into a predictor.
+pub fn model_from_str(text: &str) -> anyhow::Result<Predictor> {
+    let mut lines = text.lines();
+    let header = lines.next().unwrap_or("");
+    anyhow::ensure!(
+        header.trim() == "greedy-rls-model v1",
+        "bad model header {header:?}"
+    );
+    let mut selected = Vec::new();
+    let mut weights = Vec::new();
+    for (no, line) in lines.enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (i, w) = line
+            .split_once(' ')
+            .with_context(|| format!("model line {}", no + 2))?;
+        selected.push(i.parse().context("feature index")?);
+        weights.push(w.parse().context("weight")?);
+    }
+    anyhow::ensure!(!selected.is_empty(), "empty model");
+    Ok(Predictor { selected, weights })
+}
+
+/// Save / load helpers.
+pub fn save_model(p: &Predictor, path: &std::path::Path) -> anyhow::Result<()> {
+    std::fs::write(path, model_to_string(p))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load a model file.
+pub fn load_model(path: &std::path::Path) -> anyhow::Result<Predictor> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    model_from_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Loss;
+
+    #[test]
+    fn native_engine_fit_roundtrip() {
+        let ds = crate::data::synthetic::two_gaussians(60, 12, 4, 1.5, 3);
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne };
+        let p = fit(EngineKind::Native, None, &ds, &cfg).unwrap();
+        assert_eq!(p.selected.len(), 4);
+        let text = model_to_string(&p);
+        let q = model_from_str(&text).unwrap();
+        assert_eq!(p.selected, q.selected);
+        for (a, b) in p.weights.iter().zip(&q.weights) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn pjrt_without_runtime_errors() {
+        let ds = crate::data::synthetic::two_gaussians(20, 6, 2, 1.0, 4);
+        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne };
+        assert!(fit(EngineKind::Pjrt, None, &ds, &cfg).is_err());
+    }
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!("native".parse::<EngineKind>(), Ok(EngineKind::Native));
+        assert_eq!("pjrt".parse::<EngineKind>(), Ok(EngineKind::Pjrt));
+        assert!("cuda".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn model_format_rejects_garbage() {
+        assert!(model_from_str("wrong header\n1 2.0\n").is_err());
+        assert!(model_from_str("greedy-rls-model v1\n").is_err());
+        assert!(model_from_str("greedy-rls-model v1\nnot_a_pair\n").is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Serving: load a selected sparse model and answer prediction requests.
+//!
+//! The paper motivates sparse predictors with "limited memory and
+//! real-time response demands" (embedded deployment): prediction is O(k)
+//! per example. This module provides a small batched serving loop with
+//! latency accounting, over either execution path:
+//!
+//! * **native** — the [`Predictor`] dot product (the realistic deployment
+//!   for k-sparse linear models);
+//! * **PJRT** — the AOT `predict` artifact, demonstrating that the same
+//!   artifact pipeline that trains also serves (weights padded into the
+//!   artifact's (k, t) bucket).
+
+use anyhow::{anyhow, ensure, Context};
+
+use crate::linalg::Matrix;
+use crate::rls::Predictor;
+use crate::runtime::{lit, Runtime};
+
+/// Latency/throughput statistics of a serving run.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeStats {
+    /// Requests (examples) answered.
+    pub requests: usize,
+    /// Batches executed.
+    pub batches: usize,
+    /// Mean per-batch latency, seconds.
+    pub mean_batch_s: f64,
+    /// p50 per-batch latency.
+    pub p50_batch_s: f64,
+    /// p99 per-batch latency.
+    pub p99_batch_s: f64,
+    /// Examples per second.
+    pub throughput: f64,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[pos]
+}
+
+/// Serve every column of `x` (full feature-major matrix) in batches with
+/// the native predictor. Returns predictions and stats.
+pub fn serve_native(
+    p: &Predictor,
+    x: &Matrix,
+    batch: usize,
+) -> (Vec<f64>, ServeStats) {
+    assert!(batch > 0);
+    let m = x.cols();
+    let mut preds = vec![0.0; m];
+    let mut lat = Vec::new();
+    let mut start = 0;
+    while start < m {
+        let end = (start + batch).min(m);
+        let idx: Vec<usize> = (start..end).collect();
+        let xb = x.select_cols(&idx);
+        let t0 = std::time::Instant::now();
+        let pb = p.predict_matrix(&xb);
+        lat.push(t0.elapsed().as_secs_f64());
+        preds[start..end].copy_from_slice(&pb);
+        start = end;
+    }
+    let stats = summarize(m, &lat);
+    (preds, stats)
+}
+
+/// Serve through the PJRT `predict` artifact. The predictor's weights are
+/// padded into the artifact's (k_b, t_b) bucket; each batch pads the
+/// selected-feature rows of the batch into the same bucket.
+pub fn serve_pjrt(
+    rt: &Runtime,
+    p: &Predictor,
+    x: &Matrix,
+    batch: usize,
+) -> anyhow::Result<(Vec<f64>, ServeStats)> {
+    ensure!(batch > 0, "batch must be positive");
+    let k = p.selected.len();
+    // pick the smallest predict bucket that fits (k, batch)
+    let mut buckets: Vec<(usize, usize)> = rt
+        .manifest()
+        .iter()
+        .filter(|e| e.entry == "predict")
+        .map(|e| (e.dim1.1, e.dim2.1))
+        .collect();
+    buckets.sort_by_key(|&(kb, tb)| kb * tb);
+    let (kb, tb) = buckets
+        .into_iter()
+        .find(|&(kb, tb)| kb >= k && tb >= batch)
+        .ok_or_else(|| {
+            anyhow!("no predict artifact fits (k={k}, batch={batch})")
+        })?;
+    let exe = rt.executable("predict", kb, tb)?;
+
+    let mut w_pad = vec![0.0; kb];
+    w_pad[..k].copy_from_slice(&p.weights);
+    let w_lit = lit::vec_f64(&w_pad);
+
+    let m = x.cols();
+    let mut preds = vec![0.0; m];
+    let mut lat = Vec::new();
+    let mut start = 0;
+    while start < m {
+        let end = (start + batch).min(m);
+        let t = end - start;
+        // gather selected-feature rows of this batch into (kb, tb)
+        let mut xb = vec![0.0; kb * tb];
+        for (r, &feat) in p.selected.iter().enumerate() {
+            let row = x.row(feat);
+            xb[r * tb..r * tb + t].copy_from_slice(&row[start..end]);
+        }
+        let x_lit = lit::mat_f64(&xb, kb, tb)?;
+        let t0 = std::time::Instant::now();
+        let outs = Runtime::run_tuple(&exe, &[w_lit.clone(), x_lit])?;
+        lat.push(t0.elapsed().as_secs_f64());
+        let out = lit::to_vec_f64(&outs[0]).context("predict output")?;
+        preds[start..end].copy_from_slice(&out[..t]);
+        start = end;
+    }
+    Ok((preds, summarize(m, &lat)))
+}
+
+fn summarize(requests: usize, lat: &[f64]) -> ServeStats {
+    let mut sorted = lat.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total: f64 = lat.iter().sum();
+    ServeStats {
+        requests,
+        batches: lat.len(),
+        mean_batch_s: if lat.is_empty() { 0.0 } else { total / lat.len() as f64 },
+        p50_batch_s: percentile(&sorted, 0.5),
+        p99_batch_s: percentile(&sorted, 0.99),
+        throughput: if total > 0.0 { requests as f64 / total } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_predictor() -> Predictor {
+        Predictor { selected: vec![0, 2], weights: vec![1.0, -2.0] }
+    }
+
+    #[test]
+    fn native_serving_matches_direct_prediction() {
+        let ds = crate::data::synthetic::two_gaussians(37, 5, 2, 1.0, 1);
+        let p = toy_predictor();
+        let (preds, stats) = serve_native(&p, &ds.x, 8);
+        assert_eq!(preds.len(), 37);
+        assert_eq!(stats.requests, 37);
+        assert_eq!(stats.batches, 5); // ceil(37/8)
+        let direct = p.predict_matrix(&ds.x);
+        for (a, b) in preds.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert!(stats.throughput > 0.0);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

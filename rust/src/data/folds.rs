@@ -1,0 +1,186 @@
+//! Cross-validation fold construction.
+//!
+//! The paper's quality experiments (§4.2) use *stratified* ten-fold
+//! cross-validation: folds preserve the class balance. This module builds
+//! plain and stratified k-fold index partitions plus simple train/test
+//! splits, all driven by the crate's deterministic RNG.
+
+use crate::rng::Pcg64;
+
+/// A partition of `0..m` into `k` disjoint folds.
+#[derive(Clone, Debug)]
+pub struct Folds {
+    folds: Vec<Vec<usize>>,
+}
+
+impl Folds {
+    /// Plain k-fold over `m` shuffled indices.
+    pub fn new(m: usize, k: usize, rng: &mut Pcg64) -> Folds {
+        assert!(k >= 2 && k <= m, "need 2 <= k <= m (k={k}, m={m})");
+        let mut idx: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut idx);
+        let mut folds = vec![Vec::new(); k];
+        for (pos, i) in idx.into_iter().enumerate() {
+            folds[pos % k].push(i);
+        }
+        Folds { folds }
+    }
+
+    /// Stratified k-fold: each fold receives a proportional share of every
+    /// class (`labels[i] > 0` vs `<= 0`).
+    pub fn stratified(labels: &[f64], k: usize, rng: &mut Pcg64) -> Folds {
+        let m = labels.len();
+        assert!(k >= 2 && k <= m, "need 2 <= k <= m (k={k}, m={m})");
+        let mut pos: Vec<usize> =
+            (0..m).filter(|&i| labels[i] > 0.0).collect();
+        let mut neg: Vec<usize> =
+            (0..m).filter(|&i| labels[i] <= 0.0).collect();
+        rng.shuffle(&mut pos);
+        rng.shuffle(&mut neg);
+        let mut folds = vec![Vec::new(); k];
+        for (p, i) in pos.into_iter().enumerate() {
+            folds[p % k].push(i);
+        }
+        // offset the negative round-robin so fold sizes stay balanced
+        for (p, i) in neg.into_iter().enumerate() {
+            folds[(k - 1 - p % k) % k].push(i);
+        }
+        Folds { folds }
+    }
+
+    /// Number of folds.
+    pub fn k(&self) -> usize {
+        self.folds.len()
+    }
+
+    /// Test indices of fold `f`.
+    pub fn test_indices(&self, f: usize) -> &[usize] {
+        &self.folds[f]
+    }
+
+    /// Train indices of fold `f` (all other folds, ascending).
+    pub fn train_indices(&self, f: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .folds
+            .iter()
+            .enumerate()
+            .filter(|&(g, _)| g != f)
+            .flat_map(|(_, v)| v.iter().copied())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Iterate `(train, test)` index pairs.
+    pub fn splits(&self) -> impl Iterator<Item = (Vec<usize>, Vec<usize>)> + '_ {
+        (0..self.k()).map(|f| (self.train_indices(f), self.folds[f].clone()))
+    }
+}
+
+/// Random train/test split: returns `(train, test)` indices with
+/// `test_fraction` of examples held out.
+pub fn train_test_split(
+    m: usize,
+    test_fraction: f64,
+    rng: &mut Pcg64,
+) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_fraction));
+    let mut idx: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut idx);
+    let n_test = ((m as f64) * test_fraction).round() as usize;
+    let test = idx.split_off(m - n_test);
+    (idx, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_partition_everything() {
+        let mut rng = Pcg64::seeded(1);
+        let f = Folds::new(103, 10, &mut rng);
+        let mut all: Vec<usize> =
+            (0..10).flat_map(|i| f.test_indices(i).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn folds_are_balanced() {
+        let mut rng = Pcg64::seeded(2);
+        let f = Folds::new(100, 10, &mut rng);
+        for i in 0..10 {
+            assert_eq!(f.test_indices(i).len(), 10);
+        }
+    }
+
+    #[test]
+    fn train_test_disjoint_and_complete() {
+        let mut rng = Pcg64::seeded(3);
+        let f = Folds::new(30, 5, &mut rng);
+        for fold in 0..5 {
+            let train = f.train_indices(fold);
+            let test = f.test_indices(fold);
+            assert_eq!(train.len() + test.len(), 30);
+            for t in test {
+                assert!(!train.contains(t));
+            }
+        }
+    }
+
+    #[test]
+    fn stratified_preserves_balance() {
+        let mut rng = Pcg64::seeded(4);
+        // 30 positive, 70 negative
+        let labels: Vec<f64> =
+            (0..100).map(|i| if i < 30 { 1.0 } else { -1.0 }).collect();
+        let f = Folds::stratified(&labels, 10, &mut rng);
+        for i in 0..10 {
+            let test = f.test_indices(i);
+            let pos = test.iter().filter(|&&j| labels[j] > 0.0).count();
+            assert_eq!(test.len(), 10, "fold {i}");
+            assert_eq!(pos, 3, "fold {i} pos count");
+        }
+    }
+
+    #[test]
+    fn stratified_partitions_everything() {
+        let mut rng = Pcg64::seeded(5);
+        let labels: Vec<f64> =
+            (0..47).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        let f = Folds::stratified(&labels, 4, &mut rng);
+        let mut all: Vec<usize> =
+            (0..4).flat_map(|i| f.test_indices(i).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..47).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn splits_iterator_covers_all_folds() {
+        let mut rng = Pcg64::seeded(6);
+        let f = Folds::new(20, 4, &mut rng);
+        assert_eq!(f.splits().count(), 4);
+        for (train, test) in f.splits() {
+            assert_eq!(train.len() + test.len(), 20);
+        }
+    }
+
+    #[test]
+    fn train_test_split_sizes() {
+        let mut rng = Pcg64::seeded(7);
+        let (train, test) = train_test_split(100, 0.25, &mut rng);
+        assert_eq!(test.len(), 25);
+        assert_eq!(train.len(), 75);
+        let mut all = [train, test].concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "need 2 <= k <= m")]
+    fn rejects_k_larger_than_m() {
+        let mut rng = Pcg64::seeded(8);
+        Folds::new(3, 5, &mut rng);
+    }
+}

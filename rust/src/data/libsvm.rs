@@ -1,0 +1,218 @@
+//! LIBSVM sparse text format parser.
+//!
+//! The paper's benchmark datasets (adult, australian, colon-cancer,
+//! german.numer, ijcnn1, mnist) are distributed in LIBSVM format:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices are 1-based and may be sparse. No network access is available
+//! in this environment, so the registry falls back to synthetic
+//! equivalents (see `registry.rs`), but any real file dropped into
+//! `data/real/<name>.libsvm` is parsed by this module and used instead.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::Dataset;
+use crate::linalg::Matrix;
+
+/// Parse LIBSVM text from any reader. `n_features` may be given (for
+/// datasets whose tail features are absent in the file); otherwise the max
+/// seen index is used. Labels are normalized: {0,1} and {1,2} label
+/// schemes become ±1; ±1 and real-valued regression targets pass through.
+pub fn parse<R: Read>(
+    reader: R,
+    name: &str,
+    n_features: Option<usize>,
+) -> anyhow::Result<Dataset> {
+    let mut labels = Vec::new();
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut max_index = 0usize;
+
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.context("read error")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("bad label on line {}", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("bad pair {tok:?} line {}", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("bad index {idx:?} line {}", lineno + 1))?;
+            if idx == 0 {
+                bail!("LIBSVM indices are 1-based; got 0 on line {}", lineno + 1);
+            }
+            let val: f64 = val
+                .parse()
+                .with_context(|| format!("bad value {val:?} line {}", lineno + 1))?;
+            max_index = max_index.max(idx);
+            feats.push((idx - 1, val));
+        }
+        labels.push(label);
+        rows.push(feats);
+    }
+
+    if labels.is_empty() {
+        bail!("empty LIBSVM file for {name}");
+    }
+    let n = n_features.unwrap_or(max_index);
+    if max_index > n {
+        bail!("feature index {max_index} exceeds declared n_features {n}");
+    }
+    let m = labels.len();
+    let mut x = Matrix::zeros(n, m);
+    for (j, feats) in rows.iter().enumerate() {
+        for &(i, v) in feats {
+            x[(i, j)] = v;
+        }
+    }
+    let y = normalize_labels(&labels);
+    Ok(Dataset::new(name, x, y))
+}
+
+/// Parse a file on disk.
+pub fn parse_file(path: &Path, n_features: Option<usize>) -> anyhow::Result<Dataset> {
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "unnamed".into());
+    let fh = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    parse(fh, &name, n_features)
+}
+
+/// Map common binary label encodings to ±1; leave regression targets alone.
+fn normalize_labels(labels: &[f64]) -> Vec<f64> {
+    let mut distinct: Vec<f64> = labels.to_vec();
+    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    distinct.dedup();
+    match distinct.as_slice() {
+        [a, b] if *a == 0.0 && *b == 1.0 => {
+            labels.iter().map(|&v| if v > 0.5 { 1.0 } else { -1.0 }).collect()
+        }
+        [a, b] if *a == 1.0 && *b == 2.0 => {
+            labels.iter().map(|&v| if v > 1.5 { 1.0 } else { -1.0 }).collect()
+        }
+        [a, b] if *a == -1.0 && *b == 1.0 => labels.to_vec(),
+        _ => labels.to_vec(), // regression or already-normalized
+    }
+}
+
+/// Serialize a dataset to LIBSVM text (round-trip tests, interchange).
+pub fn to_string(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for j in 0..ds.n_examples() {
+        out.push_str(&format!("{}", ds.y[j]));
+        for i in 0..ds.n_features() {
+            let v = ds.x[(i, j)];
+            if v != 0.0 {
+                out.push_str(&format!(" {}:{}", i + 1, v));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.5
+-1 2:2.0
++1 1:-1.0 2:0.25 3:0.125
+";
+
+    #[test]
+    fn parses_sparse_rows() {
+        let ds = parse(SAMPLE.as_bytes(), "sample", None).unwrap();
+        assert_eq!(ds.n_features(), 3);
+        assert_eq!(ds.n_examples(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x[(0, 0)], 0.5);
+        assert_eq!(ds.x[(2, 0)], 1.5);
+        assert_eq!(ds.x[(1, 1)], 2.0);
+        assert_eq!(ds.x[(0, 1)], 0.0); // absent => 0
+    }
+
+    #[test]
+    fn declared_feature_count() {
+        let ds = parse(SAMPLE.as_bytes(), "sample", Some(10)).unwrap();
+        assert_eq!(ds.n_features(), 10);
+    }
+
+    #[test]
+    fn declared_count_too_small_errors() {
+        assert!(parse(SAMPLE.as_bytes(), "sample", Some(2)).is_err());
+    }
+
+    #[test]
+    fn zero_index_rejected() {
+        assert!(parse("1 0:3.0\n".as_bytes(), "bad", None).is_err());
+    }
+
+    #[test]
+    fn empty_file_rejected() {
+        assert!(parse("".as_bytes(), "empty", None).is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let text = "# header\n\n+1 1:1.0\n";
+        let ds = parse(text.as_bytes(), "c", None).unwrap();
+        assert_eq!(ds.n_examples(), 1);
+    }
+
+    #[test]
+    fn zero_one_labels_normalized() {
+        let text = "0 1:1.0\n1 1:2.0\n";
+        let ds = parse(text.as_bytes(), "z", None).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn one_two_labels_normalized() {
+        let text = "1 1:1.0\n2 1:2.0\n";
+        let ds = parse(text.as_bytes(), "z", None).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn regression_labels_untouched() {
+        let text = "0.7 1:1.0\n-3.2 1:2.0\n1.1 1:0.5\n";
+        let ds = parse(text.as_bytes(), "r", None).unwrap();
+        assert_eq!(ds.y, vec![0.7, -3.2, 1.1]);
+    }
+
+    #[test]
+    fn round_trip() {
+        let ds = parse(SAMPLE.as_bytes(), "sample", None).unwrap();
+        let text = to_string(&ds);
+        let ds2 = parse(text.as_bytes(), "sample", Some(3)).unwrap();
+        assert_eq!(ds.y, ds2.y);
+        assert!(ds.x.max_abs_diff(&ds2.x) < 1e-15);
+    }
+
+    #[test]
+    fn malformed_pair_errors() {
+        assert!(parse("1 broken\n".as_bytes(), "b", None).is_err());
+        assert!(parse("1 a:1.0\n".as_bytes(), "b", None).is_err());
+        assert!(parse("1 1:x\n".as_bytes(), "b", None).is_err());
+        assert!(parse("notalabel 1:1\n".as_bytes(), "b", None).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Dataset substrate: in-memory datasets, parsing, splitting, scaling.
+//!
+//! Layout convention follows the paper: the design matrix `X` is
+//! **feature-major**, `X[i][j]` = value of feature `i` on example `j`
+//! (an `n × m` [`Matrix`]), so a feature's value vector `v = X_i` is a
+//! contiguous row — exactly what the greedy scoring loop streams.
+
+pub mod folds;
+pub mod libsvm;
+pub mod registry;
+pub mod synthetic;
+
+use crate::linalg::Matrix;
+
+/// An in-memory supervised dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Feature-major design matrix, `n_features × m_examples`.
+    pub x: Matrix,
+    /// Labels, length `m` (±1 for classification).
+    pub y: Vec<f64>,
+    /// Human-readable name (registry key / file stem).
+    pub name: String,
+}
+
+impl Dataset {
+    /// Construct and validate shapes.
+    pub fn new(name: impl Into<String>, x: Matrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.cols(), y.len(), "X columns must equal |y|");
+        Dataset { x, y, name: name.into() }
+    }
+
+    /// Number of features `n`.
+    pub fn n_features(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Number of examples `m`.
+    pub fn n_examples(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Subset of examples (columns), preserving feature count.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let x = self.x.select_cols(idx);
+        let y = idx.iter().map(|&j| self.y[j]).collect();
+        Dataset { x, y, name: self.name.clone() }
+    }
+
+    /// Class balance: fraction of +1 labels (classification datasets).
+    pub fn positive_fraction(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64
+            / self.y.len() as f64
+    }
+
+    /// Standardize every feature to zero mean / unit variance **in place**,
+    /// returning the per-feature (mean, std) so test data can be scaled
+    /// with the training statistics. Constant features get std = 1.
+    pub fn standardize(&mut self) -> Vec<(f64, f64)> {
+        let m = self.n_examples() as f64;
+        let mut stats = Vec::with_capacity(self.n_features());
+        for i in 0..self.n_features() {
+            let row = self.x.row_mut(i);
+            let mean = row.iter().sum::<f64>() / m;
+            let var = row.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / m;
+            let std = if var > 0.0 { var.sqrt() } else { 1.0 };
+            for v in row.iter_mut() {
+                *v = (*v - mean) / std;
+            }
+            stats.push((mean, std));
+        }
+        stats
+    }
+
+    /// Apply previously computed standardization statistics.
+    pub fn apply_standardization(&mut self, stats: &[(f64, f64)]) {
+        assert_eq!(stats.len(), self.n_features());
+        for (i, &(mean, std)) in stats.iter().enumerate() {
+            for v in self.x.row_mut(i).iter_mut() {
+                *v = (*v - mean) / std;
+            }
+        }
+    }
+
+    /// Append a constant bias feature (footnote 1 of the paper: a bias
+    /// term is realized as an extra all-ones feature).
+    pub fn with_bias_feature(&self) -> Dataset {
+        let n = self.n_features();
+        let m = self.n_examples();
+        let mut x = Matrix::zeros(n + 1, m);
+        for i in 0..n {
+            x.row_mut(i).copy_from_slice(self.x.row(i));
+        }
+        for v in x.row_mut(n).iter_mut() {
+            *v = 1.0;
+        }
+        Dataset { x, y: self.y.clone(), name: self.name.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_rows(&[
+            &[1.0, 2.0, 3.0, 4.0],
+            &[0.0, 0.0, 0.0, 0.0],
+        ]);
+        Dataset::new("toy", x, vec![1.0, -1.0, 1.0, -1.0])
+    }
+
+    #[test]
+    fn shapes() {
+        let d = toy();
+        assert_eq!(d.n_features(), 2);
+        assert_eq!(d.n_examples(), 4);
+        assert_eq!(d.positive_fraction(), 0.5);
+    }
+
+    #[test]
+    fn subset_selects_columns() {
+        let d = toy().subset(&[3, 0]);
+        assert_eq!(d.n_examples(), 2);
+        assert_eq!(d.y, vec![-1.0, 1.0]);
+        assert_eq!(d.x.row(0), &[4.0, 1.0]);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = toy();
+        let stats = d.standardize();
+        let row = d.x.row(0);
+        let mean: f64 = row.iter().sum::<f64>() / 4.0;
+        let var: f64 = row.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((var - 1.0).abs() < 1e-12);
+        // constant feature: untouched values, std reported as 1
+        assert_eq!(stats[1].1, 1.0);
+        assert!(d.x.row(1).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn apply_standardization_uses_train_stats() {
+        let mut train = toy();
+        let stats = train.standardize();
+        let mut test = toy();
+        test.apply_standardization(&stats);
+        assert_eq!(train.x.row(0), test.x.row(0));
+    }
+
+    #[test]
+    fn bias_feature_appended() {
+        let d = toy().with_bias_feature();
+        assert_eq!(d.n_features(), 3);
+        assert!(d.x.row(2).iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "X columns must equal")]
+    fn shape_validation() {
+        Dataset::new("bad", Matrix::zeros(2, 3), vec![1.0]);
+    }
+}

@@ -1,0 +1,239 @@
+//! Synthetic dataset generators.
+//!
+//! Two roles (DESIGN.md §6):
+//!
+//! 1. **Scaling experiments** (paper §4.1, Figs 1–3): the paper itself uses
+//!    "randomly generated data from two normal distributions with 1000
+//!    features" — [`two_gaussians`] is exactly that.
+//! 2. **Benchmark stand-ins** (paper §4.2–4.3, Table 1, Figs 4–15): the
+//!    real LIBSVM datasets are not downloadable in this offline
+//!    environment, so [`planted_sparse`] generates datasets with a planted
+//!    informative subset: `s` features carry class-conditional signal of
+//!    decaying strength, the remaining `n − s` are pure noise. This
+//!    reproduces the mechanisms the paper's quality/overfitting claims
+//!    rest on (greedy ≫ random, plateau after the informative subset,
+//!    LOO↔test gap driven by the m/n ratio).
+
+use super::Dataset;
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Two-Gaussian classification data, the paper's §4.1 workload.
+///
+/// Each class is a spherical Gaussian in `n` dimensions with mean
+/// `±separation/2 · μ̂` along a random unit direction; classes are
+/// balanced. Returns a feature-major dataset with ±1 labels.
+pub fn two_gaussians(
+    m: usize,
+    n: usize,
+    informative: usize,
+    separation: f64,
+    seed: u64,
+) -> Dataset {
+    assert!(informative <= n);
+    let mut rng = Pcg64::new(seed, 17);
+    // random unit direction supported on the informative coordinates
+    let mut mu = vec![0.0; n];
+    let dims = rng.choose_distinct(n, informative.max(1));
+    for &d in &dims {
+        mu[d] = rng.normal();
+    }
+    let norm = crate::linalg::norm2(&mu).max(1e-12);
+    for v in mu.iter_mut() {
+        *v /= norm;
+    }
+
+    let mut x = Matrix::zeros(n, m);
+    let mut y = vec![0.0; m];
+    for j in 0..m {
+        let label = if j % 2 == 0 { 1.0 } else { -1.0 };
+        y[j] = label;
+        for i in 0..n {
+            x[(i, j)] = rng.normal() + 0.5 * separation * label * mu[i];
+        }
+    }
+    Dataset::new(format!("two_gaussians_m{m}_n{n}"), x, y)
+}
+
+/// Planted-sparse benchmark generator.
+///
+/// `s` informative features: feature `i` (i < s) has class-conditional
+/// mean `±signal · decay^i`, everything else is N(0, 1) noise. With
+/// `flip_prob` label noise. Feature positions are shuffled so selection
+/// cannot cheat on index order.
+#[allow(clippy::too_many_arguments)]
+pub fn planted_sparse(
+    name: &str,
+    m: usize,
+    n: usize,
+    s: usize,
+    signal: f64,
+    decay: f64,
+    flip_prob: f64,
+    seed: u64,
+) -> Dataset {
+    assert!(s <= n, "informative count {s} > n {n}");
+    let mut rng = Pcg64::new(seed, 23);
+
+    // true labels, balanced, then optionally flipped (label noise)
+    let mut y_true = vec![0.0; m];
+    for (j, v) in y_true.iter_mut().enumerate() {
+        *v = if j % 2 == 0 { 1.0 } else { -1.0 };
+    }
+    rng.shuffle(&mut y_true);
+
+    let mut x = Matrix::zeros(n, m);
+    // informative rows first, then shuffled into random positions
+    let positions = rng.choose_distinct(n, n);
+    for (rank, &row) in positions.iter().enumerate() {
+        let strength = if rank < s {
+            signal * decay.powi(rank as i32)
+        } else {
+            0.0
+        };
+        let r = x.row_mut(row);
+        for (j, v) in r.iter_mut().enumerate() {
+            *v = rng.normal() + strength * y_true[j];
+        }
+    }
+
+    let y = y_true
+        .iter()
+        .map(|&v| if rng.uniform() < flip_prob { -v } else { v })
+        .collect();
+    Dataset::new(name, x, y)
+}
+
+/// Sparse linear **regression** data: y = wᵀx + noise with `s`-sparse w.
+/// Used by regression-mode tests and the squared-loss selection paths.
+pub fn sparse_regression(
+    m: usize,
+    n: usize,
+    s: usize,
+    noise: f64,
+    seed: u64,
+) -> (Dataset, Vec<usize>) {
+    assert!(s <= n);
+    let mut rng = Pcg64::new(seed, 29);
+    let support = rng.choose_distinct(n, s);
+    let mut w = vec![0.0; n];
+    for &i in &support {
+        w[i] = rng.normal_ms(0.0, 1.0) + rng.sign(); // bounded away from 0
+    }
+    let mut x = Matrix::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            x[(i, j)] = rng.normal();
+        }
+    }
+    let mut y = vec![0.0; m];
+    for j in 0..m {
+        let mut v = 0.0;
+        for &i in &support {
+            v += w[i] * x[(i, j)];
+        }
+        y[j] = v + noise * rng.normal();
+    }
+    (
+        Dataset::new(format!("sparse_reg_m{m}_n{n}_s{s}"), x, y),
+        support,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_gaussians_shapes_and_balance() {
+        let ds = two_gaussians(200, 50, 10, 2.0, 1);
+        assert_eq!(ds.n_examples(), 200);
+        assert_eq!(ds.n_features(), 50);
+        assert_eq!(ds.positive_fraction(), 0.5);
+    }
+
+    #[test]
+    fn two_gaussians_is_separable_along_mu() {
+        // with a large separation the class means must differ strongly on
+        // at least one informative coordinate
+        let ds = two_gaussians(500, 20, 5, 6.0, 2);
+        let mut best_gap = 0.0_f64;
+        for i in 0..20 {
+            let row = ds.x.row(i);
+            let (mut mp, mut mn, mut cp, mut cn) = (0.0, 0.0, 0, 0);
+            for j in 0..500 {
+                if ds.y[j] > 0.0 {
+                    mp += row[j];
+                    cp += 1;
+                } else {
+                    mn += row[j];
+                    cn += 1;
+                }
+            }
+            best_gap = best_gap.max((mp / cp as f64 - mn / cn as f64).abs());
+        }
+        assert!(best_gap > 1.0, "gap {best_gap}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = two_gaussians(50, 10, 3, 1.0, 7);
+        let b = two_gaussians(50, 10, 3, 1.0, 7);
+        assert!(a.x.max_abs_diff(&b.x) == 0.0);
+        assert_eq!(a.y, b.y);
+        let c = two_gaussians(50, 10, 3, 1.0, 8);
+        assert!(a.x.max_abs_diff(&c.x) > 0.0);
+    }
+
+    #[test]
+    fn planted_sparse_properties() {
+        let ds = planted_sparse("t", 300, 40, 5, 1.5, 0.9, 0.0, 3);
+        assert_eq!(ds.n_examples(), 300);
+        assert_eq!(ds.n_features(), 40);
+        // exactly s rows should correlate strongly with the labels
+        let mut strong = 0;
+        for i in 0..40 {
+            let row = ds.x.row(i);
+            let corr: f64 = row
+                .iter()
+                .zip(&ds.y)
+                .map(|(&v, &l)| v * l)
+                .sum::<f64>()
+                / 300.0;
+            if corr.abs() > 0.5 {
+                strong += 1;
+            }
+        }
+        assert!((4..=6).contains(&strong), "strong = {strong}");
+    }
+
+    #[test]
+    fn label_noise_flips_labels() {
+        let clean = planted_sparse("c", 500, 10, 2, 1.0, 1.0, 0.0, 9);
+        let noisy = planted_sparse("n", 500, 10, 2, 1.0, 1.0, 0.3, 9);
+        let diff = clean
+            .y
+            .iter()
+            .zip(&noisy.y)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!((100..200).contains(&diff), "flips {diff}");
+    }
+
+    #[test]
+    fn sparse_regression_support_is_predictive() {
+        let (ds, support) = sparse_regression(400, 30, 4, 0.01, 5);
+        assert_eq!(support.len(), 4);
+        // residual after regressing on the true support should be tiny
+        for &i in &support {
+            let row = ds.x.row(i);
+            let corr: f64 = row
+                .iter()
+                .zip(&ds.y)
+                .map(|(&v, &yv)| v * yv)
+                .sum::<f64>()
+                / 400.0;
+            assert!(corr.abs() > 0.05, "support feature {i} uncorrelated");
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # greedy-rls
+//!
+//! A production-oriented reproduction of **"Linear Time Feature Selection
+//! for Regularized Least-Squares"** (Pahikkala, Airola, Salakoski, 2010):
+//! greedy forward feature selection for RLS / ridge regression / LS-SVM
+//! with a leave-one-out (LOO) selection criterion in **O(kmn)** time —
+//! linear in training examples `m`, candidate features `n`, and selected
+//! features `k`.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer architecture:
+//!
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) implement the
+//!   O(mn) per-round hot spots (candidate scoring, rank-1 cache update).
+//! * **Layer 2** — a JAX compute graph (`python/compile/model.py`) wires the
+//!   kernels into jittable entry points, AOT-lowered once to HLO text.
+//! * **Layer 3** — this crate: loads the artifacts via PJRT
+//!   ([`runtime`]), owns the greedy selection loop, datasets,
+//!   cross-validation, serving and benchmarking ([`coordinator`],
+//!   [`select`], [`data`]). Python is never on the request path.
+//!
+//! A pure-Rust engine ([`select::greedy`]) implements the same algorithm
+//! natively; the two engines are equivalence-tested against each other and
+//! against the paper's Algorithm 1 (wrapper) and Algorithm 2 (low-rank
+//! updated LS-SVM) baselines.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use greedy_rls::data::synthetic::two_gaussians;
+//! use greedy_rls::select::{greedy::GreedyRls, Selector, SelectionConfig};
+//! use greedy_rls::metrics::Loss;
+//!
+//! let ds = two_gaussians(1000, 200, 10, 1.0, 42);
+//! let cfg = SelectionConfig { k: 25, lambda: 1.0, loss: Loss::ZeroOne };
+//! let result = GreedyRls::default().select(&ds.x, &ds.y, &cfg).unwrap();
+//! println!("selected {:?}", result.selected);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod proptest;
+pub mod rls;
+pub mod rng;
+pub mod runtime;
+pub mod select;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,183 @@
+//! LU factorization with partial pivoting.
+//!
+//! General (non-SPD) solves: used by tests as an independent oracle against
+//! Cholesky, and by the general inverse needed when checking the paper's
+//! SMW identities against explicit re-inversion.
+
+use super::Matrix;
+
+/// Compact LU factorization `P A = L U` with partial pivoting.
+pub struct Lu {
+    lu: Matrix,
+    perm: Vec<usize>,
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor a square matrix. Returns `None` on exact singularity.
+    pub fn factor(a: &Matrix) -> Option<Lu> {
+        let n = a.rows();
+        assert_eq!(n, a.cols(), "LU needs a square matrix");
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for col in 0..n {
+            // pivot: largest |entry| at or below the diagonal
+            let mut piv = col;
+            let mut max = lu[(col, col)].abs();
+            for r in col + 1..n {
+                let v = lu[(r, col)].abs();
+                if v > max {
+                    max = v;
+                    piv = r;
+                }
+            }
+            if max == 0.0 {
+                return None;
+            }
+            if piv != col {
+                for j in 0..n {
+                    let tmp = lu[(col, j)];
+                    lu[(col, j)] = lu[(piv, j)];
+                    lu[(piv, j)] = tmp;
+                }
+                perm.swap(col, piv);
+                sign = -sign;
+            }
+            let d = lu[(col, col)];
+            for r in col + 1..n {
+                let f = lu[(r, col)] / d;
+                lu[(r, col)] = f;
+                for j in col + 1..n {
+                    let v = lu[(col, j)];
+                    lu[(r, j)] -= f * v;
+                }
+            }
+        }
+        Some(Lu { lu, perm, sign })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // apply permutation, forward substitution on unit-lower part
+        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        for i in 1..n {
+            let mut s = x[i];
+            for k in 0..i {
+                s -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = s;
+        }
+        // back substitution on upper part
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.lu.rows() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+
+    /// Full inverse (column-by-column solve).
+    pub fn inverse(&self) -> Matrix {
+        let n = self.lu.rows();
+        let mut inv = Matrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+}
+
+/// General inverse helper; `None` if singular.
+pub fn inverse(a: &Matrix) -> Option<Matrix> {
+    Lu::factor(a).map(|lu| lu.inverse())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Cholesky;
+    use crate::rng::Pcg64;
+
+    fn random_square(rng: &mut Pcg64, n: usize) -> Matrix {
+        Matrix::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn solve_matches_known() {
+        // [[2,1],[1,3]] x = [3,5]  =>  x = [0.8, 1.4]
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = Lu::factor(&a).unwrap().solve(&[3.0, 5.0]);
+        assert!((x[0] - 0.8).abs() < 1e-14);
+        assert!((x[1] - 1.4).abs() < 1e-14);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Pcg64::seeded(31);
+        let a = random_square(&mut rng, 8);
+        let inv = inverse(&a).unwrap();
+        assert!(a.matmul(&inv).max_abs_diff(&Matrix::identity(8)) < 1e-9);
+    }
+
+    #[test]
+    fn det_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert!((Lu::factor(&a).unwrap().det() + 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn det_permutation_sign() {
+        // row-swapped identity has det -1
+        let a = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        assert!((Lu::factor(&a).unwrap().det() + 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::factor(&a).is_none());
+    }
+
+    #[test]
+    fn agrees_with_cholesky_on_spd() {
+        let mut rng = Pcg64::seeded(32);
+        let b = random_square(&mut rng, 6);
+        let mut a = b.gram();
+        a.add_diag(1.0);
+        let rhs: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let x_lu = Lu::factor(&a).unwrap().solve(&rhs);
+        let x_ch = Cholesky::factor(&a).unwrap().solve(&rhs);
+        for (l, c) in x_lu.iter().zip(&x_ch) {
+            assert!((l - c).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn needs_pivoting_case() {
+        // zero top-left pivot forces a swap
+        let a = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 1.0]]);
+        let x = Lu::factor(&a).unwrap().solve(&[2.0, 3.0]);
+        assert!((x[0] - 1.0).abs() < 1e-14);
+        assert!((x[1] - 2.0).abs() < 1e-14);
+    }
+}

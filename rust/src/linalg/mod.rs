@@ -1,0 +1,441 @@
+//! Dense linear algebra substrate.
+//!
+//! The baselines (the wrapper Algorithm 1 and the low-rank updated LS-SVM
+//! Algorithm 2) and the RLS closed forms (eqs. 3/4 of the paper) need
+//! general dense solves and symmetric inverses. No external BLAS/LAPACK is
+//! available offline, so this module implements the required kernels from
+//! scratch: row-major [`Matrix`], matrix products, Cholesky and
+//! partial-pivoting LU factorizations, triangular solves, symmetric
+//! inverse, and the Sherman–Morrison rank-1 inverse update the paper's
+//! eq. (10) is built on.
+
+mod cholesky;
+mod lu;
+
+pub use cholesky::Cholesky;
+pub use lu::{inverse, Lu};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix from a row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Matrix from nested rows (convenient in tests).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable contiguous row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column copied out (rows are the contiguous axis).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Underlying row-major storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Underlying row-major storage, mutably.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self * other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        // ikj loop order: both inner accesses are row-contiguous.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * v` for a column vector `v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        (0..self.rows).map(|i| dot(self.row(i), v)).collect()
+    }
+
+    /// `selfᵀ * v` without forming the transpose.
+    pub fn tr_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len(), "tr_matvec shape mismatch");
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            for (o, &x) in out.iter_mut().zip(self.row(i)) {
+                *o += vi * x;
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `self * selfᵀ` (symmetric, upper computed + mirrored).
+    pub fn gram(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.rows, self.rows);
+        for i in 0..self.rows {
+            for j in i..self.rows {
+                let v = dot(self.row(i), self.row(j));
+                g[(i, j)] = v;
+                g[(j, i)] = v;
+            }
+        }
+        g
+    }
+
+    /// `selfᵀ * self` (the kernel matrix K of eq. 6 when self = X_S).
+    pub fn gram_t(&self) -> Matrix {
+        let t = self.transpose();
+        t.gram()
+    }
+
+    /// Add `lambda` to the diagonal in place.
+    pub fn add_diag(&mut self, lambda: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += lambda;
+        }
+    }
+
+    /// Submatrix with the given rows (copies).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Submatrix with the given columns (copies).
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            for (c, &j) in idx.iter().enumerate() {
+                out[(i, c)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product (manually 4-way unrolled so LLVM autovectorizes).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Symmetric positive-definite inverse via Cholesky (used for G = (K+λI)⁻¹).
+pub fn spd_inverse(a: &Matrix) -> Option<Matrix> {
+    let chol = Cholesky::factor(a)?;
+    let n = a.rows();
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = chol.solve(&e);
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+        e[j] = 0.0;
+    }
+    Some(inv)
+}
+
+/// Sherman–Morrison: given `Ainv = A⁻¹`, return `(A + v vᵀ)⁻¹`
+/// = Ainv − (Ainv v)(vᵀ Ainv) / (1 + vᵀ Ainv v)  — eq. (10) of the paper.
+pub fn sherman_morrison_update(ainv: &Matrix, v: &[f64]) -> Matrix {
+    let n = ainv.rows();
+    assert_eq!(n, v.len());
+    let gv = ainv.matvec(v); // A⁻¹v (symmetric ⇒ also vᵀA⁻¹)
+    let denom = 1.0 + dot(v, &gv);
+    let mut out = ainv.clone();
+    for i in 0..n {
+        let ui = gv[i] / denom;
+        let row = out.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r -= ui * gv[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_matrix(rng: &mut Pcg64, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Matrix {
+        let a = random_matrix(rng, n, n + 2);
+        let mut g = a.gram();
+        g.add_diag(0.5);
+        g
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Matrix::zeros(3, 4);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1)[2], 5.0);
+        assert_eq!(m.col(2)[1], 5.0);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Matrix::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seeded(1);
+        let a = random_matrix(&mut rng, 5, 5);
+        let i = Matrix::identity(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-15);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(2);
+        let a = random_matrix(&mut rng, 4, 7);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::seeded(3);
+        let a = random_matrix(&mut rng, 6, 4);
+        let v: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let vm = Matrix::from_vec(4, 1, v.clone());
+        let want = a.matmul(&vm);
+        let got = a.matvec(&v);
+        for i in 0..6 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tr_matvec_matches_transpose() {
+        let mut rng = Pcg64::seeded(4);
+        let a = random_matrix(&mut rng, 6, 4);
+        let v: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let want = a.transpose().matvec(&v);
+        let got = a.tr_matvec(&v);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Pcg64::seeded(5);
+        let a = random_matrix(&mut rng, 5, 8);
+        let g = a.gram();
+        for i in 0..5 {
+            assert!(g[(i, i)] >= 0.0);
+            for j in 0..5 {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let a = Matrix::from_rows(&[
+            &[1.0, 2.0, 3.0],
+            &[4.0, 5.0, 6.0],
+            &[7.0, 8.0, 9.0],
+        ]);
+        let r = a.select_rows(&[2, 0]);
+        assert_eq!(r, Matrix::from_rows(&[&[7.0, 8.0, 9.0], &[1.0, 2.0, 3.0]]));
+        let c = a.select_cols(&[1]);
+        assert_eq!(c, Matrix::from_rows(&[&[2.0], &[5.0], &[8.0]]));
+    }
+
+    #[test]
+    fn dot_unroll_matches_naive() {
+        let mut rng = Pcg64::seeded(6);
+        for len in [0, 1, 3, 4, 5, 17, 64, 101] {
+            let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-10, "len {len}");
+        }
+    }
+
+    #[test]
+    fn spd_inverse_roundtrip() {
+        let mut rng = Pcg64::seeded(7);
+        let a = random_spd(&mut rng, 8);
+        let inv = spd_inverse(&a).unwrap();
+        let eye = a.matmul(&inv);
+        assert!(eye.max_abs_diff(&Matrix::identity(8)) < 1e-9);
+    }
+
+    #[test]
+    fn sherman_morrison_matches_reinversion() {
+        let mut rng = Pcg64::seeded(8);
+        let mut a = random_spd(&mut rng, 6);
+        let ainv = spd_inverse(&a).unwrap();
+        let v: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let smw = sherman_morrison_update(&ainv, &v);
+        // direct: invert A + v vᵀ
+        for i in 0..6 {
+            for j in 0..6 {
+                a[(i, j)] += v[i] * v[j];
+            }
+        }
+        let direct = spd_inverse(&a).unwrap();
+        assert!(smw.max_abs_diff(&direct) < 1e-8);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_checked() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

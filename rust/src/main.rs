@@ -1,0 +1,327 @@
+//! `greedy-rls` — Layer-3 leader binary.
+//!
+//! Subcommand dispatch over the library's coordinator; see `cli::USAGE`.
+
+use anyhow::{bail, Context, Result};
+
+use greedy_rls::bench::time_once;
+use greedy_rls::cli::{Args, USAGE};
+use greedy_rls::coordinator::{self, cv, serve, EngineKind};
+use greedy_rls::data::{registry, synthetic, Dataset};
+use greedy_rls::metrics::Loss;
+use greedy_rls::runtime::Runtime;
+use greedy_rls::select::{
+    greedy::GreedyRls, lowrank::LowRankLsSvm, SelectionConfig, Selector,
+};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("select") => cmd_select(args),
+        Some("cv") => cmd_cv(args),
+        Some("scaling") => cmd_scaling(args),
+        Some("serve") => cmd_serve(args),
+        Some("datasets") => cmd_datasets(),
+        Some("compare") => cmd_compare(args),
+        Some("check") => cmd_check(args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn load_dataset(args: &Args) -> Result<Dataset> {
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    if let Some(spec) = args.get("synthetic") {
+        let parts: Vec<usize> = spec
+            .split(',')
+            .map(|t| t.trim().parse().context("--synthetic M,N"))
+            .collect::<Result<_>>()?;
+        if parts.len() != 2 {
+            bail!("--synthetic expects M,N");
+        }
+        return Ok(synthetic::two_gaussians(parts[0], parts[1],
+            (parts[1] / 10).max(1), 1.0, seed));
+    }
+    let name: String = args.require("dataset")?;
+    registry::load(&name, args.has("full"), seed)
+}
+
+fn open_runtime_if(engine: EngineKind) -> Result<Option<Runtime>> {
+    match engine {
+        EngineKind::Native => Ok(None),
+        EngineKind::Pjrt => Ok(Some(Runtime::open("artifacts")?)),
+    }
+}
+
+fn cmd_select(args: &Args) -> Result<()> {
+    let mut ds = load_dataset(args)?;
+    ds.standardize();
+    let cfg = SelectionConfig {
+        k: args.get_or("k", 10usize)?,
+        lambda: args.get_or("lambda", 1.0f64)?,
+        loss: args.get_or("loss", Loss::ZeroOne)?,
+    };
+    let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
+    let rt = open_runtime_if(engine)?;
+    println!(
+        "dataset={} m={} n={} k={} lambda={} engine={engine:?}",
+        ds.name,
+        ds.n_examples(),
+        ds.n_features(),
+        cfg.k,
+        cfg.lambda
+    );
+    let mut result = None;
+    let secs = time_once(|| {
+        result = Some(coordinator::select_with_engine(
+            engine,
+            rt.as_ref(),
+            &ds.x,
+            &ds.y,
+            &cfg,
+        ));
+    });
+    let r = result.unwrap()?;
+    println!("selected ({}): {:?}", r.selected.len(), r.selected);
+    println!(
+        "criterion trajectory: {:?}",
+        r.criterion_curve()
+            .iter()
+            .map(|c| (c * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+    println!("selection time: {secs:.3}s");
+    if let Some(path) = args.get("out") {
+        coordinator::save_model(&r.predictor(), std::path::Path::new(path))?;
+        println!("model written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_cv(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let folds: usize = args.get_or("folds", 10usize)?;
+    let kmax: usize = args.get_or("kmax", ds.n_features().min(50))?;
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    println!(
+        "# cv dataset={} m={} n={} folds={folds} kmax={kmax}",
+        ds.name,
+        ds.n_examples(),
+        ds.n_features()
+    );
+    let curves = cv::run_cv(&ds, folds, kmax, seed)?;
+    println!("k\tgreedy_test\tgreedy_loo\trandom_test\tgreedy_test_std");
+    for (i, k) in curves.ks.iter().enumerate() {
+        println!(
+            "{k}\t{:.4}\t{:.4}\t{:.4}\t{:.4}",
+            curves.greedy_test[i],
+            curves.greedy_loo[i],
+            curves.random_test[i],
+            curves.greedy_test_std[i]
+        );
+    }
+    println!("# per-fold lambdas: {:?}", curves.lambdas);
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let n: usize = args.get_or("n", 1000usize)?;
+    let k: usize = args.get_or("k", 50usize)?;
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let sizes: Vec<usize> = match args.get_list("sizes") {
+        Some(v) => v
+            .iter()
+            .map(|s| s.parse().context("--sizes"))
+            .collect::<Result<_>>()?,
+        None => vec![500, 1000, 1500, 2000, 2500, 3000],
+    };
+    let with_baseline = args.has("baseline");
+    println!("# scaling n={n} k={k} (paper §4.1)");
+    println!("m\tgreedy_rls_s{}", if with_baseline { "\tlowrank_s" } else { "" });
+    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+    for &m in &sizes {
+        let ds = synthetic::two_gaussians(m, n, 50, 1.0, seed);
+        let t_greedy =
+            time_once(|| { GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap(); });
+        if with_baseline {
+            let t_low = time_once(|| {
+                LowRankLsSvm.select(&ds.x, &ds.y, &cfg).unwrap();
+            });
+            println!("{m}\t{t_greedy:.3}\t{t_low:.3}");
+        } else {
+            println!("{m}\t{t_greedy:.3}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path: String = args.require("model")?;
+    let p = coordinator::load_model(std::path::Path::new(&model_path))?;
+    let mut ds = load_dataset(args)?;
+    ds.standardize();
+    let batch: usize = args.get_or("batch", 64usize)?;
+    let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
+    println!(
+        "serving model k={} over {} examples, batch={batch}, engine={engine:?}",
+        p.selected.len(),
+        ds.n_examples()
+    );
+    let (preds, stats) = match engine {
+        EngineKind::Native => serve::serve_native(&p, &ds.x, batch),
+        EngineKind::Pjrt => {
+            let rt = Runtime::open("artifacts")?;
+            serve::serve_pjrt(&rt, &p, &ds.x, batch)?
+        }
+    };
+    let acc = greedy_rls::metrics::accuracy(&ds.y, &preds);
+    println!(
+        "accuracy={acc:.4} batches={} mean={:.6}s p50={:.6}s p99={:.6}s \
+         throughput={:.0}/s",
+        stats.batches,
+        stats.mean_batch_s,
+        stats.p50_batch_s,
+        stats.p99_batch_s,
+        stats.throughput
+    );
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    use greedy_rls::data::folds::train_test_split;
+    use greedy_rls::rng::Pcg64;
+    use greedy_rls::select::{
+        backward::BackwardElimination, floating::FloatingForward, foba::Foba,
+        lowrank::LowRankLsSvm, nfold::NFoldGreedy, random::RandomSelector,
+        wrapper::Wrapper,
+    };
+
+    let ds = load_dataset(args)?;
+    let k: usize = args.get_or("k", 5usize)?;
+    let lambda: f64 = args.get_or("lambda", 1.0f64)?;
+    let loss: Loss = args.get_or("loss", Loss::ZeroOne)?;
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let cfg = SelectionConfig { k, lambda, loss };
+
+    let mut rng = Pcg64::new(seed, 91);
+    let (tr, te) = train_test_split(ds.n_examples(), 0.25, &mut rng);
+    let mut train = ds.subset(&tr);
+    let mut test = ds.subset(&te);
+    let stats = train.standardize();
+    test.apply_standardization(&stats);
+
+    let fast_only = train.n_examples() > 2000 || ds.n_features() > 300;
+    let mut selectors: Vec<Box<dyn Selector>> = vec![
+        Box::new(GreedyRls),
+        Box::new(RandomSelector { seed }),
+        Box::new(Foba::default()),
+        Box::new(NFoldGreedy { folds: 10.min(train.n_examples()), seed }),
+    ];
+    if !fast_only {
+        selectors.push(Box::new(LowRankLsSvm));
+        selectors.push(Box::new(Wrapper::shortcut()));
+        selectors.push(Box::new(BackwardElimination));
+        selectors.push(Box::new(FloatingForward::default()));
+    }
+
+    println!(
+        "# compare dataset={} m_train={} n={} k={k} lambda={lambda}",
+        ds.name,
+        train.n_examples(),
+        ds.n_features()
+    );
+    println!("selector\tseconds\ttest_acc\tselected");
+    for s in &selectors {
+        let mut result = None;
+        let secs = time_once(|| {
+            result = Some(s.select(&train.x, &train.y, &cfg));
+        });
+        match result.unwrap() {
+            Ok(r) => {
+                let p = r.predictor().predict_matrix(&test.x);
+                let acc = greedy_rls::metrics::accuracy(&test.y, &p);
+                println!(
+                    "{}\t{secs:.3}\t{acc:.4}\t{:?}",
+                    s.name(),
+                    r.selected
+                );
+            }
+            Err(e) => println!("{}\tfailed: {e}", s.name()),
+        }
+    }
+    if fast_only {
+        println!(
+            "# quadratic baselines skipped (large problem); pass a smaller \
+             dataset to include them"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("# paper Table 1 (synthetic stand-ins generated on demand)");
+    println!("dataset\tpaper_m\tpaper_n\tscaled_m");
+    for s in registry::SPECS {
+        println!("{}\t{}\t{}\t{}", s.name, s.paper_m, s.paper_n, s.scaled_m);
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.get("artifacts").unwrap_or("artifacts"))?;
+    println!(
+        "platform={} devices={}",
+        rt.client().platform_name(),
+        rt.client().device_count()
+    );
+    let buckets = rt.selection_buckets();
+    println!("selection buckets: {buckets:?}");
+    if buckets.is_empty() {
+        bail!("no complete selection buckets in artifacts/");
+    }
+    // probe: tiny problem through both engines must match
+    let ds = synthetic::two_gaussians(48, 24, 6, 1.5, 7);
+    let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+    let native = GreedyRls.select(&ds.x, &ds.y, &cfg)?;
+    let pjrt = coordinator::select_with_engine(
+        EngineKind::Pjrt,
+        Some(&rt),
+        &ds.x,
+        &ds.y,
+        &cfg,
+    )?;
+    if native.selected != pjrt.selected {
+        bail!(
+            "engine mismatch: native {:?} vs pjrt {:?}",
+            native.selected,
+            pjrt.selected
+        );
+    }
+    println!(
+        "engines agree on probe problem: selected {:?}",
+        native.selected
+    );
+    println!("compiled executables: {}", rt.compiled_count());
+    println!("artifacts OK");
+    Ok(())
+}

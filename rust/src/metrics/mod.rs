@@ -1,0 +1,149 @@
+//! Losses and evaluation metrics.
+//!
+//! The paper evaluates selection with two losses (squared for regression,
+//! zero-one for classification) and reports test-set classification
+//! accuracy averaged over stratified ten-fold cross-validation.
+
+/// Per-example loss used as the LOO selection criterion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// `(y - p)^2` — regression.
+    Squared,
+    /// `[y * p <= 0]` — binary classification with ±1 labels; a raw
+    /// prediction of exactly 0 counts as an error (matches the kernels).
+    ZeroOne,
+}
+
+impl Loss {
+    /// Loss of one prediction.
+    #[inline]
+    pub fn eval(&self, y: f64, p: f64) -> f64 {
+        match self {
+            Loss::Squared => {
+                let r = y - p;
+                r * r
+            }
+            Loss::ZeroOne => {
+                if y * p > 0.0 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Summed loss over a batch.
+    pub fn total(&self, y: &[f64], p: &[f64]) -> f64 {
+        assert_eq!(y.len(), p.len());
+        y.iter().zip(p).map(|(&yi, &pi)| self.eval(yi, pi)).sum()
+    }
+}
+
+impl std::str::FromStr for Loss {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "squared" | "sq" | "regression" => Ok(Loss::Squared),
+            "zeroone" | "01" | "classification" => Ok(Loss::ZeroOne),
+            other => Err(format!("unknown loss {other:?}")),
+        }
+    }
+}
+
+/// Fraction of sign-correct predictions (±1 labels).
+pub fn accuracy(y: &[f64], p: &[f64]) -> f64 {
+    assert_eq!(y.len(), p.len());
+    if y.is_empty() {
+        return 0.0;
+    }
+    let correct = y
+        .iter()
+        .zip(p)
+        .filter(|(&yi, &pi)| yi * pi > 0.0)
+        .count();
+    correct as f64 / y.len() as f64
+}
+
+/// Mean squared error.
+pub fn mse(y: &[f64], p: &[f64]) -> f64 {
+    assert_eq!(y.len(), p.len());
+    if y.is_empty() {
+        return 0.0;
+    }
+    y.iter().zip(p).map(|(&a, &b)| (a - b) * (a - b)).sum::<f64>()
+        / y.len() as f64
+}
+
+/// Mean and sample standard deviation of a series (figure error bars).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+        / (xs.len() - 1) as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squared_loss() {
+        assert_eq!(Loss::Squared.eval(1.0, 0.5), 0.25);
+        assert_eq!(Loss::Squared.eval(-1.0, -1.0), 0.0);
+    }
+
+    #[test]
+    fn zero_one_loss() {
+        assert_eq!(Loss::ZeroOne.eval(1.0, 2.0), 0.0);
+        assert_eq!(Loss::ZeroOne.eval(1.0, -0.1), 1.0);
+        assert_eq!(Loss::ZeroOne.eval(-1.0, -3.0), 0.0);
+        // exactly-zero prediction counts as an error (kernel convention)
+        assert_eq!(Loss::ZeroOne.eval(1.0, 0.0), 1.0);
+        assert_eq!(Loss::ZeroOne.eval(-1.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn total_sums() {
+        let y = [1.0, -1.0, 1.0];
+        let p = [0.5, 0.5, -0.5];
+        assert_eq!(Loss::ZeroOne.total(&y, &p), 2.0);
+    }
+
+    #[test]
+    fn accuracy_counts_signs() {
+        let y = [1.0, -1.0, 1.0, -1.0];
+        let p = [2.0, -0.5, -1.0, 0.0];
+        assert_eq!(accuracy(&y, &p), 0.5);
+    }
+
+    #[test]
+    fn accuracy_empty_is_zero() {
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn mse_known() {
+        assert!((mse(&[1.0, 2.0], &[2.0, 0.0]) - 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-15);
+        assert!((s - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn loss_parses() {
+        assert_eq!("squared".parse::<Loss>().unwrap(), Loss::Squared);
+        assert_eq!("01".parse::<Loss>().unwrap(), Loss::ZeroOne);
+        assert!("bogus".parse::<Loss>().is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal property-based testing support.
+//!
+//! The offline crate cache has no `proptest`/`quickcheck`, so this module
+//! provides the small subset the test suite needs: a seeded case runner
+//! with failure reporting including the failing seed, plus generators for
+//! the problem shapes used throughout (random matrices, labels, λ grids).
+//!
+//! Usage (`no_run`: rustdoc test binaries don't inherit the xla rpath
+//! this workspace links with, so doctests compile but are not executed):
+//! ```no_run
+//! use greedy_rls::proptest::forall_seeds;
+//! forall_seeds(64, |seed| {
+//!     assert!(seed == seed); // property under test
+//! });
+//! ```
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Run `prop` for `cases` deterministic seeds; panics with the failing
+/// seed so the case can be replayed directly.
+pub fn forall_seeds<F: Fn(u64) + std::panic::RefUnwindSafe>(cases: u64, prop: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| prop(seed));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Problem-shape generator shared by equivalence/property tests.
+pub struct Gen {
+    pub rng: Pcg64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg64::new(seed, 101) }
+    }
+
+    /// Random size in [lo, hi].
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Random λ on a log grid spanning [10^lo, 10^hi].
+    pub fn lambda(&mut self, lo: i32, hi: i32) -> f64 {
+        10f64.powf(self.rng.uniform_range(lo as f64, hi as f64))
+    }
+
+    /// Standard-normal matrix.
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| self.rng.normal()).collect(),
+        )
+    }
+
+    /// ±1 labels.
+    pub fn labels(&mut self, m: usize) -> Vec<f64> {
+        (0..m).map(|_| self.rng.sign()).collect()
+    }
+
+    /// Real-valued targets.
+    pub fn targets(&mut self, m: usize) -> Vec<f64> {
+        (0..m).map(|_| self.rng.normal()).collect()
+    }
+}
+
+/// Assert two slices are element-wise close.
+#[track_caller]
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0_f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_every_seed() {
+        let hits = std::sync::atomic::AtomicU64::new(0);
+        forall_seeds(10, |_| {
+            hits.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed 3")]
+    fn forall_reports_failing_seed() {
+        forall_seeds(10, |seed| {
+            assert!(seed != 3, "boom");
+        });
+    }
+
+    #[test]
+    fn gen_sizes_in_range() {
+        let mut g = Gen::new(0);
+        for _ in 0..100 {
+            let s = g.size(3, 7);
+            assert!((3..=7).contains(&s));
+        }
+    }
+
+    #[test]
+    fn gen_lambda_in_decade_range() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let l = g.lambda(-2, 2);
+            assert!((0.01..=100.0).contains(&l));
+        }
+    }
+
+    #[test]
+    fn labels_are_signs() {
+        let mut g = Gen::new(2);
+        assert!(g.labels(50).iter().all(|&v| v.abs() == 1.0));
+    }
+
+    #[test]
+    fn assert_close_passes_within_tol() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9, "ok");
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_fails_outside_tol() {
+        assert_close(&[1.0], &[1.1], 1e-9, "bad");
+    }
+}

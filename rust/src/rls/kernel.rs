@@ -1,0 +1,176 @@
+//! Kernel functions and kernel RLS (substrate for reduced-set selection).
+//!
+//! The paper's §5 points at "reduced set selection used in context of
+//! kernel-based learning algorithms" and center selection for RBF
+//! networks as the natural next applications of the greedy machinery.
+//! This module provides the kernel substrate: standard kernels, kernel
+//! matrix assembly, and full (non-sparse) kernel RLS as the reference
+//! the reduced-set selector ([`crate::select::centers`]) is compared to.
+
+use crate::linalg::{dot, Cholesky, Matrix};
+
+/// Kernel function over column-vector examples.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// ⟨x, z⟩
+    Linear,
+    /// exp(−γ‖x − z‖²)
+    Rbf { gamma: f64 },
+    /// (⟨x, z⟩ + coef)^degree
+    Poly { degree: i32, coef: f64 },
+}
+
+impl Kernel {
+    /// k(x, z) for two example vectors.
+    pub fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        match *self {
+            Kernel::Linear => dot(x, z),
+            Kernel::Rbf { gamma } => {
+                let d2: f64 = x
+                    .iter()
+                    .zip(z)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                (-gamma * d2).exp()
+            }
+            Kernel::Poly { degree, coef } => (dot(x, z) + coef).powi(degree),
+        }
+    }
+
+    /// Kernel matrix between the columns of two feature-major matrices:
+    /// `out[i][j] = k(a_i, b_j)` where `a_i` is column i of `a`.
+    pub fn matrix(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), b.rows(), "feature dimension mismatch");
+        let (ma, mb) = (a.cols(), b.cols());
+        let mut out = Matrix::zeros(ma, mb);
+        // columns are strided; copy once per outer index
+        for i in 0..ma {
+            let ai = a.col(i);
+            for j in 0..mb {
+                let bj = b.col(j);
+                out[(i, j)] = self.eval(&ai, &bj);
+            }
+        }
+        out
+    }
+
+    /// Symmetric kernel matrix of one dataset (exploits symmetry).
+    pub fn gram(&self, a: &Matrix) -> Matrix {
+        let m = a.cols();
+        let mut out = Matrix::zeros(m, m);
+        let cols: Vec<Vec<f64>> = (0..m).map(|i| a.col(i)).collect();
+        for i in 0..m {
+            for j in i..m {
+                let v = self.eval(&cols[i], &cols[j]);
+                out[(i, j)] = v;
+                out[(j, i)] = v;
+            }
+        }
+        out
+    }
+}
+
+/// Full (dense) kernel RLS model: a = (K + λI)⁻¹ y.
+#[derive(Clone, Debug)]
+pub struct KernelRls {
+    /// Kernel used at train time.
+    pub kernel: Kernel,
+    /// Dual coefficients, one per training example.
+    pub alpha: Vec<f64>,
+    /// Training examples (feature-major) retained for prediction.
+    pub train_x: Matrix,
+}
+
+impl KernelRls {
+    /// Fit on feature-major `x` (n × m) with labels `y`.
+    pub fn fit(x: &Matrix, y: &[f64], kernel: Kernel, lambda: f64) -> Self {
+        assert_eq!(x.cols(), y.len());
+        assert!(lambda > 0.0);
+        let mut k = kernel.gram(x);
+        k.add_diag(lambda);
+        let alpha = Cholesky::factor(&k)
+            .expect("K + λI SPD for λ>0 and PSD kernels")
+            .solve(y);
+        KernelRls { kernel, alpha, train_x: x.clone() }
+    }
+
+    /// Predict every column of `x_test`.
+    pub fn predict(&self, x_test: &Matrix) -> Vec<f64> {
+        let kt = self.kernel.matrix(x_test, &self.train_x); // (mt × m)
+        kt.matvec(&self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{assert_close, Gen};
+
+    #[test]
+    fn linear_kernel_is_dot() {
+        assert_eq!(Kernel::Linear.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn rbf_kernel_properties() {
+        let k = Kernel::Rbf { gamma: 0.5 };
+        assert!((k.eval(&[1.0, 2.0], &[1.0, 2.0]) - 1.0).abs() < 1e-15);
+        let far = k.eval(&[0.0, 0.0], &[10.0, 10.0]);
+        assert!(far < 1e-10);
+        // symmetry
+        let a = [0.3, -0.7];
+        let b = [1.1, 0.2];
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+    }
+
+    #[test]
+    fn poly_kernel_known_value() {
+        let k = Kernel::Poly { degree: 2, coef: 1.0 };
+        // (1*2 + 1)^2 = 9
+        assert_eq!(k.eval(&[1.0], &[2.0]), 9.0);
+    }
+
+    #[test]
+    fn gram_matches_pairwise_matrix() {
+        let mut g = Gen::new(1);
+        let x = g.matrix(3, 6);
+        for kernel in [
+            Kernel::Linear,
+            Kernel::Rbf { gamma: 0.3 },
+            Kernel::Poly { degree: 3, coef: 0.5 },
+        ] {
+            let gram = kernel.gram(&x);
+            let full = kernel.matrix(&x, &x);
+            assert!(gram.max_abs_diff(&full) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn linear_kernel_rls_equals_linear_rls() {
+        // with the linear kernel, kernel RLS = dual linear RLS
+        let mut g = Gen::new(2);
+        let x = g.matrix(4, 9);
+        let y = g.targets(9);
+        let lam = 0.8;
+        let model = KernelRls::fit(&x, &y, Kernel::Linear, lam);
+        let preds = model.predict(&x);
+        let (w, _) = crate::rls::train_dual(&x, &y, lam);
+        let direct: Vec<f64> = (0..9)
+            .map(|j| {
+                let col = x.col(j);
+                crate::linalg::dot(&w, &col)
+            })
+            .collect();
+        assert_close(&preds, &direct, 1e-8, "linear-kernel RLS");
+    }
+
+    #[test]
+    fn rbf_rls_interpolates_with_tiny_lambda() {
+        let mut g = Gen::new(3);
+        let x = g.matrix(2, 12);
+        let y = g.targets(12);
+        let model = KernelRls::fit(&x, &y, Kernel::Rbf { gamma: 1.0 }, 1e-10);
+        let preds = model.predict(&x);
+        assert_close(&preds, &y, 1e-4, "interpolation");
+    }
+}

@@ -1,0 +1,274 @@
+//! Regularized least-squares (RLS / ridge regression / LS-SVM) core.
+//!
+//! Implements the paper's §2 verbatim:
+//!
+//! * primal training, eq. (3): `w = (X_S X_Sᵀ + λI)⁻¹ X_S y` — O(|S|²m),
+//!   preferred when |S| < m;
+//! * dual training, eq. (4): `w = X_S (X_Sᵀ X_S + λI)⁻¹ y` — O(m²|S|),
+//!   preferred when m < |S|;
+//! * the O(1)-per-example LOO shortcuts, eq. (7) (primal) and eq. (8)
+//!   (dual), plus a brute-force LOO used as the test oracle;
+//! * a [`Predictor`] type for the sparse learned model (prediction is
+//!   O(k) per example, matching the paper's deployment claim).
+
+pub mod kernel;
+pub mod rank;
+
+use crate::linalg::{dot, spd_inverse, Cholesky, Matrix};
+
+/// A sparse linear predictor over selected feature indices (paper eq. 1).
+#[derive(Clone, Debug)]
+pub struct Predictor {
+    /// Selected feature indices S (in selection order).
+    pub selected: Vec<usize>,
+    /// Weights aligned with `selected`.
+    pub weights: Vec<f64>,
+}
+
+impl Predictor {
+    /// Score one example given its **full** feature vector (length n).
+    pub fn predict_full(&self, x: &[f64]) -> f64 {
+        self.selected
+            .iter()
+            .zip(&self.weights)
+            .map(|(&i, &w)| w * x[i])
+            .sum()
+    }
+
+    /// Score every column of a feature-major matrix (n × m).
+    pub fn predict_matrix(&self, x: &Matrix) -> Vec<f64> {
+        let m = x.cols();
+        let mut out = vec![0.0; m];
+        for (&i, &w) in self.selected.iter().zip(&self.weights) {
+            let row = x.row(i);
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += w * v;
+            }
+        }
+        out
+    }
+
+    /// Dense n-length weight vector (zeros off the support).
+    pub fn dense_weights(&self, n: usize) -> Vec<f64> {
+        let mut w = vec![0.0; n];
+        for (&i, &wi) in self.selected.iter().zip(&self.weights) {
+            w[i] = wi;
+        }
+        w
+    }
+}
+
+/// Primal RLS (eq. 3). `xs` is the selected-feature matrix (|S| × m).
+/// Returns the |S|-length weight vector.
+pub fn train_primal(xs: &Matrix, y: &[f64], lambda: f64) -> Vec<f64> {
+    assert_eq!(xs.cols(), y.len());
+    let mut a = xs.gram(); // X Xᵀ, |S| × |S|
+    a.add_diag(lambda);
+    let rhs = xs.matvec(y); // X y
+    Cholesky::factor(&a)
+        .expect("X Xᵀ + λI is SPD for λ > 0")
+        .solve(&rhs)
+}
+
+/// Dual RLS (eq. 4): returns `(w, a)` with `a = (XᵀX + λI)⁻¹ y`, `w = X a`.
+pub fn train_dual(xs: &Matrix, y: &[f64], lambda: f64) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(xs.cols(), y.len());
+    let mut k = xs.gram_t(); // XᵀX, m × m
+    k.add_diag(lambda);
+    let a = Cholesky::factor(&k)
+        .expect("XᵀX + λI is SPD for λ > 0")
+        .solve(y);
+    let w = xs.matvec(&a);
+    (w, a)
+}
+
+/// Automatic form choice, as the paper prescribes: primal when |S| ≤ m.
+pub fn train(xs: &Matrix, y: &[f64], lambda: f64) -> Vec<f64> {
+    if xs.rows() <= xs.cols() {
+        train_primal(xs, y, lambda)
+    } else {
+        train_dual(xs, y, lambda).0
+    }
+}
+
+/// LOO predictions via the primal shortcut (eq. 7):
+/// `p_j = (1 − q_j)⁻¹ (f_j − q_j y_j)` with
+/// `q_j = x_jᵀ (X Xᵀ + λI)⁻¹ x_j` and `f = Xᵀ w`.
+pub fn loo_primal(xs: &Matrix, y: &[f64], lambda: f64) -> Vec<f64> {
+    let s = xs.rows();
+    let m = xs.cols();
+    assert_eq!(m, y.len());
+    let mut a = xs.gram();
+    a.add_diag(lambda);
+    let inv = spd_inverse(&a).expect("SPD");
+    let w = {
+        let rhs = xs.matvec(y);
+        inv.matvec(&rhs)
+    };
+    let f: Vec<f64> = (0..m).map(|j| {
+        let mut s_ = 0.0;
+        for i in 0..s {
+            s_ += w[i] * xs[(i, j)];
+        }
+        s_
+    }).collect();
+    (0..m)
+        .map(|j| {
+            // q_j = x_jᵀ inv x_j with x_j the j-th column of xs
+            let xj = xs.col(j);
+            let ix = inv.matvec(&xj);
+            let q = dot(&xj, &ix);
+            (f[j] - q * y[j]) / (1.0 - q)
+        })
+        .collect()
+}
+
+/// LOO predictions via the dual shortcut (eq. 8):
+/// `p_j = y_j − a_j / G_jj` with `G = (XᵀX + λI)⁻¹`, `a = G y`.
+pub fn loo_dual(xs: &Matrix, y: &[f64], lambda: f64) -> Vec<f64> {
+    let m = xs.cols();
+    assert_eq!(m, y.len());
+    let mut k = xs.gram_t();
+    k.add_diag(lambda);
+    let g = spd_inverse(&k).expect("SPD");
+    let a = g.matvec(y);
+    (0..m).map(|j| y[j] - a[j] / g[(j, j)]).collect()
+}
+
+/// Brute-force LOO: retrain with example j held out, predict j. The
+/// O(m·training) oracle the shortcuts are verified against.
+pub fn loo_brute_force(xs: &Matrix, y: &[f64], lambda: f64) -> Vec<f64> {
+    let m = xs.cols();
+    assert_eq!(m, y.len());
+    (0..m)
+        .map(|j| {
+            let keep: Vec<usize> = (0..m).filter(|&t| t != j).collect();
+            let xl = xs.select_cols(&keep);
+            let yl: Vec<f64> = keep.iter().map(|&t| y[t]).collect();
+            let w = train(&xl, &yl, lambda);
+            let xj = xs.col(j);
+            dot(&w, &xj)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{assert_close, forall_seeds, Gen};
+
+    #[test]
+    fn primal_equals_dual() {
+        forall_seeds(25, |seed| {
+            let mut g = Gen::new(seed);
+            let s = g.size(1, 8);
+            let m = g.size(2, 12);
+            let lam = g.lambda(-2, 2);
+            let xs = g.matrix(s, m);
+            let y = g.targets(m);
+            let wp = train_primal(&xs, &y, lam);
+            let (wd, _) = train_dual(&xs, &y, lam);
+            assert_close(&wp, &wd, 1e-8, "primal vs dual");
+        });
+    }
+
+    #[test]
+    fn train_matches_normal_equations() {
+        let mut g = Gen::new(7);
+        let xs = g.matrix(3, 20);
+        let y = g.targets(20);
+        let lam = 0.9;
+        let w = train(&xs, &y, lam);
+        // residual of (X Xᵀ + λI) w − X y must vanish
+        let mut a = xs.gram();
+        a.add_diag(lam);
+        let lhs = a.matvec(&w);
+        let rhs = xs.matvec(&y);
+        assert_close(&lhs, &rhs, 1e-9, "normal equations");
+    }
+
+    #[test]
+    fn loo_shortcuts_agree_with_each_other() {
+        forall_seeds(25, |seed| {
+            let mut g = Gen::new(seed + 1000);
+            let s = g.size(1, 6);
+            let m = g.size(3, 14);
+            let lam = g.lambda(-1, 2);
+            let xs = g.matrix(s, m);
+            let y = g.targets(m);
+            let p7 = loo_primal(&xs, &y, lam);
+            let p8 = loo_dual(&xs, &y, lam);
+            assert_close(&p7, &p8, 1e-7, "eq7 vs eq8");
+        });
+    }
+
+    #[test]
+    fn loo_shortcuts_equal_brute_force() {
+        forall_seeds(15, |seed| {
+            let mut g = Gen::new(seed + 2000);
+            let s = g.size(1, 5);
+            let m = g.size(4, 10);
+            let lam = g.lambda(-1, 1);
+            let xs = g.matrix(s, m);
+            let y = g.targets(m);
+            let brute = loo_brute_force(&xs, &y, lam);
+            let p7 = loo_primal(&xs, &y, lam);
+            let p8 = loo_dual(&xs, &y, lam);
+            assert_close(&p7, &brute, 1e-6, "eq7 vs brute");
+            assert_close(&p8, &brute, 1e-6, "eq8 vs brute");
+        });
+    }
+
+    #[test]
+    fn heavy_regularization_shrinks_weights() {
+        let mut g = Gen::new(3);
+        let xs = g.matrix(4, 30);
+        let y = g.targets(30);
+        let w_small = train(&xs, &y, 1e-3);
+        let w_large = train(&xs, &y, 1e6);
+        let n_small = crate::linalg::norm2(&w_small);
+        let n_large = crate::linalg::norm2(&w_large);
+        assert!(n_large < n_small * 1e-2, "{n_large} vs {n_small}");
+    }
+
+    #[test]
+    fn predictor_predicts_selected_only() {
+        let p = Predictor { selected: vec![2, 0], weights: vec![1.5, -0.5] };
+        let x = [10.0, 99.0, 2.0, 99.0];
+        assert_eq!(p.predict_full(&x), 1.5 * 2.0 - 0.5 * 10.0);
+    }
+
+    #[test]
+    fn predictor_matrix_matches_pointwise() {
+        let mut g = Gen::new(4);
+        let x = g.matrix(5, 7);
+        let p = Predictor { selected: vec![1, 4], weights: vec![0.3, -2.0] };
+        let batch = p.predict_matrix(&x);
+        for j in 0..7 {
+            let col = x.col(j);
+            assert!((batch[j] - p.predict_full(&col)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_weights_scatter() {
+        let p = Predictor { selected: vec![3, 1], weights: vec![2.0, -1.0] };
+        assert_eq!(p.dense_weights(5), vec![0.0, -1.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn interpolation_limit() {
+        // with tiny λ and more features than examples, training data is fit
+        let mut g = Gen::new(5);
+        let xs = g.matrix(12, 6);
+        let y = g.targets(6);
+        let w = train(&xs, &y, 1e-10);
+        let f: Vec<f64> = (0..6)
+            .map(|j| {
+                let col = xs.col(j);
+                dot(&w, &col)
+            })
+            .collect();
+        assert_close(&f, &y, 1e-4, "interpolation");
+    }
+}

@@ -1,0 +1,206 @@
+//! RankRLS: pairwise regularized least-squares for learning to rank
+//! (paper §5, refs [32, 33] — the authors' own RankRLS line of work:
+//! "we also plan to design and implement similar feature selection
+//! algorithms for RankRLS").
+//!
+//! Objective (all-pairs magnitude-preserving ranking loss):
+//!
+//! ```text
+//! argmin_w  Σ_{i<j} ((y_i − y_j) − (f_i − f_j))²  +  λ wᵀw,   f = X_Sᵀ w
+//! ```
+//!
+//! With the centering Laplacian `L = m·I − 1 1ᵀ` this is
+//! `‖L(f − y)‖²`-like and has the closed form
+//!
+//! ```text
+//! w = (X_S L X_Sᵀ + λI)⁻¹ X_S L y
+//! ```
+//!
+//! The crucial structural fact used everywhere here: `L v = m·v − (Σv)·1`
+//! costs **O(m)**, so all Laplacian products stay linear in m and the
+//! primal matrix `M_S = X_S L X_Sᵀ + λI` is only k × k.
+
+use crate::linalg::{dot, Cholesky, Matrix};
+
+/// `L v = m·v − (Σ v)·1` — the all-pairs centering Laplacian applied in
+/// O(m) (never materialize the m×m L).
+pub fn laplacian_apply(v: &[f64]) -> Vec<f64> {
+    let m = v.len() as f64;
+    let s: f64 = v.iter().sum();
+    v.iter().map(|&x| m * x - s).collect()
+}
+
+/// Pairwise squared ranking risk: Σ_{i<j} ((y_i−y_j) − (f_i−f_j))².
+/// Computed in O(m) via the identity Σ_{i<j}(d_i−d_j)² = dᵀ L d with
+/// d = y − f (the ½ from double counting cancels against L's factor 2).
+pub fn pairwise_risk(y: &[f64], f: &[f64]) -> f64 {
+    assert_eq!(y.len(), f.len());
+    let d: Vec<f64> = y.iter().zip(f).map(|(&a, &b)| a - b).collect();
+    let ld = laplacian_apply(&d);
+    dot(&d, &ld)
+}
+
+/// Fraction of correctly ordered pairs (ties in y skipped; ties in f
+/// count half) — the ranking analogue of accuracy.
+pub fn pairwise_accuracy(y: &[f64], f: &[f64]) -> f64 {
+    assert_eq!(y.len(), f.len());
+    let m = y.len();
+    let mut correct = 0.0;
+    let mut total = 0.0;
+    for i in 0..m {
+        for j in i + 1..m {
+            let dy = y[i] - y[j];
+            if dy == 0.0 {
+                continue;
+            }
+            total += 1.0;
+            let df = f[i] - f[j];
+            if df == 0.0 {
+                correct += 0.5;
+            } else if dy.signum() == df.signum() {
+                correct += 1.0;
+            }
+        }
+    }
+    if total > 0.0 {
+        correct / total
+    } else {
+        0.0
+    }
+}
+
+/// Train RankRLS on the selected-feature matrix `xs` (k × m):
+/// `w = (X L Xᵀ + λI)⁻¹ X L y`.
+pub fn train_rank(xs: &Matrix, y: &[f64], lambda: f64) -> Vec<f64> {
+    let k = xs.rows();
+    let m = xs.cols();
+    assert_eq!(m, y.len());
+    assert!(lambda > 0.0);
+    // X L Xᵀ: row i of X L is laplacian_apply(row i) — O(km) total
+    let lx: Vec<Vec<f64>> =
+        (0..k).map(|i| laplacian_apply(xs.row(i))).collect();
+    let mut mmat = Matrix::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            let v = dot(&lx[i], xs.row(j));
+            mmat[(i, j)] = v;
+            mmat[(j, i)] = v;
+        }
+    }
+    mmat.add_diag(lambda);
+    let ly = laplacian_apply(y);
+    let rhs: Vec<f64> = (0..k).map(|i| dot(xs.row(i), &ly)).collect();
+    Cholesky::factor(&mmat)
+        .expect("X L Xᵀ + λI is SPD for λ > 0 (L is PSD)")
+        .solve(&rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{assert_close, forall_seeds, Gen};
+
+    #[test]
+    fn laplacian_matches_dense_form() {
+        forall_seeds(10, |seed| {
+            let mut g = Gen::new(seed + 40);
+            let m = g.size(2, 12);
+            let v = g.targets(m);
+            let got = laplacian_apply(&v);
+            // dense L = m I − 1 1ᵀ
+            let s: f64 = v.iter().sum();
+            for (j, &gj) in got.iter().enumerate() {
+                let want = m as f64 * v[j] - s;
+                assert!((gj - want).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn pairwise_risk_matches_naive_double_sum() {
+        forall_seeds(10, |seed| {
+            let mut g = Gen::new(seed + 41);
+            let m = g.size(2, 10);
+            let y = g.targets(m);
+            let f = g.targets(m);
+            let fast = pairwise_risk(&y, &f);
+            let mut naive = 0.0;
+            for i in 0..m {
+                for j in i + 1..m {
+                    let d = (y[i] - y[j]) - (f[i] - f[j]);
+                    naive += d * d;
+                }
+            }
+            assert!(
+                (fast - naive).abs() <= 1e-9 * naive.max(1.0),
+                "{fast} vs {naive}"
+            );
+        });
+    }
+
+    #[test]
+    fn pairwise_accuracy_bounds_and_perfect_order() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pairwise_accuracy(&y, &y), 1.0);
+        let rev = [4.0, 3.0, 2.0, 1.0];
+        assert_eq!(pairwise_accuracy(&y, &rev), 0.0);
+        let constant = [0.0; 4];
+        assert_eq!(pairwise_accuracy(&y, &constant), 0.5);
+    }
+
+    #[test]
+    fn train_rank_minimizes_the_objective() {
+        // w* must beat random perturbations of itself on the regularized
+        // pairwise objective
+        let mut g = Gen::new(7);
+        let xs = g.matrix(3, 25);
+        let y = g.targets(25);
+        let lam = 0.5;
+        let w = train_rank(&xs, &y, lam);
+        let objective = |wv: &[f64]| {
+            let f: Vec<f64> = (0..25)
+                .map(|j| {
+                    let col = xs.col(j);
+                    dot(wv, &col)
+                })
+                .collect();
+            pairwise_risk(&y, &f) + lam * dot(wv, wv)
+        };
+        let base = objective(&w);
+        for t in 0..20 {
+            let mut g2 = Gen::new(100 + t);
+            let wp: Vec<f64> = w
+                .iter()
+                .map(|&wi| wi + 0.1 * g2.rng.normal())
+                .collect();
+            assert!(objective(&wp) >= base - 1e-9, "perturbation won");
+        }
+    }
+
+    #[test]
+    fn shift_invariance_of_ranking_solution() {
+        // adding a constant to y changes nothing: L annihilates constants
+        let mut g = Gen::new(9);
+        let xs = g.matrix(4, 15);
+        let y = g.targets(15);
+        let y_shift: Vec<f64> = y.iter().map(|&v| v + 100.0).collect();
+        let w1 = train_rank(&xs, &y, 1.0);
+        let w2 = train_rank(&xs, &y_shift, 1.0);
+        assert_close(&w1, &w2, 1e-8, "shift invariance");
+    }
+
+    #[test]
+    fn recovers_true_ranking_feature() {
+        // y is a noisy monotone function of feature 0 only
+        let mut g = Gen::new(11);
+        let m = 60;
+        let mut x = g.matrix(5, m);
+        let mut y = vec![0.0; m];
+        for j in 0..m {
+            y[j] = 3.0 * x[(0, j)] + 0.01 * g.rng.normal();
+        }
+        let _ = &mut x;
+        let w = train_rank(&x, &y, 0.1);
+        assert!(w[0].abs() > 10.0 * w[1..].iter().fold(0.0f64, |a, &b| a.max(b.abs())));
+    }
+}

@@ -1,0 +1,233 @@
+//! Deterministic pseudo-random numbers for data generation and testing.
+//!
+//! The offline crate cache has no `rand`, so this module provides a small,
+//! fully deterministic PCG-XSH-RR-64 generator plus the distributions the
+//! rest of the crate needs (uniform, standard normal via Box–Muller,
+//! Fisher–Yates shuffle, sampling without replacement). Streams are stable
+//! across platforms and releases: tests and experiment seeds rely on it.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014) with 64-bit output composed from two
+/// 32-bit draws. Small state, excellent statistical quality for the data
+/// synthesis / property-testing workloads here.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next 32 uniformly random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 uniformly random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased integer in [0, bound) (Lemire-style rejection).
+    pub fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "below(0)");
+        let bound = bound as u64;
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            if r >= threshold {
+                return (r % bound) as usize;
+            }
+        }
+    }
+
+    /// Standard normal deviate (Box–Muller, polar form).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `count` distinct indices from [0, n) in random order.
+    pub fn choose_distinct(&mut self, n: usize, count: usize) -> Vec<usize> {
+        assert!(count <= n, "choose_distinct: count {count} > n {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher–Yates: only the first `count` swaps are needed
+        for i in 0..count {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(count);
+        idx
+    }
+
+    /// Random sign: +1.0 or -1.0.
+    #[inline]
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_deterministic() {
+        let mut a = Pcg64::seeded(123);
+        let mut b = Pcg64::seeded(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut rng = Pcg64::seeded(6);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg64::seeded(8);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = rng.below(7);
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(9);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(10);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn choose_distinct_properties() {
+        let mut rng = Pcg64::seeded(11);
+        let picked = rng.choose_distinct(100, 30);
+        assert_eq!(picked.len(), 30);
+        let mut uniq = picked.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 30);
+        assert!(picked.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn choose_distinct_full_range() {
+        let mut rng = Pcg64::seeded(12);
+        let mut picked = rng.choose_distinct(10, 10);
+        picked.sort();
+        assert_eq!(picked, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sign_is_balanced() {
+        let mut rng = Pcg64::seeded(13);
+        let pos = (0..10_000).filter(|_| rng.sign() > 0.0).count();
+        assert!((4500..5500).contains(&pos), "pos {pos}");
+    }
+}

@@ -1,0 +1,154 @@
+//! PJRT-backed greedy RLS engine.
+//!
+//! Runs the paper's Algorithm 3 with every O(mn) step executed by the
+//! AOT-compiled Layer-1/2 artifacts (Pallas score kernel + rank-1 update),
+//! while Rust owns the control flow: bucket choice, padding, the argmin,
+//! the selected-set mask, and the final weight extraction.
+//!
+//! Padding into a bucket is **exact** (DESIGN.md §5): zero feature rows
+//! and zero labels for padded examples contribute nothing to any cache or
+//! loss; padded candidates are masked to BIG by the kernel. The engine is
+//! equivalence-tested against the native [`crate::select::greedy`] engine.
+
+use anyhow::{anyhow, ensure};
+
+use super::{lit, Runtime};
+use crate::linalg::{dot, Matrix};
+use crate::metrics::Loss;
+use crate::select::{
+    argmin, Round, SelectionConfig, SelectionResult, Selector,
+};
+
+/// Greedy RLS driven through the PJRT artifacts.
+pub struct PjrtGreedy<'rt> {
+    rt: &'rt Runtime,
+}
+
+impl<'rt> PjrtGreedy<'rt> {
+    /// Bind the engine to a runtime (artifacts must be built).
+    pub fn new(rt: &'rt Runtime) -> Self {
+        PjrtGreedy { rt }
+    }
+
+    /// Pad feature-major `x` (n × m) into bucket (nb rows × mb cols).
+    fn pad_x(x: &Matrix, mb: usize, nb: usize) -> Vec<f64> {
+        let (n, m) = (x.rows(), x.cols());
+        let mut out = vec![0.0; nb * mb];
+        for i in 0..n {
+            out[i * mb..i * mb + m].copy_from_slice(x.row(i));
+        }
+        out
+    }
+}
+
+impl Selector for PjrtGreedy<'_> {
+    fn name(&self) -> &'static str {
+        "greedy-rls-pjrt"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        let n = x.rows();
+        let m = x.cols();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(m == y.len(), "shape mismatch");
+        let (mb, nb) = self.rt.pick_bucket(m, n).ok_or_else(|| {
+            anyhow!(
+                "no artifact bucket fits (m={m}, n={n}); rebuild artifacts \
+                 with larger buckets (python -m compile.aot --buckets ...)"
+            )
+        })?;
+
+        let init = self.rt.executable("init_state", mb, nb)?;
+        let score = self.rt.executable("score_step", mb, nb)?;
+        let commit = self.rt.executable("commit_step", mb, nb)?;
+
+        // Padded constants.
+        let x_pad = Self::pad_x(x, mb, nb);
+        let x_lit = lit::mat_f64(&x_pad, nb, mb)?;
+        let mut y_pad = vec![0.0; mb];
+        y_pad[..m].copy_from_slice(y);
+        let y_lit = lit::vec_f64(&y_pad);
+        let mut ex_mask = vec![0.0; mb];
+        ex_mask[..m].fill(1.0);
+        let ex_lit = lit::vec_f64(&ex_mask);
+
+        // init_state(X, y, λ) -> (C, a, d)
+        let lam_lit = lit::vec_f64(&[cfg.lambda]);
+        let mut state =
+            Runtime::run_tuple(&init, &[x_lit.clone(), y_lit.clone(), lam_lit])?;
+        ensure!(state.len() == 3, "init_state returned {}", state.len());
+        // state = [C, a, d]
+
+        let mut cand_mask = vec![0.0; nb];
+        cand_mask[..n].fill(1.0);
+        let mut selected = Vec::with_capacity(cfg.k);
+        let mut rounds = Vec::with_capacity(cfg.k);
+
+        for _ in 0..cfg.k {
+            let cm_lit = lit::vec_f64(&cand_mask);
+            let d_lit = &state[2];
+            let a_lit = &state[1];
+            let c_lit = &state[0];
+            let outs = Runtime::run_tuple(
+                &score,
+                &[
+                    x_lit.clone(),
+                    c_lit.clone(),
+                    a_lit.clone(),
+                    d_lit.clone(),
+                    y_lit.clone(),
+                    cm_lit,
+                    ex_lit.clone(),
+                ],
+            )?;
+            ensure!(outs.len() == 2, "score_step returned {}", outs.len());
+            let e_sq = lit::to_vec_f64(&outs[0])?;
+            let e_01 = lit::to_vec_f64(&outs[1])?;
+            let scores = match cfg.loss {
+                Loss::Squared => &e_sq,
+                Loss::ZeroOne => &e_01,
+            };
+            let b = argmin(&scores[..n])
+                .ok_or_else(|| anyhow!("no candidate left"))?;
+            rounds.push(Round { feature: b, criterion: scores[b] });
+
+            let b_lit = lit::scalar_i32(b as i32);
+            state = Runtime::run_tuple(
+                &commit,
+                &[
+                    x_lit.clone(),
+                    state[0].clone(),
+                    state[1].clone(),
+                    state[2].clone(),
+                    b_lit,
+                ],
+            )?;
+            ensure!(state.len() == 3, "commit_step returned {}", state.len());
+            cand_mask[b] = 0.0;
+            selected.push(b);
+        }
+
+        // w = X_S a (unpadded coordinates only).
+        let a_full = lit::to_vec_f64(&state[1])?;
+        let a = &a_full[..m];
+        let weights: Vec<f64> =
+            selected.iter().map(|&i| dot(x.row(i), a)).collect();
+        Ok(SelectionResult { selected, rounds, weights })
+    }
+}
+
+// Literal cloning: xla::Literal is a C++ heap object behind a pointer; the
+// crate exposes Clone via copy construction, which we rely on for feeding
+// state tuples back. (Cheap relative to kernel execution.)
+
+#[cfg(test)]
+mod tests {
+    // PJRT integration tests require compiled artifacts; they live in
+    // rust/tests/pjrt_integration.rs so `cargo test --lib` stays hermetic.
+}

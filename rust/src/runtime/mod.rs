@@ -1,0 +1,240 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from Rust.
+//!
+//! `python/compile/aot.py` lowers the Layer-2 entry points to HLO **text**
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos; the text parser
+//! reassigns instruction ids) at a set of static shape buckets, and writes
+//! `artifacts/manifest.tsv`. This module:
+//!
+//! * parses the manifest,
+//! * compiles each needed artifact exactly once on [`xla::PjRtClient::cpu`]
+//!   (cached thereafter — compilation happens at coordinator startup, never
+//!   on the request path),
+//! * exposes typed `execute` wrappers that marshal between the crate's
+//!   `f64` buffers and [`xla::Literal`]s,
+//! * implements bucket selection + exact zero-padding (DESIGN.md §5).
+//!
+//! Python never runs at runtime: the Rust binary is self-contained once
+//! `make artifacts` has produced the HLO text.
+
+pub mod engine;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context};
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    /// Entry-point name (`score_step`, `commit_step`, ...).
+    pub entry: String,
+    /// Artifact file name relative to the artifacts dir.
+    pub file: String,
+    /// First dimension, e.g. `("m", 256)`.
+    pub dim1: (String, usize),
+    /// Second dimension, e.g. `("n", 256)`.
+    pub dim2: (String, usize),
+}
+
+/// Artifact store + compilation cache on a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ManifestEntry>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The PJRT client (platform introspection, serving buffers).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// All manifest entries.
+    pub fn manifest(&self) -> &[ManifestEntry] {
+        &self.manifest
+    }
+
+    /// Selection-loop buckets (m, n), ascending by m·n: every bucket that
+    /// has all three of init_state/score_step/commit_step.
+    pub fn selection_buckets(&self) -> Vec<(usize, usize)> {
+        let mut buckets: Vec<(usize, usize)> = self
+            .manifest
+            .iter()
+            .filter(|e| e.entry == "score_step")
+            .map(|e| (e.dim1.1, e.dim2.1))
+            .filter(|&(m, n)| {
+                ["init_state", "commit_step"].iter().all(|want| {
+                    self.manifest.iter().any(|e| {
+                        e.entry == *want && e.dim1.1 == m && e.dim2.1 == n
+                    })
+                })
+            })
+            .collect();
+        buckets.sort_by_key(|&(m, n)| (m * n, m));
+        buckets
+    }
+
+    /// Smallest bucket with m_b ≥ m and n_b ≥ n.
+    pub fn pick_bucket(&self, m: usize, n: usize) -> Option<(usize, usize)> {
+        self.selection_buckets()
+            .into_iter()
+            .find(|&(mb, nb)| mb >= m && nb >= n)
+    }
+
+    /// Compile (or fetch from cache) the artifact for `entry` at bucket
+    /// dims (d1, d2).
+    pub fn executable(
+        &self,
+        entry: &str,
+        d1: usize,
+        d2: usize,
+    ) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        let row = self
+            .manifest
+            .iter()
+            .find(|e| e.entry == entry && e.dim1.1 == d1 && e.dim2.1 == d2)
+            .ok_or_else(|| {
+                anyhow!("no artifact for {entry} at ({d1}, {d2})")
+            })?;
+        let key = row.file.clone();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&row.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (test/diagnostic hook).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Run an executable whose output is a tuple, returning the parts.
+    pub fn run_tuple(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("tuple: {e}"))
+    }
+}
+
+fn parse_manifest(text: &str) -> anyhow::Result<Vec<ManifestEntry>> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() < 4 {
+            bail!("manifest line {}: expected 4 columns", lineno + 1);
+        }
+        let parse_dim = |s: &str| -> anyhow::Result<(String, usize)> {
+            let (k, v) = s
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad dim {s:?}"))?;
+            Ok((k.to_string(), v.parse()?))
+        };
+        rows.push(ManifestEntry {
+            entry: cols[0].to_string(),
+            file: cols[1].to_string(),
+            dim1: parse_dim(cols[2])?,
+            dim2: parse_dim(cols[3])?,
+        });
+    }
+    if rows.is_empty() {
+        bail!("empty manifest");
+    }
+    Ok(rows)
+}
+
+/// Literal helpers shared by the engine and serving paths.
+pub mod lit {
+    use anyhow::anyhow;
+
+    /// 1-D f64 literal.
+    pub fn vec_f64(data: &[f64]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// Row-major (rows × cols) f64 literal.
+    pub fn mat_f64(
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+    ) -> anyhow::Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    /// i32 scalar literal.
+    pub fn scalar_i32(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Copy a literal's f64 payload out.
+    pub fn to_vec_f64(l: &xla::Literal) -> anyhow::Result<Vec<f64>> {
+        l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_well_formed_rows() {
+        let text = "# comment\nscore_step\tscore_step_m4_n8.hlo.txt\tm=4\tn=8\n";
+        let rows = parse_manifest(text).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].entry, "score_step");
+        assert_eq!(rows[0].dim1, ("m".to_string(), 4));
+        assert_eq!(rows[0].dim2, ("n".to_string(), 8));
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("just one col\n").is_err());
+        assert!(parse_manifest("a\tb\tm=x\tn=2\n").is_err());
+        assert!(parse_manifest("").is_err());
+    }
+
+    // Tests that need real artifacts + a PJRT client live in
+    // rust/tests/pjrt_integration.rs (they require `make artifacts`).
+}

@@ -1,0 +1,219 @@
+//! Backward elimination (paper §5, future-work direction).
+//!
+//! Start from the **full** feature set and greedily remove the feature
+//! whose removal gives the best LOO performance, until `k` remain. The
+//! paper notes this is inherently more expensive than forward selection
+//! because an RLS predictor must first be trained with every feature —
+//! an O(m³ + m²n) initialization — after which the same cache machinery
+//! as greedy RLS applies with the *sign-flipped* SMW identity:
+//!
+//! removing feature i (K ← K − v vᵀ):
+//! ```text
+//! u  = C[:,i] / (1 − vᵀ C[:,i])
+//! ã  = a + u (vᵀ a)
+//! d̃_j = d_j + u_j C[j,i]
+//! C  ← C + u (vᵀ C)
+//! ```
+//!
+//! so each elimination round is O(mn), and the whole run O((n−k)mn) after
+//! the initialization — the forward algorithm's mirror image.
+
+use anyhow::ensure;
+
+use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use crate::linalg::{dot, spd_inverse, Matrix};
+use crate::metrics::Loss;
+
+/// Greedy backward elimination with LOO criterion.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BackwardElimination;
+
+struct BackState {
+    m: usize,
+    n: usize,
+    /// Cᵀ rows (as in the forward engine).
+    ct: Vec<f64>,
+    a: Vec<f64>,
+    d: Vec<f64>,
+    /// true while the feature is still in S.
+    in_s: Vec<bool>,
+}
+
+impl BackState {
+    /// Train on the full feature set: G = (XᵀX + λI)⁻¹, C = G Xᵀ.
+    fn init(x: &Matrix, y: &[f64], lambda: f64) -> anyhow::Result<BackState> {
+        let n = x.rows();
+        let m = x.cols();
+        let mut k = x.gram_t(); // XᵀX (m × m)
+        k.add_diag(lambda);
+        let g = spd_inverse(&k)
+            .ok_or_else(|| anyhow::anyhow!("K + λI not SPD"))?;
+        let mut ct = vec![0.0; n * m];
+        for i in 0..n {
+            let gxi = g.matvec(x.row(i)); // C[:, i]
+            ct[i * m..(i + 1) * m].copy_from_slice(&gxi);
+        }
+        let a = g.matvec(y);
+        let d = (0..m).map(|j| g[(j, j)]).collect();
+        Ok(BackState { m, n, ct, a, d, in_s: vec![true; n] })
+    }
+
+    /// LOO criterion of S \ {i} for every member i.
+    fn score_removals(&self, x: &Matrix, y: &[f64], loss: Loss) -> Vec<f64> {
+        let m = self.m;
+        let mut scores = vec![BIG; self.n];
+        for i in 0..self.n {
+            if !self.in_s[i] {
+                continue;
+            }
+            let v = x.row(i);
+            let c = &self.ct[i * m..(i + 1) * m];
+            let vc = dot(v, c);
+            let va = dot(v, &self.a);
+            let denom = 1.0 - vc;
+            if denom.abs() < 1e-12 {
+                continue; // numerically unremovable this round
+            }
+            let mut e = 0.0;
+            for j in 0..m {
+                let u = c[j] / denom;
+                let at = self.a[j] + u * va;
+                let dt = self.d[j] + u * c[j];
+                let p = y[j] - at / dt;
+                e += loss.eval(y[j], p);
+            }
+            scores[i] = e;
+        }
+        scores
+    }
+
+    /// Remove feature b from S (sign-flipped commit).
+    fn remove(&mut self, x: &Matrix, b: usize) {
+        let m = self.m;
+        let v = x.row(b);
+        let cb = self.ct[b * m..(b + 1) * m].to_vec();
+        let denom = 1.0 - dot(v, &cb);
+        let u: Vec<f64> = cb.iter().map(|&c| c / denom).collect();
+        let va = dot(v, &self.a);
+        for j in 0..m {
+            self.a[j] += u[j] * va;
+            self.d[j] += u[j] * cb[j];
+        }
+        for i in 0..self.n {
+            let row = &mut self.ct[i * m..(i + 1) * m];
+            let w = dot(v, row);
+            if w != 0.0 {
+                for (r, &uj) in row.iter_mut().zip(&u) {
+                    *r += w * uj;
+                }
+            }
+        }
+        self.in_s[b] = false;
+    }
+}
+
+impl Selector for BackwardElimination {
+    fn name(&self) -> &'static str {
+        "backward-elimination"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        let mut st = BackState::init(x, y, cfg.lambda)?;
+        let mut rounds = Vec::new();
+        for _ in 0..n - cfg.k {
+            let scores = st.score_removals(x, y, cfg.loss);
+            let b = argmin(&scores)
+                .ok_or_else(|| anyhow::anyhow!("no removable feature"))?;
+            rounds.push(Round { feature: b, criterion: scores[b] });
+            st.remove(x, b);
+        }
+        let selected: Vec<usize> =
+            (0..n).filter(|&i| st.in_s[i]).collect();
+        let weights: Vec<f64> =
+            selected.iter().map(|&i| dot(x.row(i), &st.a)).collect();
+        Ok(SelectionResult { selected, rounds, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{assert_close, forall_seeds, Gen};
+
+    /// Removal scores must equal retraining on S \ {i} + LOO shortcut.
+    #[test]
+    fn removal_scores_equal_explicit_loo() {
+        forall_seeds(10, |seed| {
+            let mut g = Gen::new(seed + 700);
+            let n = g.size(3, 7);
+            let m = g.size(4, 9);
+            let lam = g.lambda(0, 1);
+            let x = g.matrix(n, m);
+            let y = g.targets(m);
+            let st = BackState::init(&x, &y, lam).unwrap();
+            let scores = st.score_removals(&x, &y, Loss::Squared);
+            for i in 0..n {
+                if scores[i] >= BIG {
+                    continue;
+                }
+                let s: Vec<usize> = (0..n).filter(|&t| t != i).collect();
+                let xs = x.select_rows(&s);
+                let p = crate::rls::loo_dual(&xs, &y, lam);
+                let want: f64 = y
+                    .iter()
+                    .zip(&p)
+                    .map(|(&yv, &pv)| (yv - pv).powi(2))
+                    .sum();
+                assert!(
+                    (scores[i] - want).abs() <= 1e-5 * want.abs().max(1.0),
+                    "feature {i}: {} vs {want}",
+                    scores[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn keeps_k_features_and_fits_them() {
+        let ds = crate::data::synthetic::two_gaussians(50, 12, 4, 1.5, 8);
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let r = BackwardElimination.select(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(r.selected.len(), 5);
+        assert_eq!(r.rounds.len(), 7); // 12 − 5 removals
+        let xs = ds.x.select_rows(&r.selected);
+        let w = crate::rls::train(&xs, &ds.y, cfg.lambda);
+        assert_close(&r.weights, &w, 1e-6, "weights");
+    }
+
+    #[test]
+    fn keeps_planted_support_on_regression() {
+        let (ds, mut support) =
+            crate::data::synthetic::sparse_regression(200, 15, 3, 0.05, 13);
+        let cfg =
+            SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared };
+        let r = BackwardElimination.select(&ds.x, &ds.y, &cfg).unwrap();
+        let mut sel = r.selected.clone();
+        sel.sort_unstable();
+        support.sort_unstable();
+        assert_eq!(sel, support);
+    }
+
+    #[test]
+    fn k_equals_n_is_identity() {
+        let mut g = Gen::new(5);
+        let x = g.matrix(4, 6);
+        let y = g.labels(6);
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne };
+        let r = BackwardElimination.select(&x, &y, &cfg).unwrap();
+        assert_eq!(r.selected, vec![0, 1, 2, 3]);
+        assert!(r.rounds.is_empty());
+    }
+}

@@ -1,0 +1,161 @@
+//! Sequential forward **floating** selection (paper §5 / Pudil et al. 1994).
+//!
+//! Forward greedy steps interleaved with conditional backward steps: after
+//! each addition, repeatedly remove the selected feature whose removal
+//! yields a LOO criterion strictly better than the best value previously
+//! recorded for that subset size. This escapes some of plain greedy's
+//! nesting traps at modest extra cost.
+//!
+//! Scoring reuses the eq. 7/8 LOO shortcut (wrapper machinery); this is an
+//! extension, not the paper's headline, so clarity wins over the O(kmn)
+//! cache engineering of [`super::greedy`].
+
+use anyhow::ensure;
+
+use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use crate::linalg::Matrix;
+use crate::rls;
+
+/// SFFS-style selector with a step budget guard.
+#[derive(Clone, Copy, Debug)]
+pub struct FloatingForward {
+    /// Hard cap on total (forward + backward) steps to guarantee
+    /// termination; generous default.
+    pub max_steps: usize,
+}
+
+impl Default for FloatingForward {
+    fn default() -> Self {
+        FloatingForward { max_steps: 10_000 }
+    }
+}
+
+impl FloatingForward {
+    fn criterion(
+        &self,
+        x: &Matrix,
+        s: &[usize],
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> f64 {
+        let xs = x.select_rows(s);
+        let p = if xs.rows() <= xs.cols() {
+            rls::loo_primal(&xs, y, cfg.lambda)
+        } else {
+            rls::loo_dual(&xs, y, cfg.lambda)
+        };
+        cfg.loss.total(y, &p)
+    }
+}
+
+impl Selector for FloatingForward {
+    fn name(&self) -> &'static str {
+        "floating-forward"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+
+        let mut s: Vec<usize> = Vec::new();
+        // best criterion seen for each subset size (index = |S|)
+        let mut best_at = vec![f64::INFINITY; cfg.k + 1];
+        let mut rounds = Vec::new();
+        let mut steps = 0usize;
+
+        while s.len() < cfg.k && steps < self.max_steps {
+            steps += 1;
+            // forward step: best addition
+            let mut scores = vec![BIG; n];
+            for i in 0..n {
+                if s.contains(&i) {
+                    continue;
+                }
+                let mut t = s.clone();
+                t.push(i);
+                scores[i] = self.criterion(x, &t, y, cfg);
+            }
+            let b = argmin(&scores)
+                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+            s.push(b);
+            let cur = scores[b];
+            best_at[s.len()] = best_at[s.len()].min(cur);
+            rounds.push(Round { feature: b, criterion: cur });
+
+            // conditional backward steps (never undo the just-added one
+            // immediately into an empty improvement loop)
+            while s.len() > 2 && steps < self.max_steps {
+                steps += 1;
+                let mut rem_scores = vec![BIG; s.len()];
+                for (pos, _) in s.iter().enumerate() {
+                    let mut t = s.clone();
+                    t.remove(pos);
+                    rem_scores[pos] = self.criterion(x, &t, y, cfg);
+                }
+                let worst_pos = argmin(&rem_scores).unwrap();
+                let smaller = s.len() - 1;
+                if rem_scores[worst_pos] + 1e-12 < best_at[smaller] {
+                    // floating removal improves the smaller subset record
+                    best_at[smaller] = rem_scores[worst_pos];
+                    s.remove(worst_pos);
+                } else {
+                    break;
+                }
+            }
+        }
+
+        let xs = x.select_rows(&s);
+        let weights = rls::train(&xs, y, cfg.lambda);
+        Ok(SelectionResult { selected: s, rounds, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Loss;
+    use crate::select::greedy::GreedyRls;
+
+    #[test]
+    fn reaches_k_features() {
+        let ds = crate::data::synthetic::two_gaussians(60, 15, 5, 1.2, 21);
+        let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+        let r = FloatingForward::default().select(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(r.selected.len(), 6);
+        let mut u = r.selected.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 6);
+    }
+
+    #[test]
+    fn never_worse_criterion_than_greedy_at_k() {
+        // floating search explores a superset of greedy's trajectory, so
+        // its final LOO criterion can't be (meaningfully) worse
+        let (ds, _) =
+            crate::data::synthetic::sparse_regression(120, 18, 6, 0.3, 33);
+        let cfg = SelectionConfig { k: 6, lambda: 0.5, loss: Loss::Squared };
+        let rg = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let rf = FloatingForward::default().select(&ds.x, &ds.y, &cfg).unwrap();
+        let fg = FloatingForward::default()
+            .criterion(&ds.x, &rg.selected, &ds.y, &cfg);
+        let ff = FloatingForward::default()
+            .criterion(&ds.x, &rf.selected, &ds.y, &cfg);
+        assert!(ff <= fg * 1.0 + 1e-9, "floating {ff} vs greedy {fg}");
+    }
+
+    #[test]
+    fn step_budget_respected() {
+        let ds = crate::data::synthetic::two_gaussians(30, 10, 3, 1.0, 2);
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let sel = FloatingForward { max_steps: 3 };
+        let r = sel.select(&ds.x, &ds.y, &cfg).unwrap();
+        assert!(r.selected.len() <= 5);
+    }
+}

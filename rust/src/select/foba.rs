@@ -1,0 +1,234 @@
+//! Adaptive forward–backward greedy selection (FoBa; paper §5, ref \[31\]
+//! — Zhang 2009).
+//!
+//! The paper's discussion: "\[31\] considered a modification of the forward
+//! selection for least-squares, which performs corrective steps instead
+//! of greedily adding a new feature in each iteration ... shown to have
+//! approximately the same computational complexity ... but better
+//! performance than greedy forward selection or backward elimination."
+//!
+//! FoBa's rule: after each forward step, delete any selected feature
+//! whose removal increases the criterion by less than ν times the gain
+//! of the forward step that would re-add something (here: the standard
+//! ν-threshold variant — delete while the cheapest deletion costs less
+//! than ν × the last forward gain). Criterion: the same LOO loss used by
+//! greedy RLS, so the selector composes with the rest of the framework
+//! and inherits its equivalence tests in the ν→∞ (never-delete) limit.
+
+use anyhow::ensure;
+
+use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use crate::linalg::Matrix;
+use crate::rls;
+
+/// FoBa selector with deletion threshold `nu ∈ (0, 1]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Foba {
+    /// Deletion threshold: a backward step fires when the cheapest
+    /// deletion's criterion increase is < `nu` × the last forward gain.
+    pub nu: f64,
+    /// Enable the swap phase at |S| = k (overshoot + forced deletion,
+    /// accepted only when it strictly improves the criterion).
+    pub swap: bool,
+    /// Step budget guard.
+    pub max_steps: usize,
+}
+
+impl Default for Foba {
+    fn default() -> Self {
+        Foba { nu: 0.5, swap: true, max_steps: 10_000 }
+    }
+}
+
+impl Foba {
+    fn criterion(
+        &self,
+        x: &Matrix,
+        s: &[usize],
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> f64 {
+        if s.is_empty() {
+            // empty-model LOO: predict 0 for everything
+            return y
+                .iter()
+                .map(|&yv| cfg.loss.eval(yv, 0.0))
+                .sum();
+        }
+        let xs = x.select_rows(s);
+        let p = if xs.rows() <= xs.cols() {
+            rls::loo_primal(&xs, y, cfg.lambda)
+        } else {
+            rls::loo_dual(&xs, y, cfg.lambda)
+        };
+        cfg.loss.total(y, &p)
+    }
+}
+
+impl Selector for Foba {
+    fn name(&self) -> &'static str {
+        "foba"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(self.nu > 0.0, "ν must be positive");
+
+        let mut s: Vec<usize> = Vec::new();
+        let mut rounds = Vec::new();
+        let mut steps = 0usize;
+        let mut cur = self.criterion(x, &s, y, cfg);
+
+        // phase helpers ----------------------------------------------------
+        let forward_scores = |s: &[usize]| -> Vec<f64> {
+            let mut scores = vec![BIG; n];
+            for i in 0..n {
+                if s.contains(&i) {
+                    continue;
+                }
+                let mut t = s.to_vec();
+                t.push(i);
+                scores[i] = self.criterion(x, &t, y, cfg);
+            }
+            scores
+        };
+        let deletion_scores = |s: &[usize]| -> Vec<f64> {
+            let mut del = vec![BIG; s.len()];
+            for pos in 0..s.len() {
+                let mut t = s.to_vec();
+                t.remove(pos);
+                del[pos] = self.criterion(x, &t, y, cfg);
+            }
+            del
+        };
+
+        // grow phase: forward steps with ν-thresholded corrective deletions
+        while s.len() < cfg.k && steps < self.max_steps {
+            steps += 1;
+            let scores = forward_scores(&s);
+            let Some(b) = argmin(&scores) else { break };
+            let fwd_gain = cur - scores[b];
+            s.push(b);
+            cur = scores[b];
+            rounds.push(Round { feature: b, criterion: cur });
+            if fwd_gain <= 0.0 {
+                continue; // no improvement; FoBa keeps growing toward k
+            }
+            // delete while cheap relative to the forward gain
+            while s.len() > 1 && steps < self.max_steps {
+                steps += 1;
+                let del = deletion_scores(&s);
+                let pos = argmin(&del).unwrap();
+                if del[pos] - cur < self.nu * fwd_gain {
+                    s.remove(pos);
+                    cur = del[pos];
+                } else {
+                    break;
+                }
+            }
+        }
+
+        // swap phase at |S| = k: overshoot to k+1 with the best addition,
+        // then force the cheapest deletion back to k. A net swap strictly
+        // decreases the criterion (guaranteeing termination); when the
+        // forced deletion would just remove the overshoot feature, the
+        // set is swap-stable and we stop.
+        while self.swap && s.len() == cfg.k && cfg.k < n && steps < self.max_steps {
+            steps += 1;
+            let scores = forward_scores(&s);
+            let Some(b) = argmin(&scores) else { break };
+            s.push(b);
+            let del = deletion_scores(&s);
+            let pos = argmin(&del).unwrap();
+            if s[pos] == b || del[pos] >= cur {
+                s.pop(); // no improving swap exists — stable
+                break;
+            }
+            let removed = s.remove(pos);
+            cur = del[pos];
+            rounds.push(Round { feature: b, criterion: cur });
+            let _ = removed;
+        }
+
+        let xs = x.select_rows(&s);
+        let weights = rls::train(&xs, y, cfg.lambda);
+        Ok(SelectionResult { selected: s, rounds, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Loss;
+    use crate::select::greedy::GreedyRls;
+
+    #[test]
+    fn reaches_k_on_easy_data() {
+        let (ds, mut support) =
+            crate::data::synthetic::sparse_regression(200, 20, 4, 0.05, 31);
+        let cfg = SelectionConfig { k: 4, lambda: 0.1, loss: Loss::Squared };
+        let r = Foba::default().select(&ds.x, &ds.y, &cfg).unwrap();
+        let mut sel = r.selected.clone();
+        sel.sort_unstable();
+        support.sort_unstable();
+        assert_eq!(sel, support);
+    }
+
+    #[test]
+    fn tiny_nu_never_deletes_matches_greedy() {
+        // ν → 0⁺: deletions require near-zero cost; on generic data none
+        // fire and FoBa == greedy forward selection with the same
+        // criterion (wrapper-style), which == greedy RLS.
+        let ds = crate::data::synthetic::two_gaussians(60, 12, 4, 1.2, 17);
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::Squared };
+        let foba = Foba { nu: 1e-12, swap: false, max_steps: 10_000 };
+        let rf = foba.select(&ds.x, &ds.y, &cfg).unwrap();
+        let rg = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(rf.selected, rg.selected);
+    }
+
+    #[test]
+    fn corrects_a_greedy_mistake() {
+        // classic FoBa showcase: two features that jointly explain y
+        // better than the single feature greedy grabs first.
+        // y = x1 + x2; x3 = 0.9·(x1 + x2) + noise is the greedy bait.
+        let mut rng = crate::rng::Pcg64::new(5, 301);
+        let m = 120;
+        let mut x = Matrix::zeros(3, m);
+        let mut y = vec![0.0; m];
+        for j in 0..m {
+            let a = rng.normal();
+            let b = rng.normal();
+            x[(0, j)] = a;
+            x[(1, j)] = b;
+            x[(2, j)] = 0.9 * (a + b) + 0.30 * rng.normal();
+            y[j] = a + b;
+        }
+        let cfg = SelectionConfig { k: 2, lambda: 1e-3, loss: Loss::Squared };
+        let greedy = GreedyRls.select(&x, &y, &cfg).unwrap();
+        assert_eq!(greedy.selected[0], 2, "bait feature should tempt greedy");
+        let foba = Foba { nu: 0.9, swap: true, max_steps: 10_000 }
+            .select(&x, &y, &cfg)
+            .unwrap();
+        let mut sel = foba.selected.clone();
+        sel.sort_unstable();
+        assert_eq!(sel, vec![0, 1], "FoBa must drop the bait: {sel:?}");
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 1);
+        let cfg = SelectionConfig { k: 9, lambda: 1.0, loss: Loss::ZeroOne };
+        assert!(Foba::default().select(&ds.x, &ds.y, &cfg).is_err());
+        let foba = Foba { nu: 0.0, swap: true, max_steps: 10 };
+        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne };
+        assert!(foba.select(&ds.x, &ds.y, &cfg).is_err());
+    }
+}

@@ -1,0 +1,495 @@
+//! **Greedy RLS** — the paper's Algorithm 3, native Rust engine.
+//!
+//! O(kmn) time, O(mn) space. State per selection run:
+//!
+//! * `ct` — the cache matrix C = G Xᵀ stored **transposed** (n rows of
+//!   length m, so `ct[i]` is the contiguous column C[:, i] that candidate
+//!   i streams — the layout is the hot-path optimization, see
+//!   EXPERIMENTS.md §Perf);
+//! * `a = G y` — dual variables;
+//! * `d = diag(G)`.
+//!
+//! Per round: score all candidates (eqs. 14/15/17 + the dual LOO shortcut
+//! eq. 8, O(m) each), pick the argmin, commit it with the SMW rank-1
+//! downdate (O(mn)).
+//!
+//! The same state type backs the PJRT engine's numerical cross-checks and
+//! the microbenchmarks, so `GreedyState` is public.
+
+use anyhow::ensure;
+
+use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use crate::linalg::{dot, Matrix};
+use crate::metrics::Loss;
+
+/// Mutable selection-state of Algorithm 3 (native engine).
+pub struct GreedyState {
+    /// m — number of training examples.
+    pub m: usize,
+    /// n — number of candidate features.
+    pub n: usize,
+    /// λ.
+    pub lambda: f64,
+    /// Cᵀ, row i = C[:, i] (n × m, row-major).
+    pub ct: Vec<f64>,
+    /// Dual variables a = G y.
+    pub a: Vec<f64>,
+    /// diag(G).
+    pub d: Vec<f64>,
+    /// 1.0 for evaluable candidates, 0.0 for selected ones.
+    pub cand_mask: Vec<f64>,
+    /// Selected features in order.
+    pub selected: Vec<usize>,
+}
+
+impl GreedyState {
+    /// Initialize caches for the empty feature set:
+    /// C = Xᵀ/λ, a = y/λ, d = 1/λ (Algorithm 3, lines 1–4).
+    pub fn init(x: &Matrix, y: &[f64], lambda: f64) -> GreedyState {
+        let n = x.rows();
+        let m = x.cols();
+        assert_eq!(m, y.len());
+        assert!(lambda > 0.0, "λ must be positive");
+        let inv = 1.0 / lambda;
+        let mut ct = vec![0.0; n * m];
+        for i in 0..n {
+            let src = x.row(i);
+            let dst = &mut ct[i * m..(i + 1) * m];
+            for (d_, &s) in dst.iter_mut().zip(src) {
+                *d_ = s * inv;
+            }
+        }
+        GreedyState {
+            m,
+            n,
+            lambda,
+            ct,
+            a: y.iter().map(|&v| v * inv).collect(),
+            d: vec![inv; m],
+            cand_mask: vec![1.0; n],
+            selected: Vec::new(),
+        }
+    }
+
+    /// LOO criterion of S ∪ {i} for every candidate i (Algorithm 3 lines
+    /// 8–17, all candidates). Selected/masked candidates score [`BIG`].
+    ///
+    /// Candidates are processed in blocks of 4 so the shared `a`, `d`,
+    /// `y` streams are read once per block instead of once per candidate
+    /// — the register-blocking step of the §Perf log (the per-candidate
+    /// arrays `v_i`, `c_i` are unavoidable traffic either way).
+    pub fn score_all(&self, x: &Matrix, y: &[f64], loss: Loss) -> Vec<f64> {
+        let m = self.m;
+        let mut scores = vec![BIG; self.n];
+        let active: Vec<usize> = (0..self.n)
+            .filter(|&i| self.cand_mask[i] != 0.0)
+            .collect();
+        let mut chunks = active.chunks_exact(4);
+        for quad in &mut chunks {
+            let [i0, i1, i2, i3] = [quad[0], quad[1], quad[2], quad[3]];
+            let e = score_candidates4(
+                [x.row(i0), x.row(i1), x.row(i2), x.row(i3)],
+                [
+                    &self.ct[i0 * m..(i0 + 1) * m],
+                    &self.ct[i1 * m..(i1 + 1) * m],
+                    &self.ct[i2 * m..(i2 + 1) * m],
+                    &self.ct[i3 * m..(i3 + 1) * m],
+                ],
+                &self.a,
+                &self.d,
+                y,
+                loss,
+            );
+            scores[i0] = e[0];
+            scores[i1] = e[1];
+            scores[i2] = e[2];
+            scores[i3] = e[3];
+        }
+        for &i in chunks.remainder() {
+            let v = x.row(i);
+            let c = &self.ct[i * m..(i + 1) * m];
+            scores[i] = score_candidate(v, c, &self.a, &self.d, y, loss);
+        }
+        scores
+    }
+
+    /// Commit feature `b` (Algorithm 3 lines 23–30): update a, d, and the
+    /// whole cache C ← C − u (vᵀ C) in O(mn).
+    pub fn commit(&mut self, x: &Matrix, b: usize) {
+        assert!(self.cand_mask[b] != 0.0, "feature {b} already selected");
+        let m = self.m;
+        let v = x.row(b);
+        let cb = self.ct[b * m..(b + 1) * m].to_vec();
+        let denom = 1.0 + dot(v, &cb);
+        let u: Vec<f64> = cb.iter().map(|&c| c / denom).collect();
+
+        // a ← a − u (vᵀ a);  d ← d − u ∘ c_b
+        let va = dot(v, &self.a);
+        for j in 0..m {
+            self.a[j] -= u[j] * va;
+            self.d[j] -= u[j] * cb[j];
+        }
+
+        // C ← C − u (vᵀ C): per candidate row i of Cᵀ, w_i = v·C[:,i],
+        // then ct[i] ← ct[i] − w_i · u. One fused pass per row.
+        for i in 0..self.n {
+            let row = &mut self.ct[i * m..(i + 1) * m];
+            let w = dot(v, row);
+            if w != 0.0 {
+                for (r, &uj) in row.iter_mut().zip(&u) {
+                    *r -= w * uj;
+                }
+            }
+        }
+
+        self.cand_mask[b] = 0.0;
+        self.selected.push(b);
+    }
+
+    /// Final weights w = X_S a over the selected features (Algorithm 3
+    /// line 32), in selection order.
+    pub fn weights(&self, x: &Matrix) -> Vec<f64> {
+        self.selected
+            .iter()
+            .map(|&i| dot(x.row(i), &self.a))
+            .collect()
+    }
+}
+
+/// Score one candidate: the O(m) inner body shared by the native engine
+/// and the microbenchmarks. Two fused passes over (v, c):
+/// pass 1 accumulates v·c and v·a; pass 2 accumulates the LOO loss.
+#[inline]
+pub fn score_candidate(
+    v: &[f64],
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> f64 {
+    // Fused pass 1: vc = v·c and va = v·a in one stream over v
+    // (iterator zips elide the bounds checks; 2 accumulator pairs keep
+    // the FMA ports busy).
+    let m = y.len();
+    let (mut vc0, mut vc1, mut va0, mut va1) = (0.0, 0.0, 0.0, 0.0);
+    let mut it = v.chunks_exact(2).zip(c.chunks_exact(2)).zip(a.chunks_exact(2));
+    for ((vv, cc), aa) in &mut it {
+        vc0 += vv[0] * cc[0];
+        vc1 += vv[1] * cc[1];
+        va0 += vv[0] * aa[0];
+        va1 += vv[1] * aa[1];
+    }
+    let (mut vc, mut va) = (vc0 + vc1, va0 + va1);
+    if m % 2 == 1 {
+        vc += v[m - 1] * c[m - 1];
+        va += v[m - 1] * a[m - 1];
+    }
+    // One reciprocal for the whole candidate (divisions are the hot-path
+    // bottleneck on this core — see EXPERIMENTS.md §Perf).
+    let inv_denom = 1.0 / (1.0 + vc);
+    let s = va * inv_denom; // u_j · va = c_j · s
+    match loss {
+        Loss::Squared => {
+            // residual y − p = ã/d̃ — a single division per example
+            let mut e = 0.0;
+            for ((&cj, &aj), &dj) in c.iter().zip(a).zip(d) {
+                let at = aj - cj * s;
+                let dt = dj - cj * cj * inv_denom;
+                let r = at / dt;
+                e += r * r;
+            }
+            e
+        }
+        Loss::ZeroOne => {
+            // division-free: d̃ = diag of an SPD inverse is positive, so
+            //   y·p ≤ 0  ⟺  1 − y·ã/d̃ ≤ 0  ⟺  y·ã ≥ d̃
+            let mut e = 0.0;
+            for (((&cj, &aj), &dj), &yj) in
+                c.iter().zip(a).zip(d).zip(y)
+            {
+                let at = aj - cj * s;
+                let dt = dj - cj * cj * inv_denom;
+                if yj * at >= dt {
+                    e += 1.0;
+                }
+            }
+            e
+        }
+    }
+}
+
+/// Score four candidates in one fused pass: the shared `a`, `d`, `y`
+/// streams are read once for the whole quad. Numerically identical to
+/// four [`score_candidate`] calls (same operation order per candidate).
+fn score_candidates4(
+    v: [&[f64]; 4],
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> [f64; 4] {
+    let m = y.len();
+    // pass 1: vc_t = v_t·c_t, va_t = v_t·a
+    let mut vc = [0.0f64; 4];
+    let mut va = [0.0f64; 4];
+    for j in 0..m {
+        let aj = a[j];
+        for t in 0..4 {
+            vc[t] += v[t][j] * c[t][j];
+            va[t] += v[t][j] * aj;
+        }
+    }
+    let mut inv_denom = [0.0f64; 4];
+    let mut s = [0.0f64; 4];
+    for t in 0..4 {
+        inv_denom[t] = 1.0 / (1.0 + vc[t]);
+        s[t] = va[t] * inv_denom[t];
+    }
+    // pass 2: loss accumulation, a/d/y loaded once per j
+    let mut e = [0.0f64; 4];
+    match loss {
+        Loss::Squared => {
+            for j in 0..m {
+                let (aj, dj) = (a[j], d[j]);
+                for t in 0..4 {
+                    let cj = c[t][j];
+                    let at = aj - cj * s[t];
+                    let dt = dj - cj * cj * inv_denom[t];
+                    let r = at / dt;
+                    e[t] += r * r;
+                }
+            }
+        }
+        Loss::ZeroOne => {
+            for j in 0..m {
+                let (aj, dj, yj) = (a[j], d[j], y[j]);
+                for t in 0..4 {
+                    let cj = c[t][j];
+                    let at = aj - cj * s[t];
+                    let dt = dj - cj * cj * inv_denom[t];
+                    if yj * at >= dt {
+                        e[t] += 1.0;
+                    }
+                }
+            }
+        }
+    }
+    e
+}
+
+/// The paper's algorithm as a [`Selector`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GreedyRls;
+
+impl Selector for GreedyRls {
+    fn name(&self) -> &'static str {
+        "greedy-rls"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        ensure!(cfg.k <= x.rows(), "k={} > n={}", cfg.k, x.rows());
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(
+            x.as_slice().iter().all(|v| v.is_finite()),
+            "X contains non-finite values"
+        );
+        ensure!(
+            y.iter().all(|v| v.is_finite()),
+            "y contains non-finite values"
+        );
+        let mut st = GreedyState::init(x, y, cfg.lambda);
+        let mut rounds = Vec::with_capacity(cfg.k);
+        for _ in 0..cfg.k {
+            let scores = st.score_all(x, y, cfg.loss);
+            let b = argmin(&scores)
+                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+            rounds.push(Round { feature: b, criterion: scores[b] });
+            st.commit(x, b);
+        }
+        let weights = st.weights(x);
+        Ok(SelectionResult { selected: st.selected, rounds, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::spd_inverse;
+    use crate::proptest::{assert_close, forall_seeds, Gen};
+
+    /// C, a, d tracked incrementally must equal the explicit G-based
+    /// quantities after every commit (the SMW identity chain).
+    #[test]
+    fn caches_track_explicit_inverse() {
+        forall_seeds(20, |seed| {
+            let mut g = Gen::new(seed + 10);
+            let n = g.size(3, 10);
+            let m = g.size(3, 10);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.labels(m);
+            let mut st = GreedyState::init(&x, &y, lam);
+            let steps = 3.min(n);
+            for step in 0..steps {
+                st.commit(&x, step);
+                // explicit: G = (X_Sᵀ X_S + λI)⁻¹
+                let xs = x.select_rows(&st.selected);
+                let mut k = xs.gram_t();
+                k.add_diag(lam);
+                let gmat = spd_inverse(&k).unwrap();
+                let a_ref = gmat.matvec(&y);
+                assert_close(&st.a, &a_ref, 1e-7, "a");
+                let d_ref: Vec<f64> = (0..m).map(|j| gmat[(j, j)]).collect();
+                assert_close(&st.d, &d_ref, 1e-7, "d");
+                // C = G Xᵀ — check one random candidate column
+                let i = (seed as usize) % n;
+                let xi = x.row(i);
+                let c_ref = gmat.matvec(xi);
+                assert_close(
+                    &st.ct[i * m..(i + 1) * m],
+                    &c_ref,
+                    1e-7,
+                    "C column",
+                );
+            }
+        });
+    }
+
+    /// The score of each candidate equals the dual LOO shortcut computed
+    /// from an explicitly retrained model on S ∪ {i}.
+    #[test]
+    fn scores_equal_explicit_loo() {
+        forall_seeds(15, |seed| {
+            let mut g = Gen::new(seed + 99);
+            let n = g.size(2, 8);
+            let m = g.size(3, 10);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.targets(m);
+            let mut st = GreedyState::init(&x, &y, lam);
+            if n > 2 {
+                st.commit(&x, 0);
+            }
+            let scores = st.score_all(&x, &y, Loss::Squared);
+            for i in 0..n {
+                if st.cand_mask[i] == 0.0 {
+                    assert!(scores[i] >= BIG);
+                    continue;
+                }
+                let mut s = st.selected.clone();
+                s.push(i);
+                let xs = x.select_rows(&s);
+                let p = crate::rls::loo_dual(&xs, &y, lam);
+                let want: f64 =
+                    y.iter().zip(&p).map(|(&yv, &pv)| (yv - pv).powi(2)).sum();
+                assert!(
+                    (scores[i] - want).abs() <= 1e-6 * want.abs().max(1.0),
+                    "cand {i}: {} vs {}",
+                    scores[i],
+                    want
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn quad_scoring_matches_scalar_scoring() {
+        forall_seeds(10, |seed| {
+            let mut g = Gen::new(seed + 7777);
+            let n = 4 + g.size(0, 5); // ≥ 4 so a quad exists
+            let m = g.size(3, 17);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.labels(m);
+            let st = GreedyState::init(&x, &y, lam);
+            for loss in [Loss::Squared, Loss::ZeroOne] {
+                let fast = st.score_all(&x, &y, loss);
+                // scalar reference: score every candidate individually
+                let mut slow = vec![BIG; n];
+                for i in 0..n {
+                    let v = x.row(i);
+                    let c = &st.ct[i * m..(i + 1) * m];
+                    slow[i] =
+                        score_candidate(v, c, &st.a, &st.d, &y, loss);
+                }
+                assert_close(&fast, &slow, 1e-12, "quad vs scalar");
+            }
+        });
+    }
+
+    #[test]
+    fn selects_planted_features_first() {
+        let (ds, support) =
+            crate::data::synthetic::sparse_regression(300, 25, 3, 0.05, 11);
+        let cfg = SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared };
+        let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let mut sel = r.selected.clone();
+        sel.sort_unstable();
+        let mut sup = support.clone();
+        sup.sort_unstable();
+        assert_eq!(sel, sup, "greedy should find the planted support");
+    }
+
+    #[test]
+    fn criterion_decreases_weakly_on_regression() {
+        // adding a feature cannot worsen the best achievable LOO much;
+        // on easy data the curve should be monotone decreasing
+        let (ds, _) =
+            crate::data::synthetic::sparse_regression(200, 20, 5, 0.1, 3);
+        let cfg = SelectionConfig { k: 5, lambda: 0.5, loss: Loss::Squared };
+        let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let curve = r.criterion_curve();
+        for w in curve.windows(2) {
+            assert!(w[1] <= w[0] * 1.05, "curve {curve:?}");
+        }
+    }
+
+    #[test]
+    fn no_feature_selected_twice() {
+        let ds = crate::data::synthetic::two_gaussians(60, 15, 5, 1.0, 5);
+        let cfg =
+            SelectionConfig { k: 15, lambda: 1.0, loss: Loss::ZeroOne };
+        let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let mut sel = r.selected.clone();
+        sel.sort_unstable();
+        sel.dedup();
+        assert_eq!(sel.len(), 15);
+    }
+
+    #[test]
+    fn k_too_large_errors() {
+        let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 6);
+        let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+        assert!(GreedyRls.select(&ds.x, &ds.y, &cfg).is_err());
+    }
+
+    #[test]
+    fn non_finite_inputs_rejected() {
+        let mut ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 6);
+        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne };
+        ds.x[(1, 3)] = f64::NAN;
+        let err = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 6);
+        let mut y = ds.y.clone();
+        y[0] = f64::INFINITY;
+        assert!(GreedyRls.select(&ds.x, &y, &cfg).is_err());
+    }
+
+    #[test]
+    fn weights_match_retrained_rls() {
+        let ds = crate::data::synthetic::two_gaussians(80, 12, 4, 1.5, 7);
+        let cfg = SelectionConfig { k: 4, lambda: 0.7, loss: Loss::ZeroOne };
+        let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let xs = ds.x.select_rows(&r.selected);
+        let w_direct = crate::rls::train(&xs, &ds.y, cfg.lambda);
+        assert_close(&r.weights, &w_direct, 1e-7, "final weights");
+    }
+}

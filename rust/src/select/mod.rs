@@ -1,0 +1,160 @@
+//! Feature-selection algorithms.
+//!
+//! The paper's three algorithmic tiers, equivalent in output, plus
+//! baselines and the future-work extensions its §5 sketches:
+//!
+//! | module | algorithm | complexity |
+//! |---|---|---|
+//! | [`wrapper`] | Algorithm 1: black-box wrapper, LOO by retraining (or the eq. 7/8 shortcut) | O(min{k³m²n, k²m³n}) |
+//! | [`lowrank`] | Algorithm 2: low-rank updated LS-SVM (Ojeda et al.) | O(km²n) |
+//! | [`greedy`]  | **Algorithm 3: greedy RLS (the paper)** | **O(kmn)** |
+//! | [`random`]  | random-k baseline (§4.2 sanity check) | O(min{k²m, km²}) |
+//! | [`backward`] | backward elimination (§5) | O((n−k)mn) after O(m n²) init |
+//! | [`floating`] | forward selection with floating backward steps (§5) | ≥ greedy |
+//! | [`foba`] | adaptive forward–backward greedy (§5, ref \[31\]) | ≥ greedy |
+//! | [`nfold`] | greedy forward with n-fold-CV criterion (§5) | O(kmn) |
+//! | [`centers`] | reduced-set / RBF-center selection for kernel RLS (§5) | O(km²) |
+//! | [`rankrls`] | greedy forward selection for RankRLS (§5, refs \[32, 33\]) | O(kn(k² + km)) |
+//!
+//! All selectors consume the same feature-major `X` (n × m) and return a
+//! [`SelectionResult`]; equivalence across Algorithms 1–3 is enforced by
+//! `rust/tests/equivalence.rs` property tests.
+
+pub mod backward;
+pub mod centers;
+pub mod floating;
+pub mod foba;
+pub mod greedy;
+pub mod lowrank;
+pub mod nfold;
+pub mod random;
+pub mod rankrls;
+pub mod wrapper;
+
+use crate::linalg::Matrix;
+use crate::metrics::Loss;
+use crate::rls::Predictor;
+
+/// Sentinel score for unavailable candidates (mirrors the kernels' BIG).
+pub const BIG: f64 = 1e30;
+
+/// Configuration shared by every selector.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectionConfig {
+    /// Number of features to select.
+    pub k: usize,
+    /// Regularization parameter λ > 0.
+    pub lambda: f64,
+    /// LOO loss used as the selection criterion.
+    pub loss: Loss,
+}
+
+impl Default for SelectionConfig {
+    fn default() -> Self {
+        SelectionConfig { k: 10, lambda: 1.0, loss: Loss::ZeroOne }
+    }
+}
+
+/// One selection round's record (figures 4–15 are drawn from these).
+#[derive(Clone, Debug)]
+pub struct Round {
+    /// Chosen feature index.
+    pub feature: usize,
+    /// LOO criterion value of the chosen feature (summed loss).
+    pub criterion: f64,
+}
+
+/// Output of a selection run.
+#[derive(Clone, Debug)]
+pub struct SelectionResult {
+    /// Selected feature indices in selection order.
+    pub selected: Vec<usize>,
+    /// Per-round logs (criterion trajectory).
+    pub rounds: Vec<Round>,
+    /// Final RLS weights over `selected` (same order).
+    pub weights: Vec<f64>,
+}
+
+impl SelectionResult {
+    /// Package as a sparse [`Predictor`].
+    pub fn predictor(&self) -> Predictor {
+        Predictor {
+            selected: self.selected.clone(),
+            weights: self.weights.clone(),
+        }
+    }
+
+    /// LOO criterion trajectory (one value per round).
+    pub fn criterion_curve(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.criterion).collect()
+    }
+}
+
+/// Common interface so the coordinator / benches can swap algorithms.
+pub trait Selector {
+    /// Human-readable name for tables and logs.
+    fn name(&self) -> &'static str;
+
+    /// Select `cfg.k` features from feature-major `x` (n × m) with labels
+    /// `y` (length m).
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult>;
+}
+
+/// Strict-argmin over candidate scores; ties break to the lowest index
+/// (every implementation in the repo and the Python reference must agree
+/// on this rule for the equivalence tests to be exact).
+pub fn argmin(scores: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &s) in scores.iter().enumerate() {
+        if s >= BIG || s.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bs)) if s >= bs => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmin_basic() {
+        assert_eq!(argmin(&[3.0, 1.0, 2.0]), Some(1));
+    }
+
+    #[test]
+    fn argmin_tie_breaks_low_index() {
+        assert_eq!(argmin(&[2.0, 1.0, 1.0]), Some(1));
+    }
+
+    #[test]
+    fn argmin_skips_big_and_nan() {
+        assert_eq!(argmin(&[BIG, f64::NAN, 5.0]), Some(2));
+        assert_eq!(argmin(&[BIG, BIG]), None);
+        assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn result_predictor_roundtrip() {
+        let r = SelectionResult {
+            selected: vec![4, 2],
+            rounds: vec![
+                Round { feature: 4, criterion: 10.0 },
+                Round { feature: 2, criterion: 6.0 },
+            ],
+            weights: vec![1.0, -1.0],
+        };
+        let p = r.predictor();
+        assert_eq!(p.selected, vec![4, 2]);
+        assert_eq!(r.criterion_curve(), vec![10.0, 6.0]);
+    }
+}

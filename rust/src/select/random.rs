@@ -1,0 +1,106 @@
+//! Random-k baseline (paper §4.2).
+//!
+//! "Thus we consider as a baseline an approach which chooses k features at
+//! random. This is a good sanity-check, since training RLS with this
+//! approach requires only O(min(k²m, km²)) time that is even less than
+//! the time required by greedy RLS." Figures 4–9 plot greedy RLS against
+//! this selector.
+
+use anyhow::ensure;
+
+use super::{Round, SelectionConfig, SelectionResult, Selector};
+use crate::linalg::Matrix;
+use crate::rls;
+use crate::rng::Pcg64;
+
+/// Uniformly random feature subset + RLS fit on it.
+#[derive(Clone, Copy, Debug)]
+pub struct RandomSelector {
+    /// RNG seed (deterministic baseline runs).
+    pub seed: u64,
+}
+
+impl Default for RandomSelector {
+    fn default() -> Self {
+        RandomSelector { seed: 0x5eed }
+    }
+}
+
+impl Selector for RandomSelector {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        let mut rng = Pcg64::new(self.seed, 31);
+        let selected = rng.choose_distinct(n, cfg.k);
+        // criterion logged for parity with other selectors: LOO of the
+        // growing random prefix (cheap: one shortcut evaluation per round)
+        let mut rounds = Vec::with_capacity(cfg.k);
+        for r in 1..=cfg.k {
+            let xs = x.select_rows(&selected[..r]);
+            let p = if xs.rows() <= xs.cols() {
+                rls::loo_primal(&xs, y, cfg.lambda)
+            } else {
+                rls::loo_dual(&xs, y, cfg.lambda)
+            };
+            rounds.push(Round {
+                feature: selected[r - 1],
+                criterion: cfg.loss.total(y, &p),
+            });
+        }
+        let xs = x.select_rows(&selected);
+        let weights = rls::train(&xs, y, cfg.lambda);
+        Ok(SelectionResult { selected, rounds, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Loss;
+
+    #[test]
+    fn selects_k_distinct() {
+        let ds = crate::data::synthetic::two_gaussians(50, 20, 5, 1.0, 3);
+        let cfg = SelectionConfig { k: 8, lambda: 1.0, loss: Loss::ZeroOne };
+        let r = RandomSelector::default().select(&ds.x, &ds.y, &cfg).unwrap();
+        let mut s = r.selected.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 8);
+        assert_eq!(r.weights.len(), 8);
+        assert_eq!(r.rounds.len(), 8);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = crate::data::synthetic::two_gaussians(30, 15, 5, 1.0, 4);
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let a = RandomSelector { seed: 9 }.select(&ds.x, &ds.y, &cfg).unwrap();
+        let b = RandomSelector { seed: 9 }.select(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(a.selected, b.selected);
+        let c = RandomSelector { seed: 10 }.select(&ds.x, &ds.y, &cfg).unwrap();
+        assert_ne!(a.selected, c.selected); // overwhelmingly likely
+    }
+
+    #[test]
+    fn weights_are_rls_fit_on_subset() {
+        let ds = crate::data::synthetic::two_gaussians(40, 10, 3, 1.5, 5);
+        let cfg = SelectionConfig { k: 4, lambda: 0.8, loss: Loss::ZeroOne };
+        let r = RandomSelector::default().select(&ds.x, &ds.y, &cfg).unwrap();
+        let xs = ds.x.select_rows(&r.selected);
+        let w = crate::rls::train(&xs, &ds.y, cfg.lambda);
+        for (a, b) in r.weights.iter().zip(&w) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! **Standard wrapper** — the paper's Algorithm 1.
+//!
+//! RLS is treated as a black box: for every candidate feature and every
+//! LOO fold the model is retrained from scratch —
+//! O(min{k³m²n, k²m³n}) total. A second mode replaces the literal
+//! retraining with the eq. 7/8 LOO shortcut (the "immediate reduction"
+//! the paper describes in §3.1), which drops the complexity to
+//! O(min{k³mn, k²m²n}) while provably selecting the same features.
+//!
+//! Both modes exist because the ablation bench (`ablation_loo_shortcut`)
+//! reproduces the paper's complexity narrative: wrapper ≪ wrapper+shortcut
+//! ≪ low-rank ≪ greedy, with the crossovers the paper discusses.
+
+use anyhow::ensure;
+
+use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use crate::linalg::Matrix;
+use crate::rls;
+
+/// How the wrapper evaluates LOO for a candidate feature set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LooMode {
+    /// Retrain per held-out example (Algorithm 1 verbatim).
+    BruteForce,
+    /// Closed-form LOO via eq. (7)/(8) — same result, one training per
+    /// candidate set.
+    Shortcut,
+}
+
+/// Algorithm 1 as a [`Selector`].
+#[derive(Clone, Copy, Debug)]
+pub struct Wrapper {
+    /// LOO evaluation mode.
+    pub mode: LooMode,
+}
+
+impl Default for Wrapper {
+    fn default() -> Self {
+        Wrapper { mode: LooMode::Shortcut }
+    }
+}
+
+impl Wrapper {
+    /// LOO predictions for the feature set `s` (rows of `x`).
+    fn loo(&self, x: &Matrix, s: &[usize], y: &[f64], lambda: f64) -> Vec<f64> {
+        let xs = x.select_rows(s);
+        match self.mode {
+            LooMode::BruteForce => rls::loo_brute_force(&xs, y, lambda),
+            LooMode::Shortcut => {
+                // primal when |S| ≤ m, dual otherwise — mirrors training
+                if xs.rows() <= xs.cols() {
+                    rls::loo_primal(&xs, y, lambda)
+                } else {
+                    rls::loo_dual(&xs, y, lambda)
+                }
+            }
+        }
+    }
+}
+
+impl Selector for Wrapper {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            LooMode::BruteForce => "wrapper-bruteforce",
+            LooMode::Shortcut => "wrapper-shortcut",
+        }
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        let mut selected: Vec<usize> = Vec::new();
+        let mut in_s = vec![false; n];
+        let mut rounds = Vec::with_capacity(cfg.k);
+        while selected.len() < cfg.k {
+            let mut scores = vec![BIG; n];
+            for i in 0..n {
+                if in_s[i] {
+                    continue;
+                }
+                let mut s = selected.clone();
+                s.push(i);
+                let p = self.loo(x, &s, y, cfg.lambda);
+                scores[i] = cfg.loss.total(y, &p);
+            }
+            let b = argmin(&scores)
+                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+            rounds.push(Round { feature: b, criterion: scores[b] });
+            in_s[b] = true;
+            selected.push(b);
+        }
+        // line 21: final training on the chosen set
+        let xs = x.select_rows(&selected);
+        let weights = rls::train(&xs, y, cfg.lambda);
+        Ok(SelectionResult { selected, rounds, weights })
+    }
+}
+
+/// Convenience constructors.
+impl Wrapper {
+    pub fn brute_force() -> Self {
+        Wrapper { mode: LooMode::BruteForce }
+    }
+    pub fn shortcut() -> Self {
+        Wrapper { mode: LooMode::Shortcut }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Loss;
+    use crate::proptest::{assert_close, forall_seeds, Gen};
+    use crate::select::greedy::GreedyRls;
+
+    /// Central claim: the wrapper (both modes) selects exactly the same
+    /// features as greedy RLS.
+    #[test]
+    fn equivalent_to_greedy_rls() {
+        forall_seeds(12, |seed| {
+            let mut g = Gen::new(seed + 300);
+            let n = g.size(3, 8);
+            let m = g.size(4, 9);
+            let k = 2.min(n);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.labels(m);
+            let cfg =
+                SelectionConfig { k, lambda: lam, loss: Loss::Squared };
+            let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
+            for wrapper in [Wrapper::brute_force(), Wrapper::shortcut()] {
+                let r1 = wrapper.select(&x, &y, &cfg).unwrap();
+                assert_eq!(r1.selected, r3.selected, "{}", wrapper.name());
+                assert_close(&r1.weights, &r3.weights, 1e-6, "weights");
+            }
+        });
+    }
+
+    #[test]
+    fn shortcut_equals_bruteforce_criterion() {
+        let mut g = Gen::new(77);
+        let x = g.matrix(5, 8);
+        let y = g.targets(8);
+        let cfg =
+            SelectionConfig { k: 3, lambda: 0.6, loss: Loss::Squared };
+        let r_b = Wrapper::brute_force().select(&x, &y, &cfg).unwrap();
+        let r_s = Wrapper::shortcut().select(&x, &y, &cfg).unwrap();
+        assert_eq!(r_b.selected, r_s.selected);
+        for (a, b) in r_b.rounds.iter().zip(&r_s.rounds) {
+            assert!((a.criterion - b.criterion).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn names_distinguish_modes() {
+        assert_ne!(Wrapper::brute_force().name(), Wrapper::shortcut().name());
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let mut g = Gen::new(1);
+        let x = g.matrix(3, 5);
+        let y = g.labels(5);
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne };
+        assert!(Wrapper::shortcut().select(&x, &y, &cfg).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! CLI smoke tests: drive the built binary end-to-end via std::process.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_greedy-rls"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = bin().args(args).output().expect("spawn");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_prints_usage() {
+    let (ok, stdout, _) = run(&["help"]);
+    assert!(ok);
+    assert!(stdout.contains("greedy-rls"));
+    assert!(stdout.contains("COMMANDS"));
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, stdout, _) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn datasets_lists_table1() {
+    let (ok, stdout, _) = run(&["datasets"]);
+    assert!(ok);
+    for name in ["adult", "australian", "colon-cancer", "german.numer",
+                 "ijcnn1", "mnist5"] {
+        assert!(stdout.contains(name), "missing {name}:\n{stdout}");
+    }
+    assert!(stdout.contains("32561"));
+    assert!(stdout.contains("141691"));
+}
+
+#[test]
+fn select_on_synthetic_and_save_model() {
+    let tmp = std::env::temp_dir().join("greedy_rls_cli_model.txt");
+    let _ = std::fs::remove_file(&tmp);
+    let (ok, stdout, stderr) = run(&[
+        "select",
+        "--synthetic",
+        "120,30",
+        "--k",
+        "5",
+        "--lambda",
+        "1.0",
+        "--out",
+        tmp.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("selected (5)"), "{stdout}");
+    let text = std::fs::read_to_string(&tmp).unwrap();
+    assert!(text.starts_with("greedy-rls-model v1"));
+    assert_eq!(text.lines().count(), 6); // header + 5 weights
+
+    // and serve it back
+    let (ok, stdout, stderr) = run(&[
+        "serve",
+        "--model",
+        tmp.to_str().unwrap(),
+        "--synthetic",
+        "120,30",
+        "--batch",
+        "16",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("throughput"), "{stdout}");
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn select_on_registry_dataset() {
+    let (ok, stdout, stderr) =
+        run(&["select", "--dataset", "australian", "--k", "4"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("dataset=australian"));
+    assert!(stdout.contains("selected (4)"));
+}
+
+#[test]
+fn select_rejects_bad_flags() {
+    let (ok, _, stderr) = run(&["select", "--synthetic", "120"]);
+    assert!(!ok);
+    assert!(stderr.contains("M,N"), "{stderr}");
+    let (ok, _, _) = run(&["select", "--dataset", "nope"]);
+    assert!(!ok);
+    let (ok, _, stderr) =
+        run(&["select", "--synthetic", "20,5", "--k", "50"]);
+    assert!(!ok);
+    assert!(stderr.contains("k="), "{stderr}");
+}
+
+#[test]
+fn cv_prints_curves() {
+    let (ok, stdout, stderr) = run(&[
+        "cv",
+        "--dataset",
+        "australian",
+        "--folds",
+        "3",
+        "--kmax",
+        "4",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("greedy_test"));
+    // 4 data rows
+    let rows = stdout
+        .lines()
+        .filter(|l| l.chars().next().is_some_and(|c| c.is_ascii_digit()))
+        .count();
+    assert_eq!(rows, 4, "{stdout}");
+}
+
+#[test]
+fn scaling_prints_series() {
+    let (ok, stdout, stderr) = run(&[
+        "scaling",
+        "--sizes",
+        "100,200",
+        "--n",
+        "50",
+        "--k",
+        "5",
+        "--baseline",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("lowrank_s"));
+    let rows = stdout
+        .lines()
+        .filter(|l| l.chars().next().is_some_and(|c| c.is_ascii_digit()))
+        .count();
+    assert_eq!(rows, 2, "{stdout}");
+}
+
+#[test]
+fn compare_runs_all_selectors() {
+    let (ok, stdout, stderr) =
+        run(&["compare", "--dataset", "australian", "--k", "3"]);
+    assert!(ok, "stderr: {stderr}");
+    for name in ["greedy-rls", "random", "foba", "nfold-greedy",
+                 "lowrank-lssvm", "wrapper-shortcut",
+                 "backward-elimination", "floating-forward"] {
+        assert!(stdout.contains(name), "missing {name}:\n{stdout}");
+    }
+    // the LOO-equivalent selectors must agree on the selected set
+    let greedy_line = stdout
+        .lines()
+        .find(|l| l.starts_with("greedy-rls"))
+        .unwrap();
+    let selected = greedy_line.split('\t').last().unwrap();
+    for equiv in ["lowrank-lssvm", "wrapper-shortcut"] {
+        let line = stdout.lines().find(|l| l.starts_with(equiv)).unwrap();
+        assert!(line.ends_with(selected), "{equiv} disagreed:\n{stdout}");
+    }
+}
+
+#[test]
+fn check_verifies_artifacts_when_present() {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (ok, stdout, stderr) = run(&["check"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("artifacts OK"), "{stdout}");
+    assert!(stdout.contains("engines agree"));
+}

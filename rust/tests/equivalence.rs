@@ -1,0 +1,132 @@
+//! Cross-algorithm equivalence — the paper's central correctness claims,
+//! exercised end-to-end across the library (integration level).
+//!
+//! Algorithms 1 (wrapper), 2 (low-rank LS-SVM) and 3 (greedy RLS) must
+//! select identical feature sequences with identical criteria and final
+//! weights on arbitrary problems, for both losses; the extensions must
+//! honor their own contracts (n-fold → LOO degeneracy, backward ≥ greedy
+//! criterion relationships are data-dependent so only structural checks).
+
+use greedy_rls::data::synthetic;
+use greedy_rls::metrics::Loss;
+use greedy_rls::proptest::{assert_close, forall_seeds, Gen};
+use greedy_rls::select::{
+    backward::BackwardElimination, greedy::GreedyRls, lowrank::LowRankLsSvm,
+    nfold::NFoldGreedy, random::RandomSelector, wrapper::Wrapper,
+    SelectionConfig, Selector,
+};
+
+#[test]
+fn all_three_algorithms_agree_on_random_problems() {
+    forall_seeds(30, |seed| {
+        let mut g = Gen::new(seed * 31 + 5);
+        let n = g.size(4, 14);
+        let m = g.size(4, 14);
+        let k = 3.min(n);
+        let lam = g.lambda(-2, 2);
+        let x = g.matrix(n, m);
+        let y = g.labels(m);
+        for loss in [Loss::Squared, Loss::ZeroOne] {
+            let cfg = SelectionConfig { k, lambda: lam, loss };
+            let r1 = Wrapper::shortcut().select(&x, &y, &cfg).unwrap();
+            let r2 = LowRankLsSvm.select(&x, &y, &cfg).unwrap();
+            let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
+            assert_eq!(r1.selected, r3.selected, "wrapper vs greedy");
+            assert_eq!(r2.selected, r3.selected, "lowrank vs greedy");
+            assert_close(&r1.weights, &r3.weights, 1e-6, "w1 vs w3");
+            assert_close(&r2.weights, &r3.weights, 1e-6, "w2 vs w3");
+        }
+    });
+}
+
+#[test]
+fn brute_force_wrapper_agrees_on_small_problems() {
+    forall_seeds(8, |seed| {
+        let mut g = Gen::new(seed * 17 + 3);
+        let n = g.size(3, 6);
+        let m = g.size(4, 8);
+        let lam = g.lambda(-1, 1);
+        let x = g.matrix(n, m);
+        let y = g.targets(m);
+        let cfg = SelectionConfig { k: 2, lambda: lam, loss: Loss::Squared };
+        let rb = Wrapper::brute_force().select(&x, &y, &cfg).unwrap();
+        let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
+        assert_eq!(rb.selected, r3.selected);
+        for (a, b) in rb.rounds.iter().zip(&r3.rounds) {
+            assert!(
+                (a.criterion - b.criterion).abs()
+                    <= 1e-6 * a.criterion.abs().max(1.0)
+            );
+        }
+    });
+}
+
+#[test]
+fn greedy_dominates_random_on_benchmark_standins() {
+    // On planted-sparse data with ample signal, the greedy test accuracy
+    // at k = #informative must beat random selection's.
+    for name in ["australian", "german.numer"] {
+        let ds = greedy_rls::data::registry::load(name, false, 7).unwrap();
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let rg = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let rr = RandomSelector { seed: 3 }.select(&ds.x, &ds.y, &cfg).unwrap();
+        let pg = rg.predictor().predict_matrix(&ds.x);
+        let pr = rr.predictor().predict_matrix(&ds.x);
+        let ag = greedy_rls::metrics::accuracy(&ds.y, &pg);
+        let ar = greedy_rls::metrics::accuracy(&ds.y, &pr);
+        assert!(ag >= ar - 0.02, "{name}: greedy {ag} vs random {ar}");
+    }
+}
+
+#[test]
+fn nfold_with_m_folds_equals_greedy() {
+    let ds = synthetic::two_gaussians(24, 10, 4, 1.5, 11);
+    let cfg = SelectionConfig { k: 4, lambda: 0.8, loss: Loss::Squared };
+    let r_loo = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+    let r_nf = NFoldGreedy { folds: 24, seed: 1 }
+        .select(&ds.x, &ds.y, &cfg)
+        .unwrap();
+    assert_eq!(r_loo.selected, r_nf.selected);
+}
+
+#[test]
+fn backward_and_forward_agree_on_unambiguous_support() {
+    // When the signal is overwhelmingly concentrated on a small support,
+    // forward and backward must land on the same feature set.
+    let (ds, mut support) = synthetic::sparse_regression(250, 12, 3, 0.02, 19);
+    let cfg = SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared };
+    let mut fwd = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap().selected;
+    let mut bwd =
+        BackwardElimination.select(&ds.x, &ds.y, &cfg).unwrap().selected;
+    fwd.sort_unstable();
+    bwd.sort_unstable();
+    support.sort_unstable();
+    assert_eq!(fwd, support);
+    assert_eq!(bwd, support);
+}
+
+#[test]
+fn selection_is_deterministic() {
+    let ds = synthetic::two_gaussians(60, 20, 5, 1.0, 23);
+    let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+    let a = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+    let b = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+    assert_eq!(a.selected, b.selected);
+    assert_eq!(a.weights, b.weights);
+}
+
+#[test]
+fn criterion_trajectories_match_across_algorithms() {
+    let mut g = Gen::new(404);
+    let x = g.matrix(8, 10);
+    let y = g.labels(10);
+    let cfg = SelectionConfig { k: 4, lambda: 2.0, loss: Loss::ZeroOne };
+    let r2 = LowRankLsSvm.select(&x, &y, &cfg).unwrap();
+    let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
+    let c2 = r2.criterion_curve();
+    let c3 = r3.criterion_curve();
+    assert_eq!(c2.len(), c3.len());
+    for (a, b) in c2.iter().zip(&c3) {
+        assert!((a - b).abs() < 1e-9, "{c2:?} vs {c3:?}");
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT integration: the AOT artifacts must reproduce the native engine.
+//!
+//! These tests require `make artifacts` to have produced
+//! `artifacts/manifest.tsv`; they are skipped (with a note) otherwise so
+//! `cargo test` stays runnable on a fresh checkout.
+
+use greedy_rls::coordinator::{self, serve, EngineKind};
+use greedy_rls::data::synthetic;
+use greedy_rls::metrics::Loss;
+use greedy_rls::proptest::assert_close;
+use greedy_rls::runtime::{engine::PjrtGreedy, Runtime};
+use greedy_rls::select::{greedy::GreedyRls, SelectionConfig, Selector};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping PJRT test: artifacts not built");
+        return None;
+    }
+    Some(Runtime::open("artifacts").expect("runtime"))
+}
+
+#[test]
+fn buckets_are_discovered() {
+    let Some(rt) = runtime() else { return };
+    let buckets = rt.selection_buckets();
+    assert!(!buckets.is_empty());
+    // ascending area, all complete
+    for w in buckets.windows(2) {
+        assert!(w[0].0 * w[0].1 <= w[1].0 * w[1].1);
+    }
+    assert_eq!(rt.pick_bucket(1, 1), Some(buckets[0]));
+    assert_eq!(rt.pick_bucket(100_000, 1), None);
+}
+
+#[test]
+fn pjrt_engine_matches_native_exactly() {
+    let Some(rt) = runtime() else { return };
+    // sizes chosen to exercise different buckets + nontrivial padding
+    for (m, n, k, lam) in [
+        (20usize, 12usize, 4usize, 0.5f64),
+        (64, 128, 6, 1.0),   // exact bucket fit
+        (65, 100, 5, 2.0),   // forces the next bucket up
+        (200, 40, 8, 0.1),
+    ] {
+        let ds = synthetic::two_gaussians(m, n, (n / 4).max(1), 1.5, m as u64);
+        for loss in [Loss::ZeroOne, Loss::Squared] {
+            let cfg = SelectionConfig { k, lambda: lam, loss };
+            let native = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+            let pjrt = PjrtGreedy::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap();
+            assert_eq!(
+                native.selected, pjrt.selected,
+                "m={m} n={n} loss={loss:?}"
+            );
+            assert_close(&native.weights, &pjrt.weights, 1e-8, "weights");
+            for (a, b) in native.rounds.iter().zip(&pjrt.rounds) {
+                assert!(
+                    (a.criterion - b.criterion).abs()
+                        <= 1e-8 * a.criterion.abs().max(1.0),
+                    "criterion {} vs {}",
+                    a.criterion,
+                    b.criterion
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn executables_are_cached() {
+    let Some(rt) = runtime() else { return };
+    let before = rt.compiled_count();
+    let (m, n) = rt.selection_buckets()[0];
+    let _a = rt.executable("score_step", m, n).unwrap();
+    let _b = rt.executable("score_step", m, n).unwrap();
+    assert_eq!(rt.compiled_count(), before + 1);
+}
+
+#[test]
+fn missing_artifact_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.executable("score_step", 3, 3).is_err());
+    assert!(rt.executable("nonexistent_entry", 64, 128).is_err());
+}
+
+#[test]
+fn pjrt_serving_matches_native_serving() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_gaussians(150, 30, 6, 1.5, 77);
+    let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+    let p = coordinator::fit(EngineKind::Native, None, &ds, &cfg).unwrap();
+    let (native_preds, _) = serve::serve_native(&p, &ds.x, 32);
+    let (pjrt_preds, stats) = serve::serve_pjrt(&rt, &p, &ds.x, 32).unwrap();
+    assert_eq!(stats.requests, 150);
+    assert_close(&native_preds, &pjrt_preds, 1e-9, "serving preds");
+}
+
+#[test]
+fn select_with_engine_dispatches_to_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_gaussians(40, 16, 4, 1.5, 5);
+    let cfg = SelectionConfig { k: 3, lambda: 1.0, loss: Loss::ZeroOne };
+    let r = coordinator::select_with_engine(
+        EngineKind::Pjrt,
+        Some(&rt),
+        &ds.x,
+        &ds.y,
+        &cfg,
+    )
+    .unwrap();
+    let native = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+    assert_eq!(r.selected, native.selected);
+}
+
+#[test]
+fn train_dual_artifact_matches_native_rls() {
+    let Some(rt) = runtime() else { return };
+    // find a train_dual bucket
+    let Some(row) = rt
+        .manifest()
+        .iter()
+        .find(|e| e.entry == "train_dual")
+        .cloned()
+    else {
+        return;
+    };
+    let (kb, mb) = (row.dim1.1, row.dim2.1);
+    let exe = rt.executable("train_dual", kb, mb).unwrap();
+    // real problem strictly smaller than the bucket; padding exactness
+    let k = kb - 3;
+    let m = mb - 7;
+    let ds = synthetic::two_gaussians(m, k, (k / 3).max(1), 1.2, 9);
+    let lam = 0.7;
+    // pad Xs (k × m) into (kb × mb), y into mb
+    let mut xs = vec![0.0; kb * mb];
+    for i in 0..k {
+        xs[i * mb..i * mb + m].copy_from_slice(ds.x.row(i));
+    }
+    let mut y = vec![0.0; mb];
+    y[..m].copy_from_slice(&ds.y);
+    use greedy_rls::runtime::lit;
+    let outs = Runtime::run_tuple(
+        &exe,
+        &[
+            lit::mat_f64(&xs, kb, mb).unwrap(),
+            lit::vec_f64(&y),
+            lit::vec_f64(&[lam]),
+        ],
+    )
+    .unwrap();
+    let w = lit::to_vec_f64(&outs[0]).unwrap();
+    let (w_native, _) = greedy_rls::rls::train_dual(&ds.x, &ds.y, lam);
+    assert_close(&w[..k], &w_native, 1e-7, "train_dual weights");
+    // padded weight rows must be exactly zero
+    assert!(w[k..].iter().all(|&v| v.abs() < 1e-12));
+}
