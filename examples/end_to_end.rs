@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---------------------------------------------------------------- 3
     let k = 8.min(train.n_features());
-    let cfg = SelectionConfig { k, lambda, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k, lambda, loss: Loss::ZeroOne, ..Default::default() };
     let native = GreedyRls.select(&train.x, &train.y, &cfg)?;
     println!("[3] native engine selected:  {:?}", native.selected);
 
@@ -113,7 +113,12 @@ fn main() -> anyhow::Result<()> {
     let mut last: Option<f64> = None;
     for m in [500usize, 1000, 2000, 4000] {
         let sds = synthetic::two_gaussians(m, 500, 25, 1.0, 3);
-        let scfg = SelectionConfig { k: 20, lambda: 1.0, loss: Loss::ZeroOne };
+        let scfg = SelectionConfig {
+            k: 20,
+            lambda: 1.0,
+            loss: Loss::ZeroOne,
+            ..Default::default()
+        };
         let secs = time_once(|| {
             GreedyRls.select(&sds.x, &sds.y, &scfg).unwrap();
         });
@@ -130,7 +135,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---------------------------------------------------------------- 6
-    let (pred_n, stats_n) = serve::serve_native(&p_greedy, &test.x, 32);
+    let (pred_n, stats_n) = serve::serve_native(&p_greedy, &test.x, 32)?;
     let (pred_p, stats_p) = serve::serve_pjrt(&rt, &p_greedy, &test.x, 32)?;
     let agree = pred_n
         .iter()

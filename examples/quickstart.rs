@@ -1,17 +1,20 @@
-//! Quickstart: select features with greedy RLS on synthetic data.
+//! Quickstart: stepwise feature selection with greedy RLS.
 //!
 //! ```sh
 //! cargo run --release --offline --example quickstart
 //! ```
 //!
-//! Demonstrates the minimal public-API path: generate a dataset, select k
-//! features with the LOO criterion, inspect the criterion trajectory, and
-//! evaluate the sparse model on held-out data.
+//! Demonstrates the session API end to end: build a config with the
+//! builder, `begin` a session, watch it select round by round, stop
+//! early on the LOO plateau, and evaluate the sparse model — plus a
+//! warm-started resume.
 
 use greedy_rls::coordinator::cv;
 use greedy_rls::data::synthetic::planted_sparse;
 use greedy_rls::metrics::Loss;
-use greedy_rls::select::{greedy::GreedyRls, SelectionConfig, Selector};
+use greedy_rls::select::{
+    greedy::GreedyRls, SelectionConfig, SessionSelector, StepOutcome,
+};
 
 fn main() -> anyhow::Result<()> {
     // 400 examples, 50 features of which 8 carry class signal.
@@ -22,24 +25,62 @@ fn main() -> anyhow::Result<()> {
         ds.n_features()
     );
 
-    let cfg = SelectionConfig { k: 10, lambda: 1.0, loss: Loss::ZeroOne };
-    let result = GreedyRls.select(&ds.x, &ds.y, &cfg)?;
-
-    println!("\nselected features (in order): {:?}", result.selected);
-    println!("round  feature  LOO errors (train)");
-    for (i, round) in result.rounds.iter().enumerate() {
+    // Early stopping in ~5 lines: ask for up to 25 features but stop once
+    // the LOO criterion plateaus — the paper's Figs. 10–15 overfitting
+    // guard.
+    let cfg = SelectionConfig::builder()
+        .k(25)
+        .lambda(1.0)
+        .loss(Loss::ZeroOne)
+        .plateau(2, 1e-3)
+        .build();
+    let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg)?;
+    println!("\nround  feature  LOO errors (train)");
+    while let StepOutcome::Selected(round) = session.step()? {
         println!(
             "{:>5}  {:>7}  {:>6.0} / {}",
-            i + 1,
+            session.rounds_done(),
             round.feature,
             round.criterion,
             ds.n_examples()
         );
     }
+    let result = session.finish()?;
+    println!(
+        "stopped at {} of {} requested features ({})",
+        result.selected.len(),
+        cfg.k,
+        result
+            .rounds
+            .last()
+            .map(|r| format!("final LOO errors {:.0}", r.criterion))
+            .unwrap_or_default()
+    );
+    println!("selected features (in order): {:?}", result.selected);
 
-    // Proper held-out evaluation of the same config.
-    let (acc, _) = cv::holdout_accuracy(&ds, 0.25, &cfg, 7)?;
-    println!("\nheld-out accuracy with {} features: {:.3}", cfg.k, acc);
+    // Warm start: resume from the first half of that run and drive to the
+    // same stopping point — bit-identical to the uninterrupted session.
+    let half = result.selected.len() / 2;
+    let resumed = greedy_rls::select::run_to_completion(
+        GreedyRls.begin_from(&ds.x, &ds.y, &cfg, &result.selected[..half])?,
+    )?;
+    println!(
+        "warm start from {} features resumes to the same set: {}",
+        half,
+        resumed.selected == result.selected
+    );
+
+    // Proper held-out evaluation of the plateau-sized model.
+    let eval_cfg = SelectionConfig::builder()
+        .k(result.selected.len().max(1))
+        .lambda(1.0)
+        .loss(Loss::ZeroOne)
+        .build();
+    let (acc, _) = cv::holdout_accuracy(&ds, 0.25, &eval_cfg, 7)?;
+    println!(
+        "\nheld-out accuracy with {} features: {:.3}",
+        eval_cfg.k, acc
+    );
 
     // Compare: all features, no selection (ridge on everything).
     let all: Vec<usize> = (0..ds.n_features()).collect();
@@ -54,8 +95,8 @@ fn main() -> anyhow::Result<()> {
         full_acc
     );
     println!(
-        "\n(the 10-feature model matches the paper's story: a small \
-         LOO-selected subset ≈ the full model)"
+        "\n(the plateau-stopped model matches the paper's story: a small \
+         LOO-selected subset ≈ the full model, found without running to k)"
     );
     Ok(())
 }

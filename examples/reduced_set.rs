@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let lambda = 0.5;
 
     // baseline 1: best k *linear* features (hopeless on a ring)
-    let cfg2 = SelectionConfig { k: 2, lambda, loss: Loss::ZeroOne };
+    let cfg2 = SelectionConfig { k: 2, lambda, loss: Loss::ZeroOne, ..Default::default() };
     let lin = GreedyRls.select(&train.x, &train.y, &cfg2)?;
     let acc_lin =
         accuracy(&test.y, &lin.predictor().predict_matrix(&test.x));
@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     println!("\ngreedy center selection (LOO criterion over kernel columns):");
     println!("k_centers  test_acc  model_coeffs");
     for k in [2usize, 4, 8, 16, 32] {
-        let cfg = SelectionConfig { k, lambda, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k, lambda, loss: Loss::ZeroOne, ..Default::default() };
         let (model, _) =
             CenterSelector { kernel }.fit(&train.x, &train.y, &cfg)?;
         let acc = accuracy(&test.y, &model.predict(&test.x));

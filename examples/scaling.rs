@@ -19,7 +19,7 @@ use greedy_rls::select::{
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let (n, k) = (1000usize, 50usize);
-    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
 
     // Fig 1/2 workload: m = 500..5000, both methods.
     let ms_both: &[usize] = if full {

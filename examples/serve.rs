@@ -18,7 +18,7 @@ use greedy_rls::select::SelectionConfig;
 fn main() -> anyhow::Result<()> {
     let mut ds = registry::load("ijcnn1", false, 42)?;
     ds.standardize();
-    let cfg = SelectionConfig { k: 10, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k: 10, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
     println!(
         "training sparse model: {} (m={}, n={}), k={}",
         ds.name,
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     for batch in [1usize, 16, 128] {
-        let (preds, st) = serve::serve_native(&model, &ds.x, batch);
+        let (preds, st) = serve::serve_native(&model, &ds.x, batch)?;
         let acc = accuracy(&ds.y, &preds);
         println!(
             "native  batch={batch:>4}: p50 {:>9.2}µs  p99 {:>9.2}µs  \

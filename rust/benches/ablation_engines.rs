@@ -40,7 +40,7 @@ fn main() {
             continue;
         }
         let ds = two_gaussians(m, n, (n / 5).max(1), 1.0, 7);
-        let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let native = time(1, 3, || {
             GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
         });

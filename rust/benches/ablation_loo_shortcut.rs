@@ -33,7 +33,7 @@ fn main() {
     );
     for &(n, m, k) in &grid {
         let ds = two_gaussians(m, n, (n / 4).max(1), 1.0, 13);
-        let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::Squared };
+        let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::Squared, ..Default::default() };
         let mut sel: Vec<Vec<usize>> = Vec::new();
         let mut t = Vec::new();
         let selectors: Vec<Box<dyn Selector>> = vec![

@@ -21,7 +21,7 @@ use greedy_rls::select::{
 fn main() {
     let trials = 5u64;
     let (m, n, s) = (240usize, 40usize, 6usize);
-    let cfg = SelectionConfig { k: s, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k: s, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
 
     let selectors: Vec<(&str, Box<dyn Selector>)> = vec![
         ("greedy-rls", Box::new(GreedyRls)),

@@ -11,11 +11,12 @@
 //! m ≈ 2 (quadratic), greedy's ≈ 1 (linear), with greedy faster
 //! everywhere and the gap widening as m grows.
 
-use greedy_rls::bench::{time_once, CellValue, Table};
+use greedy_rls::bench::{time_once, CellValue, Table, TimingObserver};
 use greedy_rls::data::synthetic::two_gaussians;
 use greedy_rls::metrics::Loss;
 use greedy_rls::select::{
-    greedy::GreedyRls, lowrank::LowRankLsSvm, SelectionConfig, Selector,
+    drive, greedy::GreedyRls, lowrank::LowRankLsSvm, SelectionConfig,
+    Selector, SessionSelector,
 };
 
 fn log_log_slope(xs: &[f64], ys: &[f64]) -> f64 {
@@ -46,18 +47,30 @@ fn main() {
         &format!("Fig 1/2 — runtime vs m (n={n}, k={k}, two-Gaussian)"),
         &["m", "greedy_s", "lowrank_s", "speedup", "log10_greedy", "log10_lowrank"],
     );
-    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig {
+        k,
+        lambda: 1.0,
+        loss: Loss::ZeroOne,
+        ..Default::default()
+    };
     let (mut tg, mut tl) = (Vec::new(), Vec::new());
+    let mut last_obs: Option<TimingObserver> = None;
     for &m in &ms {
         let ds = two_gaussians(m, n, 50.min(n), 1.0, 42);
+        // greedy runs as a session: one run yields both the total and the
+        // per-round timing (no re-running per k)
+        let mut obs = TimingObserver::default();
         let t_g = time_once(|| {
-            GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+            let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+            drive(session.as_mut(), &mut obs).unwrap();
+            session.finish().unwrap();
         });
         let t_l = time_once(|| {
             LowRankLsSvm.select(&ds.x, &ds.y, &cfg).unwrap();
         });
         tg.push(t_g);
         tl.push(t_l);
+        last_obs = Some(obs);
         table.row(&Table::cells(&[
             CellValue::Usize(m),
             CellValue::F3(t_g),
@@ -69,6 +82,19 @@ fn main() {
     }
     table.print();
     let _ = table.write_csv("fig1_2_scaling_vs_lowrank");
+
+    if let Some(obs) = &last_obs {
+        let first = obs.per_round_s.first().copied().unwrap_or(0.0);
+        let last = obs.per_round_s.last().copied().unwrap_or(0.0);
+        println!(
+            "\nper-round greedy timing at m={} (from one session, {} rounds): \
+             first {:.4}s, last {:.4}s — flat ⇒ every round is O(mn)",
+            ms.last().unwrap(),
+            obs.per_round_s.len(),
+            first,
+            last
+        );
+    }
 
     let ms_f: Vec<f64> = ms.iter().map(|&m| m as f64).collect();
     let slope_g = log_log_slope(&ms_f, &tg);

@@ -7,10 +7,12 @@
 //! `GREEDY_RLS_BENCH_FULL=1` for the paper's m = 50 000 endpoint.
 //! Shape check: seconds per unit of k·m·n must stay constant (linearity).
 
-use greedy_rls::bench::{time_once, CellValue, Table};
+use greedy_rls::bench::{time_once, CellValue, Table, TimingObserver};
 use greedy_rls::data::synthetic::two_gaussians;
 use greedy_rls::metrics::Loss;
-use greedy_rls::select::{greedy::GreedyRls, SelectionConfig, Selector};
+use greedy_rls::select::{
+    drive, greedy::GreedyRls, SelectionConfig, SessionSelector,
+};
 
 fn main() {
     let full = std::env::var("GREEDY_RLS_BENCH_FULL").is_ok();
@@ -20,18 +22,33 @@ fn main() {
     } else {
         vec![1000, 2000, 5000, 10000, 20000]
     };
-    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig {
+        k,
+        lambda: 1.0,
+        loss: Loss::ZeroOne,
+        ..Default::default()
+    };
 
     let mut table = Table::new(
         &format!("Fig 3 — greedy RLS runtime, n={n}, k={k}"),
-        &["m", "seconds", "ns_per_kmn", "gflops"],
+        &["m", "seconds", "ns_per_kmn", "gflops", "round_spread"],
     );
     let mut units = Vec::new();
     for &m in &ms {
         let ds = two_gaussians(m, n, 50, 1.0, 43);
+        // one session run: total seconds AND the per-round flatness check
+        let mut obs = TimingObserver::default();
         let secs = time_once(|| {
-            GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+            let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+            drive(session.as_mut(), &mut obs).unwrap();
+            session.finish().unwrap();
         });
+        // max/min per-round time: ≈1 ⇒ every round costs the same O(mn)
+        let round_spread = {
+            let max = obs.per_round_s.iter().cloned().fold(f64::MIN, f64::max);
+            let min = obs.per_round_s.iter().cloned().fold(f64::MAX, f64::min);
+            if min > 0.0 { max / min } else { f64::NAN }
+        };
         // per-round work ≈ score pass (6 mul+add × mn) + commit (4 × mn)
         let flops = k as f64 * m as f64 * n as f64 * 10.0;
         let unit = secs * 1e9 / (k as f64 * m as f64 * n as f64);
@@ -41,6 +58,7 @@ fn main() {
             CellValue::F3(secs),
             CellValue::F3(unit),
             CellValue::F3(flops / secs / 1e9),
+            CellValue::F3(round_spread),
         ]));
     }
     table.print();

@@ -39,7 +39,7 @@ fn main() {
             &greedy_rls::coordinator::grid::default_grid(),
             Loss::ZeroOne,
         );
-        let cfg = SelectionConfig { k, lambda, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k, lambda, loss: Loss::ZeroOne, ..Default::default() };
         let (acc, _) = cv::holdout_accuracy(&ds, 0.25, &cfg, 7).expect("cv");
         table.row(&Table::cells(&[
             CellValue::Str(spec.name.to_string()),

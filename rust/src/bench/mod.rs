@@ -6,7 +6,9 @@
 //! emission so each bench prints the same rows/series as the paper's
 //! figures.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+use crate::select::{Observer, Round, StopReason};
 
 /// Timing summary over repetitions.
 #[derive(Clone, Copy, Debug)]
@@ -43,6 +45,41 @@ pub fn time_once<F: FnOnce()>(f: F) -> f64 {
     let t0 = Instant::now();
     f();
     t0.elapsed().as_secs_f64()
+}
+
+/// [`Observer`] that records per-round wall time and the criterion
+/// trajectory of a selection session — the figure benches get per-round
+/// numbers from a single run instead of re-running the selection at
+/// every k.
+#[derive(Clone, Debug, Default)]
+pub struct TimingObserver {
+    /// Seconds each round took, in round order.
+    pub per_round_s: Vec<f64>,
+    /// Feature committed each round.
+    pub features: Vec<usize>,
+    /// Criterion value each round.
+    pub criteria: Vec<f64>,
+    /// Stop reason, once the drive loop finished.
+    pub stop: Option<StopReason>,
+}
+
+impl TimingObserver {
+    /// Total time across observed rounds (excludes `begin` setup).
+    pub fn total_s(&self) -> f64 {
+        self.per_round_s.iter().sum()
+    }
+}
+
+impl Observer for TimingObserver {
+    fn on_round(&mut self, _index: usize, round: &Round, elapsed: Duration) {
+        self.per_round_s.push(elapsed.as_secs_f64());
+        self.features.push(round.feature);
+        self.criteria.push(round.criterion);
+    }
+
+    fn on_stop(&mut self, reason: StopReason) {
+        self.stop = Some(reason);
+    }
 }
 
 fn summarize(times: &[f64]) -> Sample {
@@ -175,6 +212,23 @@ mod tests {
         assert!(s.median_s >= 0.0);
         assert!(s.min_s <= s.median_s);
         assert_eq!(s.reps, 5);
+    }
+
+    #[test]
+    fn timing_observer_records_rounds() {
+        use crate::select::{
+            drive, greedy::GreedyRls, SelectionConfig, SessionSelector,
+        };
+        let ds = crate::data::synthetic::two_gaussians(40, 10, 3, 1.0, 1);
+        let cfg = SelectionConfig::builder().k(4).build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let mut obs = TimingObserver::default();
+        drive(s.as_mut(), &mut obs).unwrap();
+        assert_eq!(obs.per_round_s.len(), 4);
+        assert_eq!(obs.features.len(), 4);
+        assert_eq!(obs.criteria.len(), 4);
+        assert_eq!(obs.stop, Some(StopReason::TargetReached));
+        assert!(obs.total_s() >= 0.0);
     }
 
     #[test]

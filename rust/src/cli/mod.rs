@@ -4,8 +4,11 @@
 //! value is boolean true. The first non-flag token is the subcommand.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context};
+use anyhow::{anyhow, bail, ensure, Context};
+
+use crate::select::StopPolicy;
 
 /// Parsed command line: subcommand + flags.
 #[derive(Clone, Debug, Default)]
@@ -96,6 +99,64 @@ impl Args {
     }
 }
 
+/// Parse the session stopping flags into a [`StopPolicy`].
+///
+/// `--stop k|plateau|time` selects the policy explicitly; without it,
+/// `--patience`/`--time-budget-s` imply `plateau`/`time` respectively and
+/// the default is `k` (run to `--k` features). Plateau reads
+/// `--patience` (default 2) and `--min-rel-improvement` (default 1e-3);
+/// time reads `--time-budget-s` (seconds, fractional allowed).
+pub fn parse_stop_policy(args: &Args) -> anyhow::Result<StopPolicy> {
+    let mode = match args.get("stop") {
+        Some(m) => m.to_string(),
+        None if args.get("time-budget-s").is_some() => "time".into(),
+        None if args.get("patience").is_some()
+            || args.get("min-rel-improvement").is_some() =>
+        {
+            "plateau".into()
+        }
+        None => "k".into(),
+    };
+    // reject flags the selected mode would silently ignore
+    if mode != "plateau" {
+        for flag in ["patience", "min-rel-improvement"] {
+            ensure!(
+                args.get(flag).is_none(),
+                "--{flag} requires --stop plateau (got --stop {mode})"
+            );
+        }
+    }
+    if mode != "time" {
+        ensure!(
+            args.get("time-budget-s").is_none(),
+            "--time-budget-s requires --stop time (got --stop {mode})"
+        );
+    }
+    match mode.as_str() {
+        "k" => Ok(StopPolicy::KBudget(usize::MAX)),
+        "plateau" => {
+            let patience: usize = args.get_or("patience", 2usize)?;
+            let min_rel: f64 =
+                args.get_or("min-rel-improvement", 1e-3f64)?;
+            let policy = StopPolicy::Plateau {
+                patience,
+                min_rel_improvement: min_rel,
+            };
+            policy.validate()?;
+            Ok(policy)
+        }
+        "time" => {
+            let secs: f64 = args.require("time-budget-s")?;
+            ensure!(
+                secs.is_finite() && secs >= 0.0,
+                "--time-budget-s must be ≥ 0"
+            );
+            Ok(StopPolicy::TimeBudget(Duration::from_secs_f64(secs)))
+        }
+        other => bail!("unknown --stop {other:?} (expected k|plateau|time)"),
+    }
+}
+
 /// Usage text shared by `--help` and error paths.
 pub const USAGE: &str = "\
 greedy-rls — linear-time greedy forward feature selection for RLS
@@ -108,6 +169,9 @@ COMMANDS
              --dataset NAME | --synthetic M,N   --k K  [--lambda L]
              [--loss 01|squared] [--engine native|pjrt] [--out FILE]
              [--seed S] [--full]
+             session control: [--stop k|plateau|time] [--patience N]
+             [--min-rel-improvement F] [--time-budget-s S]
+             [--warm-start I1,I2,...] [--progress]
   cv         paper §4.2 protocol: stratified CV accuracy curves
              --dataset NAME [--folds 10] [--kmax K] [--seed S] [--full]
   scaling    paper §4.1 runtime scaling experiment
@@ -182,5 +246,77 @@ mod tests {
     fn positionals_collected() {
         let a = parse(&["cmd", "pos1", "--f", "v", "pos2"]);
         assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn stop_policy_default_runs_to_k() {
+        let a = parse(&["select", "--k", "5"]);
+        assert_eq!(
+            parse_stop_policy(&a).unwrap(),
+            StopPolicy::KBudget(usize::MAX)
+        );
+    }
+
+    #[test]
+    fn stop_policy_plateau_with_flags() {
+        let a = parse(&[
+            "select",
+            "--stop",
+            "plateau",
+            "--patience",
+            "4",
+            "--min-rel-improvement",
+            "0.01",
+        ]);
+        assert_eq!(
+            parse_stop_policy(&a).unwrap(),
+            StopPolicy::Plateau { patience: 4, min_rel_improvement: 0.01 }
+        );
+        // --patience alone implies plateau
+        let a = parse(&["select", "--patience", "3"]);
+        assert_eq!(
+            parse_stop_policy(&a).unwrap(),
+            StopPolicy::Plateau { patience: 3, min_rel_improvement: 1e-3 }
+        );
+    }
+
+    #[test]
+    fn stop_policy_time_budget() {
+        let a = parse(&["select", "--stop", "time", "--time-budget-s", "2.5"]);
+        assert_eq!(
+            parse_stop_policy(&a).unwrap(),
+            StopPolicy::TimeBudget(Duration::from_secs_f64(2.5))
+        );
+        // --time-budget-s alone implies time
+        let a = parse(&["select", "--time-budget-s", "1"]);
+        assert_eq!(
+            parse_stop_policy(&a).unwrap(),
+            StopPolicy::TimeBudget(Duration::from_secs(1))
+        );
+        // time mode without a budget is an error
+        let a = parse(&["select", "--stop", "time"]);
+        assert!(parse_stop_policy(&a).is_err());
+    }
+
+    #[test]
+    fn stop_policy_rejects_garbage() {
+        let a = parse(&["select", "--stop", "banana"]);
+        assert!(parse_stop_policy(&a).is_err());
+        let a = parse(&["select", "--stop", "plateau", "--patience", "0"]);
+        assert!(parse_stop_policy(&a).is_err());
+        let a = parse(&["select", "--stop", "time", "--time-budget-s", "-1"]);
+        assert!(parse_stop_policy(&a).is_err());
+    }
+
+    #[test]
+    fn stop_policy_rejects_conflicting_flags() {
+        // flags the chosen mode would silently ignore are errors
+        let a = parse(&["select", "--stop", "k", "--patience", "3"]);
+        assert!(parse_stop_policy(&a).is_err());
+        let a =
+            parse(&["select", "--stop", "plateau", "--time-budget-s", "5"]);
+        assert!(parse_stop_policy(&a).is_err());
+        let a = parse(&["select", "--stop", "time", "--time-budget-s", "5"]);
+        assert!(parse_stop_policy(&a).is_ok());
     }
 }

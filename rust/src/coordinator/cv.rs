@@ -10,10 +10,13 @@
 use anyhow::Result;
 
 use crate::data::{folds::Folds, Dataset};
-use crate::linalg::{dot, Matrix};
+use crate::linalg::Matrix;
 use crate::metrics::{accuracy, mean_std, Loss};
 use crate::rng::Pcg64;
-use crate::select::{argmin, greedy::GreedyState, SelectionConfig, Selector};
+use crate::select::{
+    greedy::GreedyRls, SelectionConfig, Selector, SessionSelector,
+    StepOutcome,
+};
 
 /// How the next feature is chosen each round.
 #[derive(Clone, Debug)]
@@ -39,7 +42,10 @@ pub struct Curve {
 ///
 /// `x_train`/`x_test` are feature-major; the LOO accuracy is derived from
 /// the zero-one LOO criterion of the *chosen* feature each round (exactly
-/// the estimate the selection itself maximizes, as in §4.3).
+/// the estimate the selection itself maximizes, as in §4.3). Both orders
+/// drive the same greedy-RLS [`crate::select::Session`]: `Greedy` via
+/// [`crate::select::Session::step`], `Fixed` via
+/// [`crate::select::Session::force`].
 pub fn selection_curve(
     x_train: &Matrix,
     y_train: &[f64],
@@ -50,42 +56,40 @@ pub fn selection_curve(
     order: &Order,
 ) -> Curve {
     let m = y_train.len() as f64;
-    let mut st = GreedyState::init(x_train, y_train, lambda);
+    let cfg = SelectionConfig::builder()
+        .k(k)
+        .lambda(lambda)
+        .loss(Loss::ZeroOne)
+        .build();
+    let mut session =
+        GreedyRls.begin(x_train, y_train, &cfg).expect("begin session");
     let mut test_acc = Vec::with_capacity(k);
     let mut loo_acc = Vec::with_capacity(k);
     for round in 0..k {
-        let b = match order {
-            Order::Greedy => {
-                let scores = st.score_all(x_train, y_train, Loss::ZeroOne);
-                argmin(&scores).expect("candidates remain")
+        let r = match order {
+            Order::Greedy => match session.step().expect("step") {
+                StepOutcome::Selected(r) => r,
+                StepOutcome::Done(_) => break,
+            },
+            Order::Fixed(perm) => {
+                session.force(perm[round]).expect("candidates remain")
             }
-            Order::Fixed(perm) => perm[round],
         };
-        // LOO zero-one criterion of the *committed* set S ∪ {b}:
-        let v = x_train.row(b);
-        let c = &st.ct[b * st.m..(b + 1) * st.m];
-        let e01 = crate::select::greedy::score_candidate(
-            v,
-            c,
-            &st.a,
-            &st.d,
-            y_train,
-            Loss::ZeroOne,
-        );
-        loo_acc.push(1.0 - e01 / m);
-        st.commit(x_train, b);
+        // LOO zero-one criterion of the committed set S ∪ {b}:
+        loo_acc.push(1.0 - r.criterion / m);
 
         // test accuracy of the current model
+        let st = session.state().expect("session state");
         let mut p = vec![0.0; y_test.len()];
-        for (&i, _) in st.selected.iter().zip(0..) {
-            let w = dot(x_train.row(i), &st.a);
+        for (&i, &w) in st.selected.iter().zip(&st.weights) {
             for (pj, &xv) in p.iter_mut().zip(x_test.row(i)) {
                 *pj += w * xv;
             }
         }
         test_acc.push(accuracy(y_test, &p));
     }
-    Curve { test_acc, loo_acc, selected: st.selected }
+    let selected = session.state().expect("session state").selected;
+    Curve { test_acc, loo_acc, selected }
 }
 
 /// Mean ± std accuracy curves over folds (what the figures plot).
@@ -212,7 +216,7 @@ mod tests {
         let c = selection_curve(
             &train.x, &train.y, &test.x, &test.y, 1.0, 5, &Order::Greedy,
         );
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = crate::select::greedy::GreedyRls
             .select(&train.x, &train.y, &cfg)
             .unwrap();
@@ -269,7 +273,7 @@ mod tests {
     #[test]
     fn holdout_runs() {
         let ds = crate::data::synthetic::two_gaussians(100, 10, 4, 2.0, 8);
-        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let (acc, sel) = holdout_accuracy(&ds, 0.3, &cfg, 3).unwrap();
         assert_eq!(sel.len(), 4);
         assert!(acc > 0.6, "acc {acc}");

@@ -13,6 +13,9 @@
 use crate::linalg::Matrix;
 use crate::metrics::Loss;
 use crate::rls;
+use crate::select::{
+    greedy::GreedyRls, SelectionConfig, SessionSelector, StepOutcome,
+};
 
 /// Default λ grid: 10^-4 … 10^4, decade steps.
 pub fn default_grid() -> Vec<f64> {
@@ -47,6 +50,59 @@ pub fn search(
         }
     }
     best
+}
+
+/// A jointly selected (λ, k) operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct LambdaKChoice {
+    /// Chosen regularization.
+    pub lambda: f64,
+    /// Number of features at the criterion minimum (1-based).
+    pub k: usize,
+    /// The winning LOO criterion value.
+    pub criterion: f64,
+}
+
+/// Joint (λ, k) model selection by driving one greedy-RLS *session* per
+/// grid point and reading the whole criterion curve — one selection run
+/// per λ replaces `base.k` separate grid searches. Honors `base.stop`
+/// (e.g. a plateau policy prunes hopeless λ early). Ties break toward
+/// larger λ, then smaller k — the conservative choice, as in [`search`].
+pub fn sweep_lambda_k(
+    x: &Matrix,
+    y: &[f64],
+    grid: &[f64],
+    base: &SelectionConfig,
+) -> anyhow::Result<LambdaKChoice> {
+    let mut best: Option<LambdaKChoice> = None;
+    for &lam in grid {
+        let cfg = SelectionConfig { lambda: lam, ..*base };
+        let mut session = GreedyRls.begin(x, y, &cfg)?;
+        loop {
+            match session.step()? {
+                StepOutcome::Selected(round) => {
+                    let k = session.rounds_done();
+                    let cand =
+                        LambdaKChoice { lambda: lam, k, criterion: round.criterion };
+                    let better = match best {
+                        None => true,
+                        Some(b) => {
+                            cand.criterion < b.criterion
+                                || (cand.criterion == b.criterion
+                                    && (cand.lambda > b.lambda
+                                        || (cand.lambda == b.lambda
+                                            && cand.k < b.k)))
+                        }
+                    };
+                    if better {
+                        best = Some(cand);
+                    }
+                }
+                StepOutcome::Done(_) => break,
+            }
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no (λ, k) candidate evaluated"))
 }
 
 #[cfg(test)]
@@ -93,6 +149,53 @@ mod tests {
         let tiny = loo_criterion(&x, &y, 1e-8, Loss::Squared);
         let large = loo_criterion(&x, &y, 1e2, Loss::Squared);
         assert!(large <= tiny * 2.0, "tiny {tiny} large {large}");
+    }
+
+    #[test]
+    fn sweep_finds_the_planted_operating_point() {
+        // 3 informative of 20 features: the criterion minimum should sit
+        // at k ≈ 3 for some reasonable λ, never at the largest k
+        let (ds, _) =
+            crate::data::synthetic::sparse_regression(150, 20, 3, 0.05, 21);
+        let base = SelectionConfig::builder()
+            .k(8)
+            .loss(Loss::Squared)
+            .build();
+        let grid = [0.01, 0.1, 1.0];
+        let choice = sweep_lambda_k(&ds.x, &ds.y, &grid, &base).unwrap();
+        assert!(grid.contains(&choice.lambda));
+        assert!((1..=8).contains(&choice.k));
+        assert!(choice.criterion.is_finite());
+        assert!(
+            choice.k >= 3,
+            "needs at least the planted support: {choice:?}"
+        );
+    }
+
+    #[test]
+    fn sweep_empty_grid_is_an_error() {
+        let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 1);
+        let base = SelectionConfig::builder().k(2).build();
+        assert!(sweep_lambda_k(&ds.x, &ds.y, &[], &base).is_err());
+    }
+
+    #[test]
+    fn sweep_criterion_matches_one_shot_curve() {
+        let ds = crate::data::synthetic::two_gaussians(60, 10, 4, 1.5, 8);
+        let base = SelectionConfig::builder().k(5).build();
+        let grid = [1.0];
+        let choice = sweep_lambda_k(&ds.x, &ds.y, &grid, &base).unwrap();
+        let r = crate::select::Selector::select(
+            &crate::select::greedy::GreedyRls,
+            &ds.x,
+            &ds.y,
+            &base,
+        )
+        .unwrap();
+        let curve = r.criterion_curve();
+        assert_eq!(choice.criterion, curve[choice.k - 1]);
+        let min = curve.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(choice.criterion, min);
     }
 
     #[test]

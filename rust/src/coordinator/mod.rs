@@ -24,7 +24,8 @@ use crate::linalg::Matrix;
 use crate::rls::Predictor;
 use crate::runtime::{engine::PjrtGreedy, Runtime};
 use crate::select::{
-    greedy::GreedyRls, SelectionConfig, SelectionResult, Selector,
+    greedy::GreedyRls, run_to_completion, Observer, Round, SelectionConfig,
+    SelectionResult, Session, SessionSelector, StopReason,
 };
 
 /// Which engine executes the O(mn) selection math.
@@ -48,8 +49,51 @@ impl std::str::FromStr for EngineKind {
     }
 }
 
-/// Run greedy RLS on the chosen engine. For [`EngineKind::Pjrt`] a
-/// [`Runtime`] must be supplied (artifacts built via `make artifacts`).
+/// Begin a greedy-RLS [`Session`] on the chosen engine. For
+/// [`EngineKind::Pjrt`] a [`Runtime`] must be supplied (artifacts built
+/// via `make artifacts`). The session borrows only `x`/`y`, never the
+/// runtime, so it can outlive the dispatch scope.
+pub fn begin_with_engine<'a>(
+    engine: EngineKind,
+    runtime: Option<&Runtime>,
+    x: &'a Matrix,
+    y: &'a [f64],
+    cfg: &SelectionConfig,
+) -> anyhow::Result<Box<dyn Session + 'a>> {
+    match engine {
+        EngineKind::Native => GreedyRls.begin(x, y, cfg),
+        EngineKind::Pjrt => {
+            let rt = runtime
+                .context("PJRT engine requested but no runtime supplied")?;
+            PjrtGreedy::new(rt).begin(x, y, cfg)
+        }
+    }
+}
+
+/// [`begin_with_engine`] warm-started from a previously selected prefix
+/// (feature indices in selection order). The greedy caches are rebuilt
+/// with the paper's rank-1 updates; continuing the session is
+/// bit-identical to an uninterrupted run.
+pub fn begin_from_with_engine<'a>(
+    engine: EngineKind,
+    runtime: Option<&Runtime>,
+    x: &'a Matrix,
+    y: &'a [f64],
+    cfg: &SelectionConfig,
+    selected: &[usize],
+) -> anyhow::Result<Box<dyn Session + 'a>> {
+    match engine {
+        EngineKind::Native => GreedyRls.begin_from(x, y, cfg, selected),
+        EngineKind::Pjrt => {
+            let rt = runtime
+                .context("PJRT engine requested but no runtime supplied")?;
+            PjrtGreedy::new(rt).begin_from(x, y, cfg, selected)
+        }
+    }
+}
+
+/// Run greedy RLS on the chosen engine (one-shot; drives a session to
+/// completion under `cfg.stop`).
 pub fn select_with_engine(
     engine: EngineKind,
     runtime: Option<&Runtime>,
@@ -57,13 +101,33 @@ pub fn select_with_engine(
     y: &[f64],
     cfg: &SelectionConfig,
 ) -> anyhow::Result<SelectionResult> {
-    match engine {
-        EngineKind::Native => GreedyRls.select(x, y, cfg),
-        EngineKind::Pjrt => {
-            let rt = runtime
-                .context("PJRT engine requested but no runtime supplied")?;
-            PjrtGreedy::new(rt).select(x, y, cfg)
-        }
+    run_to_completion(begin_with_engine(engine, runtime, x, y, cfg)?)
+}
+
+/// Per-round progress logging to stderr — the coordinator's standard
+/// [`Observer`] for long selection runs (`--progress` on the CLI).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProgressObserver;
+
+impl Observer for ProgressObserver {
+    fn on_round(
+        &mut self,
+        index: usize,
+        round: &Round,
+        elapsed: std::time::Duration,
+    ) {
+        eprintln!(
+            "[select] round {:>4}: feature {:>6}  criterion {:>12.6}  \
+             ({:.3}s)",
+            index + 1,
+            round.feature,
+            round.criterion,
+            elapsed.as_secs_f64()
+        );
+    }
+
+    fn on_stop(&mut self, reason: StopReason) {
+        eprintln!("[select] stopped: {reason}");
     }
 }
 
@@ -138,7 +202,7 @@ mod tests {
     #[test]
     fn native_engine_fit_roundtrip() {
         let ds = crate::data::synthetic::two_gaussians(60, 12, 4, 1.5, 3);
-        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let p = fit(EngineKind::Native, None, &ds, &cfg).unwrap();
         assert_eq!(p.selected.len(), 4);
         let text = model_to_string(&p);
@@ -152,8 +216,49 @@ mod tests {
     #[test]
     fn pjrt_without_runtime_errors() {
         let ds = crate::data::synthetic::two_gaussians(20, 6, 2, 1.0, 4);
-        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         assert!(fit(EngineKind::Pjrt, None, &ds, &cfg).is_err());
+        assert!(
+            begin_with_engine(EngineKind::Pjrt, None, &ds.x, &ds.y, &cfg)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn native_session_matches_one_shot() {
+        let ds = crate::data::synthetic::two_gaussians(50, 14, 5, 1.5, 9);
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
+        let one_shot =
+            select_with_engine(EngineKind::Native, None, &ds.x, &ds.y, &cfg)
+                .unwrap();
+        let session =
+            begin_with_engine(EngineKind::Native, None, &ds.x, &ds.y, &cfg)
+                .unwrap();
+        let stepped = run_to_completion(session).unwrap();
+        assert_eq!(one_shot.selected, stepped.selected);
+        assert_eq!(one_shot.weights, stepped.weights);
+    }
+
+    #[test]
+    fn warm_started_session_continues_the_run() {
+        let ds = crate::data::synthetic::two_gaussians(50, 14, 5, 1.5, 10);
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
+        let full =
+            select_with_engine(EngineKind::Native, None, &ds.x, &ds.y, &cfg)
+                .unwrap();
+        let session = begin_from_with_engine(
+            EngineKind::Native,
+            None,
+            &ds.x,
+            &ds.y,
+            &cfg,
+            &full.selected[..2],
+        )
+        .unwrap();
+        assert_eq!(session.rounds_done(), 2);
+        let resumed = run_to_completion(session).unwrap();
+        assert_eq!(full.selected, resumed.selected);
+        assert_eq!(full.weights, resumed.weights);
     }
 
     #[test]

@@ -43,13 +43,14 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Serve every column of `x` (full feature-major matrix) in batches with
-/// the native predictor. Returns predictions and stats.
+/// the native predictor. Returns predictions and stats. Errors on a
+/// zero batch size, mirroring [`serve_pjrt`].
 pub fn serve_native(
     p: &Predictor,
     x: &Matrix,
     batch: usize,
-) -> (Vec<f64>, ServeStats) {
-    assert!(batch > 0);
+) -> anyhow::Result<(Vec<f64>, ServeStats)> {
+    ensure!(batch > 0, "batch must be positive");
     let m = x.cols();
     let mut preds = vec![0.0; m];
     let mut lat = Vec::new();
@@ -65,7 +66,7 @@ pub fn serve_native(
         start = end;
     }
     let stats = summarize(m, &lat);
-    (preds, stats)
+    Ok((preds, stats))
 }
 
 /// Serve through the PJRT `predict` artifact. The predictor's weights are
@@ -146,10 +147,17 @@ mod tests {
     }
 
     #[test]
+    fn zero_batch_is_an_error_not_a_panic() {
+        let ds = crate::data::synthetic::two_gaussians(10, 5, 2, 1.0, 2);
+        let err = serve_native(&toy_predictor(), &ds.x, 0).unwrap_err();
+        assert!(err.to_string().contains("batch"), "{err}");
+    }
+
+    #[test]
     fn native_serving_matches_direct_prediction() {
         let ds = crate::data::synthetic::two_gaussians(37, 5, 2, 1.0, 1);
         let p = toy_predictor();
-        let (preds, stats) = serve_native(&p, &ds.x, 8);
+        let (preds, stats) = serve_native(&p, &ds.x, 8).unwrap();
         assert_eq!(preds.len(), 37);
         assert_eq!(stats.requests, 37);
         assert_eq!(stats.batches, 5); // ceil(37/8)

@@ -25,16 +25,48 @@
 //!
 //! ## Quickstart
 //!
+//! The primary API is the **stepwise session**: configure with the
+//! builder, `begin` a session, drive it round by round (or to
+//! completion), and `finish` into a result. Early stopping on the LOO
+//! plateau is one builder call:
+//!
 //! ```no_run
 //! use greedy_rls::data::synthetic::two_gaussians;
-//! use greedy_rls::select::{greedy::GreedyRls, Selector, SelectionConfig};
 //! use greedy_rls::metrics::Loss;
+//! use greedy_rls::select::{
+//!     greedy::GreedyRls, SelectionConfig, SessionSelector, StepOutcome,
+//! };
 //!
 //! let ds = two_gaussians(1000, 200, 10, 1.0, 42);
-//! let cfg = SelectionConfig { k: 25, lambda: 1.0, loss: Loss::ZeroOne };
-//! let result = GreedyRls::default().select(&ds.x, &ds.y, &cfg).unwrap();
+//! let cfg = SelectionConfig::builder()
+//!     .k(25)
+//!     .lambda(1.0)
+//!     .loss(Loss::ZeroOne)
+//!     .plateau(3, 1e-3) // stop when the LOO criterion stops improving
+//!     .build();
+//! let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+//! while let StepOutcome::Selected(round) = session.step().unwrap() {
+//!     println!("+feature {} (LOO {})", round.feature, round.criterion);
+//! }
+//! let result = session.finish().unwrap();
 //! println!("selected {:?}", result.selected);
 //! ```
+//!
+//! The blocking one-shot call is still available (and is a thin shim over
+//! the session):
+//!
+//! ```no_run
+//! use greedy_rls::data::synthetic::two_gaussians;
+//! use greedy_rls::select::{greedy::GreedyRls, SelectionConfig, Selector};
+//!
+//! let ds = two_gaussians(1000, 200, 10, 1.0, 42);
+//! let cfg = SelectionConfig::builder().k(25).build();
+//! let result = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+//! ```
+//!
+//! Sessions also support warm starts
+//! ([`select::SessionSelector::begin_from`]) and per-round observation
+//! ([`select::Observer`]) — see the `select::session` module docs.
 
 pub mod bench;
 pub mod cli;

@@ -5,13 +5,14 @@
 use anyhow::{bail, Context, Result};
 
 use greedy_rls::bench::time_once;
-use greedy_rls::cli::{Args, USAGE};
-use greedy_rls::coordinator::{self, cv, serve, EngineKind};
+use greedy_rls::cli::{self, Args, USAGE};
+use greedy_rls::coordinator::{self, cv, serve, EngineKind, ProgressObserver};
 use greedy_rls::data::{registry, synthetic, Dataset};
 use greedy_rls::metrics::Loss;
 use greedy_rls::runtime::Runtime;
 use greedy_rls::select::{
-    greedy::GreedyRls, lowrank::LowRankLsSvm, SelectionConfig, Selector,
+    drive, greedy::GreedyRls, lowrank::LowRankLsSvm, NoopObserver,
+    SelectionConfig, Selector, StopPolicy,
 };
 
 fn main() {
@@ -76,32 +77,64 @@ fn open_runtime_if(engine: EngineKind) -> Result<Option<Runtime>> {
 fn cmd_select(args: &Args) -> Result<()> {
     let mut ds = load_dataset(args)?;
     ds.standardize();
-    let cfg = SelectionConfig {
-        k: args.get_or("k", 10usize)?,
-        lambda: args.get_or("lambda", 1.0f64)?,
-        loss: args.get_or("loss", Loss::ZeroOne)?,
-    };
+    let stop = cli::parse_stop_policy(args)?;
+    let cfg = SelectionConfig::builder()
+        .k(args.get_or("k", 10usize)?)
+        .lambda(args.get_or("lambda", 1.0f64)?)
+        .loss(args.get_or("loss", Loss::ZeroOne)?)
+        .stop(stop)
+        .build();
     let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
     let rt = open_runtime_if(engine)?;
+    let warm: Option<Vec<usize>> = match args.get_list("warm-start") {
+        Some(items) => Some(
+            items
+                .iter()
+                .map(|s| s.parse().context("--warm-start I1,I2,..."))
+                .collect::<Result<_>>()?,
+        ),
+        None => None,
+    };
     println!(
-        "dataset={} m={} n={} k={} lambda={} engine={engine:?}",
+        "dataset={} m={} n={} k={} lambda={} engine={engine:?}{}",
         ds.name,
         ds.n_examples(),
         ds.n_features(),
         cfg.k,
-        cfg.lambda
+        cfg.lambda,
+        match cfg.stop {
+            StopPolicy::KBudget(b) if b == usize::MAX => String::new(),
+            other => format!(" stop={other:?}"),
+        }
     );
-    let mut result = None;
-    let secs = time_once(|| {
-        result = Some(coordinator::select_with_engine(
+    let t0 = std::time::Instant::now();
+    let mut session = match &warm {
+        Some(prefix) => {
+            println!("warm start from {} features: {prefix:?}", prefix.len());
+            coordinator::begin_from_with_engine(
+                engine,
+                rt.as_ref(),
+                &ds.x,
+                &ds.y,
+                &cfg,
+                prefix,
+            )?
+        }
+        None => coordinator::begin_with_engine(
             engine,
             rt.as_ref(),
             &ds.x,
             &ds.y,
             &cfg,
-        ));
-    });
-    let r = result.unwrap()?;
+        )?,
+    };
+    let reason = if args.has("progress") {
+        drive(session.as_mut(), &mut ProgressObserver)?
+    } else {
+        drive(session.as_mut(), &mut NoopObserver)?
+    };
+    let r = session.finish()?;
+    let secs = t0.elapsed().as_secs_f64();
     println!("selected ({}): {:?}", r.selected.len(), r.selected);
     println!(
         "criterion trajectory: {:?}",
@@ -110,6 +143,7 @@ fn cmd_select(args: &Args) -> Result<()> {
             .map(|c| (c * 1000.0).round() / 1000.0)
             .collect::<Vec<_>>()
     );
+    println!("stopped after {} rounds: {reason}", r.rounds.len());
     println!("selection time: {secs:.3}s");
     if let Some(path) = args.get("out") {
         coordinator::save_model(&r.predictor(), std::path::Path::new(path))?;
@@ -158,7 +192,7 @@ fn cmd_scaling(args: &Args) -> Result<()> {
     let with_baseline = args.has("baseline");
     println!("# scaling n={n} k={k} (paper §4.1)");
     println!("m\tgreedy_rls_s{}", if with_baseline { "\tlowrank_s" } else { "" });
-    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
     for &m in &sizes {
         let ds = synthetic::two_gaussians(m, n, 50, 1.0, seed);
         let t_greedy =
@@ -188,7 +222,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ds.n_examples()
     );
     let (preds, stats) = match engine {
-        EngineKind::Native => serve::serve_native(&p, &ds.x, batch),
+        EngineKind::Native => serve::serve_native(&p, &ds.x, batch)?,
         EngineKind::Pjrt => {
             let rt = Runtime::open("artifacts")?;
             serve::serve_pjrt(&rt, &p, &ds.x, batch)?
@@ -221,7 +255,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let lambda: f64 = args.get_or("lambda", 1.0f64)?;
     let loss: Loss = args.get_or("loss", Loss::ZeroOne)?;
     let seed: u64 = args.get_or("seed", 42u64)?;
-    let cfg = SelectionConfig { k, lambda, loss };
+    let cfg = SelectionConfig { k, lambda, loss, ..Default::default() };
 
     let mut rng = Pcg64::new(seed, 91);
     let (tr, te) = train_test_split(ds.n_examples(), 0.25, &mut rng);
@@ -301,7 +335,7 @@ fn cmd_check(args: &Args) -> Result<()> {
     }
     // probe: tiny problem through both engines must match
     let ds = synthetic::two_gaussians(48, 24, 6, 1.5, 7);
-    let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
     let native = GreedyRls.select(&ds.x, &ds.y, &cfg)?;
     let pjrt = coordinator::select_with_engine(
         EngineKind::Pjrt,

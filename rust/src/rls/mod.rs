@@ -91,6 +91,26 @@ pub fn train(xs: &Matrix, y: &[f64], lambda: f64) -> Vec<f64> {
     }
 }
 
+/// Summed LOO loss of the feature subset `s` (rows of feature-major `x`),
+/// via the eq. 7/8 shortcut — primal when |s| ≤ m, dual otherwise. The
+/// shared criterion of the wrapper-style selectors (floating, FoBa, the
+/// random baseline's log).
+pub fn loo_subset_criterion(
+    x: &Matrix,
+    s: &[usize],
+    y: &[f64],
+    lambda: f64,
+    loss: crate::metrics::Loss,
+) -> f64 {
+    let xs = x.select_rows(s);
+    let p = if xs.rows() <= xs.cols() {
+        loo_primal(&xs, y, lambda)
+    } else {
+        loo_dual(&xs, y, lambda)
+    };
+    loss.total(y, &p)
+}
+
 /// LOO predictions via the primal shortcut (eq. 7):
 /// `p_j = (1 − q_j)⁻¹ (f_j − q_j y_j)` with
 /// `q_j = x_jᵀ (X Xᵀ + λI)⁻¹ x_j` and `f = Xᵀ w`.

@@ -10,14 +10,17 @@
 //! loss; padded candidates are masked to BIG by the kernel. The engine is
 //! equivalence-tested against the native [`crate::select::greedy`] engine.
 
+use std::rc::Rc;
+
 use anyhow::{anyhow, ensure};
 
-use super::{lit, Runtime};
+use super::{lit, xla, Runtime};
 use crate::linalg::{dot, Matrix};
 use crate::metrics::Loss;
-use crate::select::{
-    argmin, Round, SelectionConfig, SelectionResult, Selector,
+use crate::select::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
 };
+use crate::select::{argmin, Round, SelectionConfig, SelectionResult, Selector};
 
 /// Greedy RLS driven through the PJRT artifacts.
 pub struct PjrtGreedy<'rt> {
@@ -41,17 +44,120 @@ impl<'rt> PjrtGreedy<'rt> {
     }
 }
 
-impl Selector for PjrtGreedy<'_> {
-    fn name(&self) -> &'static str {
-        "greedy-rls-pjrt"
+/// Round-by-round engine over the artifacts. The executables are cloned
+/// `Rc`s and all literals are owned, so the session borrows only the
+/// problem data, not the [`Runtime`]. Forced rounds (warm-start replay)
+/// run the same full `score_step` launch as greedy rounds — the kernel
+/// has no single-candidate entry point — so a PJRT replay costs one
+/// score + one commit launch per round.
+struct PjrtCore<'a> {
+    x: &'a Matrix,
+    loss: Loss,
+    k: usize,
+    n: usize,
+    m: usize,
+    score: Rc<xla::PjRtLoadedExecutable>,
+    commit: Rc<xla::PjRtLoadedExecutable>,
+    x_lit: xla::Literal,
+    y_lit: xla::Literal,
+    ex_lit: xla::Literal,
+    /// [C, a, d] device state.
+    state: Vec<xla::Literal>,
+    cand_mask: Vec<f64>,
+    selected: Vec<usize>,
+    rounds: Vec<Round>,
+}
+
+impl SessionCore for PjrtCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.selected.len() >= self.k
     }
 
-    fn select(
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let n = self.n;
+        let cm_lit = lit::vec_f64(&self.cand_mask);
+        let outs = Runtime::run_tuple(
+            &self.score,
+            &[
+                self.x_lit.clone(),
+                self.state[0].clone(),
+                self.state[1].clone(),
+                self.state[2].clone(),
+                self.y_lit.clone(),
+                cm_lit,
+                self.ex_lit.clone(),
+            ],
+        )?;
+        ensure!(outs.len() == 2, "score_step returned {}", outs.len());
+        let e_sq = lit::to_vec_f64(&outs[0])?;
+        let e_01 = lit::to_vec_f64(&outs[1])?;
+        let scores = match self.loss {
+            Loss::Squared => &e_sq,
+            Loss::ZeroOne => &e_01,
+        };
+        let b = match forced {
+            Some(b) => {
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(
+                    self.cand_mask[b] != 0.0,
+                    "feature {b} already selected"
+                );
+                b
+            }
+            None => argmin(&scores[..n])
+                .ok_or_else(|| anyhow!("no candidate left"))?,
+        };
+        let round = Round { feature: b, criterion: scores[b] };
+
+        let b_lit = lit::scalar_i32(b as i32);
+        self.state = Runtime::run_tuple(
+            &self.commit,
+            &[
+                self.x_lit.clone(),
+                self.state[0].clone(),
+                self.state[1].clone(),
+                self.state[2].clone(),
+                b_lit,
+            ],
+        )?;
+        ensure!(
+            self.state.len() == 3,
+            "commit_step returned {}",
+            self.state.len()
+        );
+        self.cand_mask[b] = 0.0;
+        self.selected.push(b);
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        // w = X_S a (unpadded coordinates only).
+        let a_full = lit::to_vec_f64(&self.state[1])?;
+        let a = &a_full[..self.m];
+        Ok(self
+            .selected
+            .iter()
+            .map(|&i| dot(self.x.row(i), a))
+            .collect())
+    }
+}
+
+impl SessionSelector for PjrtGreedy<'_> {
+    fn begin<'a>(
         &self,
-        x: &Matrix,
-        y: &[f64],
+        x: &'a Matrix,
+        y: &'a [f64],
         cfg: &SelectionConfig,
-    ) -> anyhow::Result<SelectionResult> {
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
         let n = x.rows();
         let m = x.cols();
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
@@ -69,7 +175,7 @@ impl Selector for PjrtGreedy<'_> {
         let commit = self.rt.executable("commit_step", mb, nb)?;
 
         // Padded constants.
-        let x_pad = Self::pad_x(x, mb, nb);
+        let x_pad = PjrtGreedy::pad_x(x, mb, nb);
         let x_lit = lit::mat_f64(&x_pad, nb, mb)?;
         let mut y_pad = vec![0.0; mb];
         y_pad[..m].copy_from_slice(y);
@@ -80,66 +186,44 @@ impl Selector for PjrtGreedy<'_> {
 
         // init_state(X, y, λ) -> (C, a, d)
         let lam_lit = lit::vec_f64(&[cfg.lambda]);
-        let mut state =
+        let state =
             Runtime::run_tuple(&init, &[x_lit.clone(), y_lit.clone(), lam_lit])?;
         ensure!(state.len() == 3, "init_state returned {}", state.len());
-        // state = [C, a, d]
 
         let mut cand_mask = vec![0.0; nb];
         cand_mask[..n].fill(1.0);
-        let mut selected = Vec::with_capacity(cfg.k);
-        let mut rounds = Vec::with_capacity(cfg.k);
+        let core = PjrtCore {
+            x,
+            loss: cfg.loss,
+            k: cfg.k,
+            n,
+            m,
+            score,
+            commit,
+            x_lit,
+            y_lit,
+            ex_lit,
+            state,
+            cand_mask,
+            selected: Vec::with_capacity(cfg.k),
+            rounds: Vec::with_capacity(cfg.k),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
 
-        for _ in 0..cfg.k {
-            let cm_lit = lit::vec_f64(&cand_mask);
-            let d_lit = &state[2];
-            let a_lit = &state[1];
-            let c_lit = &state[0];
-            let outs = Runtime::run_tuple(
-                &score,
-                &[
-                    x_lit.clone(),
-                    c_lit.clone(),
-                    a_lit.clone(),
-                    d_lit.clone(),
-                    y_lit.clone(),
-                    cm_lit,
-                    ex_lit.clone(),
-                ],
-            )?;
-            ensure!(outs.len() == 2, "score_step returned {}", outs.len());
-            let e_sq = lit::to_vec_f64(&outs[0])?;
-            let e_01 = lit::to_vec_f64(&outs[1])?;
-            let scores = match cfg.loss {
-                Loss::Squared => &e_sq,
-                Loss::ZeroOne => &e_01,
-            };
-            let b = argmin(&scores[..n])
-                .ok_or_else(|| anyhow!("no candidate left"))?;
-            rounds.push(Round { feature: b, criterion: scores[b] });
+impl Selector for PjrtGreedy<'_> {
+    fn name(&self) -> &'static str {
+        "greedy-rls-pjrt"
+    }
 
-            let b_lit = lit::scalar_i32(b as i32);
-            state = Runtime::run_tuple(
-                &commit,
-                &[
-                    x_lit.clone(),
-                    state[0].clone(),
-                    state[1].clone(),
-                    state[2].clone(),
-                    b_lit,
-                ],
-            )?;
-            ensure!(state.len() == 3, "commit_step returned {}", state.len());
-            cand_mask[b] = 0.0;
-            selected.push(b);
-        }
-
-        // w = X_S a (unpadded coordinates only).
-        let a_full = lit::to_vec_f64(&state[1])?;
-        let a = &a_full[..m];
-        let weights: Vec<f64> =
-            selected.iter().map(|&i| dot(x.row(i), a)).collect();
-        Ok(SelectionResult { selected, rounds, weights })
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        crate::select::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 

@@ -18,6 +18,16 @@
 
 pub mod engine;
 
+/// Real `xla` bindings behind the `pjrt` feature; an API-compatible
+/// stub otherwise (see [`stub`]) so the crate builds without the
+/// offline XLA cache — the PJRT paths then error at runtime.
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) use self::stub as xla;
+#[cfg(feature = "pjrt")]
+pub(crate) use ::xla;
+
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -185,6 +195,8 @@ fn parse_manifest(text: &str) -> anyhow::Result<Vec<ManifestEntry>> {
 /// Literal helpers shared by the engine and serving paths.
 pub mod lit {
     use anyhow::anyhow;
+
+    use super::xla;
 
     /// 1-D f64 literal.
     pub fn vec_f64(data: &[f64]) -> xla::Literal {

@@ -1,0 +1,118 @@
+//! API-compatible stand-in for the `xla` crate, compiled when the `pjrt`
+//! feature is off (the default — the real bindings need the XLA C++
+//! extension from the offline cache).
+//!
+//! Only [`PjRtClient::cpu`] is reachable at runtime: it fails with a
+//! clear "built without the pjrt feature" error, so `Runtime::open`
+//! (and therefore every PJRT engine/serving path) reports the missing
+//! feature instead of failing to link. The remaining items exist solely
+//! so the non-gated code in `runtime/` and `runtime/engine.rs`
+//! typechecks; none of them can be constructed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error returned by every stub entry point.
+#[derive(Clone, Copy, Debug)]
+pub struct Unavailable;
+
+impl fmt::Display for Unavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(
+            "built without the pjrt feature — rebuild with \
+             `--features pjrt` (requires the offline xla crate cache)",
+        )
+    }
+}
+
+/// Stub PJRT client; [`PjRtClient::cpu`] always errors.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub compiled executable (never constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub device buffer (never constructed).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub host literal. Constructible (the `lit` helpers build literals
+/// before executing), but empty — no executable exists to consume it.
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(
+        _path: P,
+    ) -> Result<HloModuleProto, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}

@@ -20,6 +20,9 @@
 
 use anyhow::ensure;
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::linalg::{dot, spd_inverse, Matrix};
 use crate::metrics::Loss;
@@ -58,31 +61,39 @@ impl BackState {
         Ok(BackState { m, n, ct, a, d, in_s: vec![true; n] })
     }
 
+    /// LOO criterion of S \ {i} for one member i ([`BIG`] when the
+    /// removal is numerically unrepresentable this round). Removal
+    /// candidates are independent, so forced session rounds score only
+    /// their own candidate through this same code path.
+    fn removal_score(&self, x: &Matrix, y: &[f64], loss: Loss, i: usize) -> f64 {
+        let m = self.m;
+        let v = x.row(i);
+        let c = &self.ct[i * m..(i + 1) * m];
+        let vc = dot(v, c);
+        let va = dot(v, &self.a);
+        let denom = 1.0 - vc;
+        if denom.abs() < 1e-12 {
+            return BIG; // numerically unremovable this round
+        }
+        let mut e = 0.0;
+        for j in 0..m {
+            let u = c[j] / denom;
+            let at = self.a[j] + u * va;
+            let dt = self.d[j] + u * c[j];
+            let p = y[j] - at / dt;
+            e += loss.eval(y[j], p);
+        }
+        e
+    }
+
     /// LOO criterion of S \ {i} for every member i.
     fn score_removals(&self, x: &Matrix, y: &[f64], loss: Loss) -> Vec<f64> {
-        let m = self.m;
         let mut scores = vec![BIG; self.n];
         for i in 0..self.n {
             if !self.in_s[i] {
                 continue;
             }
-            let v = x.row(i);
-            let c = &self.ct[i * m..(i + 1) * m];
-            let vc = dot(v, c);
-            let va = dot(v, &self.a);
-            let denom = 1.0 - vc;
-            if denom.abs() < 1e-12 {
-                continue; // numerically unremovable this round
-            }
-            let mut e = 0.0;
-            for j in 0..m {
-                let u = c[j] / denom;
-                let at = self.a[j] + u * va;
-                let dt = self.d[j] + u * c[j];
-                let p = y[j] - at / dt;
-                e += loss.eval(y[j], p);
-            }
-            scores[i] = e;
+            scores[i] = self.removal_score(x, y, loss, i);
         }
         scores
     }
@@ -112,6 +123,95 @@ impl BackState {
     }
 }
 
+/// Round-by-round engine: each round is one *elimination* (the session's
+/// "feature" log records the removed feature; `selected()` is the set
+/// still standing, in ascending index order).
+struct BackwardCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    loss: Loss,
+    k: usize,
+    st: BackState,
+    rounds: Vec<Round>,
+}
+
+impl SessionCore for BackwardCore<'_> {
+    fn target_reached(&self) -> bool {
+        // n − (#removals) features remain
+        self.st.n - self.rounds.len() <= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let (b, criterion) = match forced {
+            Some(b) => {
+                ensure!(
+                    b < self.st.n,
+                    "feature {b} out of range (n={})",
+                    self.st.n
+                );
+                ensure!(self.st.in_s[b], "feature {b} already removed");
+                let s = self.st.removal_score(self.x, self.y, self.loss, b);
+                ensure!(
+                    s < BIG,
+                    "feature {b} is not numerically removable this round"
+                );
+                (b, s)
+            }
+            None => {
+                let scores =
+                    self.st.score_removals(self.x, self.y, self.loss);
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow::anyhow!("no removable feature"))?;
+                (b, scores[b])
+            }
+        };
+        let round = Round { feature: b, criterion };
+        self.st.remove(self.x, b);
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        (0..self.st.n).filter(|&i| self.st.in_s[i]).collect()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        Ok(self
+            .selected()
+            .iter()
+            .map(|&i| dot(self.x.row(i), &self.st.a))
+            .collect())
+    }
+}
+
+impl SessionSelector for BackwardElimination {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(x.cols() == y.len(), "shape mismatch");
+        let st = BackState::init(x, y, cfg.lambda)?;
+        let core = BackwardCore {
+            x,
+            y,
+            loss: cfg.loss,
+            k: cfg.k,
+            st,
+            rounds: Vec::new(),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
 impl Selector for BackwardElimination {
     fn name(&self) -> &'static str {
         "backward-elimination"
@@ -123,23 +223,7 @@ impl Selector for BackwardElimination {
         y: &[f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<SelectionResult> {
-        let n = x.rows();
-        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-        let mut st = BackState::init(x, y, cfg.lambda)?;
-        let mut rounds = Vec::new();
-        for _ in 0..n - cfg.k {
-            let scores = st.score_removals(x, y, cfg.loss);
-            let b = argmin(&scores)
-                .ok_or_else(|| anyhow::anyhow!("no removable feature"))?;
-            rounds.push(Round { feature: b, criterion: scores[b] });
-            st.remove(x, b);
-        }
-        let selected: Vec<usize> =
-            (0..n).filter(|&i| st.in_s[i]).collect();
-        let weights: Vec<f64> =
-            selected.iter().map(|&i| dot(x.row(i), &st.a)).collect();
-        Ok(SelectionResult { selected, rounds, weights })
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -184,7 +268,7 @@ mod tests {
     #[test]
     fn keeps_k_features_and_fits_them() {
         let ds = crate::data::synthetic::two_gaussians(50, 12, 4, 1.5, 8);
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = BackwardElimination.select(&ds.x, &ds.y, &cfg).unwrap();
         assert_eq!(r.selected.len(), 5);
         assert_eq!(r.rounds.len(), 7); // 12 − 5 removals
@@ -198,7 +282,7 @@ mod tests {
         let (ds, mut support) =
             crate::data::synthetic::sparse_regression(200, 15, 3, 0.05, 13);
         let cfg =
-            SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared };
+            SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared, ..Default::default() };
         let r = BackwardElimination.select(&ds.x, &ds.y, &cfg).unwrap();
         let mut sel = r.selected.clone();
         sel.sort_unstable();
@@ -211,7 +295,7 @@ mod tests {
         let mut g = Gen::new(5);
         let x = g.matrix(4, 6);
         let y = g.labels(6);
-        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = BackwardElimination.select(&x, &y, &cfg).unwrap();
         assert_eq!(r.selected, vec![0, 1, 2, 3]);
         assert!(r.rounds.is_empty());

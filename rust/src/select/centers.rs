@@ -16,9 +16,15 @@
 //! centers costs O(k m²) after the O(m²·dim) kernel assembly (here
 //! n = m candidates of length m).
 
+use std::borrow::Cow;
+
 use anyhow::ensure;
 
-use super::{greedy::GreedyRls, SelectionConfig, SelectionResult, Selector};
+use super::greedy::GreedyCore;
+use super::session::{
+    run_to_completion, PolicySession, Session, SessionSelector,
+};
+use super::{SelectionConfig, SelectionResult, Selector};
 use crate::linalg::Matrix;
 use crate::rls::kernel::Kernel;
 
@@ -52,6 +58,43 @@ pub struct CenterSelector {
     pub kernel: Kernel,
 }
 
+impl SessionSelector for CenterSelector {
+    /// Begin a center-selection session: the greedy-RLS engine over the
+    /// kernel gram matrix (one candidate per training example), which the
+    /// session owns. The session's `x` argument is the raw feature-major
+    /// training data; the gram assembly happens here.
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        ensure!(x.cols() == y.len(), "shape mismatch");
+        ensure!(cfg.k <= x.cols(), "k={} > m={}", cfg.k, x.cols());
+        // candidate "feature" matrix: kernel gram, one row per center
+        // (rows are candidates exactly like features in Algorithm 3;
+        // K is symmetric so rows == columns)
+        let gram = self.kernel.gram(x);
+        let core = GreedyCore::new(Cow::Owned(gram), Cow::Borrowed(y), cfg)?;
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
+impl Selector for CenterSelector {
+    fn name(&self) -> &'static str {
+        "greedy-centers"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        run_to_completion(self.begin(x, y, cfg)?)
+    }
+}
+
 impl CenterSelector {
     /// Select `cfg.k` centers from the training set and fit the sparse
     /// expansion. Returns the model and the underlying selection log.
@@ -61,13 +104,7 @@ impl CenterSelector {
         y: &[f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<(ReducedSetModel, SelectionResult)> {
-        ensure!(x.cols() == y.len(), "shape mismatch");
-        ensure!(cfg.k <= x.cols(), "k={} > m={}", cfg.k, x.cols());
-        // candidate "feature" matrix: kernel gram, one row per center
-        // (rows are candidates exactly like features in Algorithm 3;
-        // K is symmetric so rows == columns)
-        let gram = self.kernel.gram(x);
-        let r = GreedyRls.select(&gram, y, cfg)?;
+        let r = self.select(x, y, cfg)?;
         let center_x = {
             let mut c = Matrix::zeros(x.rows(), r.selected.len());
             for (j, &idx) in r.selected.iter().enumerate() {
@@ -93,6 +130,7 @@ mod tests {
     use super::*;
     use crate::metrics::{accuracy, Loss};
     use crate::rls::kernel::KernelRls;
+    use crate::select::greedy::GreedyRls;
 
     fn ring_dataset(seed: u64) -> crate::data::Dataset {
         // radially separable: class = sign(‖x‖ − r): linear models fail,
@@ -114,7 +152,7 @@ mod tests {
     fn selects_k_distinct_centers() {
         let ds = ring_dataset(1);
         let sel = CenterSelector { kernel: Kernel::Rbf { gamma: 1.0 } };
-        let cfg = SelectionConfig { k: 12, lambda: 0.5, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 12, lambda: 0.5, loss: Loss::ZeroOne, ..Default::default() };
         let (model, r) = sel.fit(&ds.x, &ds.y, &cfg).unwrap();
         assert_eq!(model.centers.len(), 12);
         let mut u = model.centers.clone();
@@ -132,7 +170,7 @@ mod tests {
         let acc_full = accuracy(&ds.y, &full.predict(&ds.x));
 
         let sel = CenterSelector { kernel };
-        let cfg = SelectionConfig { k: 20, lambda: 0.5, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 20, lambda: 0.5, loss: Loss::ZeroOne, ..Default::default() };
         let (model, _) = sel.fit(&ds.x, &ds.y, &cfg).unwrap();
         let acc_sparse = accuracy(&ds.y, &model.predict(&ds.x));
         // 20 of 160 centers should recover most of the full model
@@ -146,13 +184,18 @@ mod tests {
     #[test]
     fn rbf_centers_beat_linear_model_on_ring() {
         let ds = ring_dataset(3);
-        let cfg = SelectionConfig { k: 2, lambda: 0.5, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 2, lambda: 0.5, loss: Loss::ZeroOne, ..Default::default() };
         // best 2-feature *linear* model on raw coordinates: near chance
         let lin = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
         let acc_lin = accuracy(&ds.y, &lin.predictor().predict_matrix(&ds.x));
         // 12 RBF centers: solves it
         let sel = CenterSelector { kernel: Kernel::Rbf { gamma: 1.0 } };
-        let cfg12 = SelectionConfig { k: 12, lambda: 0.5, loss: Loss::ZeroOne };
+        let cfg12 = SelectionConfig {
+            k: 12,
+            lambda: 0.5,
+            loss: Loss::ZeroOne,
+            ..Default::default()
+        };
         let (model, _) = sel.fit(&ds.x, &ds.y, &cfg12).unwrap();
         let acc_rbf = accuracy(&ds.y, &model.predict(&ds.x));
         assert!(
@@ -165,7 +208,7 @@ mod tests {
     fn prediction_uses_only_selected_centers() {
         let ds = ring_dataset(4);
         let sel = CenterSelector { kernel: Kernel::Rbf { gamma: 0.7 } };
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let (model, _) = sel.fit(&ds.x, &ds.y, &cfg).unwrap();
         assert_eq!(model.center_x.cols(), 5);
         // manual expansion must match predict()

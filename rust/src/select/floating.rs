@@ -12,8 +12,12 @@
 
 use anyhow::ensure;
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::linalg::Matrix;
+use crate::metrics::Loss;
 use crate::rls;
 
 /// SFFS-style selector with a step budget guard.
@@ -30,21 +34,135 @@ impl Default for FloatingForward {
     }
 }
 
-impl FloatingForward {
-    fn criterion(
-        &self,
-        x: &Matrix,
-        s: &[usize],
-        y: &[f64],
-        cfg: &SelectionConfig,
-    ) -> f64 {
-        let xs = x.select_rows(s);
-        let p = if xs.rows() <= xs.cols() {
-            rls::loo_primal(&xs, y, cfg.lambda)
-        } else {
-            rls::loo_dual(&xs, y, cfg.lambda)
+/// Round-by-round engine: one session round = one forward addition plus
+/// its conditional floating removals (so the round log matches the
+/// forward additions, as in the one-shot run).
+struct FloatingCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    lambda: f64,
+    loss: Loss,
+    k: usize,
+    max_steps: usize,
+    s: Vec<usize>,
+    /// best criterion seen for each subset size (index = |S|)
+    best_at: Vec<f64>,
+    steps: usize,
+    rounds: Vec<Round>,
+}
+
+impl FloatingCore<'_> {
+    fn criterion(&self, s: &[usize]) -> f64 {
+        rls::loo_subset_criterion(self.x, s, self.y, self.lambda, self.loss)
+    }
+}
+
+impl SessionCore for FloatingCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.s.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let n = self.x.rows();
+        if self.steps >= self.max_steps {
+            return Ok(CoreStep::Exhausted);
+        }
+        self.steps += 1;
+        // forward step: best addition (a forced round scores only its own
+        // candidate — candidates are independent, so the value is
+        // identical to what the full scan would have recorded)
+        let (b, cur) = match forced {
+            Some(b) => {
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(!self.s.contains(&b), "feature {b} already selected");
+                let mut t = self.s.clone();
+                t.push(b);
+                (b, self.criterion(&t))
+            }
+            None => {
+                let mut scores = vec![BIG; n];
+                for i in 0..n {
+                    if self.s.contains(&i) {
+                        continue;
+                    }
+                    let mut t = self.s.clone();
+                    t.push(i);
+                    scores[i] = self.criterion(&t);
+                }
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+                (b, scores[b])
+            }
         };
-        cfg.loss.total(y, &p)
+        self.s.push(b);
+        self.best_at[self.s.len()] = self.best_at[self.s.len()].min(cur);
+        let round = Round { feature: b, criterion: cur };
+        self.rounds.push(round.clone());
+
+        // conditional backward steps (never undo the just-added one
+        // immediately into an empty improvement loop)
+        while self.s.len() > 2 && self.steps < self.max_steps {
+            self.steps += 1;
+            let mut rem_scores = vec![BIG; self.s.len()];
+            for (pos, _) in self.s.iter().enumerate() {
+                let mut t = self.s.clone();
+                t.remove(pos);
+                rem_scores[pos] = self.criterion(&t);
+            }
+            let worst_pos = argmin(&rem_scores).unwrap();
+            let smaller = self.s.len() - 1;
+            if rem_scores[worst_pos] + 1e-12 < self.best_at[smaller] {
+                // floating removal improves the smaller subset record
+                self.best_at[smaller] = rem_scores[worst_pos];
+                self.s.remove(worst_pos);
+            } else {
+                break;
+            }
+        }
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.s.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        if self.s.is_empty() {
+            return Ok(Vec::new());
+        }
+        let xs = self.x.select_rows(&self.s);
+        Ok(rls::train(&xs, self.y, self.lambda))
+    }
+}
+
+impl SessionSelector for FloatingForward {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(x.cols() == y.len(), "shape mismatch");
+        let core = FloatingCore {
+            x,
+            y,
+            lambda: cfg.lambda,
+            loss: cfg.loss,
+            k: cfg.k,
+            max_steps: self.max_steps,
+            s: Vec::new(),
+            best_at: vec![f64::INFINITY; cfg.k + 1],
+            steps: 0,
+            rounds: Vec::new(),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
     }
 }
 
@@ -59,60 +177,7 @@ impl Selector for FloatingForward {
         y: &[f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<SelectionResult> {
-        let n = x.rows();
-        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-
-        let mut s: Vec<usize> = Vec::new();
-        // best criterion seen for each subset size (index = |S|)
-        let mut best_at = vec![f64::INFINITY; cfg.k + 1];
-        let mut rounds = Vec::new();
-        let mut steps = 0usize;
-
-        while s.len() < cfg.k && steps < self.max_steps {
-            steps += 1;
-            // forward step: best addition
-            let mut scores = vec![BIG; n];
-            for i in 0..n {
-                if s.contains(&i) {
-                    continue;
-                }
-                let mut t = s.clone();
-                t.push(i);
-                scores[i] = self.criterion(x, &t, y, cfg);
-            }
-            let b = argmin(&scores)
-                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
-            s.push(b);
-            let cur = scores[b];
-            best_at[s.len()] = best_at[s.len()].min(cur);
-            rounds.push(Round { feature: b, criterion: cur });
-
-            // conditional backward steps (never undo the just-added one
-            // immediately into an empty improvement loop)
-            while s.len() > 2 && steps < self.max_steps {
-                steps += 1;
-                let mut rem_scores = vec![BIG; s.len()];
-                for (pos, _) in s.iter().enumerate() {
-                    let mut t = s.clone();
-                    t.remove(pos);
-                    rem_scores[pos] = self.criterion(x, &t, y, cfg);
-                }
-                let worst_pos = argmin(&rem_scores).unwrap();
-                let smaller = s.len() - 1;
-                if rem_scores[worst_pos] + 1e-12 < best_at[smaller] {
-                    // floating removal improves the smaller subset record
-                    best_at[smaller] = rem_scores[worst_pos];
-                    s.remove(worst_pos);
-                } else {
-                    break;
-                }
-            }
-        }
-
-        let xs = x.select_rows(&s);
-        let weights = rls::train(&xs, y, cfg.lambda);
-        Ok(SelectionResult { selected: s, rounds, weights })
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -125,7 +190,7 @@ mod tests {
     #[test]
     fn reaches_k_features() {
         let ds = crate::data::synthetic::two_gaussians(60, 15, 5, 1.2, 21);
-        let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = FloatingForward::default().select(&ds.x, &ds.y, &cfg).unwrap();
         assert_eq!(r.selected.len(), 6);
         let mut u = r.selected.clone();
@@ -134,26 +199,33 @@ mod tests {
         assert_eq!(u.len(), 6);
     }
 
+    fn loo_criterion(
+        x: &Matrix,
+        s: &[usize],
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> f64 {
+        rls::loo_subset_criterion(x, s, y, cfg.lambda, cfg.loss)
+    }
+
     #[test]
     fn never_worse_criterion_than_greedy_at_k() {
         // floating search explores a superset of greedy's trajectory, so
         // its final LOO criterion can't be (meaningfully) worse
         let (ds, _) =
             crate::data::synthetic::sparse_regression(120, 18, 6, 0.3, 33);
-        let cfg = SelectionConfig { k: 6, lambda: 0.5, loss: Loss::Squared };
+        let cfg = SelectionConfig { k: 6, lambda: 0.5, loss: Loss::Squared, ..Default::default() };
         let rg = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
         let rf = FloatingForward::default().select(&ds.x, &ds.y, &cfg).unwrap();
-        let fg = FloatingForward::default()
-            .criterion(&ds.x, &rg.selected, &ds.y, &cfg);
-        let ff = FloatingForward::default()
-            .criterion(&ds.x, &rf.selected, &ds.y, &cfg);
+        let fg = loo_criterion(&ds.x, &rg.selected, &ds.y, &cfg);
+        let ff = loo_criterion(&ds.x, &rf.selected, &ds.y, &cfg);
         assert!(ff <= fg * 1.0 + 1e-9, "floating {ff} vs greedy {fg}");
     }
 
     #[test]
     fn step_budget_respected() {
         let ds = crate::data::synthetic::two_gaussians(30, 10, 3, 1.0, 2);
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let sel = FloatingForward { max_steps: 3 };
         let r = sel.select(&ds.x, &ds.y, &cfg).unwrap();
         assert!(r.selected.len() <= 5);

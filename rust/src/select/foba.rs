@@ -17,8 +17,12 @@
 
 use anyhow::ensure;
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::linalg::Matrix;
+use crate::metrics::Loss;
 use crate::rls;
 
 /// FoBa selector with deletion threshold `nu ∈ (0, 1]`.
@@ -40,28 +44,220 @@ impl Default for Foba {
     }
 }
 
-impl Foba {
-    fn criterion(
-        &self,
-        x: &Matrix,
-        s: &[usize],
-        y: &[f64],
-        cfg: &SelectionConfig,
-    ) -> f64 {
+/// Round-by-round engine. One session round is either one **grow** step
+/// (forward addition + its ν-thresholded corrective deletions) or one
+/// **swap** step at |S| = k (overshoot + forced deletion); the swap phase
+/// ends when no improving swap exists (`stable`).
+struct FobaCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    lambda: f64,
+    loss: Loss,
+    k: usize,
+    nu: f64,
+    swap: bool,
+    max_steps: usize,
+    s: Vec<usize>,
+    rounds: Vec<Round>,
+    steps: usize,
+    cur: f64,
+    stable: bool,
+}
+
+impl FobaCore<'_> {
+    fn criterion(&self, s: &[usize]) -> f64 {
         if s.is_empty() {
             // empty-model LOO: predict 0 for everything
-            return y
-                .iter()
-                .map(|&yv| cfg.loss.eval(yv, 0.0))
-                .sum();
+            return self.y.iter().map(|&yv| self.loss.eval(yv, 0.0)).sum();
         }
-        let xs = x.select_rows(s);
-        let p = if xs.rows() <= xs.cols() {
-            rls::loo_primal(&xs, y, cfg.lambda)
-        } else {
-            rls::loo_dual(&xs, y, cfg.lambda)
+        rls::loo_subset_criterion(self.x, s, self.y, self.lambda, self.loss)
+    }
+
+    fn forward_scores(&self) -> Vec<f64> {
+        let n = self.x.rows();
+        let mut scores = vec![BIG; n];
+        for i in 0..n {
+            if self.s.contains(&i) {
+                continue;
+            }
+            let mut t = self.s.clone();
+            t.push(i);
+            scores[i] = self.criterion(&t);
+        }
+        scores
+    }
+
+    fn deletion_scores(&self) -> Vec<f64> {
+        let mut del = vec![BIG; self.s.len()];
+        for pos in 0..self.s.len() {
+            let mut t = self.s.clone();
+            t.remove(pos);
+            del[pos] = self.criterion(&t);
+        }
+        del
+    }
+
+    /// LOO criterion of `S ∪ {i}` — candidates are independent, so a
+    /// forced round scores only its own candidate.
+    fn forward_score_one(&self, i: usize) -> f64 {
+        let mut t = self.s.clone();
+        t.push(i);
+        self.criterion(&t)
+    }
+
+    /// Grow step: forward addition + ν-thresholded corrective deletions.
+    fn grow_round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let n = self.x.rows();
+        self.steps += 1;
+        let (b, score_b) = match forced {
+            Some(b) => {
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(!self.s.contains(&b), "feature {b} already selected");
+                (b, self.forward_score_one(b))
+            }
+            None => {
+                let scores = self.forward_scores();
+                match argmin(&scores) {
+                    Some(b) => (b, scores[b]),
+                    None => return Ok(CoreStep::Exhausted),
+                }
+            }
         };
-        cfg.loss.total(y, &p)
+        let fwd_gain = self.cur - score_b;
+        self.s.push(b);
+        self.cur = score_b;
+        let round = Round { feature: b, criterion: self.cur };
+        self.rounds.push(round.clone());
+        if fwd_gain > 0.0 {
+            // delete while cheap relative to the forward gain
+            while self.s.len() > 1 && self.steps < self.max_steps {
+                self.steps += 1;
+                let del = self.deletion_scores();
+                let pos = argmin(&del).unwrap();
+                if del[pos] - self.cur < self.nu * fwd_gain {
+                    self.s.remove(pos);
+                    self.cur = del[pos];
+                } else {
+                    break;
+                }
+            }
+        }
+        Ok(CoreStep::Committed(round))
+    }
+
+    /// Swap step at |S| = k: overshoot to k+1 with the best addition,
+    /// then force the cheapest deletion back to k. A net swap strictly
+    /// decreases the criterion (guaranteeing termination); when the
+    /// forced deletion would just remove the overshoot feature, the set
+    /// is swap-stable and the session is done.
+    fn swap_round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let n = self.x.rows();
+        self.steps += 1;
+        // the overshoot feature's own score is never recorded — only the
+        // argmin needs the scan, so a forced swap skips it entirely
+        let b = match forced {
+            Some(b) => {
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(!self.s.contains(&b), "feature {b} already selected");
+                b
+            }
+            None => {
+                let scores = self.forward_scores();
+                match argmin(&scores) {
+                    Some(b) => b,
+                    None => {
+                        self.stable = true;
+                        return Ok(CoreStep::Exhausted);
+                    }
+                }
+            }
+        };
+        self.s.push(b);
+        let del = self.deletion_scores();
+        let pos = argmin(&del).unwrap();
+        if self.s[pos] == b || del[pos] >= self.cur {
+            self.s.pop(); // no improving swap exists — stable
+            self.stable = true;
+            return Ok(CoreStep::Exhausted);
+        }
+        self.s.remove(pos);
+        self.cur = del[pos];
+        let round = Round { feature: b, criterion: self.cur };
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+}
+
+impl SessionCore for FobaCore<'_> {
+    fn target_reached(&self) -> bool {
+        // complete once k features stand AND the swap phase (if enabled)
+        // has converged
+        self.s.len() >= self.k
+            && (!self.swap || self.k >= self.x.rows() || self.stable)
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        if self.s.len() < self.k {
+            if self.steps >= self.max_steps {
+                return Ok(CoreStep::Exhausted);
+            }
+            self.grow_round(forced)
+        } else if self.swap && self.k < self.x.rows() && !self.stable {
+            if self.steps >= self.max_steps {
+                return Ok(CoreStep::Exhausted);
+            }
+            self.swap_round(forced)
+        } else {
+            Ok(CoreStep::Exhausted)
+        }
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.s.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        if self.s.is_empty() {
+            return Ok(Vec::new());
+        }
+        let xs = self.x.select_rows(&self.s);
+        Ok(rls::train(&xs, self.y, self.lambda))
+    }
+}
+
+impl SessionSelector for Foba {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(self.nu > 0.0, "ν must be positive");
+        ensure!(x.cols() == y.len(), "shape mismatch");
+        let mut core = FobaCore {
+            x,
+            y,
+            lambda: cfg.lambda,
+            loss: cfg.loss,
+            k: cfg.k,
+            nu: self.nu,
+            swap: self.swap,
+            max_steps: self.max_steps,
+            s: Vec::new(),
+            rounds: Vec::new(),
+            steps: 0,
+            cur: 0.0,
+            stable: false,
+        };
+        core.cur = core.criterion(&[]);
+        Ok(Box::new(PolicySession::new(core, cfg)?))
     }
 }
 
@@ -76,90 +272,7 @@ impl Selector for Foba {
         y: &[f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<SelectionResult> {
-        let n = x.rows();
-        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-        ensure!(self.nu > 0.0, "ν must be positive");
-
-        let mut s: Vec<usize> = Vec::new();
-        let mut rounds = Vec::new();
-        let mut steps = 0usize;
-        let mut cur = self.criterion(x, &s, y, cfg);
-
-        // phase helpers ----------------------------------------------------
-        let forward_scores = |s: &[usize]| -> Vec<f64> {
-            let mut scores = vec![BIG; n];
-            for i in 0..n {
-                if s.contains(&i) {
-                    continue;
-                }
-                let mut t = s.to_vec();
-                t.push(i);
-                scores[i] = self.criterion(x, &t, y, cfg);
-            }
-            scores
-        };
-        let deletion_scores = |s: &[usize]| -> Vec<f64> {
-            let mut del = vec![BIG; s.len()];
-            for pos in 0..s.len() {
-                let mut t = s.to_vec();
-                t.remove(pos);
-                del[pos] = self.criterion(x, &t, y, cfg);
-            }
-            del
-        };
-
-        // grow phase: forward steps with ν-thresholded corrective deletions
-        while s.len() < cfg.k && steps < self.max_steps {
-            steps += 1;
-            let scores = forward_scores(&s);
-            let Some(b) = argmin(&scores) else { break };
-            let fwd_gain = cur - scores[b];
-            s.push(b);
-            cur = scores[b];
-            rounds.push(Round { feature: b, criterion: cur });
-            if fwd_gain <= 0.0 {
-                continue; // no improvement; FoBa keeps growing toward k
-            }
-            // delete while cheap relative to the forward gain
-            while s.len() > 1 && steps < self.max_steps {
-                steps += 1;
-                let del = deletion_scores(&s);
-                let pos = argmin(&del).unwrap();
-                if del[pos] - cur < self.nu * fwd_gain {
-                    s.remove(pos);
-                    cur = del[pos];
-                } else {
-                    break;
-                }
-            }
-        }
-
-        // swap phase at |S| = k: overshoot to k+1 with the best addition,
-        // then force the cheapest deletion back to k. A net swap strictly
-        // decreases the criterion (guaranteeing termination); when the
-        // forced deletion would just remove the overshoot feature, the
-        // set is swap-stable and we stop.
-        while self.swap && s.len() == cfg.k && cfg.k < n && steps < self.max_steps {
-            steps += 1;
-            let scores = forward_scores(&s);
-            let Some(b) = argmin(&scores) else { break };
-            s.push(b);
-            let del = deletion_scores(&s);
-            let pos = argmin(&del).unwrap();
-            if s[pos] == b || del[pos] >= cur {
-                s.pop(); // no improving swap exists — stable
-                break;
-            }
-            let removed = s.remove(pos);
-            cur = del[pos];
-            rounds.push(Round { feature: b, criterion: cur });
-            let _ = removed;
-        }
-
-        let xs = x.select_rows(&s);
-        let weights = rls::train(&xs, y, cfg.lambda);
-        Ok(SelectionResult { selected: s, rounds, weights })
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -173,7 +286,7 @@ mod tests {
     fn reaches_k_on_easy_data() {
         let (ds, mut support) =
             crate::data::synthetic::sparse_regression(200, 20, 4, 0.05, 31);
-        let cfg = SelectionConfig { k: 4, lambda: 0.1, loss: Loss::Squared };
+        let cfg = SelectionConfig { k: 4, lambda: 0.1, loss: Loss::Squared, ..Default::default() };
         let r = Foba::default().select(&ds.x, &ds.y, &cfg).unwrap();
         let mut sel = r.selected.clone();
         sel.sort_unstable();
@@ -187,7 +300,7 @@ mod tests {
         // fire and FoBa == greedy forward selection with the same
         // criterion (wrapper-style), which == greedy RLS.
         let ds = crate::data::synthetic::two_gaussians(60, 12, 4, 1.2, 17);
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::Squared };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::Squared, ..Default::default() };
         let foba = Foba { nu: 1e-12, swap: false, max_steps: 10_000 };
         let rf = foba.select(&ds.x, &ds.y, &cfg).unwrap();
         let rg = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
@@ -211,7 +324,7 @@ mod tests {
             x[(2, j)] = 0.9 * (a + b) + 0.30 * rng.normal();
             y[j] = a + b;
         }
-        let cfg = SelectionConfig { k: 2, lambda: 1e-3, loss: Loss::Squared };
+        let cfg = SelectionConfig { k: 2, lambda: 1e-3, loss: Loss::Squared, ..Default::default() };
         let greedy = GreedyRls.select(&x, &y, &cfg).unwrap();
         assert_eq!(greedy.selected[0], 2, "bait feature should tempt greedy");
         let foba = Foba { nu: 0.9, swap: true, max_steps: 10_000 }
@@ -225,10 +338,10 @@ mod tests {
     #[test]
     fn rejects_bad_config() {
         let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 1);
-        let cfg = SelectionConfig { k: 9, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 9, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         assert!(Foba::default().select(&ds.x, &ds.y, &cfg).is_err());
         let foba = Foba { nu: 0.0, swap: true, max_steps: 10 };
-        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         assert!(foba.select(&ds.x, &ds.y, &cfg).is_err());
     }
 }

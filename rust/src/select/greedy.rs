@@ -16,8 +16,13 @@
 //! The same state type backs the PJRT engine's numerical cross-checks and
 //! the microbenchmarks, so `GreedyState` is public.
 
+use std::borrow::Cow;
+
 use anyhow::ensure;
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::linalg::{dot, Matrix};
 use crate::metrics::Loss;
@@ -111,6 +116,61 @@ impl GreedyState {
             scores[i] = score_candidate(v, c, &self.a, &self.d, y, loss);
         }
         scores
+    }
+
+    /// Score a single candidate `b`, bit-identical to the value
+    /// [`GreedyState::score_all`] would report for it, in O(m) instead of
+    /// O(mn). `score_all` processes the active candidates in blocks of 4,
+    /// so the exact arithmetic for `b` depends on its position in the
+    /// active list: this recomputes just `b`'s quad (or its scalar
+    /// remainder slot). Forced session rounds (warm-start replay, the
+    /// fixed-order CV baseline) use this so replays stay cheap while
+    /// remaining bit-identical to a greedy run's recorded criterion.
+    ///
+    /// Panics if `b` is not an active candidate (already selected or out
+    /// of range) — the same contract as [`GreedyState::commit`].
+    pub fn score_of(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        loss: Loss,
+        b: usize,
+    ) -> f64 {
+        let m = self.m;
+        let active: Vec<usize> = (0..self.n)
+            .filter(|&i| self.cand_mask[i] != 0.0)
+            .collect();
+        let pos = active
+            .iter()
+            .position(|&i| i == b)
+            .expect("candidate must be active");
+        let quad_start = pos - pos % 4;
+        if quad_start + 4 <= active.len() {
+            let [i0, i1, i2, i3] = [
+                active[quad_start],
+                active[quad_start + 1],
+                active[quad_start + 2],
+                active[quad_start + 3],
+            ];
+            let e = score_candidates4(
+                [x.row(i0), x.row(i1), x.row(i2), x.row(i3)],
+                [
+                    &self.ct[i0 * m..(i0 + 1) * m],
+                    &self.ct[i1 * m..(i1 + 1) * m],
+                    &self.ct[i2 * m..(i2 + 1) * m],
+                    &self.ct[i3 * m..(i3 + 1) * m],
+                ],
+                &self.a,
+                &self.d,
+                y,
+                loss,
+            );
+            e[pos - quad_start]
+        } else {
+            let v = x.row(b);
+            let c = &self.ct[b * m..(b + 1) * m];
+            score_candidate(v, c, &self.a, &self.d, y, loss)
+        }
     }
 
     /// Commit feature `b` (Algorithm 3 lines 23–30): update a, d, and the
@@ -279,9 +339,109 @@ fn score_candidates4(
     e
 }
 
-/// The paper's algorithm as a [`Selector`].
+/// Round-by-round engine of Algorithm 3: [`GreedyState`] plus the round
+/// log. Owns or borrows its data (`Cow`) so the same core backs both
+/// feature selection (borrowed `X`) and kernel-center selection (owned
+/// gram matrix, see [`super::centers`]).
+pub(crate) struct GreedyCore<'a> {
+    x: Cow<'a, Matrix>,
+    y: Cow<'a, [f64]>,
+    loss: Loss,
+    k: usize,
+    st: GreedyState,
+    rounds: Vec<Round>,
+}
+
+impl<'a> GreedyCore<'a> {
+    pub(crate) fn new(
+        x: Cow<'a, Matrix>,
+        y: Cow<'a, [f64]>,
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Self> {
+        ensure!(cfg.k <= x.rows(), "k={} > n={}", cfg.k, x.rows());
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(x.cols() == y.len(), "shape mismatch");
+        ensure!(
+            x.as_slice().iter().all(|v| v.is_finite()),
+            "X contains non-finite values"
+        );
+        ensure!(
+            y.iter().all(|v| v.is_finite()),
+            "y contains non-finite values"
+        );
+        let st = GreedyState::init(&x, &y, cfg.lambda);
+        Ok(GreedyCore {
+            loss: cfg.loss,
+            k: cfg.k,
+            st,
+            rounds: Vec::new(),
+            x,
+            y,
+        })
+    }
+}
+
+impl SessionCore for GreedyCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.st.selected.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let (b, criterion) = match forced {
+            Some(b) => {
+                ensure!(
+                    b < self.st.n,
+                    "feature {b} out of range (n={})",
+                    self.st.n
+                );
+                ensure!(
+                    self.st.cand_mask[b] != 0.0,
+                    "feature {b} already selected"
+                );
+                // O(m) single-candidate path, bit-identical to score_all
+                (b, self.st.score_of(&self.x, &self.y, self.loss, b))
+            }
+            None => {
+                let scores = self.st.score_all(&self.x, &self.y, self.loss);
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+                (b, scores[b])
+            }
+        };
+        let round = Round { feature: b, criterion };
+        self.st.commit(&self.x, b);
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.st.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        Ok(self.st.weights(&self.x))
+    }
+}
+
+/// The paper's algorithm as a [`Selector`] / [`SessionSelector`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GreedyRls;
+
+impl SessionSelector for GreedyRls {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let core = GreedyCore::new(Cow::Borrowed(x), Cow::Borrowed(y), cfg)?;
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
 
 impl Selector for GreedyRls {
     fn name(&self) -> &'static str {
@@ -294,27 +454,7 @@ impl Selector for GreedyRls {
         y: &[f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<SelectionResult> {
-        ensure!(cfg.k <= x.rows(), "k={} > n={}", cfg.k, x.rows());
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-        ensure!(
-            x.as_slice().iter().all(|v| v.is_finite()),
-            "X contains non-finite values"
-        );
-        ensure!(
-            y.iter().all(|v| v.is_finite()),
-            "y contains non-finite values"
-        );
-        let mut st = GreedyState::init(x, y, cfg.lambda);
-        let mut rounds = Vec::with_capacity(cfg.k);
-        for _ in 0..cfg.k {
-            let scores = st.score_all(x, y, cfg.loss);
-            let b = argmin(&scores)
-                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
-            rounds.push(Round { feature: b, criterion: scores[b] });
-            st.commit(x, b);
-        }
-        let weights = st.weights(x);
-        Ok(SelectionResult { selected: st.selected, rounds, weights })
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -424,11 +564,45 @@ mod tests {
         });
     }
 
+    /// The O(m) single-candidate path must reproduce score_all exactly
+    /// (bit-for-bit), for every quad/remainder position of the active
+    /// list — warm-start bit-identity depends on this.
+    #[test]
+    fn score_of_is_bit_identical_to_score_all() {
+        forall_seeds(10, |seed| {
+            let mut g = Gen::new(seed + 881);
+            let n = g.size(3, 13);
+            let m = g.size(3, 11);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.labels(m);
+            let mut st = GreedyState::init(&x, &y, lam);
+            if n > 2 {
+                st.commit(&x, 1); // make the active list non-contiguous
+            }
+            for loss in [Loss::Squared, Loss::ZeroOne] {
+                let all = st.score_all(&x, &y, loss);
+                for i in 0..n {
+                    if st.cand_mask[i] == 0.0 {
+                        continue;
+                    }
+                    let one = st.score_of(&x, &y, loss, i);
+                    assert_eq!(
+                        one.to_bits(),
+                        all[i].to_bits(),
+                        "cand {i}: {one} vs {}",
+                        all[i]
+                    );
+                }
+            }
+        });
+    }
+
     #[test]
     fn selects_planted_features_first() {
         let (ds, support) =
             crate::data::synthetic::sparse_regression(300, 25, 3, 0.05, 11);
-        let cfg = SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared };
+        let cfg = SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared, ..Default::default() };
         let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
         let mut sel = r.selected.clone();
         sel.sort_unstable();
@@ -443,7 +617,7 @@ mod tests {
         // on easy data the curve should be monotone decreasing
         let (ds, _) =
             crate::data::synthetic::sparse_regression(200, 20, 5, 0.1, 3);
-        let cfg = SelectionConfig { k: 5, lambda: 0.5, loss: Loss::Squared };
+        let cfg = SelectionConfig { k: 5, lambda: 0.5, loss: Loss::Squared, ..Default::default() };
         let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
         let curve = r.criterion_curve();
         for w in curve.windows(2) {
@@ -455,7 +629,7 @@ mod tests {
     fn no_feature_selected_twice() {
         let ds = crate::data::synthetic::two_gaussians(60, 15, 5, 1.0, 5);
         let cfg =
-            SelectionConfig { k: 15, lambda: 1.0, loss: Loss::ZeroOne };
+            SelectionConfig { k: 15, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
         let mut sel = r.selected.clone();
         sel.sort_unstable();
@@ -466,14 +640,14 @@ mod tests {
     #[test]
     fn k_too_large_errors() {
         let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 6);
-        let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         assert!(GreedyRls.select(&ds.x, &ds.y, &cfg).is_err());
     }
 
     #[test]
     fn non_finite_inputs_rejected() {
         let mut ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 6);
-        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         ds.x[(1, 3)] = f64::NAN;
         let err = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap_err();
         assert!(err.to_string().contains("non-finite"), "{err}");
@@ -486,7 +660,7 @@ mod tests {
     #[test]
     fn weights_match_retrained_rls() {
         let ds = crate::data::synthetic::two_gaussians(80, 12, 4, 1.5, 7);
-        let cfg = SelectionConfig { k: 4, lambda: 0.7, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 4, lambda: 0.7, loss: Loss::ZeroOne, ..Default::default() };
         let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
         let xs = ds.x.select_rows(&r.selected);
         let w_direct = crate::rls::train(&xs, &ds.y, cfg.lambda);

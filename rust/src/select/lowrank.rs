@@ -10,24 +10,134 @@
 
 use anyhow::ensure;
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::linalg::{dot, Matrix};
+use crate::metrics::Loss;
 
-/// Algorithm 2 as a [`Selector`].
+/// Round-by-round engine of Algorithm 2: the full m × m `G` is the state,
+/// refreshed per candidate with the SMW identity (eq. 10).
+struct LowRankCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    loss: Loss,
+    k: usize,
+    /// G = (K + λI)⁻¹ for the current S.
+    g: Matrix,
+    selected: Vec<usize>,
+    in_s: Vec<bool>,
+    rounds: Vec<Round>,
+}
+
+impl LowRankCore<'_> {
+    /// LOO criterion of `S ∪ {i}` via the SMW-refreshed G~ — candidates
+    /// are independent, so a forced round scores only its own candidate.
+    fn score_one(&self, i: usize) -> f64 {
+        let m = self.x.cols();
+        let v = self.x.row(i);
+        // line 9: G~ = G − Gv (1 + vᵀGv)⁻¹ (vᵀG)  — O(m²)
+        let gv = self.g.matvec(v);
+        let denom = 1.0 + dot(v, &gv);
+        // line 10: ã = G~ y — equivalently a − Gv (vᵀ a)/denom,
+        // but Algorithm 2 recomputes it from G~; we form G~
+        // explicitly to stay faithful to the O(m²) structure.
+        let mut gt = self.g.clone();
+        for r in 0..m {
+            let f = gv[r] / denom;
+            let row = gt.row_mut(r);
+            for (c_, &gvc) in row.iter_mut().zip(&gv) {
+                *c_ -= f * gvc;
+            }
+        }
+        let at = gt.matvec(self.y);
+        // lines 12–15: LOO via eq. 8 on the diagonal of G~
+        let mut e = 0.0;
+        for j in 0..m {
+            let p = self.y[j] - at[j] / gt[(j, j)];
+            e += self.loss.eval(self.y[j], p);
+        }
+        e
+    }
+}
+
+impl SessionCore for LowRankCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.selected.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let n = self.x.rows();
+        let m = self.x.cols();
+        let (b, criterion) = match forced {
+            Some(b) => {
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(!self.in_s[b], "feature {b} already selected");
+                (b, self.score_one(b))
+            }
+            None => {
+                let mut scores = vec![BIG; n];
+                for i in 0..n {
+                    if self.in_s[i] {
+                        continue;
+                    }
+                    scores[i] = self.score_one(i);
+                }
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+                (b, scores[b])
+            }
+        };
+        let round = Round { feature: b, criterion };
+
+        // lines 21–24: commit b into G (SMW), a implied by G y
+        let v = self.x.row(b);
+        let gv = self.g.matvec(v);
+        let denom = 1.0 + dot(v, &gv);
+        for r in 0..m {
+            let f = gv[r] / denom;
+            let row = self.g.row_mut(r);
+            for (c_, &gvc) in row.iter_mut().zip(&gv) {
+                *c_ -= f * gvc;
+            }
+        }
+        self.in_s[b] = true;
+        self.selected.push(b);
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        // line 26: w = X_S a with a = G y
+        let a = self.g.matvec(self.y);
+        Ok(self
+            .selected
+            .iter()
+            .map(|&i| dot(self.x.row(i), &a))
+            .collect())
+    }
+}
+
+/// Algorithm 2 as a [`Selector`] / [`SessionSelector`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LowRankLsSvm;
 
-impl Selector for LowRankLsSvm {
-    fn name(&self) -> &'static str {
-        "lowrank-lssvm"
-    }
-
-    fn select(
+impl SessionSelector for LowRankLsSvm {
+    fn begin<'a>(
         &self,
-        x: &Matrix,
-        y: &[f64],
+        x: &'a Matrix,
+        y: &'a [f64],
         cfg: &SelectionConfig,
-    ) -> anyhow::Result<SelectionResult> {
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
         let n = x.rows();
         let m = x.cols();
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
@@ -40,64 +150,32 @@ impl Selector for LowRankLsSvm {
         for v in g.as_mut_slice().iter_mut() {
             *v *= inv;
         }
-        let mut selected: Vec<usize> = Vec::new();
-        let mut in_s = vec![false; n];
-        let mut rounds = Vec::with_capacity(cfg.k);
+        let core = LowRankCore {
+            x,
+            y,
+            loss: cfg.loss,
+            k: cfg.k,
+            g,
+            selected: Vec::new(),
+            in_s: vec![false; n],
+            rounds: Vec::new(),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
 
-        while selected.len() < cfg.k {
-            let mut scores = vec![BIG; n];
-            for i in 0..n {
-                if in_s[i] {
-                    continue;
-                }
-                let v = x.row(i);
-                // line 9: G~ = G − Gv (1 + vᵀGv)⁻¹ (vᵀG)  — O(m²)
-                let gv = g.matvec(v);
-                let denom = 1.0 + dot(v, &gv);
-                // line 10: ã = G~ y — equivalently a − Gv (vᵀ a)/denom,
-                // but Algorithm 2 recomputes it from G~; we form G~
-                // explicitly to stay faithful to the O(m²) structure.
-                let mut gt = g.clone();
-                for r in 0..m {
-                    let f = gv[r] / denom;
-                    let row = gt.row_mut(r);
-                    for (c_, &gvc) in row.iter_mut().zip(&gv) {
-                        *c_ -= f * gvc;
-                    }
-                }
-                let at = gt.matvec(y);
-                // lines 12–15: LOO via eq. 8 on the diagonal of G~
-                let mut e = 0.0;
-                for j in 0..m {
-                    let p = y[j] - at[j] / gt[(j, j)];
-                    e += cfg.loss.eval(y[j], p);
-                }
-                scores[i] = e;
-            }
-            let b = argmin(&scores)
-                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
-            rounds.push(Round { feature: b, criterion: scores[b] });
+impl Selector for LowRankLsSvm {
+    fn name(&self) -> &'static str {
+        "lowrank-lssvm"
+    }
 
-            // lines 21–24: commit b into G (SMW), a implied by G y
-            let v = x.row(b);
-            let gv = g.matvec(v);
-            let denom = 1.0 + dot(v, &gv);
-            for r in 0..m {
-                let f = gv[r] / denom;
-                let row = g.row_mut(r);
-                for (c_, &gvc) in row.iter_mut().zip(&gv) {
-                    *c_ -= f * gvc;
-                }
-            }
-            in_s[b] = true;
-            selected.push(b);
-        }
-
-        // line 26: w = X_S a with a = G y
-        let a = g.matvec(y);
-        let weights: Vec<f64> =
-            selected.iter().map(|&i| dot(x.row(i), &a)).collect();
-        Ok(SelectionResult { selected, rounds, weights })
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -120,7 +198,7 @@ mod tests {
             let x = g.matrix(n, m);
             let y = g.labels(m);
             for loss in [Loss::Squared, Loss::ZeroOne] {
-                let cfg = SelectionConfig { k, lambda: lam, loss };
+                let cfg = SelectionConfig { k, lambda: lam, loss, ..Default::default() };
                 let r2 = LowRankLsSvm.select(&x, &y, &cfg).unwrap();
                 let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
                 assert_eq!(r2.selected, r3.selected, "loss {loss:?}");
@@ -143,16 +221,16 @@ mod tests {
         let mut g = Gen::new(0);
         let x = g.matrix(4, 6);
         let y = g.labels(6);
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         assert!(LowRankLsSvm.select(&x, &y, &cfg).is_err());
-        let cfg = SelectionConfig { k: 2, lambda: 0.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 2, lambda: 0.0, loss: Loss::ZeroOne, ..Default::default() };
         assert!(LowRankLsSvm.select(&x, &y, &cfg).is_err());
     }
 
     #[test]
     fn selects_k_distinct_features() {
         let ds = crate::data::synthetic::two_gaussians(40, 10, 4, 1.0, 9);
-        let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = LowRankLsSvm.select(&ds.x, &ds.y, &cfg).unwrap();
         let mut s = r.selected.clone();
         s.sort_unstable();

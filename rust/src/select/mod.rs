@@ -19,6 +19,10 @@
 //! All selectors consume the same feature-major `X` (n × m) and return a
 //! [`SelectionResult`]; equivalence across Algorithms 1–3 is enforced by
 //! `rust/tests/equivalence.rs` property tests.
+//!
+//! Every selector also implements [`SessionSelector`] — the stepwise
+//! [`session`] API with early stopping ([`StopPolicy`]), warm starts, and
+//! per-round observation; [`Selector::select`] is its one-shot shim.
 
 pub mod backward;
 pub mod centers;
@@ -29,7 +33,13 @@ pub mod lowrank;
 pub mod nfold;
 pub mod random;
 pub mod rankrls;
+pub mod session;
 pub mod wrapper;
+
+pub use session::{
+    drive, run_to_completion, NoopObserver, Observer, Session, SessionSelector,
+    SessionState, StepOutcome, StopPolicy, StopReason,
+};
 
 use crate::linalg::Matrix;
 use crate::metrics::Loss;
@@ -39,19 +49,86 @@ use crate::rls::Predictor;
 pub const BIG: f64 = 1e30;
 
 /// Configuration shared by every selector.
+///
+/// Construct with [`SelectionConfig::builder`], or a struct literal with
+/// `..Default::default()` for the new fields.
 #[derive(Clone, Copy, Debug)]
 pub struct SelectionConfig {
-    /// Number of features to select.
+    /// Number of features to select (the session's natural target).
     pub k: usize,
     /// Regularization parameter λ > 0.
     pub lambda: f64,
     /// LOO loss used as the selection criterion.
     pub loss: Loss,
+    /// Early-stopping policy for session-driven runs. The default
+    /// (`StopPolicy::KBudget(usize::MAX)`) never fires, so the run goes
+    /// to `k` — the pre-session behavior.
+    pub stop: StopPolicy,
 }
 
 impl Default for SelectionConfig {
     fn default() -> Self {
-        SelectionConfig { k: 10, lambda: 1.0, loss: Loss::ZeroOne }
+        SelectionConfig {
+            k: 10,
+            lambda: 1.0,
+            loss: Loss::ZeroOne,
+            stop: StopPolicy::default(),
+        }
+    }
+}
+
+impl SelectionConfig {
+    /// Fluent builder starting from [`SelectionConfig::default`].
+    pub fn builder() -> SelectionConfigBuilder {
+        SelectionConfigBuilder { cfg: SelectionConfig::default() }
+    }
+}
+
+/// Builder for [`SelectionConfig`]:
+/// `SelectionConfig::builder().k(25).lambda(1.0).loss(Loss::Squared).build()`.
+#[derive(Clone, Debug)]
+pub struct SelectionConfigBuilder {
+    cfg: SelectionConfig,
+}
+
+impl SelectionConfigBuilder {
+    /// Number of features to select.
+    pub fn k(mut self, k: usize) -> Self {
+        self.cfg.k = k;
+        self
+    }
+
+    /// Regularization parameter λ > 0.
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.cfg.lambda = lambda;
+        self
+    }
+
+    /// LOO loss used as the selection criterion.
+    pub fn loss(mut self, loss: Loss) -> Self {
+        self.cfg.loss = loss;
+        self
+    }
+
+    /// Early-stopping policy.
+    pub fn stop(mut self, stop: StopPolicy) -> Self {
+        self.cfg.stop = stop;
+        self
+    }
+
+    /// Shorthand for [`StopPolicy::Plateau`].
+    pub fn plateau(self, patience: usize, min_rel_improvement: f64) -> Self {
+        self.stop(StopPolicy::Plateau { patience, min_rel_improvement })
+    }
+
+    /// Shorthand for [`StopPolicy::TimeBudget`].
+    pub fn time_budget(self, budget: std::time::Duration) -> Self {
+        self.stop(StopPolicy::TimeBudget(budget))
+    }
+
+    /// Finalize the configuration.
+    pub fn build(self) -> SelectionConfig {
+        self.cfg
     }
 }
 
@@ -90,7 +167,10 @@ impl SelectionResult {
     }
 }
 
-/// Common interface so the coordinator / benches can swap algorithms.
+/// Common one-shot interface so the coordinator / benches can swap
+/// algorithms. Every implementation in this crate is a thin shim over its
+/// [`SessionSelector`] (`begin` + [`run_to_completion`]) — use the session
+/// API directly for early stopping, warm starts, or progress observation.
 pub trait Selector {
     /// Human-readable name for tables and logs.
     fn name(&self) -> &'static str;
@@ -141,6 +221,32 @@ mod tests {
         assert_eq!(argmin(&[BIG, f64::NAN, 5.0]), Some(2));
         assert_eq!(argmin(&[BIG, BIG]), None);
         assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn builder_sets_fields() {
+        let cfg = SelectionConfig::builder()
+            .k(25)
+            .lambda(0.5)
+            .loss(Loss::Squared)
+            .plateau(3, 1e-2)
+            .build();
+        assert_eq!(cfg.k, 25);
+        assert_eq!(cfg.lambda, 0.5);
+        assert_eq!(cfg.loss, Loss::Squared);
+        assert_eq!(
+            cfg.stop,
+            StopPolicy::Plateau { patience: 3, min_rel_improvement: 1e-2 }
+        );
+        let d = SelectionConfig::default();
+        assert_eq!(d.stop, StopPolicy::KBudget(usize::MAX));
+        let t = SelectionConfig::builder()
+            .time_budget(std::time::Duration::from_secs(5))
+            .build();
+        assert_eq!(
+            t.stop,
+            StopPolicy::TimeBudget(std::time::Duration::from_secs(5))
+        );
     }
 
     #[test]

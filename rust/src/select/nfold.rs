@@ -19,6 +19,9 @@
 
 use anyhow::ensure;
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::linalg::{dot, Cholesky, Matrix};
 use crate::metrics::Loss;
@@ -89,47 +92,51 @@ impl NFoldState {
         }
     }
 
+    /// CV criterion of S ∪ {i} for one candidate ([`BIG`] when a fold
+    /// block fails to factor). Candidates are independent, so forced
+    /// session rounds score only their own candidate through this same
+    /// code path.
+    fn score_one(&self, x: &Matrix, y: &[f64], loss: Loss, i: usize) -> f64 {
+        let m = self.m;
+        let v = x.row(i);
+        let c = &self.ct[i * m..(i + 1) * m];
+        let denom = 1.0 + dot(v, c);
+        let va = dot(v, &self.a);
+        let mut e = 0.0;
+        for (h, block) in self.folds.iter().zip(&self.blocks) {
+            let s = h.len();
+            // B̃ = B − u_H c_Hᵀ,  ã_H = a_H − u_H·va
+            let mut bt = vec![0.0; s * s];
+            let mut at = vec![0.0; s];
+            for (r, &jr) in h.iter().enumerate() {
+                let u_r = c[jr] / denom;
+                at[r] = self.a[jr] - u_r * va;
+                for (t, &jt) in h.iter().enumerate() {
+                    bt[r * s + t] = block[r * s + t] - u_r * c[jt];
+                }
+            }
+            // p_H = y_H − B̃⁻¹ ã_H
+            let bmat = Matrix::from_vec(s, s, bt);
+            let Some(ch) = Cholesky::factor(&bmat) else {
+                return BIG;
+            };
+            let sol = ch.solve(&at);
+            for (r, &jr) in h.iter().enumerate() {
+                let p = y[jr] - sol[r];
+                e += loss.eval(y[jr], p);
+            }
+        }
+        e
+    }
+
     /// CV criterion of S ∪ {i} for every candidate.
     fn score_all(&self, x: &Matrix, y: &[f64], loss: Loss) -> Vec<f64> {
-        let m = self.m;
         let mut scores = vec![BIG; self.n];
         for i in 0..self.n {
             if self.cand_mask[i] == 0.0 {
                 continue;
             }
-            let v = x.row(i);
-            let c = &self.ct[i * m..(i + 1) * m];
-            let denom = 1.0 + dot(v, c);
-            let va = dot(v, &self.a);
-            let mut e = 0.0;
-            let mut ok = true;
-            for (h, block) in self.folds.iter().zip(&self.blocks) {
-                let s = h.len();
-                // B̃ = B − u_H c_Hᵀ,  ã_H = a_H − u_H·va
-                let mut bt = vec![0.0; s * s];
-                let mut at = vec![0.0; s];
-                for (r, &jr) in h.iter().enumerate() {
-                    let u_r = c[jr] / denom;
-                    at[r] = self.a[jr] - u_r * va;
-                    for (t, &jt) in h.iter().enumerate() {
-                        bt[r * s + t] = block[r * s + t] - u_r * c[jt];
-                    }
-                }
-                // p_H = y_H − B̃⁻¹ ã_H
-                let bmat = Matrix::from_vec(s, s, bt);
-                let Some(ch) = Cholesky::factor(&bmat) else {
-                    ok = false;
-                    break;
-                };
-                let sol = ch.solve(&at);
-                for (r, &jr) in h.iter().enumerate() {
-                    let p = y[jr] - sol[r];
-                    e += loss.eval(y[jr], p);
-                }
-            }
-            if ok {
-                scores[i] = e;
-            }
+            scores[i] = self.score_one(x, y, loss, i);
         }
         scores
     }
@@ -166,6 +173,99 @@ impl NFoldState {
     }
 }
 
+/// Round-by-round engine: [`NFoldState`] plus the round log.
+struct NFoldCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    loss: Loss,
+    k: usize,
+    st: NFoldState,
+    rounds: Vec<Round>,
+}
+
+impl SessionCore for NFoldCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.st.selected.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let (b, criterion) = match forced {
+            Some(b) => {
+                ensure!(
+                    b < self.st.n,
+                    "feature {b} out of range (n={})",
+                    self.st.n
+                );
+                ensure!(
+                    self.st.cand_mask[b] != 0.0,
+                    "feature {b} already selected"
+                );
+                let s = self.st.score_one(self.x, self.y, self.loss, b);
+                ensure!(s < BIG, "feature {b} is not evaluable this round");
+                (b, s)
+            }
+            None => {
+                let scores = self.st.score_all(self.x, self.y, self.loss);
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+                (b, scores[b])
+            }
+        };
+        let round = Round { feature: b, criterion };
+        self.st.commit(self.x, b);
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.st.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        Ok(self
+            .st
+            .selected
+            .iter()
+            .map(|&i| dot(self.x.row(i), &self.st.a))
+            .collect())
+    }
+}
+
+impl SessionSelector for NFoldGreedy {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let n = x.rows();
+        let m = x.cols();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(self.folds >= 2 && self.folds <= m, "bad fold count");
+        ensure!(m == y.len(), "shape mismatch");
+
+        let mut rng = Pcg64::new(self.seed, 47);
+        let f = crate::data::folds::Folds::new(m, self.folds, &mut rng);
+        let fold_vec: Vec<Vec<usize>> =
+            (0..f.k()).map(|h| f.test_indices(h).to_vec()).collect();
+
+        let core = NFoldCore {
+            x,
+            y,
+            loss: cfg.loss,
+            k: cfg.k,
+            st: NFoldState::init(x, y, cfg.lambda, fold_vec),
+            rounds: Vec::new(),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
 impl Selector for NFoldGreedy {
     fn name(&self) -> &'static str {
         "nfold-greedy"
@@ -177,29 +277,7 @@ impl Selector for NFoldGreedy {
         y: &[f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<SelectionResult> {
-        let n = x.rows();
-        let m = x.cols();
-        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-        ensure!(self.folds >= 2 && self.folds <= m, "bad fold count");
-
-        let mut rng = Pcg64::new(self.seed, 47);
-        let f = crate::data::folds::Folds::new(m, self.folds, &mut rng);
-        let fold_vec: Vec<Vec<usize>> =
-            (0..f.k()).map(|h| f.test_indices(h).to_vec()).collect();
-
-        let mut st = NFoldState::init(x, y, cfg.lambda, fold_vec);
-        let mut rounds = Vec::with_capacity(cfg.k);
-        for _ in 0..cfg.k {
-            let scores = st.score_all(x, y, cfg.loss);
-            let b = argmin(&scores)
-                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
-            rounds.push(Round { feature: b, criterion: scores[b] });
-            st.commit(x, b);
-        }
-        let weights: Vec<f64> =
-            st.selected.iter().map(|&i| dot(x.row(i), &st.a)).collect();
-        Ok(SelectionResult { selected: st.selected, rounds, weights })
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -224,6 +302,7 @@ mod tests {
                 k: 2.min(n),
                 lambda: lam,
                 loss: Loss::Squared,
+                ..Default::default()
             };
             let nf = NFoldGreedy { folds: m, seed: 1 };
             let r_nf = nf.select(&x, &y, &cfg).unwrap();
@@ -276,7 +355,7 @@ mod tests {
     #[test]
     fn selects_k_distinct() {
         let ds = crate::data::synthetic::two_gaussians(60, 12, 4, 1.2, 6);
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = NFoldGreedy::default().select(&ds.x, &ds.y, &cfg).unwrap();
         let mut s = r.selected.clone();
         s.sort_unstable();
@@ -289,7 +368,7 @@ mod tests {
         let mut g = Gen::new(1);
         let x = g.matrix(4, 6);
         let y = g.labels(6);
-        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 2, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         assert!(NFoldGreedy { folds: 1, seed: 0 }
             .select(&x, &y, &cfg)
             .is_err());

@@ -8,8 +8,12 @@
 
 use anyhow::ensure;
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{Round, SelectionConfig, SelectionResult, Selector};
 use crate::linalg::Matrix;
+use crate::metrics::Loss;
 use crate::rls;
 use crate::rng::Pcg64;
 
@@ -26,6 +30,109 @@ impl Default for RandomSelector {
     }
 }
 
+/// Round-by-round engine: the random order is drawn once at `begin`
+/// (seed-deterministic); each round commits the next unused feature of
+/// that order. The logged criterion is the LOO of the growing prefix
+/// (one shortcut evaluation per round), for parity with the informed
+/// selectors. A forced round (warm start / fixed-order replay) may
+/// commit any feature; the predetermined order then skips it.
+struct RandomCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    lambda: f64,
+    loss: Loss,
+    k: usize,
+    order: Vec<usize>,
+    selected: Vec<usize>,
+    in_s: Vec<bool>,
+    rounds: Vec<Round>,
+}
+
+impl RandomCore<'_> {
+    /// LOO criterion of the current prefix.
+    fn prefix_criterion(&self) -> f64 {
+        rls::loo_subset_criterion(
+            self.x,
+            &self.selected,
+            self.y,
+            self.lambda,
+            self.loss,
+        )
+    }
+}
+
+impl SessionCore for RandomCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.selected.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let n = self.x.rows();
+        let b = match forced {
+            Some(b) => {
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(!self.in_s[b], "feature {b} already selected");
+                b
+            }
+            None => {
+                match self.order.iter().copied().find(|&i| !self.in_s[i]) {
+                    Some(b) => b,
+                    None => return Ok(CoreStep::Exhausted),
+                }
+            }
+        };
+        self.in_s[b] = true;
+        self.selected.push(b);
+        let round = Round { feature: b, criterion: self.prefix_criterion() };
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        if self.selected.is_empty() {
+            return Ok(Vec::new());
+        }
+        let xs = self.x.select_rows(&self.selected);
+        Ok(rls::train(&xs, self.y, self.lambda))
+    }
+}
+
+impl SessionSelector for RandomSelector {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(x.cols() == y.len(), "shape mismatch");
+        let mut rng = Pcg64::new(self.seed, 31);
+        let order = rng.choose_distinct(n, cfg.k);
+        let core = RandomCore {
+            x,
+            y,
+            lambda: cfg.lambda,
+            loss: cfg.loss,
+            k: cfg.k,
+            order,
+            selected: Vec::new(),
+            in_s: vec![false; n],
+            rounds: Vec::new(),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
 impl Selector for RandomSelector {
     fn name(&self) -> &'static str {
         "random"
@@ -37,29 +144,7 @@ impl Selector for RandomSelector {
         y: &[f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<SelectionResult> {
-        let n = x.rows();
-        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-        let mut rng = Pcg64::new(self.seed, 31);
-        let selected = rng.choose_distinct(n, cfg.k);
-        // criterion logged for parity with other selectors: LOO of the
-        // growing random prefix (cheap: one shortcut evaluation per round)
-        let mut rounds = Vec::with_capacity(cfg.k);
-        for r in 1..=cfg.k {
-            let xs = x.select_rows(&selected[..r]);
-            let p = if xs.rows() <= xs.cols() {
-                rls::loo_primal(&xs, y, cfg.lambda)
-            } else {
-                rls::loo_dual(&xs, y, cfg.lambda)
-            };
-            rounds.push(Round {
-                feature: selected[r - 1],
-                criterion: cfg.loss.total(y, &p),
-            });
-        }
-        let xs = x.select_rows(&selected);
-        let weights = rls::train(&xs, y, cfg.lambda);
-        Ok(SelectionResult { selected, rounds, weights })
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -71,7 +156,7 @@ mod tests {
     #[test]
     fn selects_k_distinct() {
         let ds = crate::data::synthetic::two_gaussians(50, 20, 5, 1.0, 3);
-        let cfg = SelectionConfig { k: 8, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 8, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = RandomSelector::default().select(&ds.x, &ds.y, &cfg).unwrap();
         let mut s = r.selected.clone();
         s.sort_unstable();
@@ -84,7 +169,7 @@ mod tests {
     #[test]
     fn deterministic_per_seed() {
         let ds = crate::data::synthetic::two_gaussians(30, 15, 5, 1.0, 4);
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let a = RandomSelector { seed: 9 }.select(&ds.x, &ds.y, &cfg).unwrap();
         let b = RandomSelector { seed: 9 }.select(&ds.x, &ds.y, &cfg).unwrap();
         assert_eq!(a.selected, b.selected);
@@ -95,7 +180,7 @@ mod tests {
     #[test]
     fn weights_are_rls_fit_on_subset() {
         let ds = crate::data::synthetic::two_gaussians(40, 10, 3, 1.5, 5);
-        let cfg = SelectionConfig { k: 4, lambda: 0.8, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 4, lambda: 0.8, loss: Loss::ZeroOne, ..Default::default() };
         let r = RandomSelector::default().select(&ds.x, &ds.y, &cfg).unwrap();
         let xs = ds.x.select_rows(&r.selected);
         let w = crate::rls::train(&xs, &ds.y, cfg.lambda);

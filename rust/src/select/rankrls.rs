@@ -11,8 +11,11 @@
 //! O(k³ + k²m) solve — per round O(n(k² + km)), linear in m like the
 //! classification algorithm.
 
-use anyhow::ensure;
+use anyhow::{anyhow, ensure};
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::linalg::{dot, Cholesky, Matrix};
 use crate::rls::rank::{laplacian_apply, pairwise_risk, train_rank};
@@ -21,17 +24,157 @@ use crate::rls::rank::{laplacian_apply, pairwise_risk, train_rank};
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GreedyRankRls;
 
-impl Selector for GreedyRankRls {
-    fn name(&self) -> &'static str {
-        "greedy-rankrls"
+/// Round-by-round engine: the L-products are precomputed once at `begin`;
+/// each round refactors the k×k primal matrix and scores candidates with
+/// the bordered solve.
+struct RankRlsCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    lambda: f64,
+    k: usize,
+    /// Lx_i per candidate row (never changes).
+    lx: Vec<Vec<f64>>,
+    /// x_i · (L y) per candidate (never changes).
+    xly: Vec<f64>,
+    selected: Vec<usize>,
+    in_s: Vec<bool>,
+    rounds: Vec<Round>,
+}
+
+impl RankRlsCore<'_> {
+    /// Cholesky factor of M_S (k×k) and the solved base weights w_S,
+    /// shared by every candidate of one round.
+    fn base_solve(&self) -> anyhow::Result<(Cholesky, Vec<f64>)> {
+        let k = self.selected.len();
+        let mut mmat = Matrix::zeros(k, k);
+        for (a, &ia) in self.selected.iter().enumerate() {
+            for (b, &ib) in self.selected.iter().enumerate().skip(a) {
+                let v = dot(&self.lx[ia], self.x.row(ib));
+                mmat[(a, b)] = v;
+                mmat[(b, a)] = v;
+            }
+        }
+        mmat.add_diag(self.lambda);
+        let chol = Cholesky::factor(&mmat)
+            .ok_or_else(|| anyhow!("M_S not SPD"))?;
+        let rhs: Vec<f64> =
+            self.selected.iter().map(|&i| self.xly[i]).collect();
+        let w_s = chol.solve(&rhs);
+        Ok((chol, w_s))
     }
 
-    fn select(
+    /// Pairwise risk of the bordered model S ∪ {i} ([`BIG`] when the
+    /// candidate is numerically collinear with S). Candidates are
+    /// independent given the shared base solve, so forced session rounds
+    /// score only their own candidate through this same code path.
+    fn bordered_score(&self, chol: &Cholesky, w_s: &[f64], i: usize) -> f64 {
+        let m = self.x.cols();
+        let k = self.selected.len();
+        // bordered solve for S ∪ {i}:
+        //   [M_S  b ] [w ]   [rhs_S]
+        //   [bᵀ   c ] [wi] = [xly_i]
+        let b: Vec<f64> = self
+            .selected
+            .iter()
+            .map(|&s| dot(&self.lx[s], self.x.row(i)))
+            .collect();
+        let c = dot(&self.lx[i], self.x.row(i)) + self.lambda;
+        let (w_new, wi) = if k == 0 {
+            (Vec::new(), self.xly[i] / c)
+        } else {
+            let minv_b = chol.solve(&b);
+            let schur = c - dot(&b, &minv_b);
+            if schur <= 1e-12 {
+                return BIG; // numerically collinear candidate
+            }
+            let wi = (self.xly[i] - dot(&b, w_s)) / schur;
+            let w_new: Vec<f64> = w_s
+                .iter()
+                .zip(&minv_b)
+                .map(|(&ws, &mb)| ws - wi * mb)
+                .collect();
+            (w_new, wi)
+        };
+        // pairwise risk of the bordered model — O(km)
+        let mut f = vec![0.0; m];
+        for (t, &s_idx) in self.selected.iter().enumerate() {
+            let row = self.x.row(s_idx);
+            let wv = w_new[t];
+            for (fj, &xv) in f.iter_mut().zip(row) {
+                *fj += wv * xv;
+            }
+        }
+        for (fj, &xv) in f.iter_mut().zip(self.x.row(i)) {
+            *fj += wi * xv;
+        }
+        pairwise_risk(self.y, &f)
+    }
+}
+
+impl SessionCore for RankRlsCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.selected.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let n = self.x.rows();
+        let (chol, w_s) = self.base_solve()?;
+        let (bsel, criterion) = match forced {
+            Some(b) => {
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(!self.in_s[b], "feature {b} already selected");
+                let s = self.bordered_score(&chol, &w_s, b);
+                ensure!(
+                    s < BIG,
+                    "feature {b} is numerically collinear with the \
+                     selected set"
+                );
+                (b, s)
+            }
+            None => {
+                let mut scores = vec![BIG; n];
+                for i in 0..n {
+                    if self.in_s[i] {
+                        continue;
+                    }
+                    scores[i] = self.bordered_score(&chol, &w_s, i);
+                }
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow!("no candidate left"))?;
+                (b, scores[b])
+            }
+        };
+        let round = Round { feature: bsel, criterion };
+        self.in_s[bsel] = true;
+        self.selected.push(bsel);
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        if self.selected.is_empty() {
+            return Ok(Vec::new());
+        }
+        let xs = self.x.select_rows(&self.selected);
+        Ok(train_rank(&xs, self.y, self.lambda))
+    }
+}
+
+impl SessionSelector for GreedyRankRls {
+    fn begin<'a>(
         &self,
-        x: &Matrix,
-        y: &[f64],
+        x: &'a Matrix,
+        y: &'a [f64],
         cfg: &SelectionConfig,
-    ) -> anyhow::Result<SelectionResult> {
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
         let n = x.rows();
         let m = x.cols();
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
@@ -44,86 +187,33 @@ impl Selector for GreedyRankRls {
         let ly = laplacian_apply(y);
         let xly: Vec<f64> = (0..n).map(|i| dot(x.row(i), &ly)).collect();
 
-        let mut selected: Vec<usize> = Vec::new();
-        let mut in_s = vec![false; n];
-        let mut rounds = Vec::with_capacity(cfg.k);
+        let core = RankRlsCore {
+            x,
+            y,
+            lambda: cfg.lambda,
+            k: cfg.k,
+            lx,
+            xly,
+            selected: Vec::new(),
+            in_s: vec![false; n],
+            rounds: Vec::new(),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
 
-        while selected.len() < cfg.k {
-            let k = selected.len();
-            // cached factor of M_S (k×k) and rhs X_S L y
-            let (chol, rhs_s) = {
-                let mut mmat = Matrix::zeros(k, k);
-                for (a, &ia) in selected.iter().enumerate() {
-                    for (b, &ib) in selected.iter().enumerate().skip(a) {
-                        let v = dot(&lx[ia], x.row(ib));
-                        mmat[(a, b)] = v;
-                        mmat[(b, a)] = v;
-                    }
-                }
-                mmat.add_diag(cfg.lambda);
-                let rhs: Vec<f64> =
-                    selected.iter().map(|&i| xly[i]).collect();
-                (
-                    Cholesky::factor(&mmat).expect("SPD"),
-                    rhs,
-                )
-            };
-            let w_s = chol.solve(&rhs_s); // reused by every candidate
+impl Selector for GreedyRankRls {
+    fn name(&self) -> &'static str {
+        "greedy-rankrls"
+    }
 
-            let mut scores = vec![BIG; n];
-            for i in 0..n {
-                if in_s[i] {
-                    continue;
-                }
-                // bordered solve for S ∪ {i}:
-                //   [M_S  b ] [w ]   [rhs_S]
-                //   [bᵀ   c ] [wi] = [xly_i]
-                let b: Vec<f64> = selected
-                    .iter()
-                    .map(|&s| dot(&lx[*&s], x.row(i)))
-                    .collect();
-                let c = dot(&lx[i], x.row(i)) + cfg.lambda;
-                let (w_new, wi) = if k == 0 {
-                    (Vec::new(), xly[i] / c)
-                } else {
-                    let minv_b = chol.solve(&b);
-                    let schur = c - dot(&b, &minv_b);
-                    if schur <= 1e-12 {
-                        continue; // numerically collinear candidate
-                    }
-                    let wi = (xly[i] - dot(&b, &w_s)) / schur;
-                    let w_new: Vec<f64> = w_s
-                        .iter()
-                        .zip(&minv_b)
-                        .map(|(&ws, &mb)| ws - wi * mb)
-                        .collect();
-                    (w_new, wi)
-                };
-                // pairwise risk of the bordered model — O(km)
-                let mut f = vec![0.0; m];
-                for (t, &s_idx) in selected.iter().enumerate() {
-                    let row = x.row(s_idx);
-                    let wv = w_new[t];
-                    for (fj, &xv) in f.iter_mut().zip(row) {
-                        *fj += wv * xv;
-                    }
-                }
-                for (fj, &xv) in f.iter_mut().zip(x.row(i)) {
-                    *fj += wi * xv;
-                }
-                scores[i] = pairwise_risk(y, &f);
-            }
-
-            let bsel = argmin(&scores)
-                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
-            rounds.push(Round { feature: bsel, criterion: scores[bsel] });
-            in_s[bsel] = true;
-            selected.push(bsel);
-        }
-
-        let xs = x.select_rows(&selected);
-        let weights = train_rank(&xs, y, cfg.lambda);
-        Ok(SelectionResult { selected, rounds, weights })
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -148,6 +238,7 @@ mod tests {
                 k: 2.min(n),
                 lambda: lam,
                 loss: Loss::Squared,
+                ..Default::default()
             };
             let r = GreedyRankRls.select(&x, &y, &cfg).unwrap();
             // replay: at each round, the recorded criterion must equal
@@ -184,7 +275,7 @@ mod tests {
         }
         let _ = &mut x;
         let cfg =
-            SelectionConfig { k: 1, lambda: 0.1, loss: Loss::Squared };
+            SelectionConfig { k: 1, lambda: 0.1, loss: Loss::Squared, ..Default::default() };
         let r = GreedyRankRls.select(&x, &y, &cfg).unwrap();
         assert_eq!(r.selected, vec![4]);
     }
@@ -198,7 +289,7 @@ mod tests {
             .map(|j| x[(1, j)] + 0.5 * x[(7, j)] + 0.05 * g.rng.normal())
             .collect();
         let cfg =
-            SelectionConfig { k: 2, lambda: 0.1, loss: Loss::Squared };
+            SelectionConfig { k: 2, lambda: 0.1, loss: Loss::Squared, ..Default::default() };
         let r = GreedyRankRls.select(&x, &y, &cfg).unwrap();
         let mut s = r.selected.clone();
         s.sort_unstable();
@@ -218,7 +309,7 @@ mod tests {
         let mut g = Gen::new(5);
         let x = g.matrix(3, 6);
         let y = g.targets(6);
-        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::Squared };
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::Squared, ..Default::default() };
         assert!(GreedyRankRls.select(&x, &y, &cfg).is_err());
     }
 }

@@ -1,0 +1,685 @@
+//! Stepwise selection sessions — the crate's round-by-round API.
+//!
+//! The paper's complexity result makes each greedy round cheap (O(mn) for
+//! Algorithm 3), so round-by-round control costs nothing extra. A
+//! [`Session`] exposes exactly that: [`Session::step`] runs one selection
+//! round (chosen feature + LOO criterion), [`Session::state`] snapshots
+//! the trajectory so far, and [`Session::finish`] packages the usual
+//! [`SelectionResult`]. Every selector in this crate implements
+//! [`SessionSelector`]; the one-shot [`super::Selector::select`] is a thin
+//! compatibility shim (`begin` + [`run_to_completion`]).
+//!
+//! Sessions enable what a blocking `select` cannot:
+//!
+//! * **early stopping** via [`StopPolicy`] — a round budget, a wall-clock
+//!   budget, or a plateau detector on the LOO criterion curve (the
+//!   overfitting guard suggested by the paper's Figs. 10–15);
+//! * **warm starts** via [`SessionSelector::begin_from`] — the caches are
+//!   rebuilt with the same rank-1 updates the selection itself uses, so a
+//!   resumed session continues bit-identically to an uninterrupted run;
+//! * **observation** via [`Observer`] — per-round progress logging and
+//!   per-round timing without re-running the selection.
+//!
+//! Internally each selector contributes a [`SessionCore`] (one algorithm
+//! round, forced or greedy) and [`PolicySession`] supplies the shared
+//! budget/plateau/termination machinery on top.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure};
+
+use super::{Round, SelectionConfig, SelectionResult};
+use crate::linalg::Matrix;
+
+/// Early-stopping policy for session-driven selection.
+///
+/// The policy is evaluated before every [`Session::step`]; the hard cap of
+/// the selector's natural target (`cfg.k` features selected, or `k`
+/// features remaining for backward elimination) always applies on top.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StopPolicy {
+    /// Stop after at most this many rounds. The default,
+    /// `KBudget(usize::MAX)`, never fires — the session runs to `cfg.k`.
+    KBudget(usize),
+    /// Stop once this much wall-clock time has elapsed since `begin` —
+    /// or, for a warm-started session, since the last replayed round, so
+    /// a resumed run gets its full budget for *new* rounds. Checked
+    /// between rounds: the round in flight always completes, so the
+    /// overshoot is bounded by one round (O(mn) for greedy RLS).
+    TimeBudget(Duration),
+    /// Stop after `patience` consecutive rounds whose criterion failed to
+    /// improve on the best seen so far by more than
+    /// `min_rel_improvement · |best|` (the LOO plateau of Figs. 10–15).
+    Plateau {
+        /// Consecutive non-improving rounds tolerated before stopping.
+        patience: usize,
+        /// Relative improvement threshold (0 ⇒ any strict decrease
+        /// counts as improvement).
+        min_rel_improvement: f64,
+    },
+}
+
+impl Default for StopPolicy {
+    fn default() -> Self {
+        StopPolicy::KBudget(usize::MAX)
+    }
+}
+
+impl StopPolicy {
+    /// Reject unusable parameter combinations.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            StopPolicy::Plateau { patience, min_rel_improvement } => {
+                ensure!(patience >= 1, "plateau patience must be ≥ 1");
+                ensure!(
+                    min_rel_improvement >= 0.0
+                        && min_rel_improvement.is_finite(),
+                    "min_rel_improvement must be finite and ≥ 0"
+                );
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Why a session stopped selecting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The selector's natural target was reached (`cfg.k`).
+    TargetReached,
+    /// [`StopPolicy::KBudget`] round budget spent.
+    RoundBudget,
+    /// [`StopPolicy::TimeBudget`] wall-clock budget spent.
+    TimeBudget,
+    /// [`StopPolicy::Plateau`] fired on the criterion curve.
+    Plateau,
+    /// The algorithm itself is out of moves before the target: an
+    /// internal step budget was spent (floating/FoBa `max_steps`), FoBa
+    /// found no improving swap, or a forced-round session consumed the
+    /// random order. Mid-run candidate exhaustion in the greedy-family
+    /// selectors is an error (`"no candidate left"`), matching the
+    /// pre-session `select` behavior.
+    Exhausted,
+}
+
+impl std::fmt::Display for StopReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            StopReason::TargetReached => "target k reached",
+            StopReason::RoundBudget => "round budget spent",
+            StopReason::TimeBudget => "time budget spent",
+            StopReason::Plateau => "criterion plateau",
+            StopReason::Exhausted => "no further round possible",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Result of one [`Session::step`].
+#[derive(Clone, Debug)]
+pub enum StepOutcome {
+    /// One more round committed.
+    Selected(Round),
+    /// The session stopped (idempotent: repeated `step` calls keep
+    /// returning the same reason).
+    Done(StopReason),
+}
+
+/// Owned snapshot of a session's trajectory so far.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    /// Current feature set (selection order for forward selectors;
+    /// ascending index order for backward elimination).
+    pub selected: Vec<usize>,
+    /// Per-round log, identical in layout to [`SelectionResult::rounds`].
+    pub rounds: Vec<Round>,
+    /// Model weights over `selected` for the *current* set (recomputed on
+    /// each call; cheap for the cache-based selectors, one retraining for
+    /// the wrapper-style ones).
+    pub weights: Vec<f64>,
+    /// Stop reason, once the session has stopped.
+    pub stop_reason: Option<StopReason>,
+}
+
+impl SessionState {
+    /// Criterion trajectory (one value per round).
+    pub fn criterion_curve(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.criterion).collect()
+    }
+}
+
+/// A selection run in progress.
+///
+/// Obtained from [`SessionSelector::begin`]; drive it with [`step`]
+/// (greedy choice) or [`force`] (caller-chosen feature, used for warm
+/// starts and fixed-order baselines), then [`finish`] it into a
+/// [`SelectionResult`]. Finishing early is allowed — the result covers
+/// the rounds executed so far.
+///
+/// [`step`]: Session::step
+/// [`force`]: Session::force
+/// [`finish`]: Session::finish
+pub trait Session {
+    /// Run one greedy round, or report why the session stopped.
+    fn step(&mut self) -> anyhow::Result<StepOutcome>;
+
+    /// Commit `feature` as this round's choice (bypassing the argmin but
+    /// scoring through the identical code path, so the recorded criterion
+    /// is bit-identical to what a greedy run would have logged for that
+    /// feature). Errors if the feature is unavailable or the session has
+    /// already stopped.
+    fn force(&mut self, feature: usize) -> anyhow::Result<Round>;
+
+    /// Rounds executed so far (including warm-start replay rounds).
+    fn rounds_done(&self) -> usize;
+
+    /// Snapshot of the trajectory so far. Errors only if the current
+    /// weights cannot be computed (e.g. a PJRT state read fails).
+    fn state(&self) -> anyhow::Result<SessionState>;
+
+    /// Why the session stopped, once it has.
+    fn stop_reason(&self) -> Option<StopReason>;
+
+    /// Consume the session into a [`SelectionResult`] for the current
+    /// feature set.
+    fn finish(self: Box<Self>) -> anyhow::Result<SelectionResult>;
+}
+
+/// A selection algorithm that can run as a stepwise [`Session`].
+///
+/// Every selector in [`crate::select`] implements this; the blocking
+/// [`super::Selector::select`] delegates here via [`run_to_completion`].
+pub trait SessionSelector {
+    /// Start a session on feature-major `x` (n × m) and labels `y`.
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>>;
+
+    /// Start a session warm-started from a previous trajectory prefix:
+    /// `selected` lists the features committed by the first rounds, in
+    /// round order (for backward elimination these are the *eliminated*
+    /// features). The caches are reconstructed through the same rank-1
+    /// commit updates the original run performed, so stepping the
+    /// returned session continues bit-identically to the uninterrupted
+    /// run. Cost per replayed round: scoring the one replayed candidate
+    /// (through the exact code path the original scan used, so the
+    /// recorded criterion matches bit-for-bit) plus one commit. The PJRT
+    /// engine is the exception — its scoring kernel evaluates every
+    /// candidate in one launch, so each replayed round costs one
+    /// score-step launch + one commit-step launch.
+    fn begin_from<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+        selected: &[usize],
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let mut s = self.begin(x, y, cfg)?;
+        for &f in selected {
+            s.force(f)?;
+        }
+        Ok(s)
+    }
+}
+
+/// Per-round callback, invoked by [`drive`].
+pub trait Observer {
+    /// Called after each committed round with its 0-based index and the
+    /// wall-clock time the round took.
+    fn on_round(&mut self, index: usize, round: &Round, elapsed: Duration) {
+        let _ = (index, round, elapsed);
+    }
+
+    /// Called once when the session stops.
+    fn on_stop(&mut self, reason: StopReason) {
+        let _ = reason;
+    }
+}
+
+/// Observer that ignores everything.
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+/// Drive a session until it stops, reporting each round to `observer`.
+/// Returns the stop reason; call [`Session::finish`] afterwards for the
+/// result.
+pub fn drive(
+    session: &mut (dyn Session + '_),
+    observer: &mut dyn Observer,
+) -> anyhow::Result<StopReason> {
+    let mut index = session.rounds_done();
+    loop {
+        let t0 = Instant::now();
+        match session.step()? {
+            StepOutcome::Selected(round) => {
+                observer.on_round(index, &round, t0.elapsed());
+                index += 1;
+            }
+            StepOutcome::Done(reason) => {
+                observer.on_stop(reason);
+                return Ok(reason);
+            }
+        }
+    }
+}
+
+/// Drive a session to completion and finish it — the one-shot
+/// compatibility shim behind every [`super::Selector::select`].
+pub fn run_to_completion(
+    mut session: Box<dyn Session + '_>,
+) -> anyhow::Result<SelectionResult> {
+    loop {
+        if let StepOutcome::Done(_) = session.step()? {
+            break;
+        }
+    }
+    session.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Shared session machinery (crate-internal)
+// ---------------------------------------------------------------------------
+
+/// What one algorithm round produced.
+pub(crate) enum CoreStep {
+    /// A feature was committed (added, or removed for backward).
+    Committed(Round),
+    /// No further round is possible.
+    Exhausted,
+}
+
+/// One selector's round-by-round engine. Implementations own their data
+/// (borrowed `x`/`y` plus whatever caches the algorithm maintains);
+/// [`PolicySession`] layers the stop policy and bookkeeping on top.
+pub(crate) trait SessionCore {
+    /// Has the selector's natural target been reached (`cfg.k`)?
+    fn target_reached(&self) -> bool;
+
+    /// Execute one round. `forced` bypasses the argmin (the candidate is
+    /// still scored through the identical code path). Must only be called
+    /// while `!target_reached()`.
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep>;
+
+    /// Rounds committed so far.
+    fn rounds(&self) -> &[Round];
+
+    /// Current feature set.
+    fn selected(&self) -> Vec<usize>;
+
+    /// Model weights for the current feature set.
+    fn weights(&self) -> anyhow::Result<Vec<f64>>;
+}
+
+/// Generic [`Session`] implementation: a [`SessionCore`] plus the
+/// [`StopPolicy`] state machine (round budget, time budget, plateau
+/// tracking on the criterion curve).
+pub(crate) struct PolicySession<C> {
+    core: C,
+    stop: StopPolicy,
+    started: Instant,
+    best: f64,
+    has_best: bool,
+    bad_streak: usize,
+    done: Option<StopReason>,
+}
+
+impl<C: SessionCore> PolicySession<C> {
+    pub(crate) fn new(core: C, cfg: &SelectionConfig) -> anyhow::Result<Self> {
+        cfg.stop.validate()?;
+        Ok(PolicySession {
+            core,
+            stop: cfg.stop,
+            started: Instant::now(),
+            best: f64::INFINITY,
+            has_best: false,
+            bad_streak: 0,
+            done: None,
+        })
+    }
+
+    fn pending_stop(&self) -> Option<StopReason> {
+        if self.core.target_reached() {
+            return Some(StopReason::TargetReached);
+        }
+        match self.stop {
+            StopPolicy::KBudget(budget) => {
+                (self.core.rounds().len() >= budget)
+                    .then_some(StopReason::RoundBudget)
+            }
+            StopPolicy::TimeBudget(limit) => {
+                (self.started.elapsed() >= limit)
+                    .then_some(StopReason::TimeBudget)
+            }
+            StopPolicy::Plateau { patience, .. } => {
+                (self.bad_streak >= patience).then_some(StopReason::Plateau)
+            }
+        }
+    }
+
+    /// Feed one committed round through the plateau tracker. The first
+    /// round establishes the baseline; afterwards a round "improves" iff
+    /// it beats the best criterion so far by more than
+    /// `min_rel_improvement · |best|`.
+    fn note_round(&mut self, round: &Round) {
+        let c = round.criterion;
+        if !self.has_best {
+            self.has_best = true;
+            self.best = c;
+            return;
+        }
+        if let StopPolicy::Plateau { min_rel_improvement, .. } = self.stop {
+            let improving = (self.best - c) > min_rel_improvement * self.best.abs();
+            if improving {
+                self.bad_streak = 0;
+            } else {
+                self.bad_streak += 1;
+            }
+        }
+        if c < self.best {
+            self.best = c;
+        }
+    }
+}
+
+impl<C: SessionCore> Session for PolicySession<C> {
+    fn step(&mut self) -> anyhow::Result<StepOutcome> {
+        if let Some(reason) = self.done {
+            return Ok(StepOutcome::Done(reason));
+        }
+        if let Some(reason) = self.pending_stop() {
+            self.done = Some(reason);
+            return Ok(StepOutcome::Done(reason));
+        }
+        match self.core.round(None)? {
+            CoreStep::Committed(round) => {
+                self.note_round(&round);
+                Ok(StepOutcome::Selected(round))
+            }
+            CoreStep::Exhausted => {
+                self.done = Some(StopReason::Exhausted);
+                Ok(StepOutcome::Done(StopReason::Exhausted))
+            }
+        }
+    }
+
+    fn force(&mut self, feature: usize) -> anyhow::Result<Round> {
+        if let Some(reason) = self.done {
+            bail!("session already stopped ({reason})");
+        }
+        ensure!(
+            !self.core.target_reached(),
+            "session already at its target size"
+        );
+        match self.core.round(Some(feature))? {
+            CoreStep::Committed(round) => {
+                self.note_round(&round);
+                // a TimeBudget counts from the last forced round, so a
+                // warm-start replay (begin_from) grants the resumed run
+                // its full budget instead of billing it for the replay
+                self.started = Instant::now();
+                Ok(round)
+            }
+            CoreStep::Exhausted => bail!("no further round possible"),
+        }
+    }
+
+    fn rounds_done(&self) -> usize {
+        self.core.rounds().len()
+    }
+
+    fn state(&self) -> anyhow::Result<SessionState> {
+        Ok(SessionState {
+            selected: self.core.selected(),
+            rounds: self.core.rounds().to_vec(),
+            weights: self.core.weights()?,
+            stop_reason: self.done,
+        })
+    }
+
+    fn stop_reason(&self) -> Option<StopReason> {
+        self.done
+    }
+
+    fn finish(self: Box<Self>) -> anyhow::Result<SelectionResult> {
+        let s = *self;
+        Ok(SelectionResult {
+            selected: s.core.selected(),
+            rounds: s.core.rounds().to_vec(),
+            weights: s.core.weights()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::forall_seeds;
+    use crate::select::greedy::GreedyRls;
+    use crate::select::Selector;
+
+    fn overfit_dataset(seed: u64) -> crate::data::Dataset {
+        // few informative features among many noise ones: the criterion
+        // curve drops fast, then plateaus — the Figs. 10–15 mechanism
+        crate::data::synthetic::planted_sparse(
+            "overfit", 80, 40, 4, 1.2, 0.9, 0.05, seed,
+        )
+    }
+
+    /// Reference implementation of the plateau rule applied to a full
+    /// criterion curve: number of rounds a plateau session executes.
+    fn expected_plateau_rounds(
+        curve: &[f64],
+        patience: usize,
+        min_rel: f64,
+    ) -> usize {
+        let (mut best, mut has_best, mut bad) = (f64::INFINITY, false, 0usize);
+        for (i, &c) in curve.iter().enumerate() {
+            if has_best && bad >= patience {
+                return i;
+            }
+            if !has_best {
+                has_best = true;
+                best = c;
+                continue;
+            }
+            let improving = (best - c) > min_rel * best.abs();
+            if improving {
+                bad = 0;
+            } else {
+                bad += 1;
+            }
+            if c < best {
+                best = c;
+            }
+        }
+        curve.len()
+    }
+
+    #[test]
+    fn default_policy_runs_to_k() {
+        let ds = overfit_dataset(1);
+        let cfg = SelectionConfig::builder().k(6).lambda(1.0).build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let mut n_rounds = 0;
+        loop {
+            match s.step().unwrap() {
+                StepOutcome::Selected(_) => n_rounds += 1,
+                StepOutcome::Done(reason) => {
+                    assert_eq!(reason, StopReason::TargetReached);
+                    break;
+                }
+            }
+        }
+        assert_eq!(n_rounds, 6);
+        let r = s.finish().unwrap();
+        assert_eq!(r.selected.len(), 6);
+        assert_eq!(r.rounds.len(), 6);
+    }
+
+    #[test]
+    fn step_is_idempotent_after_done() {
+        let ds = overfit_dataset(2);
+        let cfg = SelectionConfig::builder().k(2).build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        while !matches!(s.step().unwrap(), StepOutcome::Done(_)) {}
+        assert!(matches!(
+            s.step().unwrap(),
+            StepOutcome::Done(StopReason::TargetReached)
+        ));
+        assert_eq!(s.stop_reason(), Some(StopReason::TargetReached));
+        assert!(s.force(0).is_err(), "force after done must fail");
+    }
+
+    #[test]
+    fn round_budget_stops_early() {
+        let ds = overfit_dataset(3);
+        let cfg = SelectionConfig::builder()
+            .k(10)
+            .stop(StopPolicy::KBudget(3))
+            .build();
+        let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(r.selected.len(), 3);
+        assert_eq!(r.weights.len(), 3);
+    }
+
+    #[test]
+    fn zero_time_budget_selects_nothing() {
+        let ds = overfit_dataset(4);
+        let cfg = SelectionConfig::builder()
+            .k(5)
+            .stop(StopPolicy::TimeBudget(Duration::ZERO))
+            .build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        assert!(matches!(
+            s.step().unwrap(),
+            StepOutcome::Done(StopReason::TimeBudget)
+        ));
+        let r = s.finish().unwrap();
+        assert!(r.selected.is_empty());
+        assert!(r.weights.is_empty());
+    }
+
+    #[test]
+    fn generous_time_budget_runs_to_k() {
+        let ds = overfit_dataset(5);
+        let cfg = SelectionConfig::builder()
+            .k(4)
+            .stop(StopPolicy::TimeBudget(Duration::from_secs(3600)))
+            .build();
+        let r = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(r.selected.len(), 4);
+    }
+
+    #[test]
+    fn invalid_plateau_policy_rejected() {
+        let ds = overfit_dataset(6);
+        let cfg = SelectionConfig::builder()
+            .k(3)
+            .stop(StopPolicy::Plateau { patience: 0, min_rel_improvement: 0.0 })
+            .build();
+        assert!(GreedyRls.begin(&ds.x, &ds.y, &cfg).is_err());
+        let cfg = SelectionConfig::builder()
+            .k(3)
+            .stop(StopPolicy::Plateau {
+                patience: 2,
+                min_rel_improvement: -1.0,
+            })
+            .build();
+        assert!(GreedyRls.begin(&ds.x, &ds.y, &cfg).is_err());
+    }
+
+    /// Property: on the overfitting synthetic, a plateau session stops
+    /// exactly where the reference rule applied to the full (unstopped)
+    /// LOO criterion curve says it should — and therefore at or before
+    /// the round where the curve stops improving by the threshold.
+    #[test]
+    fn plateau_stops_where_the_curve_plateaus() {
+        forall_seeds(10, |seed| {
+            let ds = overfit_dataset(100 + seed);
+            let k = 20;
+            let (patience, min_rel) = (3usize, 1e-3f64);
+            let full_cfg = SelectionConfig::builder().k(k).lambda(1.0).build();
+            let full = GreedyRls.select(&ds.x, &ds.y, &full_cfg).unwrap();
+            let curve = full.criterion_curve();
+            let expect = expected_plateau_rounds(&curve, patience, min_rel);
+
+            let cfg = SelectionConfig::builder()
+                .k(k)
+                .lambda(1.0)
+                .stop(StopPolicy::Plateau {
+                    patience,
+                    min_rel_improvement: min_rel,
+                })
+                .build();
+            let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+            let reason = drive(s.as_mut(), &mut NoopObserver).unwrap();
+            let r = s.finish().unwrap();
+
+            assert_eq!(r.rounds.len(), expect, "seed {seed}: {curve:?}");
+            assert!(r.rounds.len() <= k);
+            // greedy is deterministic: the stopped run is a prefix
+            assert_eq!(&full.selected[..r.selected.len()], &r.selected[..]);
+            if expect < k {
+                assert_eq!(reason, StopReason::Plateau);
+                assert!(
+                    r.selected.len() < k,
+                    "seed {seed}: plateau should select fewer than k"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn observer_sees_every_round() {
+        struct Count(usize, Option<StopReason>);
+        impl Observer for Count {
+            fn on_round(&mut self, index: usize, _r: &Round, _e: Duration) {
+                assert_eq!(index, self.0);
+                self.0 += 1;
+            }
+            fn on_stop(&mut self, reason: StopReason) {
+                self.1 = Some(reason);
+            }
+        }
+        let ds = overfit_dataset(7);
+        let cfg = SelectionConfig::builder().k(5).build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let mut obs = Count(0, None);
+        drive(s.as_mut(), &mut obs).unwrap();
+        assert_eq!(obs.0, 5);
+        assert_eq!(obs.1, Some(StopReason::TargetReached));
+    }
+
+    #[test]
+    fn state_snapshots_track_progress() {
+        let ds = overfit_dataset(8);
+        let cfg = SelectionConfig::builder().k(3).build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(s.rounds_done(), 0);
+        assert!(s.state().unwrap().selected.is_empty());
+        s.step().unwrap();
+        let st = s.state().unwrap();
+        assert_eq!(st.selected.len(), 1);
+        assert_eq!(st.weights.len(), 1);
+        assert_eq!(st.criterion_curve().len(), 1);
+        assert_eq!(st.stop_reason, None);
+    }
+
+    #[test]
+    fn stop_reason_displays() {
+        for (r, needle) in [
+            (StopReason::TargetReached, "target"),
+            (StopReason::RoundBudget, "round"),
+            (StopReason::TimeBudget, "time"),
+            (StopReason::Plateau, "plateau"),
+            (StopReason::Exhausted, "no further"),
+        ] {
+            assert!(format!("{r}").contains(needle));
+        }
+    }
+}

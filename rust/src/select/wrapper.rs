@@ -13,8 +13,12 @@
 
 use anyhow::ensure;
 
+use super::session::{
+    CoreStep, PolicySession, Session, SessionCore, SessionSelector,
+};
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::linalg::Matrix;
+use crate::metrics::Loss;
 use crate::rls;
 
 /// How the wrapper evaluates LOO for a candidate feature set.
@@ -58,6 +62,108 @@ impl Wrapper {
     }
 }
 
+/// Round-by-round engine of Algorithm 1: score every candidate set
+/// `S ∪ {i}` by retraining (or the eq. 7/8 shortcut), commit the argmin.
+struct WrapperCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    wrapper: Wrapper,
+    lambda: f64,
+    loss: Loss,
+    k: usize,
+    selected: Vec<usize>,
+    in_s: Vec<bool>,
+    rounds: Vec<Round>,
+}
+
+impl WrapperCore<'_> {
+    /// LOO criterion of `S ∪ {i}` — candidates are independent, so a
+    /// forced round scores only its own candidate.
+    fn score_one(&self, i: usize) -> f64 {
+        let mut s = self.selected.clone();
+        s.push(i);
+        let p = self.wrapper.loo(self.x, &s, self.y, self.lambda);
+        self.loss.total(self.y, &p)
+    }
+}
+
+impl SessionCore for WrapperCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.selected.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let n = self.x.rows();
+        let (b, criterion) = match forced {
+            Some(b) => {
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(!self.in_s[b], "feature {b} already selected");
+                (b, self.score_one(b))
+            }
+            None => {
+                let mut scores = vec![BIG; n];
+                for i in 0..n {
+                    if self.in_s[i] {
+                        continue;
+                    }
+                    scores[i] = self.score_one(i);
+                }
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+                (b, scores[b])
+            }
+        };
+        let round = Round { feature: b, criterion };
+        self.in_s[b] = true;
+        self.selected.push(b);
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        // line 21: final training on the chosen set
+        if self.selected.is_empty() {
+            return Ok(Vec::new());
+        }
+        let xs = self.x.select_rows(&self.selected);
+        Ok(rls::train(&xs, self.y, self.lambda))
+    }
+}
+
+impl SessionSelector for Wrapper {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let n = x.rows();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(x.cols() == y.len(), "shape mismatch");
+        let core = WrapperCore {
+            x,
+            y,
+            wrapper: *self,
+            lambda: cfg.lambda,
+            loss: cfg.loss,
+            k: cfg.k,
+            selected: Vec::new(),
+            in_s: vec![false; n],
+            rounds: Vec::new(),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
 impl Selector for Wrapper {
     fn name(&self) -> &'static str {
         match self.mode {
@@ -72,33 +178,7 @@ impl Selector for Wrapper {
         y: &[f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<SelectionResult> {
-        let n = x.rows();
-        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-        let mut selected: Vec<usize> = Vec::new();
-        let mut in_s = vec![false; n];
-        let mut rounds = Vec::with_capacity(cfg.k);
-        while selected.len() < cfg.k {
-            let mut scores = vec![BIG; n];
-            for i in 0..n {
-                if in_s[i] {
-                    continue;
-                }
-                let mut s = selected.clone();
-                s.push(i);
-                let p = self.loo(x, &s, y, cfg.lambda);
-                scores[i] = cfg.loss.total(y, &p);
-            }
-            let b = argmin(&scores)
-                .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
-            rounds.push(Round { feature: b, criterion: scores[b] });
-            in_s[b] = true;
-            selected.push(b);
-        }
-        // line 21: final training on the chosen set
-        let xs = x.select_rows(&selected);
-        let weights = rls::train(&xs, y, cfg.lambda);
-        Ok(SelectionResult { selected, rounds, weights })
+        super::run_to_completion(self.begin(x, y, cfg)?)
     }
 }
 
@@ -132,7 +212,7 @@ mod tests {
             let x = g.matrix(n, m);
             let y = g.labels(m);
             let cfg =
-                SelectionConfig { k, lambda: lam, loss: Loss::Squared };
+                SelectionConfig { k, lambda: lam, loss: Loss::Squared, ..Default::default() };
             let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
             for wrapper in [Wrapper::brute_force(), Wrapper::shortcut()] {
                 let r1 = wrapper.select(&x, &y, &cfg).unwrap();
@@ -148,7 +228,7 @@ mod tests {
         let x = g.matrix(5, 8);
         let y = g.targets(8);
         let cfg =
-            SelectionConfig { k: 3, lambda: 0.6, loss: Loss::Squared };
+            SelectionConfig { k: 3, lambda: 0.6, loss: Loss::Squared, ..Default::default() };
         let r_b = Wrapper::brute_force().select(&x, &y, &cfg).unwrap();
         let r_s = Wrapper::shortcut().select(&x, &y, &cfg).unwrap();
         assert_eq!(r_b.selected, r_s.selected);
@@ -167,7 +247,7 @@ mod tests {
         let mut g = Gen::new(1);
         let x = g.matrix(3, 5);
         let y = g.labels(5);
-        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         assert!(Wrapper::shortcut().select(&x, &y, &cfg).is_err());
     }
 }

@@ -107,6 +107,102 @@ fn select_rejects_bad_flags() {
     assert!(stderr.contains("k="), "{stderr}");
 }
 
+/// Extract N from a "selected (N): [...]" line.
+fn selected_count(stdout: &str) -> usize {
+    let line = stdout
+        .lines()
+        .find(|l| l.starts_with("selected ("))
+        .unwrap_or_else(|| panic!("no selected line in:\n{stdout}"));
+    line.trim_start_matches("selected (")
+        .split(')')
+        .next()
+        .unwrap()
+        .parse()
+        .expect("selected count")
+}
+
+#[test]
+fn plateau_stop_selects_fewer_features_on_overfitting_data() {
+    // colon-cancer stand-in: m=62, n=2000 — the LOO criterion bottoms out
+    // after a handful of features, so a plateau policy must stop well
+    // before --k 40
+    let (ok, stdout, stderr) = run(&[
+        "select",
+        "--dataset",
+        "colon-cancer",
+        "--k",
+        "40",
+        "--stop",
+        "plateau",
+        "--patience",
+        "3",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let n_selected = selected_count(&stdout);
+    assert!(
+        n_selected < 40,
+        "plateau should stop early, selected {n_selected}:\n{stdout}"
+    );
+    assert!(stdout.contains("criterion plateau"), "{stdout}");
+}
+
+#[test]
+fn time_budget_zero_selects_nothing() {
+    let (ok, stdout, stderr) = run(&[
+        "select",
+        "--synthetic",
+        "60,20",
+        "--k",
+        "5",
+        "--stop",
+        "time",
+        "--time-budget-s",
+        "0",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(selected_count(&stdout), 0, "{stdout}");
+    assert!(stdout.contains("time budget"), "{stdout}");
+}
+
+#[test]
+fn warm_start_pins_the_prefix() {
+    let (ok, stdout, stderr) = run(&[
+        "select",
+        "--synthetic",
+        "80,15",
+        "--k",
+        "4",
+        "--warm-start",
+        "7,2",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(selected_count(&stdout), 4, "{stdout}");
+    let line = stdout
+        .lines()
+        .find(|l| l.starts_with("selected ("))
+        .unwrap();
+    assert!(line.contains("[7, 2,"), "prefix not honored: {stdout}");
+}
+
+#[test]
+fn bad_stop_flags_are_rejected() {
+    let (ok, _, stderr) =
+        run(&["select", "--synthetic", "60,20", "--stop", "banana"]);
+    assert!(!ok);
+    assert!(stderr.contains("--stop"), "{stderr}");
+    let (ok, _, stderr) = run(&[
+        "select",
+        "--synthetic",
+        "60,20",
+        "--stop",
+        "plateau",
+        "--patience",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("patience"), "{stderr}");
+}
+
 #[test]
 fn cv_prints_curves() {
     let (ok, stdout, stderr) = run(&[

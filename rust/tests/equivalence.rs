@@ -10,10 +10,13 @@
 use greedy_rls::data::synthetic;
 use greedy_rls::metrics::Loss;
 use greedy_rls::proptest::{assert_close, forall_seeds, Gen};
+use greedy_rls::rls::kernel::Kernel;
 use greedy_rls::select::{
-    backward::BackwardElimination, greedy::GreedyRls, lowrank::LowRankLsSvm,
-    nfold::NFoldGreedy, random::RandomSelector, wrapper::Wrapper,
-    SelectionConfig, Selector,
+    backward::BackwardElimination, centers::CenterSelector,
+    floating::FloatingForward, foba::Foba, greedy::GreedyRls,
+    lowrank::LowRankLsSvm, nfold::NFoldGreedy, random::RandomSelector,
+    rankrls::GreedyRankRls, run_to_completion, wrapper::Wrapper,
+    SelectionConfig, SelectionResult, Selector, SessionSelector, StepOutcome,
 };
 
 #[test]
@@ -27,7 +30,7 @@ fn all_three_algorithms_agree_on_random_problems() {
         let x = g.matrix(n, m);
         let y = g.labels(m);
         for loss in [Loss::Squared, Loss::ZeroOne] {
-            let cfg = SelectionConfig { k, lambda: lam, loss };
+            let cfg = SelectionConfig { k, lambda: lam, loss, ..Default::default() };
             let r1 = Wrapper::shortcut().select(&x, &y, &cfg).unwrap();
             let r2 = LowRankLsSvm.select(&x, &y, &cfg).unwrap();
             let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
@@ -48,7 +51,7 @@ fn brute_force_wrapper_agrees_on_small_problems() {
         let lam = g.lambda(-1, 1);
         let x = g.matrix(n, m);
         let y = g.targets(m);
-        let cfg = SelectionConfig { k: 2, lambda: lam, loss: Loss::Squared };
+        let cfg = SelectionConfig { k: 2, lambda: lam, loss: Loss::Squared, ..Default::default() };
         let rb = Wrapper::brute_force().select(&x, &y, &cfg).unwrap();
         let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
         assert_eq!(rb.selected, r3.selected);
@@ -67,7 +70,7 @@ fn greedy_dominates_random_on_benchmark_standins() {
     // at k = #informative must beat random selection's.
     for name in ["australian", "german.numer"] {
         let ds = greedy_rls::data::registry::load(name, false, 7).unwrap();
-        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne };
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let rg = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
         let rr = RandomSelector { seed: 3 }.select(&ds.x, &ds.y, &cfg).unwrap();
         let pg = rg.predictor().predict_matrix(&ds.x);
@@ -81,7 +84,7 @@ fn greedy_dominates_random_on_benchmark_standins() {
 #[test]
 fn nfold_with_m_folds_equals_greedy() {
     let ds = synthetic::two_gaussians(24, 10, 4, 1.5, 11);
-    let cfg = SelectionConfig { k: 4, lambda: 0.8, loss: Loss::Squared };
+    let cfg = SelectionConfig { k: 4, lambda: 0.8, loss: Loss::Squared, ..Default::default() };
     let r_loo = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
     let r_nf = NFoldGreedy { folds: 24, seed: 1 }
         .select(&ds.x, &ds.y, &cfg)
@@ -94,7 +97,7 @@ fn backward_and_forward_agree_on_unambiguous_support() {
     // When the signal is overwhelmingly concentrated on a small support,
     // forward and backward must land on the same feature set.
     let (ds, mut support) = synthetic::sparse_regression(250, 12, 3, 0.02, 19);
-    let cfg = SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared };
+    let cfg = SelectionConfig { k: 3, lambda: 0.1, loss: Loss::Squared, ..Default::default() };
     let mut fwd = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap().selected;
     let mut bwd =
         BackwardElimination.select(&ds.x, &ds.y, &cfg).unwrap().selected;
@@ -105,10 +108,152 @@ fn backward_and_forward_agree_on_unambiguous_support() {
     assert_eq!(bwd, support);
 }
 
+// ---------------------------------------------------------------------------
+// Session API equivalence: for every selector, driving a session
+// step-by-step — and resuming a warm-started session — must yield a
+// SelectionResult bit-identical to the one-shot `select`.
+// ---------------------------------------------------------------------------
+
+fn assert_bit_identical(a: &SelectionResult, b: &SelectionResult, what: &str) {
+    assert_eq!(a.selected, b.selected, "{what}: selected");
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert_eq!(ra.feature, rb.feature, "{what}: round {i} feature");
+        assert_eq!(
+            ra.criterion.to_bits(),
+            rb.criterion.to_bits(),
+            "{what}: round {i} criterion {} vs {}",
+            ra.criterion,
+            rb.criterion
+        );
+    }
+    assert_eq!(a.weights.len(), b.weights.len(), "{what}: weight count");
+    for (i, (wa, wb)) in a.weights.iter().zip(&b.weights).enumerate() {
+        assert_eq!(
+            wa.to_bits(),
+            wb.to_bits(),
+            "{what}: weight {i} {wa} vs {wb}"
+        );
+    }
+}
+
+fn check_session_equivalence<S: Selector + SessionSelector>(
+    sel: &S,
+    x: &greedy_rls::linalg::Matrix,
+    y: &[f64],
+    cfg: &SelectionConfig,
+) {
+    let name = sel.name();
+    let one_shot = sel.select(x, y, cfg).unwrap();
+
+    // manual step-by-step drive
+    let mut session = sel.begin(x, y, cfg).unwrap();
+    loop {
+        match session.step().unwrap() {
+            StepOutcome::Selected(_) => {}
+            StepOutcome::Done(_) => break,
+        }
+    }
+    let stepped = session.finish().unwrap();
+    assert_bit_identical(&one_shot, &stepped, &format!("{name}: stepwise"));
+
+    // warm-start resume from several prefixes of the recorded rounds
+    let replay: Vec<usize> =
+        one_shot.rounds.iter().map(|r| r.feature).collect();
+    let mut cuts = vec![1, replay.len() / 2, replay.len().saturating_sub(1)];
+    cuts.sort_unstable();
+    cuts.dedup();
+    for j in cuts {
+        if j > replay.len() {
+            continue;
+        }
+        let session = sel.begin_from(x, y, cfg, &replay[..j]).unwrap();
+        assert_eq!(session.rounds_done(), j, "{name}: warm start at {j}");
+        let resumed = run_to_completion(session).unwrap();
+        assert_bit_identical(
+            &one_shot,
+            &resumed,
+            &format!("{name}: warm start at {j}"),
+        );
+    }
+}
+
+#[test]
+fn sessions_match_one_shot_for_every_selector() {
+    let ds = synthetic::two_gaussians(40, 12, 4, 1.5, 31);
+    for loss in [Loss::Squared, Loss::ZeroOne] {
+        let cfg = SelectionConfig {
+            k: 4,
+            lambda: 0.8,
+            loss,
+            ..Default::default()
+        };
+        check_session_equivalence(&GreedyRls, &ds.x, &ds.y, &cfg);
+        check_session_equivalence(&Wrapper::shortcut(), &ds.x, &ds.y, &cfg);
+        check_session_equivalence(&Wrapper::brute_force(), &ds.x, &ds.y, &cfg);
+        check_session_equivalence(&LowRankLsSvm, &ds.x, &ds.y, &cfg);
+        check_session_equivalence(
+            &RandomSelector { seed: 5 },
+            &ds.x,
+            &ds.y,
+            &cfg,
+        );
+        check_session_equivalence(&BackwardElimination, &ds.x, &ds.y, &cfg);
+        check_session_equivalence(
+            &FloatingForward::default(),
+            &ds.x,
+            &ds.y,
+            &cfg,
+        );
+        check_session_equivalence(&Foba::default(), &ds.x, &ds.y, &cfg);
+        check_session_equivalence(
+            &NFoldGreedy { folds: 5, seed: 2 },
+            &ds.x,
+            &ds.y,
+            &cfg,
+        );
+        check_session_equivalence(&GreedyRankRls, &ds.x, &ds.y, &cfg);
+        check_session_equivalence(
+            &CenterSelector { kernel: Kernel::Rbf { gamma: 0.7 } },
+            &ds.x,
+            &ds.y,
+            &cfg,
+        );
+    }
+}
+
+#[test]
+fn session_equivalence_holds_on_random_problems() {
+    // smaller randomized sweep over shapes for the cache-based selectors
+    forall_seeds(8, |seed| {
+        let mut g = Gen::new(seed * 13 + 1);
+        let n = g.size(4, 10);
+        let m = g.size(5, 12);
+        let lam = g.lambda(-1, 1);
+        let x = g.matrix(n, m);
+        let y = g.labels(m);
+        let cfg = SelectionConfig {
+            k: 3.min(n),
+            lambda: lam,
+            loss: Loss::Squared,
+            ..Default::default()
+        };
+        check_session_equivalence(&GreedyRls, &x, &y, &cfg);
+        check_session_equivalence(&LowRankLsSvm, &x, &y, &cfg);
+        check_session_equivalence(&BackwardElimination, &x, &y, &cfg);
+        check_session_equivalence(
+            &NFoldGreedy { folds: 3, seed: 1 },
+            &x,
+            &y,
+            &cfg,
+        );
+    });
+}
+
 #[test]
 fn selection_is_deterministic() {
     let ds = synthetic::two_gaussians(60, 20, 5, 1.0, 23);
-    let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
     let a = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
     let b = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
     assert_eq!(a.selected, b.selected);
@@ -120,7 +265,7 @@ fn criterion_trajectories_match_across_algorithms() {
     let mut g = Gen::new(404);
     let x = g.matrix(8, 10);
     let y = g.labels(10);
-    let cfg = SelectionConfig { k: 4, lambda: 2.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k: 4, lambda: 2.0, loss: Loss::ZeroOne, ..Default::default() };
     let r2 = LowRankLsSvm.select(&x, &y, &cfg).unwrap();
     let r3 = GreedyRls.select(&x, &y, &cfg).unwrap();
     let c2 = r2.criterion_curve();

@@ -9,7 +9,10 @@ use greedy_rls::data::synthetic;
 use greedy_rls::metrics::Loss;
 use greedy_rls::proptest::assert_close;
 use greedy_rls::runtime::{engine::PjrtGreedy, Runtime};
-use greedy_rls::select::{greedy::GreedyRls, SelectionConfig, Selector};
+use greedy_rls::select::{
+    greedy::GreedyRls, run_to_completion, SelectionConfig, Selector,
+    SessionSelector,
+};
 
 fn runtime() -> Option<Runtime> {
     if !std::path::Path::new("artifacts/manifest.tsv").exists() {
@@ -44,7 +47,7 @@ fn pjrt_engine_matches_native_exactly() {
     ] {
         let ds = synthetic::two_gaussians(m, n, (n / 4).max(1), 1.5, m as u64);
         for loss in [Loss::ZeroOne, Loss::Squared] {
-            let cfg = SelectionConfig { k, lambda: lam, loss };
+            let cfg = SelectionConfig { k, lambda: lam, loss, ..Default::default() };
             let native = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
             let pjrt = PjrtGreedy::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap();
             assert_eq!(
@@ -86,9 +89,9 @@ fn missing_artifact_is_an_error() {
 fn pjrt_serving_matches_native_serving() {
     let Some(rt) = runtime() else { return };
     let ds = synthetic::two_gaussians(150, 30, 6, 1.5, 77);
-    let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k: 6, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
     let p = coordinator::fit(EngineKind::Native, None, &ds, &cfg).unwrap();
-    let (native_preds, _) = serve::serve_native(&p, &ds.x, 32);
+    let (native_preds, _) = serve::serve_native(&p, &ds.x, 32).unwrap();
     let (pjrt_preds, stats) = serve::serve_pjrt(&rt, &p, &ds.x, 32).unwrap();
     assert_eq!(stats.requests, 150);
     assert_close(&native_preds, &pjrt_preds, 1e-9, "serving preds");
@@ -98,7 +101,7 @@ fn pjrt_serving_matches_native_serving() {
 fn select_with_engine_dispatches_to_pjrt() {
     let Some(rt) = runtime() else { return };
     let ds = synthetic::two_gaussians(40, 16, 4, 1.5, 5);
-    let cfg = SelectionConfig { k: 3, lambda: 1.0, loss: Loss::ZeroOne };
+    let cfg = SelectionConfig { k: 3, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
     let r = coordinator::select_with_engine(
         EngineKind::Pjrt,
         Some(&rt),
@@ -109,6 +112,32 @@ fn select_with_engine_dispatches_to_pjrt() {
     .unwrap();
     let native = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
     assert_eq!(r.selected, native.selected);
+}
+
+#[test]
+fn pjrt_session_and_warm_start_match_one_shot() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_gaussians(48, 20, 5, 1.5, 13);
+    let cfg = SelectionConfig {
+        k: 5,
+        lambda: 1.0,
+        loss: Loss::ZeroOne,
+        ..Default::default()
+    };
+    let engine = PjrtGreedy::new(&rt);
+    let one_shot = engine.select(&ds.x, &ds.y, &cfg).unwrap();
+    let stepped =
+        run_to_completion(engine.begin(&ds.x, &ds.y, &cfg).unwrap()).unwrap();
+    assert_eq!(one_shot.selected, stepped.selected);
+    assert_eq!(one_shot.weights, stepped.weights);
+    let resumed = run_to_completion(
+        engine
+            .begin_from(&ds.x, &ds.y, &cfg, &one_shot.selected[..2])
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(one_shot.selected, resumed.selected);
+    assert_eq!(one_shot.weights, resumed.weights);
 }
 
 #[test]
