@@ -15,8 +15,8 @@ use greedy_rls::bench::{time_once, CellValue, Table, TimingObserver};
 use greedy_rls::data::synthetic::two_gaussians;
 use greedy_rls::metrics::Loss;
 use greedy_rls::select::{
-    drive, greedy::GreedyRls, lowrank::LowRankLsSvm, SelectionConfig,
-    Selector, SessionSelector,
+    drive, greedy::GreedyRls, lowrank::LowRankLsSvm, NoopObserver,
+    SelectionConfig, Selector, SessionSelector,
 };
 
 fn log_log_slope(xs: &[f64], ys: &[f64]) -> f64 {
@@ -43,16 +43,29 @@ fn main() {
         (200, 10, vec![300, 600, 900, 1200])
     };
 
+    let max_threads = greedy_rls::parallel::available();
     let mut table = Table::new(
         &format!("Fig 1/2 — runtime vs m (n={n}, k={k}, two-Gaussian)"),
-        &["m", "greedy_s", "lowrank_s", "speedup", "log10_greedy", "log10_lowrank"],
+        &[
+            "m",
+            "greedy_s",
+            "greedy_par_s",
+            "par_threads",
+            "par_speedup",
+            "lowrank_s",
+            "speedup",
+            "log10_greedy",
+            "log10_lowrank",
+        ],
     );
     let cfg = SelectionConfig {
         k,
         lambda: 1.0,
         loss: Loss::ZeroOne,
+        threads: 1,
         ..Default::default()
     };
+    let cfg_par = SelectionConfig { threads: max_threads, ..cfg };
     let (mut tg, mut tl) = (Vec::new(), Vec::new());
     let mut last_obs: Option<TimingObserver> = None;
     for &m in &ms {
@@ -65,6 +78,13 @@ fn main() {
             drive(session.as_mut(), &mut obs).unwrap();
             session.finish().unwrap();
         });
+        // the same run on the deterministic thread layer (bit-identical
+        // selections — only the wall-clock differs)
+        let t_gp = time_once(|| {
+            let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg_par).unwrap();
+            drive(session.as_mut(), &mut NoopObserver).unwrap();
+            session.finish().unwrap();
+        });
         let t_l = time_once(|| {
             LowRankLsSvm.select(&ds.x, &ds.y, &cfg).unwrap();
         });
@@ -74,6 +94,9 @@ fn main() {
         table.row(&Table::cells(&[
             CellValue::Usize(m),
             CellValue::F3(t_g),
+            CellValue::F3(t_gp),
+            CellValue::Usize(max_threads),
+            CellValue::F3(t_g / t_gp),
             CellValue::F3(t_l),
             CellValue::F3(t_l / t_g),
             CellValue::F3(t_g.log10()),

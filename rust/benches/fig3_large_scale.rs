@@ -29,37 +29,54 @@ fn main() {
         ..Default::default()
     };
 
+    let mut thread_series = vec![1usize, greedy_rls::parallel::available()];
+    thread_series.dedup();
+
     let mut table = Table::new(
         &format!("Fig 3 — greedy RLS runtime, n={n}, k={k}"),
-        &["m", "seconds", "ns_per_kmn", "gflops", "round_spread"],
+        &["m", "threads", "seconds", "ns_per_kmn", "gflops", "round_spread"],
     );
-    let mut units = Vec::new();
+    let mut units = Vec::new(); // 1-thread series (linearity claim)
+    let mut speedup_at_max_m = f64::NAN;
     for &m in &ms {
         let ds = two_gaussians(m, n, 50, 1.0, 43);
-        // one session run: total seconds AND the per-round flatness check
-        let mut obs = TimingObserver::default();
-        let secs = time_once(|| {
-            let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
-            drive(session.as_mut(), &mut obs).unwrap();
-            session.finish().unwrap();
-        });
-        // max/min per-round time: ≈1 ⇒ every round costs the same O(mn)
-        let round_spread = {
-            let max = obs.per_round_s.iter().cloned().fold(f64::MIN, f64::max);
-            let min = obs.per_round_s.iter().cloned().fold(f64::MAX, f64::min);
-            if min > 0.0 { max / min } else { f64::NAN }
-        };
-        // per-round work ≈ score pass (6 mul+add × mn) + commit (4 × mn)
-        let flops = k as f64 * m as f64 * n as f64 * 10.0;
-        let unit = secs * 1e9 / (k as f64 * m as f64 * n as f64);
-        units.push(unit);
-        table.row(&Table::cells(&[
-            CellValue::Usize(m),
-            CellValue::F3(secs),
-            CellValue::F3(unit),
-            CellValue::F3(flops / secs / 1e9),
-            CellValue::F3(round_spread),
-        ]));
+        let mut secs_1t = f64::NAN;
+        for &t in &thread_series {
+            let cfg_t = SelectionConfig { threads: t, ..cfg };
+            // one session run: total seconds AND per-round flatness check
+            let mut obs = TimingObserver::default();
+            let secs = time_once(|| {
+                let mut session =
+                    GreedyRls.begin(&ds.x, &ds.y, &cfg_t).unwrap();
+                drive(session.as_mut(), &mut obs).unwrap();
+                session.finish().unwrap();
+            });
+            // max/min per-round time: ≈1 ⇒ every round is the same O(mn)
+            let round_spread = {
+                let max =
+                    obs.per_round_s.iter().cloned().fold(f64::MIN, f64::max);
+                let min =
+                    obs.per_round_s.iter().cloned().fold(f64::MAX, f64::min);
+                if min > 0.0 { max / min } else { f64::NAN }
+            };
+            // per-round work ≈ score (6 mul+add × mn) + commit (4 × mn)
+            let flops = k as f64 * m as f64 * n as f64 * 10.0;
+            let unit = secs * 1e9 / (k as f64 * m as f64 * n as f64);
+            if t == 1 {
+                secs_1t = secs;
+                units.push(unit);
+            } else if m == *ms.last().unwrap() {
+                speedup_at_max_m = secs_1t / secs;
+            }
+            table.row(&Table::cells(&[
+                CellValue::Usize(m),
+                CellValue::Usize(t),
+                CellValue::F3(secs),
+                CellValue::F3(unit),
+                CellValue::F3(flops / secs / 1e9),
+                CellValue::F3(round_spread),
+            ]));
+        }
     }
     table.print();
     let _ = table.write_csv("fig3_large_scale");
@@ -67,7 +84,17 @@ fn main() {
     let spread = units.iter().cloned().fold(f64::MIN, f64::max)
         / units.iter().cloned().fold(f64::MAX, f64::min);
     println!(
-        "\nns per k·m·n spread across the grid: ×{spread:.2} \
+        "\nns per k·m·n spread across the 1-thread grid: ×{spread:.2} \
          (≈1 ⇒ the paper's O(kmn) linear-scaling claim holds)"
     );
+    if let Some(&t) = thread_series.last() {
+        if t > 1 {
+            println!(
+                "parallel speedup at m={} with {t} threads: ×{:.2} \
+                 (bit-identical selections — wall-clock only)",
+                ms.last().unwrap(),
+                speedup_at_max_m
+            );
+        }
+    }
 }

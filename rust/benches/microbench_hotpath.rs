@@ -8,64 +8,197 @@
 //!   fused axpy — ≈4 flops and 24 bytes (16 read + 8 write) per pair.
 //!
 //! Both are memory-bandwidth-bound; this bench reports achieved GB/s and
-//! GFLOP/s so the §Perf roofline discussion has hard numbers.
+//! GFLOP/s so the §Perf roofline discussion has hard numbers, and sweeps
+//! the deterministic thread layer (`--threads 1,2,4,...`) to measure the
+//! parallel speedup of both passes.
+//!
+//! Output: the usual table + CSV, plus a machine-readable
+//! `BENCH_hotpath.json` (median ms, GB/s, GFLOP/s, speedup-vs-1-thread
+//! per (m, n, threads)) so the repo's perf trajectory is tracked across
+//! PRs instead of living only in terminal scrollback.
+//!
+//! Flags (after `cargo bench --bench microbench_hotpath --`):
+//! `--threads L` comma-separated thread counts (default `1,2,4` plus the
+//! machine's available parallelism); `--smoke` shrinks the grid to one
+//! tiny (m, n) for CI.
 
 use greedy_rls::bench::{time, CellValue, Table};
 use greedy_rls::data::synthetic::two_gaussians;
 use greedy_rls::metrics::Loss;
+use greedy_rls::parallel;
 use greedy_rls::select::greedy::GreedyState;
 
+struct Record {
+    m: usize,
+    n: usize,
+    threads: usize,
+    score_ms: f64,
+    score_gbps: f64,
+    score_gflops: f64,
+    commit_ms: f64,
+    commit_gbps: f64,
+    score_speedup_vs_1t: f64,
+}
+
+fn parse_args() -> (Vec<usize>, bool) {
+    let mut threads: Vec<usize> = vec![1, 2, 4, parallel::available()];
+    threads.sort_unstable();
+    threads.dedup();
+    let mut smoke = false;
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--threads" => {
+                let list = it.next().expect("--threads needs a value");
+                threads = list
+                    .split(',')
+                    .map(|t| t.trim().parse().expect("--threads T1,T2,..."))
+                    .collect();
+                assert!(
+                    threads.iter().all(|&t| t >= 1),
+                    "thread counts must be >= 1"
+                );
+                // ascending order guarantees the 1-thread baseline (when
+                // present) is measured before its speedup consumers;
+                // without 1 in the list the speedup column is null
+                threads.sort_unstable();
+                threads.dedup();
+            }
+            "--smoke" => smoke = true,
+            _ => {} // ignore cargo-bench harness flags (--bench, ...)
+        }
+    }
+    (threads, smoke)
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(records: &[Record]) -> std::io::Result<()> {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"available_parallelism\": {},\n",
+        parallel::available()
+    ));
+    out.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"m\": {}, \"n\": {}, \"threads\": {}, \
+             \"score_ms\": {}, \"score_gbps\": {}, \"score_gflops\": {}, \
+             \"commit_ms\": {}, \"commit_gbps\": {}, \
+             \"score_speedup_vs_1t\": {}}}{}\n",
+            r.m,
+            r.n,
+            r.threads,
+            json_num(r.score_ms),
+            json_num(r.score_gbps),
+            json_num(r.score_gflops),
+            json_num(r.commit_ms),
+            json_num(r.commit_gbps),
+            json_num(r.score_speedup_vs_1t),
+            if i + 1 < records.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write("BENCH_hotpath.json", out)
+}
+
 fn main() {
+    let (threads, smoke) = parse_args();
+    let sizes: Vec<(usize, usize)> = if smoke {
+        vec![(200, 64)]
+    } else {
+        vec![(1000, 1000), (2000, 1000), (4000, 1000), (2000, 4000)]
+    };
+
     let mut table = Table::new(
         "Microbench — per-round hot paths",
         &[
             "m",
             "n",
+            "threads",
             "score_ms",
             "score_gbps",
             "score_gflops",
             "commit_ms",
             "commit_gbps",
+            "score_speedup",
         ],
     );
-    for (m, n) in [(1000usize, 1000usize), (2000, 1000), (4000, 1000), (2000, 4000)] {
-        let ds = two_gaussians(m, n, 50, 1.0, 3);
-        let st = GreedyState::init(&ds.x, &ds.y, 1.0);
+    let mut records: Vec<Record> = Vec::new();
+    for &(m, n) in &sizes {
+        let ds = two_gaussians(m, n, 50.min(n), 1.0, 3);
+        let mut score_1t_ms = f64::NAN;
+        for &t in &threads {
+            let st = GreedyState::init(&ds.x, &ds.y, 1.0).with_threads(t);
+            let score = time(1, 5, || {
+                std::hint::black_box(st.score_all(&ds.x, &ds.y, Loss::ZeroOne));
+            });
+            // bytes: X row + C row, each m f64, per candidate, streamed
+            // twice (pass 1 dots, pass 2 loss) → 4 × 8 × m × n
+            let score_bytes = 4.0 * 8.0 * m as f64 * n as f64;
+            let score_flops = 10.0 * m as f64 * n as f64;
 
-        let score = time(1, 5, || {
-            std::hint::black_box(st.score_all(&ds.x, &ds.y, Loss::ZeroOne));
-        });
-        // bytes: X row + C row, each m f64, per candidate, streamed twice
-        // (pass 1 dots, pass 2 loss) → 4 × 8 × m × n
-        let score_bytes = 4.0 * 8.0 * m as f64 * n as f64;
-        let score_flops = 10.0 * m as f64 * n as f64;
+            // pure commit cost: one long-lived state, commit a fresh
+            // feature per repetition (each commit is the same O(mn)
+            // regardless of |S|)
+            let mut st2 =
+                GreedyState::init(&ds.x, &ds.y, 1.0).with_threads(t);
+            let mut next = 0usize;
+            let commit = time(1, 5, || {
+                st2.commit(&ds.x, next);
+                next += 1;
+            });
+            // commit streams every C row read+write plus X row read
+            // ≈ 3×8×mn
+            let commit_bytes = 3.0 * 8.0 * m as f64 * n as f64;
 
-        // pure commit cost: one long-lived state, commit a fresh feature
-        // per repetition (each commit is the same O(mn) regardless of |S|)
-        let mut st2 = GreedyState::init(&ds.x, &ds.y, 1.0);
-        let mut next = 0usize;
-        let commit = time(1, 5, || {
-            st2.commit(&ds.x, next);
-            next += 1;
-        });
-        // commit streams every C row read+write plus X row read ≈ 3×8×mn
-        let commit_bytes = 3.0 * 8.0 * m as f64 * n as f64;
-
-        table.row(&Table::cells(&[
-            CellValue::Usize(m),
-            CellValue::Usize(n),
-            CellValue::F3(score.median_s * 1e3),
-            CellValue::F3(score_bytes / score.median_s / 1e9),
-            CellValue::F3(score_flops / score.median_s / 1e9),
-            CellValue::F3(commit.median_s * 1e3),
-            CellValue::F3(commit_bytes / commit.median_s / 1e9),
-        ]));
+            let score_ms = score.median_s * 1e3;
+            if t == 1 {
+                score_1t_ms = score_ms;
+            }
+            let speedup = score_1t_ms / score_ms;
+            records.push(Record {
+                m,
+                n,
+                threads: t,
+                score_ms,
+                score_gbps: score_bytes / score.median_s / 1e9,
+                score_gflops: score_flops / score.median_s / 1e9,
+                commit_ms: commit.median_s * 1e3,
+                commit_gbps: commit_bytes / commit.median_s / 1e9,
+                score_speedup_vs_1t: speedup,
+            });
+            let r = records.last().unwrap();
+            table.row(&Table::cells(&[
+                CellValue::Usize(m),
+                CellValue::Usize(n),
+                CellValue::Usize(t),
+                CellValue::F3(r.score_ms),
+                CellValue::F3(r.score_gbps),
+                CellValue::F3(r.score_gflops),
+                CellValue::F3(r.commit_ms),
+                CellValue::F3(r.commit_gbps),
+                CellValue::F3(r.score_speedup_vs_1t),
+            ]));
+        }
     }
     table.print();
     let _ = table.write_csv("microbench_hotpath");
+    match write_json(&records) {
+        Ok(()) => println!("\nmachine-readable: BENCH_hotpath.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
+    }
     println!(
-        "\nscore streams 32·m·n bytes per round, commit 24·m·n; achieved \
+        "score streams 32·m·n bytes per round, commit 24·m·n; achieved \
          GB/s against this box's streaming bandwidth is the roofline \
-         ratio recorded in EXPERIMENTS.md §Perf."
+         ratio recorded in EXPERIMENTS.md §Perf. Speedups are vs the \
+         1-thread run of the same (m, n); results are bit-identical at \
+         every thread count."
     );
 }

@@ -168,22 +168,30 @@ COMMANDS
   select     run greedy RLS on a dataset, print/save the sparse model
              --dataset NAME | --synthetic M,N   --k K  [--lambda L]
              [--loss 01|squared] [--engine native|pjrt] [--out FILE]
-             [--seed S] [--full]
+             [--seed S] [--full] [--threads T]
              session control: [--stop k|plateau|time] [--patience N]
              [--min-rel-improvement F] [--time-budget-s S]
              [--warm-start I1,I2,...] [--progress]
   cv         paper §4.2 protocol: stratified CV accuracy curves
              --dataset NAME [--folds 10] [--kmax K] [--seed S] [--full]
+             [--threads T]
   scaling    paper §4.1 runtime scaling experiment
              [--sizes 500,1000,...] [--n 1000] [--k 50] [--baseline]
+             [--threads T]
   serve      batched predictions with a saved model
              --model FILE --dataset NAME [--batch 64] [--engine native|pjrt]
   compare    run every selection algorithm on one dataset side by side
              --dataset NAME | --synthetic M,N  [--k 5] [--lambda 1.0]
+             [--threads T]
   datasets   print the benchmark registry (paper Table 1)
   check      verify artifacts: compile all buckets, cross-check PJRT
              against the native engine on a probe problem
   help       this text
+
+--threads T sizes the deterministic parallel execution layer for the
+O(mn) per-round scans and cache updates (0 = all hardware threads, the
+default; 1 = serial). Selected features, criterion curves, and weights
+are bit-identical at every thread count — only the wall-clock changes.
 
 Artifacts: run `make artifacts` once; the binary never invokes Python.
 ";

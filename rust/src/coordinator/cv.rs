@@ -55,11 +55,32 @@ pub fn selection_curve(
     k: usize,
     order: &Order,
 ) -> Curve {
+    selection_curve_threads(
+        x_train, y_train, x_test, y_test, lambda, k, order, 0,
+    )
+}
+
+/// [`selection_curve`] with an explicit worker-thread count for the
+/// per-round scans (`0` = available parallelism). The curve is
+/// bit-identical at any thread count; [`run_cv_threads`] passes `1` here
+/// when the folds themselves run in parallel.
+#[allow(clippy::too_many_arguments)]
+pub fn selection_curve_threads(
+    x_train: &Matrix,
+    y_train: &[f64],
+    x_test: &Matrix,
+    y_test: &[f64],
+    lambda: f64,
+    k: usize,
+    order: &Order,
+    threads: usize,
+) -> Curve {
     let m = y_train.len() as f64;
     let cfg = SelectionConfig::builder()
         .k(k)
         .lambda(lambda)
         .loss(Loss::ZeroOne)
+        .threads(threads)
         .build();
     let mut session =
         GreedyRls.begin(x_train, y_train, &cfg).expect("begin session");
@@ -120,40 +141,84 @@ pub fn run_cv(
     k_max: usize,
     seed: u64,
 ) -> Result<CvCurves> {
+    run_cv_threads(ds, folds, k_max, seed, 0)
+}
+
+/// [`run_cv`] with an explicit worker-thread budget (`0` = available
+/// parallelism). The folds are independent once the RNG-driven setup
+/// (stratification + per-fold random permutations) is drawn up front in
+/// fold order, so they run on parallel workers; per-fold results are
+/// merged on the calling thread in fold order, making the curves
+/// bit-identical to the serial protocol at any thread count. When more
+/// than one fold worker runs, the inner selection sessions are serial;
+/// with a single fold (or `threads == 1`) the thread budget goes to the
+/// per-round scans instead.
+pub fn run_cv_threads(
+    ds: &Dataset,
+    folds: usize,
+    k_max: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<CvCurves> {
     let k_max = k_max.min(ds.n_features());
     let mut rng = Pcg64::new(seed, 71);
     let f = Folds::stratified(&ds.y, folds, &mut rng);
     let grid = super::grid::default_grid();
 
+    // Draw all RNG-dependent state in fold order (the exact consumption
+    // order of the serial protocol) before fanning out.
+    let splits: Vec<(Vec<usize>, Vec<usize>)> = f.splits().collect();
+    let perms: Vec<Vec<usize>> = splits
+        .iter()
+        .map(|_| {
+            let mut perm: Vec<usize> = (0..ds.n_features()).collect();
+            rng.shuffle(&mut perm);
+            perm
+        })
+        .collect();
+
+    let outer = crate::parallel::resolve(threads).min(splits.len());
+    let inner = if outer > 1 { 1 } else { threads };
+    let per_fold: Vec<(Curve, Curve, f64)> =
+        crate::parallel::par_map(outer, splits.len(), |i| {
+            let (train_idx, test_idx) = &splits[i];
+            let mut train = ds.subset(train_idx);
+            let mut test = ds.subset(test_idx);
+            let stats = train.standardize();
+            test.apply_standardization(&stats);
+
+            let (lam, _) =
+                super::grid::search(&train.x, &train.y, &grid, Loss::ZeroOne);
+
+            let gc = selection_curve_threads(
+                &train.x,
+                &train.y,
+                &test.x,
+                &test.y,
+                lam,
+                k_max,
+                &Order::Greedy,
+                inner,
+            );
+            let rc = selection_curve_threads(
+                &train.x,
+                &train.y,
+                &test.x,
+                &test.y,
+                lam,
+                k_max,
+                &Order::Fixed(perms[i].clone()),
+                inner,
+            );
+            (gc, rc, lam)
+        });
+
     let mut greedy_test = vec![Vec::new(); k_max];
     let mut greedy_loo = vec![Vec::new(); k_max];
     let mut random_test = vec![Vec::new(); k_max];
     let mut lambdas = Vec::new();
-
-    for (train_idx, test_idx) in f.splits() {
-        let mut train = ds.subset(&train_idx);
-        let mut test = ds.subset(&test_idx);
-        let stats = train.standardize();
-        test.apply_standardization(&stats);
-
-        let (lam, _) =
-            super::grid::search(&train.x, &train.y, &grid, Loss::ZeroOne);
-        lambdas.push(lam);
-
-        let gc = selection_curve(
-            &train.x, &train.y, &test.x, &test.y, lam, k_max, &Order::Greedy,
-        );
-        let mut perm: Vec<usize> = (0..ds.n_features()).collect();
-        rng.shuffle(&mut perm);
-        let rc = selection_curve(
-            &train.x,
-            &train.y,
-            &test.x,
-            &test.y,
-            lam,
-            k_max,
-            &Order::Fixed(perm),
-        );
+    for (gc, rc, lam) in &per_fold {
+        lambdas.push(*lam);
         for k in 0..k_max {
             greedy_test[k].push(gc.test_acc[k]);
             greedy_loo[k].push(gc.loo_acc[k]);
@@ -268,6 +333,28 @@ mod tests {
             cv.greedy_test,
             cv.random_test
         );
+    }
+
+    /// Parallel folds must reproduce the serial protocol exactly —
+    /// identical curves and λ choices at every thread count.
+    #[test]
+    fn parallel_folds_are_bit_identical() {
+        let ds = crate::data::synthetic::planted_sparse(
+            "t", 90, 12, 3, 1.2, 0.9, 0.05, 17,
+        );
+        let serial = run_cv_threads(&ds, 3, 6, 5, 1).unwrap();
+        for threads in [2usize, 4] {
+            let par = run_cv_threads(&ds, 3, 6, 5, threads).unwrap();
+            assert_eq!(serial.ks, par.ks, "threads={threads}");
+            assert_eq!(serial.lambdas, par.lambdas, "threads={threads}");
+            assert_eq!(
+                serial.greedy_test, par.greedy_test,
+                "threads={threads}"
+            );
+            assert_eq!(serial.greedy_loo, par.greedy_loo);
+            assert_eq!(serial.random_test, par.random_test);
+            assert_eq!(serial.greedy_test_std, par.greedy_test_std);
+        }
     }
 
     #[test]

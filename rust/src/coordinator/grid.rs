@@ -68,38 +68,70 @@ pub struct LambdaKChoice {
 /// per λ replaces `base.k` separate grid searches. Honors `base.stop`
 /// (e.g. a plateau policy prunes hopeless λ early). Ties break toward
 /// larger λ, then smaller k — the conservative choice, as in [`search`].
+///
+/// The λ cells are independent selection runs, so they execute on
+/// parallel workers sized by `base.threads` (`0` = auto); each cell's
+/// champion — the first k reaching that λ's criterion minimum, exactly
+/// what the serial scan would retain — is reduced on the calling thread
+/// in grid order with the same tie-break, so the choice is bit-identical
+/// to the serial sweep at any thread count. With more than one λ worker
+/// the per-cell sessions run serial scans; a single-cell grid gives its
+/// session the whole thread budget instead.
 pub fn sweep_lambda_k(
     x: &Matrix,
     y: &[f64],
     grid: &[f64],
     base: &SelectionConfig,
 ) -> anyhow::Result<LambdaKChoice> {
-    let mut best: Option<LambdaKChoice> = None;
-    for &lam in grid {
-        let cfg = SelectionConfig { lambda: lam, ..*base };
-        let mut session = GreedyRls.begin(x, y, &cfg)?;
-        loop {
-            match session.step()? {
-                StepOutcome::Selected(round) => {
-                    let k = session.rounds_done();
-                    let cand =
-                        LambdaKChoice { lambda: lam, k, criterion: round.criterion };
-                    let better = match best {
-                        None => true,
-                        Some(b) => {
-                            cand.criterion < b.criterion
-                                || (cand.criterion == b.criterion
-                                    && (cand.lambda > b.lambda
-                                        || (cand.lambda == b.lambda
-                                            && cand.k < b.k)))
+    let outer = crate::parallel::resolve(base.threads).min(grid.len().max(1));
+    let inner = if outer > 1 { 1 } else { base.threads };
+    let per_lambda: Vec<anyhow::Result<Option<LambdaKChoice>>> =
+        crate::parallel::par_map(outer, grid.len(), |gi| {
+            let lam = grid[gi];
+            let cfg =
+                SelectionConfig { lambda: lam, threads: inner, ..*base };
+            let mut session = GreedyRls.begin(x, y, &cfg)?;
+            // champion of this λ: the first k achieving the running
+            // strict minimum — the candidate the serial global fold
+            // would retain from this cell
+            let mut cell: Option<LambdaKChoice> = None;
+            loop {
+                match session.step()? {
+                    StepOutcome::Selected(round) => {
+                        let k = session.rounds_done();
+                        let cand = LambdaKChoice {
+                            lambda: lam,
+                            k,
+                            criterion: round.criterion,
+                        };
+                        let better = match cell {
+                            None => true,
+                            Some(c) => cand.criterion < c.criterion,
+                        };
+                        if better {
+                            cell = Some(cand);
                         }
-                    };
-                    if better {
-                        best = Some(cand);
                     }
+                    StepOutcome::Done(_) => break,
                 }
-                StepOutcome::Done(_) => break,
             }
+            Ok(cell)
+        });
+
+    let mut best: Option<LambdaKChoice> = None;
+    for res in per_lambda {
+        let Some(cand) = res? else { continue };
+        let better = match best {
+            None => true,
+            Some(b) => {
+                cand.criterion < b.criterion
+                    || (cand.criterion == b.criterion
+                        && (cand.lambda > b.lambda
+                            || (cand.lambda == b.lambda && cand.k < b.k)))
+            }
+        };
+        if better {
+            best = Some(cand);
         }
     }
     best.ok_or_else(|| anyhow::anyhow!("no (λ, k) candidate evaluated"))
@@ -170,6 +202,46 @@ mod tests {
             choice.k >= 3,
             "needs at least the planted support: {choice:?}"
         );
+    }
+
+    /// The parallel λ sweep must make the exact choice of the serial
+    /// sweep at every thread count.
+    #[test]
+    fn parallel_sweep_is_bit_identical() {
+        let (ds, _) =
+            crate::data::synthetic::sparse_regression(120, 15, 3, 0.05, 33);
+        let grid = default_grid();
+        let serial = sweep_lambda_k(
+            &ds.x,
+            &ds.y,
+            &grid,
+            &SelectionConfig::builder()
+                .k(6)
+                .loss(Loss::Squared)
+                .threads(1)
+                .build(),
+        )
+        .unwrap();
+        for threads in [2usize, 4] {
+            let par = sweep_lambda_k(
+                &ds.x,
+                &ds.y,
+                &grid,
+                &SelectionConfig::builder()
+                    .k(6)
+                    .loss(Loss::Squared)
+                    .threads(threads)
+                    .build(),
+            )
+            .unwrap();
+            assert_eq!(serial.lambda, par.lambda, "threads={threads}");
+            assert_eq!(serial.k, par.k, "threads={threads}");
+            assert_eq!(
+                serial.criterion.to_bits(),
+                par.criterion.to_bits(),
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod metrics;
+pub mod parallel;
 pub mod proptest;
 pub mod rls;
 pub mod rng;

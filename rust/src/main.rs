@@ -83,6 +83,7 @@ fn cmd_select(args: &Args) -> Result<()> {
         .lambda(args.get_or("lambda", 1.0f64)?)
         .loss(args.get_or("loss", Loss::ZeroOne)?)
         .stop(stop)
+        .threads(args.get_or("threads", 0usize)?)
         .build();
     let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
     let rt = open_runtime_if(engine)?;
@@ -96,12 +97,13 @@ fn cmd_select(args: &Args) -> Result<()> {
         None => None,
     };
     println!(
-        "dataset={} m={} n={} k={} lambda={} engine={engine:?}{}",
+        "dataset={} m={} n={} k={} lambda={} engine={engine:?} threads={}{}",
         ds.name,
         ds.n_examples(),
         ds.n_features(),
         cfg.k,
         cfg.lambda,
+        greedy_rls::parallel::resolve(cfg.threads),
         match cfg.stop {
             StopPolicy::KBudget(b) if b == usize::MAX => String::new(),
             other => format!(" stop={other:?}"),
@@ -157,13 +159,14 @@ fn cmd_cv(args: &Args) -> Result<()> {
     let folds: usize = args.get_or("folds", 10usize)?;
     let kmax: usize = args.get_or("kmax", ds.n_features().min(50))?;
     let seed: u64 = args.get_or("seed", 42u64)?;
+    let threads: usize = args.get_or("threads", 0usize)?;
     println!(
         "# cv dataset={} m={} n={} folds={folds} kmax={kmax}",
         ds.name,
         ds.n_examples(),
         ds.n_features()
     );
-    let curves = cv::run_cv(&ds, folds, kmax, seed)?;
+    let curves = cv::run_cv_threads(&ds, folds, kmax, seed, threads)?;
     println!("k\tgreedy_test\tgreedy_loo\trandom_test\tgreedy_test_std");
     for (i, k) in curves.ks.iter().enumerate() {
         println!(
@@ -190,9 +193,16 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         None => vec![500, 1000, 1500, 2000, 2500, 3000],
     };
     let with_baseline = args.has("baseline");
-    println!("# scaling n={n} k={k} (paper §4.1)");
+    let threads: usize = args.get_or("threads", 0usize)?;
+    println!("# scaling n={n} k={k} threads={threads} (paper §4.1; 0=auto)");
     println!("m\tgreedy_rls_s{}", if with_baseline { "\tlowrank_s" } else { "" });
-    let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
+    let cfg = SelectionConfig {
+        k,
+        lambda: 1.0,
+        loss: Loss::ZeroOne,
+        threads,
+        ..Default::default()
+    };
     for &m in &sizes {
         let ds = synthetic::two_gaussians(m, n, 50, 1.0, seed);
         let t_greedy =
@@ -255,7 +265,9 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let lambda: f64 = args.get_or("lambda", 1.0f64)?;
     let loss: Loss = args.get_or("loss", Loss::ZeroOne)?;
     let seed: u64 = args.get_or("seed", 42u64)?;
-    let cfg = SelectionConfig { k, lambda, loss, ..Default::default() };
+    let threads: usize = args.get_or("threads", 0usize)?;
+    let cfg =
+        SelectionConfig { k, lambda, loss, threads, ..Default::default() };
 
     let mut rng = Pcg64::new(seed, 91);
     let (tr, te) = train_test_split(ds.n_examples(), 0.25, &mut rng);

@@ -1,0 +1,388 @@
+//! Deterministic multi-threaded execution layer for the O(mn) hot paths.
+//!
+//! The paper makes each greedy round linear in the data (`score_all` and
+//! `commit` are two memory-bound O(mn) passes), and both passes are
+//! embarrassingly parallel across candidates / cache rows. This module is
+//! the crate's one place that spawns threads: scoped workers over
+//! contiguous index ranges, sized by [`SelectionConfig::threads`]
+//! (`0` = available parallelism) with a serial fast path at one thread.
+//!
+//! **Determinism is the design constraint, not a hope.** Work is only ever
+//! split at boundaries where the serial algorithm's arithmetic is already
+//! independent:
+//!
+//! * per-candidate scans split the candidate list into contiguous ranges —
+//!   each candidate's score involves no cross-candidate reduction, so the
+//!   assembled score vector is bit-identical to the serial scan;
+//! * the greedy engine's register-blocked scan splits the *active list at
+//!   quad boundaries* ([`quad_ranges`]) so the blocks-of-4 grouping — and
+//!   therefore the exact operation order per candidate — is the same at
+//!   any thread count (and matches `GreedyState::score_of`);
+//! * rank-1 cache downdates split the n independent cache rows
+//!   ([`for_each_row_chunk`]); every row sees the identical serial update.
+//!
+//! Reductions (argmin, accumulation over folds / λ cells) always happen on
+//! the calling thread, in the serial order. The bit-identity of selected
+//! sets, criterion curves, and weights at `threads ∈ {1, 2, 4}` is
+//! enforced by `rust/tests/equivalence.rs`.
+//!
+//! [`SelectionConfig::threads`]: crate::select::SelectionConfig::threads
+
+use std::ops::Range;
+
+/// Number of hardware threads the host reports (≥ 1).
+pub fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a configured thread count: `0` means "use available
+/// parallelism", anything else is taken literally.
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        available()
+    } else {
+        threads
+    }
+}
+
+/// Split `0..len` into at most `parts` contiguous, non-empty, balanced
+/// ranges (sizes differ by at most one), in order. Empty input yields no
+/// ranges.
+pub fn split_ranges(len: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1).min(len);
+    if parts == 0 {
+        return Vec::new();
+    }
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let size = base + usize::from(p < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+/// Split `0..len` into at most `parts` contiguous ranges whose *interior*
+/// boundaries are multiples of 4, balanced by quad count; the final range
+/// absorbs the `len % 4` remainder. This is the sharding under the greedy
+/// engine's register-blocked scan: a range never cuts a quad in half, so
+/// each worker's blocks-of-4 grouping matches the serial scan's exactly.
+pub fn quad_ranges(len: usize, parts: usize) -> Vec<Range<usize>> {
+    let quads = len / 4;
+    if quads == 0 {
+        return if len == 0 { Vec::new() } else { vec![0..len] };
+    }
+    let mut out: Vec<Range<usize>> = split_ranges(quads, parts.max(1))
+        .into_iter()
+        .map(|r| r.start * 4..r.end * 4)
+        .collect();
+    // the scalar remainder rides with the last worker
+    out.last_mut().expect("quads >= 1").end = len;
+    out
+}
+
+/// Map `f` over `ranges` with one scoped worker per range beyond the
+/// first (which runs on the calling thread); results are returned in
+/// range order. With zero or one range no thread is spawned.
+///
+/// A panic in any worker is propagated to the caller.
+pub fn map_ranges<R, F>(ranges: &[Range<usize>], f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(Range<usize>) -> R + Sync,
+{
+    if ranges.len() <= 1 {
+        return ranges.iter().cloned().map(&f).collect();
+    }
+    let fref = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges[1..]
+            .iter()
+            .map(|r| {
+                let r = r.clone();
+                s.spawn(move || fref(r))
+            })
+            .collect();
+        let mut out = Vec::with_capacity(ranges.len());
+        out.push(fref(ranges[0].clone()));
+        for h in handles {
+            out.push(
+                h.join()
+                    .unwrap_or_else(|e| std::panic::resume_unwind(e)),
+            );
+        }
+        out
+    })
+}
+
+/// Deterministic parallel map: `f(i)` for `i in 0..len`, results in index
+/// order, computed on up to `threads` workers (resolved via [`resolve`]).
+/// Bit-identical to the serial `(0..len).map(f)` because each element is
+/// computed independently and assembled in order on the calling thread.
+pub fn par_map<R, F>(threads: usize, len: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let t = resolve(threads).min(len);
+    if t <= 1 {
+        return (0..len).map(f).collect();
+    }
+    let ranges = split_ranges(len, t);
+    map_ranges(&ranges, |r| r.map(&f).collect::<Vec<R>>())
+        .into_iter()
+        .flatten()
+        .collect()
+}
+
+/// Apply `f` to balanced, row-aligned chunks of a flat row-major buffer
+/// (`buf.len()` must be a multiple of `row_len`); the first chunk runs on
+/// the calling thread (as in [`map_ranges`]) and each further chunk gets
+/// a scoped worker. `f` receives the chunk's first row index and the
+/// mutable chunk. Rows are disjoint and each receives the identical
+/// serial update, so the result is bit-identical at any thread count.
+pub fn for_each_row_chunk<F>(
+    threads: usize,
+    buf: &mut [f64],
+    row_len: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    assert!(row_len > 0, "row_len must be positive");
+    assert_eq!(buf.len() % row_len, 0, "buffer not row-aligned");
+    let rows = buf.len() / row_len;
+    if rows == 0 {
+        return;
+    }
+    let t = resolve(threads).min(rows);
+    if t <= 1 {
+        f(0, buf);
+        return;
+    }
+    let rows_per = (rows + t - 1) / t;
+    let fref = &f;
+    let mut chunks: Vec<(usize, &mut [f64])> = Vec::with_capacity(t);
+    let mut start_row = 0;
+    for chunk in buf.chunks_mut(rows_per * row_len) {
+        let rows_here = chunk.len() / row_len;
+        chunks.push((start_row, chunk));
+        start_row += rows_here;
+    }
+    std::thread::scope(|s| {
+        let mut rest = chunks.into_iter();
+        let (first_row, first_chunk) =
+            rest.next().expect("rows >= 1 implies at least one chunk");
+        for (sr, chunk) in rest {
+            s.spawn(move || fref(sr, chunk));
+        }
+        fref(first_row, first_chunk);
+    });
+}
+
+/// Shared SMW rank-1 row update — the O(mn) cache downdate of the
+/// greedy-family engines: for every row r of row-major `buf`,
+/// `w = v·r; if w ≠ 0 { r ← r + sign·w·u }`, rows sharded across
+/// `threads` workers. `sign` is `-1.0` for the forward commit downdate
+/// and `+1.0` for backward elimination's sign-flipped removal; the
+/// negation is exact in IEEE 754, so both directions stay bit-identical
+/// to their fused serial loops.
+pub fn rank1_row_update(
+    threads: usize,
+    buf: &mut [f64],
+    row_len: usize,
+    v: &[f64],
+    u: &[f64],
+    sign: f64,
+) {
+    for_each_row_chunk(threads, buf, row_len, |_, chunk| {
+        for row in chunk.chunks_exact_mut(row_len) {
+            let w = crate::linalg::dot(v, row);
+            if w != 0.0 {
+                let sw = sign * w;
+                for (r, &uj) in row.iter_mut().zip(u) {
+                    *r += sw * uj;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_partition(ranges: &[Range<usize>], len: usize) {
+        let mut cursor = 0;
+        for r in ranges {
+            assert_eq!(r.start, cursor, "gap/overlap in {ranges:?}");
+            assert!(r.end > r.start, "empty range in {ranges:?}");
+            cursor = r.end;
+        }
+        assert_eq!(cursor, len, "ranges don't cover 0..{len}: {ranges:?}");
+    }
+
+    #[test]
+    fn resolve_zero_is_auto() {
+        assert_eq!(resolve(0), available());
+        assert!(available() >= 1);
+        assert_eq!(resolve(3), 3);
+    }
+
+    #[test]
+    fn split_ranges_partitions_and_balances() {
+        for len in 0..40 {
+            for parts in 1..8 {
+                let r = split_ranges(len, parts);
+                assert_partition(&r, len);
+                assert!(r.len() <= parts);
+                if len > 0 {
+                    let sizes: Vec<usize> =
+                        r.iter().map(|x| x.end - x.start).collect();
+                    let min = sizes.iter().min().unwrap();
+                    let max = sizes.iter().max().unwrap();
+                    assert!(max - min <= 1, "unbalanced {sizes:?}");
+                }
+            }
+        }
+    }
+
+    /// The quad-sharding property the greedy scan's determinism rests on:
+    /// every interior boundary sits on a multiple of 4, for every uneven
+    /// (len, parts) combination.
+    #[test]
+    fn quad_ranges_never_split_a_quad() {
+        for len in 0..50 {
+            for parts in 1..8 {
+                let r = quad_ranges(len, parts);
+                assert_partition(&r, len);
+                for w in r.windows(2) {
+                    assert_eq!(
+                        w[0].end % 4,
+                        0,
+                        "interior boundary off-quad: {r:?} (len={len})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quad_ranges_remainder_rides_last() {
+        let r = quad_ranges(11, 2); // 2 quads + 3 remainder
+        assert_eq!(r, vec![0..4, 4..11]);
+        let r = quad_ranges(3, 4); // no full quad at all
+        assert_eq!(r, vec![0..3]);
+        assert!(quad_ranges(0, 3).is_empty());
+    }
+
+    #[test]
+    fn par_map_matches_serial_for_any_thread_count() {
+        let serial: Vec<u64> = (0..37).map(|i| (i as u64) * 3 + 1).collect();
+        for t in [1, 2, 3, 4, 9] {
+            let par = par_map(t, 37, |i| (i as u64) * 3 + 1);
+            assert_eq!(par, serial, "threads={t}");
+        }
+        let empty: Vec<u64> = par_map(4, 0, |_| unreachable!());
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn map_ranges_preserves_order() {
+        let ranges = split_ranges(10, 3);
+        let got = map_ranges(&ranges, |r| r.start);
+        assert_eq!(got, vec![0, 4, 7]);
+    }
+
+    #[test]
+    fn row_chunks_cover_every_row_once() {
+        for rows in [1usize, 2, 5, 8, 13] {
+            for t in [1usize, 2, 3, 4] {
+                let row_len = 3;
+                let mut buf = vec![0.0; rows * row_len];
+                for_each_row_chunk(t, &mut buf, row_len, |first, chunk| {
+                    for (r, row) in chunk.chunks_exact(row_len).enumerate() {
+                        let _ = row;
+                        let idx = first + r;
+                        assert!(idx < rows);
+                    }
+                    for v in chunk.iter() {
+                        assert_eq!(*v, 0.0);
+                    }
+                });
+                // now a mutating pass: row i gets value i+1 everywhere
+                for_each_row_chunk(t, &mut buf, row_len, |first, chunk| {
+                    for (r, row) in
+                        chunk.chunks_exact_mut(row_len).enumerate()
+                    {
+                        for v in row {
+                            *v += (first + r + 1) as f64;
+                        }
+                    }
+                });
+                for (i, row) in buf.chunks_exact(row_len).enumerate() {
+                    for v in row {
+                        assert_eq!(*v, (i + 1) as f64, "rows={rows} t={t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank1_row_update_matches_fused_serial_loop() {
+        let (rows, m) = (7usize, 5usize);
+        let v: Vec<f64> = (0..m).map(|j| 0.3 * j as f64 - 0.7).collect();
+        let u: Vec<f64> = (0..m).map(|j| 1.0 / (j + 2) as f64).collect();
+        let base: Vec<f64> =
+            (0..rows * m).map(|i| (i as f64).sin()).collect();
+        for sign in [-1.0, 1.0] {
+            // reference: the fused serial loop the engines used before
+            let mut want = base.clone();
+            for row in want.chunks_exact_mut(m) {
+                let w = crate::linalg::dot(&v, row);
+                if w != 0.0 {
+                    if sign < 0.0 {
+                        for (r, &uj) in row.iter_mut().zip(&u) {
+                            *r -= w * uj;
+                        }
+                    } else {
+                        for (r, &uj) in row.iter_mut().zip(&u) {
+                            *r += w * uj;
+                        }
+                    }
+                }
+            }
+            for t in [1usize, 2, 3, 4] {
+                let mut got = base.clone();
+                rank1_row_update(t, &mut got, m, &v, &u, sign);
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "sign={sign} t={t} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panics_propagate() {
+        let caught = std::panic::catch_unwind(|| {
+            par_map(4, 8, |i| {
+                if i == 6 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(caught.is_err());
+    }
+}

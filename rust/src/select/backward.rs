@@ -40,6 +40,8 @@ struct BackState {
     d: Vec<f64>,
     /// true while the feature is still in S.
     in_s: Vec<bool>,
+    /// Resolved worker-thread count for the per-round scans/updates.
+    threads: usize,
 }
 
 impl BackState {
@@ -58,7 +60,7 @@ impl BackState {
         }
         let a = g.matvec(y);
         let d = (0..m).map(|j| g[(j, j)]).collect();
-        Ok(BackState { m, n, ct, a, d, in_s: vec![true; n] })
+        Ok(BackState { m, n, ct, a, d, in_s: vec![true; n], threads: 1 })
     }
 
     /// LOO criterion of S \ {i} for one member i ([`BIG`] when the
@@ -86,19 +88,19 @@ impl BackState {
         e
     }
 
-    /// LOO criterion of S \ {i} for every member i.
+    /// LOO criterion of S \ {i} for every member i — independent per
+    /// member, run on the shared deterministic parallel scan.
     fn score_removals(&self, x: &Matrix, y: &[f64], loss: Loss) -> Vec<f64> {
-        let mut scores = vec![BIG; self.n];
-        for i in 0..self.n {
-            if !self.in_s[i] {
-                continue;
-            }
-            scores[i] = self.removal_score(x, y, loss, i);
-        }
-        scores
+        super::scan_candidates(
+            self.n,
+            self.threads,
+            |i| self.in_s[i],
+            |i| self.removal_score(x, y, loss, i),
+        )
     }
 
-    /// Remove feature b from S (sign-flipped commit).
+    /// Remove feature b from S (sign-flipped commit); the O(mn) cache
+    /// update shards its independent rows like the forward engine's.
     fn remove(&mut self, x: &Matrix, b: usize) {
         let m = self.m;
         let v = x.row(b);
@@ -110,15 +112,14 @@ impl BackState {
             self.a[j] += u[j] * va;
             self.d[j] += u[j] * cb[j];
         }
-        for i in 0..self.n {
-            let row = &mut self.ct[i * m..(i + 1) * m];
-            let w = dot(v, row);
-            if w != 0.0 {
-                for (r, &uj) in row.iter_mut().zip(&u) {
-                    *r += w * uj;
-                }
-            }
-        }
+        crate::parallel::rank1_row_update(
+            self.threads,
+            &mut self.ct,
+            m,
+            v,
+            &u,
+            1.0,
+        );
         self.in_s[b] = false;
     }
 }
@@ -199,7 +200,8 @@ impl SessionSelector for BackwardElimination {
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
-        let st = BackState::init(x, y, cfg.lambda)?;
+        let mut st = BackState::init(x, y, cfg.lambda)?;
+        st.threads = crate::parallel::resolve(cfg.threads);
         let core = BackwardCore {
             x,
             y,

@@ -62,7 +62,10 @@ impl SessionSelector for CenterSelector {
     /// Begin a center-selection session: the greedy-RLS engine over the
     /// kernel gram matrix (one candidate per training example), which the
     /// session owns. The session's `x` argument is the raw feature-major
-    /// training data; the gram assembly happens here.
+    /// training data; the gram assembly happens here. The O(m²)-per-round
+    /// scan and downdate inherit the greedy engine's deterministic
+    /// multi-threading via `cfg.threads` (bit-identical centers at any
+    /// thread count).
     fn begin<'a>(
         &self,
         x: &'a Matrix,

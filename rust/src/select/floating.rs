@@ -15,7 +15,7 @@ use anyhow::ensure;
 use super::session::{
     CoreStep, PolicySession, Session, SessionCore, SessionSelector,
 };
-use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use super::{argmin, Round, SelectionConfig, SelectionResult, Selector};
 use crate::linalg::Matrix;
 use crate::metrics::Loss;
 use crate::rls;
@@ -44,6 +44,7 @@ struct FloatingCore<'a> {
     loss: Loss,
     k: usize,
     max_steps: usize,
+    threads: usize,
     s: Vec<usize>,
     /// best criterion seen for each subset size (index = |S|)
     best_at: Vec<f64>,
@@ -80,15 +81,16 @@ impl SessionCore for FloatingCore<'_> {
                 (b, self.criterion(&t))
             }
             None => {
-                let mut scores = vec![BIG; n];
-                for i in 0..n {
-                    if self.s.contains(&i) {
-                        continue;
-                    }
-                    let mut t = self.s.clone();
-                    t.push(i);
-                    scores[i] = self.criterion(&t);
-                }
+                let scores = super::scan_candidates(
+                    n,
+                    self.threads,
+                    |i| !self.s.contains(&i),
+                    |i| {
+                        let mut t = self.s.clone();
+                        t.push(i);
+                        self.criterion(&t)
+                    },
+                );
                 let b = argmin(&scores)
                     .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
                 (b, scores[b])
@@ -103,12 +105,12 @@ impl SessionCore for FloatingCore<'_> {
         // immediately into an empty improvement loop)
         while self.s.len() > 2 && self.steps < self.max_steps {
             self.steps += 1;
-            let mut rem_scores = vec![BIG; self.s.len()];
-            for (pos, _) in self.s.iter().enumerate() {
-                let mut t = self.s.clone();
-                t.remove(pos);
-                rem_scores[pos] = self.criterion(&t);
-            }
+            let rem_scores =
+                crate::parallel::par_map(self.threads, self.s.len(), |pos| {
+                    let mut t = self.s.clone();
+                    t.remove(pos);
+                    self.criterion(&t)
+                });
             let worst_pos = argmin(&rem_scores).unwrap();
             let smaller = self.s.len() - 1;
             if rem_scores[worst_pos] + 1e-12 < self.best_at[smaller] {
@@ -157,6 +159,7 @@ impl SessionSelector for FloatingForward {
             loss: cfg.loss,
             k: cfg.k,
             max_steps: self.max_steps,
+            threads: crate::parallel::resolve(cfg.threads),
             s: Vec::new(),
             best_at: vec![f64::INFINITY; cfg.k + 1],
             steps: 0,

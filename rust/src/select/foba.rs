@@ -20,7 +20,7 @@ use anyhow::ensure;
 use super::session::{
     CoreStep, PolicySession, Session, SessionCore, SessionSelector,
 };
-use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use super::{argmin, Round, SelectionConfig, SelectionResult, Selector};
 use crate::linalg::Matrix;
 use crate::metrics::Loss;
 use crate::rls;
@@ -57,6 +57,7 @@ struct FobaCore<'a> {
     nu: f64,
     swap: bool,
     max_steps: usize,
+    threads: usize,
     s: Vec<usize>,
     rounds: Vec<Round>,
     steps: usize,
@@ -74,27 +75,26 @@ impl FobaCore<'_> {
     }
 
     fn forward_scores(&self) -> Vec<f64> {
-        let n = self.x.rows();
-        let mut scores = vec![BIG; n];
-        for i in 0..n {
-            if self.s.contains(&i) {
-                continue;
-            }
-            let mut t = self.s.clone();
-            t.push(i);
-            scores[i] = self.criterion(&t);
-        }
-        scores
+        // each candidate set retrains independently — deterministic
+        // parallel scan
+        super::scan_candidates(
+            self.x.rows(),
+            self.threads,
+            |i| !self.s.contains(&i),
+            |i| {
+                let mut t = self.s.clone();
+                t.push(i);
+                self.criterion(&t)
+            },
+        )
     }
 
     fn deletion_scores(&self) -> Vec<f64> {
-        let mut del = vec![BIG; self.s.len()];
-        for pos in 0..self.s.len() {
+        crate::parallel::par_map(self.threads, self.s.len(), |pos| {
             let mut t = self.s.clone();
             t.remove(pos);
-            del[pos] = self.criterion(&t);
-        }
-        del
+            self.criterion(&t)
+        })
     }
 
     /// LOO criterion of `S ∪ {i}` — candidates are independent, so a
@@ -250,6 +250,7 @@ impl SessionSelector for Foba {
             nu: self.nu,
             swap: self.swap,
             max_steps: self.max_steps,
+            threads: crate::parallel::resolve(cfg.threads),
             s: Vec::new(),
             rounds: Vec::new(),
             steps: 0,

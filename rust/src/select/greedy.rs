@@ -13,6 +13,13 @@
 //! eq. 8, O(m) each), pick the argmin, commit it with the SMW rank-1
 //! downdate (O(mn)).
 //!
+//! Both O(mn) passes run on the deterministic thread layer
+//! ([`crate::parallel`], sized by `SelectionConfig::threads`): the scan is
+//! sharded over quad blocks of the active list and the downdate over the
+//! n independent cache rows, so results stay bit-identical to the serial
+//! engine at any thread count (see EXPERIMENTS.md §Perf for the
+//! serial-vs-parallel measurement protocol).
+//!
 //! The same state type backs the PJRT engine's numerical cross-checks and
 //! the microbenchmarks, so `GreedyState` is public.
 
@@ -41,10 +48,25 @@ pub struct GreedyState {
     pub a: Vec<f64>,
     /// diag(G).
     pub d: Vec<f64>,
-    /// 1.0 for evaluable candidates, 0.0 for selected ones.
+    /// 1.0 for evaluable candidates, 0.0 for selected ones. **Read-only
+    /// reflection** of the selection state for the PJRT cross-checks and
+    /// benches: it is maintained by [`GreedyState::commit`] alongside the
+    /// internal active list that the scans actually iterate, so mutating
+    /// it by hand does not mask a candidate — use `commit` to retire one.
     pub cand_mask: Vec<f64>,
     /// Selected features in order.
     pub selected: Vec<usize>,
+    /// Resolved worker-thread count for the O(mn) passes (≥ 1); set via
+    /// [`GreedyState::with_threads`], 1 after [`GreedyState::init`].
+    pub threads: usize,
+    /// Ascending active-candidate list, maintained incrementally by
+    /// [`GreedyState::commit`] (never rebuilt from `cand_mask` — the
+    /// rebuild was an O(n) per-call allocation on the hot path).
+    active: Vec<usize>,
+    /// Reusable commit scratch: copy of the committed column C[:, b].
+    scratch_cb: Vec<f64>,
+    /// Reusable commit scratch: the SMW update vector u = c_b / denom.
+    scratch_u: Vec<f64>,
 }
 
 impl GreedyState {
@@ -73,7 +95,20 @@ impl GreedyState {
             d: vec![inv; m],
             cand_mask: vec![1.0; n],
             selected: Vec::new(),
+            threads: 1,
+            active: (0..n).collect(),
+            scratch_cb: Vec::with_capacity(m),
+            scratch_u: Vec::with_capacity(m),
         }
+    }
+
+    /// Set the worker-thread count for [`GreedyState::score_all`] and
+    /// [`GreedyState::commit`] (`0` = available parallelism; the resolved
+    /// count is stored). Results are bit-identical at any value — see
+    /// [`crate::parallel`].
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = crate::parallel::resolve(threads);
+        self
     }
 
     /// LOO criterion of S ∪ {i} for every candidate i (Algorithm 3 lines
@@ -83,37 +118,50 @@ impl GreedyState {
     /// `y` streams are read once per block instead of once per candidate
     /// — the register-blocking step of the §Perf log (the per-candidate
     /// arrays `v_i`, `c_i` are unavoidable traffic either way).
+    ///
+    /// With `threads > 1` the active list is sharded across scoped
+    /// workers **at quad boundaries** ([`crate::parallel::quad_ranges`]),
+    /// so every worker's blocks-of-4 grouping — and hence the exact
+    /// per-candidate operation order — matches the serial scan: the
+    /// scores are bit-identical at any thread count, and to
+    /// [`GreedyState::score_of`].
     pub fn score_all(&self, x: &Matrix, y: &[f64], loss: Loss) -> Vec<f64> {
         let m = self.m;
         let mut scores = vec![BIG; self.n];
-        let active: Vec<usize> = (0..self.n)
-            .filter(|&i| self.cand_mask[i] != 0.0)
-            .collect();
-        let mut chunks = active.chunks_exact(4);
-        for quad in &mut chunks {
-            let [i0, i1, i2, i3] = [quad[0], quad[1], quad[2], quad[3]];
-            let e = score_candidates4(
-                [x.row(i0), x.row(i1), x.row(i2), x.row(i3)],
-                [
-                    &self.ct[i0 * m..(i0 + 1) * m],
-                    &self.ct[i1 * m..(i1 + 1) * m],
-                    &self.ct[i2 * m..(i2 + 1) * m],
-                    &self.ct[i3 * m..(i3 + 1) * m],
-                ],
-                &self.a,
-                &self.d,
-                y,
-                loss,
-            );
-            scores[i0] = e[0];
-            scores[i1] = e[1];
-            scores[i2] = e[2];
-            scores[i3] = e[3];
-        }
-        for &i in chunks.remainder() {
-            let v = x.row(i);
-            let c = &self.ct[i * m..(i + 1) * m];
-            scores[i] = score_candidate(v, c, &self.a, &self.d, y, loss);
+        let active = &self.active;
+        let ranges = crate::parallel::quad_ranges(active.len(), self.threads);
+        let per_range = crate::parallel::map_ranges(&ranges, |r| {
+            let slice = &active[r];
+            let mut out = Vec::with_capacity(slice.len());
+            let mut chunks = slice.chunks_exact(4);
+            for quad in &mut chunks {
+                let [i0, i1, i2, i3] = [quad[0], quad[1], quad[2], quad[3]];
+                let e = score_candidates4(
+                    [x.row(i0), x.row(i1), x.row(i2), x.row(i3)],
+                    [
+                        &self.ct[i0 * m..(i0 + 1) * m],
+                        &self.ct[i1 * m..(i1 + 1) * m],
+                        &self.ct[i2 * m..(i2 + 1) * m],
+                        &self.ct[i3 * m..(i3 + 1) * m],
+                    ],
+                    &self.a,
+                    &self.d,
+                    y,
+                    loss,
+                );
+                out.extend_from_slice(&e);
+            }
+            for &i in chunks.remainder() {
+                let v = x.row(i);
+                let c = &self.ct[i * m..(i + 1) * m];
+                out.push(score_candidate(v, c, &self.a, &self.d, y, loss));
+            }
+            out
+        });
+        for (r, vals) in ranges.iter().zip(per_range) {
+            for (&i, v) in active[r.clone()].iter().zip(vals) {
+                scores[i] = v;
+            }
         }
         scores
     }
@@ -137,12 +185,9 @@ impl GreedyState {
         b: usize,
     ) -> f64 {
         let m = self.m;
-        let active: Vec<usize> = (0..self.n)
-            .filter(|&i| self.cand_mask[i] != 0.0)
-            .collect();
+        let active = &self.active;
         let pos = active
-            .iter()
-            .position(|&i| i == b)
+            .binary_search(&b)
             .expect("candidate must be active");
         let quad_start = pos - pos % 4;
         if quad_start + 4 <= active.len() {
@@ -175,13 +220,24 @@ impl GreedyState {
 
     /// Commit feature `b` (Algorithm 3 lines 23–30): update a, d, and the
     /// whole cache C ← C − u (vᵀ C) in O(mn).
+    ///
+    /// The n cache-row downdates are independent, so they are sharded
+    /// across `threads` workers ([`crate::parallel::rank1_row_update`]);
+    /// each row receives the identical fused serial update, keeping the
+    /// caches bit-identical at any thread count. The O(m) `c_b`/`u`
+    /// staging buffers are reusable scratch on the state — commit
+    /// allocates nothing after the first round.
     pub fn commit(&mut self, x: &Matrix, b: usize) {
         assert!(self.cand_mask[b] != 0.0, "feature {b} already selected");
         let m = self.m;
         let v = x.row(b);
-        let cb = self.ct[b * m..(b + 1) * m].to_vec();
+        let mut cb = std::mem::take(&mut self.scratch_cb);
+        cb.clear();
+        cb.extend_from_slice(&self.ct[b * m..(b + 1) * m]);
         let denom = 1.0 + dot(v, &cb);
-        let u: Vec<f64> = cb.iter().map(|&c| c / denom).collect();
+        let mut u = std::mem::take(&mut self.scratch_u);
+        u.clear();
+        u.extend(cb.iter().map(|&c| c / denom));
 
         // a ← a − u (vᵀ a);  d ← d − u ∘ c_b
         let va = dot(v, &self.a);
@@ -191,19 +247,26 @@ impl GreedyState {
         }
 
         // C ← C − u (vᵀ C): per candidate row i of Cᵀ, w_i = v·C[:,i],
-        // then ct[i] ← ct[i] − w_i · u. One fused pass per row.
-        for i in 0..self.n {
-            let row = &mut self.ct[i * m..(i + 1) * m];
-            let w = dot(v, row);
-            if w != 0.0 {
-                for (r, &uj) in row.iter_mut().zip(&u) {
-                    *r -= w * uj;
-                }
-            }
-        }
+        // then ct[i] ← ct[i] − w_i · u. One fused pass per row, rows
+        // sharded across workers.
+        crate::parallel::rank1_row_update(
+            self.threads,
+            &mut self.ct,
+            m,
+            v,
+            &u,
+            -1.0,
+        );
 
         self.cand_mask[b] = 0.0;
+        let pos = self
+            .active
+            .binary_search(&b)
+            .expect("feature must be active");
+        self.active.remove(pos);
         self.selected.push(b);
+        self.scratch_cb = cb;
+        self.scratch_u = u;
     }
 
     /// Final weights w = X_S a over the selected features (Algorithm 3
@@ -369,7 +432,8 @@ impl<'a> GreedyCore<'a> {
             y.iter().all(|v| v.is_finite()),
             "y contains non-finite values"
         );
-        let st = GreedyState::init(&x, &y, cfg.lambda);
+        let st =
+            GreedyState::init(&x, &y, cfg.lambda).with_threads(cfg.threads);
         Ok(GreedyCore {
             loss: cfg.loss,
             k: cfg.k,
@@ -596,6 +660,95 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// Quad-sharded parallel scoring must be bit-identical to the serial
+    /// scan for every thread count, including uneven active-list splits
+    /// (lengths with partial quads, holes from prior commits).
+    #[test]
+    fn parallel_score_all_is_bit_identical_for_uneven_splits() {
+        forall_seeds(8, |seed| {
+            let mut g = Gen::new(seed + 4242);
+            // lengths straddling quad boundaries: 4q, 4q+1..4q+3
+            let n = 5 + g.size(0, 14);
+            let m = g.size(3, 12);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.labels(m);
+            let mut st = GreedyState::init(&x, &y, lam);
+            // punch holes so the active list is non-contiguous and its
+            // length is decoupled from n
+            st.commit(&x, 1);
+            st.commit(&x, n - 1);
+            for loss in [Loss::Squared, Loss::ZeroOne] {
+                let serial = st.score_all(&x, &y, loss);
+                for threads in [2usize, 3, 4, 7] {
+                    let mut stp =
+                        GreedyState::init(&x, &y, lam).with_threads(threads);
+                    stp.commit(&x, 1);
+                    stp.commit(&x, n - 1);
+                    let par = stp.score_all(&x, &y, loss);
+                    for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "cand {i} threads={threads}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    /// Row-sharded parallel commit must leave every cache (C, a, d)
+    /// bit-identical to the serial downdate.
+    #[test]
+    fn parallel_commit_is_bit_identical() {
+        forall_seeds(8, |seed| {
+            let mut g = Gen::new(seed + 555);
+            let n = g.size(4, 13);
+            let m = g.size(3, 11);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.labels(m);
+            let steps = 3.min(n);
+            let mut serial = GreedyState::init(&x, &y, lam);
+            for step in 0..steps {
+                serial.commit(&x, step);
+            }
+            for threads in [2usize, 4] {
+                let mut par =
+                    GreedyState::init(&x, &y, lam).with_threads(threads);
+                for step in 0..steps {
+                    par.commit(&x, step);
+                }
+                let eq_bits = |a: &[f64], b: &[f64]| {
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                };
+                assert!(eq_bits(&serial.ct, &par.ct), "ct threads={threads}");
+                assert!(eq_bits(&serial.a, &par.a), "a threads={threads}");
+                assert!(eq_bits(&serial.d, &par.d), "d threads={threads}");
+            }
+        });
+    }
+
+    /// The incrementally maintained active list must match a rebuild
+    /// from the candidate mask after every commit.
+    #[test]
+    fn active_list_tracks_cand_mask() {
+        let mut g = Gen::new(99);
+        let n = 9;
+        let m = 7;
+        let x = g.matrix(n, m);
+        let y = g.labels(m);
+        let mut st = GreedyState::init(&x, &y, 1.0);
+        for b in [3usize, 0, 8, 5] {
+            st.commit(&x, b);
+            let rebuilt: Vec<usize> = (0..n)
+                .filter(|&i| st.cand_mask[i] != 0.0)
+                .collect();
+            assert_eq!(st.active, rebuilt);
+        }
     }
 
     #[test]

@@ -64,6 +64,17 @@ pub struct SelectionConfig {
     /// (`StopPolicy::KBudget(usize::MAX)`) never fires, so the run goes
     /// to `k` — the pre-session behavior.
     pub stop: StopPolicy,
+    /// Worker threads for the O(mn) per-round scans and cache updates
+    /// (`0` = available parallelism, the default; `1` = fully serial).
+    ///
+    /// **Determinism guarantee:** selected sets, criterion curves, and
+    /// weights are bit-identical at every thread count — work is sharded
+    /// only at boundaries where the serial arithmetic is already
+    /// independent (see [`crate::parallel`]), and all reductions run on
+    /// the calling thread in serial order. Enforced by the equivalence
+    /// test suite. The PJRT engine ignores this field (its parallelism
+    /// lives in the compiled kernels).
+    pub threads: usize,
 }
 
 impl Default for SelectionConfig {
@@ -73,6 +84,7 @@ impl Default for SelectionConfig {
             lambda: 1.0,
             loss: Loss::ZeroOne,
             stop: StopPolicy::default(),
+            threads: 0,
         }
     }
 }
@@ -124,6 +136,14 @@ impl SelectionConfigBuilder {
     /// Shorthand for [`StopPolicy::TimeBudget`].
     pub fn time_budget(self, budget: std::time::Duration) -> Self {
         self.stop(StopPolicy::TimeBudget(budget))
+    }
+
+    /// Worker threads for the per-round scans (`0` = available
+    /// parallelism, `1` = serial). Any value yields bit-identical
+    /// selections — see [`SelectionConfig::threads`].
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
     }
 
     /// Finalize the configuration.
@@ -185,6 +205,45 @@ pub trait Selector {
     ) -> anyhow::Result<SelectionResult>;
 }
 
+/// Shared parallel candidate scan: score every candidate `i in 0..n` with
+/// `active(i)` true, on up to `threads` workers (`0` = auto); inactive
+/// candidates keep [`BIG`]. Candidates are scored independently — no
+/// cross-candidate state — so the assembled vector is bit-identical to
+/// the serial loop at any thread count. This is the one scan body behind
+/// the per-round O(mn) (or heavier) loops of the wrapper, FoBa, floating,
+/// n-fold, backward, and RankRLS selectors.
+pub(crate) fn scan_candidates<A, S>(
+    n: usize,
+    threads: usize,
+    active: A,
+    score: S,
+) -> Vec<f64>
+where
+    A: Fn(usize) -> bool,
+    S: Fn(usize) -> f64 + Sync,
+{
+    let idx: Vec<usize> = (0..n).filter(|&i| active(i)).collect();
+    let mut scores = vec![BIG; n];
+    let t = crate::parallel::resolve(threads).min(idx.len());
+    if t <= 1 {
+        for &i in &idx {
+            scores[i] = score(i);
+        }
+    } else {
+        let ranges = crate::parallel::split_ranges(idx.len(), t);
+        let idx_ref = &idx;
+        let chunks = crate::parallel::map_ranges(&ranges, |r| {
+            idx_ref[r].iter().map(|&i| score(i)).collect::<Vec<f64>>()
+        });
+        for (r, vals) in ranges.iter().zip(chunks) {
+            for (&i, v) in idx[r.clone()].iter().zip(vals) {
+                scores[i] = v;
+            }
+        }
+    }
+    scores
+}
+
 /// Strict-argmin over candidate scores; ties break to the lowest index
 /// (every implementation in the repo and the Python reference must agree
 /// on this rule for the equivalence tests to be exact).
@@ -229,11 +288,14 @@ mod tests {
             .k(25)
             .lambda(0.5)
             .loss(Loss::Squared)
+            .threads(4)
             .plateau(3, 1e-2)
             .build();
         assert_eq!(cfg.k, 25);
         assert_eq!(cfg.lambda, 0.5);
         assert_eq!(cfg.loss, Loss::Squared);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(SelectionConfig::default().threads, 0);
         assert_eq!(
             cfg.stop,
             StopPolicy::Plateau { patience: 3, min_rel_improvement: 1e-2 }
@@ -247,6 +309,26 @@ mod tests {
             t.stop,
             StopPolicy::TimeBudget(std::time::Duration::from_secs(5))
         );
+    }
+
+    #[test]
+    fn scan_candidates_matches_serial_at_any_thread_count() {
+        let n = 23;
+        let active = |i: usize| i % 3 != 0;
+        let score = |i: usize| (i as f64).sqrt() + 1.0;
+        let serial = scan_candidates(n, 1, active, score);
+        for t in [0, 2, 4, 7] {
+            let par = scan_candidates(n, t, active, score);
+            assert_eq!(serial.len(), par.len());
+            for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "i={i} threads={t}");
+            }
+        }
+        for i in 0..n {
+            if i % 3 == 0 {
+                assert_eq!(serial[i], BIG);
+            }
+        }
     }
 
     #[test]

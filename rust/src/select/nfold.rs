@@ -53,6 +53,8 @@ struct NFoldState {
     blocks: Vec<Vec<f64>>,
     cand_mask: Vec<f64>,
     selected: Vec<usize>,
+    /// Resolved worker-thread count for the per-round scans/downdates.
+    threads: usize,
 }
 
 impl NFoldState {
@@ -89,6 +91,7 @@ impl NFoldState {
             blocks,
             cand_mask: vec![1.0; n],
             selected: Vec::new(),
+            threads: 1,
         }
     }
 
@@ -129,16 +132,16 @@ impl NFoldState {
         e
     }
 
-    /// CV criterion of S ∪ {i} for every candidate.
+    /// CV criterion of S ∪ {i} for every candidate — one independent
+    /// [`NFoldState::score_one`] per candidate, run on the shared
+    /// deterministic parallel scan.
     fn score_all(&self, x: &Matrix, y: &[f64], loss: Loss) -> Vec<f64> {
-        let mut scores = vec![BIG; self.n];
-        for i in 0..self.n {
-            if self.cand_mask[i] == 0.0 {
-                continue;
-            }
-            scores[i] = self.score_one(x, y, loss, i);
-        }
-        scores
+        super::scan_candidates(
+            self.n,
+            self.threads,
+            |i| self.cand_mask[i] != 0.0,
+            |i| self.score_one(x, y, loss, i),
+        )
     }
 
     fn commit(&mut self, x: &Matrix, b: usize) {
@@ -159,15 +162,15 @@ impl NFoldState {
                 }
             }
         }
-        for i in 0..self.n {
-            let row = &mut self.ct[i * m..(i + 1) * m];
-            let w = dot(v, row);
-            if w != 0.0 {
-                for (r, &uj) in row.iter_mut().zip(&u) {
-                    *r -= w * uj;
-                }
-            }
-        }
+        // the O(mn) cache downdate: rows are independent, shard them
+        crate::parallel::rank1_row_update(
+            self.threads,
+            &mut self.ct,
+            m,
+            v,
+            &u,
+            -1.0,
+        );
         self.cand_mask[b] = 0.0;
         self.selected.push(b);
     }
@@ -254,12 +257,14 @@ impl SessionSelector for NFoldGreedy {
         let fold_vec: Vec<Vec<usize>> =
             (0..f.k()).map(|h| f.test_indices(h).to_vec()).collect();
 
+        let mut st = NFoldState::init(x, y, cfg.lambda, fold_vec);
+        st.threads = crate::parallel::resolve(cfg.threads);
         let core = NFoldCore {
             x,
             y,
             loss: cfg.loss,
             k: cfg.k,
-            st: NFoldState::init(x, y, cfg.lambda, fold_vec),
+            st,
             rounds: Vec::new(),
         };
         Ok(Box::new(PolicySession::new(core, cfg)?))

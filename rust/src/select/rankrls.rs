@@ -32,6 +32,7 @@ struct RankRlsCore<'a> {
     y: &'a [f64],
     lambda: f64,
     k: usize,
+    threads: usize,
     /// Lx_i per candidate row (never changes).
     lx: Vec<Vec<f64>>,
     /// x_i · (L y) per candidate (never changes).
@@ -132,13 +133,14 @@ impl SessionCore for RankRlsCore<'_> {
                 (b, s)
             }
             None => {
-                let mut scores = vec![BIG; n];
-                for i in 0..n {
-                    if self.in_s[i] {
-                        continue;
-                    }
-                    scores[i] = self.bordered_score(&chol, &w_s, i);
-                }
+                // the base solve is shared read-only state; each
+                // bordered solve is independent — deterministic scan
+                let scores = super::scan_candidates(
+                    n,
+                    self.threads,
+                    |i| !self.in_s[i],
+                    |i| self.bordered_score(&chol, &w_s, i),
+                );
                 let b = argmin(&scores)
                     .ok_or_else(|| anyhow!("no candidate left"))?;
                 (b, scores[b])
@@ -192,6 +194,7 @@ impl SessionSelector for GreedyRankRls {
             y,
             lambda: cfg.lambda,
             k: cfg.k,
+            threads: crate::parallel::resolve(cfg.threads),
             lx,
             xly,
             selected: Vec::new(),

@@ -16,7 +16,7 @@ use anyhow::ensure;
 use super::session::{
     CoreStep, PolicySession, Session, SessionCore, SessionSelector,
 };
-use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use super::{argmin, Round, SelectionConfig, SelectionResult, Selector};
 use crate::linalg::Matrix;
 use crate::metrics::Loss;
 use crate::rls;
@@ -71,6 +71,7 @@ struct WrapperCore<'a> {
     lambda: f64,
     loss: Loss,
     k: usize,
+    threads: usize,
     selected: Vec<usize>,
     in_s: Vec<bool>,
     rounds: Vec<Round>,
@@ -101,13 +102,14 @@ impl SessionCore for WrapperCore<'_> {
                 (b, self.score_one(b))
             }
             None => {
-                let mut scores = vec![BIG; n];
-                for i in 0..n {
-                    if self.in_s[i] {
-                        continue;
-                    }
-                    scores[i] = self.score_one(i);
-                }
+                // each candidate set retrains independently — the
+                // heaviest scan in the crate parallelizes the best
+                let scores = super::scan_candidates(
+                    n,
+                    self.threads,
+                    |i| !self.in_s[i],
+                    |i| self.score_one(i),
+                );
                 let b = argmin(&scores)
                     .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
                 (b, scores[b])
@@ -156,6 +158,7 @@ impl SessionSelector for Wrapper {
             lambda: cfg.lambda,
             loss: cfg.loss,
             k: cfg.k,
+            threads: crate::parallel::resolve(cfg.threads),
             selected: Vec::new(),
             in_s: vec![false; n],
             rounds: Vec::new(),

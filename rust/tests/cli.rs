@@ -268,6 +268,46 @@ fn compare_runs_all_selectors() {
 }
 
 #[test]
+fn threads_flag_is_deterministic_end_to_end() {
+    // the same problem at --threads 1, 2, 4 must print the identical
+    // selected set and criterion trajectory (the CLI's determinism
+    // guarantee), and the header must echo the resolved thread count
+    let extract = |stdout: &str, prefix: &str| -> String {
+        stdout
+            .lines()
+            .find(|l| l.starts_with(prefix))
+            .unwrap_or_else(|| panic!("missing {prefix:?}:\n{stdout}"))
+            .to_string()
+    };
+    let mut reference: Option<(String, String)> = None;
+    for t in ["1", "2", "4"] {
+        let (ok, stdout, stderr) = run(&[
+            "select",
+            "--synthetic",
+            "90,23",
+            "--k",
+            "5",
+            "--threads",
+            t,
+        ]);
+        assert!(ok, "--threads {t} stderr: {stderr}");
+        assert!(
+            stdout.contains(&format!("threads={t}")),
+            "--threads {t} not echoed:\n{stdout}"
+        );
+        let sel = extract(&stdout, "selected (5)");
+        let curve = extract(&stdout, "criterion trajectory");
+        match &reference {
+            None => reference = Some((sel, curve)),
+            Some((rs, rc)) => {
+                assert_eq!(rs, &sel, "selected differ at --threads {t}");
+                assert_eq!(rc, &curve, "curve differs at --threads {t}");
+            }
+        }
+    }
+}
+
+#[test]
 fn check_verifies_artifacts_when_present() {
     if !std::path::Path::new("artifacts/manifest.tsv").exists() {
         eprintln!("skipping: artifacts not built");

@@ -250,6 +250,127 @@ fn session_equivalence_holds_on_random_problems() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Thread-count equivalence: the deterministic parallel execution layer
+// must produce bit-identical selected sets, criterion curves, and weights
+// at threads ∈ {1, 2, 4}, for every selector — including warm-started
+// sessions resumed under a different thread count than the recording run.
+// ---------------------------------------------------------------------------
+
+fn check_thread_equivalence<S: Selector + SessionSelector>(
+    sel: &S,
+    x: &greedy_rls::linalg::Matrix,
+    y: &[f64],
+    base: &SelectionConfig,
+) {
+    let name = sel.name();
+    let serial = sel
+        .select(x, y, &SelectionConfig { threads: 1, ..*base })
+        .unwrap();
+    for threads in [2usize, 4] {
+        let par = sel
+            .select(x, y, &SelectionConfig { threads, ..*base })
+            .unwrap();
+        assert_bit_identical(
+            &serial,
+            &par,
+            &format!("{name}: threads={threads}"),
+        );
+    }
+    // a warm start recorded serially and resumed on 4 threads must
+    // continue the identical trajectory
+    let replay: Vec<usize> = serial.rounds.iter().map(|r| r.feature).collect();
+    if replay.len() > 1 {
+        let cut = replay.len() / 2;
+        let session = sel
+            .begin_from(
+                x,
+                y,
+                &SelectionConfig { threads: 4, ..*base },
+                &replay[..cut],
+            )
+            .unwrap();
+        let resumed = run_to_completion(session).unwrap();
+        assert_bit_identical(
+            &serial,
+            &resumed,
+            &format!("{name}: warm start across thread counts"),
+        );
+    }
+}
+
+#[test]
+fn thread_counts_are_bit_identical_for_every_selector() {
+    let ds = synthetic::two_gaussians(40, 13, 4, 1.5, 77);
+    for loss in [Loss::Squared, Loss::ZeroOne] {
+        let base = SelectionConfig {
+            k: 4,
+            lambda: 0.8,
+            loss,
+            ..Default::default()
+        };
+        check_thread_equivalence(&GreedyRls, &ds.x, &ds.y, &base);
+        check_thread_equivalence(&Wrapper::shortcut(), &ds.x, &ds.y, &base);
+        check_thread_equivalence(&LowRankLsSvm, &ds.x, &ds.y, &base);
+        check_thread_equivalence(
+            &RandomSelector { seed: 5 },
+            &ds.x,
+            &ds.y,
+            &base,
+        );
+        check_thread_equivalence(&BackwardElimination, &ds.x, &ds.y, &base);
+        check_thread_equivalence(
+            &FloatingForward::default(),
+            &ds.x,
+            &ds.y,
+            &base,
+        );
+        check_thread_equivalence(&Foba::default(), &ds.x, &ds.y, &base);
+        check_thread_equivalence(
+            &NFoldGreedy { folds: 5, seed: 2 },
+            &ds.x,
+            &ds.y,
+            &base,
+        );
+        check_thread_equivalence(&GreedyRankRls, &ds.x, &ds.y, &base);
+        check_thread_equivalence(
+            &CenterSelector { kernel: Kernel::Rbf { gamma: 0.7 } },
+            &ds.x,
+            &ds.y,
+            &base,
+        );
+    }
+}
+
+/// Property sweep over random shapes — active-list lengths that straddle
+/// quad boundaries, holes from committed features, n smaller and larger
+/// than the thread counts.
+#[test]
+fn thread_equivalence_holds_on_random_problems() {
+    forall_seeds(10, |seed| {
+        let mut g = Gen::new(seed * 11 + 7);
+        let n = g.size(3, 15);
+        let m = g.size(4, 12);
+        let lam = g.lambda(-1, 1);
+        let x = g.matrix(n, m);
+        let y = g.labels(m);
+        let base = SelectionConfig {
+            k: 3.min(n),
+            lambda: lam,
+            loss: Loss::Squared,
+            ..Default::default()
+        };
+        check_thread_equivalence(&GreedyRls, &x, &y, &base);
+        check_thread_equivalence(&BackwardElimination, &x, &y, &base);
+        check_thread_equivalence(
+            &NFoldGreedy { folds: 3, seed: 1 },
+            &x,
+            &y,
+            &base,
+        );
+    });
+}
+
 #[test]
 fn selection_is_deterministic() {
     let ds = synthetic::two_gaussians(60, 20, 5, 1.0, 23);
