@@ -172,14 +172,21 @@ COMMANDS
              session control: [--stop k|plateau|time] [--patience N]
              [--min-rel-improvement F] [--time-budget-s S]
              [--warm-start I1,I2,...] [--progress]
+             durability: [--checkpoint-dir DIR] [--checkpoint-every N]
+             [--resume]  (a killed run resumes bit-identically from its
+             latest checkpoint; --resume with an empty DIR starts fresh)
   cv         paper §4.2 protocol: stratified CV accuracy curves
              --dataset NAME [--folds 10] [--kmax K] [--seed S] [--full]
-             [--threads T]
+             [--threads T] [--checkpoint-dir DIR]  (fold-level resume)
   scaling    paper §4.1 runtime scaling experiment
              [--sizes 500,1000,...] [--n 1000] [--k 50] [--baseline]
              [--threads T]
-  serve      batched predictions with a saved model
+  serve      batched predictions with a saved model, or hot-swap serving
+             that follows a live session's checkpoint directory
              --model FILE --dataset NAME [--batch 64] [--engine native|pjrt]
+             --follow DIR --dataset NAME [--batch 64] [--passes P]
+             [--poll-ms MS] [--wait-s S]  (swaps to each newer checkpoint
+             between batches; in-flight batches always complete)
   compare    run every selection algorithm on one dataset side by side
              --dataset NAME | --synthetic M,N  [--k 5] [--lambda 1.0]
              [--threads T]

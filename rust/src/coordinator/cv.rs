@@ -7,12 +7,16 @@
 //! held-out test fold. Figures 4–9 plot test accuracy for greedy vs
 //! random; Figures 10–15 plot LOO vs test accuracy for greedy.
 
-use anyhow::Result;
+use std::path::{Path, PathBuf};
 
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::fingerprint::Fnv64;
 use crate::data::{folds::Folds, Dataset};
 use crate::linalg::Matrix;
 use crate::metrics::{accuracy, mean_std, Loss};
 use crate::rng::Pcg64;
+use crate::select::checkpoint;
 use crate::select::{
     greedy::GreedyRls, SelectionConfig, Selector, SessionSelector,
     StepOutcome,
@@ -163,7 +167,6 @@ pub fn run_cv_threads(
     let k_max = k_max.min(ds.n_features());
     let mut rng = Pcg64::new(seed, 71);
     let f = Folds::stratified(&ds.y, folds, &mut rng);
-    let grid = super::grid::default_grid();
 
     // Draw all RNG-dependent state in fold order (the exact consumption
     // order of the serial protocol) before fanning out.
@@ -181,43 +184,63 @@ pub fn run_cv_threads(
     let inner = if outer > 1 { 1 } else { threads };
     let per_fold: Vec<(Curve, Curve, f64)> =
         crate::parallel::par_map(outer, splits.len(), |i| {
-            let (train_idx, test_idx) = &splits[i];
-            let mut train = ds.subset(train_idx);
-            let mut test = ds.subset(test_idx);
-            let stats = train.standardize();
-            test.apply_standardization(&stats);
-
-            let (lam, _) =
-                super::grid::search(&train.x, &train.y, &grid, Loss::ZeroOne);
-
-            let gc = selection_curve_threads(
-                &train.x,
-                &train.y,
-                &test.x,
-                &test.y,
-                lam,
-                k_max,
-                &Order::Greedy,
-                inner,
-            );
-            let rc = selection_curve_threads(
-                &train.x,
-                &train.y,
-                &test.x,
-                &test.y,
-                lam,
-                k_max,
-                &Order::Fixed(perms[i].clone()),
-                inner,
-            );
-            (gc, rc, lam)
+            compute_fold(ds, &splits[i], &perms[i], k_max, inner)
         });
 
+    Ok(merge_folds(&per_fold, k_max))
+}
+
+/// One fold of the §4.2 protocol: standardize with training statistics,
+/// grid-search λ, record the greedy and fixed-order accuracy curves. Pure
+/// in its inputs — the same fold recomputes bit-identically in any
+/// process, which is what makes fold-level checkpoints sound.
+fn compute_fold(
+    ds: &Dataset,
+    split: &(Vec<usize>, Vec<usize>),
+    perm: &[usize],
+    k_max: usize,
+    inner_threads: usize,
+) -> (Curve, Curve, f64) {
+    let (train_idx, test_idx) = split;
+    let mut train = ds.subset(train_idx);
+    let mut test = ds.subset(test_idx);
+    let stats = train.standardize();
+    test.apply_standardization(&stats);
+
+    let grid = super::grid::default_grid();
+    let (lam, _) =
+        super::grid::search(&train.x, &train.y, &grid, Loss::ZeroOne);
+
+    let gc = selection_curve_threads(
+        &train.x,
+        &train.y,
+        &test.x,
+        &test.y,
+        lam,
+        k_max,
+        &Order::Greedy,
+        inner_threads,
+    );
+    let rc = selection_curve_threads(
+        &train.x,
+        &train.y,
+        &test.x,
+        &test.y,
+        lam,
+        k_max,
+        &Order::Fixed(perm.to_vec()),
+        inner_threads,
+    );
+    (gc, rc, lam)
+}
+
+/// Merge per-fold results (in fold order) into the mean ± std curves.
+fn merge_folds(per_fold: &[(Curve, Curve, f64)], k_max: usize) -> CvCurves {
     let mut greedy_test = vec![Vec::new(); k_max];
     let mut greedy_loo = vec![Vec::new(); k_max];
     let mut random_test = vec![Vec::new(); k_max];
     let mut lambdas = Vec::new();
-    for (gc, rc, lam) in &per_fold {
+    for (gc, rc, lam) in per_fold {
         lambdas.push(*lam);
         for k in 0..k_max {
             greedy_test[k].push(gc.test_acc[k]);
@@ -235,14 +258,241 @@ pub fn run_cv_threads(
     let (g_mean, g_std) = summarize(&greedy_test);
     let (l_mean, _) = summarize(&greedy_loo);
     let (r_mean, _) = summarize(&random_test);
-    Ok(CvCurves {
+    CvCurves {
         ks: (1..=k_max).collect(),
         greedy_test: g_mean,
         greedy_test_std: g_std,
         greedy_loo: l_mean,
         random_test: r_mean,
         lambdas,
-    })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fold-level checkpoints: resumable CV sweeps
+// ---------------------------------------------------------------------------
+
+/// Identity of one CV experiment: dataset content plus the protocol
+/// parameters that determine every fold (fold count, k_max after
+/// clamping, RNG seed). Thread counts are excluded — fold results are
+/// bit-identical at any (see [`run_cv_threads`]).
+fn cv_fingerprint(ds: &Dataset, folds: usize, k_max: usize, seed: u64) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(b"greedy-rls-cv-fold-v1");
+    h.write_u64(ds.fingerprint());
+    h.write_usize(folds);
+    h.write_usize(k_max);
+    h.write_u64(seed);
+    h.finish()
+}
+
+fn fold_path(dir: &Path, fold: usize) -> PathBuf {
+    dir.join(format!("cv-fold-{fold:04}.ckpt"))
+}
+
+fn push_f64_line(s: &mut String, key: &str, vals: &[f64]) {
+    use std::fmt::Write as _;
+    let _ = write!(s, "{key} {}", vals.len());
+    for v in vals {
+        let _ = write!(s, " {:016x}", v.to_bits());
+    }
+    s.push('\n');
+}
+
+fn push_usize_line(s: &mut String, key: &str, vals: &[usize]) {
+    use std::fmt::Write as _;
+    let _ = write!(s, "{key} {}", vals.len());
+    for v in vals {
+        let _ = write!(s, " {v}");
+    }
+    s.push('\n');
+}
+
+/// Parse `<count> <v1> <v2> …` (the part of a counted line after its
+/// key), enforcing that the count matches.
+fn parse_counted_rest<T, F>(rest: &str, parse: F) -> Result<Vec<T>>
+where
+    F: Fn(&str) -> Result<T>,
+{
+    let mut tok = rest.split_whitespace();
+    let n: usize = tok
+        .next()
+        .ok_or_else(|| anyhow!("counted line missing count"))?
+        .parse()
+        .context("counted line count")?;
+    let vals: Vec<T> = tok.map(parse).collect::<Result<_>>()?;
+    anyhow::ensure!(
+        vals.len() == n,
+        "counted line announces {n} values but carries {}",
+        vals.len()
+    );
+    Ok(vals)
+}
+
+fn fold_to_text(
+    fingerprint: u64,
+    fold: usize,
+    result: &(Curve, Curve, f64),
+) -> String {
+    use std::fmt::Write as _;
+    let (gc, rc, lam) = result;
+    let mut s = String::new();
+    let _ = writeln!(s, "greedy-rls-cv-fold v1");
+    let _ = writeln!(s, "fingerprint {fingerprint:016x}");
+    let _ = writeln!(s, "fold {fold}");
+    let _ = writeln!(s, "lambda {:016x}", lam.to_bits());
+    push_usize_line(&mut s, "gsel", &gc.selected);
+    push_f64_line(&mut s, "gtest", &gc.test_acc);
+    push_f64_line(&mut s, "gloo", &gc.loo_acc);
+    push_usize_line(&mut s, "rsel", &rc.selected);
+    push_f64_line(&mut s, "rtest", &rc.test_acc);
+    push_f64_line(&mut s, "rloo", &rc.loo_acc);
+    // same integrity trailer as session checkpoints
+    checkpoint::seal_with_checksum(s)
+}
+
+fn fold_from_text(text: &str) -> Result<(u64, usize, (Curve, Curve, f64))> {
+    let body =
+        checkpoint::checked_body(text).context("cv fold checkpoint")?;
+
+    fn rest_of<'t>(
+        lines: &mut std::str::Lines<'t>,
+        key: &str,
+    ) -> Result<&'t str> {
+        let line = lines
+            .next()
+            .ok_or_else(|| anyhow!("cv fold ends before `{key}`"))?;
+        line.strip_prefix(key)
+            .and_then(|r| r.strip_prefix(' '))
+            .ok_or_else(|| anyhow!("cv fold line {line:?}: expected `{key}`"))
+    }
+    fn parse_usize(t: &str) -> Result<usize> {
+        t.parse().context("index value")
+    }
+    fn parse_f64_bits(t: &str) -> Result<f64> {
+        Ok(f64::from_bits(
+            u64::from_str_radix(t, 16).context("f64 bits")?,
+        ))
+    }
+
+    let mut lines = body.lines();
+    anyhow::ensure!(
+        rest_of(&mut lines, "greedy-rls-cv-fold")? == "v1",
+        "unsupported cv fold version"
+    );
+    let fingerprint =
+        u64::from_str_radix(rest_of(&mut lines, "fingerprint")?.trim(), 16)
+            .context("cv fold fingerprint")?;
+    let fold: usize = rest_of(&mut lines, "fold")?
+        .trim()
+        .parse()
+        .context("cv fold index")?;
+    let lam = f64::from_bits(
+        u64::from_str_radix(rest_of(&mut lines, "lambda")?.trim(), 16)
+            .context("cv fold lambda")?,
+    );
+    let gsel = parse_counted_rest(rest_of(&mut lines, "gsel")?, parse_usize)?;
+    let gtest =
+        parse_counted_rest(rest_of(&mut lines, "gtest")?, parse_f64_bits)?;
+    let gloo =
+        parse_counted_rest(rest_of(&mut lines, "gloo")?, parse_f64_bits)?;
+    let rsel = parse_counted_rest(rest_of(&mut lines, "rsel")?, parse_usize)?;
+    let rtest =
+        parse_counted_rest(rest_of(&mut lines, "rtest")?, parse_f64_bits)?;
+    let rloo =
+        parse_counted_rest(rest_of(&mut lines, "rloo")?, parse_f64_bits)?;
+    Ok((
+        fingerprint,
+        fold,
+        (
+            Curve { test_acc: gtest, loo_acc: gloo, selected: gsel },
+            Curve { test_acc: rtest, loo_acc: rloo, selected: rsel },
+            lam,
+        ),
+    ))
+}
+
+/// Load one fold checkpoint; `None` (recompute) on any failure — a
+/// missing, truncated, corrupt, stale-fingerprint, or wrong-index file is
+/// simply treated as not-yet-computed and overwritten.
+fn load_fold(
+    path: &Path,
+    fingerprint: u64,
+    fold: usize,
+) -> Option<(Curve, Curve, f64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let (fp, idx, result) = fold_from_text(&text).ok()?;
+    (fp == fingerprint && idx == fold).then_some(result)
+}
+
+/// Atomically persist one fold result (shared `.tmp` + fsync + rename
+/// helper — a kill mid-save never corrupts a fold file).
+fn save_fold(
+    path: &Path,
+    fingerprint: u64,
+    fold: usize,
+    result: &(Curve, Curve, f64),
+) -> Result<()> {
+    checkpoint::write_atomic(path, &fold_to_text(fingerprint, fold, result))
+}
+
+/// [`run_cv_threads`] with fold-level checkpoints: each completed fold is
+/// persisted to `dir`, and a rerun (same dataset, protocol, and seed —
+/// enforced by a fingerprint) loads finished folds instead of recomputing
+/// them. Because every fold is a pure function of its inputs and
+/// bit-identical at any thread count, the curves are bit-identical to an
+/// uninterrupted [`run_cv_threads`] no matter where the previous process
+/// was killed.
+pub fn run_cv_resumable(
+    ds: &Dataset,
+    folds: usize,
+    k_max: usize,
+    seed: u64,
+    threads: usize,
+    dir: &Path,
+) -> Result<CvCurves> {
+    let k_max = k_max.min(ds.n_features());
+    let fingerprint = cv_fingerprint(ds, folds, k_max, seed);
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+
+    // identical RNG-driven setup to run_cv_threads, drawn in fold order
+    let mut rng = Pcg64::new(seed, 71);
+    let f = Folds::stratified(&ds.y, folds, &mut rng);
+    let splits: Vec<(Vec<usize>, Vec<usize>)> = f.splits().collect();
+    let perms: Vec<Vec<usize>> = splits
+        .iter()
+        .map(|_| {
+            let mut perm: Vec<usize> = (0..ds.n_features()).collect();
+            rng.shuffle(&mut perm);
+            perm
+        })
+        .collect();
+
+    let mut per_fold: Vec<Option<(Curve, Curve, f64)>> = (0..splits.len())
+        .map(|i| load_fold(&fold_path(dir, i), fingerprint, i))
+        .collect();
+    let missing: Vec<usize> = (0..splits.len())
+        .filter(|&i| per_fold[i].is_none())
+        .collect();
+    if !missing.is_empty() {
+        let outer = crate::parallel::resolve(threads).min(missing.len());
+        let inner = if outer > 1 { 1 } else { threads };
+        let computed: Vec<(Curve, Curve, f64)> =
+            crate::parallel::par_map(outer, missing.len(), |j| {
+                let i = missing[j];
+                compute_fold(ds, &splits[i], &perms[i], k_max, inner)
+            });
+        for (j, result) in computed.into_iter().enumerate() {
+            let i = missing[j];
+            save_fold(&fold_path(dir, i), fingerprint, i, &result)?;
+            per_fold[i] = Some(result);
+        }
+    }
+
+    let per_fold: Vec<(Curve, Curve, f64)> =
+        per_fold.into_iter().map(|r| r.expect("all folds done")).collect();
+    Ok(merge_folds(&per_fold, k_max))
 }
 
 /// Convenience: single train/test split evaluation of a selection config
@@ -355,6 +605,77 @@ mod tests {
             assert_eq!(serial.random_test, par.random_test);
             assert_eq!(serial.greedy_test_std, par.greedy_test_std);
         }
+    }
+
+    fn assert_curves_equal(a: &CvCurves, b: &CvCurves) {
+        assert_eq!(a.ks, b.ks);
+        assert_eq!(a.lambdas, b.lambdas);
+        assert_eq!(a.greedy_test, b.greedy_test);
+        assert_eq!(a.greedy_test_std, b.greedy_test_std);
+        assert_eq!(a.greedy_loo, b.greedy_loo);
+        assert_eq!(a.random_test, b.random_test);
+    }
+
+    #[test]
+    fn resumable_cv_matches_uninterrupted_and_survives_fold_loss() {
+        let dir = std::env::temp_dir().join("greedy_rls_cv_resume_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = crate::data::synthetic::planted_sparse(
+            "t", 90, 12, 3, 1.2, 0.9, 0.05, 23,
+        );
+        let reference = run_cv_threads(&ds, 3, 5, 9, 1).unwrap();
+
+        // cold start: all folds computed, files written
+        let cold = run_cv_resumable(&ds, 3, 5, 9, 1, &dir).unwrap();
+        assert_curves_equal(&reference, &cold);
+        for i in 0..3 {
+            assert!(fold_path(&dir, i).exists(), "fold {i} persisted");
+        }
+
+        // warm start: everything loaded from disk, still identical
+        let warm = run_cv_resumable(&ds, 3, 5, 9, 2, &dir).unwrap();
+        assert_curves_equal(&reference, &warm);
+
+        // simulate a kill that lost fold 1 and corrupted fold 2:
+        // both are recomputed, result still identical
+        std::fs::remove_file(fold_path(&dir, 1)).unwrap();
+        let text = std::fs::read_to_string(fold_path(&dir, 2)).unwrap();
+        std::fs::write(fold_path(&dir, 2), &text[..text.len() / 2]).unwrap();
+        let healed = run_cv_resumable(&ds, 3, 5, 9, 1, &dir).unwrap();
+        assert_curves_equal(&reference, &healed);
+
+        // a different protocol (other seed) must not reuse the files
+        let other = run_cv_resumable(&ds, 3, 5, 10, 1, &dir).unwrap();
+        let other_ref = run_cv_threads(&ds, 3, 5, 10, 1).unwrap();
+        assert_curves_equal(&other_ref, &other);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fold_text_roundtrip_is_bit_exact() {
+        let gc = Curve {
+            test_acc: vec![0.5, 0.75],
+            loo_acc: vec![0.25, -0.0],
+            selected: vec![7, 2],
+        };
+        let rc = Curve {
+            test_acc: vec![0.1, 0.2],
+            loo_acc: vec![0.3, 0.4],
+            selected: vec![0, 5],
+        };
+        let text = fold_to_text(0xabc, 3, &(gc.clone(), rc.clone(), 0.125));
+        let (fp, fold, (g2, r2, lam)) = fold_from_text(&text).unwrap();
+        assert_eq!(fp, 0xabc);
+        assert_eq!(fold, 3);
+        assert_eq!(lam.to_bits(), 0.125f64.to_bits());
+        assert_eq!(g2.selected, gc.selected);
+        assert_eq!(r2.selected, rc.selected);
+        for (a, b) in g2.loo_acc.iter().zip(&gc.loo_acc) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // corruption and truncation are refused
+        assert!(fold_from_text(&text[..text.len() / 2]).is_err());
+        assert!(fold_from_text(&text.replace("fold 3", "fold 4")).is_err());
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //!   k-fold, per-fold λ grid search, accuracy-vs-#features curves);
 //! * [`grid`] — regularization grid search with the LOO shortcut;
 //! * [`serve`] — load a selected sparse model and answer batched
-//!   prediction requests (native or PJRT path);
-//! * model persistence in a dependency-free text format.
+//!   prediction requests (native or PJRT path), including hot-swap
+//!   serving from a live session's checkpoint directory
+//!   ([`serve::HotSwapServer`], `serve --follow`);
+//! * model persistence in a dependency-free text format, plus
+//!   checkpoint-driven session resume ([`resume_with_engine`]).
 
 pub mod cv;
 pub mod grid;
@@ -23,6 +26,7 @@ use crate::data::Dataset;
 use crate::linalg::Matrix;
 use crate::rls::Predictor;
 use crate::runtime::{engine::PjrtGreedy, Runtime};
+use crate::select::checkpoint::{self, Checkpoint};
 use crate::select::{
     greedy::GreedyRls, run_to_completion, Observer, Round, SelectionConfig,
     SelectionResult, Session, SessionSelector, StopReason,
@@ -90,6 +94,40 @@ pub fn begin_from_with_engine<'a>(
             PjrtGreedy::new(rt).begin_from(x, y, cfg, selected)
         }
     }
+}
+
+/// [`begin_from_with_engine`] fed from a checkpoint file: load it, refuse
+/// a config/data fingerprint mismatch, replay the recorded rounds
+/// (bit-identical cache reconstruction), and re-arm the time-budget clock
+/// with the prior run's elapsed time. Returns the live session plus the
+/// checkpoint it came from.
+pub fn resume_with_engine<'a>(
+    engine: EngineKind,
+    runtime: Option<&Runtime>,
+    x: &'a Matrix,
+    y: &'a [f64],
+    cfg: &SelectionConfig,
+    path: &std::path::Path,
+) -> anyhow::Result<(Box<dyn Session + 'a>, Checkpoint)> {
+    let ckpt = Checkpoint::load(path)?;
+    ckpt.verify(&checkpoint::fingerprint(x, y, cfg))?;
+    let mut session = begin_from_with_engine(
+        engine,
+        runtime,
+        x,
+        y,
+        cfg,
+        &ckpt.replay_features(),
+    )
+    .with_context(|| {
+        format!(
+            "replaying {} checkpointed rounds from {}",
+            ckpt.rounds.len(),
+            path.display()
+        )
+    })?;
+    session.bill_elapsed(ckpt.elapsed);
+    Ok((session, ckpt))
 }
 
 /// Run greedy RLS on the chosen engine (one-shot; drives a session to
@@ -259,6 +297,45 @@ mod tests {
         let resumed = run_to_completion(session).unwrap();
         assert_eq!(full.selected, resumed.selected);
         assert_eq!(full.weights, resumed.weights);
+    }
+
+    #[test]
+    fn resume_with_engine_continues_from_checkpoint_file() {
+        let ds = crate::data::synthetic::two_gaussians(50, 14, 5, 1.5, 12);
+        let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
+        let full =
+            select_with_engine(EngineKind::Native, None, &ds.x, &ds.y, &cfg)
+                .unwrap();
+
+        // snapshot a partial run to a checkpoint file
+        let fp = checkpoint::fingerprint(&ds.x, &ds.y, &cfg);
+        let mut session =
+            begin_with_engine(EngineKind::Native, None, &ds.x, &ds.y, &cfg)
+                .unwrap();
+        session.step().unwrap();
+        session.step().unwrap();
+        let ckpt = Checkpoint::from_session(session.as_ref(), fp).unwrap();
+        let dir = std::env::temp_dir().join("greedy_rls_coord_resume_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = checkpoint::checkpoint_path(&dir, 2);
+        ckpt.save_atomic(&path).unwrap();
+
+        let (resumed, restored) = resume_with_engine(
+            EngineKind::Native,
+            None,
+            &ds.x,
+            &ds.y,
+            &cfg,
+            &path,
+        )
+        .unwrap();
+        assert_eq!(restored.rounds.len(), 2);
+        assert_eq!(resumed.rounds_done(), 2);
+        let r = run_to_completion(resumed).unwrap();
+        assert_eq!(r.selected, full.selected);
+        assert_eq!(r.weights, full.weights);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

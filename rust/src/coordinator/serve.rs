@@ -10,12 +10,23 @@
 //! * **PJRT** — the AOT `predict` artifact, demonstrating that the same
 //!   artifact pipeline that trains also serves (weights padded into the
 //!   artifact's (k, t) bucket).
+//!
+//! For serve-while-training, [`HotSwapServer`] holds the current model
+//! behind a versioned slot: batches predict against an [`Arc`] snapshot
+//! taken at batch start, so a [`HotSwapServer::swap`] — e.g. driven by a
+//! [`CheckpointFollower`] watching a live session's checkpoint directory
+//! — never invalidates an in-flight batch.
 
-use anyhow::{anyhow, ensure, Context};
+use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context};
 
 use crate::linalg::Matrix;
 use crate::rls::Predictor;
 use crate::runtime::{lit, Runtime};
+use crate::select::checkpoint::{self, Checkpoint};
 
 /// Latency/throughput statistics of a serving run.
 #[derive(Clone, Copy, Debug)]
@@ -34,12 +45,25 @@ pub struct ServeStats {
     pub throughput: f64,
 }
 
+/// Quantile of an ascending-sorted latency sample with **linear
+/// interpolation** between order statistics (the numpy `linear` method).
+///
+/// The previous nearest-rank rule (`round((len-1)·q)`) misreported tail
+/// quantiles on small samples — p99 of anything under ~50 batches simply
+/// returned the maximum. Interpolating keeps p99 meaningful at every
+/// batch count; [`serve_native`] and [`serve_pjrt`] share this through
+/// [`summarize`], so both engines' stats agree.
 fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let pos = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[pos]
+    let pos = (sorted.len() - 1) as f64 * q.clamp(0.0, 1.0);
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        return sorted[lo];
+    }
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
 }
 
 /// Serve every column of `x` (full feature-major matrix) in batches with
@@ -138,6 +162,215 @@ fn summarize(requests: usize, lat: &[f64]) -> ServeStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Hot-swap serving: serve the k-so-far model while selection continues
+// ---------------------------------------------------------------------------
+
+/// One immutable published model: the predictor plus bookkeeping about
+/// where it came from. Batches hold an `Arc<ModelVersion>` for their whole
+/// lifetime, so swapping the server's slot never pulls a model out from
+/// under an in-flight batch.
+#[derive(Clone, Debug)]
+pub struct ModelVersion {
+    /// The sparse model served.
+    pub predictor: Predictor,
+    /// Monotonic swap counter (0 for the model the server started with).
+    pub version: u64,
+    /// Rounds of the source checkpoint/session (`selected.len()` for a
+    /// plain model file).
+    pub rounds: usize,
+}
+
+/// A serving slot whose model can be replaced while batches are in
+/// flight.
+///
+/// Readers take a cheap [`HotSwapServer::snapshot`] (an `Arc` clone under
+/// a read lock) at batch start and compute against that; [`swap`] briefly
+/// takes the write lock to publish a new [`ModelVersion`]. The old model
+/// stays alive until its last in-flight batch drops the `Arc` — no batch
+/// is ever dropped or torn by a refresh.
+///
+/// [`swap`]: HotSwapServer::swap
+pub struct HotSwapServer {
+    slot: RwLock<Arc<ModelVersion>>,
+}
+
+impl HotSwapServer {
+    /// Start serving `predictor` as version 0.
+    pub fn new(predictor: Predictor) -> HotSwapServer {
+        let rounds = predictor.selected.len();
+        HotSwapServer {
+            slot: RwLock::new(Arc::new(ModelVersion {
+                predictor,
+                version: 0,
+                rounds,
+            })),
+        }
+    }
+
+    /// Publish a new model; returns its version number. In-flight batches
+    /// keep predicting with the snapshot they already hold.
+    pub fn swap(&self, predictor: Predictor, rounds: usize) -> u64 {
+        let mut slot = self.slot.write().expect("model slot poisoned");
+        let version = slot.version + 1;
+        *slot = Arc::new(ModelVersion { predictor, version, rounds });
+        version
+    }
+
+    /// The currently published model (cheap: one `Arc` clone).
+    pub fn snapshot(&self) -> Arc<ModelVersion> {
+        self.slot.read().expect("model slot poisoned").clone()
+    }
+
+    /// Version of the currently published model.
+    pub fn version(&self) -> u64 {
+        self.slot.read().expect("model slot poisoned").version
+    }
+
+    /// Predict one batch against a snapshot taken at call start; returns
+    /// the predictions and the version that computed them.
+    pub fn predict_batch(&self, xb: &Matrix) -> (Vec<f64>, u64) {
+        let model = self.snapshot();
+        (model.predictor.predict_matrix(xb), model.version)
+    }
+}
+
+/// Watches a checkpoint directory for newer checkpoints than the last one
+/// it reported — the refresh source for `serve --follow`.
+pub struct CheckpointFollower {
+    dir: PathBuf,
+    last_rounds: Option<usize>,
+}
+
+impl CheckpointFollower {
+    /// Follow `dir` (which need not exist yet).
+    pub fn new(dir: impl Into<PathBuf>) -> CheckpointFollower {
+        CheckpointFollower { dir: dir.into(), last_rounds: None }
+    }
+
+    /// Load the newest checkpoint if it is more advanced than the last
+    /// one this follower reported; `None` when nothing newer exists.
+    /// Atomic write-rename on the producer side guarantees any `.ckpt`
+    /// this sees is complete — a torn file here is a real corruption and
+    /// surfaces as an error.
+    pub fn poll(&mut self) -> anyhow::Result<Option<Checkpoint>> {
+        let Some(path) = checkpoint::latest_in_dir(&self.dir)? else {
+            return Ok(None);
+        };
+        let rounds = checkpoint::round_count_in_name(&path);
+        if rounds.is_some() && rounds <= self.last_rounds {
+            return Ok(None);
+        }
+        let ckpt = Checkpoint::load(&path)?;
+        self.last_rounds = Some(rounds.unwrap_or(ckpt.rounds.len()));
+        Ok(Some(ckpt))
+    }
+
+    /// Block until the directory offers a checkpoint with a non-empty
+    /// model (a 0-round checkpoint has nothing to serve), polling every
+    /// `poll` up to `timeout`.
+    pub fn wait_for_model(
+        &mut self,
+        timeout: Duration,
+        poll: Duration,
+    ) -> anyhow::Result<Checkpoint> {
+        let t0 = Instant::now();
+        loop {
+            if let Some(ckpt) = self.poll()? {
+                if !ckpt.selected.is_empty() {
+                    return Ok(ckpt);
+                }
+            }
+            if t0.elapsed() >= timeout {
+                bail!(
+                    "no servable checkpoint appeared in {} within {:.1}s",
+                    self.dir.display(),
+                    timeout.as_secs_f64()
+                );
+            }
+            std::thread::sleep(poll);
+        }
+    }
+}
+
+/// Statistics of a hot-swap serving run.
+#[derive(Clone, Copy, Debug)]
+pub struct HotSwapStats {
+    /// Latency/throughput of the batches served.
+    pub serve: ServeStats,
+    /// Model swaps performed during the run.
+    pub swaps: usize,
+    /// Version of the model that served the final batch.
+    pub final_version: u64,
+    /// Rounds of the model that served the final batch.
+    pub final_rounds: usize,
+}
+
+/// Serve every column of `x` for `passes` passes with the native
+/// predictor, polling `follower` between batches and hot-swapping the
+/// server's model whenever a newer checkpoint appears. Returns the
+/// predictions of the **last** pass (computed by whatever models were
+/// current batch-by-batch) and run statistics.
+///
+/// `expect_data_hash` guards against following a checkpoint directory
+/// that belongs to a different dataset (compare with
+/// [`crate::data::fingerprint::fingerprint_xy`] of the serving data);
+/// checkpoints whose data fingerprint differs are refused.
+pub fn serve_hotswap(
+    server: &HotSwapServer,
+    follower: &mut CheckpointFollower,
+    x: &Matrix,
+    batch: usize,
+    passes: usize,
+    expect_data_hash: Option<u64>,
+) -> anyhow::Result<(Vec<f64>, HotSwapStats)> {
+    ensure!(batch > 0, "batch must be positive");
+    ensure!(passes > 0, "passes must be positive");
+    let m = x.cols();
+    let mut preds = vec![0.0; m];
+    let mut lat = Vec::new();
+    let mut swaps = 0usize;
+    let mut last_version = server.version();
+    let mut last_rounds = server.snapshot().rounds;
+    for _pass in 0..passes {
+        let mut start = 0;
+        while start < m {
+            // refresh point: between batches, never mid-batch
+            if let Some(ckpt) = follower.poll()? {
+                if let Some(expect) = expect_data_hash {
+                    ensure!(
+                        ckpt.fingerprint.data == expect,
+                        "checkpoint data hash {:016x} does not match the \
+                         serving dataset's {expect:016x}",
+                        ckpt.fingerprint.data
+                    );
+                }
+                if !ckpt.selected.is_empty() {
+                    last_rounds = ckpt.rounds.len();
+                    last_version =
+                        server.swap(ckpt.predictor(), last_rounds);
+                    swaps += 1;
+                }
+            }
+            let end = (start + batch).min(m);
+            let idx: Vec<usize> = (start..end).collect();
+            let xb = x.select_cols(&idx);
+            let t0 = Instant::now();
+            let (pb, _version) = server.predict_batch(&xb);
+            lat.push(t0.elapsed().as_secs_f64());
+            preds[start..end].copy_from_slice(&pb);
+            start = end;
+        }
+    }
+    let stats = HotSwapStats {
+        serve: summarize(m * passes, &lat),
+        swaps,
+        final_version: last_version,
+        final_rounds: last_rounds,
+    };
+    Ok((preds, stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +407,155 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 1.0), 4.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates_between_order_statistics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        // p50 of an even-sized sample is the midpoint, not an element
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        // p99 on a small sample must NOT collapse to the max (the old
+        // nearest-rank bug): (4-1)*0.99 = 2.97 ⇒ 3 + 0.97*(4-3) = 3.97
+        let p99 = percentile(&xs, 0.99);
+        assert!((p99 - 3.97).abs() < 1e-12, "p99 = {p99}");
+        assert!(p99 < 4.0);
+        // single sample: every quantile is that sample
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        // out-of-range q clamps instead of indexing out of bounds
+        assert_eq!(percentile(&xs, 1.5), 4.0);
+        assert_eq!(percentile(&xs, -0.5), 1.0);
+    }
+
+    #[test]
+    fn hot_swap_preserves_in_flight_snapshots() {
+        let server = HotSwapServer::new(toy_predictor());
+        let in_flight = server.snapshot();
+        assert_eq!(in_flight.version, 0);
+        let v = server.swap(
+            Predictor { selected: vec![1], weights: vec![3.0] },
+            5,
+        );
+        assert_eq!(v, 1);
+        // the old snapshot is still fully usable mid-"flight"
+        assert_eq!(in_flight.predictor.selected, vec![0, 2]);
+        let now = server.snapshot();
+        assert_eq!(now.version, 1);
+        assert_eq!(now.rounds, 5);
+        assert_eq!(now.predictor.selected, vec![1]);
+    }
+
+    #[test]
+    fn hot_swap_is_safe_under_concurrent_readers() {
+        let ds = crate::data::synthetic::two_gaussians(64, 5, 2, 1.0, 3);
+        let server = HotSwapServer::new(toy_predictor());
+        std::thread::scope(|scope| {
+            let srv = &server;
+            let x = &ds.x;
+            let reader = scope.spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..200 {
+                    let (preds, version) = srv.predict_batch(x);
+                    assert_eq!(preds.len(), 64);
+                    assert!(version >= last, "versions must be monotone");
+                    last = version;
+                }
+            });
+            for i in 0..50u64 {
+                srv.swap(
+                    Predictor {
+                        selected: vec![(i as usize) % 5],
+                        weights: vec![i as f64],
+                    },
+                    i as usize,
+                );
+            }
+            reader.join().unwrap();
+        });
+        assert_eq!(server.version(), 50);
+    }
+
+    fn write_checkpoint(dir: &std::path::Path, rounds: usize, data: u64) {
+        let ckpt = Checkpoint {
+            fingerprint: crate::select::checkpoint::Fingerprint {
+                config: 1,
+                data,
+            },
+            elapsed: Duration::ZERO,
+            stop_reason: None,
+            rounds: (0..rounds)
+                .map(|i| crate::select::Round {
+                    feature: i,
+                    criterion: 1.0 / (i + 1) as f64,
+                })
+                .collect(),
+            selected: (0..rounds).collect(),
+            weights: (0..rounds).map(|i| i as f64 + 0.5).collect(),
+        };
+        ckpt.save_atomic(&checkpoint::checkpoint_path(dir, rounds))
+            .unwrap();
+    }
+
+    #[test]
+    fn follower_reports_only_newer_checkpoints() {
+        let dir = std::env::temp_dir().join("greedy_rls_serve_follow_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut f = CheckpointFollower::new(&dir);
+        assert!(f.poll().unwrap().is_none(), "missing dir is quiet");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(f.poll().unwrap().is_none(), "empty dir is quiet");
+        write_checkpoint(&dir, 2, 7);
+        let c = f.poll().unwrap().expect("first checkpoint seen");
+        assert_eq!(c.rounds.len(), 2);
+        assert!(f.poll().unwrap().is_none(), "same checkpoint not re-reported");
+        write_checkpoint(&dir, 4, 7);
+        let c = f.poll().unwrap().expect("newer checkpoint seen");
+        assert_eq!(c.rounds.len(), 4);
+        assert!(f.poll().unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_hotswap_swaps_between_batches_and_checks_data_hash() {
+        let dir = std::env::temp_dir().join("greedy_rls_serve_hotswap_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = crate::data::synthetic::two_gaussians(20, 6, 2, 1.0, 9);
+        write_checkpoint(&dir, 1, 7);
+        let mut f = CheckpointFollower::new(&dir);
+        let first = f
+            .wait_for_model(Duration::from_secs(5), Duration::from_millis(1))
+            .unwrap();
+        let server = HotSwapServer::new(first.predictor());
+        // a newer checkpoint lands before the serving loop starts: it
+        // must be picked up at the first between-batch refresh point
+        write_checkpoint(&dir, 3, 7);
+        let (preds, stats) =
+            serve_hotswap(&server, &mut f, &ds.x, 8, 2, Some(7)).unwrap();
+        assert_eq!(preds.len(), 20);
+        assert_eq!(stats.swaps, 1);
+        assert_eq!(stats.final_rounds, 3);
+        assert_eq!(stats.final_version, 1);
+        assert_eq!(stats.serve.requests, 40); // 2 passes
+        assert_eq!(stats.serve.batches, 6); // ceil(20/8) × 2
+        // the final pass was fully served by the 3-round model
+        let direct = Checkpoint {
+            fingerprint: first.fingerprint,
+            elapsed: Duration::ZERO,
+            stop_reason: None,
+            rounds: vec![],
+            selected: (0..3).collect(),
+            weights: (0..3).map(|i| i as f64 + 0.5).collect(),
+        }
+        .predictor()
+        .predict_matrix(&ds.x);
+        for (a, b) in preds.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // a checkpoint for different data is refused
+        write_checkpoint(&dir, 5, 8);
+        let err = serve_hotswap(&server, &mut f, &ds.x, 8, 1, Some(7))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("data hash"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,153 @@
+//! Content fingerprinting for datasets — the identity half of durable
+//! checkpoints.
+//!
+//! A resumed selection run is only bit-identical to the uninterrupted run
+//! if it sees byte-identical inputs, so every checkpoint carries a 64-bit
+//! data fingerprint and resume refuses a mismatch instead of silently
+//! continuing a different problem. The hash is a hand-rolled streaming
+//! FNV-1a (no new dependencies, stable across platforms and processes —
+//! unlike `std::hash`, whose `RandomState` is seeded per process).
+//!
+//! The fingerprint covers the shape and every `f64` bit pattern of `X`
+//! and `y`, so it distinguishes datasets that differ only in the last
+//! mantissa bit — exactly the differences that would break bit-identical
+//! resume. It deliberately ignores the dataset *name*: two loads of the
+//! same synthetic problem under different labels resume interchangeably.
+
+use crate::linalg::Matrix;
+
+/// Streaming 64-bit FNV-1a hasher.
+///
+/// Process-stable and allocation-free; used for checkpoint fingerprints
+/// and the end-of-file corruption checksum of the checkpoint format.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    /// Start a fresh hash at the FNV offset basis.
+    pub fn new() -> Fnv64 {
+        Fnv64(Self::OFFSET)
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    /// Absorb a `u64` in little-endian byte order.
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Absorb a `usize` widened to `u64` (stable across pointer widths).
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Absorb an `f64` by bit pattern (distinguishes `-0.0` from `0.0`
+    /// and every NaN payload — bit-identity is the contract).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Final hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+/// One-shot FNV-1a of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Fingerprint a selection problem's inputs: dimensions plus every value
+/// of the feature-major `x` (n × m) and labels `y`, by `f64` bit pattern.
+/// O(mn), run once per checkpointed session — negligible next to one
+/// selection round.
+pub fn fingerprint_xy(x: &Matrix, y: &[f64]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_usize(x.rows());
+    h.write_usize(x.cols());
+    for &v in x.as_slice() {
+        h.write_f64(v);
+    }
+    h.write_usize(y.len());
+    for &v in y {
+        h.write_f64(v);
+    }
+    h.finish()
+}
+
+impl super::Dataset {
+    /// Content fingerprint of this dataset (see [`fingerprint_xy`]).
+    pub fn fingerprint(&self) -> u64 {
+        fingerprint_xy(&self.x, &self.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fingerprint_is_deterministic_across_calls() {
+        let ds = crate::data::synthetic::two_gaussians(30, 8, 3, 1.0, 5);
+        assert_eq!(ds.fingerprint(), ds.fingerprint());
+        let again = crate::data::synthetic::two_gaussians(30, 8, 3, 1.0, 5);
+        assert_eq!(ds.fingerprint(), again.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_sees_every_bit() {
+        let ds = crate::data::synthetic::two_gaussians(30, 8, 3, 1.0, 5);
+        let base = ds.fingerprint();
+
+        // a one-ulp change in X must change the hash
+        let mut bumped = ds.clone();
+        let v = bumped.x[(2, 3)];
+        bumped.x[(2, 3)] = f64::from_bits(v.to_bits() ^ 1);
+        assert_ne!(base, bumped.fingerprint());
+
+        // a label flip must change the hash
+        let mut relabeled = ds.clone();
+        relabeled.y[0] = -relabeled.y[0];
+        assert_ne!(base, relabeled.fingerprint());
+
+        // a different seed must change the hash
+        let other = crate::data::synthetic::two_gaussians(30, 8, 3, 1.0, 6);
+        assert_ne!(base, other.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_transposed_shapes() {
+        // same flat values, different (n, m) split — must differ
+        let a = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let b = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let y2 = vec![1.0, -1.0];
+        let y3 = vec![1.0, -1.0, 1.0];
+        assert_ne!(fingerprint_xy(&a, &y3), fingerprint_xy(&b, &y2));
+    }
+}

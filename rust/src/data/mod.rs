@@ -5,6 +5,7 @@
 //! (an `n × m` [`Matrix`]), so a feature's value vector `v = X_i` is a
 //! contiguous row — exactly what the greedy scoring loop streams.
 
+pub mod fingerprint;
 pub mod folds;
 pub mod libsvm;
 pub mod registry;

@@ -2,7 +2,9 @@
 //!
 //! Subcommand dispatch over the library's coordinator; see `cli::USAGE`.
 
-use anyhow::{bail, Context, Result};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
 
 use greedy_rls::bench::time_once;
 use greedy_rls::cli::{self, Args, USAGE};
@@ -10,8 +12,11 @@ use greedy_rls::coordinator::{self, cv, serve, EngineKind, ProgressObserver};
 use greedy_rls::data::{registry, synthetic, Dataset};
 use greedy_rls::metrics::Loss;
 use greedy_rls::runtime::Runtime;
+use greedy_rls::select::checkpoint::{
+    self, drive_checkpointed, AutosavePolicy, Autosaver,
+};
 use greedy_rls::select::{
-    drive, greedy::GreedyRls, lowrank::LowRankLsSvm, NoopObserver,
+    drive, greedy::GreedyRls, lowrank::LowRankLsSvm, NoopObserver, Observer,
     SelectionConfig, Selector, StopPolicy,
 };
 
@@ -96,6 +101,21 @@ fn cmd_select(args: &Args) -> Result<()> {
         ),
         None => None,
     };
+    let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+    let ckpt_every: usize = args.get_or("checkpoint-every", 1usize)?;
+    let resume = args.has("resume");
+    if ckpt_dir.is_none() {
+        ensure!(
+            args.get("checkpoint-every").is_none(),
+            "--checkpoint-every requires --checkpoint-dir"
+        );
+        ensure!(!resume, "--resume requires --checkpoint-dir");
+    }
+    ensure!(
+        !(resume && warm.is_some()),
+        "--resume and --warm-start are mutually exclusive (the checkpoint \
+         already pins the prefix)"
+    );
     println!(
         "dataset={} m={} n={} k={} lambda={} engine={engine:?} threads={}{}",
         ds.name,
@@ -110,6 +130,9 @@ fn cmd_select(args: &Args) -> Result<()> {
         }
     );
     let t0 = std::time::Instant::now();
+    // set on resume so the autosaver reuses the (verified-equal)
+    // checkpoint fingerprint instead of rehashing the O(mn) dataset
+    let mut resumed_fp: Option<checkpoint::Fingerprint> = None;
     let mut session = match &warm {
         Some(prefix) => {
             println!("warm start from {} features: {prefix:?}", prefix.len());
@@ -122,18 +145,77 @@ fn cmd_select(args: &Args) -> Result<()> {
                 prefix,
             )?
         }
-        None => coordinator::begin_with_engine(
-            engine,
-            rt.as_ref(),
-            &ds.x,
-            &ds.y,
-            &cfg,
-        )?,
+        None => {
+            let latest = if resume {
+                checkpoint::latest_in_dir(
+                    ckpt_dir.as_deref().expect("checked above"),
+                )?
+            } else {
+                None
+            };
+            match latest {
+                Some(path) => {
+                    let (s, ckpt) = coordinator::resume_with_engine(
+                        engine,
+                        rt.as_ref(),
+                        &ds.x,
+                        &ds.y,
+                        &cfg,
+                        &path,
+                    )?;
+                    println!(
+                        "resumed from {} ({} rounds replayed, {:.3}s prior \
+                         selection time)",
+                        path.display(),
+                        ckpt.rounds.len(),
+                        ckpt.elapsed.as_secs_f64()
+                    );
+                    resumed_fp = Some(ckpt.fingerprint);
+                    s
+                }
+                None => {
+                    if resume {
+                        println!(
+                            "no checkpoint in {}; starting fresh",
+                            ckpt_dir.as_deref().expect("checked above").display()
+                        );
+                    }
+                    coordinator::begin_with_engine(
+                        engine,
+                        rt.as_ref(),
+                        &ds.x,
+                        &ds.y,
+                        &cfg,
+                    )?
+                }
+            }
+        }
     };
-    let reason = if args.has("progress") {
-        drive(session.as_mut(), &mut ProgressObserver)?
+    let mut observer: Box<dyn Observer> = if args.has("progress") {
+        Box::new(ProgressObserver)
     } else {
-        drive(session.as_mut(), &mut NoopObserver)?
+        Box::new(NoopObserver)
+    };
+    let reason = match &ckpt_dir {
+        Some(dir) => {
+            let fp = resumed_fp.unwrap_or_else(|| {
+                checkpoint::fingerprint(&ds.x, &ds.y, &cfg)
+            });
+            let policy = AutosavePolicy { every: ckpt_every, on_stop: true };
+            let mut saver = Autosaver::new(dir, policy, fp)?;
+            let reason = drive_checkpointed(
+                session.as_mut(),
+                observer.as_mut(),
+                &mut saver,
+            )?;
+            println!(
+                "checkpoints: {} written to {}",
+                saver.saves,
+                dir.display()
+            );
+            reason
+        }
+        None => drive(session.as_mut(), observer.as_mut())?,
     };
     let r = session.finish()?;
     let secs = t0.elapsed().as_secs_f64();
@@ -166,7 +248,17 @@ fn cmd_cv(args: &Args) -> Result<()> {
         ds.n_examples(),
         ds.n_features()
     );
-    let curves = cv::run_cv_threads(&ds, folds, kmax, seed, threads)?;
+    let curves = match args.get("checkpoint-dir") {
+        Some(dir) => cv::run_cv_resumable(
+            &ds,
+            folds,
+            kmax,
+            seed,
+            threads,
+            std::path::Path::new(dir),
+        )?,
+        None => cv::run_cv_threads(&ds, folds, kmax, seed, threads)?,
+    };
     println!("k\tgreedy_test\tgreedy_loo\trandom_test\tgreedy_test_std");
     for (i, k) in curves.ks.iter().enumerate() {
         println!(
@@ -220,6 +312,9 @@ fn cmd_scaling(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get("follow").is_some() {
+        return cmd_serve_follow(args);
+    }
     let model_path: String = args.require("model")?;
     let p = coordinator::load_model(std::path::Path::new(&model_path))?;
     let mut ds = load_dataset(args)?;
@@ -247,6 +342,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.p50_batch_s,
         stats.p99_batch_s,
         stats.throughput
+    );
+    Ok(())
+}
+
+/// `serve --follow DIR`: hot-swap serving from a (possibly live) session
+/// checkpoint directory. Waits for the first servable checkpoint, then
+/// serves `--passes` passes over the dataset, swapping to each newer
+/// checkpoint at batch boundaries — in-flight batches always complete on
+/// the model they started with.
+fn cmd_serve_follow(args: &Args) -> Result<()> {
+    let dir: String = args.require("follow")?;
+    ensure!(
+        args.get("model").is_none(),
+        "--follow and --model are mutually exclusive"
+    );
+    let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
+    ensure!(
+        engine == EngineKind::Native,
+        "serve --follow serves on the native engine"
+    );
+    let mut ds = load_dataset(args)?;
+    ds.standardize();
+    let batch: usize = args.get_or("batch", 64usize)?;
+    let passes: usize = args.get_or("passes", 1usize)?;
+    let poll_ms: u64 = args.get_or("poll-ms", 50u64)?;
+    let wait_s: f64 = args.get_or("wait-s", 10.0f64)?;
+    ensure!(
+        wait_s.is_finite() && wait_s >= 0.0,
+        "--wait-s must be ≥ 0"
+    );
+    let data_hash =
+        greedy_rls::data::fingerprint::fingerprint_xy(&ds.x, &ds.y);
+
+    let mut follower = serve::CheckpointFollower::new(&dir);
+    let first = follower.wait_for_model(
+        Duration::from_secs_f64(wait_s),
+        Duration::from_millis(poll_ms),
+    )?;
+    ensure!(
+        first.fingerprint.data == data_hash,
+        "checkpoint data hash {:016x} does not match the serving dataset's \
+         {data_hash:016x}",
+        first.fingerprint.data
+    );
+    println!(
+        "following {dir}: serving k={} model ({} rounds), batch={batch}, \
+         passes={passes}",
+        first.selected.len(),
+        first.rounds.len()
+    );
+    let server = serve::HotSwapServer::new(first.predictor());
+    let (preds, stats) = serve::serve_hotswap(
+        &server,
+        &mut follower,
+        &ds.x,
+        batch,
+        passes,
+        Some(data_hash),
+    )?;
+    let acc = greedy_rls::metrics::accuracy(&ds.y, &preds);
+    println!(
+        "swaps={} final_rounds={} final_version={}",
+        stats.swaps, stats.final_rounds, stats.final_version
+    );
+    println!(
+        "accuracy={acc:.4} batches={} mean={:.6}s p50={:.6}s p99={:.6}s \
+         throughput={:.0}/s",
+        stats.serve.batches,
+        stats.serve.mean_batch_s,
+        stats.serve.p50_batch_s,
+        stats.serve.p99_batch_s,
+        stats.serve.throughput
     );
     Ok(())
 }

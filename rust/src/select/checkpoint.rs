@@ -1,0 +1,989 @@
+//! Durable session checkpoints — kill-safe persistence for long selection
+//! runs.
+//!
+//! The paper's greedy selection is a strictly incremental computation:
+//! each round's LOO-shortcut state is a pure function of the selected
+//! prefix, and [`SessionSelector::begin_from`] already rebuilds that state
+//! bit-identically in-process. This module extends the guarantee across
+//! process boundaries: a [`Checkpoint`] persists a session's trajectory
+//! (replayable round log, current feature set and weights, cumulative
+//! elapsed time for [`StopPolicy::TimeBudget`] re-arming, and a
+//! config/data fingerprint), and [`resume_from_path`] turns it back into
+//! a live session whose continuation is bit-identical to the run that was
+//! killed — the invariant the CI kill/resume gauntlet enforces end to
+//! end.
+//!
+//! **Format.** A versioned, self-describing text format (hand-rolled like
+//! the model format in [`crate::coordinator`]; no new dependencies).
+//! Criteria and weights are stored as `f64` bit patterns in hex so the
+//! round-trip is exact, with a human-readable decimal alongside. The file
+//! ends with an FNV-1a checksum line: a truncated or bit-flipped file is
+//! rejected with a clear error instead of resuming a wrong trajectory.
+//!
+//! ```text
+//! greedy-rls-checkpoint v1
+//! config 9a…            config-hash: k, λ, loss, stop policy (not threads)
+//! data 7f…              data-hash: shape + every f64 bit of X and y
+//! elapsed_ns 12345      cumulative selection wall-clock, this + prior runs
+//! stop -                or target|round-budget|time-budget|plateau|exhausted
+//! rounds 2              replay log, in round order
+//! r 17 bf… 4.1e1        feature, criterion bits, criterion (informative)
+//! r 4 bf… 3.0e1
+//! selected 2 17 4       current feature set (serving order)
+//! weights 2
+//! w 3fe… 7.1e-1         weight bits, weight (informative)
+//! w bfc… -2.2e-1
+//! end c0…               FNV-1a of every byte above this line
+//! ```
+//!
+//! **Atomicity.** [`Checkpoint::save_atomic`] writes to a `.tmp` sibling,
+//! fsyncs, then renames into place — on POSIX the rename is atomic, so a
+//! kill mid-save leaves either the previous checkpoint or the new one,
+//! never a torn file. Leftover `.tmp` files are ignored by
+//! [`latest_in_dir`].
+//!
+//! **Autosave.** [`Autosaver`] is an [`Observer`] implementing the save
+//! policy (every N rounds, and on stop — including a [`StopPolicy::Plateau`]
+//! stop); [`drive_checkpointed`] drives a session with it, snapshotting
+//! [`Session::state`] whenever the policy fires.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context};
+
+use super::session::{
+    Observer, Session, SessionSelector, StepOutcome, StopReason,
+};
+use super::{Round, SelectionConfig, StopPolicy};
+use crate::data::fingerprint::{fingerprint_xy, Fnv64};
+use crate::linalg::Matrix;
+use crate::metrics::Loss;
+use crate::rls::Predictor;
+
+/// Checkpoint format version this build writes and reads.
+pub const FORMAT_VERSION: u32 = 1;
+
+const HEADER_TAG: &str = "greedy-rls-checkpoint";
+
+// ---------------------------------------------------------------------------
+// Fingerprints
+// ---------------------------------------------------------------------------
+
+/// Identity of a selection run: which configuration over which data.
+///
+/// Stored in every checkpoint; [`Checkpoint::verify`] refuses to resume
+/// when either half differs, because the continuation would silently
+/// diverge from the original trajectory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// Hash of the [`SelectionConfig`] — see [`config_hash`].
+    pub config: u64,
+    /// Hash of the dataset — see [`crate::data::fingerprint::fingerprint_xy`].
+    pub data: u64,
+}
+
+/// Hash the parts of a [`SelectionConfig`] that determine the selection
+/// trajectory: `k`, `λ` (by bit pattern), the loss, and the stop policy.
+///
+/// `threads` is deliberately **excluded**: the parallel execution layer is
+/// bit-deterministic (see [`crate::parallel`]), so a run checkpointed at
+/// one thread count legitimately resumes at another — the CI gauntlet
+/// exercises exactly that.
+pub fn config_hash(cfg: &SelectionConfig) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(b"greedy-rls-config-v1");
+    h.write_usize(cfg.k);
+    h.write_f64(cfg.lambda);
+    h.write_u64(match cfg.loss {
+        Loss::Squared => 0,
+        Loss::ZeroOne => 1,
+    });
+    match cfg.stop {
+        StopPolicy::KBudget(b) => {
+            h.write_u64(0);
+            h.write_usize(b);
+        }
+        StopPolicy::TimeBudget(d) => {
+            h.write_u64(1);
+            h.write_u64(d.as_nanos() as u64);
+        }
+        StopPolicy::Plateau { patience, min_rel_improvement } => {
+            h.write_u64(2);
+            h.write_usize(patience);
+            h.write_f64(min_rel_improvement);
+        }
+    }
+    h.finish()
+}
+
+/// Fingerprint a selection problem (config + data).
+pub fn fingerprint(
+    x: &Matrix,
+    y: &[f64],
+    cfg: &SelectionConfig,
+) -> Fingerprint {
+    Fingerprint { config: config_hash(cfg), data: fingerprint_xy(x, y) }
+}
+
+// ---------------------------------------------------------------------------
+// The checkpoint itself
+// ---------------------------------------------------------------------------
+
+/// A session trajectory frozen to disk (or to a string).
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Config/data identity of the run that wrote this.
+    pub fingerprint: Fingerprint,
+    /// Cumulative selection wall-clock (this process plus any prior ones)
+    /// — re-armed into the resumed session via [`Session::bill_elapsed`].
+    pub elapsed: Duration,
+    /// Stop reason, if the session had stopped when this was written.
+    pub stop_reason: Option<StopReason>,
+    /// Per-round log in round order — the replay input for
+    /// [`SessionSelector::begin_from`] (for backward elimination these are
+    /// the *eliminated* features, exactly what `begin_from` expects).
+    pub rounds: Vec<Round>,
+    /// Current feature set (selection order for forward selectors,
+    /// ascending survivors for backward elimination).
+    pub selected: Vec<usize>,
+    /// Model weights aligned with `selected` — lets `serve --follow` build
+    /// a [`Predictor`] without replaying the trajectory.
+    pub weights: Vec<f64>,
+}
+
+impl Checkpoint {
+    /// Snapshot a live session under the given fingerprint.
+    pub fn from_session(
+        session: &(dyn Session + '_),
+        fingerprint: Fingerprint,
+    ) -> anyhow::Result<Checkpoint> {
+        let st = session.state()?;
+        Ok(Checkpoint {
+            fingerprint,
+            elapsed: session.elapsed(),
+            stop_reason: st.stop_reason,
+            rounds: st.rounds,
+            selected: st.selected,
+            weights: st.weights,
+        })
+    }
+
+    /// The feature sequence to feed [`SessionSelector::begin_from`].
+    pub fn replay_features(&self) -> Vec<usize> {
+        self.rounds.iter().map(|r| r.feature).collect()
+    }
+
+    /// Criterion trajectory recorded so far (one value per round).
+    pub fn criterion_curve(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.criterion).collect()
+    }
+
+    /// Package the checkpointed model for serving.
+    pub fn predictor(&self) -> Predictor {
+        Predictor {
+            selected: self.selected.clone(),
+            weights: self.weights.clone(),
+        }
+    }
+
+    /// Refuse to resume under a different config or dataset.
+    pub fn verify(&self, expect: &Fingerprint) -> anyhow::Result<()> {
+        ensure!(
+            self.fingerprint.config == expect.config,
+            "checkpoint config hash {:016x} does not match this run's \
+             {:016x}: k, lambda, loss, or stop policy differ (threads are \
+             allowed to differ)",
+            self.fingerprint.config,
+            expect.config
+        );
+        ensure!(
+            self.fingerprint.data == expect.data,
+            "checkpoint data hash {:016x} does not match this dataset's \
+             {:016x}: the checkpoint was written for different data",
+            self.fingerprint.data,
+            expect.data
+        );
+        Ok(())
+    }
+
+    /// Serialize to the versioned text format (see the module docs).
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "{HEADER_TAG} v{FORMAT_VERSION}");
+        let _ = writeln!(s, "config {:016x}", self.fingerprint.config);
+        let _ = writeln!(s, "data {:016x}", self.fingerprint.data);
+        let _ = writeln!(s, "elapsed_ns {}", self.elapsed.as_nanos());
+        let _ = writeln!(s, "stop {}", stop_tag(self.stop_reason));
+        let _ = writeln!(s, "rounds {}", self.rounds.len());
+        for r in &self.rounds {
+            let _ = writeln!(
+                s,
+                "r {} {:016x} {:.6e}",
+                r.feature,
+                r.criterion.to_bits(),
+                r.criterion
+            );
+        }
+        let _ = write!(s, "selected {}", self.selected.len());
+        for &i in &self.selected {
+            let _ = write!(s, " {i}");
+        }
+        s.push('\n');
+        let _ = writeln!(s, "weights {}", self.weights.len());
+        for &w in &self.weights {
+            let _ = writeln!(s, "w {:016x} {:.17e}", w.to_bits(), w);
+        }
+        seal_with_checksum(s)
+    }
+
+    /// Parse the text format, rejecting truncation, corruption, and
+    /// version mismatches with specific errors.
+    pub fn from_text(text: &str) -> anyhow::Result<Checkpoint> {
+        // 1. the integrity trailer: everything before the final `end`
+        //    line must hash to the recorded checksum. A file cut short by
+        //    a crash has no trailer at all.
+        let body = checked_body(text)?;
+
+        // 2. the body, line by line
+        let mut lines = body.lines();
+        let header = lines.next().unwrap_or("");
+        let version = header.strip_prefix(HEADER_TAG).map(str::trim);
+        let version = match version {
+            Some(v) => v,
+            None => bail!("not a greedy-rls checkpoint (header {header:?})"),
+        };
+        let vnum: u32 = version
+            .strip_prefix('v')
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| {
+                anyhow!("malformed checkpoint version tag {version:?}")
+            })?;
+        ensure!(
+            vnum == FORMAT_VERSION,
+            "unsupported checkpoint version v{vnum} (this build reads \
+             v{FORMAT_VERSION})"
+        );
+
+        let config =
+            parse_hex_u64(next_line(&mut lines, "config")?).context("config hash")?;
+        let data =
+            parse_hex_u64(next_line(&mut lines, "data")?).context("data hash")?;
+        let elapsed_ns: u128 = next_line(&mut lines, "elapsed_ns")?
+            .trim()
+            .parse()
+            .context("elapsed_ns")?;
+        let stop_reason = parse_stop_tag(next_line(&mut lines, "stop")?.trim())?;
+
+        let n_rounds: usize = next_line(&mut lines, "rounds")?
+            .trim()
+            .parse()
+            .context("round count")?;
+        let mut rounds = Vec::with_capacity(n_rounds);
+        for _ in 0..n_rounds {
+            let rest = next_line(&mut lines, "r")?;
+            let mut tok = rest.split_whitespace();
+            let feature: usize = tok
+                .next()
+                .ok_or_else(|| anyhow!("round line missing feature"))?
+                .parse()
+                .context("round feature")?;
+            let criterion = f64::from_bits(
+                parse_hex_u64(
+                    tok.next()
+                        .ok_or_else(|| anyhow!("round line missing criterion"))?,
+                )
+                .context("round criterion bits")?,
+            );
+            rounds.push(Round { feature, criterion });
+        }
+
+        let sel_line = next_line(&mut lines, "selected")?;
+        let mut tok = sel_line.split_whitespace();
+        let n_selected: usize = tok
+            .next()
+            .ok_or_else(|| anyhow!("selected line missing count"))?
+            .parse()
+            .context("selected count")?;
+        let selected: Vec<usize> = tok
+            .map(|t| t.parse().context("selected index"))
+            .collect::<anyhow::Result<_>>()?;
+        ensure!(
+            selected.len() == n_selected,
+            "selected line announces {n_selected} indices but carries {}",
+            selected.len()
+        );
+
+        let n_weights: usize = next_line(&mut lines, "weights")?
+            .trim()
+            .parse()
+            .context("weight count")?;
+        ensure!(
+            n_weights == n_selected,
+            "checkpoint has {n_weights} weights for {n_selected} selected \
+             features"
+        );
+        let mut weights = Vec::with_capacity(n_weights);
+        for _ in 0..n_weights {
+            let rest = next_line(&mut lines, "w")?;
+            let bits = rest
+                .split_whitespace()
+                .next()
+                .ok_or_else(|| anyhow!("weight line missing bits"))?;
+            weights
+                .push(f64::from_bits(parse_hex_u64(bits).context("weight bits")?));
+        }
+
+        Ok(Checkpoint {
+            fingerprint: Fingerprint { config, data },
+            elapsed: duration_from_nanos(elapsed_ns),
+            stop_reason,
+            rounds,
+            selected,
+            weights,
+        })
+    }
+
+    /// Write atomically: serialize to a `.tmp` sibling, fsync, rename
+    /// into place. A kill at any instant leaves either no file, a `.tmp`
+    /// leftover (ignored by [`latest_in_dir`]), or the complete
+    /// checkpoint — never a torn read for a concurrent `serve --follow`.
+    pub fn save_atomic(&self, path: &Path) -> anyhow::Result<()> {
+        write_atomic(path, &self.to_text())
+    }
+
+    /// Read and validate a checkpoint file.
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Checkpoint::from_text(&text)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+impl<'s> dyn Session + 's {
+    /// Method form of [`Checkpoint::from_session`]:
+    /// `session.checkpoint(fp)?` snapshots this session's trajectory for
+    /// persistence.
+    pub fn checkpoint(
+        &self,
+        fingerprint: Fingerprint,
+    ) -> anyhow::Result<Checkpoint> {
+        Checkpoint::from_session(self, fingerprint)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared persistence primitives (also used by coordinator::cv fold files)
+// ---------------------------------------------------------------------------
+
+/// Append the integrity trailer `end <fnv64>` to a serialized body.
+pub(crate) fn seal_with_checksum(mut body: String) -> String {
+    use std::fmt::Write as _;
+    let mut h = Fnv64::new();
+    h.write(body.as_bytes());
+    let _ = writeln!(body, "end {:016x}", h.finish());
+    body
+}
+
+/// Validate the trailer written by [`seal_with_checksum`] and return the
+/// body (with its trailing newline). Distinguishes truncation (no
+/// trailer at all — what a crash mid-write leaves) from corruption
+/// (checksum mismatch).
+pub(crate) fn checked_body(text: &str) -> anyhow::Result<&str> {
+    let marker = text.rfind("\nend ").ok_or_else(|| {
+        anyhow!(
+            "file is truncated or not a checkpoint: missing \
+             `end <checksum>` trailer"
+        )
+    })?;
+    let body = &text[..marker + 1]; // includes the trailing newline
+    let trailer = text[marker + 1..].trim_end();
+    let recorded = trailer
+        .strip_prefix("end ")
+        .and_then(|h| u64::from_str_radix(h.trim(), 16).ok())
+        .ok_or_else(|| {
+            anyhow!("checkpoint trailer {trailer:?} is malformed")
+        })?;
+    let actual = {
+        let mut h = Fnv64::new();
+        h.write(body.as_bytes());
+        h.finish()
+    };
+    ensure!(
+        actual == recorded,
+        "file is corrupt: checksum {actual:016x} does not match recorded \
+         {recorded:016x}"
+    );
+    Ok(body)
+}
+
+/// Write `text` to `path` atomically: `.tmp` sibling, fsync, rename. The
+/// durability half of every checkpoint-family format.
+pub(crate) fn write_atomic(path: &Path, text: &str) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| {
+            anyhow!("checkpoint path {} has no file name", path.display())
+        })?;
+    let tmp = path.with_file_name(format!("{file_name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(text.as_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))
+}
+
+/// Consume one body line, which must be `<key>` or `<key> <rest>`;
+/// returns `<rest>` (possibly empty).
+fn next_line<'t>(
+    lines: &mut std::str::Lines<'t>,
+    key: &str,
+) -> anyhow::Result<&'t str> {
+    let line = lines
+        .next()
+        .ok_or_else(|| anyhow!("checkpoint ends before `{key}` line"))?;
+    line.strip_prefix(key)
+        .and_then(|rest| {
+            // require a separating space (or an exactly-empty rest), so
+            // `rounds …` can never satisfy the key `r`
+            if rest.is_empty() {
+                Some(rest)
+            } else {
+                rest.strip_prefix(' ')
+            }
+        })
+        .ok_or_else(|| anyhow!("checkpoint line {line:?}: expected `{key} …`"))
+}
+
+fn parse_hex_u64(s: &str) -> anyhow::Result<u64> {
+    u64::from_str_radix(s.trim(), 16)
+        .map_err(|e| anyhow!("bad hex value {s:?}: {e}"))
+}
+
+fn duration_from_nanos(ns: u128) -> Duration {
+    // Duration::from_nanos takes u64 (~584 years) — saturate above that.
+    Duration::from_nanos(u64::try_from(ns).unwrap_or(u64::MAX))
+}
+
+fn stop_tag(reason: Option<StopReason>) -> &'static str {
+    match reason {
+        None => "-",
+        Some(StopReason::TargetReached) => "target",
+        Some(StopReason::RoundBudget) => "round-budget",
+        Some(StopReason::TimeBudget) => "time-budget",
+        Some(StopReason::Plateau) => "plateau",
+        Some(StopReason::Exhausted) => "exhausted",
+    }
+}
+
+fn parse_stop_tag(tag: &str) -> anyhow::Result<Option<StopReason>> {
+    Ok(match tag {
+        "-" => None,
+        "target" => Some(StopReason::TargetReached),
+        "round-budget" => Some(StopReason::RoundBudget),
+        "time-budget" => Some(StopReason::TimeBudget),
+        "plateau" => Some(StopReason::Plateau),
+        "exhausted" => Some(StopReason::Exhausted),
+        other => bail!("unknown stop tag {other:?}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint directories
+// ---------------------------------------------------------------------------
+
+/// Canonical file name for a checkpoint taken after `rounds` rounds.
+/// Zero-padded so lexicographic and numeric order agree.
+pub fn checkpoint_file_name(rounds: usize) -> String {
+    format!("ckpt-{rounds:08}.ckpt")
+}
+
+/// Canonical path for a checkpoint inside `dir`.
+pub fn checkpoint_path(dir: &Path, rounds: usize) -> PathBuf {
+    dir.join(checkpoint_file_name(rounds))
+}
+
+/// Round count encoded in a checkpoint file name, if it is one.
+fn parse_round_count(name: &str) -> Option<usize> {
+    name.strip_prefix("ckpt-")?
+        .strip_suffix(".ckpt")?
+        .parse()
+        .ok()
+}
+
+/// Round count encoded in a checkpoint path's file name, if it follows
+/// the [`checkpoint_file_name`] convention — lets a follower decide
+/// whether a file is newer without reading it.
+pub fn round_count_in_name(path: &Path) -> Option<usize> {
+    path.file_name()?.to_str().and_then(parse_round_count)
+}
+
+/// The most advanced checkpoint in `dir` (highest round count), or `None`
+/// if the directory is missing or holds none. Files that are not
+/// `ckpt-<rounds>.ckpt` — crash-leftover `.tmp` files in particular — are
+/// ignored.
+pub fn latest_in_dir(dir: &Path) -> anyhow::Result<Option<PathBuf>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(None)
+        }
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("listing {}", dir.display()))
+        }
+    };
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in entries {
+        let entry =
+            entry.with_context(|| format!("listing {}", dir.display()))?;
+        let name = entry.file_name();
+        let Some(rounds) = name.to_str().and_then(parse_round_count) else {
+            continue;
+        };
+        if best.as_ref().is_none_or(|(r, _)| rounds > *r) {
+            best = Some((rounds, entry.path()));
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+// ---------------------------------------------------------------------------
+// Resume
+// ---------------------------------------------------------------------------
+
+/// Rebuild a live session from a checkpoint file: verify the fingerprint,
+/// replay the recorded rounds through [`SessionSelector::begin_from`]
+/// (bit-identical cache reconstruction), and re-arm the time-budget clock
+/// with the prior elapsed time. Returns the session together with the
+/// checkpoint it was restored from.
+pub fn resume_from_path<'a, S: SessionSelector + ?Sized>(
+    sel: &S,
+    x: &'a Matrix,
+    y: &'a [f64],
+    cfg: &SelectionConfig,
+    path: &Path,
+) -> anyhow::Result<(Box<dyn Session + 'a>, Checkpoint)> {
+    let ckpt = Checkpoint::load(path)?;
+    ckpt.verify(&fingerprint(x, y, cfg))?;
+    let mut session = sel
+        .begin_from(x, y, cfg, &ckpt.replay_features())
+        .with_context(|| {
+            format!(
+                "replaying {} checkpointed rounds from {}",
+                ckpt.rounds.len(),
+                path.display()
+            )
+        })?;
+    session.bill_elapsed(ckpt.elapsed);
+    Ok((session, ckpt))
+}
+
+// ---------------------------------------------------------------------------
+// Autosave
+// ---------------------------------------------------------------------------
+
+/// When the [`Autosaver`] writes.
+#[derive(Clone, Copy, Debug)]
+pub struct AutosavePolicy {
+    /// Save after this many committed rounds since the last save
+    /// (`0` = never periodically; only `on_stop`).
+    pub every: usize,
+    /// Also save when the session stops — whatever the reason, so a
+    /// [`StopPolicy::Plateau`] stop leaves a final checkpoint behind.
+    pub on_stop: bool,
+}
+
+impl Default for AutosavePolicy {
+    fn default() -> Self {
+        AutosavePolicy { every: 1, on_stop: true }
+    }
+}
+
+/// [`Observer`]-driven autosave: the observer callbacks run the policy
+/// state machine, and [`drive_checkpointed`] (which owns the session
+/// borrow) snapshots and writes whenever the policy marks a save due.
+pub struct Autosaver {
+    dir: PathBuf,
+    policy: AutosavePolicy,
+    fingerprint: Fingerprint,
+    since_save: usize,
+    due: bool,
+    /// Dedupe key of the last write: round count + stop reason. The stop
+    /// reason is part of the key so the final on-stop save is *not*
+    /// deduped against the same round's mid-run save — the trail's last
+    /// checkpoint must record why the session stopped.
+    last_saved: Option<(usize, Option<StopReason>)>,
+    /// Checkpoints written so far (monotonic; exposed for logging/tests).
+    pub saves: usize,
+}
+
+impl Autosaver {
+    /// Create the checkpoint directory (if needed) and an idle saver.
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        policy: AutosavePolicy,
+        fingerprint: Fingerprint,
+    ) -> anyhow::Result<Autosaver> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(Autosaver {
+            dir,
+            policy,
+            fingerprint,
+            since_save: 0,
+            due: false,
+            last_saved: None,
+            saves: 0,
+        })
+    }
+
+    /// Snapshot `session` and write `ckpt-<rounds>.ckpt` now (deduped: a
+    /// (round count, stop reason) state already on disk is not
+    /// rewritten; a stop re-saves the final round's file so it records
+    /// the reason). Returns the path written, or `None` when deduped.
+    pub fn save_now(
+        &mut self,
+        session: &(dyn Session + '_),
+    ) -> anyhow::Result<Option<PathBuf>> {
+        let key = (session.rounds_done(), session.stop_reason());
+        if self.last_saved == Some(key) {
+            return Ok(None);
+        }
+        let ckpt = Checkpoint::from_session(session, self.fingerprint)?;
+        let path = checkpoint_path(&self.dir, key.0);
+        ckpt.save_atomic(&path)?;
+        self.last_saved = Some(key);
+        self.since_save = 0;
+        self.saves += 1;
+        Ok(Some(path))
+    }
+
+    /// Write if the policy has marked a save due since the last write.
+    pub fn flush_due(
+        &mut self,
+        session: &(dyn Session + '_),
+    ) -> anyhow::Result<Option<PathBuf>> {
+        if !self.due {
+            return Ok(None);
+        }
+        self.due = false;
+        self.save_now(session)
+    }
+}
+
+impl Observer for Autosaver {
+    fn on_round(&mut self, _index: usize, _round: &Round, _elapsed: Duration) {
+        self.since_save += 1;
+        if self.policy.every > 0 && self.since_save >= self.policy.every {
+            self.due = true;
+        }
+    }
+
+    fn on_stop(&mut self, _reason: StopReason) {
+        if self.policy.on_stop {
+            self.due = true;
+        }
+    }
+}
+
+/// [`super::session::drive`] with autosaving: every committed round is
+/// reported to `observer` *and* to the saver's policy; the saver then
+/// writes a checkpoint whenever its policy fired (every N rounds, on
+/// stop). Returns the stop reason; the final checkpoint — written for any
+/// stop when the policy's `on_stop` is set — records it.
+pub fn drive_checkpointed(
+    session: &mut (dyn Session + '_),
+    observer: &mut dyn Observer,
+    saver: &mut Autosaver,
+) -> anyhow::Result<StopReason> {
+    let mut index = session.rounds_done();
+    loop {
+        let t0 = Instant::now();
+        match session.step()? {
+            StepOutcome::Selected(round) => {
+                let dt = t0.elapsed();
+                observer.on_round(index, &round, dt);
+                saver.on_round(index, &round, dt);
+                saver.flush_due(&*session)?;
+                index += 1;
+            }
+            StepOutcome::Done(reason) => {
+                observer.on_stop(reason);
+                saver.on_stop(reason);
+                saver.flush_due(&*session)?;
+                return Ok(reason);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::greedy::GreedyRls;
+    use crate::select::{NoopObserver, Selector};
+
+    fn dataset() -> crate::data::Dataset {
+        crate::data::synthetic::two_gaussians(40, 12, 4, 1.5, 21)
+    }
+
+    fn cfg(k: usize) -> SelectionConfig {
+        SelectionConfig::builder().k(k).lambda(0.8).build()
+    }
+
+    fn sample_checkpoint() -> Checkpoint {
+        Checkpoint {
+            fingerprint: Fingerprint { config: 0xdead_beef, data: 0x1234 },
+            elapsed: Duration::from_nanos(987_654_321),
+            stop_reason: Some(StopReason::Plateau),
+            rounds: vec![
+                Round { feature: 17, criterion: 41.25 },
+                Round { feature: 4, criterion: -0.0 },
+            ],
+            selected: vec![17, 4],
+            weights: vec![0.7071067811865476, -1.5e-300],
+        }
+    }
+
+    fn assert_same(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.elapsed, b.elapsed);
+        assert_eq!(a.stop_reason, b.stop_reason);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(ra.feature, rb.feature);
+            assert_eq!(ra.criterion.to_bits(), rb.criterion.to_bits());
+        }
+        assert_eq!(a.weights.len(), b.weights.len());
+        for (wa, wb) in a.weights.iter().zip(&b.weights) {
+            assert_eq!(wa.to_bits(), wb.to_bits());
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_is_bit_exact() {
+        let c = sample_checkpoint();
+        let back = Checkpoint::from_text(&c.to_text()).unwrap();
+        assert_same(&c, &back);
+        // -0.0 and subnormal-ish weights survive exactly
+        assert_eq!(back.rounds[1].criterion.to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn truncated_text_is_rejected() {
+        let text = sample_checkpoint().to_text();
+        for cut in [text.len() / 4, text.len() / 2, text.len() - 2] {
+            let err = Checkpoint::from_text(&text[..cut]).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("corrupt"),
+                "cut at {cut}: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_byte_is_rejected() {
+        let text = sample_checkpoint().to_text();
+        // flip one digit inside the body (feature index 17 → 27)
+        let bad = text.replacen("r 17 ", "r 27 ", 1);
+        assert_ne!(bad, text);
+        let err = Checkpoint::from_text(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let text = sample_checkpoint()
+            .to_text()
+            .replacen("checkpoint v1", "checkpoint v2", 1);
+        // re-seal the checksum so only the version differs
+        let marker = text.rfind("\nend ").unwrap();
+        let body = &text[..marker + 1];
+        let mut h = Fnv64::new();
+        h.write(body.as_bytes());
+        let resealed = format!("{body}end {:016x}\n", h.finish());
+        let err = Checkpoint::from_text(&resealed).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported"), "{err:#}");
+    }
+
+    #[test]
+    fn foreign_file_is_rejected() {
+        assert!(Checkpoint::from_text("greedy-rls-model v1\n1 2.0\n").is_err());
+        assert!(Checkpoint::from_text("").is_err());
+    }
+
+    #[test]
+    fn weight_count_must_match_selected() {
+        let mut c = sample_checkpoint();
+        c.weights.pop();
+        let err = Checkpoint::from_text(&c.to_text()).unwrap_err();
+        assert!(format!("{err:#}").contains("weights"), "{err:#}");
+    }
+
+    #[test]
+    fn verify_distinguishes_config_and_data_mismatch() {
+        let c = sample_checkpoint();
+        let fp = c.fingerprint;
+        assert!(c.verify(&fp).is_ok());
+        let err = c
+            .verify(&Fingerprint { config: fp.config ^ 1, ..fp })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("config"), "{err:#}");
+        let err =
+            c.verify(&Fingerprint { data: fp.data ^ 1, ..fp }).unwrap_err();
+        assert!(format!("{err:#}").contains("data"), "{err:#}");
+    }
+
+    #[test]
+    fn config_hash_covers_policy_but_not_threads() {
+        let base = cfg(4);
+        assert_eq!(config_hash(&base), config_hash(&base));
+        assert_eq!(
+            config_hash(&base),
+            config_hash(&SelectionConfig { threads: 7, ..base })
+        );
+        assert_ne!(
+            config_hash(&base),
+            config_hash(&SelectionConfig { k: 5, ..base })
+        );
+        assert_ne!(
+            config_hash(&base),
+            config_hash(&SelectionConfig { lambda: 0.9, ..base })
+        );
+        assert_ne!(
+            config_hash(&base),
+            config_hash(&SelectionConfig { loss: Loss::Squared, ..base })
+        );
+        assert_ne!(
+            config_hash(&base),
+            config_hash(&SelectionConfig {
+                stop: StopPolicy::KBudget(3),
+                ..base
+            })
+        );
+    }
+
+    #[test]
+    fn latest_in_dir_picks_max_and_ignores_leftovers() {
+        let dir = std::env::temp_dir().join("greedy_rls_ckpt_latest_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest_in_dir(&dir).unwrap().is_none(), "missing dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(latest_in_dir(&dir).unwrap().is_none(), "empty dir");
+        for rounds in [2usize, 10, 7] {
+            std::fs::write(checkpoint_path(&dir, rounds), "x").unwrap();
+        }
+        // crash leftovers and unrelated files must be ignored
+        std::fs::write(dir.join("ckpt-00000099.ckpt.tmp"), "x").unwrap();
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+        let latest = latest_in_dir(&dir).unwrap().unwrap();
+        assert_eq!(
+            latest.file_name().unwrap().to_str().unwrap(),
+            "ckpt-00000010.ckpt"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_atomic_leaves_no_tmp_behind() {
+        let dir = std::env::temp_dir().join("greedy_rls_ckpt_atomic_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = checkpoint_path(&dir, 3);
+        sample_checkpoint().save_atomic(&path).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["ckpt-00000003.ckpt".to_string()]);
+        assert_same(&Checkpoint::load(&path).unwrap(), &sample_checkpoint());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn autosave_then_resume_continues_bit_identically() {
+        let dir = std::env::temp_dir().join("greedy_rls_ckpt_autosave_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = dataset();
+        let cfg = cfg(4);
+        let fp = fingerprint(&ds.x, &ds.y, &cfg);
+
+        let full = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+
+        // drive with autosave every round, stop after 2 via a round budget
+        let budget =
+            SelectionConfig { stop: StopPolicy::KBudget(2), ..cfg };
+        let fp_budget = fingerprint(&ds.x, &ds.y, &budget);
+        let mut session = GreedyRls.begin(&ds.x, &ds.y, &budget).unwrap();
+        let mut saver =
+            Autosaver::new(&dir, AutosavePolicy::default(), fp_budget)
+                .unwrap();
+        let reason = drive_checkpointed(
+            session.as_mut(),
+            &mut NoopObserver,
+            &mut saver,
+        )
+        .unwrap();
+        assert_eq!(reason, StopReason::RoundBudget);
+        // rounds 1 and 2, plus the on-stop re-save of round 2 that
+        // records the stop reason in the final file
+        assert_eq!(saver.saves, 3, "every-round policy writes each round");
+
+        // resume the latest checkpoint under the *full* config (different
+        // stop policy ⇒ different config hash ⇒ refusal)…
+        let latest = latest_in_dir(&dir).unwrap().unwrap();
+        assert_eq!(
+            Checkpoint::load(&latest).unwrap().stop_reason,
+            Some(StopReason::RoundBudget),
+            "final checkpoint must record why the session stopped"
+        );
+        let err = resume_from_path(&GreedyRls, &ds.x, &ds.y, &cfg, &latest)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("config"), "{err:#}");
+
+        // …so re-save under the full config's fingerprint and resume.
+        let ckpt = Checkpoint::load(&latest).unwrap();
+        let rewrapped = Checkpoint { fingerprint: fp, ..ckpt };
+        rewrapped.save_atomic(&latest).unwrap();
+        let (session, restored) =
+            resume_from_path(&GreedyRls, &ds.x, &ds.y, &cfg, &latest)
+                .unwrap();
+        assert_eq!(restored.rounds.len(), 2);
+        assert_eq!(session.rounds_done(), 2);
+        let resumed = crate::select::run_to_completion(session).unwrap();
+        assert_eq!(resumed.selected, full.selected);
+        for (a, b) in resumed.rounds.iter().zip(&full.rounds) {
+            assert_eq!(a.criterion.to_bits(), b.criterion.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn session_checkpoint_records_weights_for_serving() {
+        let ds = dataset();
+        let cfg = cfg(3);
+        let fp = fingerprint(&ds.x, &ds.y, &cfg);
+        let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        while !matches!(session.step().unwrap(), StepOutcome::Done(_)) {}
+        // the `session.checkpoint(fp)` method form
+        let ckpt = session.checkpoint(fp).unwrap();
+        let r = session.finish().unwrap();
+        assert_eq!(ckpt.predictor().selected, r.selected);
+        assert_eq!(ckpt.predictor().weights, r.weights);
+        assert_eq!(ckpt.stop_reason, Some(StopReason::TargetReached));
+        assert_eq!(ckpt.criterion_curve(), r.criterion_curve());
+    }
+}

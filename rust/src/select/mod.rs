@@ -23,9 +23,13 @@
 //! Every selector also implements [`SessionSelector`] — the stepwise
 //! [`session`] API with early stopping ([`StopPolicy`]), warm starts, and
 //! per-round observation; [`Selector::select`] is its one-shot shim.
+//! Sessions persist across process boundaries via [`checkpoint`]: durable,
+//! fingerprinted trajectory snapshots with bit-identical kill/resume
+//! (atomic write-rename, autosave policies, checksum-guarded format).
 
 pub mod backward;
 pub mod centers;
+pub mod checkpoint;
 pub mod floating;
 pub mod foba;
 pub mod greedy;
@@ -36,6 +40,10 @@ pub mod rankrls;
 pub mod session;
 pub mod wrapper;
 
+pub use checkpoint::{
+    drive_checkpointed, resume_from_path, AutosavePolicy, Autosaver,
+    Checkpoint, Fingerprint,
+};
 pub use session::{
     drive, run_to_completion, NoopObserver, Observer, Session, SessionSelector,
     SessionState, StepOutcome, StopPolicy, StopReason,

@@ -43,9 +43,13 @@ pub enum StopPolicy {
     KBudget(usize),
     /// Stop once this much wall-clock time has elapsed since `begin` —
     /// or, for a warm-started session, since the last replayed round, so
-    /// a resumed run gets its full budget for *new* rounds. Checked
-    /// between rounds: the round in flight always completes, so the
-    /// overshoot is bounded by one round (O(mn) for greedy RLS).
+    /// a `begin_from` resume gets its full budget for *new* rounds. A
+    /// checkpoint resume ([`super::checkpoint`]) instead continues the
+    /// original accounting: the prior run's elapsed time is re-armed via
+    /// [`Session::bill_elapsed`], bounding total selection wall-clock
+    /// across process restarts. Checked between rounds: the round in
+    /// flight always completes, so the overshoot is bounded by one round
+    /// (O(mn) for greedy RLS).
     TimeBudget(Duration),
     /// Stop after `patience` consecutive rounds whose criterion failed to
     /// improve on the best seen so far by more than
@@ -180,6 +184,23 @@ pub trait Session {
 
     /// Why the session stopped, once it has.
     fn stop_reason(&self) -> Option<StopReason>;
+
+    /// Wall-clock this session has spent selecting: time since `begin`
+    /// (or since the last replayed round of a warm start) plus any prior
+    /// elapsed time credited via [`Session::bill_elapsed`]. This is the
+    /// value a checkpoint persists so a resumed process can continue the
+    /// [`StopPolicy::TimeBudget`] accounting where the killed one left
+    /// off.
+    fn elapsed(&self) -> Duration;
+
+    /// Credit wall-clock already spent by a previous process on this
+    /// trajectory (read back from a checkpoint). Re-arms the
+    /// [`StopPolicy::TimeBudget`] clock so `budget` bounds the *total*
+    /// selection time across restarts, and flows into [`Session::elapsed`]
+    /// so follow-up checkpoints keep accumulating. Call it after
+    /// `begin_from` replay — replayed rounds themselves never consume
+    /// budget.
+    fn bill_elapsed(&mut self, prior: Duration);
 
     /// Consume the session into a [`SelectionResult`] for the current
     /// feature set.
@@ -322,6 +343,9 @@ pub(crate) struct PolicySession<C> {
     core: C,
     stop: StopPolicy,
     started: Instant,
+    /// Wall-clock credited from a previous process ([`Session::bill_elapsed`]);
+    /// added to `started.elapsed()` wherever elapsed time is consumed.
+    billed: Duration,
     best: f64,
     has_best: bool,
     bad_streak: usize,
@@ -335,6 +359,7 @@ impl<C: SessionCore> PolicySession<C> {
             core,
             stop: cfg.stop,
             started: Instant::now(),
+            billed: Duration::ZERO,
             best: f64::INFINITY,
             has_best: false,
             bad_streak: 0,
@@ -352,7 +377,7 @@ impl<C: SessionCore> PolicySession<C> {
                     .then_some(StopReason::RoundBudget)
             }
             StopPolicy::TimeBudget(limit) => {
-                (self.started.elapsed() >= limit)
+                (self.started.elapsed() + self.billed >= limit)
                     .then_some(StopReason::TimeBudget)
             }
             StopPolicy::Plateau { patience, .. } => {
@@ -443,6 +468,14 @@ impl<C: SessionCore> Session for PolicySession<C> {
 
     fn stop_reason(&self) -> Option<StopReason> {
         self.done
+    }
+
+    fn elapsed(&self) -> Duration {
+        self.started.elapsed() + self.billed
+    }
+
+    fn bill_elapsed(&mut self, prior: Duration) {
+        self.billed = prior;
     }
 
     fn finish(self: Box<Self>) -> anyhow::Result<SelectionResult> {
@@ -562,6 +595,24 @@ mod tests {
         let r = s.finish().unwrap();
         assert!(r.selected.is_empty());
         assert!(r.weights.is_empty());
+    }
+
+    #[test]
+    fn billed_elapsed_counts_against_the_time_budget() {
+        // a checkpoint resume credits the prior process's selection time:
+        // billing more than the whole budget stops the session immediately
+        let ds = overfit_dataset(9);
+        let cfg = SelectionConfig::builder()
+            .k(5)
+            .stop(StopPolicy::TimeBudget(Duration::from_secs(3600)))
+            .build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        s.bill_elapsed(Duration::from_secs(7200));
+        assert!(s.elapsed() >= Duration::from_secs(7200));
+        assert!(matches!(
+            s.step().unwrap(),
+            StepOutcome::Done(StopReason::TimeBudget)
+        ));
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Checkpoint robustness + kill/resume equivalence (integration level).
+//!
+//! The contract under test is the acceptance criterion of the checkpoint
+//! subsystem: a session killed after *any* round and resumed from its
+//! latest checkpoint produces a bit-identical selected set, criterion
+//! curve, and weights to an uninterrupted run — for every selector, and
+//! across thread counts (a run checkpointed serially may resume on 4
+//! threads). Plus the failure modes: truncated/corrupt files, version
+//! mismatches, config/data fingerprint mismatches, and crash-leftover
+//! `.tmp` files must all be handled loudly or ignored safely, never
+//! resumed into a silently wrong trajectory.
+
+use std::path::PathBuf;
+
+use greedy_rls::data::synthetic;
+use greedy_rls::linalg::Matrix;
+use greedy_rls::metrics::Loss;
+use greedy_rls::rls::kernel::Kernel;
+use greedy_rls::select::checkpoint::{
+    self, drive_checkpointed, resume_from_path, AutosavePolicy, Autosaver,
+    Checkpoint,
+};
+use greedy_rls::select::{
+    backward::BackwardElimination, centers::CenterSelector,
+    floating::FloatingForward, foba::Foba, greedy::GreedyRls,
+    lowrank::LowRankLsSvm, nfold::NFoldGreedy, random::RandomSelector,
+    rankrls::GreedyRankRls, run_to_completion, wrapper::Wrapper,
+    NoopObserver, SelectionConfig, SelectionResult, Selector,
+    SessionSelector,
+};
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("greedy_rls_ckpt_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_bit_identical(a: &SelectionResult, b: &SelectionResult, what: &str) {
+    assert_eq!(a.selected, b.selected, "{what}: selected");
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert_eq!(ra.feature, rb.feature, "{what}: round {i} feature");
+        assert_eq!(
+            ra.criterion.to_bits(),
+            rb.criterion.to_bits(),
+            "{what}: round {i} criterion {} vs {}",
+            ra.criterion,
+            rb.criterion
+        );
+    }
+    for (i, (wa, wb)) in a.weights.iter().zip(&b.weights).enumerate() {
+        assert_eq!(wa.to_bits(), wb.to_bits(), "{what}: weight {i}");
+    }
+}
+
+/// Run `sel` to completion with autosave-every-round, then — for several
+/// kill points and thread counts — resume from the on-disk checkpoint and
+/// demand a bit-identical final result.
+fn check_kill_resume<S: Selector + SessionSelector>(
+    sel: &S,
+    x: &Matrix,
+    y: &[f64],
+    cfg: &SelectionConfig,
+) {
+    let name = sel.name();
+    let dir = scratch_dir(name);
+    let one_shot = sel.select(x, y, cfg).unwrap();
+
+    // the "recording" run: autosave after every round
+    let fp = checkpoint::fingerprint(x, y, cfg);
+    let mut session = sel.begin(x, y, cfg).unwrap();
+    let mut saver =
+        Autosaver::new(&dir, AutosavePolicy::default(), fp).unwrap();
+    drive_checkpointed(session.as_mut(), &mut NoopObserver, &mut saver)
+        .unwrap();
+    let recorded = session.finish().unwrap();
+    assert_bit_identical(&one_shot, &recorded, &format!("{name}: recorded"));
+
+    let n = one_shot.rounds.len();
+    assert!(n >= 1, "{name}: nothing selected");
+    assert!(saver.saves >= n, "{name}: every round checkpointed");
+
+    let mut cuts = vec![1, n / 2, n];
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.retain(|&c| c >= 1);
+    for cut in cuts {
+        let path = checkpoint::checkpoint_path(&dir, cut);
+        assert!(path.exists(), "{name}: missing checkpoint at round {cut}");
+        for threads in [1usize, 2, 4] {
+            let tcfg = SelectionConfig { threads, ..*cfg };
+            let (resumed_session, ckpt) =
+                resume_from_path(sel, x, y, &tcfg, &path).unwrap();
+            assert_eq!(ckpt.rounds.len(), cut, "{name}: replay length");
+            assert_eq!(resumed_session.rounds_done(), cut);
+            let resumed = run_to_completion(resumed_session).unwrap();
+            assert_bit_identical(
+                &one_shot,
+                &resumed,
+                &format!("{name}: killed at {cut}, resumed on {threads}t"),
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_resume_is_bit_identical_for_every_selector() {
+    let ds = synthetic::two_gaussians(40, 12, 4, 1.5, 51);
+    for loss in [Loss::Squared, Loss::ZeroOne] {
+        let cfg = SelectionConfig {
+            k: 4,
+            lambda: 0.8,
+            loss,
+            ..Default::default()
+        };
+        check_kill_resume(&GreedyRls, &ds.x, &ds.y, &cfg);
+        check_kill_resume(&Wrapper::shortcut(), &ds.x, &ds.y, &cfg);
+        check_kill_resume(&LowRankLsSvm, &ds.x, &ds.y, &cfg);
+        check_kill_resume(&RandomSelector { seed: 5 }, &ds.x, &ds.y, &cfg);
+        check_kill_resume(&BackwardElimination, &ds.x, &ds.y, &cfg);
+        check_kill_resume(&FloatingForward::default(), &ds.x, &ds.y, &cfg);
+        check_kill_resume(&Foba::default(), &ds.x, &ds.y, &cfg);
+        check_kill_resume(
+            &NFoldGreedy { folds: 5, seed: 2 },
+            &ds.x,
+            &ds.y,
+            &cfg,
+        );
+        check_kill_resume(&GreedyRankRls, &ds.x, &ds.y, &cfg);
+        check_kill_resume(
+            &CenterSelector { kernel: Kernel::Rbf { gamma: 0.7 } },
+            &ds.x,
+            &ds.y,
+            &cfg,
+        );
+    }
+}
+
+/// A checkpoint recorded under N threads must resume under any other
+/// thread count — the config hash deliberately excludes `threads`.
+#[test]
+fn checkpoints_resume_across_thread_counts() {
+    let ds = synthetic::two_gaussians(50, 14, 5, 1.5, 52);
+    let recorded_cfg = SelectionConfig {
+        k: 5,
+        lambda: 1.0,
+        loss: Loss::ZeroOne,
+        threads: 4,
+        ..Default::default()
+    };
+    let dir = scratch_dir("xthreads");
+    let fp = checkpoint::fingerprint(&ds.x, &ds.y, &recorded_cfg);
+    let mut session = GreedyRls.begin(&ds.x, &ds.y, &recorded_cfg).unwrap();
+    let mut saver =
+        Autosaver::new(&dir, AutosavePolicy::default(), fp).unwrap();
+    drive_checkpointed(session.as_mut(), &mut NoopObserver, &mut saver)
+        .unwrap();
+    let full = session.finish().unwrap();
+
+    let serial_cfg = SelectionConfig { threads: 1, ..recorded_cfg };
+    let path = checkpoint::checkpoint_path(&dir, 2);
+    let (s, _) =
+        resume_from_path(&GreedyRls, &ds.x, &ds.y, &serial_cfg, &path)
+            .unwrap();
+    let resumed = run_to_completion(s).unwrap();
+    assert_bit_identical(&full, &resumed, "4t recording, 1t resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Record one complete autosaved run in a test-unique directory (tests
+/// run concurrently — they must not share scratch space) and return the
+/// problem plus the latest checkpoint's path.
+fn setup_one_checkpoint(tag: &str) -> (TestProblem, PathBuf) {
+    let ds = synthetic::two_gaussians(40, 12, 4, 1.5, 53);
+    let cfg = SelectionConfig {
+        k: 4,
+        lambda: 0.8,
+        loss: Loss::ZeroOne,
+        ..Default::default()
+    };
+    let dir = scratch_dir(tag);
+    let fp = checkpoint::fingerprint(&ds.x, &ds.y, &cfg);
+    let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+    let mut saver =
+        Autosaver::new(&dir, AutosavePolicy::default(), fp).unwrap();
+    drive_checkpointed(session.as_mut(), &mut NoopObserver, &mut saver)
+        .unwrap();
+    let path = checkpoint::latest_in_dir(&dir).unwrap().unwrap();
+    (TestProblem { ds, cfg }, path)
+}
+
+struct TestProblem {
+    ds: greedy_rls::data::Dataset,
+    cfg: SelectionConfig,
+}
+
+#[test]
+fn truncated_checkpoint_file_is_rejected_with_a_clear_error() {
+    let (p, path) = setup_one_checkpoint("trunc");
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let err = resume_from_path(&GreedyRls, &p.ds.x, &p.ds.y, &p.cfg, &path)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("truncated") || msg.contains("corrupt"),
+        "unhelpful error: {msg}"
+    );
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn corrupt_checkpoint_file_is_rejected_with_a_clear_error() {
+    let (p, path) = setup_one_checkpoint("corrupt");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] = bytes[mid].wrapping_add(1);
+    std::fs::write(&path, &bytes).unwrap();
+    let err = resume_from_path(&GreedyRls, &p.ds.x, &p.ds.y, &p.cfg, &path)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("corrupt")
+            || msg.contains("truncated")
+            || msg.contains("expected"),
+        "unhelpful error: {msg}"
+    );
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn version_mismatch_is_refused() {
+    let (p, path) = setup_one_checkpoint("version");
+    // rewrite as a "v2" file with a valid checksum, so only the version
+    // check can reject it
+    let text = std::fs::read_to_string(&path).unwrap();
+    let bumped = text.replacen("checkpoint v1", "checkpoint v2", 1);
+    let marker = bumped.rfind("\nend ").unwrap();
+    let body = &bumped[..marker + 1];
+    let mut h = greedy_rls::data::fingerprint::Fnv64::new();
+    h.write(body.as_bytes());
+    std::fs::write(&path, format!("{body}end {:016x}\n", h.finish()))
+        .unwrap();
+    let err = resume_from_path(&GreedyRls, &p.ds.x, &p.ds.y, &p.cfg, &path)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("unsupported checkpoint version"),
+        "{err:#}"
+    );
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn config_hash_mismatch_is_refused() {
+    let (p, path) = setup_one_checkpoint("confmis");
+    let other = SelectionConfig { lambda: 0.9, ..p.cfg };
+    let err = resume_from_path(&GreedyRls, &p.ds.x, &p.ds.y, &other, &path)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("config hash"), "{err:#}");
+    // a different thread count is NOT a config mismatch
+    let threads = SelectionConfig { threads: 3, ..p.cfg };
+    assert!(
+        resume_from_path(&GreedyRls, &p.ds.x, &p.ds.y, &threads, &path)
+            .is_ok()
+    );
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn data_hash_mismatch_is_refused() {
+    let (p, path) = setup_one_checkpoint("datamis");
+    let other = synthetic::two_gaussians(40, 12, 4, 1.5, 54);
+    let err = resume_from_path(&GreedyRls, &other.x, &other.y, &p.cfg, &path)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("data hash"), "{err:#}");
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+/// Crash simulation around the atomic rename: a kill mid-save leaves a
+/// `.tmp` sibling; the resume path must ignore it and use the newest
+/// complete checkpoint.
+#[test]
+fn leftover_tmp_from_a_crashed_save_is_ignored() {
+    let (p, path) = setup_one_checkpoint("tmpleft");
+    let dir = path.parent().unwrap().to_path_buf();
+    // a torn write the instant before rename: half a checkpoint under
+    // the temporary name the saver uses
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(
+        dir.join("ckpt-00000099.ckpt.tmp"),
+        &text[..text.len() / 3],
+    )
+    .unwrap();
+    let latest = checkpoint::latest_in_dir(&dir).unwrap().unwrap();
+    assert_eq!(latest, path, "tmp leftover must not win");
+    let ckpt = Checkpoint::load(&latest).unwrap();
+    assert_eq!(ckpt.rounds.len(), p.cfg.k);
+    let (s, _) =
+        resume_from_path(&GreedyRls, &p.ds.x, &p.ds.y, &p.cfg, &latest)
+            .unwrap();
+    let resumed = run_to_completion(s).unwrap();
+    let reference = GreedyRls.select(&p.ds.x, &p.ds.y, &p.cfg).unwrap();
+    assert_bit_identical(&reference, &resumed, "resume beside tmp leftover");
+    let _ = std::fs::remove_dir_all(&dir);
+}
