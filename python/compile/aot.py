@@ -38,7 +38,23 @@ BUCKETS = [
 PREDICT_BUCKETS = [(64, 256), (128, 1024)]
 TRAIN_BUCKETS = [(64, 256), (128, 1024)]  # (k, m)
 
-SELECTION_ENTRIES = ["init_state", "score_step", "commit_step"]
+# Selection-loop entry points lowered at every (m, n) bucket. The first
+# three drive forward greedy RLS; full_init_state/score_removal_step/
+# downdate_step add backward elimination (and the backward phases of
+# FoBa/floating); the nfold_* pair adds the n-fold-CV criterion. The
+# nfold entries additionally carry their static fold capacity as extra
+# manifest columns (f=FOLD_FMAX, s=fold_smax(m)) so the Rust runtime can
+# check fold fit without mirroring the sizing formula.
+SELECTION_ENTRIES = [
+    "init_state",
+    "full_init_state",
+    "score_step",
+    "score_removal_step",
+    "commit_step",
+    "downdate_step",
+    "nfold_score_step",
+    "nfold_commit_step",
+]
 
 
 def to_hlo_text(lowered) -> str:
@@ -82,7 +98,10 @@ def main() -> None:
             path = os.path.join(args.out_dir, f"{name}.hlo.txt")
             with open(path, "w") as fh:
                 fh.write(text)
-            manifest.append((entry, f"{name}.hlo.txt", f"m={m}", f"n={n}"))
+            row = [entry, f"{name}.hlo.txt", f"m={m}", f"n={n}"]
+            if entry.startswith("nfold_"):
+                row += [f"f={model.FOLD_FMAX}", f"s={model.fold_smax(m)}"]
+            manifest.append(tuple(row))
             print(f"wrote {path}  ({len(text)} chars)")
 
     for k, t in PREDICT_BUCKETS:

@@ -1,5 +1,6 @@
 """Layer-1 Pallas kernels for greedy RLS + pure-jnp reference oracles."""
 
 from . import ref  # noqa: F401
-from .score_kernel import loo_scores  # noqa: F401
+from .nfold_kernel import FOLD_FMAX, fold_smax, nfold_scores  # noqa: F401
+from .score_kernel import loo_removal_scores, loo_scores  # noqa: F401
 from .update_kernel import rank1_update  # noqa: F401

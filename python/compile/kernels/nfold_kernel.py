@@ -1,0 +1,168 @@
+"""Layer-1 compute for the n-fold CV scoring step (fold-masked scoring).
+
+The n-fold greedy selector (`rust/src/select/nfold.rs`) scores candidate i
+with the hold-out shortcut: per fold H, the held-out predictions are
+
+    p_H = y_H - B~^{-1} a~_H,    B~ = B_H - u_H c_H^T,  a~_H = a_H - u_H (v.a)
+
+where B_H = G[H, H] is the fold-diagonal block of G, maintained on-device
+as a third state tensor alongside [C, a]. Unlike the LOO kernels, the hot
+work here is not a pure streaming elementwise pass — every candidate needs
+an s x s SPD solve per fold — so this module is plain shape-static JAX
+rather than Pallas: the O(mn) part (the v.c / v.a dots) lowers to the same
+HLO dot shapes as the score kernel, and the fold solves are batched CG
+(plain HLO — LAPACK custom-calls are unavailable to the AOT path, see
+`model._cg_solve`).
+
+Static fold capacity: fold tensors are padded to (FMAX, smax) slots.
+Padded slots carry fold_mask 0 and index 0; masked block entries are
+replaced by identity rows so the padded coordinates decouple from the
+solve and contribute nothing to any loss (the same exact-padding argument
+as DESIGN.md §5). Candidate blocking bounds the (f, s, s, block) solve
+temporary; `_block_n` picks the largest divisor of n within the memory
+target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import BIG
+
+# Fold-capacity constants shared with aot.py (manifest extra columns) and
+# mirrored by the Rust engine's begin-time capacity checks.
+FOLD_FMAX = 16
+
+
+def fold_smax(m: int) -> int:
+    """Per-fold slot capacity at example bucket size m.
+
+    Sized so the default 10-fold split of any m <= bucket fits
+    (ceil(m/10) < m/8 for m >= 80; the max(16, ...) floor covers small
+    buckets), while keeping the s^2 block solves far below the O(mn) scan.
+    """
+    return max(16, m // 8)
+
+
+def _block_n(n: int, f: int, s: int, budget: int = 1 << 22) -> int:
+    """Largest divisor of n keeping the (f, s, s, block) temporary under
+    ``budget`` elements."""
+    bn = max(1, min(n, budget // max(1, f * s * s)))
+    while n % bn != 0:
+        bn -= 1
+    return bn
+
+
+def _cg_batch(Bt, rhs, iters: int):
+    """Batched CG: solve Bt z = rhs for every (fold, candidate) pair.
+
+    Bt: (f, s, s, b) SPD blocks; rhs: (f, s, b). Fixed iteration count
+    (exact CG needs s steps; the slack absorbs f64 rounding), with the
+    same converged-denominator guards as `model._cg_solve`.
+
+    Returns ``(x, rs_final, rs0)`` — the final and initial squared
+    residual norms, (f, b) — so the caller can detect solves that never
+    converged (a singular / non-SPD block, the case where the native
+    engine's Cholesky factorization fails).
+    """
+
+    def matvec(p):
+        return jnp.einsum("frcb,fcb->frb", Bt, p)
+
+    x0 = jnp.zeros_like(rhs)
+    r0 = rhs
+    p0 = r0
+    rs0 = jnp.sum(r0 * r0, axis=1)  # (f, b)
+
+    def body(_, state):
+        x, r, p, rs = state
+        ap = matvec(p)
+        denom = jnp.sum(p * ap, axis=1)
+        alpha = jnp.where(denom > 0.0, rs / jnp.maximum(denom, 1e-300), 0.0)
+        x = x + alpha[:, None, :] * p
+        r = r - alpha[:, None, :] * ap
+        rs_new = jnp.sum(r * r, axis=1)
+        beta = jnp.where(rs > 0.0, rs_new / jnp.maximum(rs, 1e-300), 0.0)
+        p = r + beta[:, None, :] * p
+        return (x, r, p, rs_new)
+
+    x, r, _, rs = jax.lax.fori_loop(0, iters, body, (x0, r0, p0, rs0))
+    del r
+    return x, rs, rs0
+
+
+def nfold_scores(X, C, a, y, B, fold_idx, fold_mask, cand_mask):
+    """n-fold CV error of S ∪ {i} for every candidate i.
+
+    Args:
+        X: (n, m) feature matrix.
+        C: (m, n) cache matrix G X^T.
+        a: (m,) dual variables G y.
+        y: (m,) labels.
+        B: (f, s, s) fold-diagonal blocks of G (padded slots arbitrary —
+            they are masked to identity before the solve).
+        fold_idx: (f, s) int32 member indices, 0 in padded slots.
+        fold_mask: (f, s) 1.0 for real fold slots, 0.0 for padding
+            (entirely-padded folds are all-zero rows).
+        cand_mask: (n,) 1.0 for evaluable candidates.
+
+    Returns:
+        (e_sq, e_01): (n,) summed squared / zero-one hold-out losses;
+        masked candidates score BIG.
+    """
+    n, m = X.shape
+    f, s = fold_idx.shape
+    flat = fold_idx.reshape(-1)
+    # c_i gathered at the fold slots, for every candidate: (f, s, n)
+    cH_all = C[flat, :].reshape(f, s, n)
+    aH = (a[flat] * fold_mask.reshape(-1)).reshape(f, s)
+    yH = y[flat].reshape(f, s)
+
+    vc = jnp.sum(X * C.T, axis=1)  # (n,)
+    va = X @ a  # (n,)
+    denom = 1.0 + vc
+
+    eye = jnp.eye(s, dtype=X.dtype)
+    m2 = fold_mask[:, :, None] * fold_mask[:, None, :]  # (f, s, s)
+    pad_eye = (1.0 - m2) * eye[None, :, :]
+
+    bn = _block_n(n, f, s)
+    blocks = jnp.arange(n).reshape(n // bn, bn)
+
+    big = jnp.asarray(BIG, dtype=X.dtype)
+
+    def one_block(idx):
+        cb = cH_all[:, :, idx]  # (f, s, bn)
+        u = cb / denom[idx][None, None, :]
+        Bt = B[:, :, :, None] - u[:, :, None, :] * cb[:, None, :, :]
+        Bt = Bt * m2[..., None] + pad_eye[..., None]
+        rhs = (aH[:, :, None] - u * va[idx][None, None, :]) \
+            * fold_mask[:, :, None]
+        z, rs_fin, rs0 = _cg_batch(Bt, rhs, s + 16)
+        p = yH[:, :, None] - z  # hold-out predictions
+        # residual y - p is z itself
+        e_sq = jnp.sum(fold_mask[:, :, None] * z * z, axis=(0, 1))
+        wrong = jnp.where((yH[:, :, None] * p) > 0.0, 0.0, 1.0)
+        e_01 = jnp.sum(fold_mask[:, :, None] * wrong, axis=(0, 1))
+        # a solve that never converged means the block would not factor —
+        # the native engine's Cholesky-failure path; the candidate is not
+        # evaluable this round (any fold failing poisons the candidate,
+        # exactly like the native early return of BIG)
+        # ~(<=) rather than (>) so NaN residuals (a degenerate u = c/0
+        # candidate) also register as unsolved instead of leaking NaN
+        unsolved = ~(rs_fin <= 1e-12 * (rs0 + 1e-300))  # (f, bn)
+        bad = jnp.any(unsolved, axis=0)  # (bn,)
+        return (
+            jnp.where(bad, big, e_sq),
+            jnp.where(bad, big, e_01),
+        )
+
+    e_sq, e_01 = jax.lax.map(one_block, blocks)
+    e_sq = e_sq.reshape(n)
+    e_01 = e_01.reshape(n)
+    big = jnp.asarray(BIG, dtype=X.dtype)
+    return (
+        jnp.where(cand_mask > 0, e_sq, big),
+        jnp.where(cand_mask > 0, e_01, big),
+    )

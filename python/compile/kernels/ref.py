@@ -71,6 +71,66 @@ def loo_scores_ref(X, C, a, d, y, cand_mask, ex_mask):
     return e_sq, e_01
 
 
+def removal_scores_ref(X, C, a, d, y, mem_mask, ex_mask):
+    """LOO error of S \\ {i} for every member i (sign-flipped SMW).
+
+    Mirrors `rust/src/select/backward.rs::removal_score`: members with
+    |1 - v.c| < 1e-12 (numerically unremovable this round) score BIG, as
+    do non-members (mem_mask == 0).
+    """
+    X = jnp.asarray(X)
+    C = jnp.asarray(C)
+    vc = jnp.sum(X * C.T, axis=1)  # (n,)
+    va = X @ a  # (n,)
+    denom = 1.0 - vc
+    bad = jnp.abs(denom) < 1e-12
+    safe = jnp.where(bad, 1.0, denom)
+    U = C / safe[None, :]  # (m, n)
+    A = a[:, None] + U * va[None, :]
+    D = d[:, None] + U * C
+    P = y[:, None] - A / D
+    resid = y[:, None] - P
+    e_sq = jnp.sum(ex_mask[:, None] * resid * resid, axis=0)
+    correct = (y[:, None] * P) > 0.0
+    e_01 = jnp.sum(ex_mask[:, None] * jnp.where(correct, 0.0, 1.0), axis=0)
+    big = jnp.asarray(BIG, dtype=e_sq.dtype)
+    keep = (mem_mask > 0) & ~bad
+    return jnp.where(keep, e_sq, big), jnp.where(keep, e_01, big)
+
+
+def downdate_ref(X, C, a, d, b):
+    """Full removal of feature index b: returns (C', a', d')."""
+    v = X[b, :]
+    c = C[:, b]
+    u = c / (1.0 - v @ c)
+    a2 = a + u * (v @ a)
+    d2 = d + u * c
+    w = X[b, :] @ C
+    C2 = C + u[:, None] * w[None, :]
+    return C2, a2, d2
+
+
+def subset_caches_np(X, y, lam, feats):
+    """[C, a, d] caches for feature set `feats` by direct inversion:
+    G = (X_S^T X_S + lam I)^{-1} (m x m), C = G X^T, a = G y, d = diag(G).
+
+    C keeps all n columns (C[:, i] = G x_i for every candidate i),
+    exactly like the incremental engines maintain it.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    m = X.shape[1]
+    Xs = X[list(feats), :] if len(feats) else np.zeros((0, m))
+    G = np.linalg.inv(Xs.T @ Xs + lam * np.eye(m))
+    return G @ X.T, G @ y, np.diag(G).copy()
+
+
+def full_caches_np(X, y, lam):
+    """[C, a, d] caches of the FULL feature set (backward elimination's
+    starting point) — [`subset_caches_np`] over every feature."""
+    return subset_caches_np(X, y, lam, range(np.asarray(X).shape[0]))
+
+
 # ---------------------------------------------------------------------------
 # Rank-1 cache update
 # ---------------------------------------------------------------------------
@@ -131,6 +191,31 @@ def brute_force_loo_np(Xs, y, lam):
         w = np.linalg.solve(Xl @ Xl.T + lam * np.eye(s), Xl @ yl)
         p[j] = w @ Xs[:, j]
     return p
+
+
+def nfold_scores_np(X, y, lam, selected, folds, cand, classification=False):
+    """n-fold CV error of `selected` ∪ {cand} by explicit hold-out
+    retraining (no shortcuts): for each fold H, train RLS on the
+    complement examples with the candidate feature set, predict H.
+
+    `folds` is a list of index lists partitioning range(m)."""
+    X = np.asarray(X, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    feats = list(selected) + [cand]
+    s = len(feats)
+    e = 0.0
+    for h in folds:
+        train = [j for j in range(len(y)) if j not in h]
+        Xl = X[np.ix_(feats, train)]
+        yl = y[train]
+        w = np.linalg.solve(Xl @ Xl.T + lam * np.eye(s), Xl @ yl)
+        for j in h:
+            p = w @ X[feats, j]
+            if classification:
+                e += 0.0 if (y[j] * p) > 0.0 else 1.0
+            else:
+                e += (y[j] - p) ** 2
+    return e
 
 
 def greedy_rls_np(X, y, lam, k, classification=False):

@@ -35,72 +35,80 @@ from jax.experimental import pallas as pl
 from .ref import BIG
 
 
-def _score_block(x_ref, c_ref, a_ref, d_ref, y_ref, cmask_ref, emask_ref,
-                 e_sq_ref, e_01_ref):
-    """One block of candidates: compute both loss rows.
+def _make_score_block(sign: float):
+    """Build the per-block scoring kernel for one SMW direction.
 
-    Shapes inside the kernel:
-        x_ref     (block_n, m)
-        c_ref     (m, block_n)
-        a/d/y/emask_ref (m,)
-        cmask_ref (block_n,)
-        e_*_ref   (block_n,)
+    ``sign = +1.0`` scores *additions* (S ∪ {i}, the forward kernel):
+
+        denom = 1 + v.c,   u = c/denom,   a~ = a - u (v.a),   d~ = d - u*c
+
+    ``sign = -1.0`` scores *removals* (S \\ {i}, backward elimination):
+
+        denom = 1 - v.c,   u = c/denom,   a~ = a + u (v.a),   d~ = d + u*c
+
+    i.e. every occurrence of v.c and u flips sign — the sign-flipped SMW
+    identity of `rust/src/select/backward.rs`. Removals additionally guard
+    |denom| < 1e-12 (numerically unremovable this round → BIG), mirroring
+    the native engine exactly.
     """
-    xb = x_ref[...]
-    cb = c_ref[...]
-    a = a_ref[...]
-    d = d_ref[...]
-    y = y_ref[...]
-    emask = emask_ref[...]
-    cmask = cmask_ref[...]
 
-    # v_i . C[:, i] and v_i . a for every candidate i in the block.
-    vc = jnp.sum(xb * cb.T, axis=1)  # (block_n,)
-    va = xb @ a  # (block_n,)
+    def _score_block(x_ref, c_ref, a_ref, d_ref, y_ref, cmask_ref, emask_ref,
+                     e_sq_ref, e_01_ref):
+        """One block of candidates: compute both loss rows.
 
-    denom = 1.0 + vc
-    u = cb / denom[None, :]  # (m, block_n)
-    a_t = a[:, None] - u * va[None, :]  # updated dual variables
-    d_t = d[:, None] - u * cb  # updated diag(G)
-    p = y[:, None] - a_t / d_t  # LOO predictions
+        Shapes inside the kernel:
+            x_ref     (block_n, m)
+            c_ref     (m, block_n)
+            a/d/y/emask_ref (m,)
+            cmask_ref (block_n,)
+            e_*_ref   (block_n,)
+        """
+        xb = x_ref[...]
+        cb = c_ref[...]
+        a = a_ref[...]
+        d = d_ref[...]
+        y = y_ref[...]
+        emask = emask_ref[...]
+        cmask = cmask_ref[...]
 
-    resid = y[:, None] - p
-    e_sq = jnp.sum(emask[:, None] * resid * resid, axis=0)
-    wrong = jnp.where((y[:, None] * p) > 0.0, 0.0, 1.0)
-    e_01 = jnp.sum(emask[:, None] * wrong, axis=0)
+        # v_i . C[:, i] and v_i . a for every candidate i in the block.
+        vc = jnp.sum(xb * cb.T, axis=1)  # (block_n,)
+        va = xb @ a  # (block_n,)
 
-    big = jnp.asarray(BIG, dtype=e_sq.dtype)
-    e_sq_ref[...] = jnp.where(cmask > 0, e_sq, big)
-    e_01_ref[...] = jnp.where(cmask > 0, e_01, big)
+        denom = 1.0 + sign * vc
+        bad = jnp.abs(denom) < 1e-12  # only reachable for sign = -1
+        safe = jnp.where(bad, 1.0, denom)
+        u = cb / safe[None, :]  # (m, block_n)
+        a_t = a[:, None] - sign * u * va[None, :]  # updated dual variables
+        d_t = d[:, None] - sign * u * cb  # updated diag(G)
+        p = y[:, None] - a_t / d_t  # LOO predictions
+
+        resid = y[:, None] - p
+        e_sq = jnp.sum(emask[:, None] * resid * resid, axis=0)
+        wrong = jnp.where((y[:, None] * p) > 0.0, 0.0, 1.0)
+        e_01 = jnp.sum(emask[:, None] * wrong, axis=0)
+
+        big = jnp.asarray(BIG, dtype=e_sq.dtype)
+        keep = (cmask > 0) & ~bad
+        e_sq_ref[...] = jnp.where(keep, e_sq, big)
+        e_01_ref[...] = jnp.where(keep, e_01, big)
+
+    return _score_block
 
 
-@functools.partial(jax.jit, static_argnames=("block_n",))
-def loo_scores(X, C, a, d, y, cand_mask, ex_mask, *, block_n: int = 128):
-    """Pallas-blocked LOO scores for all candidates.
+_score_block = _make_score_block(1.0)
+_removal_score_block = _make_score_block(-1.0)
 
-    Args:
-        X: (n, m) feature matrix (feature-major, as in the paper).
-        C: (m, n) cache matrix G X^T.
-        a: (m,) dual variables.
-        d: (m,) diag(G).
-        y: (m,) labels.
-        cand_mask: (n,) 1.0 for evaluable candidates, 0.0 for
-            already-selected / padded features (scored BIG).
-        ex_mask: (m,) 1.0 for real examples, 0.0 for padding rows.
-        block_n: candidate-dimension tile size; n must be divisible by it
-            (the AOT buckets guarantee this; tests sweep odd sizes via the
-            runtime's padding path).
 
-    Returns:
-        (e_sq, e_01): each (n,), the summed squared / zero-one LOO losses.
-    """
+def _blocked_scores(kernel, X, C, a, d, y, cand_mask, ex_mask, block_n):
+    """Shared pallas_call plumbing for both scoring directions."""
     n, m = X.shape
     if n % block_n != 0:
         # Fall back to one block over everything (tiny test shapes).
         block_n = n
     grid = (n // block_n,)
     return pl.pallas_call(
-        _score_block,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, m), lambda i: (i, 0)),  # X
@@ -121,3 +129,44 @@ def loo_scores(X, C, a, d, y, cand_mask, ex_mask, *, block_n: int = 128):
         ],
         interpret=True,
     )(X, C, a, d, y, cand_mask, ex_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def loo_scores(X, C, a, d, y, cand_mask, ex_mask, *, block_n: int = 128):
+    """Pallas-blocked LOO scores of S ∪ {i} for all candidates.
+
+    Args:
+        X: (n, m) feature matrix (feature-major, as in the paper).
+        C: (m, n) cache matrix G X^T.
+        a: (m,) dual variables.
+        d: (m,) diag(G).
+        y: (m,) labels.
+        cand_mask: (n,) 1.0 for evaluable candidates, 0.0 for
+            already-selected / padded features (scored BIG).
+        ex_mask: (m,) 1.0 for real examples, 0.0 for padding rows.
+        block_n: candidate-dimension tile size; n must be divisible by it
+            (the AOT buckets guarantee this; tests sweep odd sizes via the
+            runtime's padding path).
+
+    Returns:
+        (e_sq, e_01): each (n,), the summed squared / zero-one LOO losses.
+    """
+    return _blocked_scores(
+        _score_block, X, C, a, d, y, cand_mask, ex_mask, block_n
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def loo_removal_scores(X, C, a, d, y, mem_mask, ex_mask, *,
+                       block_n: int = 128):
+    """Pallas-blocked LOO scores of S \\ {i} for every member i.
+
+    Same signature as [`loo_scores`] with the candidate mask replaced by a
+    *membership* mask (1.0 for features currently in S), and the
+    sign-flipped SMW inside the block (see [`_make_score_block`]). Members
+    whose removal is numerically unrepresentable this round
+    (|1 − v.c| < 1e-12) score BIG, exactly like the native engine.
+    """
+    return _blocked_scores(
+        _removal_score_block, X, C, a, d, y, mem_mask, ex_mask, block_n
+    )

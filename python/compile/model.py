@@ -28,7 +28,14 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
-from .kernels import loo_scores, rank1_update  # noqa: E402
+from .kernels import (  # noqa: E402
+    FOLD_FMAX,
+    fold_smax,
+    loo_removal_scores,
+    loo_scores,
+    nfold_scores,
+    rank1_update,
+)
 
 DTYPE = jnp.float64
 
@@ -57,6 +64,11 @@ def commit_step(X, C, a, d, b):
     v = X[b], c = C[:, b] are extracted with dynamic slices; the O(mn)
     rank-1 downdate of C runs through the Pallas update kernel.
     """
+    return _commit_core(X, C, a, d, b)
+
+
+def _commit_core(X, C, a, d, b):
+    """Shared body of commit_step, reused by the full-set initializer."""
     n, m = X.shape
     b = b.astype(jnp.int32)
     v = jax.lax.dynamic_slice(X, (b, jnp.int32(0)), (1, m))[0]  # (m,)
@@ -67,6 +79,81 @@ def commit_step(X, C, a, d, b):
     w = v @ C  # (n,) row vector v^T C
     C2 = rank1_update(C, u, w)
     return C2, a2, d2
+
+
+def full_init_state(X, y, lam):
+    """Caches for the FULL feature set (backward elimination's starting
+    point): commit every feature into the empty-set caches with the same
+    rank-1 SMW updates the selection itself uses, inside one launch.
+
+    Padded feature rows are zero, so committing them is an exact no-op
+    (v = 0 ⇒ u = 0) — the fori_loop runs over the whole bucket safely.
+    Equivalent to G = (X^T X + lam I)^{-1}, C = G X^T, a = G y,
+    d = diag(G) up to f64 rounding (the native engine inverts directly;
+    the PJRT equivalence tests are tolerance-based for backward).
+    """
+    C, a, d = init_state(X, y, lam)
+    n = X.shape[0]
+
+    def body(i, state):
+        C, a, d = state
+        return _commit_core(X, C, a, d, jnp.int32(i))
+
+    return jax.lax.fori_loop(0, n, body, (C, a, d))
+
+
+def score_removal_step(X, C, a, d, y, mem_mask, ex_mask):
+    """LOO error (squared and zero-one) of S \\ {i} for every member i —
+    backward elimination's masked *removal* scoring (sign-flipped SMW)."""
+    return loo_removal_scores(X, C, a, d, y, mem_mask, ex_mask)
+
+
+def downdate_step(X, C, a, d, b):
+    """Remove feature index b (int32 scalar) from the caches: the
+    sign-flipped commit (K ← K − v vᵀ):
+
+        u = C[:,b] / (1 − v·C[:,b]),  a ← a + u (v·a),  d ← d + u∘C[:,b],
+        C ← C + u (vᵀ C)
+
+    The O(mn) rank-1 update runs through the same Pallas update kernel as
+    commit_step, with the update vector negated.
+    """
+    n, m = X.shape
+    b = b.astype(jnp.int32)
+    v = jax.lax.dynamic_slice(X, (b, jnp.int32(0)), (1, m))[0]
+    c = jax.lax.dynamic_slice(C, (jnp.int32(0), b), (m, 1))[:, 0]
+    u = c / (1.0 - v @ c)
+    a2 = a + u * (v @ a)
+    d2 = d + u * c
+    w = v @ C
+    C2 = rank1_update(C, -u, w)  # C + u w^T
+    return C2, a2, d2
+
+
+def nfold_score_step(X, C, a, y, B, fold_idx, fold_mask, cand_mask):
+    """n-fold CV error of S ∪ {i} for every candidate — fold-masked
+    scoring against the on-device fold-diagonal blocks B (see
+    `kernels.nfold_kernel`)."""
+    return nfold_scores(X, C, a, y, B, fold_idx, fold_mask, cand_mask)
+
+
+def nfold_commit_step(X, C, a, B, fold_idx, fold_mask, b):
+    """Commit feature b into the n-fold caches: the usual [C, a] rank-1
+    update plus the fold-block downdate B_h ← B_h − u_H (c_H)ᵀ (the
+    blocks transform exactly like d, restricted to fold slots)."""
+    n, m = X.shape
+    b = b.astype(jnp.int32)
+    v = jax.lax.dynamic_slice(X, (b, jnp.int32(0)), (1, m))[0]
+    c = jax.lax.dynamic_slice(C, (jnp.int32(0), b), (m, 1))[:, 0]
+    u = c / (1.0 + v @ c)
+    a2 = a - u * (v @ a)
+    w = v @ C
+    C2 = rank1_update(C, u, w)
+    flat = fold_idx.reshape(-1)
+    uH = u[flat].reshape(fold_idx.shape) * fold_mask
+    cH = c[flat].reshape(fold_idx.shape) * fold_mask
+    B2 = B - uH[:, :, None] * cH[:, None, :]
+    return C2, a2, B2
 
 
 def predict(w, Xtest):
@@ -143,13 +230,20 @@ def train_dual(Xs, y, lam):
 def example_args(entry: str, m: int, n: int, k: int = 64, t: int = 256):
     """ShapeDtypeStructs describing each entry point's signature."""
     f = lambda *s: jax.ShapeDtypeStruct(s, DTYPE)  # noqa: E731
-    if entry == "init_state":
+    fm, fs = FOLD_FMAX, fold_smax(m)
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
+    if entry in ("init_state", "full_init_state"):
         return (f(n, m), f(m), f(1))
-    if entry == "score_step":
+    if entry in ("score_step", "score_removal_step"):
         return (f(n, m), f(m, n), f(m), f(m), f(m), f(n), f(m))
-    if entry == "commit_step":
-        return (f(n, m), f(m, n), f(m), f(m),
-                jax.ShapeDtypeStruct((), jnp.int32))
+    if entry in ("commit_step", "downdate_step"):
+        return (f(n, m), f(m, n), f(m), f(m), i32())
+    if entry == "nfold_score_step":
+        return (f(n, m), f(m, n), f(m), f(m), f(fm, fs, fs),
+                i32(fm, fs), f(fm, fs), f(n))
+    if entry == "nfold_commit_step":
+        return (f(n, m), f(m, n), f(m), f(fm, fs, fs),
+                i32(fm, fs), f(fm, fs), i32())
     if entry == "predict":
         return (f(k), f(k, t))
     if entry == "train_dual":
@@ -159,8 +253,13 @@ def example_args(entry: str, m: int, n: int, k: int = 64, t: int = 256):
 
 ENTRY_POINTS = {
     "init_state": init_state,
+    "full_init_state": full_init_state,
     "score_step": score_step,
+    "score_removal_step": score_removal_step,
     "commit_step": commit_step,
+    "downdate_step": downdate_step,
+    "nfold_score_step": nfold_score_step,
+    "nfold_commit_step": nfold_commit_step,
     "predict": predict,
     "train_dual": train_dual,
 }

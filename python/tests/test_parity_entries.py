@@ -1,0 +1,407 @@
+"""Engine-parity entry points: removal scoring, full-set init, n-fold.
+
+These are the Layer-1/2 contracts behind the Rust PJRT engines for
+backward elimination, FoBa/floating backward phases, and n-fold greedy.
+Deliberately hypothesis-free (plain seeded numpy) so the suite runs in
+minimal environments; shapes are small because every oracle here retrains
+or inverts explicitly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import (  # noqa: E402
+    loo_removal_scores,
+    loo_scores,
+    nfold_scores,
+    ref,
+)
+
+BIG = ref.BIG
+
+
+subset_caches_np = ref.subset_caches_np
+
+
+def loo_errors_np(X, y, lam, feats):
+    """(e_sq, e_01) of the model on feature set `feats` via the dual LOO
+    shortcut on directly inverted caches (eq. 8)."""
+    _, a, d = subset_caches_np(X, y, lam, feats)
+    p = y - a / d
+    e_sq = float(np.sum((y - p) ** 2))
+    e_01 = float(np.sum(np.where((y * p) > 0.0, 0.0, 1.0)))
+    return e_sq, e_01
+
+
+def full_problem(seed, n, m, lam, classification=True):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m))
+    if classification:
+        y = np.where(rng.normal(size=m) > 0, 1.0, -1.0)
+    else:
+        y = rng.normal(size=m)
+    C, a, d = ref.full_caches_np(X, y, lam)
+    return X, y, C, a, d
+
+
+# ---------------------------------------------------------------------------
+# Removal scoring + downdate (backward elimination)
+# ---------------------------------------------------------------------------
+
+
+def test_removal_scores_match_explicit_retraining():
+    for seed in range(5):
+        n, m, lam = 6, 9, 0.8
+        X, y, C, a, d = full_problem(seed, n, m, lam)
+        mem = np.ones(n)
+        ex = np.ones(m)
+        e_sq, e_01 = model.score_removal_step(
+            jnp.asarray(X), jnp.asarray(C), jnp.asarray(a), jnp.asarray(d),
+            jnp.asarray(y), jnp.asarray(mem), jnp.asarray(ex),
+        )
+        e_sq, e_01 = np.asarray(e_sq), np.asarray(e_01)
+        for i in range(n):
+            keep = [t for t in range(n) if t != i]
+            want_sq, want_01 = loo_errors_np(X, y, lam, keep)
+            assert abs(e_sq[i] - want_sq) <= 1e-7 * max(1.0, abs(want_sq)), (
+                f"seed {seed} member {i}: {e_sq[i]} vs {want_sq}"
+            )
+            assert e_01[i] == want_01, f"seed {seed} member {i}"
+
+
+def test_removal_kernel_matches_jnp_reference_and_masks():
+    rng = np.random.default_rng(42)
+    n, m, lam = 8, 11, 1.3
+    X, y, C, a, d = full_problem(7, n, m, lam)
+    mem = np.ones(n)
+    mem[[2, 5]] = 0.0  # pretend two features already removed
+    ex = np.ones(m)
+    k_sq, k_01 = loo_removal_scores(
+        jnp.asarray(X), jnp.asarray(C), jnp.asarray(a), jnp.asarray(d),
+        jnp.asarray(y), jnp.asarray(mem), jnp.asarray(ex),
+    )
+    r_sq, r_01 = ref.removal_scores_ref(X, C, a, d, y, mem, ex)
+    np.testing.assert_allclose(np.asarray(k_sq), np.asarray(r_sq), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(k_01), np.asarray(r_01), rtol=0)
+    assert np.asarray(k_sq)[2] == BIG and np.asarray(k_01)[5] == BIG
+    _ = rng  # seeded for symmetry with the other tests
+
+
+def test_removal_denominator_guard_scores_big():
+    # engineered v.c == 1 exactly: the removal is numerically
+    # unrepresentable this round and must score BIG, like the native engine
+    n, m = 3, 4
+    X = np.zeros((n, m))
+    X[0, 0] = 1.0
+    C = np.zeros((m, n))
+    C[0, 0] = 1.0  # v_0 . C[:,0] = 1  =>  denom = 0
+    a = np.ones(m)
+    d = np.ones(m)
+    y = np.ones(m)
+    e_sq, e_01 = loo_removal_scores(
+        jnp.asarray(X), jnp.asarray(C), jnp.asarray(a), jnp.asarray(d),
+        jnp.asarray(y), jnp.ones(n), jnp.ones(m),
+    )
+    assert np.asarray(e_sq)[0] == BIG and np.asarray(e_01)[0] == BIG
+    assert np.isfinite(np.asarray(e_sq)[1:]).all()
+
+
+def test_downdate_step_matches_direct_subset_caches():
+    for seed in (0, 3):
+        n, m, lam = 5, 8, 1.1
+        X, y, C, a, d = full_problem(seed, n, m, lam)
+        b = 2
+        C2, a2, d2 = model.downdate_step(
+            jnp.asarray(X), jnp.asarray(C), jnp.asarray(a), jnp.asarray(d),
+            jnp.asarray(b, dtype=jnp.int32),
+        )
+        keep = [t for t in range(n) if t != b]
+        Cw, aw, dw = subset_caches_np(X, y, lam, keep)
+        np.testing.assert_allclose(np.asarray(C2), Cw, atol=1e-9)
+        np.testing.assert_allclose(np.asarray(a2), aw, atol=1e-9)
+        np.testing.assert_allclose(np.asarray(d2), dw, atol=1e-9)
+
+
+def test_full_init_state_matches_direct_inverse():
+    n, m, lam = 7, 10, 0.6
+    X, y, C, a, d = full_problem(11, n, m, lam)
+    C0, a0, d0 = model.full_init_state(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray([lam])
+    )
+    np.testing.assert_allclose(np.asarray(C0), C, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(a0), a, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(d0), d, atol=1e-9)
+
+
+def test_full_init_state_padding_is_exact():
+    n, m, lam = 4, 6, 1.0
+    nb, mb = 8, 9
+    X, y, _, _, _ = full_problem(13, n, m, lam)
+    Xp = np.zeros((nb, mb))
+    Xp[:n, :m] = X
+    yp = np.zeros(mb)
+    yp[:m] = y
+    C, a, d = model.full_init_state(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray([lam])
+    )
+    Cp, ap, dp = model.full_init_state(
+        jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray([lam])
+    )
+    np.testing.assert_array_equal(np.asarray(Cp)[:m, :n], np.asarray(C))
+    np.testing.assert_array_equal(np.asarray(ap)[:m], np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(dp)[:m], np.asarray(d))
+    # padded coordinates keep their empty-set values exactly
+    assert (np.asarray(ap)[m:] == 0.0).all()
+    np.testing.assert_array_equal(np.asarray(dp)[m:], np.full(mb - m, 1.0))
+
+
+def test_backward_elimination_end_to_end_through_entries():
+    # drive full backward elimination with only the AOT entry points and
+    # compare every removal against explicit retraining
+    n, m, lam, k = 7, 12, 0.9, 3
+    X, y, _, _, _ = full_problem(21, n, m, lam, classification=False)
+    C, a, d = model.full_init_state(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray([lam])
+    )
+    mem = np.ones(n)
+    removed = []
+    while int(mem.sum()) > k:
+        e_sq, _ = model.score_removal_step(
+            jnp.asarray(X), C, a, d, jnp.asarray(y),
+            jnp.asarray(mem), jnp.ones(m),
+        )
+        scores = np.asarray(e_sq)
+        b = int(np.argmin(scores))
+        # oracle: the same argmin over explicit retrained subsets
+        want = np.full(n, np.inf)
+        members = [i for i in range(n) if mem[i] > 0]
+        for i in members:
+            keep = [t for t in members if t != i]
+            want[i], _ = loo_errors_np(X, y, lam, keep)
+        assert b == int(np.argmin(want)), f"round {len(removed)}"
+        assert abs(scores[b] - want[b]) <= 1e-7 * max(1.0, abs(want[b]))
+        C, a, d = model.downdate_step(
+            jnp.asarray(X), C, a, d, jnp.asarray(b, dtype=jnp.int32)
+        )
+        mem[b] = 0.0
+        removed.append(b)
+    assert len(set(removed)) == n - k
+
+
+# ---------------------------------------------------------------------------
+# n-fold CV scoring (fold-masked)
+# ---------------------------------------------------------------------------
+
+
+def fold_tensors(folds, f_cap, s_cap):
+    """Pack a fold partition into (idx, mask) tensors with padded slots."""
+    idx = np.zeros((f_cap, s_cap), dtype=np.int32)
+    mask = np.zeros((f_cap, s_cap))
+    for h, members in enumerate(folds):
+        idx[h, : len(members)] = members
+        mask[h, : len(members)] = 1.0
+    return idx, mask
+
+
+def nfold_state(X, y, lam, folds, f_cap, s_cap, commits=()):
+    """[C, a, B] n-fold caches for `commits`, built through the entries."""
+    n, m = X.shape
+    C, a, _ = model.init_state(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray([lam])
+    )
+    idx, mask = fold_tensors(folds, f_cap, s_cap)
+    B = np.zeros((f_cap, s_cap, s_cap))
+    for h in range(f_cap):
+        B[h] = np.eye(s_cap) / lam
+    B = jnp.asarray(B)
+    for b in commits:
+        C, a, B = model.nfold_commit_step(
+            jnp.asarray(X), C, a, B, jnp.asarray(idx), jnp.asarray(mask),
+            jnp.asarray(b, dtype=jnp.int32),
+        )
+    return C, a, B, idx, mask
+
+
+def test_nfold_scores_match_explicit_holdout():
+    n, m, lam = 5, 12, 1.3
+    rng = np.random.default_rng(31)
+    X = rng.normal(size=(n, m))
+    y = rng.normal(size=m)
+    folds = [[0, 3, 6, 9], [1, 4, 7, 10], [2, 5, 8, 11]]
+    for commits in ([], [1], [1, 4]):
+        C, a, B, idx, mask = nfold_state(X, y, lam, folds, 4, 6, commits)
+        cmask = np.ones(n)
+        for b in commits:
+            cmask[b] = 0.0
+        e_sq, _ = model.nfold_score_step(
+            jnp.asarray(X), C, a, jnp.asarray(y), B,
+            jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(cmask),
+        )
+        e_sq = np.asarray(e_sq)
+        for i in range(n):
+            if cmask[i] == 0.0:
+                assert e_sq[i] == BIG
+                continue
+            want = ref.nfold_scores_np(X, y, lam, commits, folds, i)
+            assert abs(e_sq[i] - want) <= 1e-6 * max(1.0, abs(want)), (
+                f"commits {commits} cand {i}: {e_sq[i]} vs {want}"
+            )
+
+
+def test_nfold_zero_one_loss_matches_explicit_holdout():
+    n, m, lam = 4, 9, 0.7
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(n, m))
+    y = np.where(rng.normal(size=m) > 0, 1.0, -1.0)
+    folds = [[0, 1, 2], [3, 4, 5], [6, 7, 8]]
+    C, a, B, idx, mask = nfold_state(X, y, lam, folds, 3, 3)
+    _, e_01 = model.nfold_score_step(
+        jnp.asarray(X), C, a, jnp.asarray(y), B,
+        jnp.asarray(idx), jnp.asarray(mask), jnp.ones(n),
+    )
+    for i in range(n):
+        want = ref.nfold_scores_np(
+            X, y, lam, [], folds, i, classification=True
+        )
+        assert np.asarray(e_01)[i] == want, f"cand {i}"
+
+
+def test_nfold_commit_blocks_match_direct_inverse():
+    n, m, lam = 5, 8, 1.0
+    rng = np.random.default_rng(17)
+    X = rng.normal(size=(n, m))
+    y = rng.normal(size=m)
+    folds = [[0, 1, 2], [3, 4], [5, 6, 7]]
+    C, a, B, idx, mask = nfold_state(X, y, lam, folds, 4, 4, commits=[2, 0])
+    Cw, aw, _ = subset_caches_np(X, y, lam, [2, 0])
+    G = np.linalg.inv(X[[2, 0], :].T @ X[[2, 0], :] + lam * np.eye(m))
+    np.testing.assert_allclose(np.asarray(C), Cw, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(a), aw, atol=1e-10)
+    for h, members in enumerate(folds):
+        s = len(members)
+        np.testing.assert_allclose(
+            np.asarray(B)[h, :s, :s], G[np.ix_(members, members)],
+            atol=1e-10,
+        )
+
+
+def test_nfold_singleton_folds_reduce_to_loo():
+    # m folds of size 1: the CV criterion degenerates to LOO and must
+    # match the forward score kernel on the same caches
+    n, m, lam = 6, 7, 0.9
+    rng = np.random.default_rng(23)
+    X = rng.normal(size=(n, m))
+    y = np.where(rng.normal(size=m) > 0, 1.0, -1.0)
+    folds = [[j] for j in range(m)]
+    C, a, B, idx, mask = nfold_state(X, y, lam, folds, m, 2, commits=[3])
+    cmask = np.ones(n)
+    cmask[3] = 0.0
+    nf_sq, nf_01 = model.nfold_score_step(
+        jnp.asarray(X), C, a, jnp.asarray(y), B,
+        jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(cmask),
+    )
+    # forward kernel needs d = diag(G), which the singleton blocks carry
+    d = np.array([np.asarray(B)[j, 0, 0] for j in range(m)])
+    lo_sq, lo_01 = loo_scores(
+        jnp.asarray(X), C, a, jnp.asarray(d), jnp.asarray(y),
+        jnp.asarray(cmask), jnp.ones(m),
+    )
+    np.testing.assert_allclose(
+        np.asarray(nf_sq), np.asarray(lo_sq), rtol=1e-9
+    )
+    np.testing.assert_array_equal(np.asarray(nf_01), np.asarray(lo_01))
+
+
+def test_nfold_padding_is_exact():
+    # pad candidates, examples, fold slots, and whole folds: real
+    # coordinates must match the unpadded run to f64 solver tolerance
+    n, m, lam = 4, 6, 1.2
+    nb, mb = 8, 10
+    rng = np.random.default_rng(41)
+    X = rng.normal(size=(n, m))
+    y = rng.normal(size=m)
+    folds = [[0, 1, 2], [3, 4, 5]]
+    C, a, B, idx, mask = nfold_state(X, y, lam, folds, 2, 3)
+    ref_sq, _ = model.nfold_score_step(
+        jnp.asarray(X), C, a, jnp.asarray(y), B,
+        jnp.asarray(idx), jnp.asarray(mask), jnp.ones(n),
+    )
+    Xp = np.zeros((nb, mb))
+    Xp[:n, :m] = X
+    yp = np.zeros(mb)
+    yp[:m] = y
+    Cp, ap, Bp, idxp, maskp = nfold_state(Xp, yp, lam, folds, 4, 5)
+    cmaskp = np.zeros(nb)
+    cmaskp[:n] = 1.0
+    pad_sq, _ = model.nfold_score_step(
+        jnp.asarray(Xp), Cp, ap, jnp.asarray(yp), Bp,
+        jnp.asarray(idxp), jnp.asarray(maskp), jnp.asarray(cmaskp),
+    )
+    np.testing.assert_allclose(
+        np.asarray(pad_sq)[:n], np.asarray(ref_sq), rtol=1e-9
+    )
+    assert (np.asarray(pad_sq)[n:] == BIG).all()
+
+
+def test_nfold_commit_padding_is_exact():
+    n, m, lam = 4, 6, 1.2
+    nb, mb = 8, 10
+    rng = np.random.default_rng(43)
+    X = rng.normal(size=(n, m))
+    y = rng.normal(size=m)
+    folds = [[0, 2, 4], [1, 3, 5]]
+    C, a, B, _, _ = nfold_state(X, y, lam, folds, 2, 3, commits=[1])
+    Xp = np.zeros((nb, mb))
+    Xp[:n, :m] = X
+    yp = np.zeros(mb)
+    yp[:m] = y
+    Cp, ap, Bp, _, _ = nfold_state(Xp, yp, lam, folds, 3, 4, commits=[1])
+    np.testing.assert_array_equal(
+        np.asarray(Cp)[:m, :n], np.asarray(C)
+    )
+    np.testing.assert_array_equal(np.asarray(ap)[:m], np.asarray(a))
+    for h in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(Bp)[h, :3, :3], np.asarray(B)[h]
+        )
+
+
+def test_nfold_singular_block_scores_big():
+    # engineered singular B~ for candidate 0: B = c0^2/(1 + x*c0) makes
+    # B~ = B - u*c0 exactly 0, the case where the native engine's
+    # Cholesky fails and returns BIG — the CG path must flag it too
+    # rather than return a finite garbage score
+    X = np.array([[1.0], [0.5]])  # n=2 candidates, m=1 example
+    C = np.array([[1.0, 0.2]])  # (m, n); c0 = 1
+    a = np.array([1.0])
+    y = np.array([1.0])
+    idx = np.array([[0]], dtype=np.int32)  # one fold of size 1
+    mask = np.ones((1, 1))
+    B = np.array([[[1.0 / (1.0 + 1.0 * 1.0)]]])  # = 0.5 ⇒ B~_0 = 0
+    e_sq, e_01 = nfold_scores(
+        jnp.asarray(X), jnp.asarray(C), jnp.asarray(a), jnp.asarray(y),
+        jnp.asarray(B), jnp.asarray(idx), jnp.asarray(mask), jnp.ones(2),
+    )
+    assert np.asarray(e_sq)[0] == BIG and np.asarray(e_01)[0] == BIG
+    # the well-posed candidate still scores finitely
+    assert np.isfinite(np.asarray(e_sq)[1])
+    assert np.asarray(e_sq)[1] < BIG
+
+
+def test_fold_capacity_formula():
+    # the Rust runtime reads these from the manifest; pin the formula so
+    # regenerated artifacts stay compatible with committed expectations
+    from compile.kernels import FOLD_FMAX, fold_smax
+
+    assert FOLD_FMAX == 16
+    assert fold_smax(64) == 16
+    assert fold_smax(256) == 32
+    assert fold_smax(512) == 64
+    assert fold_smax(1024) == 128

@@ -1,19 +1,27 @@
-//! Ablation: native Rust engine vs the PJRT artifact engine.
+//! Ablation: native Rust engines vs the PJRT artifact engines.
 //!
-//! Both execute the identical Algorithm-3 math (equivalence-tested); this
-//! bench quantifies the cost of the PJRT path — literal marshalling,
+//! Both execute identical selection math (equivalence-tested); this bench
+//! quantifies the cost of the PJRT path — literal marshalling,
 //! host↔device copies of the padded bucket, and XLA kernel dispatch per
-//! round — against the cache-tight native loop, at each artifact bucket.
+//! round — against the cache-tight native loops, at each artifact bucket
+//! and for every selector with an artifact engine (greedy, backward,
+//! nfold, foba, floating).
 //!
 //! This is an ablation of the three-layer architecture itself: it answers
-//! "what does routing the hot loop through the AOT artifacts cost on CPU,
-//! per selection round?".
+//! "what does routing each selector's hot loop through the AOT artifacts
+//! cost on CPU, per selection round?".
 
 use greedy_rls::bench::{time, CellValue, Table};
 use greedy_rls::data::synthetic::two_gaussians;
 use greedy_rls::metrics::Loss;
-use greedy_rls::runtime::{engine::PjrtGreedy, Runtime};
-use greedy_rls::select::{greedy::GreedyRls, SelectionConfig, Selector};
+use greedy_rls::runtime::{
+    engine::{PjrtBackward, PjrtFloating, PjrtFoba, PjrtGreedy, PjrtNFold},
+    Runtime,
+};
+use greedy_rls::select::{
+    backward::BackwardElimination, floating::FloatingForward, foba::Foba,
+    greedy::GreedyRls, nfold::NFoldGreedy, SelectionConfig, Selector,
+};
 
 fn main() {
     let Ok(rt) = Runtime::open("artifacts") else {
@@ -22,8 +30,9 @@ fn main() {
     };
     let k = 8usize;
     let mut table = Table::new(
-        &format!("Ablation — native vs PJRT engine (k={k})"),
+        &format!("Ablation — native vs PJRT engines (k={k})"),
         &[
+            "selector",
             "bucket_m",
             "bucket_n",
             "native_s",
@@ -41,26 +50,94 @@ fn main() {
         }
         let ds = two_gaussians(m, n, (n / 5).max(1), 1.0, 7);
         let cfg = SelectionConfig { k, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
-        let native = time(1, 3, || {
-            GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
-        });
-        let pjrt = time(1, 3, || {
-            PjrtGreedy::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap();
-        });
-        table.row(&Table::cells(&[
-            CellValue::Usize(mb),
-            CellValue::Usize(nb),
-            CellValue::F6(native.median_s),
-            CellValue::F6(pjrt.median_s),
-            CellValue::F3(pjrt.median_s / k as f64 * 1e3),
-            CellValue::F3(pjrt.median_s / native.median_s),
-        ]));
+        let nfold = NFoldGreedy::default();
+        // (selector, native one-shot, pjrt one-shot, rounds for per-round
+        // normalization — backward eliminates n − k features per run)
+        let cases: Vec<(&str, Box<dyn Fn() + '_>, Box<dyn Fn() + '_>, usize)> = vec![
+            (
+                "greedy",
+                Box::new(|| {
+                    GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+                }),
+                Box::new(|| {
+                    PjrtGreedy::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap();
+                }),
+                k,
+            ),
+            (
+                "backward",
+                Box::new(|| {
+                    BackwardElimination.select(&ds.x, &ds.y, &cfg).unwrap();
+                }),
+                Box::new(|| {
+                    PjrtBackward::new(&rt)
+                        .select(&ds.x, &ds.y, &cfg)
+                        .unwrap();
+                }),
+                n - k,
+            ),
+            (
+                "nfold",
+                Box::new(|| {
+                    nfold.select(&ds.x, &ds.y, &cfg).unwrap();
+                }),
+                Box::new(|| {
+                    PjrtNFold::with_params(&rt, nfold)
+                        .select(&ds.x, &ds.y, &cfg)
+                        .unwrap();
+                }),
+                k,
+            ),
+            (
+                "foba",
+                Box::new(|| {
+                    Foba::default().select(&ds.x, &ds.y, &cfg).unwrap();
+                }),
+                Box::new(|| {
+                    PjrtFoba::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap();
+                }),
+                k,
+            ),
+            (
+                "floating",
+                Box::new(|| {
+                    FloatingForward::default()
+                        .select(&ds.x, &ds.y, &cfg)
+                        .unwrap();
+                }),
+                Box::new(|| {
+                    PjrtFloating::new(&rt)
+                        .select(&ds.x, &ds.y, &cfg)
+                        .unwrap();
+                }),
+                k,
+            ),
+        ];
+        for (name, native_fn, pjrt_fn, rounds) in &cases {
+            // the quadratic-init selectors get prohibitively slow at the
+            // big buckets — keep the table fillable in one sitting
+            if (mb * nb) > 512 * 1024 && *name != "greedy" {
+                continue;
+            }
+            let native = time(1, 3, native_fn);
+            let pjrt = time(1, 3, pjrt_fn);
+            table.row(&Table::cells(&[
+                CellValue::Str(name.to_string()),
+                CellValue::Usize(mb),
+                CellValue::Usize(nb),
+                CellValue::F6(native.median_s),
+                CellValue::F6(pjrt.median_s),
+                CellValue::F3(pjrt.median_s / *rounds as f64 * 1e3),
+                CellValue::F3(pjrt.median_s / native.median_s),
+            ]));
+        }
     }
     table.print();
     let _ = table.write_csv("ablation_engines");
     println!(
-        "\nnative wins on CPU (no marshalling, f64 cache-tight loop); the \
+        "\nnative wins on CPU (no marshalling, f64 cache-tight loops); the \
          PJRT path is the TPU-ready architecture demonstrating L1/L2 \
-         kernels on the request path with zero Python."
+         kernels on the request path with zero Python — now for every \
+         scan-shaped selector, not just greedy."
     );
 }

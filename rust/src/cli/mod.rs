@@ -177,7 +177,12 @@ COMMANDS
              latest checkpoint; --resume with an empty DIR starts fresh)
   cv         paper §4.2 protocol: stratified CV accuracy curves
              --dataset NAME [--folds 10] [--kmax K] [--seed S] [--full]
-             [--threads T] [--checkpoint-dir DIR]  (fold-level resume)
+             [--threads T] [--engine native|pjrt]
+             [--checkpoint-dir DIR]  (fold-level resume)
+             sweep stopping: [--stop k|plateau|time] [--patience N]
+             [--min-rel-improvement F] [--time-budget-s S]  (one wall
+             clock budget caps the whole sweep; time stops truncate
+             curves, never reorder them, and are not resumable)
   scaling    paper §4.1 runtime scaling experiment
              [--sizes 500,1000,...] [--n 1000] [--k 50] [--baseline]
              [--threads T]
@@ -189,10 +194,13 @@ COMMANDS
              between batches; in-flight batches always complete)
   compare    run every selection algorithm on one dataset side by side
              --dataset NAME | --synthetic M,N  [--k 5] [--lambda 1.0]
-             [--threads T]
+             [--threads T] [--engine native|pjrt]  (pjrt compares the
+             artifact-backed selectors: greedy, foba, nfold, backward,
+             floating)
   datasets   print the benchmark registry (paper Table 1)
-  check      verify artifacts: compile all buckets, cross-check PJRT
-             against the native engine on a probe problem
+  check      verify artifacts: compile all buckets, cross-check every
+             artifact-backed selector (greedy, backward, nfold, foba,
+             floating) against its native engine on a probe problem
   help       this text
 
 --threads T sizes the deterministic parallel execution layer for the

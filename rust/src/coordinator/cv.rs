@@ -6,21 +6,33 @@
 //! LOO accuracy estimate on the training folds and the accuracy on the
 //! held-out test fold. Figures 4–9 plot test accuracy for greedy vs
 //! random; Figures 10–15 plot LOO vs test accuracy for greedy.
+//!
+//! Sweeps accept a [`StopPolicy`] ([`CvOptions::stop`]) so a wall-clock
+//! budget can cap a whole experiment, and an [`EngineKind`] so the
+//! selection sessions run on the native engine or the PJRT artifacts.
+//!
+//! **Determinism caveat (time budgets):** a [`StopPolicy::TimeBudget`]
+//! truncates curves, never reorders them — every recorded round is still
+//! the exact round the unstopped protocol would have produced (greedy
+//! argmin or forced order), only the stopping point is wall-clock
+//! dependent, and the merged curves are cut at the shortest fold so the
+//! mean ± std stay averages over *all* folds. Round budgets and plateau
+//! policies remain fully deterministic.
 
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
+use super::EngineKind;
 use crate::data::fingerprint::Fnv64;
 use crate::data::{folds::Folds, Dataset};
 use crate::linalg::Matrix;
 use crate::metrics::{accuracy, mean_std, Loss};
 use crate::rng::Pcg64;
+use crate::runtime::Runtime;
 use crate::select::checkpoint;
-use crate::select::{
-    greedy::GreedyRls, SelectionConfig, Selector, SessionSelector,
-    StepOutcome,
-};
+use crate::select::{SelectionConfig, StepOutcome, StopPolicy};
 
 /// How the next feature is chosen each round.
 #[derive(Clone, Debug)]
@@ -42,6 +54,39 @@ pub struct Curve {
     pub selected: Vec<usize>,
 }
 
+/// Parameters of one recorded selection curve: the per-session knobs a
+/// CV fold derives from its protocol ([`CvOptions`]) plus the fold's
+/// grid-searched λ. `Copy`, engine-agnostic — the PJRT runtime handle is
+/// passed separately so native fold workers stay `Send`.
+#[derive(Clone, Copy, Debug)]
+pub struct CurveSpec {
+    /// Regularization for this curve's sessions.
+    pub lambda: f64,
+    /// Rounds to record (clamped to the candidate count).
+    pub k: usize,
+    /// Worker threads for the per-round scans (`0` = auto); ignored by
+    /// the PJRT engine.
+    pub threads: usize,
+    /// Early-stopping policy, enforced on greedy *and* forced-order
+    /// sessions (see the module-level determinism caveat).
+    pub stop: StopPolicy,
+    /// Which engine executes the selection math.
+    pub engine: EngineKind,
+}
+
+impl CurveSpec {
+    /// Native-engine spec with the default (never-fires) stop policy.
+    pub fn new(lambda: f64, k: usize, threads: usize) -> CurveSpec {
+        CurveSpec {
+            lambda,
+            k,
+            threads,
+            stop: StopPolicy::default(),
+            engine: EngineKind::Native,
+        }
+    }
+}
+
 /// Run one incremental selection, recording per-round accuracies.
 ///
 /// `x_train`/`x_test` are feature-major; the LOO accuracy is derived from
@@ -49,7 +94,14 @@ pub struct Curve {
 /// the estimate the selection itself maximizes, as in §4.3). Both orders
 /// drive the same greedy-RLS [`crate::select::Session`]: `Greedy` via
 /// [`crate::select::Session::step`], `Fixed` via
-/// [`crate::select::Session::force`].
+/// [`crate::select::Session::force`] — with the stop policy evaluated
+/// between forced rounds through [`crate::select::Session::check_stop`],
+/// so a [`StopPolicy::TimeBudget`] fires on fixed-order runs too.
+///
+/// Stops cleanly (truncated curve, no panic) when the session's policy
+/// fires, the fixed order runs out of entries, or `k` exceeds the
+/// candidate count; errors only on real failures (a forced feature that
+/// is out of range or already selected, engine faults).
 pub fn selection_curve(
     x_train: &Matrix,
     y_train: &[f64],
@@ -58,53 +110,79 @@ pub fn selection_curve(
     lambda: f64,
     k: usize,
     order: &Order,
-) -> Curve {
-    selection_curve_threads(
-        x_train, y_train, x_test, y_test, lambda, k, order, 0,
+) -> Result<Curve> {
+    selection_curve_spec(
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+        &CurveSpec::new(lambda, k, 0),
+        order,
+        None,
+        Duration::ZERO,
     )
 }
 
-/// [`selection_curve`] with an explicit worker-thread count for the
-/// per-round scans (`0` = available parallelism). The curve is
-/// bit-identical at any thread count; [`run_cv_threads`] passes `1` here
-/// when the folds themselves run in parallel.
+/// [`selection_curve`] with the full [`CurveSpec`], an optional PJRT
+/// [`Runtime`] (required iff `spec.engine` is [`EngineKind::Pjrt`]), and
+/// `prior` wall-clock already spent by the surrounding sweep — billed
+/// against a [`StopPolicy::TimeBudget`] via
+/// [`crate::select::Session::bill_elapsed`] so one budget caps a whole
+/// multi-curve experiment. Curves are bit-identical at any thread count.
 #[allow(clippy::too_many_arguments)]
-pub fn selection_curve_threads(
+pub fn selection_curve_spec(
     x_train: &Matrix,
     y_train: &[f64],
     x_test: &Matrix,
     y_test: &[f64],
-    lambda: f64,
-    k: usize,
+    spec: &CurveSpec,
     order: &Order,
-    threads: usize,
-) -> Curve {
+    runtime: Option<&Runtime>,
+    prior: Duration,
+) -> Result<Curve> {
     let m = y_train.len() as f64;
+    let k = spec.k.min(x_train.rows());
     let cfg = SelectionConfig::builder()
         .k(k)
-        .lambda(lambda)
+        .lambda(spec.lambda)
         .loss(Loss::ZeroOne)
-        .threads(threads)
+        .threads(spec.threads)
+        .stop(spec.stop)
         .build();
-    let mut session =
-        GreedyRls.begin(x_train, y_train, &cfg).expect("begin session");
-    let mut test_acc = Vec::with_capacity(k);
-    let mut loo_acc = Vec::with_capacity(k);
-    for round in 0..k {
+    let mut session = super::begin_with_engine(
+        spec.engine,
+        runtime,
+        x_train,
+        y_train,
+        &cfg,
+    )?;
+    if matches!(spec.stop, StopPolicy::TimeBudget(_)) {
+        session.bill_elapsed(prior);
+    }
+    let rounds = match order {
+        Order::Greedy => k,
+        Order::Fixed(perm) => k.min(perm.len()),
+    };
+    let mut test_acc = Vec::with_capacity(rounds);
+    let mut loo_acc = Vec::with_capacity(rounds);
+    for round in 0..rounds {
         let r = match order {
-            Order::Greedy => match session.step().expect("step") {
+            Order::Greedy => match session.step()? {
                 StepOutcome::Selected(r) => r,
                 StepOutcome::Done(_) => break,
             },
             Order::Fixed(perm) => {
-                session.force(perm[round]).expect("candidates remain")
+                if session.check_stop().is_some() {
+                    break;
+                }
+                session.force(perm[round])?
             }
         };
         // LOO zero-one criterion of the committed set S ∪ {b}:
         loo_acc.push(1.0 - r.criterion / m);
 
         // test accuracy of the current model
-        let st = session.state().expect("session state");
+        let st = session.state()?;
         let mut p = vec![0.0; y_test.len()];
         for (&i, &w) in st.selected.iter().zip(&st.weights) {
             for (pj, &xv) in p.iter_mut().zip(x_test.row(i)) {
@@ -113,8 +191,8 @@ pub fn selection_curve_threads(
         }
         test_acc.push(accuracy(y_test, &p));
     }
-    let selected = session.state().expect("session state").selected;
-    Curve { test_acc, loo_acc, selected }
+    let selected = session.state()?.selected;
+    Ok(Curve { test_acc, loo_acc, selected })
 }
 
 /// Mean ± std accuracy curves over folds (what the figures plot).
@@ -130,8 +208,48 @@ pub struct CvCurves {
     pub greedy_loo: Vec<f64>,
     /// Mean test accuracy per k, random selection baseline.
     pub random_test: Vec<f64>,
-    /// λ chosen per fold by the grid search.
+    /// λ chosen per fold by the grid search; `NaN` for folds a
+    /// [`StopPolicy::TimeBudget`] skipped before their grid search ran.
     pub lambdas: Vec<f64>,
+}
+
+/// Protocol parameters of one CV sweep — everything except the dataset
+/// and the checkpoint directory. `Copy`, so fold workers capture it
+/// freely.
+#[derive(Clone, Copy, Debug)]
+pub struct CvOptions {
+    /// Stratified fold count.
+    pub folds: usize,
+    /// Cap on selection rounds per curve (clamped to the feature count).
+    pub k_max: usize,
+    /// RNG seed for stratification + the fixed-order permutations.
+    pub seed: u64,
+    /// Worker-thread budget (`0` = available parallelism).
+    pub threads: usize,
+    /// Early-stopping policy armed on every selection session; a
+    /// [`StopPolicy::TimeBudget`] is billed sweep-globally and also
+    /// gates fold startup (grid searches included), so one budget caps
+    /// the whole experiment — overshoot is bounded by the work already
+    /// in flight: at most one λ grid search plus one selection round
+    /// per fold worker (see the module-level caveat).
+    pub stop: StopPolicy,
+    /// Engine executing the selection math. The PJRT runtime is not
+    /// shareable across threads, so PJRT sweeps run their folds serially
+    /// (the parallelism lives in the compiled kernels).
+    pub engine: EngineKind,
+}
+
+impl Default for CvOptions {
+    fn default() -> Self {
+        CvOptions {
+            folds: 10,
+            k_max: 50,
+            seed: 42,
+            threads: 0,
+            stop: StopPolicy::default(),
+            engine: EngineKind::Native,
+        }
+    }
 }
 
 /// Full §4.2 protocol on one dataset.
@@ -149,14 +267,7 @@ pub fn run_cv(
 }
 
 /// [`run_cv`] with an explicit worker-thread budget (`0` = available
-/// parallelism). The folds are independent once the RNG-driven setup
-/// (stratification + per-fold random permutations) is drawn up front in
-/// fold order, so they run on parallel workers; per-fold results are
-/// merged on the calling thread in fold order, making the curves
-/// bit-identical to the serial protocol at any thread count. When more
-/// than one fold worker runs, the inner selection sessions are serial;
-/// with a single fold (or `threads == 1`) the thread budget goes to the
-/// per-round scans instead.
+/// parallelism).
 pub fn run_cv_threads(
     ds: &Dataset,
     folds: usize,
@@ -164,9 +275,32 @@ pub fn run_cv_threads(
     seed: u64,
     threads: usize,
 ) -> Result<CvCurves> {
-    let k_max = k_max.min(ds.n_features());
-    let mut rng = Pcg64::new(seed, 71);
-    let f = Folds::stratified(&ds.y, folds, &mut rng);
+    let opts =
+        CvOptions { folds, k_max, seed, threads, ..Default::default() };
+    run_cv_opts(ds, &opts, None)
+}
+
+/// The §4.2 protocol under explicit [`CvOptions`]. `runtime` is required
+/// iff `opts.engine` is [`EngineKind::Pjrt`].
+///
+/// Native sweeps run folds on parallel workers: the folds are independent
+/// once the RNG-driven setup (stratification + per-fold random
+/// permutations) is drawn up front in fold order, and per-fold results
+/// are merged on the calling thread in fold order, making the curves
+/// bit-identical to the serial protocol at any thread count. When more
+/// than one fold worker runs, the inner selection sessions are serial;
+/// with a single fold (or `threads == 1`) the thread budget goes to the
+/// per-round scans instead. PJRT sweeps run folds serially on the
+/// calling thread (the runtime handle is not `Sync`).
+pub fn run_cv_opts(
+    ds: &Dataset,
+    opts: &CvOptions,
+    runtime: Option<&Runtime>,
+) -> Result<CvCurves> {
+    let k_max = opts.k_max.min(ds.n_features());
+    let started = Instant::now();
+    let mut rng = Pcg64::new(opts.seed, 71);
+    let f = Folds::stratified(&ds.y, opts.folds, &mut rng);
 
     // Draw all RNG-dependent state in fold order (the exact consumption
     // order of the serial protocol) before fanning out.
@@ -180,27 +314,98 @@ pub fn run_cv_threads(
         })
         .collect();
 
-    let outer = crate::parallel::resolve(threads).min(splits.len());
-    let inner = if outer > 1 { 1 } else { threads };
-    let per_fold: Vec<(Curve, Curve, f64)> =
-        crate::parallel::par_map(outer, splits.len(), |i| {
-            compute_fold(ds, &splits[i], &perms[i], k_max, inner)
-        });
-
+    let all: Vec<usize> = (0..splits.len()).collect();
+    let per_fold = compute_folds_at(
+        ds, opts, runtime, started, &splits, &perms, &all, k_max,
+    )?;
     Ok(merge_folds(&per_fold, k_max))
 }
 
+/// Compute the folds at `indices` under the engine dispatch shared by
+/// [`run_cv_opts`] and [`run_cv_resumable`]: parallel fold workers for
+/// the native engine (inner sessions serial when more than one worker
+/// runs), serial calling-thread execution for PJRT (the runtime handle
+/// is not `Sync`). The spec's λ is a placeholder — each fold
+/// grid-searches its own inside [`compute_fold`].
+#[allow(clippy::too_many_arguments)]
+fn compute_folds_at(
+    ds: &Dataset,
+    opts: &CvOptions,
+    runtime: Option<&Runtime>,
+    started: Instant,
+    splits: &[(Vec<usize>, Vec<usize>)],
+    perms: &[Vec<usize>],
+    indices: &[usize],
+    k_max: usize,
+) -> Result<Vec<(Curve, Curve, f64)>> {
+    match opts.engine {
+        EngineKind::Native => {
+            let outer =
+                crate::parallel::resolve(opts.threads).min(indices.len());
+            let inner = if outer > 1 { 1 } else { opts.threads };
+            let spec = CurveSpec {
+                lambda: 1.0,
+                k: k_max,
+                threads: inner,
+                stop: opts.stop,
+                engine: EngineKind::Native,
+            };
+            crate::parallel::par_map(outer, indices.len(), |j| {
+                let i = indices[j];
+                compute_fold(
+                    ds, &splits[i], &perms[i], &spec, None, started,
+                )
+            })
+            .into_iter()
+            .collect()
+        }
+        EngineKind::Pjrt => {
+            let rt = runtime
+                .context("PJRT engine requested but no runtime supplied")?;
+            let spec = CurveSpec {
+                lambda: 1.0,
+                k: k_max,
+                threads: opts.threads,
+                stop: opts.stop,
+                engine: EngineKind::Pjrt,
+            };
+            indices
+                .iter()
+                .map(|&i| {
+                    compute_fold(
+                        ds, &splits[i], &perms[i], &spec, Some(rt), started,
+                    )
+                })
+                .collect()
+        }
+    }
+}
+
 /// One fold of the §4.2 protocol: standardize with training statistics,
-/// grid-search λ, record the greedy and fixed-order accuracy curves. Pure
-/// in its inputs — the same fold recomputes bit-identically in any
-/// process, which is what makes fold-level checkpoints sound.
+/// grid-search λ, record the greedy and fixed-order accuracy curves.
+/// Pure in its inputs (modulo a live [`StopPolicy::TimeBudget`], which
+/// truncates but never reorders) — the same fold recomputes
+/// bit-identically in any process, which is what makes fold-level
+/// checkpoints sound.
 fn compute_fold(
     ds: &Dataset,
     split: &(Vec<usize>, Vec<usize>),
     perm: &[usize],
-    k_max: usize,
-    inner_threads: usize,
-) -> (Curve, Curve, f64) {
+    spec: &CurveSpec,
+    runtime: Option<&Runtime>,
+    sweep_started: Instant,
+) -> Result<(Curve, Curve, f64)> {
+    if let StopPolicy::TimeBudget(limit) = spec.stop {
+        // the budget gates fold *startup* too — the λ grid search below
+        // is not session work, so without this check an exhausted sweep
+        // would still burn a full grid search per remaining fold. λ is
+        // recorded as NaN for folds the time stop skipped entirely.
+        if sweep_started.elapsed() >= limit {
+            let empty =
+                || Curve { test_acc: vec![], loo_acc: vec![], selected: vec![] };
+            return Ok((empty(), empty(), f64::NAN));
+        }
+    }
     let (train_idx, test_idx) = split;
     let mut train = ds.subset(train_idx);
     let mut test = ds.subset(test_idx);
@@ -210,32 +415,41 @@ fn compute_fold(
     let grid = super::grid::default_grid();
     let (lam, _) =
         super::grid::search(&train.x, &train.y, &grid, Loss::ZeroOne);
+    let spec = CurveSpec { lambda: lam, ..*spec };
 
-    let gc = selection_curve_threads(
+    let gc = selection_curve_spec(
         &train.x,
         &train.y,
         &test.x,
         &test.y,
-        lam,
-        k_max,
+        &spec,
         &Order::Greedy,
-        inner_threads,
-    );
-    let rc = selection_curve_threads(
+        runtime,
+        sweep_started.elapsed(),
+    )?;
+    let rc = selection_curve_spec(
         &train.x,
         &train.y,
         &test.x,
         &test.y,
-        lam,
-        k_max,
+        &spec,
         &Order::Fixed(perm.to_vec()),
-        inner_threads,
-    );
-    (gc, rc, lam)
+        runtime,
+        sweep_started.elapsed(),
+    )?;
+    Ok((gc, rc, lam))
 }
 
 /// Merge per-fold results (in fold order) into the mean ± std curves.
+/// Folds truncated by a time budget cut the merged curves at the
+/// shortest fold, so every reported k still averages all folds.
 fn merge_folds(per_fold: &[(Curve, Curve, f64)], k_max: usize) -> CvCurves {
+    let k_max = per_fold
+        .iter()
+        .map(|(gc, rc, _)| gc.test_acc.len().min(rc.test_acc.len()))
+        .min()
+        .unwrap_or(0)
+        .min(k_max);
     let mut greedy_test = vec![Vec::new(); k_max];
     let mut greedy_loo = vec![Vec::new(); k_max];
     let mut random_test = vec![Vec::new(); k_max];
@@ -274,15 +488,36 @@ fn merge_folds(per_fold: &[(Curve, Curve, f64)], k_max: usize) -> CvCurves {
 
 /// Identity of one CV experiment: dataset content plus the protocol
 /// parameters that determine every fold (fold count, k_max after
-/// clamping, RNG seed). Thread counts are excluded — fold results are
-/// bit-identical at any (see [`run_cv_threads`]).
-fn cv_fingerprint(ds: &Dataset, folds: usize, k_max: usize, seed: u64) -> u64 {
+/// clamping, RNG seed, and any non-default deterministic stop policy).
+/// Thread counts are excluded — fold results are bit-identical at any
+/// (see [`run_cv_opts`]). The engine is tagged only for PJRT: its curves
+/// match the native ones to tolerance, not bit-exactly, so fold files
+/// must not be shared across engines. The default stop/engine hash to
+/// the legacy fingerprint, keeping existing fold files valid.
+fn cv_fingerprint(ds: &Dataset, opts: &CvOptions, k_max: usize) -> u64 {
     let mut h = Fnv64::new();
     h.write(b"greedy-rls-cv-fold-v1");
     h.write_u64(ds.fingerprint());
-    h.write_usize(folds);
+    h.write_usize(opts.folds);
     h.write_usize(k_max);
-    h.write_u64(seed);
+    h.write_u64(opts.seed);
+    match opts.stop {
+        StopPolicy::KBudget(usize::MAX) => {} // legacy default
+        StopPolicy::KBudget(b) => {
+            h.write(b"stop-kbudget");
+            h.write_usize(b);
+        }
+        StopPolicy::Plateau { patience, min_rel_improvement } => {
+            h.write(b"stop-plateau");
+            h.write_usize(patience);
+            h.write_u64(min_rel_improvement.to_bits());
+        }
+        // rejected by run_cv_resumable before fingerprinting
+        StopPolicy::TimeBudget(_) => h.write(b"stop-time"),
+    }
+    if opts.engine == EngineKind::Pjrt {
+        h.write(b"engine-pjrt");
+    }
     h.finish()
 }
 
@@ -436,29 +671,36 @@ fn save_fold(
     checkpoint::write_atomic(path, &fold_to_text(fingerprint, fold, result))
 }
 
-/// [`run_cv_threads`] with fold-level checkpoints: each completed fold is
-/// persisted to `dir`, and a rerun (same dataset, protocol, and seed —
-/// enforced by a fingerprint) loads finished folds instead of recomputing
-/// them. Because every fold is a pure function of its inputs and
-/// bit-identical at any thread count, the curves are bit-identical to an
-/// uninterrupted [`run_cv_threads`] no matter where the previous process
-/// was killed.
+/// [`run_cv_opts`] with fold-level checkpoints: each completed fold is
+/// persisted to `dir`, and a rerun (same dataset, protocol, seed, stop
+/// policy, and engine — enforced by a fingerprint) loads finished folds
+/// instead of recomputing them. Because every fold is a pure function of
+/// its inputs and bit-identical at any thread count, the curves are
+/// bit-identical to an uninterrupted [`run_cv_opts`] no matter where the
+/// previous process was killed. A [`StopPolicy::TimeBudget`] is rejected
+/// here: a wall-clock truncation is not reproducible, so its fold files
+/// could never be trusted on resume.
 pub fn run_cv_resumable(
     ds: &Dataset,
-    folds: usize,
-    k_max: usize,
-    seed: u64,
-    threads: usize,
+    opts: &CvOptions,
+    runtime: Option<&Runtime>,
     dir: &Path,
 ) -> Result<CvCurves> {
-    let k_max = k_max.min(ds.n_features());
-    let fingerprint = cv_fingerprint(ds, folds, k_max, seed);
+    ensure!(
+        !matches!(opts.stop, StopPolicy::TimeBudget(_)),
+        "time-budgeted CV sweeps are not checkpoint-resumable (a \
+         wall-clock truncation is not reproducible); drop \
+         --checkpoint-dir or use a round/plateau stop"
+    );
+    let k_max = opts.k_max.min(ds.n_features());
+    let started = Instant::now();
+    let fingerprint = cv_fingerprint(ds, opts, k_max);
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating {}", dir.display()))?;
 
-    // identical RNG-driven setup to run_cv_threads, drawn in fold order
-    let mut rng = Pcg64::new(seed, 71);
-    let f = Folds::stratified(&ds.y, folds, &mut rng);
+    // identical RNG-driven setup to run_cv_opts, drawn in fold order
+    let mut rng = Pcg64::new(opts.seed, 71);
+    let f = Folds::stratified(&ds.y, opts.folds, &mut rng);
     let splits: Vec<(Vec<usize>, Vec<usize>)> = f.splits().collect();
     let perms: Vec<Vec<usize>> = splits
         .iter()
@@ -476,13 +718,9 @@ pub fn run_cv_resumable(
         .filter(|&i| per_fold[i].is_none())
         .collect();
     if !missing.is_empty() {
-        let outer = crate::parallel::resolve(threads).min(missing.len());
-        let inner = if outer > 1 { 1 } else { threads };
-        let computed: Vec<(Curve, Curve, f64)> =
-            crate::parallel::par_map(outer, missing.len(), |j| {
-                let i = missing[j];
-                compute_fold(ds, &splits[i], &perms[i], k_max, inner)
-            });
+        let computed = compute_folds_at(
+            ds, opts, runtime, started, &splits, &perms, &missing, k_max,
+        )?;
         for (j, result) in computed.into_iter().enumerate() {
             let i = missing[j];
             save_fold(&fold_path(dir, i), fingerprint, i, &result)?;
@@ -510,9 +748,12 @@ pub fn holdout_accuracy(
     let mut test = ds.subset(&test_idx);
     let stats = train.standardize();
     test.apply_standardization(&stats);
-    let r = crate::select::greedy::GreedyRls
-        .select(&train.x, &train.y, cfg)
-        .map_err(anyhow::Error::from)?;
+    let r = crate::select::Selector::select(
+        &crate::select::greedy::GreedyRls,
+        &train.x,
+        &train.y,
+        cfg,
+    )?;
     let p = r.predictor().predict_matrix(&test.x);
     Ok((accuracy(&test.y, &p), r.selected))
 }
@@ -520,6 +761,8 @@ pub fn holdout_accuracy(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    use crate::select::Selector as _;
 
     #[test]
     fn greedy_curve_matches_selector_output() {
@@ -530,7 +773,8 @@ mod tests {
         let test = ds.subset(&te);
         let c = selection_curve(
             &train.x, &train.y, &test.x, &test.y, 1.0, 5, &Order::Greedy,
-        );
+        )
+        .unwrap();
         let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
         let r = crate::select::greedy::GreedyRls
             .select(&train.x, &train.y, &cfg)
@@ -549,8 +793,197 @@ mod tests {
         let perm = vec![7, 0, 3];
         let c = selection_curve(
             &ds.x, &ds.y, &ds.x, &ds.y, 1.0, 3, &Order::Fixed(perm.clone()),
-        );
+        )
+        .unwrap();
         assert_eq!(c.selected, perm);
+    }
+
+    /// Regression: `perm[round]` used to panic when k exceeded the
+    /// permutation length — now the curve stops cleanly at the end of
+    /// the order.
+    #[test]
+    fn fixed_order_short_perm_stops_cleanly() {
+        let ds = crate::data::synthetic::two_gaussians(40, 8, 3, 1.0, 6);
+        let perm = vec![2, 5];
+        let c = selection_curve(
+            &ds.x, &ds.y, &ds.x, &ds.y, 1.0, 6, &Order::Fixed(perm.clone()),
+        )
+        .unwrap();
+        assert_eq!(c.selected, perm);
+        assert_eq!(c.test_acc.len(), 2);
+        assert_eq!(c.loo_acc.len(), 2);
+    }
+
+    /// Regression: `.expect("candidates remain")` used to panic on a bad
+    /// order — a duplicated feature is now a clean error.
+    #[test]
+    fn fixed_order_duplicate_feature_is_an_error() {
+        let ds = crate::data::synthetic::two_gaussians(40, 8, 3, 1.0, 6);
+        let c = selection_curve(
+            &ds.x, &ds.y, &ds.x, &ds.y, 1.0, 3, &Order::Fixed(vec![1, 1, 2]),
+        );
+        assert!(c.is_err(), "duplicate forced feature must error");
+    }
+
+    /// k beyond the candidate count is clamped, not a mid-run panic.
+    #[test]
+    fn k_beyond_candidates_is_clamped() {
+        let ds = crate::data::synthetic::two_gaussians(40, 6, 2, 1.0, 9);
+        let c = selection_curve(
+            &ds.x, &ds.y, &ds.x, &ds.y, 1.0, 50, &Order::Greedy,
+        )
+        .unwrap();
+        assert_eq!(c.selected.len(), 6);
+        let perm: Vec<usize> = (0..6).collect();
+        let c = selection_curve(
+            &ds.x, &ds.y, &ds.x, &ds.y, 1.0, 50, &Order::Fixed(perm),
+        )
+        .unwrap();
+        assert_eq!(c.selected.len(), 6);
+    }
+
+    /// Regression (stop-clock accounting): a time budget must stop a
+    /// fixed-order curve — forced rounds used to reset the clock, so the
+    /// budget never fired.
+    #[test]
+    fn zero_time_budget_stops_fixed_order_curve() {
+        let ds = crate::data::synthetic::two_gaussians(40, 8, 3, 1.0, 6);
+        let spec = CurveSpec {
+            stop: StopPolicy::TimeBudget(Duration::ZERO),
+            ..CurveSpec::new(1.0, 4, 1)
+        };
+        let perm: Vec<usize> = (0..8).collect();
+        let c = selection_curve_spec(
+            &ds.x,
+            &ds.y,
+            &ds.x,
+            &ds.y,
+            &spec,
+            &Order::Fixed(perm),
+            None,
+            Duration::ZERO,
+        )
+        .unwrap();
+        assert!(c.selected.is_empty(), "budget must fire before round 1");
+        assert!(c.test_acc.is_empty());
+    }
+
+    /// A round budget truncates every fold's curves identically, so a
+    /// stop-capped sweep equals the plain sweep at that k — the
+    /// "truncates, never reorders" determinism contract.
+    #[test]
+    fn round_budget_caps_the_sweep_deterministically() {
+        let ds = crate::data::synthetic::planted_sparse(
+            "t", 90, 12, 3, 1.2, 0.9, 0.05, 19,
+        );
+        let plain = run_cv_threads(&ds, 3, 2, 5, 1).unwrap();
+        let opts = CvOptions {
+            folds: 3,
+            k_max: 6,
+            seed: 5,
+            threads: 1,
+            stop: StopPolicy::KBudget(2),
+            engine: EngineKind::Native,
+        };
+        let capped = run_cv_opts(&ds, &opts, None).unwrap();
+        assert_eq!(capped.ks, plain.ks);
+        assert_eq!(capped.greedy_test, plain.greedy_test);
+        assert_eq!(capped.greedy_loo, plain.greedy_loo);
+        assert_eq!(capped.random_test, plain.random_test);
+        assert_eq!(capped.lambdas, plain.lambdas);
+    }
+
+    /// A zero time budget yields an empty (not panicking) sweep: the
+    /// merged curves are cut at the shortest fold.
+    #[test]
+    fn zero_time_budget_yields_empty_sweep() {
+        let ds = crate::data::synthetic::planted_sparse(
+            "t", 60, 8, 3, 1.2, 0.9, 0.05, 11,
+        );
+        let opts = CvOptions {
+            folds: 3,
+            k_max: 4,
+            seed: 2,
+            threads: 1,
+            stop: StopPolicy::TimeBudget(Duration::ZERO),
+            engine: EngineKind::Native,
+        };
+        let cv = run_cv_opts(&ds, &opts, None).unwrap();
+        assert!(cv.ks.is_empty());
+        assert!(cv.greedy_test.is_empty());
+        // a zero budget skips every fold before its grid search: the λ
+        // slots exist but record NaN (no unbudgeted work ran)
+        assert_eq!(cv.lambdas.len(), 3);
+        assert!(cv.lambdas.iter().all(|l| l.is_nan()), "{:?}", cv.lambdas);
+    }
+
+    #[test]
+    fn merge_folds_handles_ragged_curves() {
+        let curve = |len: usize| Curve {
+            test_acc: vec![0.5; len],
+            loo_acc: vec![0.5; len],
+            selected: (0..len).collect(),
+        };
+        let per_fold = vec![
+            (curve(4), curve(4), 1.0),
+            (curve(2), curve(4), 0.1), // truncated greedy curve
+            (curve(4), curve(3), 1.0), // truncated random curve
+        ];
+        let cv = merge_folds(&per_fold, 4);
+        assert_eq!(cv.ks, vec![1, 2]);
+        assert_eq!(cv.greedy_test.len(), 2);
+        assert_eq!(cv.random_test.len(), 2);
+        assert_eq!(cv.lambdas.len(), 3);
+    }
+
+    #[test]
+    fn resumable_cv_rejects_time_budgets() {
+        let dir = std::env::temp_dir().join("greedy_rls_cv_timebudget_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = crate::data::synthetic::two_gaussians(40, 8, 3, 1.0, 6);
+        let opts = CvOptions {
+            folds: 2,
+            k_max: 3,
+            seed: 1,
+            threads: 1,
+            stop: StopPolicy::TimeBudget(Duration::from_secs(3600)),
+            engine: EngineKind::Native,
+        };
+        let err = run_cv_resumable(&ds, &opts, None, &dir).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("not checkpoint-resumable"),
+            "{err:#}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A non-default deterministic stop policy must not reuse fold files
+    /// written under a different policy.
+    #[test]
+    fn resumable_cv_fingerprints_the_stop_policy() {
+        let dir = std::env::temp_dir().join("greedy_rls_cv_stopfp_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = crate::data::synthetic::planted_sparse(
+            "t", 60, 8, 3, 1.2, 0.9, 0.05, 29,
+        );
+        let base = CvOptions {
+            folds: 2,
+            k_max: 4,
+            seed: 3,
+            threads: 1,
+            stop: StopPolicy::default(),
+            engine: EngineKind::Native,
+        };
+        let full = run_cv_resumable(&ds, &base, None, &dir).unwrap();
+        assert_eq!(full.ks.len(), 4);
+        let capped = CvOptions { stop: StopPolicy::KBudget(2), ..base };
+        let cv = run_cv_resumable(&ds, &capped, None, &dir).unwrap();
+        assert_eq!(cv.ks.len(), 2, "stale full-curve folds must not load");
+        // and the capped fold files don't poison the full protocol either
+        let full2 = run_cv_resumable(&ds, &base, None, &dir).unwrap();
+        assert_eq!(full2.ks.len(), 4);
+        assert_eq!(full2.greedy_test, full.greedy_test);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -623,17 +1056,24 @@ mod tests {
         let ds = crate::data::synthetic::planted_sparse(
             "t", 90, 12, 3, 1.2, 0.9, 0.05, 23,
         );
+        let opts = |seed, threads| CvOptions {
+            folds: 3,
+            k_max: 5,
+            seed,
+            threads,
+            ..Default::default()
+        };
         let reference = run_cv_threads(&ds, 3, 5, 9, 1).unwrap();
 
         // cold start: all folds computed, files written
-        let cold = run_cv_resumable(&ds, 3, 5, 9, 1, &dir).unwrap();
+        let cold = run_cv_resumable(&ds, &opts(9, 1), None, &dir).unwrap();
         assert_curves_equal(&reference, &cold);
         for i in 0..3 {
             assert!(fold_path(&dir, i).exists(), "fold {i} persisted");
         }
 
         // warm start: everything loaded from disk, still identical
-        let warm = run_cv_resumable(&ds, 3, 5, 9, 2, &dir).unwrap();
+        let warm = run_cv_resumable(&ds, &opts(9, 2), None, &dir).unwrap();
         assert_curves_equal(&reference, &warm);
 
         // simulate a kill that lost fold 1 and corrupted fold 2:
@@ -641,11 +1081,11 @@ mod tests {
         std::fs::remove_file(fold_path(&dir, 1)).unwrap();
         let text = std::fs::read_to_string(fold_path(&dir, 2)).unwrap();
         std::fs::write(fold_path(&dir, 2), &text[..text.len() / 2]).unwrap();
-        let healed = run_cv_resumable(&ds, 3, 5, 9, 1, &dir).unwrap();
+        let healed = run_cv_resumable(&ds, &opts(9, 1), None, &dir).unwrap();
         assert_curves_equal(&reference, &healed);
 
         // a different protocol (other seed) must not reuse the files
-        let other = run_cv_resumable(&ds, 3, 5, 10, 1, &dir).unwrap();
+        let other = run_cv_resumable(&ds, &opts(10, 1), None, &dir).unwrap();
         let other_ref = run_cv_threads(&ds, 3, 5, 10, 1).unwrap();
         assert_curves_equal(&other_ref, &other);
         let _ = std::fs::remove_dir_all(&dir);

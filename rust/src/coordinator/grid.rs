@@ -66,8 +66,17 @@ pub struct LambdaKChoice {
 /// Joint (λ, k) model selection by driving one greedy-RLS *session* per
 /// grid point and reading the whole criterion curve — one selection run
 /// per λ replaces `base.k` separate grid searches. Honors `base.stop`
-/// (e.g. a plateau policy prunes hopeless λ early). Ties break toward
-/// larger λ, then smaller k — the conservative choice, as in [`search`].
+/// (e.g. a plateau policy prunes hopeless λ early, and a
+/// [`crate::select::StopPolicy::TimeBudget`] caps each cell so the whole
+/// sweep is wall-clock bounded by `grid.len() ×` budget). Ties break
+/// toward larger λ, then smaller k — the conservative choice, as in
+/// [`search`].
+///
+/// **Determinism caveat:** a time budget *truncates* each λ cell's
+/// criterion curve, never reorders it — every recorded round is exactly
+/// the round the unstopped run would have produced — so a time-stopped
+/// sweep picks its champion from curve prefixes. Round budgets and
+/// plateau stops remain fully deterministic.
 ///
 /// The λ cells are independent selection runs, so they execute on
 /// parallel workers sized by `base.threads` (`0` = auto); each cell's

@@ -33,6 +33,15 @@ use crate::select::{
 };
 
 /// Which engine executes the O(mn) selection math.
+///
+/// Engine choice is threaded through the whole coordinator surface: the
+/// greedy session constructors below, the CV protocol
+/// ([`cv::CvOptions::engine`] / `greedy-rls cv --engine`), and the
+/// selector comparison (`greedy-rls compare --engine`). Greedy RLS,
+/// backward elimination, n-fold greedy, FoBa and floating selection all
+/// have artifact engines (see [`crate::runtime::engine`]); the wrapper's
+/// trajectory is served by the greedy engine, while RankRLS, reduced-set,
+/// low-rank and random remain native-only.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// Pure-Rust Algorithm 3 (fastest on this CPU testbed).

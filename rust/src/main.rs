@@ -242,22 +242,33 @@ fn cmd_cv(args: &Args) -> Result<()> {
     let kmax: usize = args.get_or("kmax", ds.n_features().min(50))?;
     let seed: u64 = args.get_or("seed", 42u64)?;
     let threads: usize = args.get_or("threads", 0usize)?;
+    let stop = cli::parse_stop_policy(args)?;
+    let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
+    let rt = open_runtime_if(engine)?;
+    let opts = cv::CvOptions { folds, k_max: kmax, seed, threads, stop, engine };
     println!(
-        "# cv dataset={} m={} n={} folds={folds} kmax={kmax}",
+        "# cv dataset={} m={} n={} folds={folds} kmax={kmax} \
+         engine={engine:?}{}",
         ds.name,
         ds.n_examples(),
-        ds.n_features()
+        ds.n_features(),
+        match stop {
+            StopPolicy::KBudget(b) if b == usize::MAX => String::new(),
+            StopPolicy::TimeBudget(d) => format!(
+                " stop=TimeBudget({d:?}) (time stops truncate curves, \
+                 never reorder them)"
+            ),
+            other => format!(" stop={other:?}"),
+        }
     );
     let curves = match args.get("checkpoint-dir") {
         Some(dir) => cv::run_cv_resumable(
             &ds,
-            folds,
-            kmax,
-            seed,
-            threads,
+            &opts,
+            rt.as_ref(),
             std::path::Path::new(dir),
         )?,
-        None => cv::run_cv_threads(&ds, folds, kmax, seed, threads)?,
+        None => cv::run_cv_opts(&ds, &opts, rt.as_ref())?,
     };
     println!("k\tgreedy_test\tgreedy_loo\trandom_test\tgreedy_test_std");
     for (i, k) in curves.ks.iter().enumerate() {
@@ -421,6 +432,9 @@ fn cmd_serve_follow(args: &Args) -> Result<()> {
 fn cmd_compare(args: &Args) -> Result<()> {
     use greedy_rls::data::folds::train_test_split;
     use greedy_rls::rng::Pcg64;
+    use greedy_rls::runtime::engine::{
+        PjrtBackward, PjrtFloating, PjrtFoba, PjrtGreedy, PjrtNFold,
+    };
     use greedy_rls::select::{
         backward::BackwardElimination, floating::FloatingForward, foba::Foba,
         lowrank::LowRankLsSvm, nfold::NFoldGreedy, random::RandomSelector,
@@ -433,6 +447,8 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let loss: Loss = args.get_or("loss", Loss::ZeroOne)?;
     let seed: u64 = args.get_or("seed", 42u64)?;
     let threads: usize = args.get_or("threads", 0usize)?;
+    let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
+    let rt = open_runtime_if(engine)?;
     let cfg =
         SelectionConfig { k, lambda, loss, threads, ..Default::default() };
 
@@ -444,25 +460,53 @@ fn cmd_compare(args: &Args) -> Result<()> {
     test.apply_standardization(&stats);
 
     let fast_only = train.n_examples() > 2000 || ds.n_features() > 300;
-    let mut selectors: Vec<Box<dyn Selector>> = vec![
-        Box::new(GreedyRls),
-        Box::new(RandomSelector { seed }),
-        Box::new(Foba::default()),
-        Box::new(NFoldGreedy { folds: 10.min(train.n_examples()), seed }),
-    ];
+    let nfold_params =
+        NFoldGreedy { folds: 10.min(train.n_examples()), seed };
+    let mut selectors: Vec<Box<dyn Selector + '_>> = match engine {
+        EngineKind::Native => vec![
+            Box::new(GreedyRls),
+            Box::new(RandomSelector { seed }),
+            Box::new(Foba::default()),
+            Box::new(nfold_params),
+        ],
+        EngineKind::Pjrt => {
+            let rt = rt.as_ref().expect("runtime opened above");
+            vec![
+                Box::new(PjrtGreedy::new(rt)),
+                Box::new(PjrtFoba::new(rt)),
+                Box::new(PjrtNFold::with_params(rt, nfold_params)),
+            ]
+        }
+    };
     if !fast_only {
-        selectors.push(Box::new(LowRankLsSvm));
-        selectors.push(Box::new(Wrapper::shortcut()));
-        selectors.push(Box::new(BackwardElimination));
-        selectors.push(Box::new(FloatingForward::default()));
+        match engine {
+            EngineKind::Native => {
+                selectors.push(Box::new(LowRankLsSvm));
+                selectors.push(Box::new(Wrapper::shortcut()));
+                selectors.push(Box::new(BackwardElimination));
+                selectors.push(Box::new(FloatingForward::default()));
+            }
+            EngineKind::Pjrt => {
+                let rt = rt.as_ref().expect("runtime opened above");
+                selectors.push(Box::new(PjrtBackward::new(rt)));
+                selectors.push(Box::new(PjrtFloating::new(rt)));
+            }
+        }
     }
 
     println!(
-        "# compare dataset={} m_train={} n={} k={k} lambda={lambda}",
+        "# compare dataset={} m_train={} n={} k={k} lambda={lambda} \
+         engine={engine:?}",
         ds.name,
         train.n_examples(),
         ds.n_features()
     );
+    if engine == EngineKind::Pjrt {
+        println!(
+            "# pjrt parity: wrapper's trajectory is served by the greedy \
+             engine; random/lowrank/rankrls/centers are native-only"
+        );
+    }
     println!("selector\tseconds\ttest_acc\tselected");
     for s in &selectors {
         let mut result = None;
@@ -512,28 +556,56 @@ fn cmd_check(args: &Args) -> Result<()> {
     if buckets.is_empty() {
         bail!("no complete selection buckets in artifacts/");
     }
-    // probe: tiny problem through both engines must match
+    // probe: tiny problem through both engines must match, for every
+    // selector with an artifact engine
+    use greedy_rls::runtime::engine::{
+        PjrtBackward, PjrtFloating, PjrtFoba, PjrtGreedy, PjrtNFold,
+    };
+    use greedy_rls::select::{
+        backward::BackwardElimination, floating::FloatingForward,
+        foba::Foba, nfold::NFoldGreedy,
+    };
     let ds = synthetic::two_gaussians(48, 24, 6, 1.5, 7);
     let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
-    let native = GreedyRls.select(&ds.x, &ds.y, &cfg)?;
-    let pjrt = coordinator::select_with_engine(
-        EngineKind::Pjrt,
-        Some(&rt),
-        &ds.x,
-        &ds.y,
-        &cfg,
-    )?;
-    if native.selected != pjrt.selected {
-        bail!(
-            "engine mismatch: native {:?} vs pjrt {:?}",
-            native.selected,
-            pjrt.selected
-        );
+    let nfold = NFoldGreedy { folds: 6, seed: 7 };
+    let probes: Vec<(&str, greedy_rls::select::SelectionResult,
+                     greedy_rls::select::SelectionResult)> = vec![
+        (
+            "greedy",
+            GreedyRls.select(&ds.x, &ds.y, &cfg)?,
+            PjrtGreedy::new(&rt).select(&ds.x, &ds.y, &cfg)?,
+        ),
+        (
+            "backward",
+            BackwardElimination.select(&ds.x, &ds.y, &cfg)?,
+            PjrtBackward::new(&rt).select(&ds.x, &ds.y, &cfg)?,
+        ),
+        (
+            "nfold",
+            nfold.select(&ds.x, &ds.y, &cfg)?,
+            PjrtNFold::with_params(&rt, nfold).select(&ds.x, &ds.y, &cfg)?,
+        ),
+        (
+            "foba",
+            Foba::default().select(&ds.x, &ds.y, &cfg)?,
+            PjrtFoba::new(&rt).select(&ds.x, &ds.y, &cfg)?,
+        ),
+        (
+            "floating",
+            FloatingForward::default().select(&ds.x, &ds.y, &cfg)?,
+            PjrtFloating::new(&rt).select(&ds.x, &ds.y, &cfg)?,
+        ),
+    ];
+    for (name, native, pjrt) in &probes {
+        if native.selected != pjrt.selected {
+            bail!(
+                "{name} engine mismatch: native {:?} vs pjrt {:?}",
+                native.selected,
+                pjrt.selected
+            );
+        }
+        println!("{name}: engines agree, selected {:?}", native.selected);
     }
-    println!(
-        "engines agree on probe problem: selected {:?}",
-        native.selected
-    );
     println!("compiled executables: {}", rt.compiled_count());
     println!("artifacts OK");
     Ok(())

@@ -1,14 +1,42 @@
-//! PJRT-backed greedy RLS engine.
+//! PJRT-backed selection engines.
 //!
-//! Runs the paper's Algorithm 3 with every O(mn) step executed by the
-//! AOT-compiled Layer-1/2 artifacts (Pallas score kernel + rank-1 update),
-//! while Rust owns the control flow: bucket choice, padding, the argmin,
-//! the selected-set mask, and the final weight extraction.
+//! Runs the paper's O(mn) scan/update rounds through the AOT-compiled
+//! Layer-1/2 artifacts (Pallas score kernels + rank-1 update), while Rust
+//! owns the control flow: bucket choice, padding, the argmin, the
+//! selected-set mask, and the final weight extraction.
+//!
+//! The shared plumbing lives in [`EngineCore`] (padding/bucketing, the
+//! problem literals, the membership mask) and [`CadState`] (the
+//! `[C, a, d]` device state plus its four launches: masked *addition*
+//! scoring, masked *removal* scoring, rank-1 commit, rank-1 downdate).
+//! Every selector whose inner loop is one of those masked score launches
+//! rides on top:
+//!
+//! * [`PjrtGreedy`] — Algorithm 3 (forward greedy RLS);
+//! * [`PjrtBackward`] — backward elimination (full-set init via the
+//!   `full_init_state` artifact, then removal scoring + downdates);
+//! * [`PjrtFoba`] — adaptive forward–backward greedy (adds via the score
+//!   launch, ν-thresholded deletions via the removal launch);
+//! * [`PjrtFloating`] — SFFS (forward launches + conditional backward
+//!   launches);
+//! * [`PjrtNFold`] — n-fold-CV greedy, on its own `[C, a, B]` state
+//!   ([`NfState`]) with fold-masked scoring against the on-device
+//!   fold-diagonal blocks.
+//!
+//! The `wrapper` selector needs no engine of its own: its trajectory is
+//! equivalence-tested equal to greedy RLS (Algorithms 1–3 agree), so
+//! [`PjrtGreedy`] serves it. RankRLS, the reduced-set selector, low-rank
+//! and random stay native — their inner loops are not this masked scan
+//! (pairwise ranking criterion / kernel-space caches / no scan at all).
 //!
 //! Padding into a bucket is **exact** (DESIGN.md §5): zero feature rows
 //! and zero labels for padded examples contribute nothing to any cache or
-//! loss; padded candidates are masked to BIG by the kernel. The engine is
-//! equivalence-tested against the native [`crate::select::greedy`] engine.
+//! loss; padded candidates are masked to BIG by the kernels; padded fold
+//! slots decouple behind identity rows. Every engine here is
+//! equivalence-tested against its native twin in
+//! `rust/tests/pjrt_integration.rs` (bit-equal selected sets, tolerance
+//! on criteria — the n-fold engine solves its fold blocks with CG where
+//! the native engine uses Cholesky).
 
 use std::rc::Rc;
 
@@ -20,7 +48,309 @@ use crate::metrics::Loss;
 use crate::select::session::{
     CoreStep, PolicySession, Session, SessionCore, SessionSelector,
 };
-use crate::select::{argmin, Round, SelectionConfig, SelectionResult, Selector};
+use crate::select::{
+    argmin, Round, SelectionConfig, SelectionResult, Selector, BIG,
+};
+
+type Exe = Rc<xla::PjRtLoadedExecutable>;
+
+// ---------------------------------------------------------------------------
+// EngineCore: padding, bucketing, masks — shared by every artifact engine
+// ---------------------------------------------------------------------------
+
+/// The bucket-padded problem: owned literals for X/y/the example mask,
+/// the real and bucket dimensions, and the feature membership vector that
+/// every masked launch derives its candidate mask from. Executables are
+/// cloned `Rc`s and all literals are owned, so sessions borrow only the
+/// problem data, never the [`Runtime`].
+pub(crate) struct EngineCore<'a> {
+    x: &'a Matrix,
+    y: &'a [f64],
+    loss: Loss,
+    /// Real dims.
+    m: usize,
+    n: usize,
+    /// Bucket dims.
+    mb: usize,
+    nb: usize,
+    x_lit: xla::Literal,
+    y_lit: xla::Literal,
+    ex_lit: xla::Literal,
+    /// Membership of each real feature in the current set S.
+    in_s: Vec<bool>,
+}
+
+impl<'a> EngineCore<'a> {
+    /// Validate the problem, pick the smallest enclosing bucket, build
+    /// the padded literals.
+    fn open(
+        rt: &Runtime,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<EngineCore<'a>> {
+        let n = x.rows();
+        let m = x.cols();
+        let (mb, nb) = rt.pick_bucket(m, n).ok_or_else(|| {
+            anyhow!(
+                "no artifact bucket fits (m={m}, n={n}); rebuild artifacts \
+                 with larger buckets (python -m compile.aot --buckets ...)"
+            )
+        })?;
+        EngineCore::at_bucket(x, y, cfg, mb, nb)
+    }
+
+    /// [`EngineCore::open`] at a caller-chosen bucket (the n-fold engine
+    /// also constrains fold capacity when picking).
+    fn at_bucket(
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+        mb: usize,
+        nb: usize,
+    ) -> anyhow::Result<EngineCore<'a>> {
+        let n = x.rows();
+        let m = x.cols();
+        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(m == y.len(), "shape mismatch");
+        // Pad feature-major x (n × m) into the (nb rows × mb cols) bucket.
+        let mut x_pad = vec![0.0; nb * mb];
+        for i in 0..n {
+            x_pad[i * mb..i * mb + m].copy_from_slice(x.row(i));
+        }
+        let x_lit = lit::mat_f64(&x_pad, nb, mb)?;
+        let mut y_pad = vec![0.0; mb];
+        y_pad[..m].copy_from_slice(y);
+        let y_lit = lit::vec_f64(&y_pad);
+        let mut ex_mask = vec![0.0; mb];
+        ex_mask[..m].fill(1.0);
+        let ex_lit = lit::vec_f64(&ex_mask);
+        Ok(EngineCore {
+            x,
+            y,
+            loss: cfg.loss,
+            m,
+            n,
+            mb,
+            nb,
+            x_lit,
+            y_lit,
+            ex_lit,
+            in_s: vec![false; n],
+        })
+    }
+
+    /// Bucket-length mask literal: 1.0 where `member(i)` for real
+    /// features, 0.0 elsewhere (padded candidates stay masked).
+    fn mask_lit(&self, member: impl Fn(usize) -> bool) -> xla::Literal {
+        let mut mask = vec![0.0; self.nb];
+        for (i, slot) in mask.iter_mut().take(self.n).enumerate() {
+            if member(i) {
+                *slot = 1.0;
+            }
+        }
+        lit::vec_f64(&mask)
+    }
+
+    /// Pick this round's feature: the caller-forced candidate (validated
+    /// against `want_member` — removal rounds force members, addition
+    /// rounds force non-members) or the strict argmin over `scores`.
+    fn pick(
+        &self,
+        forced: Option<usize>,
+        scores: &[f64],
+        want_member: bool,
+        exhausted_msg: &str,
+    ) -> anyhow::Result<(usize, f64)> {
+        match forced {
+            Some(b) => {
+                ensure!(b < self.n, "feature {b} out of range (n={})", self.n);
+                if want_member {
+                    ensure!(self.in_s[b], "feature {b} already removed");
+                    ensure!(
+                        scores[b] < BIG,
+                        "feature {b} is not numerically removable this round"
+                    );
+                } else {
+                    ensure!(!self.in_s[b], "feature {b} already selected");
+                }
+                Ok((b, scores[b]))
+            }
+            None => {
+                let b = argmin(scores)
+                    .ok_or_else(|| anyhow!("{exhausted_msg}"))?;
+                Ok((b, scores[b]))
+            }
+        }
+    }
+
+    /// Unpack a two-output score launch, select the configured loss row,
+    /// and truncate to the real candidate count.
+    fn scores_from(
+        &self,
+        outs: Vec<xla::Literal>,
+    ) -> anyhow::Result<Vec<f64>> {
+        ensure!(outs.len() == 2, "score launch returned {}", outs.len());
+        let [e_sq, e_01] = &outs[..] else { unreachable!() };
+        let picked = match self.loss {
+            Loss::Squared => e_sq,
+            Loss::ZeroOne => e_01,
+        };
+        let mut v = lit::to_vec_f64(picked)?;
+        v.truncate(self.n);
+        Ok(v)
+    }
+
+    /// w = X_S a over the unpadded coordinates, in `selected` order.
+    fn weights_for(
+        &self,
+        a_lit: &xla::Literal,
+        selected: &[usize],
+    ) -> anyhow::Result<Vec<f64>> {
+        let a_full = lit::to_vec_f64(a_lit)?;
+        let a = &a_full[..self.m];
+        Ok(selected.iter().map(|&i| dot(self.x.row(i), a)).collect())
+    }
+
+    /// Features currently in S, ascending.
+    fn members(&self) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.in_s[i]).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CadState: the [C, a, d] device state and its four launches
+// ---------------------------------------------------------------------------
+
+/// Which artifacts a [`CadState`] engine needs compiled.
+struct CadExes {
+    score: Exe,
+    commit: Exe,
+    /// Removal-direction launches; present when the selector takes
+    /// backward steps (backward elimination, FoBa, floating).
+    score_removal: Option<Exe>,
+    downdate: Option<Exe>,
+}
+
+/// `[C, a, d]` state on device plus the launches over it. The state
+/// tuple is exactly the native greedy/backward cache triple; addition
+/// and removal use the sign-flipped SMW pair of kernels.
+pub(crate) struct CadState<'a> {
+    core: EngineCore<'a>,
+    exes: CadExes,
+    /// `[C, a, d]` literals.
+    state: Vec<xla::Literal>,
+}
+
+impl<'a> CadState<'a> {
+    /// Open the engine: pick a bucket, compile the needed entry points,
+    /// and initialize the device state — `init_state` (empty S) or
+    /// `full_init_state` (S = all features, backward elimination's
+    /// starting point; one launch, n in-device rank-1 commits).
+    fn open(
+        rt: &Runtime,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+        with_removal: bool,
+        full_init: bool,
+    ) -> anyhow::Result<CadState<'a>> {
+        let mut core = EngineCore::open(rt, x, y, cfg)?;
+        let (mb, nb) = (core.mb, core.nb);
+        let init_entry =
+            if full_init { "full_init_state" } else { "init_state" };
+        let init = rt.executable(init_entry, mb, nb)?;
+        let exes = CadExes {
+            score: rt.executable("score_step", mb, nb)?,
+            commit: rt.executable("commit_step", mb, nb)?,
+            score_removal: with_removal
+                .then(|| rt.executable("score_removal_step", mb, nb))
+                .transpose()?,
+            downdate: with_removal
+                .then(|| rt.executable("downdate_step", mb, nb))
+                .transpose()?,
+        };
+        let lam_lit = lit::vec_f64(&[cfg.lambda]);
+        let state = Runtime::run_tuple(
+            &init,
+            &[core.x_lit.clone(), core.y_lit.clone(), lam_lit],
+        )?;
+        ensure!(state.len() == 3, "{init_entry} returned {}", state.len());
+        if full_init {
+            core.in_s.fill(true);
+        }
+        Ok(CadState { core, exes, state })
+    }
+
+    /// Masked score launch in one SMW direction: additions score the
+    /// non-members, removals score the members.
+    fn scores(&self, removal: bool) -> anyhow::Result<Vec<f64>> {
+        let (exe, mask) = if removal {
+            let exe = self
+                .exes
+                .score_removal
+                .as_ref()
+                .expect("engine opened without removal launches");
+            (exe, self.core.mask_lit(|i| self.core.in_s[i]))
+        } else {
+            (&self.exes.score, self.core.mask_lit(|i| !self.core.in_s[i]))
+        };
+        let outs = Runtime::run_tuple(
+            exe,
+            &[
+                self.core.x_lit.clone(),
+                self.state[0].clone(),
+                self.state[1].clone(),
+                self.state[2].clone(),
+                self.core.y_lit.clone(),
+                mask,
+                self.core.ex_lit.clone(),
+            ],
+        )?;
+        self.core.scores_from(outs)
+    }
+
+    /// Rank-1 state update in one SMW direction: commit (add `b` to S)
+    /// or downdate (remove `b` from S).
+    fn update(&mut self, b: usize, removal: bool) -> anyhow::Result<()> {
+        let exe = if removal {
+            self.exes
+                .downdate
+                .as_ref()
+                .expect("engine opened without removal launches")
+        } else {
+            &self.exes.commit
+        };
+        let entry = if removal { "downdate_step" } else { "commit_step" };
+        let b_lit = lit::scalar_i32(b as i32);
+        self.state = Runtime::run_tuple(
+            exe,
+            &[
+                self.core.x_lit.clone(),
+                self.state[0].clone(),
+                self.state[1].clone(),
+                self.state[2].clone(),
+                b_lit,
+            ],
+        )?;
+        ensure!(
+            self.state.len() == 3,
+            "{entry} returned {}",
+            self.state.len()
+        );
+        self.core.in_s[b] = !removal;
+        Ok(())
+    }
+
+    fn weights_for(&self, selected: &[usize]) -> anyhow::Result<Vec<f64>> {
+        self.core.weights_for(&self.state[1], selected)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Greedy RLS (Algorithm 3)
+// ---------------------------------------------------------------------------
 
 /// Greedy RLS driven through the PJRT artifacts.
 pub struct PjrtGreedy<'rt> {
@@ -32,101 +362,31 @@ impl<'rt> PjrtGreedy<'rt> {
     pub fn new(rt: &'rt Runtime) -> Self {
         PjrtGreedy { rt }
     }
-
-    /// Pad feature-major `x` (n × m) into bucket (nb rows × mb cols).
-    fn pad_x(x: &Matrix, mb: usize, nb: usize) -> Vec<f64> {
-        let (n, m) = (x.rows(), x.cols());
-        let mut out = vec![0.0; nb * mb];
-        for i in 0..n {
-            out[i * mb..i * mb + m].copy_from_slice(x.row(i));
-        }
-        out
-    }
 }
 
-/// Round-by-round engine over the artifacts. The executables are cloned
-/// `Rc`s and all literals are owned, so the session borrows only the
-/// problem data, not the [`Runtime`]. Forced rounds (warm-start replay)
-/// run the same full `score_step` launch as greedy rounds — the kernel
-/// has no single-candidate entry point — so a PJRT replay costs one
-/// score + one commit launch per round.
-struct PjrtCore<'a> {
-    x: &'a Matrix,
-    loss: Loss,
+/// Round-by-round greedy engine. Forced rounds (warm-start replay) run
+/// the same full `score_step` launch as greedy rounds — the kernel has no
+/// single-candidate entry point — so a PJRT replay costs one score + one
+/// commit launch per round.
+struct PjrtGreedyCore<'a> {
+    st: CadState<'a>,
     k: usize,
-    n: usize,
-    m: usize,
-    score: Rc<xla::PjRtLoadedExecutable>,
-    commit: Rc<xla::PjRtLoadedExecutable>,
-    x_lit: xla::Literal,
-    y_lit: xla::Literal,
-    ex_lit: xla::Literal,
-    /// [C, a, d] device state.
-    state: Vec<xla::Literal>,
-    cand_mask: Vec<f64>,
     selected: Vec<usize>,
     rounds: Vec<Round>,
 }
 
-impl SessionCore for PjrtCore<'_> {
+impl SessionCore for PjrtGreedyCore<'_> {
     fn target_reached(&self) -> bool {
         self.selected.len() >= self.k
     }
 
     fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
-        let n = self.n;
-        let cm_lit = lit::vec_f64(&self.cand_mask);
-        let outs = Runtime::run_tuple(
-            &self.score,
-            &[
-                self.x_lit.clone(),
-                self.state[0].clone(),
-                self.state[1].clone(),
-                self.state[2].clone(),
-                self.y_lit.clone(),
-                cm_lit,
-                self.ex_lit.clone(),
-            ],
-        )?;
-        ensure!(outs.len() == 2, "score_step returned {}", outs.len());
-        let e_sq = lit::to_vec_f64(&outs[0])?;
-        let e_01 = lit::to_vec_f64(&outs[1])?;
-        let scores = match self.loss {
-            Loss::Squared => &e_sq,
-            Loss::ZeroOne => &e_01,
-        };
-        let b = match forced {
-            Some(b) => {
-                ensure!(b < n, "feature {b} out of range (n={n})");
-                ensure!(
-                    self.cand_mask[b] != 0.0,
-                    "feature {b} already selected"
-                );
-                b
-            }
-            None => argmin(&scores[..n])
-                .ok_or_else(|| anyhow!("no candidate left"))?,
-        };
-        let round = Round { feature: b, criterion: scores[b] };
-
-        let b_lit = lit::scalar_i32(b as i32);
-        self.state = Runtime::run_tuple(
-            &self.commit,
-            &[
-                self.x_lit.clone(),
-                self.state[0].clone(),
-                self.state[1].clone(),
-                self.state[2].clone(),
-                b_lit,
-            ],
-        )?;
-        ensure!(
-            self.state.len() == 3,
-            "commit_step returned {}",
-            self.state.len()
-        );
-        self.cand_mask[b] = 0.0;
+        let scores = self.st.scores(false)?;
+        let (b, criterion) =
+            self.st.core.pick(forced, &scores, false, "no candidate left")?;
+        self.st.update(b, false)?;
         self.selected.push(b);
+        let round = Round { feature: b, criterion };
         self.rounds.push(round.clone());
         Ok(CoreStep::Committed(round))
     }
@@ -140,14 +400,7 @@ impl SessionCore for PjrtCore<'_> {
     }
 
     fn weights(&self) -> anyhow::Result<Vec<f64>> {
-        // w = X_S a (unpadded coordinates only).
-        let a_full = lit::to_vec_f64(&self.state[1])?;
-        let a = &a_full[..self.m];
-        Ok(self
-            .selected
-            .iter()
-            .map(|&i| dot(self.x.row(i), a))
-            .collect())
+        self.st.weights_for(&self.selected)
     }
 }
 
@@ -158,53 +411,10 @@ impl SessionSelector for PjrtGreedy<'_> {
         y: &'a [f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<Box<dyn Session + 'a>> {
-        let n = x.rows();
-        let m = x.cols();
-        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-        ensure!(m == y.len(), "shape mismatch");
-        let (mb, nb) = self.rt.pick_bucket(m, n).ok_or_else(|| {
-            anyhow!(
-                "no artifact bucket fits (m={m}, n={n}); rebuild artifacts \
-                 with larger buckets (python -m compile.aot --buckets ...)"
-            )
-        })?;
-
-        let init = self.rt.executable("init_state", mb, nb)?;
-        let score = self.rt.executable("score_step", mb, nb)?;
-        let commit = self.rt.executable("commit_step", mb, nb)?;
-
-        // Padded constants.
-        let x_pad = PjrtGreedy::pad_x(x, mb, nb);
-        let x_lit = lit::mat_f64(&x_pad, nb, mb)?;
-        let mut y_pad = vec![0.0; mb];
-        y_pad[..m].copy_from_slice(y);
-        let y_lit = lit::vec_f64(&y_pad);
-        let mut ex_mask = vec![0.0; mb];
-        ex_mask[..m].fill(1.0);
-        let ex_lit = lit::vec_f64(&ex_mask);
-
-        // init_state(X, y, λ) -> (C, a, d)
-        let lam_lit = lit::vec_f64(&[cfg.lambda]);
-        let state =
-            Runtime::run_tuple(&init, &[x_lit.clone(), y_lit.clone(), lam_lit])?;
-        ensure!(state.len() == 3, "init_state returned {}", state.len());
-
-        let mut cand_mask = vec![0.0; nb];
-        cand_mask[..n].fill(1.0);
-        let core = PjrtCore {
-            x,
-            loss: cfg.loss,
+        let st = CadState::open(self.rt, x, y, cfg, false, false)?;
+        let core = PjrtGreedyCore {
+            st,
             k: cfg.k,
-            n,
-            m,
-            score,
-            commit,
-            x_lit,
-            y_lit,
-            ex_lit,
-            state,
-            cand_mask,
             selected: Vec::with_capacity(cfg.k),
             rounds: Vec::with_capacity(cfg.k),
         };
@@ -215,6 +425,722 @@ impl SessionSelector for PjrtGreedy<'_> {
 impl Selector for PjrtGreedy<'_> {
     fn name(&self) -> &'static str {
         "greedy-rls-pjrt"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        crate::select::run_to_completion(self.begin(x, y, cfg)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backward elimination
+// ---------------------------------------------------------------------------
+
+/// Backward elimination driven through the PJRT artifacts: one
+/// `full_init_state` launch trains on the full feature set, then every
+/// elimination round is one masked removal-score launch + one downdate
+/// launch (the sign-flipped SMW pair).
+pub struct PjrtBackward<'rt> {
+    rt: &'rt Runtime,
+}
+
+impl<'rt> PjrtBackward<'rt> {
+    /// Bind the engine to a runtime (artifacts must be built).
+    pub fn new(rt: &'rt Runtime) -> Self {
+        PjrtBackward { rt }
+    }
+}
+
+/// Each round is one *elimination*: the round log records the removed
+/// feature, `selected()` is the set still standing in ascending order —
+/// the native [`crate::select::backward`] conventions exactly.
+struct PjrtBackwardCore<'a> {
+    st: CadState<'a>,
+    k: usize,
+    rounds: Vec<Round>,
+}
+
+impl SessionCore for PjrtBackwardCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.st.core.n - self.rounds.len() <= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let scores = self.st.scores(true)?;
+        let (b, criterion) =
+            self.st.core.pick(forced, &scores, true, "no removable feature")?;
+        self.st.update(b, true)?;
+        let round = Round { feature: b, criterion };
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.st.core.members()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        self.st.weights_for(&self.selected())
+    }
+}
+
+impl SessionSelector for PjrtBackward<'_> {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let st = CadState::open(self.rt, x, y, cfg, true, true)?;
+        let core = PjrtBackwardCore { st, k: cfg.k, rounds: Vec::new() };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
+impl Selector for PjrtBackward<'_> {
+    fn name(&self) -> &'static str {
+        "backward-elimination-pjrt"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        crate::select::run_to_completion(self.begin(x, y, cfg)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FoBa (adaptive forward–backward greedy)
+// ---------------------------------------------------------------------------
+
+/// FoBa driven through the PJRT artifacts: forward additions via the
+/// score launch, ν-thresholded corrective deletions and the swap phase
+/// via the removal launch. Control flow mirrors the native
+/// [`crate::select::foba`] engine; criteria come from the `[C, a, d]`
+/// cache scans instead of per-subset retraining (the same LOO values up
+/// to f64 rounding, so the equivalence tests are tolerance-based).
+///
+/// **Degenerate-data divergence:** the removal kernel scores a member
+/// `BIG` when its SMW denominator collapses (|1 − v·c| < 1e-12); the
+/// native engine retrains the subset instead and always gets a finite
+/// score. On such data this engine simply never deletes that member
+/// (an all-`BIG` scan keeps the set / ends the swap phase) where the
+/// native run might — the parity tests use well-conditioned problems.
+pub struct PjrtFoba<'rt> {
+    rt: &'rt Runtime,
+    /// Native-parameter twin (ν, swap phase, step budget).
+    pub params: crate::select::foba::Foba,
+}
+
+impl<'rt> PjrtFoba<'rt> {
+    /// Bind the engine to a runtime with default FoBa parameters.
+    pub fn new(rt: &'rt Runtime) -> Self {
+        PjrtFoba { rt, params: Default::default() }
+    }
+
+    /// Override the FoBa parameters (must match the native selector's
+    /// for equivalence).
+    pub fn with_params(rt: &'rt Runtime, params: crate::select::foba::Foba) -> Self {
+        PjrtFoba { rt, params }
+    }
+}
+
+struct PjrtFobaCore<'a> {
+    st: CadState<'a>,
+    k: usize,
+    nu: f64,
+    swap: bool,
+    max_steps: usize,
+    /// Selection order (native FoBa's `s`).
+    s: Vec<usize>,
+    rounds: Vec<Round>,
+    steps: usize,
+    cur: f64,
+    stable: bool,
+}
+
+impl PjrtFobaCore<'_> {
+    /// Deletion scores by *position* in `s`, preserving the native
+    /// engine's lowest-position tie-break.
+    fn deletion_scores(&self) -> anyhow::Result<Vec<f64>> {
+        let by_feature = self.st.scores(true)?;
+        Ok(self.s.iter().map(|&f| by_feature[f]).collect())
+    }
+
+    fn grow_round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        self.steps += 1;
+        let scores = self.st.scores(false)?;
+        let (b, score_b) = match forced {
+            Some(_) => {
+                self.st.core.pick(forced, &scores, false, "no candidate left")?
+            }
+            None => match argmin(&scores) {
+                Some(b) => (b, scores[b]),
+                None => return Ok(CoreStep::Exhausted),
+            },
+        };
+        let fwd_gain = self.cur - score_b;
+        self.st.update(b, false)?;
+        self.s.push(b);
+        self.cur = score_b;
+        let round = Round { feature: b, criterion: self.cur };
+        self.rounds.push(round.clone());
+        if fwd_gain > 0.0 {
+            // delete while cheap relative to the forward gain; members
+            // the removal kernel marks numerically unremovable (BIG)
+            // are simply never deleted — see the divergence note on
+            // [`PjrtFoba`]
+            while self.s.len() > 1 && self.steps < self.max_steps {
+                self.steps += 1;
+                let del = self.deletion_scores()?;
+                let Some(pos) = argmin(&del) else { break };
+                if del[pos] - self.cur < self.nu * fwd_gain {
+                    let f = self.s[pos];
+                    self.st.update(f, true)?;
+                    self.s.remove(pos);
+                    self.cur = del[pos];
+                } else {
+                    break;
+                }
+            }
+        }
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn swap_round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        self.steps += 1;
+        // the overshoot feature's own score is never recorded — only the
+        // argmin needs the scan, so a forced swap (warm-start replay)
+        // skips the launch entirely, like the native engine
+        let b = match forced {
+            Some(b) => {
+                let n = self.st.core.n;
+                ensure!(b < n, "feature {b} out of range (n={n})");
+                ensure!(
+                    !self.st.core.in_s[b],
+                    "feature {b} already selected"
+                );
+                b
+            }
+            None => {
+                let scores = self.st.scores(false)?;
+                match argmin(&scores) {
+                    Some(b) => b,
+                    None => {
+                        self.stable = true;
+                        return Ok(CoreStep::Exhausted);
+                    }
+                }
+            }
+        };
+        self.st.update(b, false)?;
+        self.s.push(b);
+        let del = self.deletion_scores()?;
+        // every deletion numerically unremovable ⇒ no improving swap
+        let Some(pos) = argmin(&del) else {
+            self.st.update(b, true)?;
+            self.s.pop();
+            self.stable = true;
+            return Ok(CoreStep::Exhausted);
+        };
+        if self.s[pos] == b || del[pos] >= self.cur {
+            self.st.update(b, true)?; // undo the overshoot — stable
+            self.s.pop();
+            self.stable = true;
+            return Ok(CoreStep::Exhausted);
+        }
+        let f = self.s[pos];
+        self.st.update(f, true)?;
+        self.s.remove(pos);
+        self.cur = del[pos];
+        let round = Round { feature: b, criterion: self.cur };
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+}
+
+impl SessionCore for PjrtFobaCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.s.len() >= self.k
+            && (!self.swap || self.k >= self.st.core.n || self.stable)
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        if self.s.len() < self.k {
+            if self.steps >= self.max_steps {
+                return Ok(CoreStep::Exhausted);
+            }
+            self.grow_round(forced)
+        } else if self.swap && self.k < self.st.core.n && !self.stable {
+            if self.steps >= self.max_steps {
+                return Ok(CoreStep::Exhausted);
+            }
+            self.swap_round(forced)
+        } else {
+            Ok(CoreStep::Exhausted)
+        }
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.s.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        self.st.weights_for(&self.s)
+    }
+}
+
+impl SessionSelector for PjrtFoba<'_> {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        ensure!(self.params.nu > 0.0, "ν must be positive");
+        let st = CadState::open(self.rt, x, y, cfg, true, false)?;
+        // empty-model LOO: predict 0 for everything (host-side; no scan)
+        let cur = st
+            .core
+            .y
+            .iter()
+            .map(|&yv| cfg.loss.eval(yv, 0.0))
+            .sum();
+        let core = PjrtFobaCore {
+            st,
+            k: cfg.k,
+            nu: self.params.nu,
+            swap: self.params.swap,
+            max_steps: self.params.max_steps,
+            s: Vec::new(),
+            rounds: Vec::new(),
+            steps: 0,
+            cur,
+            stable: false,
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
+impl Selector for PjrtFoba<'_> {
+    fn name(&self) -> &'static str {
+        "foba-pjrt"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        crate::select::run_to_completion(self.begin(x, y, cfg)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Floating forward selection (SFFS)
+// ---------------------------------------------------------------------------
+
+/// SFFS driven through the PJRT artifacts: one session round is a
+/// forward score+commit launch plus its conditional backward
+/// (removal-score + downdate) launches, mirroring the native
+/// [`crate::select::floating`] control flow. Shares [`PjrtFoba`]'s
+/// degenerate-data divergence note: numerically unremovable members
+/// (`BIG` removal scores) are never floated out.
+pub struct PjrtFloating<'rt> {
+    rt: &'rt Runtime,
+    /// Native-parameter twin (step budget).
+    pub params: crate::select::floating::FloatingForward,
+}
+
+impl<'rt> PjrtFloating<'rt> {
+    /// Bind the engine to a runtime with the default step budget.
+    pub fn new(rt: &'rt Runtime) -> Self {
+        PjrtFloating { rt, params: Default::default() }
+    }
+}
+
+struct PjrtFloatingCore<'a> {
+    st: CadState<'a>,
+    k: usize,
+    max_steps: usize,
+    s: Vec<usize>,
+    /// Best criterion seen for each subset size (index = |S|).
+    best_at: Vec<f64>,
+    steps: usize,
+    rounds: Vec<Round>,
+}
+
+impl SessionCore for PjrtFloatingCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.s.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        if self.steps >= self.max_steps {
+            return Ok(CoreStep::Exhausted);
+        }
+        self.steps += 1;
+        let scores = self.st.scores(false)?;
+        let (b, cur) = match forced {
+            Some(_) => {
+                self.st.core.pick(forced, &scores, false, "no candidate left")?
+            }
+            None => {
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow!("no candidate left"))?;
+                (b, scores[b])
+            }
+        };
+        self.st.update(b, false)?;
+        self.s.push(b);
+        self.best_at[self.s.len()] = self.best_at[self.s.len()].min(cur);
+        let round = Round { feature: b, criterion: cur };
+        self.rounds.push(round.clone());
+
+        // conditional backward steps (never undo the just-added one
+        // immediately into an empty improvement loop)
+        while self.s.len() > 2 && self.steps < self.max_steps {
+            self.steps += 1;
+            let by_feature = self.st.scores(true)?;
+            let rem_scores: Vec<f64> =
+                self.s.iter().map(|&f| by_feature[f]).collect();
+            // all members numerically unremovable (BIG) ⇒ keep the set
+            let Some(worst_pos) = argmin(&rem_scores) else { break };
+            let smaller = self.s.len() - 1;
+            if rem_scores[worst_pos] + 1e-12 < self.best_at[smaller] {
+                self.best_at[smaller] = rem_scores[worst_pos];
+                let f = self.s[worst_pos];
+                self.st.update(f, true)?;
+                self.s.remove(worst_pos);
+            } else {
+                break;
+            }
+        }
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.s.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        self.st.weights_for(&self.s)
+    }
+}
+
+impl SessionSelector for PjrtFloating<'_> {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let st = CadState::open(self.rt, x, y, cfg, true, false)?;
+        let core = PjrtFloatingCore {
+            st,
+            k: cfg.k,
+            max_steps: self.params.max_steps,
+            s: Vec::new(),
+            best_at: vec![f64::INFINITY; cfg.k + 1],
+            steps: 0,
+            rounds: Vec::new(),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
+impl Selector for PjrtFloating<'_> {
+    fn name(&self) -> &'static str {
+        "floating-forward-pjrt"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        crate::select::run_to_completion(self.begin(x, y, cfg)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// n-fold-CV greedy (fold-masked scoring)
+// ---------------------------------------------------------------------------
+
+/// n-fold greedy driven through the PJRT artifacts. The device state is
+/// `[C, a, B]` where `B` holds the fold-diagonal blocks of G at a static
+/// (f, s) capacity baked into the `nfold_*` artifacts (read back from
+/// the manifest's extra columns); scoring is one fold-masked launch over
+/// all candidates, solving every (fold × candidate) block with batched
+/// CG — which is why the equivalence tests for this engine are
+/// tolerance-based (the native engine factors with Cholesky).
+pub struct PjrtNFold<'rt> {
+    rt: &'rt Runtime,
+    /// Fold-count/seed twin of the native selector; the fold assignment
+    /// is drawn by the shared [`crate::select::nfold::NFoldGreedy`] code
+    /// path, so both engines score identical partitions.
+    pub params: crate::select::nfold::NFoldGreedy,
+}
+
+impl<'rt> PjrtNFold<'rt> {
+    /// Bind the engine to a runtime with the native default folds/seed.
+    pub fn new(rt: &'rt Runtime) -> Self {
+        PjrtNFold { rt, params: Default::default() }
+    }
+
+    /// Override fold count and assignment seed (must match the native
+    /// selector's for equivalence).
+    pub fn with_params(
+        rt: &'rt Runtime,
+        params: crate::select::nfold::NFoldGreedy,
+    ) -> Self {
+        PjrtNFold { rt, params }
+    }
+
+    /// Smallest bucket fitting (m, n) whose `nfold_*` artifacts also fit
+    /// the fold layout: fold count ≤ f capacity, max fold size ≤ s
+    /// capacity.
+    fn pick_nfold_bucket(
+        &self,
+        m: usize,
+        n: usize,
+        folds: &[Vec<usize>],
+    ) -> anyhow::Result<(usize, usize, usize, usize)> {
+        let max_fold = folds.iter().map(Vec::len).max().unwrap_or(0);
+        for (mb, nb) in self.rt.selection_buckets() {
+            if mb < m || nb < n {
+                continue;
+            }
+            let (Some(score), Some(commit)) = (
+                self.rt.entry_at("nfold_score_step", mb, nb),
+                self.rt.entry_at("nfold_commit_step", mb, nb),
+            ) else {
+                continue;
+            };
+            let (Some(fc), Some(sc)) =
+                (score.extra_dim("f"), score.extra_dim("s"))
+            else {
+                continue;
+            };
+            ensure!(
+                commit.extra_dim("f") == Some(fc)
+                    && commit.extra_dim("s") == Some(sc),
+                "nfold artifacts at ({mb}, {nb}) disagree on fold capacity"
+            );
+            if folds.len() <= fc && max_fold <= sc {
+                return Ok((mb, nb, fc, sc));
+            }
+        }
+        Err(anyhow!(
+            "no nfold artifact bucket fits m={m}, n={n} with {} folds of \
+             max size {max_fold}; use more/smaller folds, rebuild artifacts \
+             with larger buckets, or run the native engine",
+            folds.len()
+        ))
+    }
+}
+
+/// `[C, a, B]` engine state + fold tensors.
+struct NfState<'a> {
+    core: EngineCore<'a>,
+    score: Exe,
+    commit: Exe,
+    /// `[C, a, B]` literals.
+    state: Vec<xla::Literal>,
+    fidx_lit: xla::Literal,
+    fmask_lit: xla::Literal,
+}
+
+struct PjrtNFoldCore<'a> {
+    st: NfState<'a>,
+    k: usize,
+    selected: Vec<usize>,
+    rounds: Vec<Round>,
+}
+
+impl PjrtNFoldCore<'_> {
+    fn scores(&self) -> anyhow::Result<Vec<f64>> {
+        let st = &self.st;
+        let mask = st.core.mask_lit(|i| !st.core.in_s[i]);
+        let outs = Runtime::run_tuple(
+            &st.score,
+            &[
+                st.core.x_lit.clone(),
+                st.state[0].clone(),
+                st.state[1].clone(),
+                st.core.y_lit.clone(),
+                st.state[2].clone(),
+                st.fidx_lit.clone(),
+                st.fmask_lit.clone(),
+                mask,
+            ],
+        )?;
+        st.core.scores_from(outs)
+    }
+
+    fn commit(&mut self, b: usize) -> anyhow::Result<()> {
+        let st = &mut self.st;
+        let b_lit = lit::scalar_i32(b as i32);
+        st.state = Runtime::run_tuple(
+            &st.commit,
+            &[
+                st.core.x_lit.clone(),
+                st.state[0].clone(),
+                st.state[1].clone(),
+                st.state[2].clone(),
+                st.fidx_lit.clone(),
+                st.fmask_lit.clone(),
+                b_lit,
+            ],
+        )?;
+        ensure!(
+            st.state.len() == 3,
+            "nfold_commit_step returned {}",
+            st.state.len()
+        );
+        st.core.in_s[b] = true;
+        Ok(())
+    }
+}
+
+impl SessionCore for PjrtNFoldCore<'_> {
+    fn target_reached(&self) -> bool {
+        self.selected.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let scores = self.scores()?;
+        let (b, criterion) =
+            self.st.core.pick(forced, &scores, false, "no candidate left")?;
+        if forced.is_some() {
+            // mirror the native forced-round guard: a fold block that
+            // fails to factor makes the candidate unevaluable
+            ensure!(
+                criterion < BIG,
+                "feature {b} is not evaluable this round"
+            );
+        }
+        self.commit(b)?;
+        self.selected.push(b);
+        let round = Round { feature: b, criterion };
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        self.st.core.weights_for(&self.st.state[1], &self.selected)
+    }
+}
+
+impl SessionSelector for PjrtNFold<'_> {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        let m = x.cols();
+        ensure!(
+            self.params.folds >= 2 && self.params.folds <= m,
+            "bad fold count"
+        );
+        // identical fold assignment to the native engine
+        let folds = self.params.fold_assignment(m);
+        let (mb, nb, fc, sc) =
+            self.pick_nfold_bucket(m, x.rows(), &folds)?;
+        let core = EngineCore::at_bucket(x, y, cfg, mb, nb)?;
+
+        let init = self.rt.executable("init_state", mb, nb)?;
+        let score = self.rt.executable("nfold_score_step", mb, nb)?;
+        let commit = self.rt.executable("nfold_commit_step", mb, nb)?;
+
+        // fold tensors: member indices + slot mask, padded slots at 0
+        let mut fidx = vec![0i32; fc * sc];
+        let mut fmask = vec![0.0f64; fc * sc];
+        for (h, members) in folds.iter().enumerate() {
+            for (t, &j) in members.iter().enumerate() {
+                fidx[h * sc + t] = j as i32;
+                fmask[h * sc + t] = 1.0;
+            }
+        }
+        let fidx_lit = lit::mat_i32(&fidx, fc, sc)?;
+        let fmask_lit = lit::mat_f64(&fmask, fc, sc)?;
+
+        // G = λ⁻¹ I for the empty set ⇒ every fold block starts as λ⁻¹ I
+        let inv = 1.0 / cfg.lambda;
+        let mut blocks = vec![0.0f64; fc * sc * sc];
+        for h in 0..fc {
+            for t in 0..sc {
+                blocks[h * sc * sc + t * sc + t] = inv;
+            }
+        }
+        let b_lit = lit::tensor3_f64(&blocks, fc, sc, sc)?;
+
+        let lam_lit = lit::vec_f64(&[cfg.lambda]);
+        let init_state = Runtime::run_tuple(
+            &init,
+            &[core.x_lit.clone(), core.y_lit.clone(), lam_lit],
+        )?;
+        ensure!(
+            init_state.len() == 3,
+            "init_state returned {}",
+            init_state.len()
+        );
+        let [c_lit, a_lit, _d_unused] =
+            <[xla::Literal; 3]>::try_from(init_state)
+                .map_err(|_| anyhow!("init_state tuple"))?;
+
+        let st = NfState {
+            core,
+            score,
+            commit,
+            state: vec![c_lit, a_lit, b_lit],
+            fidx_lit,
+            fmask_lit,
+        };
+        let core = PjrtNFoldCore {
+            st,
+            k: cfg.k,
+            selected: Vec::with_capacity(cfg.k),
+            rounds: Vec::with_capacity(cfg.k),
+        };
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+}
+
+impl Selector for PjrtNFold<'_> {
+    fn name(&self) -> &'static str {
+        "nfold-greedy-pjrt"
     }
 
     fn select(

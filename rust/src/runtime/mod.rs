@@ -46,6 +46,18 @@ pub struct ManifestEntry {
     pub dim1: (String, usize),
     /// Second dimension, e.g. `("n", 256)`.
     pub dim2: (String, usize),
+    /// Extra static dimensions beyond the (m, n) bucket — the `nfold_*`
+    /// entries record their fold capacity here (`f=16`, `s=32`), written
+    /// by `python -m compile.aot` so the runtime never mirrors the
+    /// sizing formula.
+    pub extra: Vec<(String, usize)>,
+}
+
+impl ManifestEntry {
+    /// Look up an extra dimension by name (e.g. `"f"`, `"s"`).
+    pub fn extra_dim(&self, name: &str) -> Option<usize> {
+        self.extra.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+    }
 }
 
 /// Artifact store + compilation cache on a PJRT CPU client.
@@ -110,6 +122,18 @@ impl Runtime {
             .find(|&(mb, nb)| mb >= m && nb >= n)
     }
 
+    /// The manifest row for `entry` at bucket dims (d1, d2), if lowered.
+    pub fn entry_at(
+        &self,
+        entry: &str,
+        d1: usize,
+        d2: usize,
+    ) -> Option<&ManifestEntry> {
+        self.manifest
+            .iter()
+            .find(|e| e.entry == entry && e.dim1.1 == d1 && e.dim2.1 == d2)
+    }
+
     /// Compile (or fetch from cache) the artifact for `entry` at bucket
     /// dims (d1, d2).
     pub fn executable(
@@ -118,13 +142,12 @@ impl Runtime {
         d1: usize,
         d2: usize,
     ) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
-        let row = self
-            .manifest
-            .iter()
-            .find(|e| e.entry == entry && e.dim1.1 == d1 && e.dim2.1 == d2)
-            .ok_or_else(|| {
-                anyhow!("no artifact for {entry} at ({d1}, {d2})")
-            })?;
+        let row = self.entry_at(entry, d1, d2).ok_or_else(|| {
+            anyhow!(
+                "no artifact for {entry} at ({d1}, {d2}) — artifacts may \
+                 predate this binary; rerun `make artifacts`"
+            )
+        })?;
         let key = row.file.clone();
         if let Some(exe) = self.cache.borrow().get(&key) {
             return Ok(exe.clone());
@@ -184,6 +207,10 @@ fn parse_manifest(text: &str) -> anyhow::Result<Vec<ManifestEntry>> {
             file: cols[1].to_string(),
             dim1: parse_dim(cols[2])?,
             dim2: parse_dim(cols[3])?,
+            extra: cols[4..]
+                .iter()
+                .map(|c| parse_dim(c))
+                .collect::<anyhow::Result<_>>()?,
         });
     }
     if rows.is_empty() {
@@ -220,6 +247,31 @@ pub mod lit {
         xla::Literal::scalar(v)
     }
 
+    /// Row-major (rows × cols) i32 literal (fold-index tensors).
+    pub fn mat_i32(
+        data: &[i32],
+        rows: usize,
+        cols: usize,
+    ) -> anyhow::Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    /// Row-major (d0 × d1 × d2) f64 literal (fold-block tensors).
+    pub fn tensor3_f64(
+        data: &[f64],
+        d0: usize,
+        d1: usize,
+        d2: usize,
+    ) -> anyhow::Result<xla::Literal> {
+        assert_eq!(data.len(), d0 * d1 * d2);
+        xla::Literal::vec1(data)
+            .reshape(&[d0 as i64, d1 as i64, d2 as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))
+    }
+
     /// Copy a literal's f64 payload out.
     pub fn to_vec_f64(l: &xla::Literal) -> anyhow::Result<Vec<f64>> {
         l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e}"))
@@ -241,9 +293,24 @@ mod tests {
     }
 
     #[test]
+    fn manifest_parses_extra_fold_dims() {
+        let text = "nfold_score_step\tnfold_score_step_m64_n128.hlo.txt\t\
+                    m=64\tn=128\tf=16\ts=16\n";
+        let rows = parse_manifest(text).unwrap();
+        assert_eq!(rows[0].extra_dim("f"), Some(16));
+        assert_eq!(rows[0].extra_dim("s"), Some(16));
+        assert_eq!(rows[0].extra_dim("q"), None);
+        // plain rows carry no extras
+        let plain =
+            parse_manifest("score_step\ta.hlo.txt\tm=4\tn=8\n").unwrap();
+        assert!(plain[0].extra.is_empty());
+    }
+
+    #[test]
     fn manifest_rejects_garbage() {
         assert!(parse_manifest("just one col\n").is_err());
         assert!(parse_manifest("a\tb\tm=x\tn=2\n").is_err());
+        assert!(parse_manifest("a\tb\tm=1\tn=2\tbad-extra\n").is_err());
         assert!(parse_manifest("").is_err());
     }
 

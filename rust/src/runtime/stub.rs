@@ -4,10 +4,13 @@
 //!
 //! Only [`PjRtClient::cpu`] is reachable at runtime: it fails with a
 //! clear "built without the pjrt feature" error, so `Runtime::open`
-//! (and therefore every PJRT engine/serving path) reports the missing
-//! feature instead of failing to link. The remaining items exist solely
-//! so the non-gated code in `runtime/` and `runtime/engine.rs`
-//! typechecks; none of them can be constructed.
+//! (and therefore every PJRT engine/serving path — all five artifact
+//! selector engines in `runtime/engine.rs` construct through it) reports
+//! the missing feature instead of failing to link. The remaining items
+//! exist solely so the non-gated code in `runtime/` and
+//! `runtime/engine.rs` typechecks; none of them can be constructed. The
+//! stub-path contract is pinned by
+//! `rust/tests/pjrt_integration.rs::stub_runtime_reports_missing_feature_clearly`.
 
 use std::fmt;
 use std::path::Path;

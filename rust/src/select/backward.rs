@@ -17,6 +17,12 @@
 //!
 //! so each elimination round is O(mn), and the whole run O((n−k)mn) after
 //! the initialization — the forward algorithm's mirror image.
+//!
+//! The PJRT artifact twin is [`crate::runtime::engine::PjrtBackward`]:
+//! the same rounds as one masked removal-score launch + one downdate
+//! launch each, with the full-set initialization folded into a single
+//! `full_init_state` artifact (n in-device rank-1 commits). Equivalence
+//! is enforced by `rust/tests/pjrt_integration.rs`.
 
 use anyhow::ensure;
 

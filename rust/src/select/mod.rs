@@ -23,6 +23,10 @@
 //! Every selector also implements [`SessionSelector`] — the stepwise
 //! [`session`] API with early stopping ([`StopPolicy`]), warm starts, and
 //! per-round observation; [`Selector::select`] is its one-shot shim.
+//! The selectors whose inner loop is the masked O(mn) scan — greedy,
+//! wrapper (same trajectory), backward, FoBa, floating, and n-fold —
+//! also run on the PJRT artifact engines in [`crate::runtime::engine`],
+//! equivalence-tested against the native engines here.
 //! Sessions persist across process boundaries via [`checkpoint`]: durable,
 //! fingerprinted trajectory snapshots with bit-identical kill/resume
 //! (atomic write-rename, autosave policies, checksum-guarded format).

@@ -42,6 +42,18 @@ impl Default for NFoldGreedy {
     }
 }
 
+impl NFoldGreedy {
+    /// The fold partition this selector scores against, for `m`
+    /// examples. One code path shared by the native engine and the PJRT
+    /// artifact engine ([`crate::runtime::engine::PjrtNFold`]) so both
+    /// score identical partitions.
+    pub fn fold_assignment(&self, m: usize) -> Vec<Vec<usize>> {
+        let mut rng = Pcg64::new(self.seed, 47);
+        let f = crate::data::folds::Folds::new(m, self.folds, &mut rng);
+        (0..f.k()).map(|h| f.test_indices(h).to_vec()).collect()
+    }
+}
+
 struct NFoldState {
     m: usize,
     n: usize,
@@ -252,11 +264,7 @@ impl SessionSelector for NFoldGreedy {
         ensure!(self.folds >= 2 && self.folds <= m, "bad fold count");
         ensure!(m == y.len(), "shape mismatch");
 
-        let mut rng = Pcg64::new(self.seed, 47);
-        let f = crate::data::folds::Folds::new(m, self.folds, &mut rng);
-        let fold_vec: Vec<Vec<usize>> =
-            (0..f.k()).map(|h| f.test_indices(h).to_vec()).collect();
-
+        let fold_vec = self.fold_assignment(m);
         let mut st = NFoldState::init(x, y, cfg.lambda, fold_vec);
         st.threads = crate::parallel::resolve(cfg.threads);
         let core = NFoldCore {

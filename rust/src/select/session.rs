@@ -42,14 +42,16 @@ pub enum StopPolicy {
     /// `KBudget(usize::MAX)`, never fires — the session runs to `cfg.k`.
     KBudget(usize),
     /// Stop once this much wall-clock time has elapsed since `begin` —
-    /// or, for a warm-started session, since the last replayed round, so
-    /// a `begin_from` resume gets its full budget for *new* rounds. A
-    /// checkpoint resume ([`super::checkpoint`]) instead continues the
-    /// original accounting: the prior run's elapsed time is re-armed via
-    /// [`Session::bill_elapsed`], bounding total selection wall-clock
-    /// across process restarts. Checked between rounds: the round in
-    /// flight always completes, so the overshoot is bounded by one round
-    /// (O(mn) for greedy RLS).
+    /// or, for a warm-started session, since the end of `begin_from`
+    /// replay, so a resume gets its full budget for *new* rounds while
+    /// caller-forced rounds (e.g. the fixed-order CV baseline) stay on
+    /// the clock. A checkpoint resume ([`super::checkpoint`]) instead
+    /// continues the original accounting: the prior run's elapsed time is
+    /// re-armed via [`Session::bill_elapsed`], bounding total selection
+    /// wall-clock across process restarts. Checked between rounds
+    /// ([`Session::step`], or [`Session::check_stop`] for forced-order
+    /// drivers): the round in flight always completes, so the overshoot
+    /// is bounded by one round (O(mn) for greedy RLS).
     TimeBudget(Duration),
     /// Stop after `patience` consecutive rounds whose criterion failed to
     /// improve on the best seen so far by more than
@@ -172,8 +174,31 @@ pub trait Session {
     /// scoring through the identical code path, so the recorded criterion
     /// is bit-identical to what a greedy run would have logged for that
     /// feature). Errors if the feature is unavailable or the session has
-    /// already stopped.
+    /// already stopped. `force` never *evaluates* the stop policy —
+    /// warm-start replay must always be able to reconstruct its full
+    /// prefix — so forced-order drivers that want the policy enforced
+    /// call [`Session::check_stop`] between rounds.
     fn force(&mut self, feature: usize) -> anyhow::Result<Round>;
+
+    /// Evaluate the stop policy now (the same check [`Session::step`]
+    /// performs before a greedy round) and latch the session stopped if
+    /// it fires. This is how forced-order drivers — the fixed-order CV
+    /// baseline, external schedulers — honor a [`StopPolicy`]: call it
+    /// before each [`Session::force`] and stop on `Some`. Idempotent once
+    /// stopped. Deliberately has no default implementation: a
+    /// stop_reason-echoing default would silently exempt an implementor
+    /// from policy enforcement on forced-order runs — the exact bug
+    /// class this method exists to fix.
+    fn check_stop(&mut self) -> Option<StopReason>;
+
+    /// Restart the wall-clock anchor so [`StopPolicy::TimeBudget`] and
+    /// [`Session::elapsed`] bill only time spent *after* this call (any
+    /// [`Session::bill_elapsed`] credit is preserved). Called once by
+    /// [`SessionSelector::begin_from`] when its replay completes —
+    /// replayed rounds never consume budget — and not meant for general
+    /// use: resetting mid-run makes `elapsed()` non-monotone, which
+    /// corrupts checkpointed accounting.
+    fn reset_clock(&mut self) {}
 
     /// Rounds executed so far (including warm-start replay rounds).
     fn rounds_done(&self) -> usize;
@@ -186,9 +211,11 @@ pub trait Session {
     fn stop_reason(&self) -> Option<StopReason>;
 
     /// Wall-clock this session has spent selecting: time since `begin`
-    /// (or since the last replayed round of a warm start) plus any prior
-    /// elapsed time credited via [`Session::bill_elapsed`]. This is the
-    /// value a checkpoint persists so a resumed process can continue the
+    /// (or since the end of a warm start's `begin_from` replay) plus any
+    /// prior elapsed time credited via [`Session::bill_elapsed`].
+    /// Monotone over the session's lifetime — forced rounds accumulate
+    /// like greedy ones — which is what makes the cumulative `elapsed_ns`
+    /// a checkpoint persists safe for a resumed process to continue the
     /// [`StopPolicy::TimeBudget`] accounting where the killed one left
     /// off.
     fn elapsed(&self) -> Duration;
@@ -232,6 +259,13 @@ pub trait SessionSelector {
     /// engine is the exception — its scoring kernel evaluates every
     /// candidate in one launch, so each replayed round costs one
     /// score-step launch + one commit-step launch.
+    ///
+    /// Replay never consumes [`StopPolicy`] budget: the wall-clock anchor
+    /// is restarted **once** when the replay completes
+    /// ([`Session::reset_clock`]), so [`StopPolicy::TimeBudget`] and
+    /// [`Session::elapsed`] bill only post-replay time — and stay
+    /// monotone over any later forced rounds, which the checkpoint
+    /// layer's cumulative `elapsed_ns` accounting relies on.
     fn begin_from<'a>(
         &self,
         x: &'a Matrix,
@@ -243,6 +277,7 @@ pub trait SessionSelector {
         for &f in selected {
             s.force(f)?;
         }
+        s.reset_clock();
         Ok(s)
     }
 }
@@ -443,14 +478,21 @@ impl<C: SessionCore> Session for PolicySession<C> {
         match self.core.round(Some(feature))? {
             CoreStep::Committed(round) => {
                 self.note_round(&round);
-                // a TimeBudget counts from the last forced round, so a
-                // warm-start replay (begin_from) grants the resumed run
-                // its full budget instead of billing it for the replay
-                self.started = Instant::now();
                 Ok(round)
             }
             CoreStep::Exhausted => bail!("no further round possible"),
         }
+    }
+
+    fn check_stop(&mut self) -> Option<StopReason> {
+        if self.done.is_none() {
+            self.done = self.pending_stop();
+        }
+        self.done
+    }
+
+    fn reset_clock(&mut self) {
+        self.started = Instant::now();
     }
 
     fn rounds_done(&self) -> usize {
@@ -612,6 +654,91 @@ mod tests {
         assert!(matches!(
             s.step().unwrap(),
             StepOutcome::Done(StopReason::TimeBudget)
+        ));
+    }
+
+    /// Regression (stop-clock accounting): a `TimeBudget` must fire on a
+    /// forced-order run. `force` used to reset the clock every round, so
+    /// a fixed-order session could never exceed any budget.
+    #[test]
+    fn time_budget_fires_on_forced_order_runs() {
+        let ds = overfit_dataset(10);
+        let cfg = SelectionConfig::builder()
+            .k(5)
+            .stop(StopPolicy::TimeBudget(Duration::ZERO))
+            .build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(s.check_stop(), Some(StopReason::TimeBudget));
+        assert!(
+            s.force(0).is_err(),
+            "force after the policy latched must fail"
+        );
+        assert_eq!(s.stop_reason(), Some(StopReason::TimeBudget));
+        assert!(s.finish().unwrap().selected.is_empty());
+    }
+
+    /// Regression (stop-clock accounting): `elapsed()` must be monotone
+    /// across forced rounds — the per-round clock reset made Autosaver's
+    /// cumulative `elapsed_ns` non-monotone on forced trajectories.
+    #[test]
+    fn elapsed_is_monotone_across_forced_rounds() {
+        let ds = overfit_dataset(11);
+        let cfg = SelectionConfig::builder().k(4).build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let mut last = Duration::ZERO;
+        for f in [0usize, 1, 2] {
+            s.force(f).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+            let e = s.elapsed();
+            assert!(
+                e >= last,
+                "elapsed went backwards after forcing {f}: {e:?} < {last:?}"
+            );
+            last = e;
+        }
+        // and it keeps growing without any round committed
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(s.elapsed() > last);
+    }
+
+    /// A warm start still gets its full time budget for new rounds: the
+    /// clock restarts once, when `begin_from`'s replay completes.
+    #[test]
+    fn warm_start_resets_the_clock_once_after_replay() {
+        let ds = overfit_dataset(12);
+        let full_cfg = SelectionConfig::builder().k(4).build();
+        let full = GreedyRls.select(&ds.x, &ds.y, &full_cfg).unwrap();
+        let cfg = SelectionConfig::builder()
+            .k(4)
+            .stop(StopPolicy::TimeBudget(Duration::from_secs(3600)))
+            .build();
+        let mut s = GreedyRls
+            .begin_from(&ds.x, &ds.y, &cfg, &full.selected[..2])
+            .unwrap();
+        assert_eq!(s.rounds_done(), 2);
+        // replay time was discounted; a generous budget lets it finish
+        assert!(s.elapsed() < Duration::from_secs(3600));
+        assert_eq!(s.check_stop(), None);
+        let r = run_to_completion(s).unwrap();
+        assert_eq!(r.selected, full.selected);
+    }
+
+    #[test]
+    fn check_stop_is_idempotent_and_matches_step() {
+        let ds = overfit_dataset(13);
+        let cfg = SelectionConfig::builder()
+            .k(10)
+            .stop(StopPolicy::KBudget(2))
+            .build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        assert_eq!(s.check_stop(), None);
+        s.step().unwrap();
+        s.step().unwrap();
+        assert_eq!(s.check_stop(), Some(StopReason::RoundBudget));
+        assert_eq!(s.check_stop(), Some(StopReason::RoundBudget));
+        assert!(matches!(
+            s.step().unwrap(),
+            StepOutcome::Done(StopReason::RoundBudget)
         ));
     }
 

@@ -224,6 +224,77 @@ fn cv_prints_curves() {
     assert_eq!(rows, 4, "{stdout}");
 }
 
+/// Regression (stop-clock accounting): a zero time budget must stop the
+/// whole sweep — including the forced-order random baseline — instead of
+/// panicking or running to kmax.
+#[test]
+fn cv_zero_time_budget_truncates_the_sweep() {
+    let (ok, stdout, stderr) = run(&[
+        "cv",
+        "--synthetic",
+        "80,10",
+        "--folds",
+        "2",
+        "--kmax",
+        "4",
+        "--time-budget-s",
+        "0",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("greedy_test"), "{stdout}");
+    let rows = stdout
+        .lines()
+        .filter(|l| l.chars().next().is_some_and(|c| c.is_ascii_digit()))
+        .count();
+    assert_eq!(rows, 0, "zero budget must select nothing:\n{stdout}");
+}
+
+#[test]
+fn cv_time_budget_with_checkpoints_is_rejected() {
+    let dir = std::env::temp_dir().join("greedy_rls_cli_cv_tb");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (ok, _, stderr) = run(&[
+        "cv",
+        "--synthetic",
+        "60,8",
+        "--folds",
+        "2",
+        "--kmax",
+        "3",
+        "--time-budget-s",
+        "5",
+        "--checkpoint-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("not checkpoint-resumable"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `cv --engine pjrt` without artifacts reports the artifact/stub error
+/// instead of silently running natively.
+#[test]
+fn cv_pjrt_engine_without_artifacts_errors() {
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        eprintln!("skipping: artifacts present, error path untestable");
+        return;
+    }
+    let (ok, _, stderr) = run(&[
+        "cv",
+        "--synthetic",
+        "40,6",
+        "--folds",
+        "2",
+        "--engine",
+        "pjrt",
+    ]);
+    assert!(!ok);
+    assert!(
+        stderr.contains("artifacts") || stderr.contains("pjrt feature"),
+        "{stderr}"
+    );
+}
+
 #[test]
 fn scaling_prints_series() {
     let (ok, stdout, stderr) = run(&[

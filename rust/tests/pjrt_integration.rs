@@ -8,10 +8,14 @@ use greedy_rls::coordinator::{self, serve, EngineKind};
 use greedy_rls::data::synthetic;
 use greedy_rls::metrics::Loss;
 use greedy_rls::proptest::assert_close;
-use greedy_rls::runtime::{engine::PjrtGreedy, Runtime};
+use greedy_rls::runtime::{
+    engine::{PjrtBackward, PjrtFloating, PjrtFoba, PjrtGreedy, PjrtNFold},
+    Runtime,
+};
 use greedy_rls::select::{
-    greedy::GreedyRls, run_to_completion, SelectionConfig, Selector,
-    SessionSelector,
+    backward::BackwardElimination, checkpoint, floating::FloatingForward,
+    foba::Foba, greedy::GreedyRls, nfold::NFoldGreedy, run_to_completion,
+    SelectionConfig, SelectionResult, Selector, SessionSelector,
 };
 
 fn runtime() -> Option<Runtime> {
@@ -138,6 +142,214 @@ fn pjrt_session_and_warm_start_match_one_shot() {
     .unwrap();
     assert_eq!(one_shot.selected, resumed.selected);
     assert_eq!(one_shot.weights, resumed.weights);
+}
+
+/// Native-vs-PJRT contract shared by every ported selector: identical
+/// selected sets, criteria to relative tolerance (the artifact engines
+/// solve with CG / incremental SMW where the native ones factor
+/// directly), weights to the same tolerance.
+fn assert_engine_parity(
+    native: &SelectionResult,
+    pjrt: &SelectionResult,
+    tol: f64,
+    what: &str,
+) {
+    assert_eq!(native.selected, pjrt.selected, "{what}: selected sets");
+    assert_eq!(native.rounds.len(), pjrt.rounds.len(), "{what}: rounds");
+    for (i, (a, b)) in native.rounds.iter().zip(&pjrt.rounds).enumerate() {
+        assert_eq!(a.feature, b.feature, "{what}: round {i} feature");
+        assert!(
+            (a.criterion - b.criterion).abs()
+                <= tol * a.criterion.abs().max(1.0),
+            "{what}: round {i} criterion {} vs {}",
+            a.criterion,
+            b.criterion
+        );
+    }
+    assert_close(&native.weights, &pjrt.weights, tol, what);
+}
+
+/// Every newly ported selector must reproduce its native engine across
+/// thread counts {1, 2, 4} (threads exercise the native side — the PJRT
+/// engine's parallelism lives in the compiled kernels) and both losses.
+#[test]
+fn ported_selectors_match_native_across_threads_and_losses() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_gaussians(60, 18, 5, 1.5, 31);
+    let nfold = NFoldGreedy { folds: 5, seed: 11 };
+    for loss in [Loss::ZeroOne, Loss::Squared] {
+        for threads in [1usize, 2, 4] {
+            let cfg = SelectionConfig {
+                k: 5,
+                lambda: 1.0,
+                loss,
+                threads,
+                ..Default::default()
+            };
+            let what = format!("loss={loss:?} threads={threads}");
+            assert_engine_parity(
+                &BackwardElimination.select(&ds.x, &ds.y, &cfg).unwrap(),
+                &PjrtBackward::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap(),
+                1e-6,
+                &format!("backward {what}"),
+            );
+            assert_engine_parity(
+                &nfold.select(&ds.x, &ds.y, &cfg).unwrap(),
+                &PjrtNFold::with_params(&rt, nfold)
+                    .select(&ds.x, &ds.y, &cfg)
+                    .unwrap(),
+                1e-6,
+                &format!("nfold {what}"),
+            );
+            assert_engine_parity(
+                &Foba::default().select(&ds.x, &ds.y, &cfg).unwrap(),
+                &PjrtFoba::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap(),
+                1e-6,
+                &format!("foba {what}"),
+            );
+            assert_engine_parity(
+                &FloatingForward::default()
+                    .select(&ds.x, &ds.y, &cfg)
+                    .unwrap(),
+                &PjrtFloating::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap(),
+                1e-6,
+                &format!("floating {what}"),
+            );
+        }
+    }
+}
+
+/// Backward/nfold sessions warm-start bit-identically to their own
+/// uninterrupted runs (the begin_from replay path on artifact engines).
+#[test]
+fn ported_selector_sessions_warm_start() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_gaussians(48, 16, 4, 1.5, 17);
+    let cfg = SelectionConfig { k: 4, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
+
+    let backward = PjrtBackward::new(&rt);
+    let full = backward.select(&ds.x, &ds.y, &cfg).unwrap();
+    // replay the first two *eliminations*
+    let replay: Vec<usize> =
+        full.rounds.iter().take(2).map(|r| r.feature).collect();
+    let resumed = run_to_completion(
+        backward.begin_from(&ds.x, &ds.y, &cfg, &replay).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(full.selected, resumed.selected);
+    assert_eq!(full.weights, resumed.weights);
+
+    let nfold = PjrtNFold::with_params(&rt, NFoldGreedy { folds: 4, seed: 3 });
+    let full = nfold.select(&ds.x, &ds.y, &cfg).unwrap();
+    let resumed = run_to_completion(
+        nfold
+            .begin_from(&ds.x, &ds.y, &cfg, &full.selected[..2])
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(full.selected, resumed.selected);
+    assert_eq!(full.weights, resumed.weights);
+}
+
+/// Checkpoint kill/resume through a PJRT-backed session: snapshot a
+/// partial run to disk, reload it into a fresh PJRT session, and demand
+/// the uninterrupted trajectory.
+#[test]
+fn checkpoint_resume_through_pjrt_session() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_gaussians(48, 20, 5, 1.5, 23);
+    let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
+    let full = PjrtGreedy::new(&rt).select(&ds.x, &ds.y, &cfg).unwrap();
+
+    let fp = checkpoint::fingerprint(&ds.x, &ds.y, &cfg);
+    let mut session = PjrtGreedy::new(&rt).begin(&ds.x, &ds.y, &cfg).unwrap();
+    session.step().unwrap();
+    session.step().unwrap();
+    let ckpt = checkpoint::Checkpoint::from_session(session.as_ref(), fp)
+        .unwrap();
+    let dir = std::env::temp_dir().join("greedy_rls_pjrt_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = checkpoint::checkpoint_path(&dir, 2);
+    ckpt.save_atomic(&path).unwrap();
+
+    let (resumed, restored) = coordinator::resume_with_engine(
+        EngineKind::Pjrt,
+        Some(&rt),
+        &ds.x,
+        &ds.y,
+        &cfg,
+        &path,
+    )
+    .unwrap();
+    assert_eq!(restored.rounds.len(), 2);
+    assert_eq!(resumed.rounds_done(), 2);
+    let r = run_to_completion(resumed).unwrap();
+    assert_eq!(r.selected, full.selected);
+    assert_eq!(r.weights, full.weights);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CV curves on the PJRT engine match the native protocol (tolerance on
+/// accuracies is unnecessary: both engines pick identical feature sets,
+/// and accuracies are counts).
+#[test]
+fn cv_on_pjrt_engine_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::two_gaussians(60, 12, 4, 1.5, 41);
+    let native = coordinator::cv::run_cv_opts(
+        &ds,
+        &coordinator::cv::CvOptions {
+            folds: 2,
+            k_max: 3,
+            seed: 5,
+            threads: 1,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let pjrt = coordinator::cv::run_cv_opts(
+        &ds,
+        &coordinator::cv::CvOptions {
+            folds: 2,
+            k_max: 3,
+            seed: 5,
+            threads: 1,
+            engine: EngineKind::Pjrt,
+            ..Default::default()
+        },
+        Some(&rt),
+    )
+    .unwrap();
+    assert_eq!(native.ks, pjrt.ks);
+    assert_eq!(native.lambdas, pjrt.lambdas);
+    // accuracies are counts over identical selected sets; tolerance only
+    // guards the astronomically-unlikely boundary prediction
+    assert_close(&native.greedy_test, &pjrt.greedy_test, 1e-9, "greedy");
+    assert_close(&native.random_test, &pjrt.random_test, 1e-9, "random");
+}
+
+/// Default (non-pjrt) builds: the stub runtime reports the missing
+/// feature with a clear error once the manifest parses — the PJRT paths
+/// fail loudly, never silently.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stub_runtime_reports_missing_feature_clearly() {
+    let dir = std::env::temp_dir().join("greedy_rls_stub_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.tsv"),
+        "score_step\tscore_step_m64_n128.hlo.txt\tm=64\tn=128\n",
+    )
+    .unwrap();
+    let err = Runtime::open(&dir).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("built without the pjrt feature"),
+        "unexpected stub error: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
