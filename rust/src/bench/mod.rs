@@ -111,6 +111,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -181,10 +182,15 @@ impl Table {
 
 /// Typed cell values with sensible default formatting.
 pub enum CellValue {
+    /// Signed integer, plain decimal.
     Int(i64),
+    /// Unsigned size, plain decimal.
     Usize(usize),
+    /// Float at 3 decimal places (timings in seconds).
     F3(f64),
+    /// Float at 6 decimal places (per-batch latencies, rates).
     F6(f64),
+    /// Preformatted string, verbatim.
     Str(String),
 }
 

@@ -192,6 +192,21 @@ COMMANDS
              --follow DIR --dataset NAME [--batch 64] [--passes P]
              [--poll-ms MS] [--wait-s S]  (swaps to each newer checkpoint
              between batches; in-flight batches always complete)
+             --bus  alias for train-serve: train and serve in one
+             process over the in-memory model bus (no disk on the path)
+  train-serve  run selection and serve it at the same time: every
+             committed round is published on an in-process bus and
+             hot-swapped into N serve workers the instant it commits;
+             prints per-version latency percentiles and a final
+             deterministic pass served by the finished model
+             --dataset NAME | --synthetic M,N  --k K  [--lambda L]
+             [--loss 01|squared] [--engine native|pjrt] [--threads T]
+             [--serve-threads W] [--batch 64] [--queue-depth Q]
+             [--out FILE] [--progress]
+             session control + durability: same --stop family,
+             --warm-start, --checkpoint-dir/--checkpoint-every/--resume
+             flags as select (a version reaches the bus only after its
+             checkpoint is on disk, so kill + --resume stays exact)
   compare    run every selection algorithm on one dataset side by side
              --dataset NAME | --synthetic M,N  [--k 5] [--lambda 1.0]
              [--threads T] [--engine native|pjrt]  (pjrt compares the

@@ -13,12 +13,21 @@
 //!   prediction requests (native or PJRT path), including hot-swap
 //!   serving from a live session's checkpoint directory
 //!   ([`serve::HotSwapServer`], `serve --follow`);
+//! * [`stream`] — the in-process streaming pipeline: a live session
+//!   publishes every committed round onto a [`stream::ModelBus`] and
+//!   worker threads serve it concurrently with no filesystem on the
+//!   path ([`stream::train_serve`], `train-serve` / `serve --bus`);
 //! * model persistence in a dependency-free text format, plus
 //!   checkpoint-driven session resume ([`resume_with_engine`]).
+//!
+//! The three serving paths (one-shot `serve --model`, checkpoint-follow
+//! `serve --follow`, and the bus) and how they relate are mapped in the
+//! repo's `ARCHITECTURE.md`.
 
 pub mod cv;
 pub mod grid;
 pub mod serve;
+pub mod stream;
 
 use anyhow::Context;
 

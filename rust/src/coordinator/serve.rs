@@ -13,9 +13,14 @@
 //!
 //! For serve-while-training, [`HotSwapServer`] holds the current model
 //! behind a versioned slot: batches predict against an [`Arc`] snapshot
-//! taken at batch start, so a [`HotSwapServer::swap`] — e.g. driven by a
-//! [`CheckpointFollower`] watching a live session's checkpoint directory
-//! — never invalidates an in-flight batch.
+//! taken at batch start, so a [`HotSwapServer::swap`] never invalidates
+//! an in-flight batch. Two [`ModelSource`]s feed those swaps:
+//!
+//! * [`CheckpointFollower`] — polls a live session's checkpoint
+//!   directory (`serve --follow`, cross-process through the filesystem);
+//! * [`crate::coordinator::stream::BusFollower`] — subscribes to the
+//!   in-process [`crate::coordinator::stream::ModelBus`] (`train-serve`,
+//!   no disk on the request path).
 
 use std::path::PathBuf;
 use std::sync::{Arc, RwLock};
@@ -51,9 +56,10 @@ pub struct ServeStats {
 /// The previous nearest-rank rule (`round((len-1)·q)`) misreported tail
 /// quantiles on small samples — p99 of anything under ~50 batches simply
 /// returned the maximum. Interpolating keeps p99 meaningful at every
-/// batch count; [`serve_native`] and [`serve_pjrt`] share this through
-/// [`summarize`], so both engines' stats agree.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
+/// batch count; [`serve_native`], [`serve_pjrt`], and the `train-serve`
+/// pipeline's per-version stats ([`crate::coordinator::stream`]) all
+/// share this rule, so every serving path's stats agree.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
@@ -69,6 +75,24 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// Serve every column of `x` (full feature-major matrix) in batches with
 /// the native predictor. Returns predictions and stats. Errors on a
 /// zero batch size, mirroring [`serve_pjrt`].
+///
+/// The core of the `examples/serve.rs` flow — train a sparse model,
+/// serve it back in batches, read the latency stats:
+///
+/// ```
+/// use greedy_rls::coordinator::{fit, serve, EngineKind};
+/// use greedy_rls::data::synthetic::two_gaussians;
+/// use greedy_rls::select::SelectionConfig;
+///
+/// let ds = two_gaussians(120, 30, 5, 1.0, 42);
+/// let cfg = SelectionConfig::builder().k(5).build();
+/// let model = fit(EngineKind::Native, None, &ds, &cfg)?;
+/// let (preds, stats) = serve::serve_native(&model, &ds.x, 16)?;
+/// assert_eq!(preds.len(), 120);
+/// assert_eq!(stats.batches, 8); // ceil(120/16)
+/// assert!(stats.p99_batch_s >= stats.p50_batch_s);
+/// # anyhow::Ok(())
+/// ```
 pub fn serve_native(
     p: &Predictor,
     x: &Matrix,
@@ -81,10 +105,10 @@ pub fn serve_native(
     let mut start = 0;
     while start < m {
         let end = (start + batch).min(m);
-        let idx: Vec<usize> = (start..end).collect();
-        let xb = x.select_cols(&idx);
         let t0 = std::time::Instant::now();
-        let pb = p.predict_matrix(&xb);
+        // range prediction: no n-row sub-matrix copy per batch, and the
+        // latency stat measures prediction, not the copy
+        let pb = p.predict_range(x, start, end);
         lat.push(t0.elapsed().as_secs_f64());
         preds[start..end].copy_from_slice(&pb);
         start = end;
@@ -148,7 +172,7 @@ pub fn serve_pjrt(
     Ok((preds, summarize(m, &lat)))
 }
 
-fn summarize(requests: usize, lat: &[f64]) -> ServeStats {
+pub(crate) fn summarize(requests: usize, lat: &[f64]) -> ServeStats {
     let mut sorted = lat.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let total: f64 = lat.iter().sum();
@@ -189,6 +213,23 @@ pub struct ModelVersion {
 /// takes the write lock to publish a new [`ModelVersion`]. The old model
 /// stays alive until its last in-flight batch drops the `Arc` — no batch
 /// is ever dropped or torn by a refresh.
+///
+/// ```
+/// use greedy_rls::coordinator::serve::HotSwapServer;
+/// use greedy_rls::rls::Predictor;
+///
+/// let server = HotSwapServer::new(Predictor {
+///     selected: vec![0, 2],
+///     weights: vec![1.0, -2.0],
+/// });
+/// let in_flight = server.snapshot(); // a batch holds this Arc
+/// let v = server.swap(Predictor { selected: vec![1], weights: vec![3.0] }, 5);
+/// assert_eq!(v, 1);
+/// // the swap never tears the batch already in flight …
+/// assert_eq!(in_flight.predictor.selected, vec![0, 2]);
+/// // … and the next batch sees the new model
+/// assert_eq!(server.snapshot().predictor.selected, vec![1]);
+/// ```
 ///
 /// [`swap`]: HotSwapServer::swap
 pub struct HotSwapServer {
@@ -233,6 +274,46 @@ impl HotSwapServer {
         let model = self.snapshot();
         (model.predictor.predict_matrix(xb), model.version)
     }
+
+    /// [`HotSwapServer::predict_batch`] over columns `start..end` of a
+    /// full feature-major matrix, without materializing a sub-matrix
+    /// ([`Predictor::predict_range`] — bit-identical, batch after batch,
+    /// to a whole-matrix pass). The serving loops' hot path.
+    pub fn predict_range(
+        &self,
+        x: &Matrix,
+        start: usize,
+        end: usize,
+    ) -> (Vec<f64>, u64) {
+        let model = self.snapshot();
+        (model.predictor.predict_range(x, start, end), model.version)
+    }
+}
+
+/// One model refresh delivered by a [`ModelSource`].
+#[derive(Clone, Debug)]
+pub struct ModelUpdate {
+    /// The new model to serve.
+    pub predictor: Predictor,
+    /// Selection rounds behind this model (for reporting).
+    pub rounds: usize,
+    /// Fingerprint of the training data, when the source carries one.
+    /// Checkpoints do ([`crate::data::fingerprint::fingerprint_xy`]); the
+    /// in-process bus reports `None` — publisher and server share one
+    /// process and one dataset by construction.
+    pub data_hash: Option<u64>,
+}
+
+/// A source of successively newer models for hot-swap serving: the
+/// checkpoint trail on disk ([`CheckpointFollower`], `serve --follow`) or
+/// the in-process bus ([`crate::coordinator::stream::BusFollower`],
+/// `train-serve`). [`serve_hotswap`] polls it between batches; the
+/// concurrent-swap stress tests exercise [`HotSwapServer`] through both
+/// implementations.
+pub trait ModelSource {
+    /// The newest model strictly newer than the last one this source
+    /// reported, or `None` when nothing newer exists yet.
+    fn poll_model(&mut self) -> anyhow::Result<Option<ModelUpdate>>;
 }
 
 /// Watches a checkpoint directory for newer checkpoints than the last one
@@ -293,6 +374,16 @@ impl CheckpointFollower {
     }
 }
 
+impl ModelSource for CheckpointFollower {
+    fn poll_model(&mut self) -> anyhow::Result<Option<ModelUpdate>> {
+        Ok(self.poll()?.map(|ckpt| ModelUpdate {
+            predictor: ckpt.predictor(),
+            rounds: ckpt.rounds.len(),
+            data_hash: Some(ckpt.fingerprint.data),
+        }))
+    }
+}
+
 /// Statistics of a hot-swap serving run.
 #[derive(Clone, Copy, Debug)]
 pub struct HotSwapStats {
@@ -307,18 +398,21 @@ pub struct HotSwapStats {
 }
 
 /// Serve every column of `x` for `passes` passes with the native
-/// predictor, polling `follower` between batches and hot-swapping the
-/// server's model whenever a newer checkpoint appears. Returns the
-/// predictions of the **last** pass (computed by whatever models were
-/// current batch-by-batch) and run statistics.
+/// predictor, polling `source` between batches and hot-swapping the
+/// server's model whenever a newer one appears. Returns the predictions
+/// of the **last** pass (computed by whatever models were current
+/// batch-by-batch) and run statistics. Works over either kind of
+/// [`ModelSource`] — a [`CheckpointFollower`] (`serve --follow`) or a
+/// [`crate::coordinator::stream::BusFollower`].
 ///
-/// `expect_data_hash` guards against following a checkpoint directory
-/// that belongs to a different dataset (compare with
+/// `expect_data_hash` guards against following a model trail that
+/// belongs to a different dataset (compare with
 /// [`crate::data::fingerprint::fingerprint_xy`] of the serving data);
-/// checkpoints whose data fingerprint differs are refused.
+/// updates carrying a differing fingerprint are refused. Sources that
+/// carry no fingerprint (the in-process bus) skip the check.
 pub fn serve_hotswap(
     server: &HotSwapServer,
-    follower: &mut CheckpointFollower,
+    source: &mut dyn ModelSource,
     x: &Matrix,
     batch: usize,
     passes: usize,
@@ -336,27 +430,26 @@ pub fn serve_hotswap(
         let mut start = 0;
         while start < m {
             // refresh point: between batches, never mid-batch
-            if let Some(ckpt) = follower.poll()? {
-                if let Some(expect) = expect_data_hash {
+            if let Some(update) = source.poll_model()? {
+                if let (Some(expect), Some(got)) =
+                    (expect_data_hash, update.data_hash)
+                {
                     ensure!(
-                        ckpt.fingerprint.data == expect,
-                        "checkpoint data hash {:016x} does not match the \
-                         serving dataset's {expect:016x}",
-                        ckpt.fingerprint.data
+                        got == expect,
+                        "checkpoint data hash {got:016x} does not match \
+                         the serving dataset's {expect:016x}"
                     );
                 }
-                if !ckpt.selected.is_empty() {
-                    last_rounds = ckpt.rounds.len();
+                if !update.predictor.selected.is_empty() {
+                    last_rounds = update.rounds;
                     last_version =
-                        server.swap(ckpt.predictor(), last_rounds);
+                        server.swap(update.predictor, last_rounds);
                     swaps += 1;
                 }
             }
             let end = (start + batch).min(m);
-            let idx: Vec<usize> = (start..end).collect();
-            let xb = x.select_cols(&idx);
             let t0 = Instant::now();
-            let (pb, _version) = server.predict_batch(&xb);
+            let (pb, _version) = server.predict_range(x, start, end);
             lat.push(t0.elapsed().as_secs_f64());
             preds[start..end].copy_from_slice(&pb);
             start = end;

@@ -1,0 +1,1250 @@
+//! In-process streaming serve pipeline: session → bus → hot-swap server.
+//!
+//! `serve --follow` (PR 3) ships models from a live session to a server
+//! through the filesystem: the session autosaves `ckpt-*.ckpt` files and
+//! a [`CheckpointFollower`] polls the directory. This module is the
+//! in-memory counterpart the ROADMAP flags as the natural follow-up. The
+//! paper's O(mn)-per-round bound is exactly what makes it worthwhile:
+//! every committed round is cheap, and every committed round *is* a
+//! servable sparse predictor (cf. the Dropping Forward-Backward line of
+//! work on mid-run models), so rounds should reach the server the
+//! instant they commit — no disk, no polling latency.
+//!
+//! The pieces:
+//!
+//! * [`ModelBus`] — a single-slot, latest-wins publish/subscribe channel
+//!   (a `Mutex<Arc<ModelVersion>>` slot plus a `Condvar`; no new
+//!   dependencies). Publishing is O(1) and never waits on subscribers;
+//!   subscribers coalesce — a slow reader skips straight to the newest
+//!   version instead of back-pressuring the trainer.
+//! * [`PublishObserver`] — the [`StateObserver`] that publishes the
+//!   session's current model after every committed round and on stop,
+//!   then closes the bus. It composes with the checkpoint [`Autosaver`]
+//!   through [`drive_tapped`]'s ordered taps.
+//! * [`BusFollower`] — the subscriber handle, mirroring
+//!   [`CheckpointFollower`]'s API ([`BusFollower::poll`],
+//!   [`BusFollower::wait_for_model`]) plus the blocking
+//!   [`BusFollower::wait_newer`]. It implements [`ModelSource`], so
+//!   [`crate::coordinator::serve::serve_hotswap`] runs unchanged over
+//!   the bus, and hot swaps keep the checkpoint path's guarantee:
+//!   in-flight batches always complete on the model they started with.
+//! * [`train_serve`] — the end-to-end pipeline behind the `train-serve`
+//!   CLI subcommand (and `serve --bus`): selection runs on the calling
+//!   thread, a swapper thread applies bus versions to a
+//!   [`HotSwapServer`], and N worker threads answer query batches pulled
+//!   from a **bounded** job queue (`std::sync::mpsc::sync_channel`). The
+//!   bounded queue is the backpressure boundary — the batch feeder
+//!   blocks when workers fall behind — while serving never waits on the
+//!   trainer: workers always answer with the newest swapped-in model.
+//!   After training stops, one final pass is served entirely by the
+//!   final model; that half is deterministic and is what the end-to-end
+//!   tests compare bit-for-bit against `serve --follow`.
+//!
+//! # Crash consistency: publish-after-save
+//!
+//! The bus composes with durable checkpoints, and ordering is part of
+//! the contract: [`train_serve`] installs its taps as
+//! `[&mut autosaver, &mut publisher]` **and hands the publisher the
+//! saver's own policy** ([`PublishObserver::with_policy`] — both run
+//! the same [`PolicyTicker`] state machine), so for any published
+//! version, its round's checkpoint is durable on disk before the bus
+//! announces it — at every `--checkpoint-every` and on-stop setting,
+//! not just the defaults. A process killed at any instant therefore
+//! never served a model that its checkpoint trail cannot reproduce:
+//! `--resume` replays to a state at least as advanced as anything a
+//! subscriber ever saw, and continues bit-identically (the kill/resume
+//! gauntlet runs a `train-serve` leg to prove it). The reverse order
+//! would open a window where version `r` answers queries, the process
+//! dies, and the resumed run re-derives round `r` from a trail that
+//! ends at `r−1` — harmless for greedy RLS only by accident of
+//! determinism, and wrong the moment a stop policy depends on
+//! wall-clock.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure};
+
+use super::serve::{
+    percentile, summarize, CheckpointFollower, HotSwapServer, ModelSource,
+    ModelUpdate, ModelVersion, ServeStats,
+};
+use crate::linalg::Matrix;
+use crate::rls::Predictor;
+use crate::select::checkpoint::{AutosavePolicy, Autosaver, PolicyTicker};
+use crate::select::session::{
+    drive_tapped, Observer, Session, StateObserver, StopReason,
+};
+use crate::select::{Round, SelectionResult};
+
+// ---------------------------------------------------------------------------
+// The bus
+// ---------------------------------------------------------------------------
+
+/// Shared slot behind a [`ModelBus`] and its followers.
+struct BusInner {
+    latest: Option<Arc<ModelVersion>>,
+    published: u64,
+    closed: bool,
+}
+
+/// Single-slot, latest-wins in-process model bus.
+///
+/// The publisher side of the streaming serve pipeline: each
+/// [`ModelBus::publish`] replaces the slot with a new
+/// [`ModelVersion`] and wakes every waiting [`BusFollower`]. Versions
+/// are monotone; followers that fall behind observe only the newest
+/// version (serving wants the best model now, not a replay of history —
+/// the full trajectory is the checkpoint trail's job). Publishing never
+/// blocks on subscribers, so a slow reader cannot stall training.
+///
+/// ```
+/// use greedy_rls::coordinator::stream::ModelBus;
+/// use greedy_rls::rls::Predictor;
+///
+/// let bus = ModelBus::new();
+/// let mut follower = bus.follower();
+/// assert!(follower.poll().is_none());
+/// bus.publish(Predictor { selected: vec![3], weights: vec![0.5] }, 1);
+/// bus.publish(Predictor { selected: vec![3, 0], weights: vec![0.4, 0.1] }, 2);
+/// let v = follower.poll().expect("newest version");
+/// assert_eq!((v.version, v.rounds), (2, 2)); // latest wins, v1 skipped
+/// assert!(follower.poll().is_none());        // nothing newer yet
+/// bus.close();
+/// ```
+pub struct ModelBus {
+    shared: Arc<(Mutex<BusInner>, Condvar)>,
+}
+
+impl Default for ModelBus {
+    fn default() -> Self {
+        ModelBus::new()
+    }
+}
+
+impl ModelBus {
+    /// An open bus with nothing published yet.
+    pub fn new() -> ModelBus {
+        ModelBus {
+            shared: Arc::new((
+                Mutex::new(BusInner {
+                    latest: None,
+                    published: 0,
+                    closed: false,
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    /// Publish `predictor` (trained through `rounds` rounds) as the next
+    /// version; returns the version number (1 for the first publish).
+    /// O(1); never waits on subscribers.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the bus has been [`ModelBus::close`]d — publishing
+    /// after close is a pipeline-ordering bug, not a runtime condition.
+    pub fn publish(&self, predictor: Predictor, rounds: usize) -> u64 {
+        let (lock, cvar) = &*self.shared;
+        let mut inner = lock.lock().expect("model bus poisoned");
+        assert!(!inner.closed, "publish on a closed ModelBus");
+        let version = inner.published + 1;
+        inner.published = version;
+        inner.latest =
+            Some(Arc::new(ModelVersion { predictor, version, rounds }));
+        cvar.notify_all();
+        version
+    }
+
+    /// Close the bus: followers drain the final version (if they have
+    /// not yet seen it) and then observe [`BusWait::Closed`]. Idempotent.
+    pub fn close(&self) {
+        let (lock, cvar) = &*self.shared;
+        lock.lock().expect("model bus poisoned").closed = true;
+        cvar.notify_all();
+    }
+
+    /// Whether [`ModelBus::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.shared.0.lock().expect("model bus poisoned").closed
+    }
+
+    /// Versions published so far.
+    pub fn published(&self) -> u64 {
+        self.shared.0.lock().expect("model bus poisoned").published
+    }
+
+    /// A new subscriber that has seen nothing yet: its first
+    /// [`BusFollower::poll`] reports the current latest version, if any.
+    pub fn follower(&self) -> BusFollower {
+        BusFollower { shared: self.shared.clone(), last_version: 0 }
+    }
+}
+
+/// Outcome of [`BusFollower::wait_newer`].
+#[derive(Clone, Debug)]
+pub enum BusWait {
+    /// A version newer than the follower's last-reported one.
+    Newer(Arc<ModelVersion>),
+    /// The bus is closed and this follower has drained every version.
+    Closed,
+    /// The timeout expired with nothing newer published.
+    TimedOut,
+}
+
+/// Subscriber handle on a [`ModelBus`] — the in-memory mirror of a
+/// [`CheckpointFollower`] — `poll` for something newer, or block in
+/// [`BusFollower::wait_for_model`] until the first servable model
+/// arrives. Implements [`ModelSource`], so
+/// [`crate::coordinator::serve::serve_hotswap`] serves from a bus
+/// exactly as it serves from a checkpoint directory.
+pub struct BusFollower {
+    shared: Arc<(Mutex<BusInner>, Condvar)>,
+    last_version: u64,
+}
+
+impl BusFollower {
+    /// Non-blocking: the newest version strictly newer than the last one
+    /// this follower reported, or `None`. Latest-wins — intermediate
+    /// versions published since the last poll are skipped, mirroring how
+    /// [`CheckpointFollower::poll`] reports only the most advanced
+    /// checkpoint.
+    pub fn poll(&mut self) -> Option<Arc<ModelVersion>> {
+        let inner = self.shared.0.lock().expect("model bus poisoned");
+        match &inner.latest {
+            Some(v) if v.version > self.last_version => {
+                self.last_version = v.version;
+                Some(v.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Block until a version newer than the last-reported one is
+    /// published, the bus closes (with nothing newer left to drain), or
+    /// `timeout` expires — whichever comes first. The close case is what
+    /// lets a swapper loop terminate deterministically once training
+    /// stops. A `timeout` too large to represent as a deadline (e.g.
+    /// `Duration::MAX`) means "no timeout": wait for a publish or close.
+    pub fn wait_newer(&mut self, timeout: Duration) -> BusWait {
+        // None = unrepresentable deadline = wait indefinitely
+        let deadline = Instant::now().checked_add(timeout);
+        let (lock, cvar) = &*self.shared;
+        let mut inner = lock.lock().expect("model bus poisoned");
+        loop {
+            if let Some(v) = &inner.latest {
+                if v.version > self.last_version {
+                    self.last_version = v.version;
+                    return BusWait::Newer(v.clone());
+                }
+            }
+            if inner.closed {
+                return BusWait::Closed;
+            }
+            inner = match deadline {
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return BusWait::TimedOut;
+                    }
+                    cvar.wait_timeout(inner, deadline - now)
+                        .expect("model bus poisoned")
+                        .0
+                }
+                None => cvar.wait(inner).expect("model bus poisoned"),
+            };
+        }
+    }
+
+    /// Block until the bus offers a version with a non-empty model (a
+    /// 0-round model has nothing to serve) — the bus counterpart of
+    /// [`CheckpointFollower::wait_for_model`]. No poll interval: the
+    /// condvar wakes the caller the instant a publish lands. Errors if
+    /// `timeout` expires first, or if the bus closes without ever having
+    /// published a servable model.
+    pub fn wait_for_model(
+        &mut self,
+        timeout: Duration,
+    ) -> anyhow::Result<Arc<ModelVersion>> {
+        let deadline = Instant::now().checked_add(timeout);
+        loop {
+            // an unrepresentable deadline means wait indefinitely
+            let left = match deadline {
+                Some(d) => d.saturating_duration_since(Instant::now()),
+                None => Duration::MAX,
+            };
+            match self.wait_newer(left) {
+                BusWait::Newer(v) if !v.predictor.selected.is_empty() => {
+                    return Ok(v)
+                }
+                BusWait::Newer(_) => continue,
+                BusWait::Closed => {
+                    bail!("bus closed before a servable model was published")
+                }
+                BusWait::TimedOut => bail!(
+                    "no servable model appeared on the bus within {:.1}s",
+                    timeout.as_secs_f64()
+                ),
+            }
+        }
+    }
+}
+
+impl ModelSource for BusFollower {
+    fn poll_model(&mut self) -> anyhow::Result<Option<ModelUpdate>> {
+        Ok(self.poll().map(|v| ModelUpdate {
+            predictor: v.predictor.clone(),
+            rounds: v.rounds,
+            // in-process: publisher and server share the dataset by
+            // construction, there is no fingerprint to re-check
+            data_hash: None,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The publisher tap
+// ---------------------------------------------------------------------------
+
+/// [`StateObserver`] that publishes the session's current model on a
+/// [`ModelBus`] — by default after every committed round and once more
+/// on stop (the final version) — then closes the bus when the session
+/// stops, so subscribers terminate.
+///
+/// Compose it with an [`Autosaver`] via
+/// [`drive_tapped`]`(session, obs, &mut [&mut saver, &mut publisher])` —
+/// tap order **is** the publish-after-save contract (see the
+/// [module docs](self)). When the run is checkpointed, construct with
+/// [`PublishObserver::with_policy`] handing over the saver's own
+/// [`AutosavePolicy`]: both run the same [`PolicyTicker`] state
+/// machine, so a publish can only ever fire in a flush cycle where the
+/// matching checkpoint write just fired — no version is announced whose
+/// round has no durable checkpoint. [`train_serve`] wires this up
+/// automatically.
+pub struct PublishObserver<'b> {
+    bus: &'b ModelBus,
+    /// Shared firing rule — the identical state machine [`Autosaver`]
+    /// runs, so alignment is by construction, not by parallel code.
+    ticker: PolicyTicker,
+    stopped: bool,
+    /// Dedupe key of the last publish (rounds, stop reason), mirroring
+    /// the [`Autosaver`] rule — the on-stop publish is not deduped
+    /// against the same round's mid-run publish, so subscribers always
+    /// see a final version once the session has stopped.
+    last_published: Option<(usize, Option<StopReason>)>,
+    /// Versions this observer has published (monotone; for logs/tests).
+    pub published: u64,
+}
+
+impl<'b> PublishObserver<'b> {
+    /// Publish onto `bus` after every committed round and on stop (the
+    /// default [`AutosavePolicy`]); the bus is closed when the session
+    /// stops.
+    pub fn new(bus: &'b ModelBus) -> PublishObserver<'b> {
+        PublishObserver::with_policy(bus, AutosavePolicy::default())
+    }
+
+    /// Publish on `policy`'s cadence (every N committed rounds, on
+    /// stop). Hand this the checkpoint [`Autosaver`]'s own policy and
+    /// the publish-after-save ordering holds at **any** checkpoint
+    /// interval and on-stop setting, not just the defaults. Whatever
+    /// the policy, the bus is still closed once the session stops.
+    pub fn with_policy(
+        bus: &'b ModelBus,
+        policy: AutosavePolicy,
+    ) -> PublishObserver<'b> {
+        PublishObserver {
+            bus,
+            ticker: PolicyTicker::new(policy),
+            stopped: false,
+            last_published: None,
+            published: 0,
+        }
+    }
+}
+
+impl Observer for PublishObserver<'_> {
+    fn on_round(&mut self, _index: usize, _round: &Round, _e: Duration) {
+        self.ticker.on_round();
+    }
+
+    fn on_stop(&mut self, _reason: StopReason) {
+        self.ticker.on_stop();
+        self.stopped = true;
+    }
+}
+
+impl StateObserver for PublishObserver<'_> {
+    fn flush(&mut self, session: &(dyn Session + '_)) -> anyhow::Result<()> {
+        if self.ticker.take_due() {
+            let key = (session.rounds_done(), session.stop_reason());
+            if self.last_published != Some(key) {
+                let st = session.state()?;
+                self.bus.publish(
+                    Predictor { selected: st.selected, weights: st.weights },
+                    st.rounds.len(),
+                );
+                self.last_published = Some(key);
+                self.ticker.fired();
+                self.published += 1;
+            }
+        }
+        if self.stopped && !self.bus.is_closed() {
+            self.bus.close();
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The train-serve pipeline
+// ---------------------------------------------------------------------------
+
+/// Tuning knobs for [`train_serve`].
+#[derive(Clone, Copy, Debug)]
+pub struct TrainServeOptions {
+    /// Serve worker threads (`0` = available parallelism).
+    pub workers: usize,
+    /// Examples per query batch.
+    pub batch: usize,
+    /// Bounded job-queue capacity in batches (`0` = 2 × workers). The
+    /// queue is the backpressure boundary: the feeder blocks when it
+    /// fills, workers never wait on the trainer.
+    pub queue_depth: usize,
+}
+
+impl Default for TrainServeOptions {
+    fn default() -> Self {
+        TrainServeOptions { workers: 2, batch: 64, queue_depth: 0 }
+    }
+}
+
+/// Serving latency of one hot-swap server version during a
+/// [`train_serve`] run.
+#[derive(Clone, Debug)]
+pub struct VersionStats {
+    /// Hot-swap server version (0 = the model installed before the
+    /// first swap — non-empty only for resumed sessions).
+    pub version: u64,
+    /// Selection rounds behind that version's model.
+    pub rounds: usize,
+    /// Batches this version answered (exact count — every batch is
+    /// counted even when the percentile sample is capped).
+    pub batches: usize,
+    /// p50 per-batch latency, seconds (interpolated, [`percentile`];
+    /// computed over at most 4096 retained samples per version per
+    /// worker, so memory stays bounded on long runs).
+    pub p50_s: f64,
+    /// p99 per-batch latency, seconds (same sampling as `p50_s`).
+    pub p99_s: f64,
+}
+
+/// Everything a [`train_serve`] run produced.
+#[derive(Clone, Debug)]
+pub struct TrainServeReport {
+    /// The finished selection — identical to what a plain `select` run
+    /// on the same config would return (serving never perturbs it).
+    pub result: SelectionResult,
+    /// Why selection stopped.
+    pub stop: StopReason,
+    /// Wall-clock the *training* half took (the drive only — excludes
+    /// serving shutdown and the final pass), comparable 1:1 with a
+    /// plain `select` run's selection time.
+    pub train_seconds: f64,
+    /// Versions published on the bus: one per committed round plus the
+    /// on-stop publish when serving uncheckpointed or checkpointing
+    /// every round, one per *checkpointed* round otherwise (the publish
+    /// cadence follows the autosave interval — see the module docs).
+    pub published: u64,
+    /// Hot swaps applied to the server (≤ `published`: latest-wins
+    /// coalescing may skip versions a busy swap cycle missed).
+    pub swaps: u64,
+    /// Query batches answered while training was still running.
+    pub live_batches: usize,
+    /// Per-version latency percentiles over every batch served (live
+    /// and final pass), in version order.
+    pub version_stats: Vec<VersionStats>,
+    /// Predictions of the final pass — served entirely by the final
+    /// model, hence deterministic and bit-comparable with
+    /// `serve --follow` over the finished checkpoint trail.
+    pub final_preds: Vec<f64>,
+    /// Latency/throughput of the final pass. `throughput` is measured
+    /// over the pass's wall-clock span across all workers (examples per
+    /// second of real time), not per-worker busy time.
+    pub final_serve: ServeStats,
+}
+
+/// One query batch handed to the serve workers.
+struct Job {
+    start: usize,
+    end: usize,
+    final_pass: bool,
+}
+
+/// Retained latency samples per (version, rounds) per worker. Long
+/// training runs serve unbounded batch counts, so raw per-batch logs
+/// would grow without limit; every batch is *counted*, but at most this
+/// many samples per version per worker feed the percentiles (documented
+/// on [`VersionStats::batches`]).
+const LATENCY_SAMPLE_CAP: usize = 4096;
+
+/// Per-worker serving log: bounded latency samples grouped by server
+/// version, plus exact batch counts.
+#[derive(Default)]
+struct WorkerLog {
+    /// (version, rounds) → (batches answered, retained samples).
+    versions: BTreeMap<(u64, usize), (usize, Vec<f64>)>,
+    /// Final-pass latencies (bounded by ⌈m / batch⌉).
+    final_lat: Vec<f64>,
+    /// Earliest start / latest end of this worker's final-pass batches —
+    /// merged across workers into the pass's wall-clock span, so the
+    /// reported throughput reflects N workers running concurrently
+    /// rather than the sum of their busy times.
+    final_span: Option<(Instant, Instant)>,
+    /// Batches answered while training was live.
+    live_batches: usize,
+}
+
+impl WorkerLog {
+    fn record(
+        &mut self,
+        version: u64,
+        rounds: usize,
+        t0: Instant,
+        t1: Instant,
+        fin: bool,
+    ) {
+        let lat = (t1 - t0).as_secs_f64();
+        let (count, samples) =
+            self.versions.entry((version, rounds)).or_default();
+        *count += 1;
+        if samples.len() < LATENCY_SAMPLE_CAP {
+            samples.push(lat);
+        }
+        if fin {
+            self.final_lat.push(lat);
+            self.final_span = Some(match self.final_span {
+                None => (t0, t1),
+                Some((s, e)) => (s.min(t0), e.max(t1)),
+            });
+        } else {
+            self.live_batches += 1;
+        }
+    }
+}
+
+/// Unwind-safe serving shutdown: closing the bus and raising the
+/// training-done flag must happen even when the trainer half panics (a
+/// caller-supplied [`Observer`] or tap can) — `std::thread::scope`
+/// joins every spawned thread *before* propagating a panic, so leaving
+/// the feeder spinning on `training_done` would hang the process
+/// instead of crashing it.
+struct ServingShutdown<'a> {
+    bus: &'a ModelBus,
+    done: &'a AtomicBool,
+}
+
+impl Drop for ServingShutdown<'_> {
+    fn drop(&mut self) {
+        if !self.bus.is_closed() {
+            self.bus.close();
+        }
+        self.done.store(true, Ordering::Release);
+    }
+}
+
+/// Run selection and serve it at the same time, in one process, with no
+/// filesystem on the publish path.
+///
+/// Topology (all threads scoped; the function returns only when every
+/// one has exited):
+///
+/// ```text
+/// calling thread   drive_tapped(session, [autosaver?, publisher])
+///       │ publishes ModelVersion per round          (ModelBus)
+///       ▼
+/// swapper thread   wait_newer → HotSwapServer::swap  (latest wins)
+///       ▼
+/// worker × N       bounded job queue → snapshot() → predict_matrix
+///       ▲
+/// feeder thread    batches of x, pass after pass, until training stops;
+///                  then joins the swapper and feeds one final pass
+/// ```
+///
+/// While training runs, workers continuously answer passes over `x`
+/// with whatever model is current — those batches are timing-dependent
+/// and contribute latency statistics only. Once the session stops the
+/// feeder waits for the swapper to drain the bus (so the **final**
+/// model is installed) and feeds one more pass, whose predictions are
+/// returned in [`TrainServeReport::final_preds`] — deterministic for a
+/// deterministic selector, whatever the thread timing did.
+///
+/// When `saver` is supplied the run is also durably checkpointed, with
+/// the publish-after-save ordering documented in the
+/// [module docs](self); a killed `train-serve --checkpoint-dir` run
+/// resumes bit-identically via `--resume` exactly like `select` does.
+pub fn train_serve(
+    mut session: Box<dyn Session + '_>,
+    observer: &mut dyn Observer,
+    saver: Option<&mut Autosaver>,
+    x: &Matrix,
+    opts: &TrainServeOptions,
+) -> anyhow::Result<TrainServeReport> {
+    ensure!(opts.batch > 0, "batch must be positive");
+    let m = x.cols();
+    ensure!(m > 0, "no examples to serve");
+    let workers = crate::parallel::resolve(opts.workers);
+    let depth =
+        if opts.queue_depth == 0 { 2 * workers } else { opts.queue_depth };
+    let batch = opts.batch;
+
+    let bus = ModelBus::new();
+    // give the publisher the saver's own policy so the publish-after-save
+    // guarantee holds at any --checkpoint-every and on-stop setting: a
+    // version is announced only in a flush cycle where its round's
+    // checkpoint was just written (no saver = publish every round)
+    let policy =
+        saver.as_deref().map_or_else(AutosavePolicy::default, |s| s.policy());
+    let mut publisher = PublishObserver::with_policy(&bus, policy);
+    // seed the server with the session's current model: empty for a
+    // fresh session, the replayed prefix for a checkpoint resume
+    let st0 = session.state()?;
+    let server = HotSwapServer::new(Predictor {
+        selected: st0.selected,
+        weights: st0.weights,
+    });
+
+    let training_done = AtomicBool::new(false);
+    let (tx, rx) = sync_channel::<Job>(depth);
+    let rx = Arc::new(Mutex::new(rx));
+    let final_preds = Mutex::new(vec![0.0; m]);
+
+    let (train_result, train_seconds, swaps, logs) =
+        std::thread::scope(|scope| {
+        // unwind guard first: any panic inside this scope must still
+        // close the bus and raise training_done, or joining the feeder
+        // would hang the process instead of propagating the panic
+        let shutdown = ServingShutdown { bus: &bus, done: &training_done };
+        // swapper: install each bus version the instant it lands
+        let mut bus_follower = bus.follower();
+        let server_ref = &server;
+        let swapper = scope.spawn(move || -> u64 {
+            let mut swaps = 0u64;
+            loop {
+                match bus_follower.wait_newer(Duration::from_millis(200)) {
+                    BusWait::Newer(v) => {
+                        if !v.predictor.selected.is_empty() {
+                            server_ref.swap(v.predictor.clone(), v.rounds);
+                            swaps += 1;
+                        }
+                    }
+                    BusWait::Closed => return swaps,
+                    BusWait::TimedOut => {}
+                }
+            }
+        });
+
+        // feeder: live passes while training runs, then one final pass
+        // served entirely by the final model
+        let done_ref = &training_done;
+        let feeder = scope.spawn(move || -> u64 {
+            'live: while !done_ref.load(Ordering::Acquire) {
+                let mut start = 0;
+                while start < m {
+                    if done_ref.load(Ordering::Acquire) {
+                        break 'live;
+                    }
+                    let end = (start + batch).min(m);
+                    // blocking send = backpressure on the feeder
+                    if tx.send(Job { start, end, final_pass: false }).is_err()
+                    {
+                        return 0;
+                    }
+                    start = end;
+                }
+            }
+            // bus is closed once training is done; drain it into the
+            // server before the deterministic final pass
+            let swaps = swapper.join().expect("swapper thread panicked");
+            let mut start = 0;
+            while start < m {
+                let end = (start + batch).min(m);
+                if tx.send(Job { start, end, final_pass: true }).is_err() {
+                    return swaps;
+                }
+                start = end;
+            }
+            drop(tx); // closes the queue: workers drain and exit
+            swaps
+        });
+
+        // workers: answer batches against the current snapshot
+        let mut worker_handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let server_ref = &server;
+            let preds_ref = &final_preds;
+            worker_handles.push(scope.spawn(move || -> WorkerLog {
+                let mut log = WorkerLog::default();
+                loop {
+                    let job = {
+                        let queue = rx.lock().expect("job queue poisoned");
+                        queue.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    let snapshot = server_ref.snapshot();
+                    let t0 = Instant::now();
+                    // range prediction: no n-row sub-matrix copy on the
+                    // hot loop, and the latency stat covers all the work
+                    let pb = snapshot
+                        .predictor
+                        .predict_range(x, job.start, job.end);
+                    log.record(
+                        snapshot.version,
+                        snapshot.rounds,
+                        t0,
+                        Instant::now(),
+                        job.final_pass,
+                    );
+                    if job.final_pass {
+                        let mut out =
+                            preds_ref.lock().expect("final preds poisoned");
+                        out[job.start..job.end].copy_from_slice(&pb);
+                    }
+                }
+                log
+            }));
+        }
+
+        // trainer, on the calling thread: taps ordered save-then-publish
+        let t_train = Instant::now();
+        let train_result = {
+            let mut taps: Vec<&mut dyn StateObserver> = Vec::new();
+            if let Some(saver) = saver {
+                taps.push(saver);
+            }
+            taps.push(&mut publisher);
+            drive_tapped(session.as_mut(), observer, &mut taps)
+        };
+        // training-only wall clock: excludes the serving shutdown and
+        // the final pass below, so it compares 1:1 with `select`
+        let train_seconds = t_train.elapsed().as_secs_f64();
+        drop(shutdown); // close the bus + raise training_done now
+
+        let swaps = feeder.join().expect("feeder thread panicked");
+        let mut logs = Vec::new();
+        for handle in worker_handles {
+            logs.push(handle.join().expect("worker thread panicked"));
+        }
+        (train_result, train_seconds, swaps, logs)
+    });
+    let stop = train_result?;
+
+    // merge the per-worker logs: exact batch counts, capped samples
+    let mut groups: BTreeMap<(u64, usize), (usize, Vec<f64>)> =
+        BTreeMap::new();
+    let mut live_batches = 0usize;
+    let mut final_lat = Vec::new();
+    let mut final_span: Option<(Instant, Instant)> = None;
+    for log in logs {
+        for ((version, rounds), (count, samples)) in log.versions {
+            let entry = groups.entry((version, rounds)).or_default();
+            entry.0 += count;
+            entry.1.extend(samples);
+        }
+        live_batches += log.live_batches;
+        final_lat.extend(log.final_lat);
+        if let Some((s, e)) = log.final_span {
+            final_span = Some(match final_span {
+                None => (s, e),
+                Some((gs, ge)) => (gs.min(s), ge.max(e)),
+            });
+        }
+    }
+    let version_stats = groups
+        .into_iter()
+        .map(|((version, rounds), (count, mut lats))| {
+            lats.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+            VersionStats {
+                version,
+                rounds,
+                batches: count,
+                p50_s: percentile(&lats, 0.5),
+                p99_s: percentile(&lats, 0.99),
+            }
+        })
+        .collect();
+    let mut final_serve = summarize(m, &final_lat);
+    // summarize() divides by summed busy time — right for one serial
+    // server, but the final pass ran on N workers concurrently, so use
+    // the pass's wall-clock span for the throughput figure instead
+    if let Some((s, e)) = final_span {
+        let wall = (e - s).as_secs_f64();
+        if wall > 0.0 {
+            final_serve.throughput = m as f64 / wall;
+        }
+    }
+    let final_preds =
+        final_preds.into_inner().expect("final preds poisoned");
+
+    Ok(TrainServeReport {
+        result: session.finish()?,
+        stop,
+        train_seconds,
+        published: bus.published(),
+        swaps,
+        live_batches,
+        version_stats,
+        final_preds,
+        final_serve,
+    })
+}
+
+/// Convenience for tests and examples: [`train_serve`] over a finished
+/// checkpoint trail's dataset is cumbersome to compare against by hand,
+/// so this serves one deterministic pass over `x` through
+/// [`serve_hotswap`] following `dir` — the filesystem twin of a
+/// [`train_serve`] final pass (an already-complete trail means every
+/// batch is answered by the final model).
+///
+/// [`serve_hotswap`]: crate::coordinator::serve::serve_hotswap
+pub fn follow_final_pass(
+    dir: &std::path::Path,
+    x: &Matrix,
+    batch: usize,
+) -> anyhow::Result<Vec<f64>> {
+    let mut follower = CheckpointFollower::new(dir);
+    let first = follower
+        .wait_for_model(Duration::from_secs(5), Duration::from_millis(5))?;
+    let server = HotSwapServer::new(first.predictor());
+    let (preds, _) = super::serve::serve_hotswap(
+        &server,
+        &mut follower,
+        x,
+        batch,
+        1,
+        None,
+    )?;
+    Ok(preds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::checkpoint::{
+        self, drive_checkpointed, AutosavePolicy,
+    };
+    use crate::select::greedy::GreedyRls;
+    use crate::select::{
+        NoopObserver, SelectionConfig, SessionSelector, StopPolicy,
+    };
+
+    fn dataset() -> crate::data::Dataset {
+        crate::data::synthetic::two_gaussians(60, 14, 4, 1.5, 33)
+    }
+
+    #[test]
+    fn bus_is_latest_wins_and_versions_are_monotone() {
+        let bus = ModelBus::new();
+        let mut f = bus.follower();
+        assert!(f.poll().is_none());
+        assert_eq!(
+            bus.publish(Predictor { selected: vec![1], weights: vec![1.0] }, 1),
+            1
+        );
+        assert_eq!(
+            bus.publish(Predictor { selected: vec![2], weights: vec![2.0] }, 2),
+            2
+        );
+        let v = f.poll().expect("sees newest");
+        assert_eq!(v.version, 2);
+        assert_eq!(v.rounds, 2);
+        assert!(f.poll().is_none(), "nothing newer");
+        assert_eq!(bus.published(), 2);
+        // a late follower still sees the latest
+        let mut late = bus.follower();
+        assert_eq!(late.poll().unwrap().version, 2);
+    }
+
+    #[test]
+    fn wait_newer_drains_then_reports_closed() {
+        let bus = ModelBus::new();
+        let mut f = bus.follower();
+        assert!(matches!(
+            f.wait_newer(Duration::from_millis(1)),
+            BusWait::TimedOut
+        ));
+        bus.publish(Predictor { selected: vec![0], weights: vec![1.0] }, 1);
+        bus.close();
+        // the last version published before close is still delivered
+        let BusWait::Newer(v) = f.wait_newer(Duration::from_secs(1)) else {
+            panic!("expected the drained version");
+        };
+        assert_eq!(v.version, 1);
+        assert!(matches!(
+            f.wait_newer(Duration::from_millis(1)),
+            BusWait::Closed
+        ));
+        assert!(bus.is_closed());
+    }
+
+    #[test]
+    fn wait_for_model_skips_empty_models_and_errors_on_close() {
+        let bus = ModelBus::new();
+        let mut f = bus.follower();
+        bus.publish(Predictor { selected: vec![], weights: vec![] }, 0);
+        assert!(
+            f.wait_for_model(Duration::from_millis(5)).is_err(),
+            "an empty model is not servable"
+        );
+        bus.publish(Predictor { selected: vec![4], weights: vec![2.0] }, 1);
+        let v = f.wait_for_model(Duration::from_secs(1)).unwrap();
+        assert_eq!(v.predictor.selected, vec![4]);
+        bus.close();
+        let err = f.wait_for_model(Duration::from_secs(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("closed"), "{err:#}");
+    }
+
+    #[test]
+    fn wait_for_model_wakes_on_cross_thread_publish() {
+        let bus = ModelBus::new();
+        let mut f = bus.follower();
+        std::thread::scope(|scope| {
+            let bus_ref = &bus;
+            scope.spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                bus_ref.publish(
+                    Predictor { selected: vec![7], weights: vec![1.0] },
+                    1,
+                );
+            });
+            let v = f.wait_for_model(Duration::from_secs(5)).unwrap();
+            assert_eq!(v.predictor.selected, vec![7]);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "closed ModelBus")]
+    fn publish_after_close_panics() {
+        let bus = ModelBus::new();
+        bus.close();
+        bus.publish(Predictor { selected: vec![0], weights: vec![1.0] }, 1);
+    }
+
+    #[test]
+    fn publisher_publishes_every_round_and_closes_on_stop() {
+        let ds = dataset();
+        let cfg = SelectionConfig::builder().k(4).build();
+        let bus = ModelBus::new();
+        let mut publisher = PublishObserver::new(&bus);
+        let mut collector = bus.follower();
+        let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let mut seen = Vec::new();
+        use crate::select::StepOutcome;
+        // single-threaded drive: poll after every step so nothing coalesces
+        loop {
+            let t0 = Instant::now();
+            let out = session.step().unwrap();
+            match out {
+                StepOutcome::Selected(round) => {
+                    publisher.on_round(0, &round, t0.elapsed());
+                    publisher.flush(session.as_ref()).unwrap();
+                    seen.push(collector.poll().expect("one per round"));
+                }
+                StepOutcome::Done(reason) => {
+                    publisher.on_stop(reason);
+                    publisher.flush(session.as_ref()).unwrap();
+                    break;
+                }
+            }
+        }
+        // k rounds + the on-stop republish of the final model
+        assert_eq!(bus.published(), 5);
+        assert_eq!(publisher.published, 5);
+        assert!(bus.is_closed());
+        assert_eq!(seen.len(), 4);
+        for (i, v) in seen.iter().enumerate() {
+            assert_eq!(v.version, i as u64 + 1);
+            assert_eq!(v.rounds, i + 1);
+            assert_eq!(v.predictor.selected.len(), i + 1);
+        }
+        // the drained final version equals the finished model
+        let last = collector.poll().expect("final version");
+        assert_eq!(last.version, 5);
+        let r = session.finish().unwrap();
+        assert_eq!(last.predictor.selected, r.selected);
+        assert_eq!(last.predictor.weights, r.weights);
+    }
+
+    /// Publish-after-save: with taps ordered `[saver, publisher]`, at
+    /// the instant any version is visible on the bus, its round's
+    /// checkpoint is already durable on disk.
+    #[test]
+    fn bus_version_never_precedes_its_checkpoint() {
+        struct BusAudit<'b> {
+            follower: BusFollower,
+            dir: std::path::PathBuf,
+            checked: &'b mut usize,
+        }
+        impl Observer for BusAudit<'_> {}
+        impl StateObserver for BusAudit<'_> {
+            fn flush(
+                &mut self,
+                _session: &(dyn Session + '_),
+            ) -> anyhow::Result<()> {
+                while let Some(v) = self.follower.poll() {
+                    let path = checkpoint::checkpoint_path(&self.dir, v.rounds);
+                    anyhow::ensure!(
+                        path.exists(),
+                        "bus announced rounds={} before {} existed",
+                        v.rounds,
+                        path.display()
+                    );
+                    // and the durable model matches the published one
+                    let ckpt =
+                        crate::select::Checkpoint::load(&path).unwrap();
+                    assert_eq!(ckpt.selected, v.predictor.selected);
+                    *self.checked += 1;
+                }
+                Ok(())
+            }
+        }
+
+        let dir = std::env::temp_dir().join("greedy_rls_stream_ordering");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = dataset();
+        let cfg = SelectionConfig::builder().k(3).build();
+        let fp = checkpoint::fingerprint(&ds.x, &ds.y, &cfg);
+        let mut saver =
+            Autosaver::new(&dir, AutosavePolicy::default(), fp).unwrap();
+        let bus = ModelBus::new();
+        let mut publisher = PublishObserver::new(&bus);
+        let mut checked = 0usize;
+        let mut audit = BusAudit {
+            follower: bus.follower(),
+            dir: dir.clone(),
+            checked: &mut checked,
+        };
+        let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        drive_tapped(
+            session.as_mut(),
+            &mut NoopObserver,
+            // the audit tap runs *after* the publisher, so every version
+            // is examined at (or later than) the instant it became
+            // visible — existence of the checkpoint then proves ordering
+            &mut [&mut saver, &mut publisher, &mut audit],
+        )
+        .unwrap();
+        assert!(checked >= 3, "audit saw {checked} versions");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// With `--checkpoint-every 2`, the publisher must follow the same
+    /// cadence: versions land only at checkpointed rounds (and on
+    /// stop), and each one's checkpoint is already on disk.
+    #[test]
+    fn publish_cadence_follows_the_autosave_interval() {
+        struct CadenceAudit {
+            follower: BusFollower,
+            dir: std::path::PathBuf,
+            rounds_seen: Vec<usize>,
+        }
+        impl Observer for CadenceAudit {}
+        impl StateObserver for CadenceAudit {
+            fn flush(
+                &mut self,
+                _session: &(dyn Session + '_),
+            ) -> anyhow::Result<()> {
+                while let Some(v) = self.follower.poll() {
+                    let path = checkpoint::checkpoint_path(&self.dir, v.rounds);
+                    anyhow::ensure!(
+                        path.exists(),
+                        "version for rounds={} published without a durable \
+                         checkpoint",
+                        v.rounds
+                    );
+                    self.rounds_seen.push(v.rounds);
+                }
+                Ok(())
+            }
+        }
+
+        let dir = std::env::temp_dir().join("greedy_rls_stream_cadence");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = dataset();
+        let cfg = SelectionConfig::builder().k(5).build();
+        let fp = checkpoint::fingerprint(&ds.x, &ds.y, &cfg);
+        let policy = AutosavePolicy { every: 2, on_stop: true };
+        let mut saver = Autosaver::new(&dir, policy, fp).unwrap();
+        let bus = ModelBus::new();
+        let mut publisher = PublishObserver::with_policy(&bus, policy);
+        let mut audit = CadenceAudit {
+            follower: bus.follower(),
+            dir: dir.clone(),
+            rounds_seen: Vec::new(),
+        };
+        let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        drive_tapped(
+            session.as_mut(),
+            &mut NoopObserver,
+            &mut [&mut saver, &mut publisher, &mut audit],
+        )
+        .unwrap();
+        // rounds 2 and 4 on the interval, round 5 from the on-stop save
+        assert_eq!(audit.rounds_seen, vec![2, 4, 5]);
+        assert_eq!(publisher.published, 3);
+        assert!(bus.is_closed());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn train_serve_end_to_end_matches_plain_select() {
+        let ds = dataset();
+        let cfg = SelectionConfig::builder().k(4).build();
+        let reference = crate::select::run_to_completion(
+            GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap(),
+        )
+        .unwrap();
+
+        let session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let opts =
+            TrainServeOptions { workers: 2, batch: 16, queue_depth: 2 };
+        let report = train_serve(
+            session,
+            &mut NoopObserver,
+            None,
+            &ds.x,
+            &opts,
+        )
+        .unwrap();
+
+        // training unperturbed by serving
+        assert_eq!(report.result.selected, reference.selected);
+        assert_eq!(report.result.weights, reference.weights);
+        assert_eq!(report.stop, crate::select::StopReason::TargetReached);
+        // k rounds + the on-stop publish
+        assert_eq!(report.published, 5);
+        assert!(report.swaps >= 1, "at least the final model swaps in");
+        // the final pass is served by the final model, bit-for-bit
+        let direct = reference.predictor().predict_matrix(&ds.x);
+        assert_eq!(report.final_preds.len(), direct.len());
+        for (a, b) in report.final_preds.iter().zip(&direct) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(report.final_serve.requests, ds.x.cols());
+        assert!(!report.version_stats.is_empty());
+        let total: usize =
+            report.version_stats.iter().map(|v| v.batches).sum();
+        assert_eq!(
+            total,
+            report.live_batches + report.final_serve.batches
+        );
+    }
+
+    #[test]
+    fn train_serve_zero_budget_serves_nothing_but_terminates() {
+        let ds = dataset();
+        let cfg = SelectionConfig::builder()
+            .k(4)
+            .stop(StopPolicy::TimeBudget(Duration::ZERO))
+            .build();
+        let session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let opts =
+            TrainServeOptions { workers: 1, batch: 32, queue_depth: 1 };
+        let report =
+            train_serve(session, &mut NoopObserver, None, &ds.x, &opts)
+                .unwrap();
+        assert!(report.result.selected.is_empty());
+        // one on-stop publish of the empty model
+        assert_eq!(report.published, 1);
+        assert_eq!(report.swaps, 0, "empty models are never swapped in");
+        // the final pass ran against the empty model: all-zero scores
+        assert!(report.final_preds.iter().all(|&p| p == 0.0));
+    }
+
+    #[test]
+    fn train_serve_composes_with_checkpointing_and_resume() {
+        let dir = std::env::temp_dir().join("greedy_rls_stream_ts_resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = dataset();
+        let cfg = SelectionConfig::builder().k(5).build();
+        let fp = checkpoint::fingerprint(&ds.x, &ds.y, &cfg);
+
+        // uninterrupted reference (checkpointed, drive_checkpointed)
+        let mut ref_session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let ref_dir = dir.join("ref");
+        let mut ref_saver =
+            Autosaver::new(&ref_dir, AutosavePolicy::default(), fp).unwrap();
+        drive_checkpointed(
+            ref_session.as_mut(),
+            &mut NoopObserver,
+            &mut ref_saver,
+        )
+        .unwrap();
+        let reference = ref_session.finish().unwrap();
+
+        // train-serve with checkpointing, "killed" after round 2 by
+        // truncating the trail
+        let ts_dir = dir.join("ts");
+        let mut saver =
+            Autosaver::new(&ts_dir, AutosavePolicy::default(), fp).unwrap();
+        let session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let opts =
+            TrainServeOptions { workers: 2, batch: 16, queue_depth: 0 };
+        let report = train_serve(
+            session,
+            &mut NoopObserver,
+            Some(&mut saver),
+            &ds.x,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(report.result.selected, reference.selected);
+        for rounds in 3..=5 {
+            let f = checkpoint::checkpoint_path(&ts_dir, rounds);
+            assert!(f.exists(), "missing {f:?}");
+            std::fs::remove_file(f).unwrap();
+        }
+
+        // resume from the truncated trail and train-serve again: the
+        // final model must converge to the identical reference
+        let latest = checkpoint::latest_in_dir(&ts_dir).unwrap().unwrap();
+        let (resumed, _ckpt) = checkpoint::resume_from_path(
+            &GreedyRls, &ds.x, &ds.y, &cfg, &latest,
+        )
+        .unwrap();
+        let mut saver2 =
+            Autosaver::new(&ts_dir, AutosavePolicy::default(), fp).unwrap();
+        let report2 = train_serve(
+            resumed,
+            &mut NoopObserver,
+            Some(&mut saver2),
+            &ds.x,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(report2.result.selected, reference.selected);
+        assert_eq!(report2.result.weights, reference.weights);
+        for (a, b) in report2
+            .result
+            .rounds
+            .iter()
+            .zip(&reference.rounds)
+        {
+            assert_eq!(a.criterion.to_bits(), b.criterion.to_bits());
+        }
+        // resumed run publishes the 3 new rounds + the on-stop version
+        assert_eq!(report2.published, 4);
+
+        // and the final pass agrees with serve --follow over the trail
+        let followed = follow_final_pass(&ts_dir, &ds.x, 16).unwrap();
+        for (a, b) in report2.final_preds.iter().zip(&followed) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

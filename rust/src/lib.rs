@@ -23,50 +23,63 @@
 //! against the paper's Algorithm 1 (wrapper) and Algorithm 2 (low-rank
 //! updated LS-SVM) baselines.
 //!
+//! The full module map — data substrate → selection sessions →
+//! coordinator → runtime engines → the three serving paths — lives in
+//! the repo's `ARCHITECTURE.md`.
+//!
 //! ## Quickstart
 //!
 //! The primary API is the **stepwise session**: configure with the
 //! builder, `begin` a session, drive it round by round (or to
 //! completion), and `finish` into a result. Early stopping on the LOO
-//! plateau is one builder call:
+//! plateau is one builder call (this example runs under `cargo test` —
+//! every entry-point doctest in this crate does):
 //!
-//! ```no_run
+//! ```
 //! use greedy_rls::data::synthetic::two_gaussians;
 //! use greedy_rls::metrics::Loss;
 //! use greedy_rls::select::{
 //!     greedy::GreedyRls, SelectionConfig, SessionSelector, StepOutcome,
 //! };
 //!
-//! let ds = two_gaussians(1000, 200, 10, 1.0, 42);
+//! let ds = two_gaussians(200, 40, 6, 1.0, 42);
 //! let cfg = SelectionConfig::builder()
-//!     .k(25)
+//!     .k(12)
 //!     .lambda(1.0)
 //!     .loss(Loss::ZeroOne)
 //!     .plateau(3, 1e-3) // stop when the LOO criterion stops improving
 //!     .build();
-//! let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
-//! while let StepOutcome::Selected(round) = session.step().unwrap() {
+//! let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg)?;
+//! while let StepOutcome::Selected(round) = session.step()? {
 //!     println!("+feature {} (LOO {})", round.feature, round.criterion);
 //! }
-//! let result = session.finish().unwrap();
-//! println!("selected {:?}", result.selected);
+//! let result = session.finish()?;
+//! assert!(!result.selected.is_empty());
+//! assert!(result.selected.len() <= cfg.k);
+//! # anyhow::Ok(())
 //! ```
 //!
 //! The blocking one-shot call is still available (and is a thin shim over
 //! the session):
 //!
-//! ```no_run
+//! ```
 //! use greedy_rls::data::synthetic::two_gaussians;
 //! use greedy_rls::select::{greedy::GreedyRls, SelectionConfig, Selector};
 //!
-//! let ds = two_gaussians(1000, 200, 10, 1.0, 42);
-//! let cfg = SelectionConfig::builder().k(25).build();
-//! let result = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+//! let ds = two_gaussians(200, 40, 6, 1.0, 42);
+//! let cfg = SelectionConfig::builder().k(10).build();
+//! let result = GreedyRls.select(&ds.x, &ds.y, &cfg)?;
+//! assert_eq!(result.selected.len(), 10);
+//! # anyhow::Ok(())
 //! ```
 //!
 //! Sessions also support warm starts
-//! ([`select::SessionSelector::begin_from`]) and per-round observation
-//! ([`select::Observer`]) — see the `select::session` module docs.
+//! ([`select::SessionSelector::begin_from`]), per-round observation
+//! ([`select::Observer`], fan-out via [`select::Observers`]), durable
+//! checkpoints ([`select::checkpoint`]), and in-process streaming to a
+//! hot-swap server ([`coordinator::stream`]) — see the module docs.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cli;

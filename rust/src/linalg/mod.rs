@@ -56,11 +56,13 @@ impl Matrix {
         Matrix { rows: r, cols: c, data }
     }
 
+    /// Number of rows (features, in the crate's feature-major layout).
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns (examples, in the crate's feature-major layout).
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols

@@ -8,7 +8,9 @@ use anyhow::{bail, ensure, Context, Result};
 
 use greedy_rls::bench::time_once;
 use greedy_rls::cli::{self, Args, USAGE};
-use greedy_rls::coordinator::{self, cv, serve, EngineKind, ProgressObserver};
+use greedy_rls::coordinator::{
+    self, cv, serve, stream, EngineKind, ProgressObserver,
+};
 use greedy_rls::data::{registry, synthetic, Dataset};
 use greedy_rls::metrics::Loss;
 use greedy_rls::runtime::Runtime;
@@ -17,7 +19,7 @@ use greedy_rls::select::checkpoint::{
 };
 use greedy_rls::select::{
     drive, greedy::GreedyRls, lowrank::LowRankLsSvm, NoopObserver, Observer,
-    SelectionConfig, Selector, StopPolicy,
+    SelectionConfig, Selector, Session, StopPolicy,
 };
 
 fn main() {
@@ -44,6 +46,7 @@ fn run(args: &Args) -> Result<()> {
         Some("cv") => cmd_cv(args),
         Some("scaling") => cmd_scaling(args),
         Some("serve") => cmd_serve(args),
+        Some("train-serve") => cmd_train_serve(args),
         Some("datasets") => cmd_datasets(),
         Some("compare") => cmd_compare(args),
         Some("check") => cmd_check(args),
@@ -79,19 +82,57 @@ fn open_runtime_if(engine: EngineKind) -> Result<Option<Runtime>> {
     }
 }
 
-fn cmd_select(args: &Args) -> Result<()> {
-    let mut ds = load_dataset(args)?;
-    ds.standardize();
+/// Parse the shared selection-config flags (`--k/--lambda/--loss/--stop
+/// family/--threads`) — identical between `select` and `train-serve`.
+fn parse_selection_config(args: &Args) -> Result<SelectionConfig> {
     let stop = cli::parse_stop_policy(args)?;
-    let cfg = SelectionConfig::builder()
+    Ok(SelectionConfig::builder()
         .k(args.get_or("k", 10usize)?)
         .lambda(args.get_or("lambda", 1.0f64)?)
         .loss(args.get_or("loss", Loss::ZeroOne)?)
         .stop(stop)
         .threads(args.get_or("threads", 0usize)?)
-        .build();
-    let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
-    let rt = open_runtime_if(engine)?;
+        .build())
+}
+
+/// `--checkpoint-dir`/`--checkpoint-every`/`--resume`, parsed and
+/// validated exactly once per command (shared by `select` and
+/// `train-serve`; session construction and autosaver construction both
+/// read from this struct, so the two can't desynchronize).
+struct CheckpointFlags {
+    dir: Option<std::path::PathBuf>,
+    every: usize,
+    resume: bool,
+}
+
+fn parse_checkpoint_flags(args: &Args) -> Result<CheckpointFlags> {
+    let dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+    let every: usize = args.get_or("checkpoint-every", 1usize)?;
+    let resume = args.has("resume");
+    if dir.is_none() {
+        ensure!(
+            args.get("checkpoint-every").is_none(),
+            "--checkpoint-every requires --checkpoint-dir"
+        );
+        ensure!(!resume, "--resume requires --checkpoint-dir");
+    }
+    Ok(CheckpointFlags { dir, every, resume })
+}
+
+/// Session construction shared by `select` and `train-serve`: validate
+/// the `--warm-start`/`--resume` flag combination, then begin a fresh,
+/// warm-started, or checkpoint-resumed session on the chosen engine
+/// (printing the warm-start/resume banner). The second return is the
+/// checkpoint's fingerprint on resume, so the autosaver can reuse it
+/// instead of rehashing the O(mn) dataset.
+fn build_session<'a>(
+    args: &Args,
+    engine: EngineKind,
+    rt: Option<&Runtime>,
+    ds: &'a Dataset,
+    cfg: &SelectionConfig,
+    ckpt: &CheckpointFlags,
+) -> Result<(Box<dyn Session + 'a>, Option<checkpoint::Fingerprint>)> {
     let warm: Option<Vec<usize>> = match args.get_list("warm-start") {
         Some(items) => Some(
             items
@@ -101,23 +142,98 @@ fn cmd_select(args: &Args) -> Result<()> {
         ),
         None => None,
     };
-    let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
-    let ckpt_every: usize = args.get_or("checkpoint-every", 1usize)?;
-    let resume = args.has("resume");
-    if ckpt_dir.is_none() {
-        ensure!(
-            args.get("checkpoint-every").is_none(),
-            "--checkpoint-every requires --checkpoint-dir"
-        );
-        ensure!(!resume, "--resume requires --checkpoint-dir");
-    }
     ensure!(
-        !(resume && warm.is_some()),
+        !(ckpt.resume && warm.is_some()),
         "--resume and --warm-start are mutually exclusive (the checkpoint \
          already pins the prefix)"
     );
+    if let Some(prefix) = &warm {
+        println!("warm start from {} features: {prefix:?}", prefix.len());
+        let s = coordinator::begin_from_with_engine(
+            engine, rt, &ds.x, &ds.y, cfg, prefix,
+        )?;
+        return Ok((s, None));
+    }
+    let latest = if ckpt.resume {
+        checkpoint::latest_in_dir(
+            ckpt.dir.as_deref().expect("validated in parse_checkpoint_flags"),
+        )?
+    } else {
+        None
+    };
+    match latest {
+        Some(path) => {
+            let (s, ckpt) = coordinator::resume_with_engine(
+                engine, rt, &ds.x, &ds.y, cfg, &path,
+            )?;
+            println!(
+                "resumed from {} ({} rounds replayed, {:.3}s prior \
+                 selection time)",
+                path.display(),
+                ckpt.rounds.len(),
+                ckpt.elapsed.as_secs_f64()
+            );
+            Ok((s, Some(ckpt.fingerprint)))
+        }
+        None => {
+            if ckpt.resume {
+                println!(
+                    "no checkpoint in {}; starting fresh",
+                    ckpt.dir
+                        .as_deref()
+                        .expect("validated in parse_checkpoint_flags")
+                        .display()
+                );
+            }
+            let s = coordinator::begin_with_engine(
+                engine, rt, &ds.x, &ds.y, cfg,
+            )?;
+            Ok((s, None))
+        }
+    }
+}
+
+/// Build the autosaver for a checkpointed run (`None` without
+/// `--checkpoint-dir`), reusing a resumed checkpoint's (verified-equal)
+/// fingerprint when available instead of rehashing the O(mn) dataset.
+/// The single constructor keeps `select` and `train-serve` durability
+/// behavior in lockstep.
+fn make_autosaver(
+    ckpt: &CheckpointFlags,
+    resumed_fp: Option<checkpoint::Fingerprint>,
+    ds: &Dataset,
+    cfg: &SelectionConfig,
+) -> Result<Option<Autosaver>> {
+    let Some(dir) = &ckpt.dir else {
+        return Ok(None);
+    };
+    let fp = resumed_fp
+        .unwrap_or_else(|| checkpoint::fingerprint(&ds.x, &ds.y, cfg));
+    let policy = AutosavePolicy { every: ckpt.every, on_stop: true };
+    Ok(Some(Autosaver::new(dir, policy, fp)?))
+}
+
+/// Report where a checkpointed run left its trail.
+fn print_checkpoint_summary(saver: &Option<Autosaver>, ckpt: &CheckpointFlags) {
+    if let Some(s) = saver {
+        println!(
+            "checkpoints: {} written to {}",
+            s.saves,
+            ckpt.dir.as_deref().expect("saver implies dir").display()
+        );
+    }
+}
+
+/// Echo the problem header every training-style command prints.
+fn print_problem_header(
+    ds: &Dataset,
+    cfg: &SelectionConfig,
+    engine: EngineKind,
+    extra: &str,
+) {
     println!(
-        "dataset={} m={} n={} k={} lambda={} engine={engine:?} threads={}{}",
+        "dataset={} m={} n={} k={} lambda={} engine={engine:?} \
+         threads={}{}{extra}",
         ds.name,
         ds.n_examples(),
         ds.n_features(),
@@ -129,96 +245,15 @@ fn cmd_select(args: &Args) -> Result<()> {
             other => format!(" stop={other:?}"),
         }
     );
-    let t0 = std::time::Instant::now();
-    // set on resume so the autosaver reuses the (verified-equal)
-    // checkpoint fingerprint instead of rehashing the O(mn) dataset
-    let mut resumed_fp: Option<checkpoint::Fingerprint> = None;
-    let mut session = match &warm {
-        Some(prefix) => {
-            println!("warm start from {} features: {prefix:?}", prefix.len());
-            coordinator::begin_from_with_engine(
-                engine,
-                rt.as_ref(),
-                &ds.x,
-                &ds.y,
-                &cfg,
-                prefix,
-            )?
-        }
-        None => {
-            let latest = if resume {
-                checkpoint::latest_in_dir(
-                    ckpt_dir.as_deref().expect("checked above"),
-                )?
-            } else {
-                None
-            };
-            match latest {
-                Some(path) => {
-                    let (s, ckpt) = coordinator::resume_with_engine(
-                        engine,
-                        rt.as_ref(),
-                        &ds.x,
-                        &ds.y,
-                        &cfg,
-                        &path,
-                    )?;
-                    println!(
-                        "resumed from {} ({} rounds replayed, {:.3}s prior \
-                         selection time)",
-                        path.display(),
-                        ckpt.rounds.len(),
-                        ckpt.elapsed.as_secs_f64()
-                    );
-                    resumed_fp = Some(ckpt.fingerprint);
-                    s
-                }
-                None => {
-                    if resume {
-                        println!(
-                            "no checkpoint in {}; starting fresh",
-                            ckpt_dir.as_deref().expect("checked above").display()
-                        );
-                    }
-                    coordinator::begin_with_engine(
-                        engine,
-                        rt.as_ref(),
-                        &ds.x,
-                        &ds.y,
-                        &cfg,
-                    )?
-                }
-            }
-        }
-    };
-    let mut observer: Box<dyn Observer> = if args.has("progress") {
-        Box::new(ProgressObserver)
-    } else {
-        Box::new(NoopObserver)
-    };
-    let reason = match &ckpt_dir {
-        Some(dir) => {
-            let fp = resumed_fp.unwrap_or_else(|| {
-                checkpoint::fingerprint(&ds.x, &ds.y, &cfg)
-            });
-            let policy = AutosavePolicy { every: ckpt_every, on_stop: true };
-            let mut saver = Autosaver::new(dir, policy, fp)?;
-            let reason = drive_checkpointed(
-                session.as_mut(),
-                observer.as_mut(),
-                &mut saver,
-            )?;
-            println!(
-                "checkpoints: {} written to {}",
-                saver.saves,
-                dir.display()
-            );
-            reason
-        }
-        None => drive(session.as_mut(), observer.as_mut())?,
-    };
-    let r = session.finish()?;
-    let secs = t0.elapsed().as_secs_f64();
+}
+
+/// Print the selection outcome lines shared by `select` and
+/// `train-serve` (and diffed byte-for-byte by the kill/resume gauntlet).
+fn print_selection_outcome(
+    r: &greedy_rls::select::SelectionResult,
+    reason: greedy_rls::select::StopReason,
+    secs: f64,
+) {
     println!("selected ({}): {:?}", r.selected.len(), r.selected);
     println!(
         "criterion trajectory: {:?}",
@@ -229,8 +264,124 @@ fn cmd_select(args: &Args) -> Result<()> {
     );
     println!("stopped after {} rounds: {reason}", r.rounds.len());
     println!("selection time: {secs:.3}s");
+}
+
+fn cmd_select(args: &Args) -> Result<()> {
+    let mut ds = load_dataset(args)?;
+    ds.standardize();
+    let cfg = parse_selection_config(args)?;
+    let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
+    let rt = open_runtime_if(engine)?;
+    let ckpt = parse_checkpoint_flags(args)?;
+    print_problem_header(&ds, &cfg, engine, "");
+    let t0 = std::time::Instant::now();
+    let (mut session, resumed_fp) =
+        build_session(args, engine, rt.as_ref(), &ds, &cfg, &ckpt)?;
+    let mut observer: Box<dyn Observer> = if args.has("progress") {
+        Box::new(ProgressObserver)
+    } else {
+        Box::new(NoopObserver)
+    };
+    let mut saver = make_autosaver(&ckpt, resumed_fp, &ds, &cfg)?;
+    let reason = match saver.as_mut() {
+        Some(saver) => drive_checkpointed(
+            session.as_mut(),
+            observer.as_mut(),
+            saver,
+        )?,
+        None => drive(session.as_mut(), observer.as_mut())?,
+    };
+    print_checkpoint_summary(&saver, &ckpt);
+    let r = session.finish()?;
+    print_selection_outcome(&r, reason, t0.elapsed().as_secs_f64());
     if let Some(path) = args.get("out") {
         coordinator::save_model(&r.predictor(), std::path::Path::new(path))?;
+        println!("model written to {path}");
+    }
+    Ok(())
+}
+
+/// `train-serve` (also reachable as `serve --bus`): run selection on the
+/// calling thread and serve the dataset's examples concurrently on
+/// worker threads, hot-swapping in every committed round through the
+/// in-process [`stream::ModelBus`] — no filesystem on the publish path.
+/// Composes with `--checkpoint-dir`/`--resume` exactly like `select`
+/// (checkpoints are written *before* the bus announces a version).
+fn cmd_train_serve(args: &Args) -> Result<()> {
+    let mut ds = load_dataset(args)?;
+    ds.standardize();
+    let cfg = parse_selection_config(args)?;
+    let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
+    let rt = open_runtime_if(engine)?;
+    let ckpt = parse_checkpoint_flags(args)?;
+    let opts = stream::TrainServeOptions {
+        workers: args.get_or("serve-threads", 2usize)?,
+        batch: args.get_or("batch", 64usize)?,
+        queue_depth: args.get_or("queue-depth", 0usize)?,
+    };
+    ensure!(opts.batch > 0, "--batch must be positive");
+    print_problem_header(
+        &ds,
+        &cfg,
+        engine,
+        &format!(
+            " serve_threads={} batch={}",
+            greedy_rls::parallel::resolve(opts.workers),
+            opts.batch
+        ),
+    );
+    let t0 = std::time::Instant::now();
+    let (session, resumed_fp) =
+        build_session(args, engine, rt.as_ref(), &ds, &cfg, &ckpt)?;
+    let mut observer: Box<dyn Observer> = if args.has("progress") {
+        Box::new(ProgressObserver)
+    } else {
+        Box::new(NoopObserver)
+    };
+    let mut saver = make_autosaver(&ckpt, resumed_fp, &ds, &cfg)?;
+    // session setup (incl. any checkpoint replay) counts toward the
+    // selection time, like `select`; the serving shutdown and final
+    // pass do not — report.train_seconds covers the drive itself
+    let setup_secs = t0.elapsed().as_secs_f64();
+    let report = stream::train_serve(
+        session,
+        observer.as_mut(),
+        saver.as_mut(),
+        &ds.x,
+        &opts,
+    )?;
+    print_checkpoint_summary(&saver, &ckpt);
+    print_selection_outcome(
+        &report.result,
+        report.stop,
+        setup_secs + report.train_seconds,
+    );
+    println!(
+        "published={} versions, swaps={}, live_batches={}",
+        report.published, report.swaps, report.live_batches
+    );
+    println!("version\trounds\tbatches\tp50_s\tp99_s");
+    for v in &report.version_stats {
+        println!(
+            "{}\t{}\t{}\t{:.6}\t{:.6}",
+            v.version, v.rounds, v.batches, v.p50_s, v.p99_s
+        );
+    }
+    let acc = greedy_rls::metrics::accuracy(&ds.y, &report.final_preds);
+    println!(
+        "final pass: accuracy={acc:.4} batches={} mean={:.6}s p50={:.6}s \
+         p99={:.6}s throughput={:.0}/s",
+        report.final_serve.batches,
+        report.final_serve.mean_batch_s,
+        report.final_serve.p50_batch_s,
+        report.final_serve.p99_batch_s,
+        report.final_serve.throughput
+    );
+    if let Some(path) = args.get("out") {
+        coordinator::save_model(
+            &report.result.predictor(),
+            std::path::Path::new(path),
+        )?;
         println!("model written to {path}");
     }
     Ok(())
@@ -323,6 +474,16 @@ fn cmd_scaling(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("bus") {
+        // `serve --bus` is the train-serve pipeline: the bus only exists
+        // in-process, so serving from it means owning the trainer too
+        ensure!(
+            args.get("model").is_none() && args.get("follow").is_none(),
+            "--bus trains in-process and serves from the in-memory bus; \
+             it takes the train-serve flags, not --model/--follow"
+        );
+        return cmd_train_serve(args);
+    }
     if args.get("follow").is_some() {
         return cmd_serve_follow(args);
     }

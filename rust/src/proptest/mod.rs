@@ -5,12 +5,15 @@
 //! with failure reporting including the failing seed, plus generators for
 //! the problem shapes used throughout (random matrices, labels, λ grids).
 //!
-//! Usage (`no_run`: rustdoc test binaries don't inherit the xla rpath
-//! this workspace links with, so doctests compile but are not executed):
-//! ```no_run
+//! Usage (runs under `cargo test` like every doctest in this crate —
+//! the default build is pure Rust and links nothing external; for
+//! `--features pjrt` test runs the xla shared library must be on the
+//! loader path, since rustdoc test binaries don't inherit the
+//! workspace rpath):
+//! ```
 //! use greedy_rls::proptest::forall_seeds;
 //! forall_seeds(64, |seed| {
-//!     assert!(seed == seed); // property under test
+//!     assert!(seed < 64); // property under test
 //! });
 //! ```
 
@@ -35,10 +38,13 @@ pub fn forall_seeds<F: Fn(u64) + std::panic::RefUnwindSafe>(cases: u64, prop: F)
 
 /// Problem-shape generator shared by equivalence/property tests.
 pub struct Gen {
+    /// Underlying deterministic stream (exposed so tests can draw extra
+    /// values — labels, permutations — from the same seed).
     pub rng: Pcg64,
 }
 
 impl Gen {
+    /// Generator on a fixed stream derived from `seed`.
     pub fn new(seed: u64) -> Self {
         Gen { rng: Pcg64::new(seed, 101) }
     }

@@ -37,10 +37,24 @@ impl Predictor {
 
     /// Score every column of a feature-major matrix (n × m).
     pub fn predict_matrix(&self, x: &Matrix) -> Vec<f64> {
-        let m = x.cols();
-        let mut out = vec![0.0; m];
+        self.predict_range(x, 0, x.cols())
+    }
+
+    /// Score columns `start..end` of a feature-major matrix without
+    /// materializing a sub-matrix — the serving hot loops batch over
+    /// column ranges, and copying all n rows per batch to read the ≤ k
+    /// selected ones would dominate the batch cost. Accumulation order
+    /// per column is identical to [`Predictor::predict_matrix`], so a
+    /// range-batched pass is bit-identical to a whole-matrix pass.
+    pub fn predict_range(
+        &self,
+        x: &Matrix,
+        start: usize,
+        end: usize,
+    ) -> Vec<f64> {
+        let mut out = vec![0.0; end - start];
         for (&i, &w) in self.selected.iter().zip(&self.weights) {
-            let row = x.row(i);
+            let row = &x.row(i)[start..end];
             for (o, &v) in out.iter_mut().zip(row) {
                 *o += w * v;
             }

@@ -32,18 +32,22 @@ impl fmt::Display for Unavailable {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Always fails: the stub has no PJRT backend.
     pub fn cpu() -> Result<PjRtClient, Unavailable> {
         Err(Unavailable)
     }
 
+    /// Reports the stub platform name.
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Always 0 devices.
     pub fn device_count(&self) -> usize {
         0
     }
 
+    /// Always fails: nothing to compile against.
     pub fn compile(
         &self,
         _comp: &XlaComputation,
@@ -56,6 +60,7 @@ impl PjRtClient {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Always fails: no executable can exist.
     pub fn execute<T>(
         &self,
         _args: &[T],
@@ -68,6 +73,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Always fails: no buffer can exist.
     pub fn to_literal_sync(&self) -> Result<Literal, Unavailable> {
         Err(Unavailable)
     }
@@ -79,22 +85,27 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// Empty literal (real marshalling needs the xla crate).
     pub fn vec1<T>(_data: &[T]) -> Literal {
         Literal
     }
 
+    /// Empty literal (real marshalling needs the xla crate).
     pub fn scalar<T>(_v: T) -> Literal {
         Literal
     }
 
+    /// Always fails on the stub literal.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Unavailable> {
         Err(Unavailable)
     }
 
+    /// Always fails on the stub literal.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
         Err(Unavailable)
     }
 
+    /// Always fails on the stub literal.
     pub fn to_tuple(self) -> Result<Vec<Literal>, Unavailable> {
         Err(Unavailable)
     }
@@ -104,6 +115,7 @@ impl Literal {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Always fails: HLO parsing needs the xla crate.
     pub fn from_text_file<P: AsRef<Path>>(
         _path: P,
     ) -> Result<HloModuleProto, Unavailable> {
@@ -115,6 +127,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Trivial conversion so call sites typecheck.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }

@@ -48,12 +48,13 @@
 //! [`Session::state`] whenever the policy fires.
 
 use std::path::{Path, PathBuf};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, ensure, Context};
 
 use super::session::{
-    Observer, Session, SessionSelector, StepOutcome, StopReason,
+    drive_tapped, Observer, Session, SessionSelector, StateObserver,
+    StopReason,
 };
 use super::{Round, SelectionConfig, StopPolicy};
 use crate::data::fingerprint::{fingerprint_xy, Fnv64};
@@ -609,15 +610,68 @@ impl Default for AutosavePolicy {
     }
 }
 
+/// The [`AutosavePolicy`] firing rule as a reusable counter state
+/// machine: feed it rounds and the stop notification, ask whether the
+/// action is due, and acknowledge when the action actually fired.
+///
+/// [`Autosaver`] runs one of these for checkpoint writes and the bus
+/// [`crate::coordinator::stream::PublishObserver`] runs another for
+/// model publishes — with equal policies the two fire in identical
+/// flush cycles **by construction**, which is what makes the streaming
+/// pipeline's publish-after-save ordering hold at any checkpoint
+/// interval (and only then).
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyTicker {
+    policy: AutosavePolicy,
+    since_fire: usize,
+    due: bool,
+}
+
+impl PolicyTicker {
+    /// An idle ticker for `policy`.
+    pub fn new(policy: AutosavePolicy) -> PolicyTicker {
+        PolicyTicker { policy, since_fire: 0, due: false }
+    }
+
+    /// The policy this ticker runs.
+    pub fn policy(&self) -> AutosavePolicy {
+        self.policy
+    }
+
+    /// Feed one committed round.
+    pub fn on_round(&mut self) {
+        self.since_fire += 1;
+        if self.policy.every > 0 && self.since_fire >= self.policy.every {
+            self.due = true;
+        }
+    }
+
+    /// Feed the stop notification.
+    pub fn on_stop(&mut self) {
+        if self.policy.on_stop {
+            self.due = true;
+        }
+    }
+
+    /// Consume the due flag: `true` means the action should fire now.
+    pub fn take_due(&mut self) -> bool {
+        std::mem::take(&mut self.due)
+    }
+
+    /// Acknowledge that the action actually fired (restarts the
+    /// interval counter).
+    pub fn fired(&mut self) {
+        self.since_fire = 0;
+    }
+}
+
 /// [`Observer`]-driven autosave: the observer callbacks run the policy
 /// state machine, and [`drive_checkpointed`] (which owns the session
 /// borrow) snapshots and writes whenever the policy marks a save due.
 pub struct Autosaver {
     dir: PathBuf,
-    policy: AutosavePolicy,
+    ticker: PolicyTicker,
     fingerprint: Fingerprint,
-    since_save: usize,
-    due: bool,
     /// Dedupe key of the last write: round count + stop reason. The stop
     /// reason is part of the key so the final on-stop save is *not*
     /// deduped against the same round's mid-run save — the trail's last
@@ -639,13 +693,18 @@ impl Autosaver {
             .with_context(|| format!("creating {}", dir.display()))?;
         Ok(Autosaver {
             dir,
-            policy,
+            ticker: PolicyTicker::new(policy),
             fingerprint,
-            since_save: 0,
-            due: false,
             last_saved: None,
             saves: 0,
         })
+    }
+
+    /// The save policy this autosaver runs (read by
+    /// [`crate::coordinator::stream::train_serve`] to give the bus
+    /// publisher the identical policy).
+    pub fn policy(&self) -> AutosavePolicy {
+        self.ticker.policy()
     }
 
     /// Snapshot `session` and write `ckpt-<rounds>.ckpt` now (deduped: a
@@ -664,7 +723,7 @@ impl Autosaver {
         let path = checkpoint_path(&self.dir, key.0);
         ckpt.save_atomic(&path)?;
         self.last_saved = Some(key);
-        self.since_save = 0;
+        self.ticker.fired();
         self.saves += 1;
         Ok(Some(path))
     }
@@ -674,26 +733,28 @@ impl Autosaver {
         &mut self,
         session: &(dyn Session + '_),
     ) -> anyhow::Result<Option<PathBuf>> {
-        if !self.due {
+        if !self.ticker.take_due() {
             return Ok(None);
         }
-        self.due = false;
         self.save_now(session)
     }
 }
 
 impl Observer for Autosaver {
     fn on_round(&mut self, _index: usize, _round: &Round, _elapsed: Duration) {
-        self.since_save += 1;
-        if self.policy.every > 0 && self.since_save >= self.policy.every {
-            self.due = true;
-        }
+        self.ticker.on_round();
     }
 
     fn on_stop(&mut self, _reason: StopReason) {
-        if self.policy.on_stop {
-            self.due = true;
-        }
+        self.ticker.on_stop();
+    }
+}
+
+impl StateObserver for Autosaver {
+    /// Delegates to [`Autosaver::flush_due`] — write `ckpt-<rounds>.ckpt`
+    /// if the policy marked a save due since the last write.
+    fn flush(&mut self, session: &(dyn Session + '_)) -> anyhow::Result<()> {
+        self.flush_due(session).map(|_| ())
     }
 }
 
@@ -702,37 +763,24 @@ impl Observer for Autosaver {
 /// writes a checkpoint whenever its policy fired (every N rounds, on
 /// stop). Returns the stop reason; the final checkpoint — written for any
 /// stop when the policy's `on_stop` is set — records it.
+///
+/// A thin wrapper over [`drive_tapped`] with the saver as the only tap;
+/// to compose autosaving with other state taps (e.g. the model-publishing
+/// [`crate::coordinator::stream::PublishObserver`]) call `drive_tapped`
+/// directly — tap order is the publish-after-save contract.
 pub fn drive_checkpointed(
     session: &mut (dyn Session + '_),
     observer: &mut dyn Observer,
     saver: &mut Autosaver,
 ) -> anyhow::Result<StopReason> {
-    let mut index = session.rounds_done();
-    loop {
-        let t0 = Instant::now();
-        match session.step()? {
-            StepOutcome::Selected(round) => {
-                let dt = t0.elapsed();
-                observer.on_round(index, &round, dt);
-                saver.on_round(index, &round, dt);
-                saver.flush_due(&*session)?;
-                index += 1;
-            }
-            StepOutcome::Done(reason) => {
-                observer.on_stop(reason);
-                saver.on_stop(reason);
-                saver.flush_due(&*session)?;
-                return Ok(reason);
-            }
-        }
-    }
+    drive_tapped(session, observer, &mut [saver])
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::select::greedy::GreedyRls;
-    use crate::select::{NoopObserver, Selector};
+    use crate::select::{NoopObserver, Selector, StepOutcome};
 
     fn dataset() -> crate::data::Dataset {
         crate::data::synthetic::two_gaussians(40, 12, 4, 1.5, 21)

@@ -46,11 +46,12 @@ pub mod wrapper;
 
 pub use checkpoint::{
     drive_checkpointed, resume_from_path, AutosavePolicy, Autosaver,
-    Checkpoint, Fingerprint,
+    Checkpoint, Fingerprint, PolicyTicker,
 };
 pub use session::{
-    drive, run_to_completion, NoopObserver, Observer, Session, SessionSelector,
-    SessionState, StepOutcome, StopPolicy, StopReason,
+    drive, drive_tapped, run_to_completion, NoopObserver, Observer,
+    Observers, Session, SessionSelector, SessionState, StateObserver,
+    StepOutcome, StopPolicy, StopReason,
 };
 
 use crate::linalg::Matrix;

@@ -301,6 +301,97 @@ pub struct NoopObserver;
 
 impl Observer for NoopObserver {}
 
+/// Fan-out combinator: forwards every [`Observer`] callback to each
+/// member, in insertion order.
+///
+/// This is how independent per-round concerns — progress logging, round
+/// timing, checkpoint autosaving, bus publishing — share one session
+/// drive without every driver growing a parameter per concern:
+///
+/// ```
+/// use greedy_rls::data::synthetic::two_gaussians;
+/// use greedy_rls::select::{
+///     drive, greedy::GreedyRls, NoopObserver, Observers, Round,
+///     SelectionConfig, SessionSelector,
+/// };
+///
+/// struct Count(usize);
+/// impl greedy_rls::select::Observer for Count {
+///     fn on_round(&mut self, _i: usize, _r: &Round, _e: std::time::Duration) {
+///         self.0 += 1;
+///     }
+/// }
+///
+/// let ds = two_gaussians(40, 8, 2, 1.0, 1);
+/// let cfg = SelectionConfig::builder().k(3).build();
+/// let mut session = GreedyRls.begin(&ds.x, &ds.y, &cfg)?;
+/// let (mut count, mut noop) = (Count(0), NoopObserver);
+/// let mut fan = Observers::new().with(&mut count).with(&mut noop);
+/// drive(session.as_mut(), &mut fan)?;
+/// assert_eq!(count.0, 3);
+/// # anyhow::Ok(())
+/// ```
+#[derive(Default)]
+pub struct Observers<'a> {
+    members: Vec<&'a mut dyn Observer>,
+}
+
+impl<'a> Observers<'a> {
+    /// An empty fan-out (equivalent to [`NoopObserver`]).
+    pub fn new() -> Observers<'a> {
+        Observers { members: Vec::new() }
+    }
+
+    /// Builder-style append; callbacks reach members in append order.
+    pub fn with(mut self, observer: &'a mut dyn Observer) -> Observers<'a> {
+        self.members.push(observer);
+        self
+    }
+
+    /// Append a member observer.
+    pub fn push(&mut self, observer: &'a mut dyn Observer) {
+        self.members.push(observer);
+    }
+}
+
+impl Observer for Observers<'_> {
+    fn on_round(&mut self, index: usize, round: &Round, elapsed: Duration) {
+        for obs in &mut self.members {
+            obs.on_round(index, round, elapsed);
+        }
+    }
+
+    fn on_stop(&mut self, reason: StopReason) {
+        for obs in &mut self.members {
+            obs.on_stop(reason);
+        }
+    }
+}
+
+/// An [`Observer`] that additionally needs the live [`Session`] after
+/// each committed round — the shape shared by checkpoint autosaving
+/// (snapshot [`Session::state`] to disk,
+/// [`super::checkpoint::Autosaver`]) and in-process model publishing
+/// (snapshot it onto a bus,
+/// [`crate::coordinator::stream::PublishObserver`]). The plain
+/// [`Observer`] callbacks can't serve this purpose: they only see the
+/// [`Round`], never the session, because [`drive`] holds the session
+/// borrow.
+///
+/// [`drive_tapped`] calls every tap's `Observer` callbacks first, then
+/// `flush` for each tap **in slice order** — which makes cross-tap
+/// ordering a caller-visible contract. Passing
+/// `[&mut autosaver, &mut publisher]` guarantees a round's checkpoint is
+/// durable on disk before the bus announces its version: the
+/// publish-after-save ordering [`crate::coordinator::stream`] documents
+/// and the kill/resume gauntlet relies on.
+pub trait StateObserver: Observer {
+    /// React to the session's new state (write a checkpoint, publish a
+    /// model version, …). Called after each committed round and once
+    /// after the stop notification.
+    fn flush(&mut self, session: &(dyn Session + '_)) -> anyhow::Result<()>;
+}
+
 /// Drive a session until it stops, reporting each round to `observer`.
 /// Returns the stop reason; call [`Session::finish`] afterwards for the
 /// result.
@@ -308,16 +399,44 @@ pub fn drive(
     session: &mut (dyn Session + '_),
     observer: &mut dyn Observer,
 ) -> anyhow::Result<StopReason> {
+    drive_tapped(session, observer, &mut [])
+}
+
+/// [`drive`] with state taps: after every committed round (and once on
+/// stop) each [`StateObserver`] in `taps` sees the `Observer` callbacks
+/// and is then `flush`ed with the session borrow, in slice order. This
+/// is the one driver behind checkpointed runs
+/// ([`super::checkpoint::drive_checkpointed`]) and the streaming
+/// train-serve pipeline ([`crate::coordinator::stream::train_serve`]),
+/// which composes both taps.
+pub fn drive_tapped(
+    session: &mut (dyn Session + '_),
+    observer: &mut dyn Observer,
+    taps: &mut [&mut dyn StateObserver],
+) -> anyhow::Result<StopReason> {
     let mut index = session.rounds_done();
     loop {
         let t0 = Instant::now();
         match session.step()? {
             StepOutcome::Selected(round) => {
-                observer.on_round(index, &round, t0.elapsed());
+                let dt = t0.elapsed();
+                observer.on_round(index, &round, dt);
+                for tap in taps.iter_mut() {
+                    tap.on_round(index, &round, dt);
+                }
+                for tap in taps.iter_mut() {
+                    tap.flush(&*session)?;
+                }
                 index += 1;
             }
             StepOutcome::Done(reason) => {
                 observer.on_stop(reason);
+                for tap in taps.iter_mut() {
+                    tap.on_stop(reason);
+                }
+                for tap in taps.iter_mut() {
+                    tap.flush(&*session)?;
+                }
                 return Ok(reason);
             }
         }
@@ -846,6 +965,69 @@ mod tests {
         assert_eq!(st.weights.len(), 1);
         assert_eq!(st.criterion_curve().len(), 1);
         assert_eq!(st.stop_reason, None);
+    }
+
+    #[test]
+    fn observers_fan_out_in_insertion_order() {
+        struct Tag(&'static str, std::rc::Rc<std::cell::RefCell<Vec<String>>>);
+        impl Observer for Tag {
+            fn on_round(&mut self, i: usize, _r: &Round, _e: Duration) {
+                self.1.borrow_mut().push(format!("{}:{i}", self.0));
+            }
+            fn on_stop(&mut self, _reason: StopReason) {
+                self.1.borrow_mut().push(format!("{}:stop", self.0));
+            }
+        }
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let ds = overfit_dataset(14);
+        let cfg = SelectionConfig::builder().k(2).build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let (mut a, mut b) = (Tag("a", log.clone()), Tag("b", log.clone()));
+        let mut fan = Observers::new().with(&mut a).with(&mut b);
+        drive(s.as_mut(), &mut fan).unwrap();
+        assert_eq!(
+            *log.borrow(),
+            vec!["a:0", "b:0", "a:1", "b:1", "a:stop", "b:stop"]
+        );
+    }
+
+    /// `drive_tapped` flushes taps in slice order after each round — the
+    /// ordering contract publish-after-save is built on.
+    #[test]
+    fn drive_tapped_flushes_in_slice_order() {
+        struct Tap(&'static str, std::rc::Rc<std::cell::RefCell<Vec<String>>>);
+        impl Observer for Tap {}
+        impl StateObserver for Tap {
+            fn flush(
+                &mut self,
+                session: &(dyn Session + '_),
+            ) -> anyhow::Result<()> {
+                self.1
+                    .borrow_mut()
+                    .push(format!("{}@{}", self.0, session.rounds_done()));
+                Ok(())
+            }
+        }
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let ds = overfit_dataset(15);
+        let cfg = SelectionConfig::builder().k(2).build();
+        let mut s = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+        let (mut save, mut publish) =
+            (Tap("save", log.clone()), Tap("publish", log.clone()));
+        drive_tapped(
+            s.as_mut(),
+            &mut NoopObserver,
+            &mut [&mut save, &mut publish],
+        )
+        .unwrap();
+        // two rounds + the on-stop flush, each save-before-publish
+        assert_eq!(
+            *log.borrow(),
+            vec![
+                "save@1", "publish@1", "save@2", "publish@2", "save@2",
+                "publish@2"
+            ]
+        );
     }
 
     #[test]

@@ -187,9 +187,12 @@ impl Selector for Wrapper {
 
 /// Convenience constructors.
 impl Wrapper {
+    /// Wrapper with LOO by literal retraining (the paper's slowest tier).
     pub fn brute_force() -> Self {
         Wrapper { mode: LooMode::BruteForce }
     }
+
+    /// Wrapper with the eq. 7/8 LOO shortcut.
     pub fn shortcut() -> Self {
         Wrapper { mode: LooMode::Shortcut }
     }

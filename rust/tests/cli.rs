@@ -541,6 +541,127 @@ fn serve_follow_serves_the_latest_checkpoint() {
     let _ = std::fs::remove_dir_all(&empty);
 }
 
+/// `train-serve` trains exactly like `select` (identical selected set
+/// and criterion trajectory) while publishing ≥ k versions over the
+/// in-process bus and serving a final deterministic pass.
+#[test]
+fn train_serve_matches_select_and_publishes_every_round() {
+    let problem = ["--synthetic", "120,30", "--k", "5", "--lambda", "1.0"];
+    let (ok, reference, stderr) =
+        run(&[&["select"][..], &problem[..]].concat());
+    assert!(ok, "stderr: {stderr}");
+    let ref_sel = extract_line(&reference, "selected (5)");
+    let ref_curve = extract_line(&reference, "criterion trajectory");
+
+    let (ok, stdout, stderr) = run(&[
+        &["train-serve"][..],
+        &problem[..],
+        &["--serve-threads", "2", "--batch", "16"][..],
+    ]
+    .concat());
+    assert!(ok, "stderr: {stderr}");
+    assert_eq!(ref_sel, extract_line(&stdout, "selected (5)"));
+    assert_eq!(ref_curve, extract_line(&stdout, "criterion trajectory"));
+    let published_line = extract_line(&stdout, "published=");
+    let published: u64 = published_line
+        .trim_start_matches("published=")
+        .split(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .expect("published count");
+    assert!(published >= 5, "expected ≥ 5 versions: {published_line}");
+    assert!(stdout.contains("final pass: accuracy="), "{stdout}");
+    assert!(stdout.contains("version\trounds"), "{stdout}");
+}
+
+/// `serve --bus` is the train-serve pipeline; `--model`/`--follow`
+/// conflict with it.
+#[test]
+fn serve_bus_aliases_train_serve() {
+    let (ok, stdout, stderr) = run(&[
+        "serve",
+        "--bus",
+        "--synthetic",
+        "100,20",
+        "--k",
+        "4",
+        "--batch",
+        "32",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("published="), "{stdout}");
+    assert!(stdout.contains("selected (4)"), "{stdout}");
+
+    let (ok, _, stderr) = run(&[
+        "serve",
+        "--bus",
+        "--model",
+        "whatever.txt",
+        "--synthetic",
+        "100,20",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--bus"), "{stderr}");
+}
+
+/// The CLI half of the train-serve kill/resume contract: a truncated
+/// checkpoint trail resumed with `--resume` converges to the identical
+/// selected set and criterion trajectory (CI's gauntlet runs the real
+/// SIGKILL variant).
+#[test]
+fn train_serve_checkpoint_resume_reproduces_output() {
+    let dir = std::env::temp_dir().join("greedy_rls_cli_ts_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let problem = ["--synthetic", "120,30", "--k", "6", "--lambda", "1.0"];
+
+    let base = [
+        &["train-serve"][..],
+        &problem[..],
+        &["--serve-threads", "2", "--batch", "16"][..],
+        &["--checkpoint-dir", dir.to_str().unwrap()][..],
+        &["--checkpoint-every", "1"][..],
+    ]
+    .concat();
+    let (ok, reference, stderr) = run(&base);
+    assert!(ok, "stderr: {stderr}");
+    let ref_sel = extract_line(&reference, "selected (6)");
+    let ref_curve = extract_line(&reference, "criterion trajectory");
+
+    // emulate a SIGKILL after round 3
+    for rounds in 4..=6 {
+        let f = dir.join(format!("ckpt-{rounds:08}.ckpt"));
+        assert!(f.exists(), "expected {f:?}");
+        std::fs::remove_file(f).unwrap();
+    }
+    let (ok, resumed, stderr) =
+        run(&[&base[..], &["--resume"][..]].concat());
+    assert!(ok, "stderr: {stderr}");
+    assert!(resumed.contains("resumed from"), "{resumed}");
+    assert_eq!(ref_sel, extract_line(&resumed, "selected (6)"));
+    assert_eq!(ref_curve, extract_line(&resumed, "criterion trajectory"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn train_serve_rejects_bad_flags() {
+    let (ok, _, stderr) = run(&[
+        "train-serve",
+        "--synthetic",
+        "60,20",
+        "--k",
+        "3",
+        "--batch",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--batch"), "{stderr}");
+    let (ok, _, stderr) =
+        run(&["train-serve", "--synthetic", "60,20", "--k", "3", "--resume"]);
+    assert!(!ok);
+    assert!(stderr.contains("--checkpoint-dir"), "{stderr}");
+}
+
 #[test]
 fn cv_checkpoint_dir_resumes_folds() {
     let dir = std::env::temp_dir().join("greedy_rls_cli_cv_ckpt");

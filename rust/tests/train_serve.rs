@@ -1,0 +1,362 @@
+//! Integration tests for the streaming serve pipeline (`coordinator::
+//! stream`): end-to-end train-serve vs `serve --follow` parity,
+//! kill/resume convergence, and the concurrent-swap stress test run
+//! through **both** follower paths (checkpoint trail and in-process
+//! bus) against one shared consistency assertion.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use greedy_rls::coordinator::serve::{
+    serve_hotswap, CheckpointFollower, HotSwapServer, ModelSource,
+};
+use greedy_rls::coordinator::stream::{
+    self, BusWait, ModelBus, TrainServeOptions,
+};
+use greedy_rls::data::synthetic::two_gaussians;
+use greedy_rls::rls::Predictor;
+use greedy_rls::select::checkpoint::{
+    self, fingerprint, AutosavePolicy, Autosaver, Checkpoint,
+};
+use greedy_rls::select::greedy::GreedyRls;
+use greedy_rls::select::{
+    NoopObserver, SelectionConfig, SessionSelector, StopReason,
+};
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Acceptance: selection to k rounds publishes ≥ k versions over the
+/// bus, and the final pass answers match `serve --follow` over the same
+/// trail bit-for-bit.
+#[test]
+fn train_serve_publishes_every_round_and_matches_follow() {
+    let dir = temp_dir("greedy_rls_ts_parity");
+    let ds = two_gaussians(150, 40, 8, 1.5, 7);
+    let k = 6;
+    let cfg = SelectionConfig::builder().k(k).lambda(1.0).build();
+    let fp = fingerprint(&ds.x, &ds.y, &cfg);
+
+    let mut saver =
+        Autosaver::new(&dir, AutosavePolicy::default(), fp).unwrap();
+    let session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+    let opts = TrainServeOptions { workers: 3, batch: 32, queue_depth: 0 };
+    let report = stream::train_serve(
+        session,
+        &mut NoopObserver,
+        Some(&mut saver),
+        &ds.x,
+        &opts,
+    )
+    .unwrap();
+
+    assert_eq!(report.stop, StopReason::TargetReached);
+    assert_eq!(report.result.selected.len(), k);
+    assert!(
+        report.published >= k as u64,
+        "k rounds must publish ≥ k versions, got {}",
+        report.published
+    );
+
+    // serve --follow over the finished trail: every batch is answered by
+    // the final model, exactly like train-serve's final pass
+    let followed = stream::follow_final_pass(&dir, &ds.x, 32).unwrap();
+    assert_eq!(report.final_preds.len(), followed.len());
+    for (i, (a, b)) in
+        report.final_preds.iter().zip(&followed).enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "prediction {i} differs");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: a run killed mid-flight (emulated by truncating the
+/// checkpoint trail — CI's gauntlet does the real SIGKILL) and resumed
+/// with the same config converges to the identical final model.
+#[test]
+fn train_serve_resume_converges_to_identical_model() {
+    let dir = temp_dir("greedy_rls_ts_resume_conv");
+    let ds = two_gaussians(120, 30, 6, 1.5, 11);
+    let cfg = SelectionConfig::builder().k(6).lambda(1.0).build();
+    let fp = fingerprint(&ds.x, &ds.y, &cfg);
+
+    // uninterrupted reference (plain select — serving must not perturb)
+    let reference = greedy_rls::select::run_to_completion(
+        GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap(),
+    )
+    .unwrap();
+
+    let mut saver =
+        Autosaver::new(&dir, AutosavePolicy::default(), fp).unwrap();
+    let session = GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap();
+    let opts = TrainServeOptions { workers: 2, batch: 16, queue_depth: 0 };
+    let first = stream::train_serve(
+        session,
+        &mut NoopObserver,
+        Some(&mut saver),
+        &ds.x,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(first.result.selected, reference.selected);
+
+    // "kill" after round 2
+    for rounds in 3..=6 {
+        std::fs::remove_file(checkpoint::checkpoint_path(&dir, rounds))
+            .unwrap();
+    }
+    let latest = checkpoint::latest_in_dir(&dir).unwrap().unwrap();
+    let (resumed, ckpt) =
+        checkpoint::resume_from_path(&GreedyRls, &ds.x, &ds.y, &cfg, &latest)
+            .unwrap();
+    assert_eq!(ckpt.rounds.len(), 2);
+    let mut saver2 =
+        Autosaver::new(&dir, AutosavePolicy::default(), fp).unwrap();
+    let second = stream::train_serve(
+        resumed,
+        &mut NoopObserver,
+        Some(&mut saver2),
+        &ds.x,
+        &opts,
+    )
+    .unwrap();
+
+    assert_eq!(second.result.selected, reference.selected);
+    assert_eq!(second.result.weights, reference.weights);
+    for (a, b) in second.result.rounds.iter().zip(&reference.rounds) {
+        assert_eq!(a.criterion.to_bits(), b.criterion.to_bits());
+    }
+    // the final served model equals the reference predictor bit-for-bit
+    let direct = reference.predictor().predict_matrix(&ds.x);
+    for (a, b) in second.final_preds.iter().zip(&direct) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `serve_hotswap` is source-agnostic: the same serving loop runs over a
+/// `BusFollower` and produces the final model's predictions once the
+/// publisher is done.
+#[test]
+fn serve_hotswap_runs_over_the_bus_source() {
+    let ds = two_gaussians(90, 20, 5, 1.5, 13);
+    let cfg = SelectionConfig::builder().k(4).lambda(1.0).build();
+    let result = greedy_rls::select::run_to_completion(
+        GreedyRls.begin(&ds.x, &ds.y, &cfg).unwrap(),
+    )
+    .unwrap();
+
+    let bus = ModelBus::new();
+    // publish the whole trajectory up front, then close: with the trail
+    // complete, every batch is answered by the final model
+    for r in 1..=result.selected.len() {
+        bus.publish(
+            Predictor {
+                selected: result.selected[..r].to_vec(),
+                weights: result.weights[..r].to_vec(), // placeholder prefix
+            },
+            r,
+        );
+    }
+    bus.publish(result.predictor(), result.selected.len());
+    bus.close();
+
+    let mut follower = bus.follower();
+    let first = follower.wait_for_model(Duration::from_secs(1)).unwrap();
+    let server = HotSwapServer::new(first.predictor.clone());
+    let (preds, stats) =
+        serve_hotswap(&server, &mut follower, &ds.x, 16, 2, None).unwrap();
+    let direct = result.predictor().predict_matrix(&ds.x);
+    for (a, b) in preds.iter().zip(&direct) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(stats.final_rounds, result.selected.len());
+    assert_eq!(stats.serve.requests, 2 * ds.x.cols());
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent-swap stress, shared by both follower paths
+// ---------------------------------------------------------------------------
+
+/// Models used by the stress tests encode their version in the weight:
+/// `selected = [0]`, `weight = version`. Over an all-ones feature row,
+/// every prediction then equals the serving model's version — so a batch
+/// whose predictions are not all identical saw a torn swap.
+fn stress_predictor(version: usize) -> Predictor {
+    Predictor { selected: vec![0], weights: vec![version as f64] }
+}
+
+/// Readers hammer `server.predict_batch` until `stop` flips, asserting
+/// every batch is internally consistent (single version) and that
+/// observed versions are monotone per reader. Returns the number of
+/// distinct model generations observed across readers.
+fn assert_consistent_under_swaps(
+    server: &HotSwapServer,
+    x: &greedy_rls::linalg::Matrix,
+    stop: &AtomicBool,
+    readers: usize,
+) -> usize {
+    let seen: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..readers)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut seen = std::collections::BTreeSet::new();
+                    let mut last_version = 0u64;
+                    let mut last_weight = -1.0f64;
+                    while !stop.load(Ordering::Acquire) {
+                        let (preds, version) = server.predict_batch(x);
+                        let first = preds[0];
+                        for (j, &p) in preds.iter().enumerate() {
+                            assert_eq!(
+                                p.to_bits(),
+                                first.to_bits(),
+                                "batch torn at column {j}: {p} vs {first} \
+                                 (version {version})"
+                            );
+                        }
+                        assert!(
+                            version >= last_version,
+                            "server version went backwards"
+                        );
+                        // model generations must advance with versions:
+                        // a *newer* version never serves an older model
+                        if version > last_version {
+                            assert!(
+                                first >= last_weight,
+                                "version {version} served generation \
+                                 {first} after {last_weight}"
+                            );
+                            last_weight = first;
+                        }
+                        last_version = version;
+                        seen.insert(first.to_bits());
+                    }
+                    seen
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut all = std::collections::BTreeSet::new();
+    for s in seen {
+        all.extend(s);
+    }
+    all.len()
+}
+
+/// An all-ones single-feature probe matrix: prediction == model weight.
+fn ones_matrix(cols: usize) -> greedy_rls::linalg::Matrix {
+    greedy_rls::linalg::Matrix::from_vec(1, cols, vec![1.0; cols])
+}
+
+#[test]
+fn hotswap_stress_bus_follower_path() {
+    let x = ones_matrix(256);
+    let server = HotSwapServer::new(stress_predictor(0));
+    let bus = ModelBus::new();
+    let stop = AtomicBool::new(false);
+    let generations = std::thread::scope(|scope| {
+        // publisher: a new model generation every ~1ms
+        let bus_ref = &bus;
+        scope.spawn(move || {
+            for gen in 1..=60usize {
+                bus_ref.publish(stress_predictor(gen), gen);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            bus_ref.close();
+        });
+        // swapper: apply bus versions to the server as they land
+        let server_ref = &server;
+        let stop_ref = &stop;
+        let mut follower = bus.follower();
+        scope.spawn(move || {
+            loop {
+                match follower.wait_newer(Duration::from_millis(50)) {
+                    BusWait::Newer(v) => {
+                        server_ref.swap(v.predictor.clone(), v.rounds);
+                    }
+                    BusWait::Closed => break,
+                    BusWait::TimedOut => {}
+                }
+            }
+            stop_ref.store(true, Ordering::Release);
+        });
+        assert_consistent_under_swaps(&server, &x, &stop, 3)
+    });
+    assert!(
+        generations >= 2,
+        "readers should observe several generations, saw {generations}"
+    );
+    assert_eq!(bus.published(), 60);
+}
+
+#[test]
+fn hotswap_stress_checkpoint_follower_path() {
+    let dir = temp_dir("greedy_rls_ts_stress_ckpt");
+    let x = ones_matrix(256);
+    let server = HotSwapServer::new(stress_predictor(0));
+    let stop = AtomicBool::new(false);
+    let writer_done = AtomicBool::new(false);
+
+    let write_ckpt = |generation: usize| {
+        let ckpt = Checkpoint {
+            fingerprint: checkpoint::Fingerprint { config: 1, data: 2 },
+            elapsed: Duration::ZERO,
+            stop_reason: None,
+            rounds: (0..generation)
+                .map(|i| greedy_rls::select::Round {
+                    feature: i,
+                    criterion: 1.0,
+                })
+                .collect(),
+            selected: vec![0],
+            weights: vec![generation as f64],
+        };
+        ckpt.save_atomic(&checkpoint::checkpoint_path(&dir, generation))
+            .unwrap();
+    };
+
+    let generations = std::thread::scope(|scope| {
+        // writer: a new checkpoint generation every ~2ms (atomic renames,
+        // exactly what a live checkpointing session produces)
+        let writer_done_ref = &writer_done;
+        let write_ref = &write_ckpt;
+        scope.spawn(move || {
+            for generation in 1..=40usize {
+                write_ref(generation);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            writer_done_ref.store(true, Ordering::Release);
+        });
+        // follower: poll the trail and swap newer models in
+        let server_ref = &server;
+        let stop_ref = &stop;
+        let done_ref = &writer_done;
+        let dir_ref = dir.clone();
+        scope.spawn(move || {
+            let mut follower = CheckpointFollower::new(&dir_ref);
+            loop {
+                let finished = done_ref.load(Ordering::Acquire);
+                if let Some(update) = follower.poll_model().unwrap() {
+                    server_ref.swap(update.predictor, update.rounds);
+                } else if finished {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            stop_ref.store(true, Ordering::Release);
+        });
+        assert_consistent_under_swaps(&server, &x, &stop, 3)
+    });
+    assert!(
+        generations >= 2,
+        "readers should observe several generations, saw {generations}"
+    );
+    // the trail's last generation is the one left serving
+    assert_eq!(server.snapshot().predictor.weights, vec![40.0]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
