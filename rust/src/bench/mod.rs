@@ -33,6 +33,8 @@ pub fn time<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Sample {
     }
     let mut times = Vec::with_capacity(reps);
     for _ in 0..reps {
+        // xtask-allow: no-raw-instant -- measurement harness: this module
+        // *is* the bench clock; the session clock only covers selection.
         let t0 = Instant::now();
         f();
         times.push(t0.elapsed().as_secs_f64());
@@ -42,6 +44,7 @@ pub fn time<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Sample {
 
 /// Time a single run (large workloads where repetition is unaffordable).
 pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    // xtask-allow: no-raw-instant -- measurement harness (see `time`).
     let t0 = Instant::now();
     f();
     t0.elapsed().as_secs_f64()
@@ -84,7 +87,7 @@ impl Observer for TimingObserver {
 
 fn summarize(times: &[f64]) -> Sample {
     let mut sorted = times.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let reps = sorted.len();
     let median_s = if reps % 2 == 1 {
         sorted[reps / 2]

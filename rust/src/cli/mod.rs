@@ -34,12 +34,11 @@ impl Args {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else {
                     // value style: `--k 5` unless next token is a flag
-                    match it.peek() {
-                        Some(next) if !next.starts_with("--") => {
-                            let v = it.next().unwrap();
+                    match it.next_if(|next| !next.starts_with("--")) {
+                        Some(v) => {
                             out.flags.insert(stripped.to_string(), v);
                         }
-                        _ => {
+                        None => {
                             out.flags
                                 .insert(stripped.to_string(), "true".into());
                         }
@@ -216,6 +215,7 @@ COMMANDS
   check      verify artifacts: compile all buckets, cross-check every
              artifact-backed selector (greedy, backward, nfold, foba,
              floating) against its native engine on a probe problem
+             [--artifacts DIR]  (defaults to ./artifacts)
   help       this text
 
 --threads T sizes the deterministic parallel execution layer for the

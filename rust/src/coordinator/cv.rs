@@ -298,6 +298,8 @@ pub fn run_cv_opts(
     runtime: Option<&Runtime>,
 ) -> Result<CvCurves> {
     let k_max = opts.k_max.min(ds.n_features());
+    // xtask-allow: no-raw-instant -- sweep-wide wall-clock budget anchor:
+    // spans every fold, so no single session clock can own it.
     let started = Instant::now();
     let mut rng = Pcg64::new(opts.seed, 71);
     let f = Folds::stratified(&ds.y, opts.folds, &mut rng);
@@ -693,6 +695,7 @@ pub fn run_cv_resumable(
          --checkpoint-dir or use a round/plateau stop"
     );
     let k_max = opts.k_max.min(ds.n_features());
+    // xtask-allow: no-raw-instant -- sweep-wide wall clock (see run_cv_opts).
     let started = Instant::now();
     let fingerprint = cv_fingerprint(ds, opts, k_max);
     std::fs::create_dir_all(dir)

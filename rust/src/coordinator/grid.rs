@@ -97,8 +97,7 @@ pub fn sweep_lambda_k(
     let per_lambda: Vec<anyhow::Result<Option<LambdaKChoice>>> =
         crate::parallel::par_map(outer, grid.len(), |gi| {
             let lam = grid[gi];
-            let cfg =
-                SelectionConfig { lambda: lam, threads: inner, ..*base };
+            let cfg = base.with().lambda(lam).threads(inner).build();
             let mut session = GreedyRls.begin(x, y, &cfg)?;
             // champion of this λ: the first k achieving the running
             // strict minimum — the candidate the serial global fold

@@ -150,7 +150,13 @@ impl ModelBus {
     /// after close is a pipeline-ordering bug, not a runtime condition.
     pub fn publish(&self, predictor: Predictor, rounds: usize) -> u64 {
         let (lock, cvar) = &*self.shared;
-        let mut inner = lock.lock().expect("model bus poisoned");
+        // Lock-poison recovery throughout the bus: every critical
+        // section is a couple of field assignments with no intermediate
+        // state a panicking holder could expose, so continuing with the
+        // recovered guard is sound — and a serving worker must not be
+        // torn down because an unrelated thread panicked.
+        let mut inner =
+            lock.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         assert!(!inner.closed, "publish on a closed ModelBus");
         let version = inner.published + 1;
         inner.published = version;
@@ -164,18 +170,28 @@ impl ModelBus {
     /// not yet seen it) and then observe [`BusWait::Closed`]. Idempotent.
     pub fn close(&self) {
         let (lock, cvar) = &*self.shared;
-        lock.lock().expect("model bus poisoned").closed = true;
+        lock.lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .closed = true;
         cvar.notify_all();
     }
 
     /// Whether [`ModelBus::close`] has been called.
     pub fn is_closed(&self) -> bool {
-        self.shared.0.lock().expect("model bus poisoned").closed
+        self.shared
+            .0
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .closed
     }
 
     /// Versions published so far.
     pub fn published(&self) -> u64 {
-        self.shared.0.lock().expect("model bus poisoned").published
+        self.shared
+            .0
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .published
     }
 
     /// A new subscriber that has seen nothing yet: its first
@@ -214,7 +230,11 @@ impl BusFollower {
     /// [`CheckpointFollower::poll`] reports only the most advanced
     /// checkpoint.
     pub fn poll(&mut self) -> Option<Arc<ModelVersion>> {
-        let inner = self.shared.0.lock().expect("model bus poisoned");
+        let inner = self
+            .shared
+            .0
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         match &inner.latest {
             Some(v) if v.version > self.last_version => {
                 self.last_version = v.version;
@@ -232,9 +252,12 @@ impl BusFollower {
     /// `Duration::MAX`) means "no timeout": wait for a publish or close.
     pub fn wait_newer(&mut self, timeout: Duration) -> BusWait {
         // None = unrepresentable deadline = wait indefinitely
+        // xtask-allow: no-raw-instant -- condvar wait-deadline anchor;
+        // wall-clock by nature, unrelated to session time accounting
         let deadline = Instant::now().checked_add(timeout);
         let (lock, cvar) = &*self.shared;
-        let mut inner = lock.lock().expect("model bus poisoned");
+        let mut inner =
+            lock.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         loop {
             if let Some(v) = &inner.latest {
                 if v.version > self.last_version {
@@ -247,15 +270,19 @@ impl BusFollower {
             }
             inner = match deadline {
                 Some(deadline) => {
+                    // xtask-allow: no-raw-instant -- remaining-wait
+                    // computation against the condvar deadline above
                     let now = Instant::now();
                     if now >= deadline {
                         return BusWait::TimedOut;
                     }
                     cvar.wait_timeout(inner, deadline - now)
-                        .expect("model bus poisoned")
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
                         .0
                 }
-                None => cvar.wait(inner).expect("model bus poisoned"),
+                None => cvar
+                    .wait(inner)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner),
             };
         }
     }
@@ -270,10 +297,14 @@ impl BusFollower {
         &mut self,
         timeout: Duration,
     ) -> anyhow::Result<Arc<ModelVersion>> {
+        // xtask-allow: no-raw-instant -- wait-timeout deadline anchor,
+        // same contract as wait_newer
         let deadline = Instant::now().checked_add(timeout);
         loop {
             // an unrepresentable deadline means wait indefinitely
             let left = match deadline {
+                // xtask-allow: no-raw-instant -- remaining-wait
+                // computation against the deadline anchor above
                 Some(d) => d.saturating_duration_since(Instant::now()),
                 None => Duration::MAX,
             };
@@ -668,8 +699,12 @@ pub fn train_serve(
                 }
             }
             // bus is closed once training is done; drain it into the
-            // server before the deterministic final pass
-            let swaps = swapper.join().expect("swapper thread panicked");
+            // server before the deterministic final pass. A panicked
+            // thread re-raises its payload on the joiner (the parallel
+            // layer's idiom) instead of a second, cause-hiding panic.
+            let swaps = swapper
+                .join()
+                .unwrap_or_else(|e| std::panic::resume_unwind(e));
             let mut start = 0;
             while start < m {
                 let end = (start + batch).min(m);
@@ -692,11 +727,17 @@ pub fn train_serve(
                 let mut log = WorkerLog::default();
                 loop {
                     let job = {
-                        let queue = rx.lock().expect("job queue poisoned");
+                        // recv() is the only op under this lock — no
+                        // state a panicking holder could have torn
+                        let queue = rx
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
                         queue.recv()
                     };
                     let Ok(job) = job else { break };
                     let snapshot = server_ref.snapshot();
+                    // xtask-allow: no-raw-instant -- per-batch serving
+                    // latency sample; workers have no session clock
                     let t0 = Instant::now();
                     // range prediction: no n-row sub-matrix copy on the
                     // hot loop, and the latency stat covers all the work
@@ -707,12 +748,16 @@ pub fn train_serve(
                         snapshot.version,
                         snapshot.rounds,
                         t0,
+                        // xtask-allow: no-raw-instant -- batch-end stamp
+                        // paired with the t0 sample above
                         Instant::now(),
                         job.final_pass,
                     );
                     if job.final_pass {
-                        let mut out =
-                            preds_ref.lock().expect("final preds poisoned");
+                        // slice assignment only; disjoint ranges per job
+                        let mut out = preds_ref
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
                         out[job.start..job.end].copy_from_slice(&pb);
                     }
                 }
@@ -721,6 +766,8 @@ pub fn train_serve(
         }
 
         // trainer, on the calling thread: taps ordered save-then-publish
+        // xtask-allow: no-raw-instant -- training-only wall clock for
+        // the report; the session bills its own elapsed time separately
         let t_train = Instant::now();
         let train_result = {
             let mut taps: Vec<&mut dyn StateObserver> = Vec::new();
@@ -735,10 +782,16 @@ pub fn train_serve(
         let train_seconds = t_train.elapsed().as_secs_f64();
         drop(shutdown); // close the bus + raise training_done now
 
-        let swaps = feeder.join().expect("feeder thread panicked");
+        let swaps = feeder
+            .join()
+            .unwrap_or_else(|e| std::panic::resume_unwind(e));
         let mut logs = Vec::new();
         for handle in worker_handles {
-            logs.push(handle.join().expect("worker thread panicked"));
+            logs.push(
+                handle
+                    .join()
+                    .unwrap_or_else(|e| std::panic::resume_unwind(e)),
+            );
         }
         (train_result, train_seconds, swaps, logs)
     });
@@ -768,7 +821,7 @@ pub fn train_serve(
     let version_stats = groups
         .into_iter()
         .map(|((version, rounds), (count, mut lats))| {
-            lats.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+            lats.sort_by(f64::total_cmp);
             VersionStats {
                 version,
                 rounds,
@@ -788,8 +841,9 @@ pub fn train_serve(
             final_serve.throughput = m as f64 / wall;
         }
     }
-    let final_preds =
-        final_preds.into_inner().expect("final preds poisoned");
+    let final_preds = final_preds
+        .into_inner()
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
 
     Ok(TrainServeReport {
         result: session.finish()?,

@@ -155,9 +155,11 @@ fn build_session<'a>(
         return Ok((s, None));
     }
     let latest = if ckpt.resume {
-        checkpoint::latest_in_dir(
-            ckpt.dir.as_deref().expect("validated in parse_checkpoint_flags"),
-        )?
+        let dir = ckpt.dir.as_deref().with_context(|| {
+            "--resume requires --checkpoint-dir (parse_checkpoint_flags \
+             enforces this)"
+        })?;
+        checkpoint::latest_in_dir(dir)?
     } else {
         None
     };
@@ -177,13 +179,12 @@ fn build_session<'a>(
         }
         None => {
             if ckpt.resume {
-                println!(
-                    "no checkpoint in {}; starting fresh",
-                    ckpt.dir
-                        .as_deref()
-                        .expect("validated in parse_checkpoint_flags")
-                        .display()
-                );
+                if let Some(dir) = ckpt.dir.as_deref() {
+                    println!(
+                        "no checkpoint in {}; starting fresh",
+                        dir.display()
+                    );
+                }
             }
             let s = coordinator::begin_with_engine(
                 engine, rt, &ds.x, &ds.y, cfg,
@@ -215,12 +216,8 @@ fn make_autosaver(
 
 /// Report where a checkpointed run left its trail.
 fn print_checkpoint_summary(saver: &Option<Autosaver>, ckpt: &CheckpointFlags) {
-    if let Some(s) = saver {
-        println!(
-            "checkpoints: {} written to {}",
-            s.saves,
-            ckpt.dir.as_deref().expect("saver implies dir").display()
-        );
+    if let (Some(s), Some(dir)) = (saver, ckpt.dir.as_deref()) {
+        println!("checkpoints: {} written to {}", s.saves, dir.display());
     }
 }
 
@@ -274,6 +271,8 @@ fn cmd_select(args: &Args) -> Result<()> {
     let rt = open_runtime_if(engine)?;
     let ckpt = parse_checkpoint_flags(args)?;
     print_problem_header(&ds, &cfg, engine, "");
+    // xtask-allow: no-raw-instant -- whole-command wall clock for the
+    // outcome line; the session separately bills selection time
     let t0 = std::time::Instant::now();
     let (mut session, resumed_fp) =
         build_session(args, engine, rt.as_ref(), &ds, &cfg, &ckpt)?;
@@ -330,6 +329,8 @@ fn cmd_train_serve(args: &Args) -> Result<()> {
             opts.batch
         ),
     );
+    // xtask-allow: no-raw-instant -- setup wall clock only; training
+    // time is billed inside train_serve against the session clock
     let t0 = std::time::Instant::now();
     let (session, resumed_fp) =
         build_session(args, engine, rt.as_ref(), &ds, &cfg, &ckpt)?;
@@ -450,21 +451,27 @@ fn cmd_scaling(args: &Args) -> Result<()> {
     let threads: usize = args.get_or("threads", 0usize)?;
     println!("# scaling n={n} k={k} threads={threads} (paper §4.1; 0=auto)");
     println!("m\tgreedy_rls_s{}", if with_baseline { "\tlowrank_s" } else { "" });
-    let cfg = SelectionConfig {
-        k,
-        lambda: 1.0,
-        loss: Loss::ZeroOne,
-        threads,
-        ..Default::default()
-    };
+    let cfg = SelectionConfig::builder()
+        .k(k)
+        .lambda(1.0)
+        .loss(Loss::ZeroOne)
+        .threads(threads)
+        .build();
     for &m in &sizes {
         let ds = synthetic::two_gaussians(m, n, 50, 1.0, seed);
-        let t_greedy =
-            time_once(|| { GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap(); });
+        let mut greedy_run = Ok(());
+        let t_greedy = time_once(|| {
+            greedy_run =
+                GreedyRls.select(&ds.x, &ds.y, &cfg).map(|_| ());
+        });
+        greedy_run?;
         if with_baseline {
+            let mut low_run = Ok(());
             let t_low = time_once(|| {
-                LowRankLsSvm.select(&ds.x, &ds.y, &cfg).unwrap();
+                low_run =
+                    LowRankLsSvm.select(&ds.x, &ds.y, &cfg).map(|_| ());
             });
+            low_run?;
             println!("{m}\t{t_greedy:.3}\t{t_low:.3}");
         } else {
             println!("{m}\t{t_greedy:.3}");
@@ -610,8 +617,12 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let threads: usize = args.get_or("threads", 0usize)?;
     let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
     let rt = open_runtime_if(engine)?;
-    let cfg =
-        SelectionConfig { k, lambda, loss, threads, ..Default::default() };
+    let cfg = SelectionConfig::builder()
+        .k(k)
+        .lambda(lambda)
+        .loss(loss)
+        .threads(threads)
+        .build();
 
     let mut rng = Pcg64::new(seed, 91);
     let (tr, te) = train_test_split(ds.n_examples(), 0.25, &mut rng);
@@ -631,7 +642,9 @@ fn cmd_compare(args: &Args) -> Result<()> {
             Box::new(nfold_params),
         ],
         EngineKind::Pjrt => {
-            let rt = rt.as_ref().expect("runtime opened above");
+            let rt = rt
+                .as_ref()
+                .with_context(|| "pjrt engine requires an open runtime")?;
             vec![
                 Box::new(PjrtGreedy::new(rt)),
                 Box::new(PjrtFoba::new(rt)),
@@ -648,7 +661,9 @@ fn cmd_compare(args: &Args) -> Result<()> {
                 selectors.push(Box::new(FloatingForward::default()));
             }
             EngineKind::Pjrt => {
-                let rt = rt.as_ref().expect("runtime opened above");
+                let rt = rt
+                    .as_ref()
+                    .with_context(|| "pjrt engine requires an open runtime")?;
                 selectors.push(Box::new(PjrtBackward::new(rt)));
                 selectors.push(Box::new(PjrtFloating::new(rt)));
             }
@@ -674,7 +689,9 @@ fn cmd_compare(args: &Args) -> Result<()> {
         let secs = time_once(|| {
             result = Some(s.select(&train.x, &train.y, &cfg));
         });
-        match result.unwrap() {
+        // time_once runs the closure exactly once, so `result` is Some.
+        let Some(outcome) = result else { continue };
+        match outcome {
             Ok(r) => {
                 let p = r.predictor().predict_matrix(&test.x);
                 let acc = greedy_rls::metrics::accuracy(&test.y, &p);
@@ -727,7 +744,11 @@ fn cmd_check(args: &Args) -> Result<()> {
         foba::Foba, nfold::NFoldGreedy,
     };
     let ds = synthetic::two_gaussians(48, 24, 6, 1.5, 7);
-    let cfg = SelectionConfig { k: 5, lambda: 1.0, loss: Loss::ZeroOne, ..Default::default() };
+    let cfg = SelectionConfig::builder()
+        .k(5)
+        .lambda(1.0)
+        .loss(Loss::ZeroOne)
+        .build();
     let nfold = NFoldGreedy { folds: 6, seed: 7 };
     let probes: Vec<(&str, greedy_rls::select::SelectionResult,
                      greedy_rls::select::SelectionResult)> = vec![

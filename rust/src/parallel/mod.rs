@@ -83,6 +83,8 @@ pub fn quad_ranges(len: usize, parts: usize) -> Vec<Range<usize>> {
         .map(|r| r.start * 4..r.end * 4)
         .collect();
     // the scalar remainder rides with the last worker
+    // xtask-allow: no-panic-hot-path -- unreachable: quads >= 1 here, so
+    // split_ranges returned at least one range.
     out.last_mut().expect("quads >= 1").end = len;
     out
 }
@@ -178,6 +180,8 @@ pub fn for_each_row_chunk<F>(
     std::thread::scope(|s| {
         let mut rest = chunks.into_iter();
         let (first_row, first_chunk) =
+            // xtask-allow: no-panic-hot-path -- unreachable: rows >= 1 was
+            // checked above, so chunks_mut yielded at least one chunk.
             rest.next().expect("rows >= 1 implies at least one chunk");
         for (sr, chunk) in rest {
             s.spawn(move || fref(sr, chunk));

@@ -188,6 +188,8 @@ impl GreedyState {
         let active = &self.active;
         let pos = active
             .binary_search(&b)
+            // xtask-allow: no-panic-hot-path -- documented panic contract:
+            // callers only pass candidates drawn from the active set.
             .expect("candidate must be active");
         let quad_start = pos - pos % 4;
         if quad_start + 4 <= active.len() {
@@ -262,6 +264,8 @@ impl GreedyState {
         let pos = self
             .active
             .binary_search(&b)
+            // xtask-allow: no-panic-hot-path -- documented panic contract:
+            // commit is only called with the feature chosen from `active`.
             .expect("feature must be active");
         self.active.remove(pos);
         self.selected.push(b);

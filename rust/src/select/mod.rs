@@ -63,8 +63,10 @@ pub const BIG: f64 = 1e30;
 
 /// Configuration shared by every selector.
 ///
-/// Construct with [`SelectionConfig::builder`], or a struct literal with
-/// `..Default::default()` for the new fields.
+/// Construct with [`SelectionConfig::builder`]; derive a variant of an
+/// existing config with [`SelectionConfig::with`]. Struct literals are
+/// reserved for this module (enforced by `xtask analyze`) so new fields
+/// can ship with validated defaults.
 #[derive(Clone, Copy, Debug)]
 pub struct SelectionConfig {
     /// Number of features to select (the session's natural target).
@@ -106,6 +108,12 @@ impl SelectionConfig {
     /// Fluent builder starting from [`SelectionConfig::default`].
     pub fn builder() -> SelectionConfigBuilder {
         SelectionConfigBuilder { cfg: SelectionConfig::default() }
+    }
+
+    /// Re-open this config as a builder to derive a variant:
+    /// `base.with().lambda(0.5).build()`.
+    pub fn with(self) -> SelectionConfigBuilder {
+        SelectionConfigBuilder { cfg: self }
     }
 }
 

@@ -1,0 +1,709 @@
+#!/usr/bin/env python3
+"""Python mirror of the xtask lint engine (`cargo run -p xtask -- analyze`).
+
+The development environment for this repo is air-gapped and has no Rust
+toolchain, so the Rust implementation under `xtask/src/` cannot run
+locally. This file is a line-for-line port of the lexer and the six
+rules: it lets a toolchain-less environment burn findings down to zero
+and (re)generate the checkpoint-format pin with the identical FNV-1a
+hash the Rust binary computes in CI.
+
+Keep the two implementations in lockstep: any change to
+`xtask/src/lexer.rs` or `xtask/src/rules.rs` must land here too (the
+`shipped_tree_is_clean` test in `xtask/tests/` fails in CI if the Rust
+side disagrees with a tree this mirror accepted).
+
+Usage:
+    python3 xtask/mirror/analyze.py [--root DIR] [--json PATH]
+    python3 xtask/mirror/analyze.py --pin [--root DIR]
+"""
+
+import json
+import os
+import sys
+
+# ---------------------------------------------------------------------
+# lexer (port of xtask/src/lexer.rs)
+
+NORMAL, BLOCK, STR, RAWSTR = "normal", "block", "str", "rawstr"
+
+
+def _prev_is_ident(b, i):
+    return i > 0 and (b[i - 1].isalnum() or b[i - 1] == "_")
+
+
+def _raw_str_hashes(b, frm):
+    j, h = frm, 0
+    while j < len(b) and b[j] == "#":
+        h += 1
+        j += 1
+    if j < len(b) and b[j] == '"':
+        return h
+    return None
+
+
+def split_line(raw, state, depth_arg):
+    """Returns (code, comment, state) — state is (kind, n)."""
+    b = list(raw)
+    code, comment = [], []
+    i = 0
+    kind, n = state
+    while i < len(b):
+        if kind == BLOCK:
+            if b[i] == "*" and i + 1 < len(b) and b[i + 1] == "/":
+                kind, n = (BLOCK, n - 1) if n > 1 else (NORMAL, 0)
+                i += 2
+            elif b[i] == "/" and i + 1 < len(b) and b[i + 1] == "*":
+                n += 1
+                i += 2
+            else:
+                comment.append(b[i])
+                i += 1
+        elif kind == STR:
+            if b[i] == "\\":
+                i += 2
+            elif b[i] == '"':
+                code.append('"')
+                kind, n = NORMAL, 0
+                i += 1
+            else:
+                i += 1
+        elif kind == RAWSTR:
+            if b[i] == '"':
+                tail = "".join(b[i + 1 : i + 1 + n])
+                if tail.count("#") == n and len(tail) == n:
+                    code.append('"')
+                    kind2, n2 = NORMAL, 0
+                    i += 1 + n
+                    kind, n = kind2, n2
+                    continue
+            i += 1
+        else:  # NORMAL
+            c = b[i]
+            if c == "/" and i + 1 < len(b) and b[i + 1] == "/":
+                comment.append("".join(b[i + 2 :]))
+                i = len(b)
+            elif c == "/" and i + 1 < len(b) and b[i + 1] == "*":
+                kind, n = BLOCK, 1
+                i += 2
+            elif c == '"':
+                code.append('"')
+                kind, n = STR, 0
+                i += 1
+            elif (
+                c == "r"
+                and not _prev_is_ident(b, i)
+                and _raw_str_hashes(b, i + 1) is not None
+            ):
+                h = _raw_str_hashes(b, i + 1)
+                code.append('"')
+                kind, n = RAWSTR, h
+                i += 2 + h
+            elif (
+                c == "b"
+                and not _prev_is_ident(b, i)
+                and i + 1 < len(b)
+                and b[i + 1] == '"'
+            ):
+                code.append('"')
+                kind, n = STR, 0
+                i += 2
+            elif c == "'":
+                if i + 1 < len(b) and b[i + 1] == "\\":
+                    j = i + 2
+                    while j < len(b) and b[j] != "'":
+                        j += 1
+                    code.append("''")
+                    i = j + 1
+                elif i + 2 < len(b) and b[i + 2] == "'":
+                    code.append("''")
+                    i += 3
+                else:
+                    code.append("'")
+                    i += 1
+            else:
+                code.append(c)
+                i += 1
+    return "".join(code), "".join(comment), (kind, n)
+
+
+def scan(contents):
+    state = (NORMAL, 0)
+    lines = []
+    pending_test_attr = False
+    in_test = False
+    depth = 0
+    test_depth = 0
+    for idx, raw in enumerate(contents.split("\n")):
+        code, comment, state = split_line(raw, state, depth)
+        entered_in_test = in_test
+        trimmed = code.strip()
+        if trimmed.startswith("#[cfg(test)]"):
+            pending_test_attr = True
+        elif pending_test_attr and trimmed and not trimmed.startswith("#["):
+            if (
+                trimmed.startswith("mod ")
+                or trimmed.startswith("pub mod ")
+                or trimmed == "mod"
+            ):
+                if not in_test:
+                    in_test = True
+                    test_depth = depth
+            pending_test_attr = False
+        for ch in code:
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                if in_test and depth <= test_depth:
+                    in_test = False
+        lines.append(
+            {
+                "number": idx + 1,
+                "code": code,
+                "comment": comment,
+                "in_test": entered_in_test or in_test,
+            }
+        )
+    # contents.split("\n") yields a trailing empty line for files ending
+    # in \n that Rust's .lines() does not — drop it to stay in lockstep
+    if lines and contents.endswith("\n"):
+        lines.pop()
+    allows = collect_allows(lines)
+    return lines, allows
+
+
+def collect_allows(lines):
+    out = []
+    for i, line in enumerate(lines):
+        pos = line["comment"].find("xtask-allow:")
+        if pos < 0:
+            continue
+        rest = line["comment"][pos + len("xtask-allow:") :].strip()
+        if "--" in rest:
+            rule, justification = rest.split("--", 1)
+            rule, justification = rule.strip(), justification.strip()
+        else:
+            rule, justification = rest, ""
+        if line["code"].strip():
+            target_line = line["number"]
+        else:
+            target_line = line["number"]
+            for nxt in lines[i + 1 :]:
+                if nxt["code"].strip():
+                    target_line = nxt["number"]
+                    break
+        out.append(
+            {
+                "rule": rule,
+                "justification": justification,
+                "target_line": target_line,
+                "line": line["number"],
+            }
+        )
+    return out
+
+
+# ---------------------------------------------------------------------
+# rules (port of xtask/src/rules.rs)
+
+PIN_FILE = "xtask/checkpoint_format.pin"
+CHECKPOINT_RS = "rust/src/select/checkpoint.rs"
+CLI_MOD_RS = "rust/src/cli/mod.rs"
+PAR_CALLS = ["par_map(", "map_ranges("]
+REDUCTION_TOKENS = ["+=", ".sum()", ".sum::<", ".fold(", ".product()"]
+
+
+def is_hot_path(rel):
+    return (
+        rel == "rust/src/main.rs"
+        or rel.startswith("rust/src/cli/")
+        or rel.startswith("rust/src/parallel/")
+        or rel == "rust/src/coordinator/serve.rs"
+        or rel == "rust/src/coordinator/stream.rs"
+        or rel == "rust/src/select/greedy.rs"
+    )
+
+
+def has_config_literal(code):
+    search = 0
+    while True:
+        p = code.find("SelectionConfig", search)
+        if p < 0:
+            return False
+        after = p + len("SelectionConfig")
+        if code[after:].lstrip().startswith("{"):
+            return True
+        search = after
+
+
+def finding(rule, file, line, message):
+    return {"rule": rule, "file": file, "line": line, "message": message}
+
+
+def token_rules(rel, lines, out):
+    hot = is_hot_path(rel)
+    for line in lines:
+        if line["in_test"]:
+            continue
+        code = line["code"]
+        if hot:
+            for tok in [".unwrap()", ".expect(", "panic!"]:
+                if tok in code:
+                    out.append(
+                        finding(
+                            "no-panic-hot-path",
+                            rel,
+                            line["number"],
+                            f"`{tok}` in a serving/hot-path module",
+                        )
+                    )
+        if rel != "rust/src/select/session.rs" and "Instant::now" in code:
+            out.append(
+                finding(
+                    "no-raw-instant",
+                    rel,
+                    line["number"],
+                    "raw `Instant::now()` outside the session clock",
+                )
+            )
+        if rel != "rust/src/select/mod.rs" and has_config_literal(code):
+            out.append(
+                finding(
+                    "config-via-builder",
+                    rel,
+                    line["number"],
+                    "`SelectionConfig { … }` struct literal bypasses the builder",
+                )
+            )
+
+
+def find_par_call(code, frm):
+    best = None
+    for pat in PAR_CALLS:
+        p = code.find(pat, frm)
+        if p >= 0:
+            end = p + len(pat)
+            best = end if best is None else min(best, end)
+    return best
+
+
+def float_reduction(rel, lines, out):
+    for i, line in enumerate(lines):
+        if line["in_test"]:
+            continue
+        code = line["code"]
+        frm = 0
+        while True:
+            open_ = find_par_call(code, frm)
+            if open_ is None:
+                break
+            scan_call_extent(rel, lines, i, open_, out)
+            frm = open_
+
+
+def scan_call_extent(rel, lines, start_line, start_off, out):
+    depth = 1
+    li = start_line
+    while depth > 0 and li < len(lines):
+        code = lines[li]["code"]
+        begin = start_off if li == start_line else 0
+        end = len(code)
+        for j in range(begin, len(code)):
+            if code[j] == "(":
+                depth += 1
+            elif code[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = j
+                    break
+        seg = code[begin:end]
+        for tok in REDUCTION_TOKENS:
+            if tok in seg:
+                out.append(
+                    finding(
+                        "serial-float-reduction",
+                        rel,
+                        lines[li]["number"],
+                        f"`{tok}` inside a par_map/map_ranges call extent",
+                    )
+                )
+        li += 1
+
+
+def extract_usage_const(cli_src):
+    marker = 'pub const USAGE: &str = "'
+    start = cli_src.find(marker)
+    if start < 0:
+        return None
+    body_start = start + len(marker)
+    end = cli_src.find('\n";', body_start)
+    if end < 0:
+        return None
+    return cli_src[body_start:end]
+
+
+def usage_commands(usage):
+    out = []
+    for line in usage.split("\n"):
+        if not line.startswith("  ") or line[2:3] in ("", " "):
+            continue
+        tok = line[2:].split()[0]
+        if tok not in out:
+            out.append(tok)
+    return out
+
+
+def readme_commands(section):
+    out = []
+    for line in section.split("\n"):
+        t = line.strip()
+        if not t.startswith("| `"):
+            continue
+        rest = t[3:]
+        cell_end = rest.find("`")
+        if cell_end < 0:
+            continue
+        parts = rest[:cell_end].split()
+        if parts and parts[0] not in out:
+            out.append(parts[0])
+    return out
+
+
+def _is_flag_char(c):
+    return c.islower() or c.isdigit() or c == "-"
+
+
+def flag_tokens(text):
+    out = []
+    i = 0
+    while i + 2 < len(text):
+        if (
+            text[i] == "-"
+            and text[i + 1] == "-"
+            and text[i + 2].islower()
+            and text[i + 2].isascii()
+            and (i == 0 or not _is_flag_char(text[i - 1]))
+        ):
+            j = i + 2
+            while j < len(text) and _is_flag_char(text[j]):
+                j += 1
+            tok = text[i + 2 : j].rstrip("-")
+            if tok not in out:
+                out.append(tok)
+            i = j
+        else:
+            i += 1
+    return sorted(out)
+
+
+def extract_readme_section(readme, heading):
+    in_section = False
+    out = []
+    for line in readme.split("\n"):
+        if line.rstrip() == heading:
+            in_section = True
+            continue
+        if in_section and line.startswith("## "):
+            break
+        if in_section:
+            out.append(line)
+    return "\n".join(out) + "\n" if in_section else None
+
+
+def diff_sets(out, kind, usage, readme, usage_name, readme_name):
+    for item in usage:
+        if item not in readme:
+            out.append(
+                finding(
+                    "usage-drift",
+                    "README.md",
+                    0,
+                    f"{kind} `{item}` is in {usage_name} but missing from "
+                    f"{readme_name}",
+                )
+            )
+    for item in readme:
+        if item not in usage:
+            out.append(
+                finding(
+                    "usage-drift",
+                    "README.md",
+                    0,
+                    f"{kind} `{item}` is in {readme_name} but not in "
+                    f"{usage_name}",
+                )
+            )
+
+
+def usage_drift(root, out):
+    with open(os.path.join(root, CLI_MOD_RS)) as f:
+        cli = f.read()
+    with open(os.path.join(root, "README.md")) as f:
+        readme = f.read()
+    usage = extract_usage_const(cli)
+    if usage is None:
+        out.append(
+            finding("usage-drift", CLI_MOD_RS, 0, "USAGE const not found")
+        )
+        return
+    section = extract_readme_section(readme, "## CLI reference")
+    if section is None:
+        out.append(
+            finding(
+                "usage-drift", "README.md", 0, "no `## CLI reference` section"
+            )
+        )
+        return
+    diff_sets(
+        out,
+        "command",
+        usage_commands(usage),
+        readme_commands(section),
+        "cli/mod.rs USAGE",
+        "README.md §CLI reference",
+    )
+    diff_sets(
+        out,
+        "flag",
+        flag_tokens(usage),
+        flag_tokens(section),
+        "cli/mod.rs USAGE",
+        "README.md §CLI reference",
+    )
+
+
+def parse_format_version(contents):
+    marker = "FORMAT_VERSION: u32 ="
+    p = contents.find(marker)
+    if p < 0:
+        return None
+    rest = contents[p + len(marker) :].lstrip()
+    digits = ""
+    for c in rest:
+        if c.isdigit():
+            digits += c
+        else:
+            break
+    return int(digits) if digits else None
+
+
+def checkpoint_fingerprint(root):
+    with open(os.path.join(root, CHECKPOINT_RS)) as f:
+        contents = f.read()
+    version = parse_format_version(contents)
+    if version is None:
+        raise ValueError("FORMAT_VERSION constant not found in checkpoint.rs")
+    lines, _allows = scan(contents)
+    h = 0xCBF29CE484222325
+    raws = contents.split("\n")
+    if contents.endswith("\n"):
+        raws.pop()
+    for raw, line in zip(raws, lines):
+        if line["in_test"]:
+            continue
+        for byte in raw.encode("utf-8"):
+            h = ((h ^ byte) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+        h = ((h ^ 0x0A) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return version, h
+
+
+def pin_contents(root):
+    version, h = checkpoint_fingerprint(root)
+    return (
+        "# Pin guarding rule `checkpoint-format-pin`: the FNV-1a hash of\n"
+        "# rust/src/select/checkpoint.rs (test modules excluded) at the\n"
+        "# last reviewed FORMAT_VERSION. A hash change without a version\n"
+        "# bump means serialization may have drifted silently; refresh\n"
+        "# with `cargo run -p xtask -- pin` after review.\n"
+        f"format_version = {version}\n"
+        f"source_hash = fnv1a64:{h:016x}\n"
+    )
+
+
+def pin_field(pin, key):
+    for line in pin.split("\n"):
+        t = line.strip()
+        if t.startswith(key):
+            rest = t[len(key) :].lstrip()
+            if rest.startswith("="):
+                return rest[1:].strip()
+    return None
+
+
+def checkpoint_pin(root, out):
+    version, h = checkpoint_fingerprint(root)
+    path = os.path.join(root, PIN_FILE)
+    try:
+        with open(path) as f:
+            pin = f.read()
+    except OSError:
+        out.append(
+            finding(
+                "checkpoint-format-pin",
+                PIN_FILE,
+                0,
+                "pin file missing — run `cargo run -p xtask -- pin`",
+            )
+        )
+        return
+    pv = pin_field(pin, "format_version")
+    ph = pin_field(pin, "source_hash")
+    try:
+        pv = int(pv)
+        assert ph.startswith("fnv1a64:")
+        ph = int(ph[len("fnv1a64:") :], 16)
+    except (TypeError, ValueError, AssertionError, AttributeError):
+        out.append(
+            finding("checkpoint-format-pin", PIN_FILE, 0, "pin malformed")
+        )
+        return
+    if pv != version:
+        out.append(
+            finding(
+                "checkpoint-format-pin",
+                PIN_FILE,
+                0,
+                f"pin is stale (FORMAT_VERSION {pv} pinned, {version} in "
+                "checkpoint.rs) — re-pin",
+            )
+        )
+    elif ph != h:
+        out.append(
+            finding(
+                "checkpoint-format-pin",
+                CHECKPOINT_RS,
+                0,
+                f"checkpoint.rs (non-test) changed but FORMAT_VERSION is "
+                f"still {version} — bump it or re-pin",
+            )
+        )
+
+
+def resolve_allows(scans, raw):
+    allows = []
+    for rel, lines, file_allows in scans:
+        for a in file_allows:
+            allows.append([rel, a, False])
+    findings, suppressed = [], []
+    for f in raw:
+        hit = None
+        for entry in allows:
+            rel, a, _used = entry
+            if (
+                rel == f["file"]
+                and a["rule"] == f["rule"]
+                and a["target_line"] == f["line"]
+            ):
+                hit = entry
+                break
+        if hit is not None and hit[1]["justification"]:
+            hit[2] = True
+            suppressed.append(
+                {
+                    "rule": hit[1]["rule"],
+                    "file": hit[0],
+                    "line": hit[1]["target_line"],
+                    "justification": hit[1]["justification"],
+                }
+            )
+        elif hit is not None:
+            hit[2] = True
+            findings.append(
+                finding(
+                    "allow-hygiene",
+                    f["file"],
+                    hit[1]["line"],
+                    f"xtask-allow for `{hit[1]['rule']}` has no "
+                    "`-- justification`",
+                )
+            )
+            findings.append(f)
+        else:
+            findings.append(f)
+    for rel, a, used in allows:
+        if not used:
+            findings.append(
+                finding(
+                    "allow-hygiene",
+                    rel,
+                    a["line"],
+                    f"stale xtask-allow: no `{a['rule']}` finding targets "
+                    f"line {a['target_line']}",
+                )
+            )
+    return findings, suppressed
+
+
+def analyze(root):
+    files = []
+    src = os.path.join(root, "rust", "src")
+    for dirpath, _dirnames, filenames in os.walk(src):
+        for name in filenames:
+            if name.endswith(".rs"):
+                files.append(os.path.join(dirpath, name))
+    files.sort()
+    scans = []
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path) as f:
+            contents = f.read()
+        lines, allows = scan(contents)
+        scans.append((rel, lines, allows))
+    raw = []
+    for rel, lines, _allows in scans:
+        token_rules(rel, lines, raw)
+        float_reduction(rel, lines, raw)
+    usage_drift(root, raw)
+    checkpoint_pin(root, raw)
+    findings, suppressed = resolve_allows(scans, raw)
+    return {
+        "files_scanned": len(scans),
+        "finding_count": len(findings),
+        "findings": findings,
+        "suppressed": suppressed,
+    }
+
+
+def main():
+    argv = sys.argv[1:]
+    root = "."
+    json_path = None
+    do_pin = False
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--root":
+            root = argv[i + 1]
+            i += 2
+        elif argv[i] == "--json":
+            json_path = argv[i + 1]
+            i += 2
+        elif argv[i] == "--pin":
+            do_pin = True
+            i += 1
+        else:
+            sys.exit(f"unknown argument {argv[i]!r}")
+    if do_pin:
+        with open(os.path.join(root, PIN_FILE), "w") as f:
+            f.write(pin_contents(root))
+        print(f"mirror pin: wrote {PIN_FILE}")
+        return
+    report = analyze(root)
+    for f in report["findings"]:
+        loc = (
+            f"{f['file']}:{f['line']}" if f["line"] else f["file"]
+        )
+        print(f"[{f['rule']}] {loc}: {f['message']}")
+    print(
+        f"mirror analyze: {report['files_scanned']} file(s), "
+        f"{report['finding_count']} finding(s), "
+        f"{len(report['suppressed'])} suppressed"
+    )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+    sys.exit(1 if report["findings"] else 0)
+
+
+if __name__ == "__main__":
+    main()

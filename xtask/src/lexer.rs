@@ -1,0 +1,342 @@
+//! Line/token-level Rust scanner — the deliberately small front end of
+//! the lint engine.
+//!
+//! Not a parser: each file becomes a `Vec<Line>` where every line carries
+//! its *code* text (string/char literals blanked, comments removed), its
+//! *comment* text (for `xtask-allow` directives), and whether it sits
+//! inside a `#[cfg(test)]` module. That is exactly enough signal for the
+//! repo's invariants (token bans, call-extent scans, drift diffs) while
+//! staying std-only — no `syn`, no `regex`.
+//!
+//! Known approximations, acceptable for this codebase's style:
+//! - string/char/lifetime disambiguation is heuristic (a `'` followed by
+//!   an identifier char and no closing quote two chars later is treated
+//!   as a lifetime);
+//! - raw strings are recognized for up to any number of `#`s but only
+//!   when the `r`/`br` prefix starts a token;
+//! - `#[cfg(test)]` regions are tracked by brace depth from the next
+//!   `mod` item, which matches the crate's universal `mod tests` idiom.
+
+/// One scanned source line.
+#[derive(Clone, Debug)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code text with comments removed and literal contents blanked
+    /// (quotes kept, so token shapes like `"..."` stay visible).
+    pub code: String,
+    /// Concatenated comment text on this line (no `//` / `/*` markers).
+    pub comment: String,
+    /// True inside a `#[cfg(test)] mod … { … }` region.
+    pub in_test: bool,
+}
+
+/// An `// xtask-allow: <rule> -- <justification>` directive.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Rule name the directive suppresses.
+    pub rule: String,
+    /// Justification text after `--` (empty if missing — itself a finding).
+    pub justification: String,
+    /// Line the directive suppresses: the directive's own line when it
+    /// trails code, otherwise the next line carrying code.
+    pub target_line: usize,
+    /// Line the directive itself is written on.
+    pub line: usize,
+}
+
+/// A scanned file: lines plus its allow directives.
+#[derive(Clone, Debug)]
+pub struct ScannedFile {
+    pub lines: Vec<Line>,
+    pub allows: Vec<Allow>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Normal,
+    Block(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Scan full file contents into [`ScannedFile`].
+pub fn scan(contents: &str) -> ScannedFile {
+    let mut state = State::Normal;
+    let mut lines = Vec::new();
+
+    // #[cfg(test)] region tracking.
+    let mut pending_test_attr = false;
+    let mut in_test = false;
+    let mut depth: i64 = 0;
+    let mut test_depth: i64 = 0;
+
+    for (idx, raw) in contents.lines().enumerate() {
+        let (code, comment, next) = split_line(raw, state);
+        state = next;
+
+        let entered_in_test = in_test;
+        let trimmed = code.trim();
+        if trimmed.starts_with("#[cfg(test)]") {
+            pending_test_attr = true;
+        } else if pending_test_attr
+            && !trimmed.is_empty()
+            && !trimmed.starts_with("#[")
+        {
+            if trimmed.starts_with("mod ")
+                || trimmed.starts_with("pub mod ")
+                || trimmed == "mod"
+            {
+                if !in_test {
+                    in_test = true;
+                    test_depth = depth;
+                }
+            }
+            pending_test_attr = false;
+        }
+
+        for ch in code.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if in_test && depth <= test_depth {
+                        in_test = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        lines.push(Line {
+            number: idx + 1,
+            code,
+            comment,
+            // The closing `}` line of a test mod still counts as test.
+            in_test: entered_in_test || in_test,
+        });
+    }
+
+    let allows = collect_allows(&lines);
+    ScannedFile { lines, allows }
+}
+
+fn collect_allows(lines: &[Line]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let Some(pos) = line.comment.find("xtask-allow:") else {
+            continue;
+        };
+        let rest = line.comment[pos + "xtask-allow:".len()..].trim();
+        let (rule, justification) = match rest.split_once("--") {
+            Some((r, j)) => (r.trim(), j.trim()),
+            None => (rest, ""),
+        };
+        // Directive suppresses its own line when it trails code,
+        // otherwise the next line that carries code.
+        let target_line = if !line.code.trim().is_empty() {
+            line.number
+        } else {
+            lines[i + 1..]
+                .iter()
+                .find(|l| !l.code.trim().is_empty())
+                .map(|l| l.number)
+                .unwrap_or(line.number)
+        };
+        out.push(Allow {
+            rule: rule.to_string(),
+            justification: justification.to_string(),
+            target_line,
+            line: line.number,
+        });
+    }
+    out
+}
+
+/// Split one raw line into (code, comment) given the carried-in state;
+/// returns the state carried out to the next line.
+fn split_line(raw: &str, mut state: State) -> (String, String, State) {
+    let b: Vec<char> = raw.chars().collect();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        match state {
+            State::Block(d) => {
+                if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                    state = if d > 1 { State::Block(d - 1) } else { State::Normal };
+                    i += 2;
+                } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                    state = State::Block(d + 1);
+                    i += 2;
+                } else {
+                    comment.push(b[i]);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if b[i] == '\\' {
+                    i += 2; // escape: skip the escaped char (may run past EOL)
+                } else if b[i] == '"' {
+                    code.push('"');
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    i += 1; // literal contents blanked
+                }
+            }
+            State::RawStr(hashes) => {
+                if b[i] == '"' {
+                    let n = hashes as usize;
+                    let tail: String =
+                        b[i + 1..(i + 1 + n).min(b.len())].iter().collect();
+                    if tail.chars().filter(|&c| c == '#').count() == n
+                        && tail.len() == n
+                    {
+                        code.push('"');
+                        state = State::Normal;
+                        i += 1 + n;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            State::Normal => {
+                let c = b[i];
+                if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+                    // line comment: rest of line
+                    comment.push_str(&b[i + 2..].iter().collect::<String>());
+                    i = b.len();
+                } else if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                    state = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if c == 'r'
+                    && !prev_is_ident(&b, i)
+                    && raw_str_hashes(&b, i + 1).is_some()
+                {
+                    let h = raw_str_hashes(&b, i + 1).unwrap();
+                    code.push('"');
+                    state = State::RawStr(h);
+                    i += 2 + h as usize; // r + hashes + quote
+                } else if c == 'b'
+                    && !prev_is_ident(&b, i)
+                    && i + 1 < b.len()
+                    && b[i + 1] == '"'
+                {
+                    code.push('"');
+                    state = State::Str;
+                    i += 2;
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if i + 1 < b.len() && b[i + 1] == '\\' {
+                        // escaped char literal: skip to closing quote
+                        let mut j = i + 2;
+                        while j < b.len() && b[j] != '\'' {
+                            j += 1;
+                        }
+                        code.push('\'');
+                        code.push('\'');
+                        i = j + 1;
+                    } else if i + 2 < b.len() && b[i + 2] == '\'' {
+                        // one-char literal 'x'
+                        code.push('\'');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        // lifetime (or stray quote): keep as code
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Str/RawStr/Block all legitimately span lines in Rust (multi-line
+    // string literals like the USAGE const rely on this) — carry the
+    // state through.
+    (code, comment, state)
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// If `b[from..]` is `#*"` (a raw-string opener after `r`), return the
+/// number of hashes.
+fn raw_str_hashes(b: &[char], from: usize) -> Option<u32> {
+    let mut j = from;
+    let mut h = 0u32;
+    while j < b.len() && b[j] == '#' {
+        h += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == '"' {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let f = scan("let x = \"panic!()\"; // .unwrap() here\n");
+        assert!(!f.lines[0].code.contains("panic"));
+        assert!(f.lines[0].comment.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let f = scan("/* a\n .unwrap() b */ let y = 1;\n");
+        assert!(!f.lines[1].code.contains("unwrap"));
+        assert!(f.lines[1].code.contains("let y"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracked() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let f = scan(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn allow_targets_next_code_line() {
+        let src = "// xtask-allow: no-raw-instant -- timing harness\nlet t = Instant::now();\n";
+        let f = scan(src);
+        assert_eq!(f.allows.len(), 1);
+        assert_eq!(f.allows[0].rule, "no-raw-instant");
+        assert_eq!(f.allows[0].target_line, 2);
+        assert!(!f.allows[0].justification.is_empty());
+    }
+
+    #[test]
+    fn trailing_allow_targets_own_line() {
+        let src = "let t = Instant::now(); // xtask-allow: no-raw-instant -- poll deadline\n";
+        let f = scan(src);
+        assert_eq!(f.allows[0].target_line, 1);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = scan("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(f.lines[0].code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn raw_strings_blanked() {
+        let f = scan("let s = r#\"contains .unwrap() text\"#;\n");
+        assert!(!f.lines[0].code.contains("unwrap"));
+    }
+}

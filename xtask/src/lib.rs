@@ -1,0 +1,22 @@
+//! Repo-invariant lint engine for greedy-rls.
+//!
+//! Run as `cargo run -p xtask -- analyze`. The library form exists so
+//! the seeded-violation self-tests in `xtask/tests/` can drive the
+//! engine over fixture trees without spawning processes.
+//!
+//! Design constraints, in priority order:
+//! 1. **std-only** — the air-gapped build resolves no new dependencies,
+//!    so no `syn`, no `regex`, no serde. The [`lexer`] is a line/token
+//!    scanner, deliberately not a parser.
+//! 2. **Zero findings or justified allows** — every rule supports
+//!    `// xtask-allow: <rule> -- <justification>` on (or directly above)
+//!    the offending line; [`rules::RULES`] lists the invariants.
+//! 3. **Machine-readable** — `analyze --json PATH` writes the
+//!    [`report::Report`] for CI artifact upload.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{Finding, Report, Suppressed};
+pub use rules::{analyze, pin_contents, write_pin, PIN_FILE, RULES};

@@ -1,0 +1,102 @@
+//! `xtask` — repo maintenance commands.
+//!
+//! ```text
+//! cargo run -p xtask -- analyze [--root DIR] [--json PATH]
+//! cargo run -p xtask -- pin     [--root DIR]
+//! ```
+//!
+//! `analyze` exits 0 on a clean tree, 1 on findings, 2 on I/O errors —
+//! CI runs it enforcing on stable (see .github/workflows/ci.yml).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd: Option<&str> = None;
+    let mut root = PathBuf::from(".");
+    let mut json: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage_error("--root needs a value"),
+            },
+            "--json" => match it.next() {
+                Some(v) => json = Some(PathBuf::from(v)),
+                None => return usage_error("--json needs a value"),
+            },
+            "analyze" | "pin" if cmd.is_none() => cmd = Some(a.as_str()),
+            other => {
+                return usage_error(&format!("unknown argument {other:?}"))
+            }
+        }
+    }
+
+    match cmd {
+        Some("analyze") => run_analyze(&root, json.as_deref()),
+        Some("pin") => run_pin(&root),
+        _ => usage_error("expected a subcommand: analyze | pin"),
+    }
+}
+
+fn run_analyze(
+    root: &std::path::Path,
+    json: Option<&std::path::Path>,
+) -> ExitCode {
+    let report = match xtask::analyze(root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask analyze: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = json {
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!("xtask analyze: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    for f in &report.findings {
+        let loc = if f.line > 0 {
+            format!("{}:{}", f.file, f.line)
+        } else {
+            f.file.clone()
+        };
+        println!("[{}] {loc}: {}", f.rule, f.message);
+    }
+    println!(
+        "xtask analyze: {} file(s), {} finding(s), {} suppressed by \
+         justified allows",
+        report.files_scanned,
+        report.findings.len(),
+        report.suppressed.len()
+    );
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn run_pin(root: &std::path::Path) -> ExitCode {
+    match xtask::write_pin(root) {
+        Ok(rel) => {
+            println!("xtask pin: wrote {rel}");
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("xtask pin: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn usage_error(msg: &str) -> ExitCode {
+    eprintln!(
+        "xtask: {msg}\nusage: xtask analyze [--root DIR] [--json PATH]\n   \
+         or: xtask pin [--root DIR]"
+    );
+    ExitCode::from(2)
+}

@@ -1,0 +1,127 @@
+//! Machine-readable output for `xtask analyze` — a hand-rolled JSON
+//! writer (std-only; the report shape is small and fixed, so a
+//! serialization dependency would be pure weight).
+
+/// One rule violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule name (see [`crate::rules::RULES`]).
+    pub rule: String,
+    /// Path relative to the repo root.
+    pub file: String,
+    /// 1-based line (0 for file-level findings like drift checks).
+    pub line: usize,
+    /// Human-readable description with the fix direction.
+    pub message: String,
+}
+
+/// One suppressed finding (an `xtask-allow` that matched).
+#[derive(Clone, Debug)]
+pub struct Suppressed {
+    /// Rule name the allow suppressed.
+    pub rule: String,
+    /// Path relative to the repo root.
+    pub file: String,
+    /// Line the allow targeted.
+    pub line: usize,
+    /// The justification text from the directive.
+    pub justification: String,
+}
+
+/// Full analyzer output.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Violations that fail the run.
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by justified `xtask-allow` directives.
+    pub suppressed: Vec<Suppressed>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// True when the tree is clean (analyze exits 0).
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render as JSON (stable field order, findings in discovery order).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!(
+            "  \"files_scanned\": {},\n  \"finding_count\": {},\n",
+            self.files_scanned,
+            self.findings.len()
+        ));
+        out.push_str("  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"rule\": {}, \"file\": {}, \"line\": {}, \"message\": {}}}{}\n",
+                json_str(&f.rule),
+                json_str(&f.file),
+                f.line,
+                json_str(&f.message),
+                if i + 1 < self.findings.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n  \"suppressed\": [\n");
+        for (i, s) in self.suppressed.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"rule\": {}, \"file\": {}, \"line\": {}, \"justification\": {}}}{}\n",
+                json_str(&s.rule),
+                json_str(&s.file),
+                s.line,
+                json_str(&s.justification),
+                if i + 1 < self.suppressed.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// JSON string literal with escaping.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut r = Report { files_scanned: 2, ..Report::default() };
+        r.findings.push(Finding {
+            rule: "no-panic-hot-path".into(),
+            file: "rust/src/x.rs".into(),
+            line: 3,
+            message: "found .unwrap()".into(),
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"finding_count\": 1"));
+        assert!(j.contains("no-panic-hot-path"));
+        assert!(!r.clean());
+    }
+}

@@ -1,0 +1,717 @@
+//! The rule registry and the six repo invariants.
+//!
+//! Every rule is documented in ARCHITECTURE.md §Analysis gauntlet; the
+//! one-line `invariant` strings here are what `analyze` prints next to a
+//! violation so the fix direction is always in the output.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{self, ScannedFile};
+use crate::report::{Finding, Report, Suppressed};
+
+/// Registry entry: rule name + the invariant it guards.
+pub struct RuleInfo {
+    /// Stable rule name (used in `xtask-allow: <name>` directives).
+    pub name: &'static str,
+    /// One-line statement of the guarded invariant.
+    pub invariant: &'static str,
+}
+
+/// All rules, in severity-ish order. `allow-hygiene` is the meta-rule
+/// keeping the escape hatch honest (justifications required, stale
+/// directives flagged).
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: "no-panic-hot-path",
+        invariant: "serving and hot-path modules (serve.rs, stream.rs, \
+                    parallel/, greedy.rs, cli/, main.rs) must not call \
+                    .unwrap()/.expect()/panic! outside tests — propagate \
+                    Results or recover (PoisonError::into_inner, \
+                    resume_unwind)",
+    },
+    RuleInfo {
+        name: "no-raw-instant",
+        invariant: "Instant::now() belongs to the session clock \
+                    (select/session.rs) — raw clock reads elsewhere \
+                    caused the PR 4 TimeBudget reset bug; measurement \
+                    sites need a justified xtask-allow",
+    },
+    RuleInfo {
+        name: "config-via-builder",
+        invariant: "SelectionConfig is constructed through its builder \
+                    (or re-opened with .with()) so new fields pick up \
+                    defaults everywhere at once — no struct literals \
+                    outside select/mod.rs",
+    },
+    RuleInfo {
+        name: "serial-float-reduction",
+        invariant: "closures handed to par_map/map_ranges must not \
+                    accumulate floats (+=, .sum(), fold, .product()) — \
+                    reductions run on the calling thread in serial order \
+                    or the bit-identical-at-any-thread-count guarantee \
+                    breaks",
+    },
+    RuleInfo {
+        name: "usage-drift",
+        invariant: "README.md §CLI reference and cli/mod.rs USAGE must \
+                    agree on the command and flag inventory",
+    },
+    RuleInfo {
+        name: "checkpoint-format-pin",
+        invariant: "checkpoint.rs (non-test) is hash-pinned against \
+                    FORMAT_VERSION: serialization changes must bump the \
+                    version; refresh with `cargo run -p xtask -- pin`",
+    },
+    RuleInfo {
+        name: "allow-hygiene",
+        invariant: "xtask-allow directives need a `-- justification` and \
+                    must still match a finding (stale allows are removed, \
+                    not accumulated)",
+    },
+];
+
+/// Relative path of the pin file guarding rule `checkpoint-format-pin`.
+pub const PIN_FILE: &str = "xtask/checkpoint_format.pin";
+const CHECKPOINT_RS: &str = "rust/src/select/checkpoint.rs";
+const CLI_MOD_RS: &str = "rust/src/cli/mod.rs";
+
+/// Run every rule over `root` and resolve allow directives.
+pub fn analyze(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust").join("src"), &mut files)?;
+    files.sort();
+
+    let mut scans: Vec<(String, String, ScannedFile)> = Vec::new();
+    for path in &files {
+        let rel = rel_path(root, path);
+        let contents = fs::read_to_string(path)?;
+        let scanned = lexer::scan(&contents);
+        scans.push((rel, contents, scanned));
+    }
+
+    let mut raw: Vec<Finding> = Vec::new();
+    for (rel, _contents, scanned) in &scans {
+        token_rules(rel, scanned, &mut raw);
+        float_reduction(rel, scanned, &mut raw);
+    }
+    usage_drift(root, &mut raw)?;
+    checkpoint_pin(root, &mut raw)?;
+
+    let mut report = Report {
+        files_scanned: scans.len(),
+        ..Report::default()
+    };
+    resolve_allows(&scans, raw, &mut report);
+    Ok(report)
+}
+
+/// Recompute the checkpoint-format pin file contents for `root`.
+pub fn pin_contents(root: &Path) -> io::Result<String> {
+    let (version, hash) = checkpoint_fingerprint(root)?;
+    Ok(format!(
+        "# Pin guarding rule `checkpoint-format-pin`: the FNV-1a hash of\n\
+         # rust/src/select/checkpoint.rs (test modules excluded) at the\n\
+         # last reviewed FORMAT_VERSION. A hash change without a version\n\
+         # bump means serialization may have drifted silently; refresh\n\
+         # with `cargo run -p xtask -- pin` after review.\n\
+         format_version = {version}\n\
+         source_hash = fnv1a64:{hash:016x}\n"
+    ))
+}
+
+/// Write the pin file under `root`; returns its relative path.
+pub fn write_pin(root: &Path) -> io::Result<String> {
+    fs::write(root.join(PIN_FILE), pin_contents(root)?)?;
+    Ok(PIN_FILE.to_string())
+}
+
+// ---------------------------------------------------------------------
+// per-line token rules (1-3)
+
+fn is_hot_path(rel: &str) -> bool {
+    rel == "rust/src/main.rs"
+        || rel.starts_with("rust/src/cli/")
+        || rel.starts_with("rust/src/parallel/")
+        || rel == "rust/src/coordinator/serve.rs"
+        || rel == "rust/src/coordinator/stream.rs"
+        || rel == "rust/src/select/greedy.rs"
+}
+
+fn token_rules(rel: &str, f: &ScannedFile, out: &mut Vec<Finding>) {
+    let hot = is_hot_path(rel);
+    for line in &f.lines {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        if hot {
+            for tok in [".unwrap()", ".expect(", "panic!"] {
+                if code.contains(tok) {
+                    out.push(Finding {
+                        rule: "no-panic-hot-path".into(),
+                        file: rel.into(),
+                        line: line.number,
+                        message: format!(
+                            "`{tok}` in a serving/hot-path module — \
+                             propagate the error or recover instead of \
+                             aborting a worker"
+                        ),
+                    });
+                }
+            }
+        }
+        if rel != "rust/src/select/session.rs"
+            && code.contains("Instant::now")
+        {
+            out.push(Finding {
+                rule: "no-raw-instant".into(),
+                file: rel.into(),
+                line: line.number,
+                message: "raw `Instant::now()` outside the session clock \
+                          (select/session.rs) — route timing through the \
+                          session, or justify the measurement site with \
+                          an xtask-allow"
+                    .into(),
+            });
+        }
+        if rel != "rust/src/select/mod.rs" && has_config_literal(code) {
+            out.push(Finding {
+                rule: "config-via-builder".into(),
+                file: rel.into(),
+                line: line.number,
+                message: "`SelectionConfig { … }` struct literal bypasses \
+                          the builder — use SelectionConfig::builder() or \
+                          cfg.with() so new fields default correctly"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn has_config_literal(code: &str) -> bool {
+    let mut search = 0usize;
+    while let Some(p) = code[search..].find("SelectionConfig") {
+        let after = search + p + "SelectionConfig".len();
+        let rest = code[after..].trim_start();
+        if rest.starts_with('{') {
+            return true;
+        }
+        search = after;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// rule 4: serial-float-reduction
+
+const PAR_CALLS: [&str; 2] = ["par_map(", "map_ranges("];
+const REDUCTION_TOKENS: [&str; 5] =
+    ["+=", ".sum()", ".sum::<", ".fold(", ".product()"];
+
+fn float_reduction(rel: &str, f: &ScannedFile, out: &mut Vec<Finding>) {
+    for i in 0..f.lines.len() {
+        if f.lines[i].in_test {
+            continue;
+        }
+        let code = &f.lines[i].code;
+        let mut from = 0usize;
+        while let Some(open) = find_par_call(code, from) {
+            scan_call_extent(rel, f, i, open, out);
+            from = open;
+        }
+    }
+}
+
+/// Byte offset just past the `(` of the next par_map/map_ranges call at
+/// or after `from`, if any.
+fn find_par_call(code: &str, from: usize) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for pat in PAR_CALLS {
+        if let Some(p) = code[from..].find(pat) {
+            let end = from + p + pat.len();
+            best = Some(best.map_or(end, |b: usize| b.min(end)));
+        }
+    }
+    best
+}
+
+/// Walk the balanced-paren extent starting just inside the call's `(`
+/// and flag float-reduction tokens found inside it.
+fn scan_call_extent(
+    rel: &str,
+    f: &ScannedFile,
+    start_line: usize,
+    start_off: usize,
+    out: &mut Vec<Finding>,
+) {
+    let mut depth = 1i32;
+    let mut li = start_line;
+    while depth > 0 && li < f.lines.len() {
+        let code = &f.lines[li].code;
+        let begin = if li == start_line { start_off } else { 0 };
+        let bytes = code.as_bytes();
+        let mut end = bytes.len();
+        for (j, &b) in bytes.iter().enumerate().skip(begin) {
+            match b {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = j;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let seg = &code[begin..end];
+        for tok in REDUCTION_TOKENS {
+            if seg.contains(tok) {
+                out.push(Finding {
+                    rule: "serial-float-reduction".into(),
+                    file: rel.into(),
+                    line: f.lines[li].number,
+                    message: format!(
+                        "`{tok}` inside a par_map/map_ranges call extent — \
+                         shard-local accumulation must move to the \
+                         calling-thread serial reduction or determinism \
+                         across thread counts breaks"
+                    ),
+                });
+            }
+        }
+        li += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule 5: usage-drift
+
+fn usage_drift(root: &Path, out: &mut Vec<Finding>) -> io::Result<()> {
+    let cli = fs::read_to_string(root.join(CLI_MOD_RS))?;
+    let readme = fs::read_to_string(root.join("README.md"))?;
+
+    let Some(usage) = extract_usage_const(&cli) else {
+        out.push(Finding {
+            rule: "usage-drift".into(),
+            file: CLI_MOD_RS.into(),
+            line: 0,
+            message: "could not locate `pub const USAGE: &str` — the \
+                      drift check needs the canonical usage text"
+                .into(),
+        });
+        return Ok(());
+    };
+    let Some(section) = extract_readme_section(&readme, "## CLI reference")
+    else {
+        out.push(Finding {
+            rule: "usage-drift".into(),
+            file: "README.md".into(),
+            line: 0,
+            message: "README.md has no `## CLI reference` section to sync \
+                      against cli/mod.rs USAGE"
+                .into(),
+        });
+        return Ok(());
+    };
+
+    let usage_cmds = usage_commands(&usage);
+    let readme_cmds = readme_commands(&section);
+    let usage_flags = flag_tokens(&usage);
+    let readme_flags = flag_tokens(&section);
+
+    diff_sets(
+        out,
+        "command",
+        &usage_cmds,
+        &readme_cmds,
+        "cli/mod.rs USAGE",
+        "README.md §CLI reference",
+    );
+    diff_sets(
+        out,
+        "flag",
+        &usage_flags,
+        &readme_flags,
+        "cli/mod.rs USAGE",
+        "README.md §CLI reference",
+    );
+    Ok(())
+}
+
+fn diff_sets(
+    out: &mut Vec<Finding>,
+    kind: &str,
+    usage: &[String],
+    readme: &[String],
+    usage_name: &str,
+    readme_name: &str,
+) {
+    for item in usage {
+        if !readme.contains(item) {
+            out.push(Finding {
+                rule: "usage-drift".into(),
+                file: "README.md".into(),
+                line: 0,
+                message: format!(
+                    "{kind} `{item}` is in {usage_name} but missing from \
+                     {readme_name}"
+                ),
+            });
+        }
+    }
+    for item in readme {
+        if !usage.contains(item) {
+            out.push(Finding {
+                rule: "usage-drift".into(),
+                file: "README.md".into(),
+                line: 0,
+                message: format!(
+                    "{kind} `{item}` is in {readme_name} but not in \
+                     {usage_name} — stale doc or missing usage entry"
+                ),
+            });
+        }
+    }
+}
+
+/// The USAGE string literal's text (escapes left as-is; the inventory
+/// scans below only need command tokens and `--flag` shapes).
+fn extract_usage_const(cli_src: &str) -> Option<String> {
+    let start = cli_src.find("pub const USAGE: &str = \"")?;
+    let body_start = start + "pub const USAGE: &str = \"".len();
+    let end = cli_src[body_start..].find("\n\";")?;
+    Some(cli_src[body_start..body_start + end].to_string())
+}
+
+/// Command tokens: USAGE lines indented exactly two spaces.
+fn usage_commands(usage: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in usage.lines() {
+        let Some(rest) = line.strip_prefix("  ") else { continue };
+        if rest.starts_with(' ') {
+            continue; // continuation line
+        }
+        if let Some(tok) = rest.split_whitespace().next() {
+            let tok = tok.to_string();
+            if !out.contains(&tok) {
+                out.push(tok);
+            }
+        }
+    }
+    out
+}
+
+/// Command tokens: first word of backticked first cells in the README
+/// section's tables (`| \`serve --follow DIR\` | …` yields `serve`).
+fn readme_commands(section: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in section.lines() {
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix("| `") else { continue };
+        let Some(cell_end) = rest.find('`') else { continue };
+        if let Some(tok) = rest[..cell_end].split_whitespace().next() {
+            let tok = tok.to_string();
+            if !out.contains(&tok) {
+                out.push(tok);
+            }
+        }
+    }
+    out
+}
+
+/// Every `--flag` token in `text` (first char after `--` must be a-z;
+/// the preceding char must not be part of a longer token).
+fn flag_tokens(text: &str) -> Vec<String> {
+    let b = text.as_bytes();
+    let mut out: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < b.len() {
+        if b[i] == b'-'
+            && b[i + 1] == b'-'
+            && b[i + 2].is_ascii_lowercase()
+            && (i == 0 || !is_flag_char(b[i - 1]) && b[i - 1] != b'-')
+        {
+            let mut j = i + 2;
+            while j < b.len() && is_flag_char(b[j]) {
+                j += 1;
+            }
+            let tok: String =
+                text[i + 2..j].trim_end_matches('-').to_string();
+            if !out.contains(&tok) {
+                out.push(tok);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out.sort();
+    out
+}
+
+fn is_flag_char(b: u8) -> bool {
+    b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-'
+}
+
+/// Section text from `heading` to the next `## ` heading (exclusive).
+fn extract_readme_section(readme: &str, heading: &str) -> Option<String> {
+    let mut in_section = false;
+    let mut out = String::new();
+    for line in readme.lines() {
+        if line.trim_end() == heading {
+            in_section = true;
+            continue;
+        }
+        if in_section && line.starts_with("## ") {
+            break;
+        }
+        if in_section {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    if in_section {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule 6: checkpoint-format-pin
+
+/// (FORMAT_VERSION, FNV-1a-64 of the non-test lines of checkpoint.rs).
+pub fn checkpoint_fingerprint(root: &Path) -> io::Result<(u32, u64)> {
+    let contents = fs::read_to_string(root.join(CHECKPOINT_RS))?;
+    let version = parse_format_version(&contents).ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            "FORMAT_VERSION constant not found in checkpoint.rs",
+        )
+    })?;
+    let scanned = lexer::scan(&contents);
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for (raw, line) in contents.lines().zip(&scanned.lines) {
+        if line.in_test {
+            continue;
+        }
+        for &b in raw.as_bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        hash ^= b'\n' as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    Ok((version, hash))
+}
+
+fn parse_format_version(contents: &str) -> Option<u32> {
+    let p = contents.find("FORMAT_VERSION: u32 =")?;
+    let rest = contents[p + "FORMAT_VERSION: u32 =".len()..].trim_start();
+    let digits: String =
+        rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+fn checkpoint_pin(root: &Path, out: &mut Vec<Finding>) -> io::Result<()> {
+    let (version, hash) = checkpoint_fingerprint(root)?;
+    let pin_path = root.join(PIN_FILE);
+    let Ok(pin) = fs::read_to_string(&pin_path) else {
+        out.push(Finding {
+            rule: "checkpoint-format-pin".into(),
+            file: PIN_FILE.into(),
+            line: 0,
+            message: "pin file missing — run `cargo run -p xtask -- pin` \
+                      and commit it"
+                .into(),
+        });
+        return Ok(());
+    };
+    let pinned_version = pin_field(&pin, "format_version")
+        .and_then(|v| v.parse::<u32>().ok());
+    let pinned_hash = pin_field(&pin, "source_hash")
+        .and_then(|v| v.strip_prefix("fnv1a64:").map(str::to_string))
+        .and_then(|v| u64::from_str_radix(&v, 16).ok());
+    match (pinned_version, pinned_hash) {
+        (Some(pv), Some(ph)) => {
+            if pv != version {
+                out.push(Finding {
+                    rule: "checkpoint-format-pin".into(),
+                    file: PIN_FILE.into(),
+                    line: 0,
+                    message: format!(
+                        "pin is stale (FORMAT_VERSION {pv} pinned, {version} \
+                         in checkpoint.rs) — run `cargo run -p xtask -- pin` \
+                         in the same change"
+                    ),
+                });
+            } else if ph != hash {
+                out.push(Finding {
+                    rule: "checkpoint-format-pin".into(),
+                    file: CHECKPOINT_RS.into(),
+                    line: 0,
+                    message: format!(
+                        "checkpoint.rs (non-test) changed but FORMAT_VERSION \
+                         is still {version} — bump it if the serialized \
+                         format changed; otherwise re-pin with `cargo run \
+                         -p xtask -- pin` to attest it did not"
+                    ),
+                });
+            }
+        }
+        _ => out.push(Finding {
+            rule: "checkpoint-format-pin".into(),
+            file: PIN_FILE.into(),
+            line: 0,
+            message: "pin file is malformed — regenerate with `cargo run \
+                      -p xtask -- pin`"
+                .into(),
+        }),
+    }
+    Ok(())
+}
+
+fn pin_field(pin: &str, key: &str) -> Option<String> {
+    for line in pin.lines() {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix(key) {
+            let rest = rest.trim_start();
+            if let Some(v) = rest.strip_prefix('=') {
+                return Some(v.trim().to_string());
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// allow resolution
+
+fn resolve_allows(
+    scans: &[(String, String, ScannedFile)],
+    raw: Vec<Finding>,
+    report: &mut Report,
+) {
+    // (file, rule, target_line) -> (allow, used)
+    let mut allows: Vec<(String, lexer::Allow, bool)> = Vec::new();
+    for (rel, _contents, scanned) in scans {
+        for a in &scanned.allows {
+            allows.push((rel.clone(), a.clone(), false));
+        }
+    }
+
+    for finding in raw {
+        let hit = allows.iter_mut().find(|(file, a, _)| {
+            *file == finding.file
+                && a.rule == finding.rule
+                && a.target_line == finding.line
+        });
+        match hit {
+            Some((file, a, used)) if !a.justification.is_empty() => {
+                *used = true;
+                report.suppressed.push(Suppressed {
+                    rule: a.rule.clone(),
+                    file: file.clone(),
+                    line: a.target_line,
+                    justification: a.justification.clone(),
+                });
+            }
+            Some((_, a, used)) => {
+                // matched but unjustified: the finding stands, plus a
+                // hygiene finding pointing at the directive
+                *used = true;
+                report.findings.push(Finding {
+                    rule: "allow-hygiene".into(),
+                    file: finding.file.clone(),
+                    line: a.line,
+                    message: format!(
+                        "xtask-allow for `{}` has no `-- justification`",
+                        a.rule
+                    ),
+                });
+                report.findings.push(finding);
+            }
+            None => report.findings.push(finding),
+        }
+    }
+
+    for (file, a, used) in &allows {
+        if !used {
+            report.findings.push(Finding {
+                rule: "allow-hygiene".into(),
+                file: file.clone(),
+                line: a.line,
+                message: format!(
+                    "stale xtask-allow: no `{}` finding targets line {} — \
+                     remove the directive",
+                    a.rule, a.target_line
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// fs helpers
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_literal_detected() {
+        assert!(has_config_literal("let c = SelectionConfig { k: 1 };"));
+        assert!(has_config_literal("SelectionConfig{k:1}"));
+        assert!(!has_config_literal("SelectionConfig::builder().build()"));
+        assert!(!has_config_literal("fn f(c: &SelectionConfig) {}"));
+    }
+
+    #[test]
+    fn flag_tokens_extract() {
+        let f = flag_tokens("use --k K and --time-budget-s S, not ---x |---|");
+        assert_eq!(f, vec!["k", "time-budget-s"]);
+    }
+
+    #[test]
+    fn usage_command_lines() {
+        let u = "HEAD\n  select     do things\n             --k K\n  cv         other\n\nfooter at col 0\n";
+        assert_eq!(usage_commands(u), vec!["select", "cv"]);
+    }
+
+    #[test]
+    fn readme_command_cells() {
+        let s = "| command | purpose |\n|---|---|\n| `select` | x |\n| `serve --follow DIR` | y |\n| plain | z |\n";
+        assert_eq!(readme_commands(s), vec!["select", "serve"]);
+    }
+
+    #[test]
+    fn format_version_parses() {
+        assert_eq!(
+            parse_format_version("pub const FORMAT_VERSION: u32 = 7;"),
+            Some(7)
+        );
+    }
+}

@@ -1,0 +1,353 @@
+//! Self-test fixture suite: seed a violation of each of the six rules
+//! into a minimal synthetic tree and demand `analyze` reports exactly
+//! that rule; then demand the *shipped* tree is clean — which makes
+//! `cargo test` itself an enforcement point, independent of the CI step
+//! that runs the binary.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use xtask::Report;
+
+/// Build a minimal tree that every rule passes on, rooted in a unique
+/// temp dir per test.
+fn clean_fixture(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("xtask-fixture-{name}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    for sub in [
+        "rust/src/coordinator",
+        "rust/src/select",
+        "rust/src/parallel",
+        "rust/src/cli",
+        "xtask",
+    ] {
+        fs::create_dir_all(dir.join(sub)).unwrap();
+    }
+
+    fs::write(
+        dir.join("rust/src/coordinator/serve.rs"),
+        "pub fn serve() -> Result<(), String> {\n    Ok(())\n}\n",
+    )
+    .unwrap();
+
+    fs::write(
+        dir.join("rust/src/select/session.rs"),
+        "use std::time::Instant;\n\npub fn clock() -> Instant {\n    \
+         Instant::now()\n}\n",
+    )
+    .unwrap();
+
+    fs::write(
+        dir.join("rust/src/select/mod.rs"),
+        "pub struct SelectionConfig {\n    pub k: usize,\n}\n\nimpl \
+         Default for SelectionConfig {\n    fn default() -> Self {\n        \
+         SelectionConfig { k: 10 }\n    }\n}\n",
+    )
+    .unwrap();
+
+    fs::write(
+        dir.join("rust/src/parallel/mod.rs"),
+        "pub fn map_ranges<F: Fn(usize) -> f64>(n: usize, f: F) -> \
+         Vec<f64> {\n    (0..n).map(f).collect()\n}\n\npub fn caller() -> \
+         Vec<f64> {\n    map_ranges(3, |i| i as f64)\n}\n",
+    )
+    .unwrap();
+
+    fs::write(
+        dir.join("rust/src/cli/mod.rs"),
+        concat!(
+            "pub const USAGE: &str = \"\\\n",
+            "fixture usage\n",
+            "\n",
+            "USAGE: greedy-rls <command> [flags]\n",
+            "\n",
+            "COMMANDS\n",
+            "  select     run selection\n",
+            "             --k K [--threads T]\n",
+            "  help       this text\n",
+            "\";\n",
+        ),
+    )
+    .unwrap();
+
+    fs::write(
+        dir.join("README.md"),
+        concat!(
+            "# fixture\n",
+            "\n",
+            "## CLI reference\n",
+            "\n",
+            "| command | purpose | own flags |\n",
+            "|---|---|---|\n",
+            "| `select` | run | `--k K`, `--threads T` |\n",
+            "| `help` | usage text | none |\n",
+            "\n",
+            "## Other\n",
+            "\n",
+            "unrelated\n",
+        ),
+    )
+    .unwrap();
+
+    fs::write(
+        dir.join("rust/src/select/checkpoint.rs"),
+        "pub const FORMAT_VERSION: u32 = 1;\n\npub fn to_text() -> \
+         String {\n    String::from(\"v1\")\n}\n\n#[cfg(test)]\nmod tests \
+         {\n    #[test]\n    fn t() {\n        assert_eq!(super::to_text(), \
+         \"v1\");\n    }\n}\n",
+    )
+    .unwrap();
+
+    xtask::write_pin(&dir).unwrap();
+    dir
+}
+
+fn rules_found(report: &Report) -> Vec<String> {
+    let mut rules: Vec<String> =
+        report.findings.iter().map(|f| f.rule.clone()).collect();
+    rules.sort();
+    rules.dedup();
+    rules
+}
+
+fn append(path: &Path, text: &str) {
+    let mut contents = fs::read_to_string(path).unwrap();
+    contents.push_str(text);
+    fs::write(path, contents).unwrap();
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let dir = clean_fixture("clean");
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "expected clean, got: {:?}", r.findings);
+    assert_eq!(r.files_scanned, 6);
+}
+
+#[test]
+fn seeded_unwrap_in_hot_path_fires() {
+    let dir = clean_fixture("rule1");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\npub fn bad() {\n    let x: Option<u32> = None;\n    \
+         x.unwrap();\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["no-panic-hot-path"]);
+}
+
+#[test]
+fn seeded_expect_and_panic_fire_too() {
+    let dir = clean_fixture("rule1b");
+    append(
+        &dir.join("rust/src/parallel/mod.rs"),
+        "\npub fn bad(o: Option<u32>) -> u32 {\n    if o.is_none() {\n        \
+         panic!(\"no\");\n    }\n    o.expect(\"checked\")\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["no-panic-hot-path"]);
+    assert_eq!(r.findings.len(), 2);
+}
+
+#[test]
+fn unwrap_inside_cfg_test_is_ignored() {
+    let dir = clean_fixture("rule1c");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+         Some(1u32).unwrap();\n    }\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "test-mod unwrap must not fire: {:?}", r.findings);
+}
+
+#[test]
+fn seeded_raw_instant_fires() {
+    let dir = clean_fixture("rule2");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\npub fn t0() -> std::time::Instant {\n    \
+         std::time::Instant::now()\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["no-raw-instant"]);
+}
+
+#[test]
+fn session_clock_instant_is_exempt() {
+    let dir = clean_fixture("rule2b");
+    // the clean fixture's session.rs already calls Instant::now()
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean());
+}
+
+#[test]
+fn seeded_config_literal_fires() {
+    let dir = clean_fixture("rule3");
+    fs::write(
+        dir.join("rust/src/other.rs"),
+        "pub fn c() {\n    let _ = SelectionConfig { k: 1 };\n}\n",
+    )
+    .unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["config-via-builder"]);
+}
+
+#[test]
+fn seeded_float_reduction_fires() {
+    let dir = clean_fixture("rule4");
+    append(
+        &dir.join("rust/src/parallel/mod.rs"),
+        "\npub fn bad_caller() -> Vec<f64> {\n    map_ranges(3, |i| {\n        \
+         let mut s = 0.0;\n        s += i as f64;\n        s\n    })\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["serial-float-reduction"]);
+}
+
+#[test]
+fn float_accumulation_outside_call_extent_is_fine() {
+    let dir = clean_fixture("rule4b");
+    append(
+        &dir.join("rust/src/parallel/mod.rs"),
+        "\npub fn serial_reduce() -> f64 {\n    let mut acc = 0.0;\n    \
+         for v in caller() {\n        acc += v;\n    }\n    acc\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "serial reduction must not fire: {:?}", r.findings);
+}
+
+#[test]
+fn seeded_usage_drift_fires() {
+    let dir = clean_fixture("rule5");
+    // drop the `help` row and document a flag the CLI does not have
+    fs::write(
+        dir.join("README.md"),
+        concat!(
+            "# fixture\n",
+            "\n",
+            "## CLI reference\n",
+            "\n",
+            "| command | purpose | own flags |\n",
+            "|---|---|---|\n",
+            "| `select` | run | `--k K`, `--threads T`, `--ghost G` |\n",
+            "\n",
+            "## Other\n",
+        ),
+    )
+    .unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["usage-drift"]);
+    // one missing command, one phantom flag
+    assert_eq!(r.findings.len(), 2);
+}
+
+#[test]
+fn seeded_checkpoint_hash_drift_fires() {
+    let dir = clean_fixture("rule6");
+    append(
+        &dir.join("rust/src/select/checkpoint.rs"),
+        "\npub fn extra_serialization_path() -> String {\n    \
+         String::from(\"v1-extended\")\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["checkpoint-format-pin"]);
+}
+
+#[test]
+fn checkpoint_test_churn_does_not_fire() {
+    let dir = clean_fixture("rule6b");
+    append(
+        &dir.join("rust/src/select/checkpoint.rs"),
+        "\n#[cfg(test)]\nmod more_tests {\n    #[test]\n    fn extra() \
+         {\n        assert!(true);\n    }\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "test-only churn must not fire: {:?}", r.findings);
+}
+
+#[test]
+fn version_bump_without_repin_fires() {
+    let dir = clean_fixture("rule6c");
+    let path = dir.join("rust/src/select/checkpoint.rs");
+    let contents = fs::read_to_string(&path)
+        .unwrap()
+        .replace("FORMAT_VERSION: u32 = 1", "FORMAT_VERSION: u32 = 2");
+    fs::write(&path, contents).unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["checkpoint-format-pin"]);
+    assert!(r.findings[0].message.contains("stale"));
+    // re-pinning resolves it
+    xtask::write_pin(&dir).unwrap();
+    assert!(xtask::analyze(&dir).unwrap().clean());
+}
+
+#[test]
+fn justified_allow_suppresses() {
+    let dir = clean_fixture("allow1");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\npub fn t0() -> std::time::Instant {\n    // xtask-allow: \
+         no-raw-instant -- fixture latency measurement\n    \
+         std::time::Instant::now()\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "justified allow must suppress: {:?}", r.findings);
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.suppressed[0].rule, "no-raw-instant");
+}
+
+#[test]
+fn unjustified_allow_does_not_suppress() {
+    let dir = clean_fixture("allow2");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\npub fn t0() -> std::time::Instant {\n    // xtask-allow: \
+         no-raw-instant\n    std::time::Instant::now()\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["allow-hygiene", "no-raw-instant"]);
+}
+
+#[test]
+fn stale_allow_is_flagged() {
+    let dir = clean_fixture("allow3");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\n// xtask-allow: no-raw-instant -- nothing here anymore\npub fn \
+         fine() {}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["allow-hygiene"]);
+}
+
+#[test]
+fn json_report_shape() {
+    let dir = clean_fixture("json");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\npub fn bad() {\n    let x: Option<u32> = None;\n    \
+         x.unwrap();\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    let j = r.to_json();
+    assert!(j.contains("\"finding_count\": 1"));
+    assert!(j.contains("no-panic-hot-path"));
+    assert!(j.contains("coordinator/serve.rs"));
+}
+
+/// The acceptance gate: the shipped tree must be clean. This runs under
+/// plain `cargo test`, so the invariant holds even where the CI analyze
+/// step is not wired.
+#[test]
+fn shipped_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+    let r = xtask::analyze(root).unwrap();
+    assert!(
+        r.clean(),
+        "shipped tree has {} finding(s): {:#?}",
+        r.findings.len(),
+        r.findings
+    );
+}
