@@ -1,0 +1,214 @@
+//! Serving-fabric load bench: drive an in-process `serve --listen`
+//! front with the fabric load generator (`listen::run_load`) and record
+//! throughput and latency as client connections scale, plus one
+//! deliberately saturated leg (single slowed worker, depth-1 queue)
+//! that measures admission-control shedding instead of letting latency
+//! queue unboundedly.
+//!
+//! The served model is a real greedy-RLS selection over a synthetic
+//! dataset, so answered queries exercise the same sparse predictor the
+//! fleet gauntlet ships between processes.
+//!
+//! Output: the usual table + CSV, plus machine-readable
+//! `BENCH_serve.json` (sent/answered/shed, p50/p99 ms, achieved QPS per
+//! leg) so serving-path regressions show up across PRs.
+//!
+//! Flags (after `cargo bench --bench serve_load --`): `--smoke` shrinks
+//! the dataset and query counts for CI.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use greedy_rls::bench::{CellValue, Table};
+use greedy_rls::coordinator::fabric::listen::{
+    run_load, ListenOptions, ListenServer, LoadOptions,
+};
+use greedy_rls::coordinator::fabric::net::Addr;
+use greedy_rls::coordinator::fabric::FabricOptions;
+use greedy_rls::coordinator::serve::HotSwapServer;
+use greedy_rls::data::synthetic::two_gaussians;
+use greedy_rls::select::greedy::GreedyRls;
+use greedy_rls::select::{SelectionConfig, SessionSelector};
+
+struct Leg {
+    label: &'static str,
+    connections: usize,
+    workers: usize,
+    queue_depth: usize,
+    worker_delay: Duration,
+}
+
+struct Record {
+    label: &'static str,
+    connections: usize,
+    workers: usize,
+    queue_depth: usize,
+    sent: u64,
+    answered: u64,
+    shed: u64,
+    p50_ms: f64,
+    p99_ms: f64,
+    qps: f64,
+}
+
+fn parse_args() -> bool {
+    std::env::args().skip(1).any(|a| a == "--smoke")
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(records: &[Record]) -> std::io::Result<()> {
+    let mut out = String::from("{\n  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"leg\": \"{}\", \"connections\": {}, \"workers\": {}, \
+             \"queue_depth\": {}, \"sent\": {}, \"answered\": {}, \
+             \"shed\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \"qps\": {}}}{}\n",
+            r.label,
+            r.connections,
+            r.workers,
+            r.queue_depth,
+            r.sent,
+            r.answered,
+            r.shed,
+            json_num(r.p50_ms),
+            json_num(r.p99_ms),
+            json_num(r.qps),
+            if i + 1 < records.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write("BENCH_serve.json", out)
+}
+
+fn main() {
+    let smoke = parse_args();
+    let (m, n, queries) = if smoke { (200, 64, 50) } else { (1000, 256, 200) };
+    let ds = two_gaussians(m, n, 8.min(n), 1.5, 17);
+    let cfg = SelectionConfig::builder().k(8).lambda(1.0).build();
+    let result = greedy_rls::select::run_to_completion(
+        GreedyRls.begin(&ds.x, &ds.y, &cfg).expect("begin selection"),
+    )
+    .expect("selection");
+    let server = Arc::new(HotSwapServer::new(result.predictor()));
+    server.swap(result.predictor(), result.selected.len());
+
+    let mut legs = vec![Leg {
+        label: "throughput",
+        connections: 2,
+        workers: 2,
+        queue_depth: 2,
+        worker_delay: Duration::ZERO,
+    }];
+    if !smoke {
+        legs.insert(
+            0,
+            Leg {
+                label: "throughput",
+                connections: 1,
+                workers: 2,
+                queue_depth: 2,
+                worker_delay: Duration::ZERO,
+            },
+        );
+        legs.push(Leg {
+            label: "throughput",
+            connections: 4,
+            workers: 2,
+            queue_depth: 2,
+            worker_delay: Duration::ZERO,
+        });
+    }
+    legs.push(Leg {
+        label: "saturated",
+        connections: 4,
+        workers: 1,
+        queue_depth: 1,
+        worker_delay: Duration::from_millis(5),
+    });
+
+    let mut table = Table::new(
+        "Serving fabric — listen front under load",
+        &[
+            "leg", "conns", "workers", "depth", "sent", "answered",
+            "shed", "p50_ms", "p99_ms", "qps",
+        ],
+    );
+    let mut records = Vec::new();
+    for (i, leg) in legs.iter().enumerate() {
+        let sock = std::env::temp_dir()
+            .join(format!("grls-bench-{}-{i}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&sock);
+        let addr = Addr::parse(&format!("unix:{}", sock.display()))
+            .expect("bench socket addr");
+        let front = ListenServer::spawn(
+            &addr,
+            Arc::clone(&server),
+            ListenOptions {
+                workers: leg.workers,
+                queue_depth: leg.queue_depth,
+                retry_after_ms: 5,
+                worker_delay: leg.worker_delay,
+                fabric: FabricOptions::default(),
+            },
+        )
+        .expect("spawn listen front");
+        let report = run_load(
+            &addr,
+            &ds.x,
+            &LoadOptions {
+                connections: leg.connections,
+                queries_per_conn: queries,
+                batch: 16,
+                qps: 0.0,
+                seed: 42,
+                fabric: FabricOptions::default(),
+            },
+        )
+        .expect("load run");
+        drop(front);
+        let _ = std::fs::remove_file(&sock);
+        records.push(Record {
+            label: leg.label,
+            connections: leg.connections,
+            workers: leg.workers,
+            queue_depth: leg.queue_depth,
+            sent: report.sent,
+            answered: report.answered,
+            shed: report.shed,
+            p50_ms: report.p50_ms,
+            p99_ms: report.p99_ms,
+            qps: report.achieved_qps,
+        });
+        let r = records.last().expect("just pushed");
+        table.row(&Table::cells(&[
+            CellValue::Str(r.label.to_string()),
+            CellValue::Usize(r.connections),
+            CellValue::Usize(r.workers),
+            CellValue::Usize(r.queue_depth),
+            CellValue::Usize(r.sent as usize),
+            CellValue::Usize(r.answered as usize),
+            CellValue::Usize(r.shed as usize),
+            CellValue::F3(r.p50_ms),
+            CellValue::F3(r.p99_ms),
+            CellValue::F3(r.qps),
+        ]));
+    }
+    table.print();
+    let _ = table.write_csv("serve_load");
+    match write_json(&records) {
+        Ok(()) => println!("\nmachine-readable: BENCH_serve.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_serve.json: {e}"),
+    }
+    println!(
+        "every query crosses the wire format (checksummed frames over a \
+         unix socket); the saturated leg sheds with explicit retry-after \
+         instead of queueing latency, so p99 stays bounded by design."
+    );
+}

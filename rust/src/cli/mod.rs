@@ -193,6 +193,12 @@ COMMANDS
              between batches; in-flight batches always complete)
              --bus  alias for train-serve: train and serve in one
              process over the in-memory model bus (no disk on the path)
+             fabric worker: --listen ADDR --connect ADDR [--follow DIR]
+             [--heartbeat-ms MS] [--serve-threads W] [--queue-depth Q]
+             [--wait-s S]  (answers queries over the socket, hot-swaps
+             models pushed by a train-serve --publish trainer, falls
+             back to the checkpoint trail when the socket is down;
+             ADDR is unix:/path or tcp:host:port)
   train-serve  run selection and serve it at the same time: every
              committed round is published on an in-process bus and
              hot-swapped into N serve workers the instant it commits;
@@ -206,6 +212,15 @@ COMMANDS
              --warm-start, --checkpoint-dir/--checkpoint-every/--resume
              flags as select (a version reaches the bus only after its
              checkpoint is on disk, so kill + --resume stays exact)
+             fabric: [--publish ADDR] [--heartbeat-ms MS]  (bridge the
+             bus onto a socket; remote serve --connect workers follow)
+  fleet      spawn one train-serve trainer + N serve --listen workers
+             over the fabric, drive load at every worker, optionally
+             SIGKILL one mid-stream, and verify all workers end up
+             serving the byte-identical final model
+             --dataset NAME | --synthetic M,N  --k K  [--seed S]
+             [--servers 2] [--kill-one] [--scratch DIR] [--queries Q]
+             [--batch 16] [--heartbeat-ms MS]
   compare    run every selection algorithm on one dataset side by side
              --dataset NAME | --synthetic M,N  [--k 5] [--lambda 1.0]
              [--threads T] [--engine native|pjrt]  (pjrt compares the

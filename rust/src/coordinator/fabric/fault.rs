@@ -1,0 +1,275 @@
+//! Seeded fault injection for the wire: drop, delay, truncate, or
+//! corrupt whole frames on their way to a peer.
+//!
+//! [`FaultyStream`] wraps a writer and applies one seeded decision per
+//! `write` call — [`super::wire::write_frame`] emits each frame as a
+//! single `write_all`, so faults land on frame boundaries and a given
+//! seed replays the exact same fault schedule. [`FaultyProxy`] runs the
+//! same schedule between a real publisher and follower over sockets,
+//! which is how the integration tests prove a follower never installs
+//! a torn model.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use super::net::{Addr, Conn, Listener};
+use super::wire;
+use super::FabricOptions;
+use crate::rng::Pcg64;
+
+/// Per-frame fault probabilities. The four faults are mutually
+/// exclusive per frame (drawn from one uniform sample in cumulative
+/// order: drop, corrupt, truncate, delay).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Probability a frame is silently dropped.
+    pub drop_p: f64,
+    /// Probability one byte of the frame is bit-flipped.
+    pub corrupt_p: f64,
+    /// Probability the frame is cut short mid-byte-sequence.
+    pub truncate_p: f64,
+    /// Probability the frame is delayed by up to `max_delay`.
+    pub delay_p: f64,
+    /// Upper bound for injected delays.
+    pub max_delay: Duration,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            drop_p: 0.0,
+            corrupt_p: 0.0,
+            truncate_p: 0.0,
+            delay_p: 0.0,
+            max_delay: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Counters for injected faults, shared with the test that asserts on
+/// them.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    /// Frames written through unharmed.
+    pub passed: AtomicU64,
+    /// Frames silently dropped.
+    pub dropped: AtomicU64,
+    /// Frames with a flipped byte.
+    pub corrupted: AtomicU64,
+    /// Frames cut short.
+    pub truncated: AtomicU64,
+    /// Frames delayed before delivery.
+    pub delayed: AtomicU64,
+}
+
+/// A writer that injects seeded faults at frame granularity.
+///
+/// Each `write` call is treated as one frame: the whole buffer is
+/// consumed in a single fault decision and the call always reports the
+/// full length as written (a dropped or truncated frame must look like
+/// a successful send to the publisher — that is exactly the failure
+/// the checksums exist to catch).
+pub struct FaultyStream<S: Write> {
+    inner: S,
+    plan: FaultPlan,
+    rng: Pcg64,
+    enabled: Arc<AtomicBool>,
+    counters: Arc<FaultCounters>,
+}
+
+impl<S: Write> FaultyStream<S> {
+    /// Wrap `inner` with the given plan and seed. `enabled` can be
+    /// flipped off at runtime to let a test's convergence phase run
+    /// fault-free.
+    pub fn new(
+        inner: S,
+        plan: FaultPlan,
+        seed: u64,
+        enabled: Arc<AtomicBool>,
+        counters: Arc<FaultCounters>,
+    ) -> FaultyStream<S> {
+        Self::from_rng(inner, plan, Pcg64::new(seed, 1311), enabled, counters)
+    }
+
+    /// Like [`FaultyStream::new`] but with a caller-supplied generator —
+    /// how [`FaultyProxy`] deals each connection a child schedule via
+    /// [`Pcg64::split`].
+    pub fn from_rng(
+        inner: S,
+        plan: FaultPlan,
+        rng: Pcg64,
+        enabled: Arc<AtomicBool>,
+        counters: Arc<FaultCounters>,
+    ) -> FaultyStream<S> {
+        FaultyStream { inner, plan, rng, enabled, counters }
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if !self.enabled.load(Ordering::SeqCst) || buf.is_empty() {
+            self.counters.passed.fetch_add(1, Ordering::Relaxed);
+            self.inner.write_all(buf)?;
+            return Ok(buf.len());
+        }
+        let u = self.rng.uniform();
+        let p = &self.plan;
+        if u < p.drop_p {
+            self.counters.dropped.fetch_add(1, Ordering::Relaxed);
+            return Ok(buf.len());
+        }
+        if u < p.drop_p + p.corrupt_p {
+            let mut bad = buf.to_vec();
+            let at = self.rng.below(bad.len());
+            let bit = 1u8 << (self.rng.below(8) as u8);
+            bad[at] ^= bit;
+            self.counters.corrupted.fetch_add(1, Ordering::Relaxed);
+            self.inner.write_all(&bad)?;
+            return Ok(buf.len());
+        }
+        if u < p.drop_p + p.corrupt_p + p.truncate_p {
+            let keep = self.rng.below(buf.len());
+            self.counters.truncated.fetch_add(1, Ordering::Relaxed);
+            self.inner.write_all(&buf[..keep])?;
+            return Ok(buf.len());
+        }
+        if u < p.drop_p + p.corrupt_p + p.truncate_p + p.delay_p {
+            let ms = self.plan.max_delay.as_millis().max(1) as u64;
+            let sleep = Duration::from_millis(self.rng.below(ms as usize) as u64);
+            std::thread::sleep(sleep);
+            self.counters.delayed.fetch_add(1, Ordering::Relaxed);
+            self.inner.write_all(buf)?;
+            return Ok(buf.len());
+        }
+        self.counters.passed.fetch_add(1, Ordering::Relaxed);
+        self.inner.write_all(buf)?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A frame-aware proxy that relays publisher → follower traffic
+/// through a [`FaultyStream`]. It reads *valid* frames from the
+/// upstream publisher and re-sends them downstream under the fault
+/// plan; when either side dies it drops both and accepts again, so a
+/// reconnecting follower meets a fresh (equally faulty) pipe.
+pub struct FaultyProxy {
+    stop: Arc<AtomicBool>,
+    enabled: Arc<AtomicBool>,
+    counters: Arc<FaultCounters>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultyProxy {
+    /// Listen on `listen`, relaying to `upstream` under `plan`.
+    /// Connections are served one at a time (the tests drive a single
+    /// follower); each gets a fresh deterministic fault schedule
+    /// dealt from `seed` via [`Pcg64::split`].
+    pub fn spawn(
+        listen: &Addr,
+        upstream: Addr,
+        plan: FaultPlan,
+        seed: u64,
+        opts: FabricOptions,
+    ) -> anyhow::Result<FaultyProxy> {
+        let listener = Listener::bind(listen).context("proxy bind")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let enabled = Arc::new(AtomicBool::new(true));
+        let counters = Arc::new(FaultCounters::default());
+        let t_stop = Arc::clone(&stop);
+        let t_enabled = Arc::clone(&enabled);
+        let t_counters = Arc::clone(&counters);
+        let handle = std::thread::spawn(move || {
+            // one master generator deals each accepted connection its
+            // own deterministic child schedule (accepts are serial, so
+            // connection order — and thus every schedule — replays
+            // exactly under the same seed)
+            let mut schedules = Pcg64::new(seed, 1310);
+            while !t_stop.load(Ordering::SeqCst) {
+                let down = match listener.accept_idle() {
+                    Ok(Some(c)) => c,
+                    Ok(None) => {
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                    Err(_) => {
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                };
+                let mut up = match Conn::connect(
+                    &upstream,
+                    opts.connect_timeout,
+                ) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        down.shutdown();
+                        continue;
+                    }
+                };
+                let _ = up.set_timeouts(
+                    Some(opts.read_timeout),
+                    Some(opts.write_timeout),
+                );
+                let _ = down.set_timeouts(
+                    Some(opts.read_timeout),
+                    Some(opts.write_timeout),
+                );
+                let mut faulty = FaultyStream::from_rng(
+                    down,
+                    plan,
+                    schedules.split(),
+                    Arc::clone(&t_enabled),
+                    Arc::clone(&t_counters),
+                );
+                while !t_stop.load(Ordering::SeqCst) {
+                    match wire::read_frame(&mut up) {
+                        Ok(frame) => {
+                            if wire::write_frame(&mut faulty, &frame)
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+                up.shutdown();
+                faulty.inner.shutdown();
+            }
+        });
+        Ok(FaultyProxy {
+            stop,
+            enabled,
+            counters,
+            handle: Some(handle),
+        })
+    }
+
+    /// Flip fault injection on or off (e.g. off for a convergence
+    /// phase after the fault storm).
+    pub fn set_faults_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::SeqCst);
+    }
+
+    /// Shared fault counters for assertions.
+    pub fn counters(&self) -> Arc<FaultCounters> {
+        Arc::clone(&self.counters)
+    }
+}
+
+impl Drop for FaultyProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,356 @@
+//! Fleet orchestration: one trainer + N serving processes, wired over
+//! the fabric, with a built-in kill-one-server gauntlet.
+//!
+//! The `fleet` CLI subcommand builds a [`FleetPlan`] and calls
+//! [`run_fleet`], which spawns real OS processes (the current
+//! executable re-invoked as `train-serve --publish …` and
+//! `serve --listen …`), drives load at them, optionally SIGKILLs one
+//! server mid-stream, and proves the robustness story end to end:
+//! the survivor keeps answering, the restarted server catches up from
+//! the checkpoint trail, and every server ends the run serving the
+//! same final model **byte-identically** (compared on the encoded
+//! model frame, exact `f64` bit patterns included).
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context};
+
+use super::listen::{run_load, LoadOptions};
+use super::net::{Addr, Conn};
+use super::wire::{self, Frame, WireModel};
+use super::FabricOptions;
+use crate::linalg::Matrix;
+
+/// Everything [`run_fleet`] needs to know.
+#[derive(Clone, Debug)]
+pub struct FleetPlan {
+    /// Binary to re-invoke (normally `std::env::current_exe()`).
+    pub exe: PathBuf,
+    /// Scratch directory for sockets and the checkpoint trail.
+    pub scratch: PathBuf,
+    /// Dataset/selection flags forwarded verbatim to the trainer
+    /// (e.g. `--synthetic 2000,300 --k 12 --seed 7`).
+    pub dataset_flags: Vec<String>,
+    /// Serving processes to spawn.
+    pub servers: usize,
+    /// Run the kill-one-server leg.
+    pub kill_one: bool,
+    /// Heartbeat cadence forwarded to every process, milliseconds.
+    pub heartbeat_ms: u64,
+    /// Selection budget `k` — the rounds every server must converge to.
+    pub expected_rounds: usize,
+    /// Queries per load leg (per server).
+    pub queries: usize,
+    /// Examples per query batch.
+    pub batch: usize,
+    /// Deadline for each server's first model and for final
+    /// convergence.
+    pub settle_timeout: Duration,
+    /// Deadline for the trainer process to finish.
+    pub train_timeout: Duration,
+}
+
+/// What the gauntlet observed.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetOutcome {
+    /// Servers that finished the run.
+    pub servers: usize,
+    /// Rounds of the converged final model.
+    pub final_rounds: usize,
+    /// Every server served the byte-identical final model frame.
+    pub models_identical: bool,
+    /// Queries the surviving server answered while one server was
+    /// dead (kill leg only; 0 when `kill_one` is off).
+    pub survivor_answered: u64,
+    /// The SIGKILLed-and-restarted server reached the final model.
+    pub restarted_caught_up: bool,
+    /// Total queries shed by admission control across load legs.
+    pub shed: u64,
+}
+
+/// Child processes with a kill-on-drop guard: whatever path exits
+/// [`run_fleet`], no orphaned trainer or server outlives it.
+struct Fleet {
+    children: Vec<(String, Option<Child>)>,
+}
+
+impl Fleet {
+    fn new() -> Fleet {
+        Fleet { children: Vec::new() }
+    }
+
+    fn spawn(
+        &mut self,
+        name: &str,
+        exe: &std::path::Path,
+        args: &[String],
+    ) -> anyhow::Result<usize> {
+        let child = Command::new(exe)
+            .args(args)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawn {name}"))?;
+        self.children.push((name.to_string(), Some(child)));
+        Ok(self.children.len() - 1)
+    }
+
+    /// SIGKILL one member (this is `Child::kill` — SIGKILL on unix, no
+    /// chance to clean up; exactly the crash the gauntlet simulates).
+    fn kill(&mut self, idx: usize) -> anyhow::Result<()> {
+        if let Some((name, Some(child))) = self.children.get_mut(idx).map(
+            |(n, c)| (n.clone(), c.as_mut()),
+        ) {
+            child.kill().with_context(|| format!("kill {name}"))?;
+            let _ = child.wait();
+        }
+        if let Some((_, slot)) = self.children.get_mut(idx) {
+            *slot = None;
+        }
+        Ok(())
+    }
+
+    /// Wait for one member with a deadline (polling `try_wait`).
+    fn wait_with_deadline(
+        &mut self,
+        idx: usize,
+        timeout: Duration,
+    ) -> anyhow::Result<bool> {
+        // xtask-allow: no-raw-instant -- subprocess wait deadline;
+        // wall-clock supervision of real OS processes
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let Some((name, Some(child))) =
+                self.children.get_mut(idx).map(|(n, c)| (n.clone(), c.as_mut()))
+            else {
+                return Ok(true);
+            };
+            match child.try_wait().with_context(|| format!("wait {name}"))? {
+                Some(status) => {
+                    ensure!(
+                        status.success(),
+                        "{name} exited with {status}"
+                    );
+                    if let Some((_, slot)) = self.children.get_mut(idx) {
+                        *slot = None;
+                    }
+                    return Ok(true);
+                }
+                None => {
+                    // xtask-allow: no-raw-instant -- same wait deadline
+                    if std::time::Instant::now() >= deadline {
+                        return Ok(false);
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for (_, slot) in &mut self.children {
+            if let Some(child) = slot.as_mut() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+/// Fetch a server's current model over [`Frame::ModelRequest`].
+pub fn fetch_model(
+    addr: &Addr,
+    opts: &FabricOptions,
+) -> anyhow::Result<WireModel> {
+    let mut conn = Conn::connect(addr, opts.connect_timeout)?;
+    conn.set_timeouts(
+        Some(opts.read_timeout.max(Duration::from_secs(2))),
+        Some(opts.write_timeout),
+    )
+    .context("probe timeouts")?;
+    wire::write_frame(&mut conn, &Frame::ModelRequest)?;
+    let frame = wire::read_frame(&mut conn)?;
+    conn.shutdown();
+    match frame {
+        Frame::Model(m) => Ok(m),
+        other => bail!("expected a model frame, got {other:?}"),
+    }
+}
+
+/// Poll until `addr` serves a model with at least `min_rounds`, or the
+/// deadline passes.
+pub fn wait_for_rounds(
+    addr: &Addr,
+    min_rounds: usize,
+    timeout: Duration,
+    opts: &FabricOptions,
+) -> anyhow::Result<WireModel> {
+    // xtask-allow: no-raw-instant -- fleet settle deadline across
+    // process boundaries; wall-clock by nature
+    let deadline = std::time::Instant::now() + timeout;
+    loop {
+        if let Ok(m) = fetch_model(addr, opts) {
+            if m.rounds >= min_rounds {
+                return Ok(m);
+            }
+        }
+        // xtask-allow: no-raw-instant -- same settle deadline
+        if std::time::Instant::now() >= deadline {
+            bail!(
+                "{addr} did not reach {min_rounds} rounds within {:.1}s",
+                timeout.as_secs_f64()
+            );
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn server_args(plan: &FleetPlan, idx: usize) -> (Addr, Vec<String>) {
+    let sock = plan.scratch.join(format!("srv-{idx}.sock"));
+    let addr = Addr::Unix(sock.clone());
+    let args = vec![
+        "serve".to_string(),
+        "--listen".to_string(),
+        format!("unix:{}", sock.display()),
+        "--connect".to_string(),
+        format!("unix:{}", plan.scratch.join("publish.sock").display()),
+        "--follow".to_string(),
+        plan.scratch.join("trail").display().to_string(),
+        "--heartbeat-ms".to_string(),
+        plan.heartbeat_ms.to_string(),
+    ];
+    (addr, args)
+}
+
+/// Run the fleet: spawn, load, (optionally) kill and recover, verify
+/// byte-identical convergence, tear down. `x` supplies query batches
+/// for the load legs (dimensions must match the trainer's dataset).
+pub fn run_fleet(
+    plan: &FleetPlan,
+    x: &Matrix,
+) -> anyhow::Result<FleetOutcome> {
+    ensure!(plan.servers >= 1, "fleet needs at least one server");
+    std::fs::create_dir_all(plan.scratch.join("trail"))
+        .context("fleet scratch dir")?;
+    let opts = FabricOptions::with_heartbeat(Duration::from_millis(
+        plan.heartbeat_ms.max(1),
+    ));
+    let mut fleet = Fleet::new();
+
+    // trainer: train-serve with the bus bridged onto the publish socket
+    // and a checkpoint trail for degraded followers
+    let mut trainer_args: Vec<String> = vec!["train-serve".into()];
+    trainer_args.extend(plan.dataset_flags.iter().cloned());
+    trainer_args.extend([
+        "--publish".into(),
+        format!("unix:{}", plan.scratch.join("publish.sock").display()),
+        "--checkpoint-dir".into(),
+        plan.scratch.join("trail").display().to_string(),
+        "--checkpoint-every".into(),
+        "1".into(),
+        "--heartbeat-ms".into(),
+        plan.heartbeat_ms.to_string(),
+    ]);
+    let trainer = fleet.spawn("trainer", &plan.exe, &trainer_args)?;
+
+    let mut addrs = Vec::with_capacity(plan.servers);
+    for i in 0..plan.servers {
+        let (addr, args) = server_args(plan, i);
+        fleet.spawn(&format!("server-{i}"), &plan.exe, &args)?;
+        addrs.push(addr);
+    }
+
+    // every server must come up and serve *some* model
+    for addr in &addrs {
+        wait_for_rounds(addr, 1, plan.settle_timeout, &opts)
+            .context("server startup")?;
+    }
+
+    let load = LoadOptions {
+        connections: 2,
+        queries_per_conn: plan.queries.max(1),
+        batch: plan.batch,
+        qps: 0.0,
+        seed: 7,
+        fabric: opts,
+    };
+    let mut shed = 0u64;
+    for addr in &addrs {
+        let report = run_load(addr, x, &load)?;
+        ensure!(
+            report.answered > 0,
+            "{addr} answered no queries in the warm-up leg"
+        );
+        shed += report.shed;
+    }
+
+    // kill leg: SIGKILL the last server mid-stream, survivor must keep
+    // answering, then the restarted process must catch up
+    let mut survivor_answered = 0u64;
+    let mut restarted_caught_up = false;
+    if plan.kill_one && plan.servers >= 2 {
+        let victim = plan.servers - 1;
+        fleet.kill(1 + victim)?; // index 0 is the trainer
+        let report = run_load(&addrs[0], x, &load)?;
+        ensure!(
+            report.answered > 0,
+            "survivor stopped answering after the kill"
+        );
+        survivor_answered = report.answered;
+        shed += report.shed;
+        let (_, args) = server_args(plan, victim);
+        fleet.spawn(&format!("server-{victim}-restarted"), &plan.exe, &args)?;
+        wait_for_rounds(
+            &addrs[victim],
+            1,
+            plan.settle_timeout,
+            &opts,
+        )
+        .context("restarted server recovery")?;
+        restarted_caught_up = true;
+    }
+
+    // the trainer must finish its selection budget and exit cleanly
+    ensure!(
+        fleet.wait_with_deadline(trainer, plan.train_timeout)?,
+        "trainer did not finish within {:.1}s",
+        plan.train_timeout.as_secs_f64()
+    );
+
+    // final convergence: every server serves the byte-identical model
+    // at the full selection budget
+    let mut frames: Vec<Vec<u8>> = Vec::with_capacity(addrs.len());
+    for addr in &addrs {
+        let m = wait_for_rounds(
+            addr,
+            plan.expected_rounds,
+            plan.settle_timeout,
+            &opts,
+        )
+        .context("final convergence")?;
+        frames.push(
+            Frame::Model(WireModel { data_hash: None, ..m }).encode(),
+        );
+    }
+    let models_identical =
+        frames.windows(2).all(|w| w[0] == w[1]);
+    ensure!(
+        models_identical,
+        "servers converged to different model bytes"
+    );
+    let final_rounds = plan.expected_rounds;
+
+    Ok(FleetOutcome {
+        servers: plan.servers,
+        final_rounds,
+        models_identical,
+        survivor_answered,
+        restarted_caught_up,
+        shed,
+    })
+}

@@ -1,0 +1,294 @@
+//! `SocketFollower`: a [`ModelSource`] fed over the fabric, with
+//! graceful degradation to the checkpoint trail.
+//!
+//! A background reader owns the connection lifecycle: connect with a
+//! deadline, read frames under a read timeout (a trainer that sends
+//! neither models nor heartbeats for that long is declared hung), and
+//! reconnect through capped exponential backoff with deterministic
+//! jitter ([`super::Backoff`]). Received models land on an internal
+//! [`ModelBus`], so [`SocketFollower::poll_model`] never blocks the
+//! serving loop.
+//!
+//! Degradation ladder: while connected, the wire is the source of
+//! truth; on publisher loss the follower keeps serving its last-good
+//! model and — when a checkpoint trail is configured — picks up
+//! anything newer the trainer managed to flush before dying; when the
+//! trainer restarts, the socket wins again. A `rounds`-monotonic
+//! filter across both sources guarantees the served model never
+//! regresses.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::net::{Addr, Conn};
+use super::wire::{self, Frame};
+use super::{Backoff, FabricOptions};
+use crate::coordinator::serve::{
+    CheckpointFollower, ModelSource, ModelUpdate,
+};
+use crate::coordinator::stream::{BusFollower, ModelBus};
+
+/// Follower health snapshot (observability for tests and the fleet).
+#[derive(Clone, Copy, Debug)]
+pub struct FollowerStatus {
+    /// Currently holding a live connection to the publisher.
+    pub connected: bool,
+    /// Successful connections beyond the first (i.e. recoveries).
+    pub reconnects: u64,
+    /// The publisher sent [`Frame::Shutdown`]: the model stream is
+    /// complete and no further reconnects will be attempted.
+    pub publisher_done: bool,
+}
+
+#[derive(Default)]
+struct Shared {
+    connected: AtomicBool,
+    connects: AtomicU64,
+    done: AtomicBool,
+    data_hash: Mutex<Option<u64>>,
+}
+
+/// A [`ModelSource`] whose models arrive over a fabric socket, with an
+/// optional checkpoint-trail fallback for publisher outages.
+pub struct SocketFollower {
+    relay: BusFollower,
+    trail: Option<CheckpointFollower>,
+    last_rounds: usize,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SocketFollower {
+    /// Start following `addr`. Construction never fails: all fallible
+    /// work (connecting, reconnecting) happens on the background
+    /// reader, which retries under backoff until the publisher
+    /// appears. `trail` names a checkpoint directory to fall back to
+    /// while disconnected.
+    pub fn connect(
+        addr: Addr,
+        trail: Option<PathBuf>,
+        opts: FabricOptions,
+    ) -> SocketFollower {
+        let bus = ModelBus::new();
+        let relay = bus.follower();
+        let shared = Arc::new(Shared::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_shared = Arc::clone(&shared);
+        let t_stop = Arc::clone(&stop);
+        let reader = std::thread::spawn(move || {
+            reader_loop(addr, opts, bus, t_shared, t_stop)
+        });
+        SocketFollower {
+            relay,
+            trail: trail.map(CheckpointFollower::new),
+            last_rounds: 0,
+            shared,
+            stop,
+            reader: Some(reader),
+        }
+    }
+
+    /// Current health snapshot.
+    pub fn status(&self) -> FollowerStatus {
+        FollowerStatus {
+            connected: self.shared.connected.load(Ordering::SeqCst),
+            reconnects: self
+                .shared
+                .connects
+                .load(Ordering::SeqCst)
+                .saturating_sub(1),
+            publisher_done: self.shared.done.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Block until a non-empty model is available (from the wire or
+    /// the trail), honoring `timeout` as wall-clock seconds.
+    pub fn wait_for_model(
+        &mut self,
+        timeout: Duration,
+        poll: Duration,
+    ) -> anyhow::Result<ModelUpdate> {
+        // xtask-allow: no-raw-instant -- startup deadline for the first
+        // model over the fabric; wall-clock by nature, no session exists
+        let deadline = std::time::Instant::now().checked_add(timeout);
+        loop {
+            if let Some(update) = self.poll_model()? {
+                return Ok(update);
+            }
+            // xtask-allow: no-raw-instant -- same startup deadline
+            let now = std::time::Instant::now();
+            let remaining = match deadline {
+                Some(d) if now < d => d - now,
+                Some(_) => anyhow::bail!(
+                    "no model arrived over the fabric within {:.1}s",
+                    timeout.as_secs_f64()
+                ),
+                None => poll,
+            };
+            std::thread::sleep(poll.min(remaining));
+        }
+    }
+}
+
+impl ModelSource for SocketFollower {
+    fn poll_model(&mut self) -> anyhow::Result<Option<ModelUpdate>> {
+        // the wire is the fresh source: latest-wins via the relay bus
+        if let Some(v) = self.relay.poll() {
+            if v.rounds > self.last_rounds {
+                self.last_rounds = v.rounds;
+                let data_hash = *self
+                    .shared
+                    .data_hash
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                return Ok(Some(ModelUpdate {
+                    predictor: v.predictor.clone(),
+                    rounds: v.rounds,
+                    data_hash,
+                }));
+            }
+        }
+        // degraded: publisher unreachable — consult the trail, never
+        // surfacing anything older than what the wire already served
+        if !self.shared.connected.load(Ordering::SeqCst)
+            && !self.shared.done.load(Ordering::SeqCst)
+        {
+            if let Some(trail) = &mut self.trail {
+                if let Some(update) = trail.poll_model()? {
+                    if update.rounds > self.last_rounds {
+                        self.last_rounds = update.rounds;
+                        return Ok(Some(update));
+                    }
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+impl Drop for SocketFollower {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Background connection owner: connect → drain frames → reconnect,
+/// forever (until stop or a clean publisher shutdown).
+fn reader_loop(
+    addr: Addr,
+    opts: FabricOptions,
+    bus: ModelBus,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut backoff = Backoff::from_options(&opts);
+    let mut last_published = 0usize;
+    while !stop.load(Ordering::SeqCst) {
+        let conn = match Conn::connect(&addr, opts.connect_timeout) {
+            Ok(c) => c,
+            Err(_) => {
+                sleep_interruptible(backoff.next_delay(), &stop);
+                continue;
+            }
+        };
+        if conn
+            .set_timeouts(Some(opts.read_timeout), Some(opts.write_timeout))
+            .is_err()
+        {
+            conn.shutdown();
+            sleep_interruptible(backoff.next_delay(), &stop);
+            continue;
+        }
+        backoff.reset();
+        shared.connects.fetch_add(1, Ordering::SeqCst);
+        shared.connected.store(true, Ordering::SeqCst);
+        let done = drain_connection(
+            conn,
+            &bus,
+            &shared,
+            &stop,
+            &mut last_published,
+        );
+        shared.connected.store(false, Ordering::SeqCst);
+        if done {
+            shared.done.store(true, Ordering::SeqCst);
+            bus.close();
+            return;
+        }
+        // lost mid-stream: retry from a fresh (short) backoff — the
+        // publisher was just here, so it is likely restarting
+        sleep_interruptible(backoff.next_delay(), &stop);
+    }
+}
+
+/// Read frames until error, stop, or shutdown. Returns `true` on a
+/// clean [`Frame::Shutdown`] (stream complete), `false` to reconnect.
+fn drain_connection(
+    mut conn: Conn,
+    bus: &ModelBus,
+    shared: &Shared,
+    stop: &AtomicBool,
+    last_published: &mut usize,
+) -> bool {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            conn.shutdown();
+            // treated as done: the follower itself is being dropped
+            return true;
+        }
+        match wire::read_frame(&mut conn) {
+            Ok(Frame::Model(m)) => {
+                *shared
+                    .data_hash
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner) =
+                    m.data_hash;
+                // monotone + non-empty guard: a restarted trainer
+                // replaying older rounds must never regress the server
+                if m.rounds > *last_published
+                    && !m.predictor.selected.is_empty()
+                {
+                    *last_published = m.rounds;
+                    bus.publish(m.predictor, m.rounds);
+                }
+            }
+            Ok(Frame::Heartbeat { .. }) => {}
+            Ok(Frame::Shutdown) => {
+                conn.shutdown();
+                return true;
+            }
+            Ok(_) => {
+                // protocol confusion: this socket is not a publisher
+                conn.shutdown();
+                return false;
+            }
+            Err(_) => {
+                // torn frame, EOF, or heartbeat silence past the read
+                // timeout: drop the connection and reconnect
+                conn.shutdown();
+                return false;
+            }
+        }
+    }
+}
+
+/// Sleep in small slices so a drop of the follower is not stuck behind
+/// a long backoff delay.
+fn sleep_interruptible(total: Duration, stop: &AtomicBool) {
+    let slice = Duration::from_millis(20);
+    let mut remaining = total;
+    while remaining > Duration::ZERO {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let step = remaining.min(slice);
+        std::thread::sleep(step);
+        remaining = remaining.saturating_sub(step);
+    }
+}

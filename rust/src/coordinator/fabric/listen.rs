@@ -1,0 +1,520 @@
+//! `serve --listen`: a query-serving front over the fabric with
+//! admission control, plus the client-side load generator that the
+//! serve bench and fleet gauntlet drive against it.
+//!
+//! Queries fan out to a fixed pool of worker threads behind
+//! **per-worker bounded queues**. A connection thread offers each
+//! query to every worker once (round-robin from a rotating start); if
+//! all queues are full the server answers
+//! [`Frame::Overloaded`] immediately — shedding load with an explicit
+//! retry-after beats queueing unbounded latency, and the client knows
+//! exactly what happened.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Context;
+
+use super::net::{Addr, Conn, Listener};
+use super::wire::{self, Frame, WireModel};
+use super::FabricOptions;
+use crate::coordinator::serve::HotSwapServer;
+use crate::linalg::Matrix;
+
+/// Knobs for a listening server.
+#[derive(Clone, Copy, Debug)]
+pub struct ListenOptions {
+    /// Prediction worker threads.
+    pub workers: usize,
+    /// Bounded queue depth per worker; the admission-control knob.
+    pub queue_depth: usize,
+    /// Retry-after hint (milliseconds) sent with
+    /// [`Frame::Overloaded`].
+    pub retry_after_ms: u64,
+    /// Artificial per-query cost, for tests and benches that need a
+    /// deterministically saturated worker pool. Zero in production.
+    pub worker_delay: Duration,
+    /// Fabric-wide timeouts.
+    pub fabric: FabricOptions,
+}
+
+impl Default for ListenOptions {
+    fn default() -> ListenOptions {
+        ListenOptions {
+            workers: 2,
+            queue_depth: 2,
+            retry_after_ms: 25,
+            worker_delay: Duration::ZERO,
+            fabric: FabricOptions::default(),
+        }
+    }
+}
+
+/// Monotonic counters, shared with tests and the fleet.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ListenCounts {
+    /// Queries answered with predictions.
+    pub answered: u64,
+    /// Queries shed by admission control.
+    pub shed: u64,
+    /// Model snapshots served over [`Frame::ModelRequest`].
+    pub model_requests: u64,
+}
+
+#[derive(Default)]
+struct Stats {
+    answered: AtomicU64,
+    shed: AtomicU64,
+    model_requests: AtomicU64,
+}
+
+struct Job {
+    query: Matrix,
+    reply: SyncSender<Frame>,
+}
+
+/// A running `serve --listen` front. Dropping it stops the accept
+/// loop, drains the workers, and joins every connection thread.
+pub struct ListenServer {
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<Stats>,
+}
+
+impl ListenServer {
+    /// Bind `addr` and serve queries against `server` (whose model a
+    /// separate swap loop keeps fresh).
+    pub fn spawn(
+        addr: &Addr,
+        server: Arc<HotSwapServer>,
+        opts: ListenOptions,
+    ) -> anyhow::Result<ListenServer> {
+        let listener = Listener::bind(addr).context("listen bind")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Stats::default());
+        let workers_n = opts.workers.max(1);
+        let depth = opts.queue_depth.max(1);
+        let mut senders = Vec::with_capacity(workers_n);
+        let mut workers = Vec::with_capacity(workers_n);
+        for _ in 0..workers_n {
+            let (tx, rx) = sync_channel::<Job>(depth);
+            senders.push(tx);
+            let w_server = Arc::clone(&server);
+            workers.push(std::thread::spawn(move || {
+                worker_loop(rx, w_server, opts.worker_delay)
+            }));
+        }
+        let rr = Arc::new(AtomicUsize::new(0));
+        let conn_handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let t_stop = Arc::clone(&stop);
+        let t_stats = Arc::clone(&stats);
+        let accept = std::thread::spawn(move || {
+            while !t_stop.load(Ordering::SeqCst) {
+                match listener.accept_idle() {
+                    Ok(Some(conn)) => {
+                        let c_senders = senders.clone();
+                        let c_server = Arc::clone(&server);
+                        let c_stats = Arc::clone(&t_stats);
+                        let c_stop = Arc::clone(&t_stop);
+                        let c_rr = Arc::clone(&rr);
+                        let h = std::thread::spawn(move || {
+                            serve_client(
+                                conn, c_senders, c_server, c_stats,
+                                c_stop, c_rr, opts,
+                            )
+                        });
+                        conn_handles
+                            .lock()
+                            .unwrap_or_else(
+                                std::sync::PoisonError::into_inner,
+                            )
+                            .push(h);
+                    }
+                    Ok(None) | Err(_) => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+            // joining here (not in drop) keeps ListenServer's drop from
+            // racing conn threads that still hold sender clones
+            let handles: Vec<_> = conn_handles
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .drain(..)
+                .collect();
+            for h in handles {
+                let _ = h.join();
+            }
+        });
+        Ok(ListenServer {
+            stop,
+            accept: Some(accept),
+            workers,
+            stats,
+        })
+    }
+
+    /// Counter snapshot.
+    pub fn counts(&self) -> ListenCounts {
+        ListenCounts {
+            answered: self.stats.answered.load(Ordering::SeqCst),
+            shed: self.stats.shed.load(Ordering::SeqCst),
+            model_requests: self
+                .stats
+                .model_requests
+                .load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl Drop for ListenServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // accept loop has joined the conn threads, so every worker
+        // sender clone is gone once this vector drops below
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Job>,
+    server: Arc<HotSwapServer>,
+    delay: Duration,
+) {
+    while let Ok(job) = rx.recv() {
+        if delay > Duration::ZERO {
+            std::thread::sleep(delay);
+        }
+        let model = server.snapshot();
+        let max_feat =
+            model.predictor.selected.iter().copied().max();
+        let frame = match max_feat {
+            Some(f) if f >= job.query.rows() => Frame::Refused {
+                reason: format!(
+                    "query has {} features but the model selects \
+                     feature {f}",
+                    job.query.rows()
+                ),
+            },
+            _ => Frame::Predictions {
+                rounds: model.rounds,
+                values: model.predictor.predict_matrix(&job.query),
+            },
+        };
+        let _ = job.reply.send(frame);
+    }
+}
+
+/// One client connection: read frames under a short poll timeout (so
+/// the stop flag stays live), answer queries through the worker pool,
+/// shed on full queues.
+fn serve_client(
+    mut conn: Conn,
+    senders: Vec<SyncSender<Job>>,
+    server: Arc<HotSwapServer>,
+    stats: Arc<Stats>,
+    stop: Arc<AtomicBool>,
+    rr: Arc<AtomicUsize>,
+    opts: ListenOptions,
+) {
+    if conn
+        .set_timeouts(
+            Some(Duration::from_millis(100)),
+            Some(opts.fabric.write_timeout),
+        )
+        .is_err()
+    {
+        return;
+    }
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let frame = match wire::read_frame_or_idle(&mut conn) {
+            Ok(None) => continue,
+            Ok(Some(f)) => f,
+            Err(_) => break,
+        };
+        let reply = match frame {
+            Frame::Query { rows, cols, values } => {
+                let query = Matrix::from_vec(rows, cols, values);
+                match offer(&senders, &rr, query) {
+                    Some(reply_rx) => {
+                        match reply_rx.recv_timeout(Duration::from_secs(10))
+                        {
+                            Ok(f) => {
+                                stats
+                                    .answered
+                                    .fetch_add(1, Ordering::SeqCst);
+                                f
+                            }
+                            Err(_) => Frame::Refused {
+                                reason: "worker reply timed out".into(),
+                            },
+                        }
+                    }
+                    None => {
+                        stats.shed.fetch_add(1, Ordering::SeqCst);
+                        Frame::Overloaded {
+                            retry_after_ms: opts.retry_after_ms,
+                        }
+                    }
+                }
+            }
+            Frame::ModelRequest => {
+                stats.model_requests.fetch_add(1, Ordering::SeqCst);
+                let model = server.snapshot();
+                Frame::Model(WireModel {
+                    rounds: model.rounds,
+                    data_hash: None,
+                    predictor: model.predictor.clone(),
+                })
+            }
+            _ => Frame::Refused {
+                reason: "unexpected frame kind for a serving front"
+                    .into(),
+            },
+        };
+        if wire::write_frame(&mut conn, &reply).is_err() {
+            break;
+        }
+    }
+    conn.shutdown();
+}
+
+/// Offer a query to each worker once, round-robin from a rotating
+/// start. `None` means every queue was full: shed.
+fn offer(
+    senders: &[SyncSender<Job>],
+    rr: &AtomicUsize,
+    query: Matrix,
+) -> Option<Receiver<Frame>> {
+    let start = rr.fetch_add(1, Ordering::Relaxed);
+    let (reply_tx, reply_rx) = sync_channel::<Frame>(1);
+    let mut job = Job { query, reply: reply_tx };
+    for i in 0..senders.len() {
+        let idx = (start + i) % senders.len();
+        match senders[idx].try_send(job) {
+            Ok(()) => return Some(reply_rx),
+            Err(TrySendError::Full(j) | TrySendError::Disconnected(j)) => {
+                job = j;
+            }
+        }
+    }
+    None
+}
+
+/// Load-generator knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadOptions {
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Queries sent per connection.
+    pub queries_per_conn: usize,
+    /// Examples per query batch.
+    pub batch: usize,
+    /// Aggregate target rate (queries/second) across all connections;
+    /// 0 means unpaced (send as fast as the server answers).
+    pub qps: f64,
+    /// Seed for the per-connection batch offsets.
+    pub seed: u64,
+    /// Fabric-wide timeouts.
+    pub fabric: FabricOptions,
+}
+
+impl Default for LoadOptions {
+    fn default() -> LoadOptions {
+        LoadOptions {
+            connections: 2,
+            queries_per_conn: 50,
+            batch: 16,
+            qps: 0.0,
+            seed: 42,
+            fabric: FabricOptions::default(),
+        }
+    }
+}
+
+/// Aggregate outcome of a load run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadReport {
+    /// Queries sent.
+    pub sent: u64,
+    /// Queries answered with predictions.
+    pub answered: u64,
+    /// Queries shed with [`Frame::Overloaded`].
+    pub shed: u64,
+    /// Queries refused at the protocol level.
+    pub refused: u64,
+    /// Transport errors (failed sends/reads, counted once each).
+    pub errors: u64,
+    /// Median answer latency, milliseconds.
+    pub p50_ms: f64,
+    /// Tail answer latency, milliseconds.
+    pub p99_ms: f64,
+    /// Wall-clock duration of the run, seconds.
+    pub wall_s: f64,
+    /// Achieved answered-queries-per-second.
+    pub achieved_qps: f64,
+}
+
+/// Drive `opts.connections` clients against a listening server,
+/// sending feature batches sliced out of `x`. Deterministic apart from
+/// scheduling: batch offsets come from `opts.seed`.
+pub fn run_load(
+    addr: &Addr,
+    x: &Matrix,
+    opts: &LoadOptions,
+) -> anyhow::Result<LoadReport> {
+    let period = if opts.qps > 0.0 {
+        Duration::from_secs_f64(opts.connections.max(1) as f64 / opts.qps)
+    } else {
+        Duration::ZERO
+    };
+    // xtask-allow: no-raw-instant -- load-generator latency clock;
+    // wall-clock measurement is the whole point of the bench
+    let t0 = std::time::Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..opts.connections.max(1) {
+        let addr = addr.clone();
+        let opts = *opts;
+        let batches = client_batches(x, &opts, c as u64);
+        threads.push(std::thread::spawn(move || {
+            client_loop(&addr, batches, &opts, period)
+        }));
+    }
+    let mut report = LoadReport::default();
+    let mut latencies: Vec<f64> = Vec::new();
+    for t in threads {
+        if let Ok((part, lats)) = t.join() {
+            report.sent += part.sent;
+            report.answered += part.answered;
+            report.shed += part.shed;
+            report.refused += part.refused;
+            report.errors += part.errors;
+            latencies.extend(lats);
+        }
+    }
+    latencies.sort_by(f64::total_cmp);
+    report.p50_ms = percentile(&latencies, 0.50);
+    report.p99_ms = percentile(&latencies, 0.99);
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report.achieved_qps = if report.wall_s > 0.0 {
+        report.answered as f64 / report.wall_s
+    } else {
+        0.0
+    };
+    Ok(report)
+}
+
+/// Pre-slice up to 8 distinct feature-major batches for one client
+/// (cycled during the run), offset deterministically by `conn_idx`.
+fn client_batches(
+    x: &Matrix,
+    opts: &LoadOptions,
+    conn_idx: u64,
+) -> Vec<(usize, usize, Vec<f64>)> {
+    let mut rng = crate::rng::Pcg64::new(opts.seed, conn_idx);
+    let cols = x.cols();
+    let batch = opts.batch.max(1).min(cols.max(1));
+    let distinct = opts.queries_per_conn.clamp(1, 8);
+    let mut out = Vec::with_capacity(distinct);
+    for _ in 0..distinct {
+        let start = if cols > batch { rng.below(cols - batch) } else { 0 };
+        let mut values = Vec::with_capacity(x.rows() * batch);
+        for r in 0..x.rows() {
+            values.extend_from_slice(&x.row(r)[start..start + batch]);
+        }
+        out.push((x.rows(), batch, values));
+    }
+    out
+}
+
+fn client_loop(
+    addr: &Addr,
+    batches: Vec<(usize, usize, Vec<f64>)>,
+    opts: &LoadOptions,
+    period: Duration,
+) -> (LoadReport, Vec<f64>) {
+    let mut part = LoadReport::default();
+    let mut latencies = Vec::new();
+    let mut conn = match connect_client(addr, &opts.fabric) {
+        Ok(c) => c,
+        Err(_) => {
+            part.errors += 1;
+            return (part, latencies);
+        }
+    };
+    for i in 0..opts.queries_per_conn {
+        let (rows, cols, values) = &batches[i % batches.len()];
+        let query = Frame::Query {
+            rows: *rows,
+            cols: *cols,
+            values: values.clone(),
+        };
+        // xtask-allow: no-raw-instant -- per-query latency measurement
+        let sent_at = std::time::Instant::now();
+        part.sent += 1;
+        let outcome = wire::write_frame(&mut conn, &query)
+            .and_then(|()| wire::read_frame(&mut conn));
+        match outcome {
+            Ok(Frame::Predictions { .. }) => {
+                part.answered += 1;
+                latencies
+                    .push(sent_at.elapsed().as_secs_f64() * 1000.0);
+            }
+            Ok(Frame::Overloaded { retry_after_ms }) => {
+                part.shed += 1;
+                std::thread::sleep(Duration::from_millis(
+                    retry_after_ms.min(1000),
+                ));
+            }
+            Ok(_) => part.refused += 1,
+            Err(_) => {
+                part.errors += 1;
+                match connect_client(addr, &opts.fabric) {
+                    Ok(c) => conn = c,
+                    Err(_) => break,
+                }
+            }
+        }
+        if period > Duration::ZERO {
+            let spent = sent_at.elapsed();
+            if spent < period {
+                std::thread::sleep(period - spent);
+            }
+        }
+    }
+    conn.shutdown();
+    (part, latencies)
+}
+
+fn connect_client(
+    addr: &Addr,
+    fabric: &FabricOptions,
+) -> anyhow::Result<Conn> {
+    let conn = Conn::connect(addr, fabric.connect_timeout)?;
+    conn.set_timeouts(
+        Some(fabric.read_timeout.max(Duration::from_secs(5))),
+        Some(fabric.write_timeout),
+    )
+    .context("client timeouts")?;
+    Ok(conn)
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * q).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}

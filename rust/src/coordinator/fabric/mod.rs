@@ -1,0 +1,202 @@
+//! Multi-process serving fabric: socket transport for model versions.
+//!
+//! The in-process [`crate::coordinator::stream::ModelBus`] stops at the
+//! process boundary; this module carries it across one. A
+//! [`publish::SocketPublisher`] bridges the bus onto a length-prefixed,
+//! checksummed wire format ([`wire`]) over a Unix socket or TCP
+//! ([`net`]); a [`follow::SocketFollower`] on the other side implements
+//! [`crate::coordinator::serve::ModelSource`], so `serve_hotswap` works
+//! unchanged whether its models arrive in-process, from a checkpoint
+//! trail, or over the fabric.
+//!
+//! Robustness posture (every piece is exercised by fault injection in
+//! `rust/tests/fabric.rs` and the CI fleet gauntlet):
+//!
+//! - **Torn frames never become models.** Frames end in an FNV-1a
+//!   checksum; truncated, bit-flipped, wrong-version, or oversized
+//!   frames are refused and the connection is dropped ([`wire`]).
+//! - **No unbounded I/O.** Connects, reads, and writes all carry
+//!   deadlines; heartbeats flow when the trainer is between rounds, so
+//!   a silent peer is indistinguishable from a dead one only until the
+//!   read timeout fires (enforced tree-wide by the `no-unbounded-io`
+//!   analyzer rule).
+//! - **Bounded, deterministic retry.** Reconnects use capped
+//!   exponential backoff with jitter drawn from the repo's own
+//!   [`crate::rng::Pcg64`] ([`Backoff`]), so fault-injection runs
+//!   replay exactly.
+//! - **Graceful degradation.** A follower that loses its publisher
+//!   keeps serving the last-good model, falls back to the checkpoint
+//!   trail if one is configured, and re-syncs over the socket when the
+//!   trainer returns. Overloaded servers shed load with an explicit
+//!   retry-after instead of queueing latency ([`listen`]).
+
+pub mod fault;
+pub mod fleet;
+pub mod follow;
+pub mod listen;
+pub mod net;
+pub mod publish;
+pub mod wire;
+
+use std::time::Duration;
+
+use crate::rng::Pcg64;
+
+/// Fabric-wide timing knobs. One struct so publisher, follower, and
+/// fleet agree on defaults; every duration is a hard deadline, not a
+/// hint.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricOptions {
+    /// Deadline for an outbound connect (TCP; Unix connects resolve
+    /// immediately).
+    pub connect_timeout: Duration,
+    /// Read deadline on established connections. A follower that sees
+    /// no frame (model *or* heartbeat) for this long declares the
+    /// trainer hung and reconnects.
+    pub read_timeout: Duration,
+    /// Write deadline on established connections.
+    pub write_timeout: Duration,
+    /// Publisher heartbeat cadence; must be comfortably below
+    /// `read_timeout` (the default is 3×).
+    pub heartbeat: Duration,
+    /// First reconnect delay; doubles per failed attempt.
+    pub backoff_base: Duration,
+    /// Ceiling on the reconnect delay.
+    pub backoff_cap: Duration,
+    /// Seed for deterministic backoff jitter.
+    pub seed: u64,
+}
+
+impl Default for FabricOptions {
+    fn default() -> FabricOptions {
+        let heartbeat = Duration::from_millis(500);
+        FabricOptions {
+            connect_timeout: Duration::from_secs(1),
+            read_timeout: heartbeat * 3,
+            write_timeout: Duration::from_secs(1),
+            heartbeat,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            seed: 0x5eed_f8b1,
+        }
+    }
+}
+
+impl FabricOptions {
+    /// Derive consistent options from a heartbeat cadence: the read
+    /// timeout is 3 heartbeats (one lost beacon is tolerated, two are
+    /// not), everything else keeps its default.
+    pub fn with_heartbeat(heartbeat: Duration) -> FabricOptions {
+        FabricOptions {
+            heartbeat,
+            read_timeout: heartbeat.saturating_mul(3),
+            ..FabricOptions::default()
+        }
+    }
+}
+
+/// Capped exponential backoff with deterministic jitter.
+///
+/// Attempt `i` sleeps uniformly in `[d/2, d)` where
+/// `d = min(base · 2^i, cap)`; the jitter stream is a dedicated
+/// [`Pcg64`], so two followers with different seeds never thundering-herd
+/// a restarted trainer, while a given seed replays the exact delay
+/// sequence in tests.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Pcg64,
+}
+
+impl Backoff {
+    /// Backoff with explicit bounds and jitter seed.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff { base, cap, attempt: 0, rng: Pcg64::new(seed, 77) }
+    }
+
+    /// Backoff using the bounds and seed from `opts`.
+    pub fn from_options(opts: &FabricOptions) -> Backoff {
+        Backoff::new(opts.backoff_base, opts.backoff_cap, opts.seed)
+    }
+
+    /// Next delay to sleep before retrying; advances the attempt
+    /// counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let doubled = self
+            .base
+            .saturating_mul(1u32.checked_shl(self.attempt).unwrap_or(u32::MAX));
+        let d = doubled.min(self.cap).max(self.base.min(self.cap));
+        self.attempt = self.attempt.saturating_add(1);
+        let jitter = d.mul_f64(0.5 * self.rng.uniform());
+        d / 2 + jitter
+    }
+
+    /// Reset after a successful connection so the next failure starts
+    /// from `base` again.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Failed attempts since the last [`Backoff::reset`].
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let base = Duration::from_millis(50);
+        let cap = Duration::from_secs(2);
+        let mut b = Backoff::new(base, cap, 7);
+        let mut prev_bound = Duration::ZERO;
+        for i in 0..12 {
+            let d = b.next_delay();
+            assert!(d >= base / 2, "attempt {i}: {d:?} below base/2");
+            assert!(d <= cap, "attempt {i}: {d:?} above cap");
+            // the deterministic lower bound (d_exp / 2) is monotone
+            // until the cap is reached
+            let exp = base
+                .saturating_mul(1u32.checked_shl(i).unwrap_or(u32::MAX))
+                .min(cap);
+            assert!(d >= exp / 2);
+            assert!(exp / 2 >= prev_bound);
+            prev_bound = exp / 2;
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let mk = |seed| {
+            let mut b = Backoff::new(
+                Duration::from_millis(10),
+                Duration::from_millis(500),
+                seed,
+            );
+            (0..8).map(|_| b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(1), mk(1));
+        assert_ne!(mk(1), mk(2));
+    }
+
+    #[test]
+    fn backoff_reset_restarts() {
+        let mut b = Backoff::new(
+            Duration::from_millis(10),
+            Duration::from_secs(1),
+            3,
+        );
+        for _ in 0..6 {
+            b.next_delay();
+        }
+        assert_eq!(b.attempt(), 6);
+        b.reset();
+        assert_eq!(b.attempt(), 0);
+        assert!(b.next_delay() < Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,286 @@
+//! Transport: Unix sockets first, TCP second, one `Conn` type over
+//! both so the rest of the fabric never branches on transport.
+//!
+//! Every constructor here is deadline-aware: outbound connects use
+//! `TcpStream::connect_timeout` (Unix connects carry a justified
+//! allow — see the `no-unbounded-io` analyzer rule), accept loops are
+//! non-blocking polls, and [`Conn::set_timeouts`] arms `SO_RCVTIMEO` /
+//! `SO_SNDTIMEO` so no fabric read or write can hang forever on a
+//! dead peer.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::str::FromStr;
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+/// A fabric endpoint address.
+///
+/// Accepted spellings: `unix:/path/to.sock`, `tcp:host:port`, a bare
+/// path containing `/` (Unix), or a bare `host:port` (TCP).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Addr {
+    /// Unix domain socket at the given path.
+    Unix(PathBuf),
+    /// TCP endpoint as `host:port`.
+    Tcp(String),
+}
+
+impl Addr {
+    /// Parse an address from its CLI spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Addr> {
+        if let Some(rest) = s.strip_prefix("unix:") {
+            if rest.is_empty() {
+                bail!("empty unix socket path in {s:?}");
+            }
+            return Ok(Addr::Unix(PathBuf::from(rest)));
+        }
+        if let Some(rest) = s.strip_prefix("tcp:") {
+            if !rest.contains(':') {
+                bail!("tcp address {s:?} must be tcp:host:port");
+            }
+            return Ok(Addr::Tcp(rest.to_string()));
+        }
+        if s.contains('/') {
+            return Ok(Addr::Unix(PathBuf::from(s)));
+        }
+        if s.contains(':') {
+            return Ok(Addr::Tcp(s.to_string()));
+        }
+        bail!(
+            "cannot parse address {s:?}: use unix:/path, tcp:host:port, \
+             a /path, or host:port"
+        )
+    }
+}
+
+impl FromStr for Addr {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Addr> {
+        Addr::parse(s)
+    }
+}
+
+impl fmt::Display for Addr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Addr::Unix(p) => write!(f, "unix:{}", p.display()),
+            Addr::Tcp(hp) => write!(f, "tcp:{hp}"),
+        }
+    }
+}
+
+/// A bound, non-blocking listener over either transport.
+pub enum Listener {
+    /// Unix domain socket listener.
+    Unix(UnixListener),
+    /// TCP listener.
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Bind `addr` in non-blocking mode (accepts are polled via
+    /// [`Listener::accept_idle`] so a serving loop stays responsive to
+    /// shutdown). A stale Unix socket file from a crashed predecessor
+    /// is removed first.
+    pub fn bind(addr: &Addr) -> anyhow::Result<Listener> {
+        let listener = match addr {
+            Addr::Unix(path) => {
+                if path.exists() {
+                    // stale socket from a SIGKILLed process; bind()
+                    // would otherwise fail with AddrInUse forever
+                    let _ = std::fs::remove_file(path);
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("bind {addr}"))?;
+                l.set_nonblocking(true)
+                    .with_context(|| format!("nonblocking {addr}"))?;
+                Listener::Unix(l)
+            }
+            Addr::Tcp(hp) => {
+                let l = TcpListener::bind(hp.as_str())
+                    .with_context(|| format!("bind {addr}"))?;
+                l.set_nonblocking(true)
+                    .with_context(|| format!("nonblocking {addr}"))?;
+                Listener::Tcp(l)
+            }
+        };
+        Ok(listener)
+    }
+
+    /// Poll for one pending connection. Returns `Ok(None)` when no
+    /// client is waiting (the caller sleeps and re-checks its stop
+    /// flag). Accepted connections are switched back to blocking mode;
+    /// the caller must arm timeouts via [`Conn::set_timeouts`].
+    pub fn accept_idle(&self) -> anyhow::Result<Option<Conn>> {
+        let conn = match self {
+            Listener::Unix(l) => match l.accept() {
+                Ok((s, _)) => Conn::Unix(s),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return Ok(None)
+                }
+                Err(e) => return Err(e).context("accept"),
+            },
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => Conn::Tcp(s),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return Ok(None)
+                }
+                Err(e) => return Err(e).context("accept"),
+            },
+        };
+        conn.set_blocking().context("accepted conn mode")?;
+        Ok(Some(conn))
+    }
+}
+
+/// One established fabric connection over either transport.
+pub enum Conn {
+    /// Unix domain stream.
+    Unix(UnixStream),
+    /// TCP stream.
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    /// Connect to `addr` with a deadline. TCP resolves and uses
+    /// `connect_timeout`; Unix connects complete (or refuse)
+    /// immediately unless the listener backlog is saturated.
+    pub fn connect(addr: &Addr, timeout: Duration) -> anyhow::Result<Conn> {
+        match addr {
+            Addr::Unix(path) => {
+                // xtask-allow: no-unbounded-io -- unix connect has no connect_timeout in std; the very next fabric step arms read/write timeouts via set_timeouts, bounding every subsequent op
+                let s = UnixStream::connect(path)
+                    .with_context(|| format!("connect {addr}"))?;
+                Ok(Conn::Unix(s))
+            }
+            Addr::Tcp(hp) => {
+                let mut last = None;
+                for sa in hp
+                    .as_str()
+                    .to_socket_addrs()
+                    .with_context(|| format!("resolve {addr}"))?
+                {
+                    match TcpStream::connect_timeout(&sa, timeout) {
+                        Ok(s) => return Ok(Conn::Tcp(s)),
+                        Err(e) => last = Some(e),
+                    }
+                }
+                match last {
+                    Some(e) => {
+                        Err(e).with_context(|| format!("connect {addr}"))
+                    }
+                    None => bail!("{addr} resolved to no addresses"),
+                }
+            }
+        }
+    }
+
+    /// Arm read/write deadlines (`SO_RCVTIMEO` / `SO_SNDTIMEO`) so no
+    /// blocking I/O on this connection can outlive them.
+    pub fn set_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)
+            }
+            Conn::Tcp(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)
+            }
+        }
+    }
+
+    fn set_blocking(&self) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.set_nonblocking(false),
+            Conn::Tcp(s) => s.set_nonblocking(false),
+        }
+    }
+
+    /// Shut down both directions, unblocking any peer mid-read.
+    /// Errors are ignored — the socket may already be gone.
+    pub fn shutdown(&self) {
+        match self {
+            Conn::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_spellings_parse() {
+        assert_eq!(
+            Addr::parse("unix:/tmp/a.sock").unwrap(),
+            Addr::Unix(PathBuf::from("/tmp/a.sock"))
+        );
+        assert_eq!(
+            Addr::parse("tcp:127.0.0.1:9000").unwrap(),
+            Addr::Tcp("127.0.0.1:9000".into())
+        );
+        assert_eq!(
+            Addr::parse("/tmp/b.sock").unwrap(),
+            Addr::Unix(PathBuf::from("/tmp/b.sock"))
+        );
+        assert_eq!(
+            Addr::parse("localhost:80").unwrap(),
+            Addr::Tcp("localhost:80".into())
+        );
+        assert!(Addr::parse("nonsense").is_err());
+        assert!(Addr::parse("unix:").is_err());
+        assert!(Addr::parse("tcp:noport").is_err());
+    }
+
+    #[test]
+    fn addr_display_roundtrips() {
+        for s in ["unix:/tmp/a.sock", "tcp:127.0.0.1:9000"] {
+            assert_eq!(Addr::parse(s).unwrap().to_string(), s);
+        }
+    }
+}

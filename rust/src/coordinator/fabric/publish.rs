@@ -1,0 +1,187 @@
+//! `SocketPublisher`: bridge the in-process [`ModelBus`] onto the wire.
+//!
+//! One accept loop, one writer thread per connection. Every connection
+//! gets its own [`crate::coordinator::stream::BusFollower`], so a slow
+//! or dead subscriber never blocks the trainer or the other
+//! subscribers — the bus already coalesces versions (latest wins), and
+//! the writer simply drops the connection on any write error. Between
+//! model versions the writer emits heartbeats so followers can tell a
+//! quiet trainer from a hung one; when the bus closes it sends
+//! [`Frame::Shutdown`] so followers stop reconnecting.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Context;
+
+use super::net::{Addr, Conn, Listener};
+use super::wire::{self, Frame, WireModel};
+use super::FabricOptions;
+use crate::coordinator::stream::{BusWait, ModelBus};
+
+/// Bridges a [`ModelBus`] to a socket endpoint until dropped.
+pub struct SocketPublisher {
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    accepted: Arc<AtomicU64>,
+}
+
+impl SocketPublisher {
+    /// Bind `addr` and start bridging `bus`. A connection immediately
+    /// receives the newest published model (if any), then every newer
+    /// version, with heartbeats in between; `data_hash` (the training
+    /// data fingerprint) rides along on every model frame so followers
+    /// can refuse a mismatched dataset.
+    pub fn spawn(
+        addr: &Addr,
+        bus: ModelBus,
+        data_hash: Option<u64>,
+        opts: FabricOptions,
+    ) -> anyhow::Result<SocketPublisher> {
+        let listener = Listener::bind(addr).context("publisher bind")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let t_stop = Arc::clone(&stop);
+        let t_conns = Arc::clone(&conns);
+        let t_accepted = Arc::clone(&accepted);
+        let accept = std::thread::spawn(move || {
+            while !t_stop.load(Ordering::SeqCst) {
+                match listener.accept_idle() {
+                    Ok(Some(conn)) => {
+                        t_accepted.fetch_add(1, Ordering::SeqCst);
+                        let follower = bus.follower();
+                        let c_stop = Arc::clone(&t_stop);
+                        let h = std::thread::spawn(move || {
+                            serve_connection(conn, follower, data_hash, opts, c_stop)
+                        });
+                        t_conns
+                            .lock()
+                            .unwrap_or_else(
+                                std::sync::PoisonError::into_inner,
+                            )
+                            .push(h);
+                    }
+                    Ok(None) | Err(_) => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+        });
+        Ok(SocketPublisher {
+            stop,
+            accept: Some(accept),
+            conns,
+            accepted,
+        })
+    }
+
+    /// Connections accepted so far (observability for tests).
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = self
+            .conns
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .drain(..)
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SocketPublisher {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Writer loop for one subscriber. Exits on write failure (subscriber
+/// gone), bus close (after a [`Frame::Shutdown`]), or publisher stop.
+fn serve_connection(
+    mut conn: Conn,
+    mut follower: crate::coordinator::stream::BusFollower,
+    data_hash: Option<u64>,
+    opts: FabricOptions,
+    stop: Arc<AtomicBool>,
+) {
+    if conn
+        .set_timeouts(Some(opts.read_timeout), Some(opts.write_timeout))
+        .is_err()
+    {
+        return;
+    }
+    let mut seq = 0u64;
+    // catch-up: a late subscriber gets the current model right away
+    if let Some(v) = follower.poll() {
+        if !v.predictor.selected.is_empty()
+            && send_model(&mut conn, &v.predictor, v.rounds, data_hash)
+                .is_err()
+        {
+            conn.shutdown();
+            return;
+        }
+    }
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match follower.wait_newer(opts.heartbeat) {
+            BusWait::Newer(v) => {
+                if v.predictor.selected.is_empty() {
+                    continue;
+                }
+                if send_model(&mut conn, &v.predictor, v.rounds, data_hash)
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            BusWait::TimedOut => {
+                seq += 1;
+                if wire::write_frame(
+                    &mut conn,
+                    &Frame::Heartbeat { seq },
+                )
+                .is_err()
+                {
+                    break;
+                }
+            }
+            BusWait::Closed => {
+                let _ = wire::write_frame(&mut conn, &Frame::Shutdown);
+                let _ = conn.flush();
+                break;
+            }
+        }
+    }
+    conn.shutdown();
+}
+
+fn send_model(
+    conn: &mut Conn,
+    predictor: &crate::rls::Predictor,
+    rounds: usize,
+    data_hash: Option<u64>,
+) -> anyhow::Result<()> {
+    wire::write_frame(
+        conn,
+        &Frame::Model(WireModel {
+            rounds,
+            data_hash,
+            predictor: predictor.clone(),
+        }),
+    )
+}

@@ -1,0 +1,550 @@
+//! Length-prefixed binary wire format for model versions.
+//!
+//! Every frame is a self-checking envelope, byte-compatible across
+//! processes and platforms:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"GRLF"
+//! 4       4     format version (u32 LE, currently 1)
+//! 8       1     frame kind
+//! 9       4     payload length (u32 LE, capped at MAX_PAYLOAD)
+//! 13      L     payload (kind-specific, fixed little-endian layout)
+//! 13+L    8     FNV-1a 64 end-checksum of bytes 0..13+L (u64 LE)
+//! ```
+//!
+//! Model payloads carry **exact `f64` bit patterns** (`to_bits`, LE) —
+//! the same contract as the checkpoint codec, so a model that crossed
+//! the wire predicts bit-identically to the one the trainer published.
+//! The checksum reuses [`Fnv64`], the hasher behind checkpoint
+//! fingerprints, and is recomputed field-by-field on decode
+//! ([`Fnv64::write_u32`] for the header words); any torn, bit-flipped,
+//! wrong-version, or oversized frame is refused with a distinct error
+//! instead of ever yielding a wrong model.
+
+use std::io::Read;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::data::fingerprint::Fnv64;
+use crate::rls::Predictor;
+
+/// Frame magic: "GRLF" (greedy-rls fabric).
+pub const MAGIC: [u8; 4] = *b"GRLF";
+
+/// Wire format version; bump on any layout change.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Fixed envelope sizes: header (magic + version + kind + length) and
+/// trailing checksum.
+pub const HEADER_LEN: usize = 13;
+
+/// Trailing checksum size in bytes.
+pub const CHECKSUM_LEN: usize = 8;
+
+/// Hard cap on a frame payload. A length prefix above this is refused
+/// before any allocation — a torn stream or hostile peer cannot make a
+/// follower allocate gigabytes.
+pub const MAX_PAYLOAD: usize = 16 * 1024 * 1024;
+
+/// A model as it travels on the wire: the predictor plus provenance.
+/// Selection `rounds` is the version key — it is monotone for a live
+/// trainer and comparable with the checkpoint trail, so a follower fed
+/// from both sources never regresses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireModel {
+    /// Selection rounds behind this model.
+    pub rounds: usize,
+    /// Fingerprint of the training data
+    /// ([`crate::data::fingerprint::fingerprint_xy`]) when the publisher
+    /// carries one; `None` for sources without a dataset in hand.
+    pub data_hash: Option<u64>,
+    /// The sparse model itself, exact to the bit.
+    pub predictor: Predictor,
+}
+
+/// One fabric frame. Kinds 1–2 and 7 flow trainer → server
+/// (model push); 3–6 and 8 serve the query front of `serve --listen`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// A published model version (kind 1).
+    Model(WireModel),
+    /// Publisher liveness beacon (kind 2); `seq` increases per beacon.
+    Heartbeat {
+        /// Beacon sequence number on this connection.
+        seq: u64,
+    },
+    /// Prediction request (kind 3): a feature-major `rows × cols` batch
+    /// of full feature vectors, column per example.
+    Query {
+        /// Feature count (matrix rows).
+        rows: usize,
+        /// Example count (matrix columns).
+        cols: usize,
+        /// Feature-major values, `rows * cols` exactly.
+        values: Vec<f64>,
+    },
+    /// Answer to a [`Frame::Query`] (kind 4).
+    Predictions {
+        /// Selection rounds of the model that answered.
+        rounds: usize,
+        /// One prediction per queried example.
+        values: Vec<f64>,
+    },
+    /// Admission control: the server's queues are full (kind 5). The
+    /// client should back off for `retry_after_ms` instead of queueing
+    /// behind growing latency.
+    Overloaded {
+        /// Suggested client back-off, milliseconds.
+        retry_after_ms: u64,
+    },
+    /// Ask a server for its current model (kind 6).
+    ModelRequest,
+    /// Clean end-of-stream: the trainer's bus closed; no newer versions
+    /// will ever arrive on this connection (kind 7).
+    Shutdown,
+    /// Protocol-level refusal with a reason (kind 8) — e.g. a query
+    /// whose feature count is smaller than the model's largest selected
+    /// index.
+    Refused {
+        /// Human-readable refusal reason.
+        reason: String,
+    },
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Model(_) => 1,
+            Frame::Heartbeat { .. } => 2,
+            Frame::Query { .. } => 3,
+            Frame::Predictions { .. } => 4,
+            Frame::Overloaded { .. } => 5,
+            Frame::ModelRequest => 6,
+            Frame::Shutdown => 7,
+            Frame::Refused { .. } => 8,
+        }
+    }
+
+    /// Serialize to the full framed byte sequence (header + payload +
+    /// end-checksum), ready for one `write_all`.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        let mut out =
+            Vec::with_capacity(HEADER_LEN + payload.len() + CHECKSUM_LEN);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.push(self.kind());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        let sum = seal_hash(self.kind(), &payload);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Frame::Model(m) => {
+                p.extend_from_slice(&(m.rounds as u64).to_le_bytes());
+                p.push(u8::from(m.data_hash.is_some()));
+                p.extend_from_slice(
+                    &m.data_hash.unwrap_or(0).to_le_bytes(),
+                );
+                let k = m.predictor.selected.len();
+                p.extend_from_slice(&(k as u32).to_le_bytes());
+                for &f in &m.predictor.selected {
+                    p.extend_from_slice(&(f as u64).to_le_bytes());
+                }
+                for &w in &m.predictor.weights {
+                    p.extend_from_slice(&w.to_bits().to_le_bytes());
+                }
+            }
+            Frame::Heartbeat { seq } => {
+                p.extend_from_slice(&seq.to_le_bytes());
+            }
+            Frame::Query { rows, cols, values } => {
+                p.extend_from_slice(&(*rows as u32).to_le_bytes());
+                p.extend_from_slice(&(*cols as u32).to_le_bytes());
+                for &v in values {
+                    p.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            Frame::Predictions { rounds, values } => {
+                p.extend_from_slice(&(*rounds as u64).to_le_bytes());
+                p.extend_from_slice(&(values.len() as u32).to_le_bytes());
+                for &v in values {
+                    p.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            Frame::Overloaded { retry_after_ms } => {
+                p.extend_from_slice(&retry_after_ms.to_le_bytes());
+            }
+            Frame::ModelRequest | Frame::Shutdown => {}
+            Frame::Refused { reason } => {
+                let bytes = reason.as_bytes();
+                p.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                p.extend_from_slice(bytes);
+            }
+        }
+        p
+    }
+
+    /// Decode one complete frame from its exact byte sequence. Refuses
+    /// (with distinct errors) truncation, bad magic, an unsupported
+    /// format version, an oversized length prefix, checksum mismatch,
+    /// and unknown kinds — a torn frame can never decode into a wrong
+    /// model.
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Frame> {
+        ensure!(
+            bytes.len() >= HEADER_LEN + CHECKSUM_LEN,
+            "truncated frame: {} bytes is shorter than the {} byte \
+             envelope",
+            bytes.len(),
+            HEADER_LEN + CHECKSUM_LEN
+        );
+        let mut header = [0u8; HEADER_LEN];
+        header.copy_from_slice(&bytes[..HEADER_LEN]);
+        let (kind, plen) = parse_header(&header)?;
+        ensure!(
+            bytes.len() == HEADER_LEN + plen + CHECKSUM_LEN,
+            "truncated frame: payload declares {plen} bytes but the \
+             frame carries {}",
+            bytes.len().saturating_sub(HEADER_LEN + CHECKSUM_LEN)
+        );
+        let payload = &bytes[HEADER_LEN..HEADER_LEN + plen];
+        let stored = read_u64_le(&bytes[HEADER_LEN + plen..]);
+        let computed = seal_hash(kind, payload);
+        ensure!(
+            stored == computed,
+            "frame checksum mismatch: stored {stored:016x}, computed \
+             {computed:016x} — corrupt frame"
+        );
+        Frame::decode_payload(kind, payload)
+    }
+
+    fn decode_payload(kind: u8, payload: &[u8]) -> anyhow::Result<Frame> {
+        let mut c = Cursor { buf: payload, pos: 0 };
+        let frame = match kind {
+            1 => {
+                let rounds = c.u64()? as usize;
+                let has_hash = c.u8()? != 0;
+                let hash = c.u64()?;
+                let k = c.u32()? as usize;
+                let mut selected = Vec::with_capacity(k.min(1 << 20));
+                for _ in 0..k {
+                    selected.push(c.u64()? as usize);
+                }
+                let mut weights = Vec::with_capacity(k.min(1 << 20));
+                for _ in 0..k {
+                    weights.push(f64::from_bits(c.u64()?));
+                }
+                Frame::Model(WireModel {
+                    rounds,
+                    data_hash: has_hash.then_some(hash),
+                    predictor: Predictor { selected, weights },
+                })
+            }
+            2 => Frame::Heartbeat { seq: c.u64()? },
+            3 => {
+                let rows = c.u32()? as usize;
+                let cols = c.u32()? as usize;
+                let count = rows.checked_mul(cols).with_context(|| {
+                    format!("query dims {rows}×{cols} overflow")
+                })?;
+                let mut values = Vec::with_capacity(count.min(1 << 21));
+                for _ in 0..count {
+                    values.push(f64::from_bits(c.u64()?));
+                }
+                Frame::Query { rows, cols, values }
+            }
+            4 => {
+                let rounds = c.u64()? as usize;
+                let count = c.u32()? as usize;
+                let mut values = Vec::with_capacity(count.min(1 << 21));
+                for _ in 0..count {
+                    values.push(f64::from_bits(c.u64()?));
+                }
+                Frame::Predictions { rounds, values }
+            }
+            5 => Frame::Overloaded { retry_after_ms: c.u64()? },
+            6 => Frame::ModelRequest,
+            7 => Frame::Shutdown,
+            8 => {
+                let len = c.u32()? as usize;
+                let bytes = c.take(len)?.to_vec();
+                let reason = String::from_utf8(bytes)
+                    .map_err(|_| anyhow::anyhow!(
+                        "invalid utf-8 in refusal reason"
+                    ))?;
+                Frame::Refused { reason }
+            }
+            other => bail!("unknown frame kind {other}"),
+        };
+        c.finished()?;
+        Ok(frame)
+    }
+}
+
+/// End-checksum over the framed fields, recomputed field-by-field in
+/// exactly the byte order they serialize (so it equals the FNV-1a of
+/// the raw header + payload bytes).
+fn seal_hash(kind: u8, payload: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(&MAGIC);
+    h.write_u32(FORMAT_VERSION);
+    h.write(&[kind]);
+    h.write_u32(payload.len() as u32);
+    h.write(payload);
+    h.finish()
+}
+
+/// Validate a frame header; returns (kind, payload length).
+fn parse_header(h: &[u8; HEADER_LEN]) -> anyhow::Result<(u8, usize)> {
+    ensure!(
+        h[..4] == MAGIC,
+        "bad frame magic {:02x}{:02x}{:02x}{:02x} (stream desynchronized \
+         or corrupt)",
+        h[0],
+        h[1],
+        h[2],
+        h[3]
+    );
+    let version = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+    ensure!(
+        version == FORMAT_VERSION,
+        "unsupported wire format version {version} (this build speaks \
+         {FORMAT_VERSION})"
+    );
+    let plen = u32::from_le_bytes([h[9], h[10], h[11], h[12]]) as usize;
+    ensure!(
+        plen <= MAX_PAYLOAD,
+        "frame length {plen} exceeds the {MAX_PAYLOAD} byte payload cap \
+         (corrupt or hostile length prefix)"
+    );
+    Ok((h[8], plen))
+}
+
+fn read_u64_le(bytes: &[u8]) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&bytes[..8]);
+    u64::from_le_bytes(b)
+}
+
+/// Bounds-checked payload reader: every decode error is "truncated",
+/// never a panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let out = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(out)
+            }
+            None => bail!(
+                "truncated frame payload: wanted {n} bytes at offset {} \
+                 of {}",
+                self.pos,
+                self.buf.len()
+            ),
+        }
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(read_u64_le(self.take(8)?))
+    }
+
+    fn finished(&self) -> anyhow::Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "frame payload has {} trailing bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+/// Read exactly one frame from a stream whose read timeout is already
+/// configured. Any mid-frame timeout, EOF, or validation failure is an
+/// error — the caller treats it as a lost/hung peer and reconnects.
+pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Frame> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).context("frame header read")?;
+    read_after_header(r, header)
+}
+
+/// Like [`read_frame`], but a read timeout *before the first byte* of a
+/// frame returns `Ok(None)` (an idle tick) instead of an error, so a
+/// serving loop can interleave shutdown checks with blocking reads.
+/// A timeout *inside* a frame is still an error: the peer is hung
+/// mid-send and the connection cannot be trusted.
+pub fn read_frame_or_idle<R: Read>(
+    r: &mut R,
+) -> anyhow::Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    match r.read(&mut header[..1]) {
+        Ok(0) => bail!("connection closed by peer"),
+        Ok(_) => {}
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::Interrupted
+            ) =>
+        {
+            return Ok(None)
+        }
+        Err(e) => return Err(e).context("frame read"),
+    }
+    r.read_exact(&mut header[1..]).context("frame header read")?;
+    read_after_header(r, header).map(Some)
+}
+
+fn read_after_header<R: Read>(
+    r: &mut R,
+    header: [u8; HEADER_LEN],
+) -> anyhow::Result<Frame> {
+    // validate the length prefix BEFORE allocating or reading: an
+    // oversized or garbage length must not drive an unbounded read
+    let (_kind, plen) = parse_header(&header)?;
+    let mut rest = vec![0u8; plen + CHECKSUM_LEN];
+    r.read_exact(&mut rest).context("frame body read")?;
+    let mut full = Vec::with_capacity(HEADER_LEN + rest.len());
+    full.extend_from_slice(&header);
+    full.extend_from_slice(&rest);
+    Frame::decode(&full)
+}
+
+/// Write one frame as a single `write_all` (frame granularity is what
+/// the fault-injection wrapper keys on) and flush it.
+pub fn write_frame<W: std::io::Write>(
+    w: &mut W,
+    frame: &Frame,
+) -> anyhow::Result<()> {
+    w.write_all(&frame.encode()).context("frame write")?;
+    w.flush().context("frame flush")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_model() -> Frame {
+        Frame::Model(WireModel {
+            rounds: 3,
+            data_hash: Some(0xdead_beef_cafe_f00d),
+            predictor: Predictor {
+                selected: vec![4, 0, 17],
+                weights: vec![1.5, -0.25, f64::from_bits(0x7ff8_0000_0000_0001)],
+            },
+        })
+    }
+
+    #[test]
+    fn roundtrip_every_kind() {
+        let frames = vec![
+            sample_model(),
+            Frame::Heartbeat { seq: 9 },
+            Frame::Query {
+                rows: 2,
+                cols: 3,
+                values: vec![1.0, -0.0, 2.5, 3.0, f64::MIN, f64::MAX],
+            },
+            Frame::Predictions { rounds: 5, values: vec![0.25, -1.0] },
+            Frame::Overloaded { retry_after_ms: 40 },
+            Frame::ModelRequest,
+            Frame::Shutdown,
+            Frame::Refused { reason: "nope".into() },
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            let back = Frame::decode(&bytes).unwrap();
+            // bit-identity: re-encoding the decoded frame reproduces
+            // the exact byte sequence (covers every f64 bit pattern)
+            assert_eq!(back.encode(), bytes, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_refused() {
+        let bytes = sample_model().encode();
+        for cut in [0, 1, HEADER_LEN - 1, HEADER_LEN + 3, bytes.len() - 1] {
+            let err = Frame::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                err.to_string().contains("truncated"),
+                "cut={cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_refused() {
+        let bytes = sample_model().encode();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 1;
+            assert!(
+                Frame::decode(&bad).is_err(),
+                "bit flip at byte {i} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_refused_before_allocation() {
+        let mut bytes = sample_model().encode();
+        bytes[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_is_refused_even_resealed() {
+        // bump the version and re-seal the checksum, mirroring the
+        // checkpoint refusal suite: the version check itself must fire
+        let f = sample_model();
+        let payload = f.encode_payload();
+        let mut bytes = f.encode();
+        bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let mut h = Fnv64::new();
+        h.write(&MAGIC);
+        h.write_u32(2);
+        h.write(&[1]);
+        h.write_u32(payload.len() as u32);
+        h.write(&payload);
+        let n = bytes.len();
+        bytes[n - 8..].copy_from_slice(&h.finish().to_le_bytes());
+        let err = Frame::decode(&bytes).unwrap_err();
+        assert!(
+            err.to_string().contains("unsupported wire format version"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn seal_hash_equals_fnv_of_raw_bytes() {
+        let bytes = sample_model().encode();
+        let body = &bytes[..bytes.len() - CHECKSUM_LEN];
+        assert_eq!(
+            crate::data::fingerprint::fnv64(body),
+            read_u64_le(&bytes[bytes.len() - CHECKSUM_LEN..])
+        );
+    }
+}

@@ -17,6 +17,12 @@
 //!   publishes every committed round onto a [`stream::ModelBus`] and
 //!   worker threads serve it concurrently with no filesystem on the
 //!   path ([`stream::train_serve`], `train-serve` / `serve --bus`);
+//! * [`fabric`] — the multi-process serving fabric: a checksummed
+//!   binary wire format carries bus versions across a Unix/TCP socket
+//!   ([`fabric::publish::SocketPublisher`] →
+//!   [`fabric::follow::SocketFollower`]), with admission-controlled
+//!   serving fronts, fault injection, and fleet orchestration
+//!   (`serve --listen`, `fleet`);
 //! * model persistence in a dependency-free text format, plus
 //!   checkpoint-driven session resume ([`resume_with_engine`]).
 //!
@@ -25,6 +31,7 @@
 //! repo's `ARCHITECTURE.md`.
 
 pub mod cv;
+pub mod fabric;
 pub mod grid;
 pub mod serve;
 pub mod stream;

@@ -337,35 +337,55 @@ pub trait ModelSource {
 pub struct CheckpointFollower {
     dir: PathBuf,
     last_rounds: Option<usize>,
+    warned: std::collections::HashSet<PathBuf>,
 }
 
 impl CheckpointFollower {
     /// Follow `dir` (which need not exist yet).
     pub fn new(dir: impl Into<PathBuf>) -> CheckpointFollower {
-        CheckpointFollower { dir: dir.into(), last_rounds: None }
+        CheckpointFollower {
+            dir: dir.into(),
+            last_rounds: None,
+            warned: std::collections::HashSet::new(),
+        }
     }
 
-    /// Load the newest checkpoint if it is more advanced than the last
-    /// one this follower reported; `None` when nothing newer exists.
-    /// Atomic write-rename on the producer side guarantees any `.ckpt`
-    /// this sees is complete — a torn file here is a real corruption and
-    /// surfaces as an error.
+    /// Load the most advanced checkpoint newer than the last one this
+    /// follower reported; `None` when nothing newer exists. Atomic
+    /// write-rename on the producer side means a complete `.ckpt` is the
+    /// norm — but a crash mid-write (or a copied-in partial file) can
+    /// still leave a torn newest checkpoint, so an unloadable candidate
+    /// is skipped (warned once per file) and the next most advanced
+    /// valid one wins instead of erroring the whole follow loop.
     pub fn poll(&mut self) -> anyhow::Result<Option<Checkpoint>> {
-        let Some(path) = checkpoint::latest_in_dir(&self.dir)? else {
-            return Ok(None);
-        };
-        let rounds = checkpoint::round_count_in_name(&path);
-        if rounds.is_some() && rounds <= self.last_rounds {
-            return Ok(None);
+        let mut candidates =
+            newer_checkpoints(&self.dir, self.last_rounds)?;
+        candidates.sort_by(|a, b| b.0.cmp(&a.0));
+        for (rounds, path) in candidates {
+            match Checkpoint::load(&path) {
+                Ok(ckpt) => {
+                    self.last_rounds = Some(rounds);
+                    return Ok(Some(ckpt));
+                }
+                Err(err) => {
+                    if self.warned.insert(path.clone()) {
+                        eprintln!(
+                            "[serve] skipping corrupt checkpoint {}: \
+                             {err:#}",
+                            path.display()
+                        );
+                    }
+                }
+            }
         }
-        let ckpt = Checkpoint::load(&path)?;
-        self.last_rounds = Some(rounds.unwrap_or(ckpt.rounds.len()));
-        Ok(Some(ckpt))
+        Ok(None)
     }
 
     /// Block until the directory offers a checkpoint with a non-empty
     /// model (a 0-round checkpoint has nothing to serve), polling every
-    /// `poll` up to `timeout`.
+    /// `poll` up to `timeout` — a wall-clock deadline: sleeps are
+    /// clamped to the time remaining, so `--wait-s` means seconds even
+    /// when `poll` is long or the scheduler is unkind.
     pub fn wait_for_model(
         &mut self,
         timeout: Duration,
@@ -373,23 +393,61 @@ impl CheckpointFollower {
     ) -> anyhow::Result<Checkpoint> {
         // xtask-allow: no-raw-instant -- poll-timeout deadline for a
         // filesystem watcher; no selection session exists yet to bill
-        let t0 = Instant::now();
+        let deadline = Instant::now().checked_add(timeout);
         loop {
             if let Some(ckpt) = self.poll()? {
                 if !ckpt.selected.is_empty() {
                     return Ok(ckpt);
                 }
             }
-            if t0.elapsed() >= timeout {
-                bail!(
+            // xtask-allow: no-raw-instant -- remaining-time computation
+            // against the deadline anchored above
+            let now = Instant::now();
+            let remaining = match deadline {
+                // an unrepresentable deadline means wait indefinitely
+                None => poll,
+                Some(d) if now < d => d - now,
+                Some(_) => bail!(
                     "no servable checkpoint appeared in {} within {:.1}s",
                     self.dir.display(),
                     timeout.as_secs_f64()
-                );
-            }
-            std::thread::sleep(poll);
+                ),
+            };
+            std::thread::sleep(poll.min(remaining));
         }
     }
+}
+
+/// `(rounds, path)` for every well-named checkpoint in `dir` strictly
+/// newer than `after`. A missing directory is an empty trail (the
+/// trainer may not have created it yet), not an error — the same
+/// contract as [`checkpoint::latest_in_dir`].
+fn newer_checkpoints(
+    dir: &std::path::Path,
+    after: Option<usize>,
+) -> anyhow::Result<Vec<(usize, PathBuf)>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(err) if err.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new())
+        }
+        Err(err) => {
+            return Err(err)
+                .with_context(|| format!("reading {}", dir.display()))
+        }
+    };
+    let mut out = Vec::new();
+    for entry in entries {
+        let path = entry
+            .with_context(|| format!("reading {}", dir.display()))?
+            .path();
+        if let Some(rounds) = checkpoint::round_count_in_name(&path) {
+            if Some(rounds) > after {
+                out.push((rounds, path));
+            }
+        }
+    }
+    Ok(out)
 }
 
 impl ModelSource for CheckpointFollower {
@@ -624,6 +682,83 @@ mod tests {
         let c = f.poll().unwrap().expect("newer checkpoint seen");
         assert_eq!(c.rounds.len(), 4);
         assert!(f.poll().unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Hand-truncate a checkpoint file for `rounds` — the torn newest
+    /// file a producer crash mid-write (pre-rename copy) would leave.
+    fn write_truncated_checkpoint(dir: &std::path::Path, rounds: usize) {
+        let ckpt = Checkpoint {
+            fingerprint: crate::select::checkpoint::Fingerprint {
+                config: 1,
+                data: 7,
+            },
+            elapsed: Duration::ZERO,
+            stop_reason: None,
+            rounds: (0..rounds)
+                .map(|i| crate::select::Round {
+                    feature: i,
+                    criterion: 1.0 / (i + 1) as f64,
+                })
+                .collect(),
+            selected: (0..rounds).collect(),
+            weights: (0..rounds).map(|i| i as f64 + 0.5).collect(),
+        };
+        let text = ckpt.to_text();
+        std::fs::write(
+            checkpoint::checkpoint_path(dir, rounds),
+            &text[..text.len() / 2],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn follower_skips_truncated_newest_checkpoint() {
+        let dir = std::env::temp_dir().join("greedy_rls_serve_corrupt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // a valid ckpt-2 and a torn ckpt-4: the follower must fall back
+        // to the newest *valid* checkpoint instead of erroring out
+        write_checkpoint(&dir, 2, 7);
+        write_truncated_checkpoint(&dir, 4);
+        let mut f = CheckpointFollower::new(&dir);
+        let c = f.poll().unwrap().expect("valid fallback served");
+        assert_eq!(c.rounds.len(), 2, "fell back past the torn ckpt-4");
+        // the torn file alone is not "newer work": stay quiet
+        assert!(f.poll().unwrap().is_none());
+        // a later valid checkpoint is picked up normally
+        write_checkpoint(&dir, 6, 7);
+        let c = f.poll().unwrap().expect("recovered to valid ckpt-6");
+        assert_eq!(c.rounds.len(), 6);
+        // a torn file that is the *only* newer candidate yields None,
+        // never an error and never a torn model
+        write_truncated_checkpoint(&dir, 8);
+        assert!(f.poll().unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wait_for_model_honors_wall_clock_deadline() {
+        let dir = std::env::temp_dir().join("greedy_rls_serve_deadline_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = CheckpointFollower::new(&dir);
+        // nothing will ever appear: a 200ms timeout with a 10s poll
+        // interval must still give up in ~200ms, because the sleep is
+        // clamped to the time remaining — not `timeout / poll` naps
+        let t0 = Instant::now();
+        let err = f
+            .wait_for_model(
+                Duration::from_millis(200),
+                Duration::from_secs(10),
+            )
+            .unwrap_err();
+        let elapsed = t0.elapsed();
+        assert!(err.to_string().contains("within"), "{err}");
+        assert!(
+            elapsed < Duration::from_secs(5),
+            "deadline ignored: waited {elapsed:?} for a 200ms timeout"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

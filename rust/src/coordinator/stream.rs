@@ -125,6 +125,16 @@ impl Default for ModelBus {
     }
 }
 
+/// Cloning shares the underlying bus (one more handle on the same
+/// versions, not a new bus) — this is what lets the socket publisher's
+/// accept loop mint a [`BusFollower`] per connection from another
+/// thread. Close remains idempotent and observed by every handle.
+impl Clone for ModelBus {
+    fn clone(&self) -> ModelBus {
+        ModelBus { shared: self.shared.clone() }
+    }
+}
+
 impl ModelBus {
     /// An open bus with nothing published yet.
     pub fn new() -> ModelBus {
@@ -619,11 +629,29 @@ impl Drop for ServingShutdown<'_> {
 /// [module docs](self); a killed `train-serve --checkpoint-dir` run
 /// resumes bit-identically via `--resume` exactly like `select` does.
 pub fn train_serve(
-    mut session: Box<dyn Session + '_>,
+    session: Box<dyn Session + '_>,
     observer: &mut dyn Observer,
     saver: Option<&mut Autosaver>,
     x: &Matrix,
     opts: &TrainServeOptions,
+) -> anyhow::Result<TrainServeReport> {
+    train_serve_bridged(session, observer, saver, x, opts, |_| Ok(()))
+}
+
+/// [`train_serve`] with a bridge hook: `bridge` runs once, right after
+/// the bus is created and before any training round, and whatever it
+/// returns is held alive until training, serving, and the final pass
+/// have all completed. This is how `train-serve --publish` attaches a
+/// [`crate::coordinator::fabric::publish::SocketPublisher`] (the hook
+/// clones the bus handle) without the streaming pipeline knowing
+/// anything about sockets.
+pub fn train_serve_bridged<'s, G>(
+    mut session: Box<dyn Session + 's>,
+    observer: &mut dyn Observer,
+    saver: Option<&mut Autosaver>,
+    x: &Matrix,
+    opts: &TrainServeOptions,
+    bridge: impl FnOnce(&ModelBus) -> anyhow::Result<G>,
 ) -> anyhow::Result<TrainServeReport> {
     ensure!(opts.batch > 0, "batch must be positive");
     let m = x.cols();
@@ -634,6 +662,9 @@ pub fn train_serve(
     let batch = opts.batch;
 
     let bus = ModelBus::new();
+    // bridge first (e.g. bind the fabric socket) so subscribers can be
+    // connected before round 1 publishes; the guard lives to the end
+    let bridge_guard = bridge(&bus)?;
     // give the publisher the saver's own policy so the publish-after-save
     // guarantee holds at any --checkpoint-every and on-stop setting: a
     // version is announced only in a flush cycle where its round's
@@ -796,6 +827,10 @@ pub fn train_serve(
         (train_result, train_seconds, swaps, logs)
     });
     let stop = train_result?;
+    // the bus is closed: release the bridge now (a socket publisher
+    // sends Shutdown frames and joins its writers here) rather than
+    // after the stats crunch below
+    drop(bridge_guard);
 
     // merge the per-worker logs: exact batch counts, capped samples
     let mut groups: BTreeMap<(u64, usize), (usize, Vec<f64>)> =

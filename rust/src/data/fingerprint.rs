@@ -45,6 +45,13 @@ impl Fnv64 {
         self.write(&v.to_le_bytes());
     }
 
+    /// Absorb a `u32` in little-endian byte order (the serving fabric's
+    /// wire header fields are `u32`; hashing them field-by-field must
+    /// equal hashing the raw frame bytes).
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
     /// Absorb a `usize` widened to `u64` (stable across pointer widths).
     pub fn write_usize(&mut self, v: usize) {
         self.write_u64(v as u64);
@@ -110,6 +117,23 @@ mod tests {
         assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn typed_writes_equal_raw_bytes() {
+        // field-by-field hashing must equal hashing the concatenated
+        // LE bytes — the wire codec's checksum relies on this
+        let mut typed = Fnv64::new();
+        typed.write(b"GR");
+        typed.write_u32(0x0102_0304);
+        typed.write_u64(0x0506_0708_090a_0b0c);
+        typed.write_f64(f64::from_bits(0x7ff8_0000_dead_beef));
+        let mut raw = Vec::new();
+        raw.extend_from_slice(b"GR");
+        raw.extend_from_slice(&0x0102_0304u32.to_le_bytes());
+        raw.extend_from_slice(&0x0506_0708_090a_0b0cu64.to_le_bytes());
+        raw.extend_from_slice(&0x7ff8_0000_dead_beefu64.to_le_bytes());
+        assert_eq!(typed.finish(), fnv64(&raw));
     }
 
     #[test]

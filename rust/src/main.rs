@@ -47,6 +47,7 @@ fn run(args: &Args) -> Result<()> {
         Some("scaling") => cmd_scaling(args),
         Some("serve") => cmd_serve(args),
         Some("train-serve") => cmd_train_serve(args),
+        Some("fleet") => cmd_fleet(args),
         Some("datasets") => cmd_datasets(),
         Some("compare") => cmd_compare(args),
         Some("check") => cmd_check(args),
@@ -344,12 +345,40 @@ fn cmd_train_serve(args: &Args) -> Result<()> {
     // selection time, like `select`; the serving shutdown and final
     // pass do not — report.train_seconds covers the drive itself
     let setup_secs = t0.elapsed().as_secs_f64();
-    let report = stream::train_serve(
+    // --publish bridges the in-process bus onto a fabric socket before
+    // round 1, so remote `serve --connect` workers see every version;
+    // the publisher guard is dropped (Shutdown frames sent, writers
+    // joined) as soon as the bus closes
+    let publish: Option<greedy_rls::coordinator::fabric::net::Addr> =
+        args.get("publish").map(str::parse).transpose()?;
+    let heartbeat_ms: u64 = args.get_or("heartbeat-ms", 500u64)?;
+    ensure!(heartbeat_ms > 0, "--heartbeat-ms must be positive");
+    let data_hash =
+        greedy_rls::data::fingerprint::fingerprint_xy(&ds.x, &ds.y);
+    let report = stream::train_serve_bridged(
         session,
         observer.as_mut(),
         saver.as_mut(),
         &ds.x,
         &opts,
+        |bus| {
+            publish
+                .map(|addr| {
+                    println!("publishing on {addr}");
+                    let fopts = greedy_rls::coordinator::fabric::
+                        FabricOptions::with_heartbeat(
+                        Duration::from_millis(heartbeat_ms),
+                    );
+                    greedy_rls::coordinator::fabric::publish::
+                        SocketPublisher::spawn(
+                        &addr,
+                        bus.clone(),
+                        Some(data_hash),
+                        fopts,
+                    )
+                })
+                .transpose()
+        },
     )?;
     print_checkpoint_summary(&saver, &ckpt);
     print_selection_outcome(
@@ -491,6 +520,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         return cmd_train_serve(args);
     }
+    if args.get("listen").is_some() {
+        return cmd_serve_listen(args);
+    }
+    if args.get("connect").is_some() {
+        return cmd_serve_connect(args);
+    }
     if args.get("follow").is_some() {
         return cmd_serve_follow(args);
     }
@@ -594,6 +629,220 @@ fn cmd_serve_follow(args: &Args) -> Result<()> {
         stats.serve.p99_batch_s,
         stats.serve.throughput
     );
+    Ok(())
+}
+
+/// Shared fabric knobs: `--heartbeat-ms` (also scales the read timeout
+/// that declares a silent trainer hung) and the `--wait-s` startup
+/// deadline for the first model.
+fn parse_fabric_options(
+    args: &Args,
+) -> Result<(greedy_rls::coordinator::fabric::FabricOptions, f64)> {
+    let heartbeat_ms: u64 = args.get_or("heartbeat-ms", 500u64)?;
+    ensure!(heartbeat_ms > 0, "--heartbeat-ms must be positive");
+    let wait_s: f64 = args.get_or("wait-s", 30.0f64)?;
+    ensure!(wait_s.is_finite() && wait_s >= 0.0, "--wait-s must be ≥ 0");
+    let opts = greedy_rls::coordinator::fabric::FabricOptions::with_heartbeat(
+        Duration::from_millis(heartbeat_ms),
+    );
+    Ok((opts, wait_s))
+}
+
+/// `serve --listen ADDR --connect ADDR [--follow DIR]`: a fabric
+/// worker. Answers socket queries against a hot-swap slot fed by a
+/// `train-serve --publish` trainer; while the trainer is unreachable it
+/// keeps serving the last-good model and catches up from the
+/// checkpoint trail. Runs until killed — exactly the process the
+/// `fleet` gauntlet spawns, SIGKILLs, and restarts.
+fn cmd_serve_listen(args: &Args) -> Result<()> {
+    use greedy_rls::coordinator::fabric::follow::SocketFollower;
+    use greedy_rls::coordinator::fabric::listen::{
+        ListenOptions, ListenServer,
+    };
+    use greedy_rls::coordinator::fabric::net::Addr;
+
+    let listen_addr: Addr = args.require("listen")?;
+    let connect_addr: Addr = args.require("connect")?;
+    let (fopts, wait_s) = parse_fabric_options(args)?;
+    let trail = args.get("follow").map(std::path::PathBuf::from);
+    let mut follower = SocketFollower::connect(connect_addr, trail, fopts);
+    let first = follower.wait_for_model(
+        Duration::from_secs_f64(wait_s),
+        Duration::from_millis(20),
+    )?;
+    println!(
+        "listening on {listen_addr}: serving k={} model ({} rounds)",
+        first.predictor.selected.len(),
+        first.rounds
+    );
+    let server =
+        std::sync::Arc::new(serve::HotSwapServer::new(first.predictor));
+    let opts = ListenOptions {
+        workers: args.get_or("serve-threads", 2usize)?.max(1),
+        queue_depth: args.get_or("queue-depth", 2usize)?.max(1),
+        fabric: fopts,
+        ..ListenOptions::default()
+    };
+    let _front =
+        ListenServer::spawn(&listen_addr, std::sync::Arc::clone(&server), opts)?;
+    // swap loop: the wire feeds swaps while connected, the trail while
+    // degraded; a source hiccup is logged, never fatal — the worker
+    // serves its last-good model until something newer arrives
+    loop {
+        match follower.poll_model() {
+            Ok(Some(update))
+                if !update.predictor.selected.is_empty() =>
+            {
+                let rounds = update.rounds;
+                server.swap(update.predictor, rounds);
+                println!("swapped to {rounds}-round model");
+            }
+            Ok(_) => {}
+            Err(err) => eprintln!("[serve] model source error: {err:#}"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// `serve --connect ADDR [--follow DIR]`: hot-swap serving over a local
+/// dataset with models arriving over the fabric — `serve_hotswap` is
+/// unchanged, the socket is just another [`serve::ModelSource`].
+fn cmd_serve_connect(args: &Args) -> Result<()> {
+    use greedy_rls::coordinator::fabric::follow::SocketFollower;
+    use greedy_rls::coordinator::fabric::net::Addr;
+
+    ensure!(
+        args.get("model").is_none(),
+        "--connect and --model are mutually exclusive"
+    );
+    let connect_addr: Addr = args.require("connect")?;
+    let mut ds = load_dataset(args)?;
+    ds.standardize();
+    let batch: usize = args.get_or("batch", 64usize)?;
+    let passes: usize = args.get_or("passes", 1usize)?;
+    let (fopts, wait_s) = parse_fabric_options(args)?;
+    let data_hash =
+        greedy_rls::data::fingerprint::fingerprint_xy(&ds.x, &ds.y);
+    let mut follower = SocketFollower::connect(
+        connect_addr,
+        args.get("follow").map(std::path::PathBuf::from),
+        fopts,
+    );
+    let first = follower.wait_for_model(
+        Duration::from_secs_f64(wait_s),
+        Duration::from_millis(20),
+    )?;
+    if let Some(got) = first.data_hash {
+        ensure!(
+            got == data_hash,
+            "published data hash {got:016x} does not match the serving \
+             dataset's {data_hash:016x}"
+        );
+    }
+    println!(
+        "following the fabric: serving k={} model ({} rounds), \
+         batch={batch}, passes={passes}",
+        first.predictor.selected.len(),
+        first.rounds
+    );
+    let server = serve::HotSwapServer::new(first.predictor);
+    let (preds, stats) = serve::serve_hotswap(
+        &server,
+        &mut follower,
+        &ds.x,
+        batch,
+        passes,
+        Some(data_hash),
+    )?;
+    let acc = greedy_rls::metrics::accuracy(&ds.y, &preds);
+    println!(
+        "swaps={} final_rounds={} final_version={}",
+        stats.swaps, stats.final_rounds, stats.final_version
+    );
+    println!(
+        "accuracy={acc:.4} batches={} mean={:.6}s p50={:.6}s p99={:.6}s \
+         throughput={:.0}/s",
+        stats.serve.batches,
+        stats.serve.mean_batch_s,
+        stats.serve.p50_batch_s,
+        stats.serve.p99_batch_s,
+        stats.serve.throughput
+    );
+    Ok(())
+}
+
+/// `fleet`: spawn one `train-serve --publish` trainer plus N
+/// `serve --listen` workers, drive load at every worker, optionally
+/// SIGKILL one mid-stream, and verify all workers converge to the
+/// byte-identical final model (the kill-a-server gauntlet, as a
+/// subcommand so CI and users run the same code path).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use greedy_rls::coordinator::fabric::fleet::{run_fleet, FleetPlan};
+
+    let mut ds = load_dataset(args)?;
+    ds.standardize();
+    let k: usize = args.get_or("k", 8usize)?;
+    ensure!(
+        k > 0 && k <= ds.n_features(),
+        "--k must be in 1..={} for this dataset",
+        ds.n_features()
+    );
+    let servers: usize = args.get_or("servers", 2usize)?;
+    let heartbeat_ms: u64 = args.get_or("heartbeat-ms", 200u64)?;
+    ensure!(heartbeat_ms > 0, "--heartbeat-ms must be positive");
+    let scratch = match args.get("scratch") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => std::env::temp_dir()
+            .join(format!("greedy-rls-fleet-{}", std::process::id())),
+    };
+    // dataset + selection flags forwarded verbatim to the trainer —
+    // both processes regenerate the same problem from the same flags
+    let mut dataset_flags: Vec<String> = Vec::new();
+    if let Some(spec) = args.get("synthetic") {
+        dataset_flags.extend(["--synthetic".into(), spec.into()]);
+    } else {
+        let name: String = args.require("dataset")?;
+        dataset_flags.extend(["--dataset".into(), name]);
+        if args.has("full") {
+            dataset_flags.push("--full".into());
+        }
+    }
+    dataset_flags.extend([
+        "--k".into(),
+        k.to_string(),
+        "--seed".into(),
+        args.get_or("seed", 42u64)?.to_string(),
+    ]);
+    let plan = FleetPlan {
+        exe: std::env::current_exe().context("locating own binary")?,
+        scratch: scratch.clone(),
+        dataset_flags,
+        servers,
+        kill_one: args.has("kill-one"),
+        heartbeat_ms,
+        expected_rounds: k,
+        queries: args.get_or("queries", 40usize)?,
+        batch: args.get_or("batch", 16usize)?,
+        settle_timeout: Duration::from_secs(60),
+        train_timeout: Duration::from_secs(300),
+    };
+    println!(
+        "fleet: trainer + {servers} servers (kill_one={}), scratch={}",
+        plan.kill_one,
+        scratch.display()
+    );
+    let outcome = run_fleet(&plan, &ds.x)?;
+    println!(
+        "servers={} final_rounds={} models_identical={} \
+         survivor_answered={} restarted_caught_up={} shed={}",
+        outcome.servers,
+        outcome.final_rounds,
+        outcome.models_identical,
+        outcome.survivor_answered,
+        outcome.restarted_caught_up,
+        outcome.shed
+    );
+    println!("fleet: PASS");
     Ok(())
 }
 

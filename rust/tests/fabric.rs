@@ -1,0 +1,629 @@
+//! Fault-injection suite for the multi-process serving fabric
+//! (`coordinator::fabric`): wire-codec round-trip/rejection properties,
+//! seeded fault-schedule replay, follower integrity under a fault storm
+//! (never a torn model, never a version regression), publisher-restart
+//! reconnects, checkpoint-trail degradation, and admission control on
+//! the `serve --listen` front. The CI fleet gauntlet covers the same
+//! invariants across real processes with a SIGKILL.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use greedy_rls::coordinator::fabric::fault::{
+    FaultCounters, FaultPlan, FaultyProxy, FaultyStream,
+};
+use greedy_rls::coordinator::fabric::follow::SocketFollower;
+use greedy_rls::coordinator::fabric::listen::{
+    run_load, ListenOptions, ListenServer, LoadOptions,
+};
+use greedy_rls::coordinator::fabric::net::{Addr, Conn};
+use greedy_rls::coordinator::fabric::publish::SocketPublisher;
+use greedy_rls::coordinator::fabric::wire::{
+    self, Frame, WireModel, FORMAT_VERSION, MAX_PAYLOAD,
+};
+use greedy_rls::coordinator::fabric::FabricOptions;
+use greedy_rls::coordinator::serve::{HotSwapServer, ModelSource};
+use greedy_rls::coordinator::stream::ModelBus;
+use greedy_rls::linalg::Matrix;
+use greedy_rls::proptest::{forall_seeds, Gen};
+use greedy_rls::rls::Predictor;
+use greedy_rls::select::checkpoint::{self, Checkpoint, Fingerprint};
+use greedy_rls::select::Round;
+
+// ---------------------------------------------------------------------------
+// helpers
+
+/// Unique unix-socket address per test (paths must stay short).
+fn unix_addr(name: &str) -> Addr {
+    let path = std::env::temp_dir()
+        .join(format!("grls-fab-{}-{name}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    Addr::parse(&format!("unix:{}", path.display())).unwrap()
+}
+
+/// Tight timeouts so failure paths resolve in milliseconds, not the
+/// production defaults.
+fn fast_fabric() -> FabricOptions {
+    FabricOptions {
+        heartbeat: Duration::from_millis(50),
+        read_timeout: Duration::from_millis(150),
+        backoff_base: Duration::from_millis(10),
+        backoff_cap: Duration::from_millis(100),
+        ..FabricOptions::default()
+    }
+}
+
+/// Version-tagged model: over an all-ones probe every prediction equals
+/// the generation, and `weights[0] != rounds` proves a torn install.
+fn versioned(generation: usize) -> Predictor {
+    Predictor { selected: vec![0], weights: vec![generation as f64] }
+}
+
+/// Poll `f` until it returns true or `timeout` elapses.
+fn wait_until<F: FnMut() -> bool>(what: &str, timeout: Duration, mut f: F) {
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < timeout {
+        if f() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out after {timeout:?} waiting for {what}");
+}
+
+/// Drain every pending follower update, asserting each one is intact
+/// (weights consistent with its version tag, expected data hash) and
+/// strictly newer than the last — the "never torn, never regress"
+/// invariant. Versions land in `seen`.
+fn drain_checked(
+    follower: &mut SocketFollower,
+    seen: &mut Vec<usize>,
+    expect_hash: Option<u64>,
+) {
+    while let Some(u) = follower.poll_model().unwrap() {
+        assert_eq!(u.predictor.selected, vec![0], "torn model");
+        assert_eq!(
+            u.predictor.weights.len(),
+            1,
+            "torn model at rounds {}",
+            u.rounds
+        );
+        assert_eq!(
+            u.predictor.weights[0].to_bits(),
+            (u.rounds as f64).to_bits(),
+            "model/version mismatch at rounds {}: {:?}",
+            u.rounds,
+            u.predictor.weights
+        );
+        assert_eq!(u.data_hash, expect_hash);
+        if let Some(&last) = seen.last() {
+            assert!(u.rounds > last, "version regressed: {} after {last}", u.rounds);
+        }
+        seen.push(u.rounds);
+    }
+}
+
+fn client(addr: &Addr) -> Conn {
+    let conn = Conn::connect(addr, Duration::from_secs(1)).unwrap();
+    conn.set_timeouts(
+        Some(Duration::from_secs(5)),
+        Some(Duration::from_secs(1)),
+    )
+    .unwrap();
+    conn
+}
+
+/// Random frame with adversarial f64 bit patterns (raw u64 reinterpret
+/// covers NaNs, infinities, -0.0, subnormals).
+fn random_model_frame(g: &mut Gen) -> Frame {
+    let k = g.size(1, 12);
+    let selected: Vec<usize> =
+        (0..k).map(|_| g.rng.below(1 << 20)).collect();
+    let weights: Vec<f64> =
+        (0..k).map(|_| f64::from_bits(g.rng.next_u64())).collect();
+    Frame::Model(WireModel {
+        rounds: g.size(1, 10_000),
+        data_hash: (g.rng.below(2) == 0).then(|| g.rng.next_u64()),
+        predictor: Predictor { selected, weights },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// wire codec properties
+
+#[test]
+fn wire_roundtrip_is_bit_exact_for_random_models() {
+    forall_seeds(32, |seed| {
+        let mut g = Gen::new(seed + 500);
+        let frame = random_model_frame(&mut g);
+        let bytes = frame.encode();
+        let back = Frame::decode(&bytes).unwrap();
+        assert_eq!(back.encode(), bytes, "re-encode differs");
+    });
+}
+
+#[test]
+fn wire_rejects_truncated_flipped_wrong_version_and_oversized() {
+    forall_seeds(48, |seed| {
+        let mut g = Gen::new(seed + 900);
+        let bytes = random_model_frame(&mut g).encode();
+
+        // truncation at a random cut
+        let cut = g.rng.below(bytes.len());
+        assert!(
+            Frame::decode(&bytes[..cut]).is_err(),
+            "decoded a frame cut at {cut}"
+        );
+
+        // a single random bit flip (checksum covers every byte)
+        let mut flipped = bytes.clone();
+        let at = g.rng.below(flipped.len());
+        flipped[at] ^= 1 << g.rng.below(8);
+        assert!(
+            Frame::decode(&flipped).is_err(),
+            "bit flip at byte {at} went undetected"
+        );
+
+        // a random unsupported version
+        let mut versioned = bytes.clone();
+        let v = FORMAT_VERSION + 1 + g.rng.below(1000) as u32;
+        versioned[4..8].copy_from_slice(&v.to_le_bytes());
+        let err = Frame::decode(&versioned).unwrap_err();
+        assert!(
+            err.to_string().contains("unsupported wire format"),
+            "version {v}: {err}"
+        );
+
+        // a length prefix past the payload cap is refused pre-allocation
+        let mut oversized = bytes.clone();
+        let plen = MAX_PAYLOAD as u32 + 1 + g.rng.below(1 << 20) as u32;
+        oversized[9..13].copy_from_slice(&plen.to_le_bytes());
+        let err = Frame::decode(&oversized).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "plen {plen}: {err}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// fault injection primitives
+
+/// A `Write` sink whose bytes outlive the `FaultyStream` wrapping it.
+#[derive(Clone, Default)]
+struct SharedSink(Arc<Mutex<Vec<u8>>>);
+
+impl std::io::Write for SharedSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn stormy_plan() -> FaultPlan {
+    FaultPlan {
+        drop_p: 0.25,
+        corrupt_p: 0.25,
+        truncate_p: 0.2,
+        delay_p: 0.0,
+        max_delay: Duration::from_millis(5),
+    }
+}
+
+#[test]
+fn fault_schedule_replays_exactly_per_seed() {
+    let run = |seed: u64| {
+        let sink = SharedSink::default();
+        let counters = Arc::new(FaultCounters::default());
+        let mut s = FaultyStream::new(
+            sink.clone(),
+            stormy_plan(),
+            seed,
+            Arc::new(AtomicBool::new(true)),
+            Arc::clone(&counters),
+        );
+        for seq in 1..=30 {
+            wire::write_frame(&mut s, &Frame::Heartbeat { seq }).unwrap();
+        }
+        use std::sync::atomic::Ordering;
+        let tally = [
+            counters.passed.load(Ordering::SeqCst),
+            counters.dropped.load(Ordering::SeqCst),
+            counters.corrupted.load(Ordering::SeqCst),
+            counters.truncated.load(Ordering::SeqCst),
+        ];
+        (sink.0.lock().unwrap().clone(), tally)
+    };
+    let (bytes_a, tally_a) = run(11);
+    let (bytes_b, tally_b) = run(11);
+    assert_eq!(bytes_a, bytes_b, "same seed must replay identical bytes");
+    assert_eq!(tally_a, tally_b);
+    assert_eq!(tally_a.iter().sum::<u64>(), 30);
+    assert!(
+        tally_a[1] + tally_a[2] + tally_a[3] > 0,
+        "storm plan injected nothing: {tally_a:?}"
+    );
+    let (bytes_c, _) = run(12);
+    assert_ne!(bytes_a, bytes_c, "different seeds, different schedules");
+}
+
+#[test]
+fn corrupted_frames_never_decode() {
+    forall_seeds(10, |seed| {
+        let sink = SharedSink::default();
+        let mut s = FaultyStream::new(
+            sink.clone(),
+            FaultPlan { corrupt_p: 1.0, ..FaultPlan::default() },
+            seed,
+            Arc::new(AtomicBool::new(true)),
+            Arc::new(FaultCounters::default()),
+        );
+        let mut g = Gen::new(seed);
+        wire::write_frame(&mut s, &random_model_frame(&mut g)).unwrap();
+        let bytes = sink.0.lock().unwrap().clone();
+        assert!(
+            Frame::decode(&bytes).is_err(),
+            "a bit-flipped frame decoded cleanly"
+        );
+    });
+}
+
+#[test]
+fn dropped_frames_leave_no_bytes() {
+    let sink = SharedSink::default();
+    let counters = Arc::new(FaultCounters::default());
+    let mut s = FaultyStream::new(
+        sink.clone(),
+        FaultPlan { drop_p: 1.0, ..FaultPlan::default() },
+        3,
+        Arc::new(AtomicBool::new(true)),
+        Arc::clone(&counters),
+    );
+    for seq in 1..=5 {
+        wire::write_frame(&mut s, &Frame::Heartbeat { seq }).unwrap();
+    }
+    assert!(sink.0.lock().unwrap().is_empty());
+    use std::sync::atomic::Ordering;
+    assert_eq!(counters.dropped.load(Ordering::SeqCst), 5);
+}
+
+// ---------------------------------------------------------------------------
+// follower under a fault storm
+
+#[test]
+fn follower_never_installs_torn_model_under_fault_storm() {
+    let pub_addr = unix_addr("storm-pub");
+    let proxy_addr = unix_addr("storm-proxy");
+    let opts = fast_fabric();
+    let bus = ModelBus::new();
+    let publisher =
+        SocketPublisher::spawn(&pub_addr, bus.clone(), Some(77), opts)
+            .unwrap();
+    let proxy = FaultyProxy::spawn(
+        &proxy_addr,
+        pub_addr.clone(),
+        FaultPlan {
+            drop_p: 0.2,
+            corrupt_p: 0.2,
+            truncate_p: 0.15,
+            delay_p: 0.0,
+            max_delay: Duration::from_millis(5),
+        },
+        9,
+        opts,
+    )
+    .unwrap();
+    let mut follower = SocketFollower::connect(proxy_addr, None, opts);
+
+    let mut seen = Vec::new();
+    for generation in 1..=40usize {
+        bus.publish(versioned(generation), generation);
+        std::thread::sleep(Duration::from_millis(5));
+        drain_checked(&mut follower, &mut seen, Some(77));
+    }
+    // storm over: with a clean pipe the follower must converge on the
+    // newest generation (reconnect catch-up delivers it even if every
+    // live push was eaten)
+    proxy.set_faults_enabled(false);
+    bus.publish(versioned(41), 41);
+    wait_until(
+        "convergence to generation 41",
+        Duration::from_secs(20),
+        || {
+            drain_checked(&mut follower, &mut seen, Some(77));
+            seen.last() == Some(&41)
+        },
+    );
+
+    use std::sync::atomic::Ordering;
+    let c = proxy.counters();
+    let injected = c.dropped.load(Ordering::SeqCst)
+        + c.corrupted.load(Ordering::SeqCst)
+        + c.truncated.load(Ordering::SeqCst);
+    assert!(injected > 0, "storm must actually injure frames");
+    if c.corrupted.load(Ordering::SeqCst)
+        + c.truncated.load(Ordering::SeqCst)
+        > 0
+    {
+        assert!(
+            follower.status().reconnects >= 1,
+            "injured frames must force at least one reconnect"
+        );
+    }
+    assert!(publisher.accepted() >= 1);
+
+    // clean shutdown propagates end-of-stream through the proxy
+    bus.close();
+    wait_until("publisher shutdown", Duration::from_secs(10), || {
+        follower.status().publisher_done
+    });
+}
+
+#[test]
+fn follower_reconnects_after_publisher_restart() {
+    let addr = unix_addr("restart");
+    let opts = fast_fabric();
+    let mut seen = Vec::new();
+
+    let bus1 = ModelBus::new();
+    let p1 =
+        SocketPublisher::spawn(&addr, bus1.clone(), None, opts).unwrap();
+    let mut follower = SocketFollower::connect(addr.clone(), None, opts);
+    bus1.publish(versioned(2), 2);
+    wait_until("first model", Duration::from_secs(10), || {
+        drain_checked(&mut follower, &mut seen, None);
+        seen.last() == Some(&2)
+    });
+
+    // crash: no Shutdown frame, the socket just dies
+    drop(p1);
+    wait_until("disconnect detected", Duration::from_secs(10), || {
+        !follower.status().connected
+    });
+    // degraded: last-good model keeps serving (no poll regression)
+    drain_checked(&mut follower, &mut seen, None);
+    assert_eq!(seen.last(), Some(&2));
+
+    // restarted trainer on the same address, further along
+    let bus2 = ModelBus::new();
+    let _p2 =
+        SocketPublisher::spawn(&addr, bus2.clone(), None, opts).unwrap();
+    bus2.publish(versioned(5), 5);
+    wait_until("model after restart", Duration::from_secs(10), || {
+        drain_checked(&mut follower, &mut seen, None);
+        seen.last() == Some(&5)
+    });
+    assert!(follower.status().reconnects >= 1);
+
+    bus2.close();
+    wait_until("clean shutdown", Duration::from_secs(10), || {
+        follower.status().publisher_done
+    });
+    assert_eq!(seen, vec![2, 5]);
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint-trail degradation
+
+fn write_ckpt(dir: &Path, generation: usize) {
+    let ckpt = Checkpoint {
+        fingerprint: Fingerprint { config: 1, data: 2 },
+        elapsed: Duration::ZERO,
+        stop_reason: None,
+        rounds: (0..generation)
+            .map(|i| Round { feature: i, criterion: 1.0 })
+            .collect(),
+        selected: vec![0],
+        weights: vec![generation as f64],
+    };
+    ckpt.save_atomic(&checkpoint::checkpoint_path(dir, generation))
+        .unwrap();
+}
+
+fn temp_trail(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn follower_degrades_to_trail_and_recovers_to_wire() {
+    let addr = unix_addr("trail");
+    let dir = temp_trail("greedy_rls_fabric_trail_test");
+    let opts = fast_fabric();
+
+    // nothing is listening: the trail is the only source
+    write_ckpt(&dir, 3);
+    let mut follower =
+        SocketFollower::connect(addr.clone(), Some(dir.clone()), opts);
+    let mut rounds_seen = Vec::new();
+    wait_until("trail fallback model", Duration::from_secs(10), || {
+        while let Some(u) = follower.poll_model().unwrap() {
+            assert_eq!(u.predictor.weights, vec![u.rounds as f64]);
+            rounds_seen.push(u.rounds);
+        }
+        rounds_seen.last() == Some(&3)
+    });
+
+    // publisher appears: the wire takes over
+    let bus = ModelBus::new();
+    let publisher =
+        SocketPublisher::spawn(&addr, bus.clone(), None, opts).unwrap();
+    bus.publish(versioned(5), 5);
+    wait_until("wire takeover", Duration::from_secs(10), || {
+        while let Some(u) = follower.poll_model().unwrap() {
+            rounds_seen.push(u.rounds);
+        }
+        rounds_seen.last() == Some(&5)
+    });
+
+    // publisher dies again: anything newer it flushed to the trail
+    // before dying is picked up
+    drop(publisher);
+    wait_until("disconnect detected", Duration::from_secs(10), || {
+        !follower.status().connected
+    });
+    write_ckpt(&dir, 6);
+    wait_until("trail resume", Duration::from_secs(10), || {
+        while let Some(u) = follower.poll_model().unwrap() {
+            rounds_seen.push(u.rounds);
+        }
+        rounds_seen.last() == Some(&6)
+    });
+
+    // a stale checkpoint older than the served model never surfaces
+    write_ckpt(&dir, 4);
+    for _ in 0..20 {
+        assert!(
+            follower.poll_model().unwrap().is_none(),
+            "stale checkpoint regressed the served model"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(rounds_seen, vec![3, 5, 6]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// serve --listen admission control
+
+#[test]
+fn saturated_queues_shed_with_retry_after() {
+    let addr = unix_addr("shed-raw");
+    let server = Arc::new(HotSwapServer::new(versioned(1)));
+    let front = ListenServer::spawn(
+        &addr,
+        Arc::clone(&server),
+        ListenOptions {
+            workers: 1,
+            queue_depth: 1,
+            retry_after_ms: 7,
+            worker_delay: Duration::from_millis(400),
+            fabric: fast_fabric(),
+        },
+    )
+    .unwrap();
+
+    let query =
+        Frame::Query { rows: 1, cols: 4, values: vec![1.0, 1.0, 1.0, 1.0] };
+    let mut c1 = client(&addr);
+    let mut c2 = client(&addr);
+    let mut c3 = client(&addr);
+    // c1 occupies the single worker, c2 the single queue slot...
+    wire::write_frame(&mut c1, &query).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    wire::write_frame(&mut c2, &query).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    // ...so c3 must be shed immediately with the configured retry-after
+    wire::write_frame(&mut c3, &query).unwrap();
+    match wire::read_frame(&mut c3).unwrap() {
+        Frame::Overloaded { retry_after_ms } => {
+            assert_eq!(retry_after_ms, 7)
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    // shedding c3 cost the others nothing: both still answer
+    for c in [&mut c1, &mut c2] {
+        match wire::read_frame(c).unwrap() {
+            Frame::Predictions { rounds: _, values } => {
+                assert_eq!(values.len(), 4);
+                assert_eq!(values[0].to_bits(), 1.0f64.to_bits());
+            }
+            other => panic!("expected Predictions, got {other:?}"),
+        }
+    }
+    let counts = front.counts();
+    assert_eq!(counts.shed, 1);
+    assert_eq!(counts.answered, 2);
+}
+
+#[test]
+fn load_generator_report_matches_server_counters() {
+    let addr = unix_addr("load");
+    let server = Arc::new(HotSwapServer::new(versioned(2)));
+    let front = ListenServer::spawn(
+        &addr,
+        Arc::clone(&server),
+        ListenOptions {
+            workers: 2,
+            queue_depth: 2,
+            retry_after_ms: 5,
+            worker_delay: Duration::ZERO,
+            fabric: fast_fabric(),
+        },
+    )
+    .unwrap();
+    let x = Matrix::from_vec(1, 64, vec![1.0; 64]);
+    let report = run_load(
+        &addr,
+        &x,
+        &LoadOptions {
+            connections: 3,
+            queries_per_conn: 20,
+            batch: 8,
+            qps: 0.0,
+            seed: 7,
+            fabric: fast_fabric(),
+        },
+    )
+    .unwrap();
+    assert_eq!(report.sent, 60);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.refused, 0);
+    assert_eq!(report.answered + report.shed, report.sent);
+    assert!(report.answered > 0);
+    let counts = front.counts();
+    assert_eq!(counts.answered, report.answered);
+    assert_eq!(counts.shed, report.shed);
+    assert!(report.p99_ms >= report.p50_ms);
+}
+
+#[test]
+fn narrow_queries_are_refused_not_answered() {
+    let addr = unix_addr("refuse");
+    let server = Arc::new(HotSwapServer::new(Predictor {
+        selected: vec![5],
+        weights: vec![2.0],
+    }));
+    let _front = ListenServer::spawn(
+        &addr,
+        server,
+        ListenOptions { fabric: fast_fabric(), ..ListenOptions::default() },
+    )
+    .unwrap();
+    let mut c = client(&addr);
+    let query = Frame::Query { rows: 2, cols: 3, values: vec![0.0; 6] };
+    wire::write_frame(&mut c, &query).unwrap();
+    match wire::read_frame(&mut c).unwrap() {
+        Frame::Refused { reason } => {
+            assert!(reason.contains("feature"), "{reason}")
+        }
+        other => panic!("expected Refused, got {other:?}"),
+    }
+}
+
+#[test]
+fn model_request_returns_bit_exact_current_model() {
+    let addr = unix_addr("modelreq");
+    let server = Arc::new(HotSwapServer::new(versioned(1)));
+    server.swap(versioned(9), 9);
+    let _front = ListenServer::spawn(
+        &addr,
+        Arc::clone(&server),
+        ListenOptions { fabric: fast_fabric(), ..ListenOptions::default() },
+    )
+    .unwrap();
+    let mut c = client(&addr);
+    wire::write_frame(&mut c, &Frame::ModelRequest).unwrap();
+    match wire::read_frame(&mut c).unwrap() {
+        Frame::Model(m) => {
+            assert_eq!(m.rounds, 9);
+            assert_eq!(m.predictor.selected, vec![0]);
+            assert_eq!(m.predictor.weights[0].to_bits(), 9.0f64.to_bits());
+        }
+        other => panic!("expected Model, got {other:?}"),
+    }
+}

@@ -3,7 +3,7 @@
 
 The development environment for this repo is air-gapped and has no Rust
 toolchain, so the Rust implementation under `xtask/src/` cannot run
-locally. This file is a line-for-line port of the lexer and the six
+locally. This file is a line-for-line port of the lexer and the
 rules: it lets a toolchain-less environment burn findings down to zero
 and (re)generate the checkpoint-format pin with the identical FNV-1a
 hash the Rust binary computes in CI.
@@ -221,6 +221,7 @@ def is_hot_path(rel):
         or rel.startswith("rust/src/parallel/")
         or rel == "rust/src/coordinator/serve.rs"
         or rel == "rust/src/coordinator/stream.rs"
+        or rel.startswith("rust/src/coordinator/fabric/")
         or rel == "rust/src/select/greedy.rs"
     )
 
@@ -329,6 +330,76 @@ def scan_call_extent(rel, lines, start_line, start_off, out):
                     )
                 )
         li += 1
+
+
+def is_fabric_io(rel):
+    return (
+        rel.startswith("rust/src/coordinator/fabric/")
+        or rel == "rust/src/coordinator/serve.rs"
+    )
+
+
+UNBOUNDED_IO_TOKENS = [
+    (
+        "TcpStream::connect(",
+        "`TcpStream::connect` blocks without a deadline — use "
+        "`TcpStream::connect_timeout`",
+    ),
+    (
+        "UnixStream::connect(",
+        "unix connect has no deadline in std — arm read/write timeouts "
+        "immediately after and justify the connect with an xtask-allow",
+    ),
+    (
+        ".read_to_end(",
+        "unbounded socket read — frame reads must be length-prefixed "
+        "and validated before allocation",
+    ),
+    (
+        ".read_to_string(",
+        "unbounded socket read — frame reads must be length-prefixed "
+        "and validated before allocation",
+    ),
+    (
+        "set_read_timeout(None",
+        "disabling the read deadline lets a silent peer hang this "
+        "worker forever",
+    ),
+]
+
+
+def unbounded_io(rel, lines, out):
+    if not is_fabric_io(rel):
+        return
+    connects = False
+    arms_read_timeout = False
+    for line in lines:
+        if line["in_test"]:
+            continue
+        code = line["code"]
+        for tok, why in UNBOUNDED_IO_TOKENS:
+            if tok in code:
+                out.append(
+                    finding("no-unbounded-io", rel, line["number"], why)
+                )
+        if (
+            "TcpStream::connect_timeout(" in code
+            or "UnixStream::connect(" in code
+        ):
+            connects = True
+        if "set_read_timeout(" in code:
+            arms_read_timeout = True
+    if connects and not arms_read_timeout:
+        out.append(
+            finding(
+                "no-unbounded-io",
+                rel,
+                0,
+                "this file opens socket connections but never arms "
+                "a read timeout (`set_read_timeout`) — a silent "
+                "peer would block its readers forever",
+            )
+        )
 
 
 def extract_usage_const(cli_src):
@@ -654,6 +725,7 @@ def analyze(root):
     for rel, lines, _allows in scans:
         token_rules(rel, lines, raw)
         float_reduction(rel, lines, raw)
+        unbounded_io(rel, lines, raw)
     usage_drift(root, raw)
     checkpoint_pin(root, raw)
     findings, suppressed = resolve_allows(scans, raw)

@@ -1,4 +1,4 @@
-//! The rule registry and the six repo invariants.
+//! The rule registry and the repo invariants.
 //!
 //! Every rule is documented in ARCHITECTURE.md §Analysis gauntlet; the
 //! one-line `invariant` strings here are what `analyze` prints next to a
@@ -26,10 +26,10 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         name: "no-panic-hot-path",
         invariant: "serving and hot-path modules (serve.rs, stream.rs, \
-                    parallel/, greedy.rs, cli/, main.rs) must not call \
-                    .unwrap()/.expect()/panic! outside tests — propagate \
-                    Results or recover (PoisonError::into_inner, \
-                    resume_unwind)",
+                    coordinator/fabric/, parallel/, greedy.rs, cli/, \
+                    main.rs) must not call .unwrap()/.expect()/panic! \
+                    outside tests — propagate Results or recover \
+                    (PoisonError::into_inner, resume_unwind)",
     },
     RuleInfo {
         name: "no-raw-instant",
@@ -65,6 +65,14 @@ pub const RULES: &[RuleInfo] = &[
                     version; refresh with `cargo run -p xtask -- pin`",
     },
     RuleInfo {
+        name: "no-unbounded-io",
+        invariant: "fabric/serve socket code must never block without a \
+                    deadline: no TcpStream::connect (connect_timeout \
+                    instead), no read_to_end/read_to_string, no \
+                    set_read_timeout(None); a file that connects must \
+                    also arm read timeouts",
+    },
+    RuleInfo {
         name: "allow-hygiene",
         invariant: "xtask-allow directives need a `-- justification` and \
                     must still match a finding (stale allows are removed, \
@@ -95,6 +103,7 @@ pub fn analyze(root: &Path) -> io::Result<Report> {
     for (rel, _contents, scanned) in &scans {
         token_rules(rel, scanned, &mut raw);
         float_reduction(rel, scanned, &mut raw);
+        unbounded_io(rel, scanned, &mut raw);
     }
     usage_drift(root, &mut raw)?;
     checkpoint_pin(root, &mut raw)?;
@@ -136,6 +145,7 @@ fn is_hot_path(rel: &str) -> bool {
         || rel.starts_with("rust/src/parallel/")
         || rel == "rust/src/coordinator/serve.rs"
         || rel == "rust/src/coordinator/stream.rs"
+        || rel.starts_with("rust/src/coordinator/fabric/")
         || rel == "rust/src/select/greedy.rs"
 }
 
@@ -283,6 +293,92 @@ fn scan_call_extent(
             }
         }
         li += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: no-unbounded-io
+
+/// Socket-touching modules covered by `no-unbounded-io` — the serving
+/// fabric plus the serve module its followers plug into.
+fn is_fabric_io(rel: &str) -> bool {
+    rel.starts_with("rust/src/coordinator/fabric/")
+        || rel == "rust/src/coordinator/serve.rs"
+}
+
+/// `(token, message)` pairs flagged line-by-line in fabric/serve code.
+const UNBOUNDED_IO_TOKENS: [(&str, &str); 5] = [
+    (
+        "TcpStream::connect(",
+        "`TcpStream::connect` blocks without a deadline — use \
+         `TcpStream::connect_timeout`",
+    ),
+    (
+        "UnixStream::connect(",
+        "unix connect has no deadline in std — arm read/write timeouts \
+         immediately after and justify the connect with an xtask-allow",
+    ),
+    (
+        ".read_to_end(",
+        "unbounded socket read — frame reads must be length-prefixed \
+         and validated before allocation",
+    ),
+    (
+        ".read_to_string(",
+        "unbounded socket read — frame reads must be length-prefixed \
+         and validated before allocation",
+    ),
+    (
+        "set_read_timeout(None",
+        "disabling the read deadline lets a silent peer hang this \
+         worker forever",
+    ),
+];
+
+/// Flag blocking socket calls without deadlines in fabric/serve code,
+/// plus a file-level pairing check: a file that opens connections must
+/// also arm read timeouts somewhere (file-level findings carry line 0
+/// and cannot be allowed away — fix the file).
+fn unbounded_io(rel: &str, f: &ScannedFile, out: &mut Vec<Finding>) {
+    if !is_fabric_io(rel) {
+        return;
+    }
+    let mut connects = false;
+    let mut arms_read_timeout = false;
+    for line in &f.lines {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        for (tok, why) in UNBOUNDED_IO_TOKENS {
+            if code.contains(tok) {
+                out.push(Finding {
+                    rule: "no-unbounded-io".into(),
+                    file: rel.into(),
+                    line: line.number,
+                    message: why.to_string(),
+                });
+            }
+        }
+        if code.contains("TcpStream::connect_timeout(")
+            || code.contains("UnixStream::connect(")
+        {
+            connects = true;
+        }
+        if code.contains("set_read_timeout(") {
+            arms_read_timeout = true;
+        }
+    }
+    if connects && !arms_read_timeout {
+        out.push(Finding {
+            rule: "no-unbounded-io".into(),
+            file: rel.into(),
+            line: 0,
+            message: "this file opens socket connections but never arms \
+                      a read timeout (`set_read_timeout`) — a silent \
+                      peer would block its readers forever"
+                .into(),
+        });
     }
 }
 

@@ -1,4 +1,4 @@
-//! Self-test fixture suite: seed a violation of each of the six rules
+//! Self-test fixture suite: seed a violation of each of the rules
 //! into a minimal synthetic tree and demand `analyze` reports exactly
 //! that rule; then demand the *shipped* tree is clean — which makes
 //! `cargo test` itself an enforcement point, independent of the CI step
@@ -281,6 +281,66 @@ fn version_bump_without_repin_fires() {
     // re-pinning resolves it
     xtask::write_pin(&dir).unwrap();
     assert!(xtask::analyze(&dir).unwrap().clean());
+}
+
+#[test]
+fn seeded_unbounded_read_fires() {
+    let dir = clean_fixture("rule7");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\npub fn slurp(s: &mut std::net::TcpStream) -> Vec<u8> {\n    \
+         let mut buf = Vec::new();\n    let _ = s.read_to_end(&mut \
+         buf);\n    buf\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["no-unbounded-io"]);
+}
+
+#[test]
+fn connect_without_read_timeout_fires_at_file_level() {
+    let dir = clean_fixture("rule7b");
+    // connect_timeout is not a banned token, so only the file-level
+    // pairing check (line 0, not allow-able) should fire
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\npub fn dial(a: &std::net::SocketAddr) {\n    let _ = \
+         std::net::TcpStream::connect_timeout(a, \
+         std::time::Duration::from_secs(1));\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["no-unbounded-io"]);
+    assert_eq!(r.findings.len(), 1);
+    assert_eq!(r.findings[0].line, 0);
+    assert!(r.findings[0].message.contains("never arms"));
+}
+
+#[test]
+fn unbounded_io_outside_fabric_scope_is_ignored() {
+    let dir = clean_fixture("rule7c");
+    fs::write(
+        dir.join("rust/src/other_io.rs"),
+        "pub fn slurp(s: &mut std::net::TcpStream) -> Vec<u8> {\n    \
+         let mut buf = Vec::new();\n    let _ = s.read_to_end(&mut \
+         buf);\n    buf\n}\n",
+    )
+    .unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "non-fabric io must not fire: {:?}", r.findings);
+}
+
+#[test]
+fn justified_allow_suppresses_unbounded_io() {
+    let dir = clean_fixture("rule7d");
+    append(
+        &dir.join("rust/src/coordinator/serve.rs"),
+        "\npub fn park(s: &std::net::TcpStream) {\n    // xtask-allow: \
+         no-unbounded-io -- fixture exercises the escape hatch\n    \
+         let _ = s.set_read_timeout(None);\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "justified allow must suppress: {:?}", r.findings);
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.suppressed[0].rule, "no-unbounded-io");
 }
 
 #[test]
