@@ -171,12 +171,18 @@ COMMANDS
              session control: [--stop k|plateau|time] [--patience N]
              [--min-rel-improvement F] [--time-budget-s S]
              [--warm-start I1,I2,...] [--progress]
+             data backend: [--backend ram|mmap] [--tile-cols C]
+             [--window-mb MB] [--chunk-mb MB] [--scratch DIR]  (mmap
+             streams X and the greedy cache through bounded windows so
+             selection runs on datasets larger than RAM, bit-identical
+             to the ram backend; greedy engine only)
              durability: [--checkpoint-dir DIR] [--checkpoint-every N]
              [--resume]  (a killed run resumes bit-identically from its
-             latest checkpoint; --resume with an empty DIR starts fresh)
+             latest checkpoint; --resume with an empty DIR starts fresh;
+             checkpoints interchange between backends)
   cv         paper §4.2 protocol: stratified CV accuracy curves
              --dataset NAME [--folds 10] [--kmax K] [--seed S] [--full]
-             [--threads T] [--engine native|pjrt]
+             [--threads T] [--engine native|pjrt] [--tile-cols C]
              [--checkpoint-dir DIR]  (fold-level resume)
              sweep stopping: [--stop k|plateau|time] [--patience N]
              [--min-rel-improvement F] [--time-budget-s S]  (one wall
@@ -184,7 +190,10 @@ COMMANDS
              curves, never reorder them, and are not resumable)
   scaling    paper §4.1 runtime scaling experiment
              [--sizes 500,1000,...] [--n 1000] [--k 50] [--baseline]
-             [--threads T]
+             [--threads T] [--backend ram|mmap] [--tile-cols C]
+             [--window-mb MB] [--chunk-mb MB] [--scratch DIR]
+             [--json FILE]  (mmap rows measure the out-of-core path;
+             --json writes one JSON row per size for the bench harness)
   serve      batched predictions with a saved model, or hot-swap serving
              that follows a live session's checkpoint directory
              --model FILE --dataset NAME [--batch 64] [--engine native|pjrt]
@@ -237,6 +246,15 @@ COMMANDS
 O(mn) per-round scans and cache updates (0 = all hardware threads, the
 default; 1 = serial). Selected features, criterion curves, and weights
 are bit-identical at every thread count — only the wall-clock changes.
+
+--backend mmap keeps X and the greedy cache in mmap-backed scratch
+files, streamed through per-worker windows of --window-mb MiB (default
+256), scanning in tiles of --tile-cols columns (0 = auto-sized to the
+LLC);
+--chunk-mb bounds loader/generator staging (default 8) and --scratch
+picks the scratch directory (default: the system temp dir). Results are
+bit-identical to --backend ram at every window, tile, and thread
+setting — see ARCHITECTURE.md §Data backends.
 
 Artifacts: run `make artifacts` once; the binary never invokes Python.
 ";

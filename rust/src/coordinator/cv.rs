@@ -72,6 +72,10 @@ pub struct CurveSpec {
     pub stop: StopPolicy,
     /// Which engine executes the selection math.
     pub engine: EngineKind,
+    /// Scan tile width in examples (`0` = untiled); a pure locality
+    /// knob — curves are bit-identical at every setting. Ignored by the
+    /// PJRT engine.
+    pub tile_cols: usize,
 }
 
 impl CurveSpec {
@@ -83,6 +87,7 @@ impl CurveSpec {
             threads,
             stop: StopPolicy::default(),
             engine: EngineKind::Native,
+            tile_cols: 0,
         }
     }
 }
@@ -148,6 +153,7 @@ pub fn selection_curve_spec(
         .loss(Loss::ZeroOne)
         .threads(spec.threads)
         .stop(spec.stop)
+        .tile_cols(spec.tile_cols)
         .build();
     let mut session = super::begin_with_engine(
         spec.engine,
@@ -237,6 +243,9 @@ pub struct CvOptions {
     /// shareable across threads, so PJRT sweeps run their folds serially
     /// (the parallelism lives in the compiled kernels).
     pub engine: EngineKind,
+    /// Scan tile width for every fold's sessions (`0` = untiled);
+    /// bit-identical at every setting, native engine only.
+    pub tile_cols: usize,
 }
 
 impl Default for CvOptions {
@@ -248,6 +257,7 @@ impl Default for CvOptions {
             threads: 0,
             stop: StopPolicy::default(),
             engine: EngineKind::Native,
+            tile_cols: 0,
         }
     }
 }
@@ -351,6 +361,7 @@ fn compute_folds_at(
                 threads: inner,
                 stop: opts.stop,
                 engine: EngineKind::Native,
+                tile_cols: opts.tile_cols,
             };
             crate::parallel::par_map(outer, indices.len(), |j| {
                 let i = indices[j];
@@ -370,6 +381,7 @@ fn compute_folds_at(
                 threads: opts.threads,
                 stop: opts.stop,
                 engine: EngineKind::Pjrt,
+                tile_cols: opts.tile_cols,
             };
             indices
                 .iter()
@@ -887,6 +899,7 @@ mod tests {
             threads: 1,
             stop: StopPolicy::KBudget(2),
             engine: EngineKind::Native,
+            tile_cols: 0,
         };
         let capped = run_cv_opts(&ds, &opts, None).unwrap();
         assert_eq!(capped.ks, plain.ks);
@@ -910,6 +923,7 @@ mod tests {
             threads: 1,
             stop: StopPolicy::TimeBudget(Duration::ZERO),
             engine: EngineKind::Native,
+            tile_cols: 0,
         };
         let cv = run_cv_opts(&ds, &opts, None).unwrap();
         assert!(cv.ks.is_empty());
@@ -951,6 +965,7 @@ mod tests {
             threads: 1,
             stop: StopPolicy::TimeBudget(Duration::from_secs(3600)),
             engine: EngineKind::Native,
+            tile_cols: 0,
         };
         let err = run_cv_resumable(&ds, &opts, None, &dir).unwrap_err();
         assert!(
@@ -976,6 +991,7 @@ mod tests {
             threads: 1,
             stop: StopPolicy::default(),
             engine: EngineKind::Native,
+            tile_cols: 0,
         };
         let full = run_cv_resumable(&ds, &base, None, &dir).unwrap();
         assert_eq!(full.ks.len(), 4);

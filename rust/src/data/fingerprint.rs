@@ -14,6 +14,7 @@
 //! resume. It deliberately ignores the dataset *name*: two loads of the
 //! same synthetic problem under different labels resume interchangeably.
 
+use super::storage::MatrixStore;
 use crate::linalg::Matrix;
 
 /// Streaming 64-bit FNV-1a hasher.
@@ -100,6 +101,36 @@ pub fn fingerprint_xy(x: &Matrix, y: &[f64]) -> u64 {
     h.finish()
 }
 
+/// [`fingerprint_xy`] over a [`MatrixStore`], streaming row windows
+/// through the hasher instead of requiring the matrix in RAM. FNV-1a is
+/// a byte stream, so absorbing the same values in the same order yields
+/// the **same hash** as `fingerprint_xy` on the materialized matrix —
+/// checkpoints written by one backend resume under the other.
+pub fn fingerprint_xy_stored(
+    x: &MatrixStore,
+    y: &[f64],
+) -> anyhow::Result<u64> {
+    let mut h = Fnv64::new();
+    h.write_usize(x.rows());
+    h.write_usize(x.row_len());
+    let step = x.window_rows();
+    let mut r0 = 0;
+    while r0 < x.rows() {
+        let r1 = (r0 + step).min(x.rows());
+        x.read_rows(r0..r1, |rows| {
+            for &v in rows {
+                h.write_f64(v);
+            }
+        })?;
+        r0 = r1;
+    }
+    h.write_usize(y.len());
+    for &v in y {
+        h.write_f64(v);
+    }
+    Ok(h.finish())
+}
+
 impl super::Dataset {
     /// Content fingerprint of this dataset (see [`fingerprint_xy`]).
     pub fn fingerprint(&self) -> u64 {
@@ -163,6 +194,22 @@ mod tests {
         // a different seed must change the hash
         let other = crate::data::synthetic::two_gaussians(30, 8, 3, 1.0, 6);
         assert_ne!(base, other.fingerprint());
+    }
+
+    #[test]
+    fn stored_fingerprint_equals_ram_fingerprint() {
+        use crate::data::storage::{Backend, StorageOptions};
+        let ds = crate::data::synthetic::two_gaussians(20, 12, 3, 1.0, 9);
+        let want = ds.fingerprint();
+        let mut opts = vec![StorageOptions::default()];
+        if cfg!(target_os = "linux") {
+            opts.push(StorageOptions::default().backend(Backend::Mmap));
+        }
+        for o in opts {
+            let st = MatrixStore::from_matrix(&ds.x, &o).unwrap();
+            let got = fingerprint_xy_stored(&st, &ds.y).unwrap();
+            assert_eq!(got, want, "{:?}", o.backend);
+        }
     }
 
     #[test]

@@ -12,13 +12,54 @@
 //! equivalents (see `registry.rs`), but any real file dropped into
 //! `data/real/<name>.libsvm` is parsed by this module and used instead.
 
-use std::io::{BufRead, BufReader, Read};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{bail, Context};
 
+use super::storage::{ChunkedLines, MatrixStore, StorageOptions, StoredDataset};
 use super::Dataset;
 use crate::linalg::Matrix;
+
+/// One parsed LIBSVM line: label plus 0-based `(feature, value)` pairs.
+/// `None` for blank and `#`-comment lines.
+type ParsedLine = Option<(f64, Vec<(usize, f64)>)>;
+
+/// Parse one LIBSVM text line. This is the single tokenizer behind both
+/// the in-RAM reader ([`parse`]) and the out-of-core streaming loader
+/// ([`parse_file_stored`]), so edge-case semantics (1-based indices,
+/// unsorted pairs, trailing whitespace, comments) cannot drift between
+/// backends. `lineno` is 0-based; errors report it 1-based.
+fn parse_line(raw: &str, lineno: usize) -> anyhow::Result<ParsedLine> {
+    let line = raw.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let label: f64 = match parts.next() {
+        Some(tok) => tok
+            .parse()
+            .with_context(|| format!("bad label on line {}", lineno + 1))?,
+        None => return Ok(None),
+    };
+    let mut feats = Vec::new();
+    for tok in parts {
+        let (idx, val) = tok
+            .split_once(':')
+            .with_context(|| format!("bad pair {tok:?} line {}", lineno + 1))?;
+        let idx: usize = idx
+            .parse()
+            .with_context(|| format!("bad index {idx:?} line {}", lineno + 1))?;
+        if idx == 0 {
+            bail!("LIBSVM indices are 1-based; got 0 on line {}", lineno + 1);
+        }
+        let val: f64 = val
+            .parse()
+            .with_context(|| format!("bad value {val:?} line {}", lineno + 1))?;
+        feats.push((idx - 1, val));
+    }
+    Ok(Some((label, feats)))
+}
 
 /// Parse LIBSVM text from any reader. `n_features` may be given (for
 /// datasets whose tail features are absent in the file); otherwise the max
@@ -33,37 +74,17 @@ pub fn parse<R: Read>(
     let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
     let mut max_index = 0usize;
 
-    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
-        let line = line.context("read error")?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let mut parts = line.split_whitespace();
-        let label: f64 = parts
-            .next()
-            .unwrap()
-            .parse()
-            .with_context(|| format!("bad label on line {}", lineno + 1))?;
-        let mut feats = Vec::new();
-        for tok in parts {
-            let (idx, val) = tok
-                .split_once(':')
-                .with_context(|| format!("bad pair {tok:?} line {}", lineno + 1))?;
-            let idx: usize = idx
-                .parse()
-                .with_context(|| format!("bad index {idx:?} line {}", lineno + 1))?;
-            if idx == 0 {
-                bail!("LIBSVM indices are 1-based; got 0 on line {}", lineno + 1);
+    let mut lines = ChunkedLines::new(reader, 64 << 10);
+    let mut lineno = 0usize;
+    while let Some(line) = lines.next_line()? {
+        if let Some((label, feats)) = parse_line(line, lineno)? {
+            for &(i, _) in &feats {
+                max_index = max_index.max(i + 1);
             }
-            let val: f64 = val
-                .parse()
-                .with_context(|| format!("bad value {val:?} line {}", lineno + 1))?;
-            max_index = max_index.max(idx);
-            feats.push((idx - 1, val));
+            labels.push(label);
+            rows.push(feats);
         }
-        labels.push(label);
-        rows.push(feats);
+        lineno += 1;
     }
 
     if labels.is_empty() {
@@ -93,6 +114,140 @@ pub fn parse_file(path: &Path, n_features: Option<usize>) -> anyhow::Result<Data
     let fh = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
     parse(fh, &name, n_features)
+}
+
+/// Pending sparse entries, flushed window-by-window so the store maps
+/// each row window once per flush instead of once per value. A stable
+/// sort groups entries by window while preserving file order inside a
+/// window, so duplicate `(i, j)` pairs keep last-write-wins semantics.
+fn flush_entries(
+    x: &mut MatrixStore,
+    pending: &mut Vec<(usize, usize, f64)>,
+) -> anyhow::Result<()> {
+    if pending.is_empty() {
+        return Ok(());
+    }
+    let window = x.window_rows();
+    let m = x.row_len();
+    pending.sort_by_key(|e| e.0 / window);
+    let mut s = 0;
+    while s < pending.len() {
+        let w = pending[s].0 / window;
+        let mut e = s;
+        while e < pending.len() && pending[e].0 / window == w {
+            e += 1;
+        }
+        let r0 = w * window;
+        let r1 = (r0 + window).min(x.rows());
+        let batch = &pending[s..e];
+        x.write_rows(r0..r1, |rows| {
+            for &(i, j, v) in batch {
+                rows[(i - r0) * m + j] = v;
+            }
+        })?;
+        s = e;
+    }
+    pending.clear();
+    Ok(())
+}
+
+/// Parse a LIBSVM file into a [`StoredDataset`] on the backend `opts`
+/// selects, streaming in two bounded passes — memory use is O(m) labels
+/// plus the read chunk and entry buffer, never O(n·m), so GB-scale files
+/// load under an address-space cap.
+///
+/// Pass 1 counts examples and the max feature index; pass 2 re-reads and
+/// scatters values into row windows of the store. Both passes tokenize
+/// through the same `parse_line` as [`parse`], so the resulting matrix
+/// is byte-identical to the in-RAM loader's (asserted by
+/// `rust/tests/backend_equivalence.rs`).
+pub fn parse_file_stored(
+    path: &Path,
+    n_features: Option<usize>,
+    opts: &StorageOptions,
+) -> anyhow::Result<StoredDataset> {
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "unnamed".into());
+
+    // Pass 1: shape discovery (labels, example count, max index).
+    let fh = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut lines = ChunkedLines::new(fh, opts.chunk_bytes);
+    let mut labels = Vec::new();
+    let mut max_index = 0usize;
+    let mut lineno = 0usize;
+    while let Some(line) = lines.next_line()? {
+        if let Some((label, feats)) = parse_line(line, lineno)? {
+            for &(i, _) in &feats {
+                max_index = max_index.max(i + 1);
+            }
+            labels.push(label);
+        }
+        lineno += 1;
+    }
+    if labels.is_empty() {
+        bail!("empty LIBSVM file for {name}");
+    }
+    let n = n_features.unwrap_or(max_index);
+    if max_index > n {
+        bail!("feature index {max_index} exceeds declared n_features {n}");
+    }
+    let m = labels.len();
+
+    // Pass 2: scatter values into the store through bounded buffers.
+    let mut x = MatrixStore::zeros(n, m, opts)?;
+    let flush_cap = (opts.chunk_bytes / 8).max(1024);
+    let mut pending: Vec<(usize, usize, f64)> = Vec::new();
+    let fh = std::fs::File::open(path)
+        .with_context(|| format!("reopen {}", path.display()))?;
+    let mut lines = ChunkedLines::new(fh, opts.chunk_bytes);
+    let mut j = 0usize;
+    let mut lineno = 0usize;
+    while let Some(line) = lines.next_line()? {
+        if let Some((_, feats)) = parse_line(line, lineno)? {
+            if j >= m {
+                bail!("{} changed between passes (extra example)", path.display());
+            }
+            for (i, v) in feats {
+                pending.push((i, j, v));
+            }
+            if pending.len() >= flush_cap {
+                flush_entries(&mut x, &mut pending)?;
+            }
+            j += 1;
+        }
+        lineno += 1;
+    }
+    if j != m {
+        bail!(
+            "{} changed between passes ({} examples, then {j})",
+            path.display(),
+            m
+        );
+    }
+    flush_entries(&mut x, &mut pending)?;
+
+    let y = normalize_labels(&labels);
+    StoredDataset::new(name, x, y)
+}
+
+/// Load a LIBSVM file honoring the backend in `opts`: the RAM backend
+/// takes the historical [`parse_file`] path; the mmap backend streams
+/// through [`parse_file_stored`] and hands every selector a
+/// mapped-matrix [`Dataset`] (zero extra RAM, full `Matrix` API).
+pub fn load_file(
+    path: &Path,
+    n_features: Option<usize>,
+    opts: &StorageOptions,
+) -> anyhow::Result<Dataset> {
+    match opts.backend {
+        super::storage::Backend::Ram => parse_file(path, n_features),
+        super::storage::Backend::Mmap => {
+            parse_file_stored(path, n_features, opts)?.into_dataset()
+        }
+    }
 }
 
 /// Map common binary label encodings to ±1; leave regression targets alone.
@@ -214,5 +369,162 @@ mod tests {
         assert!(parse("1 a:1.0\n".as_bytes(), "b", None).is_err());
         assert!(parse("1 1:x\n".as_bytes(), "b", None).is_err());
         assert!(parse("notalabel 1:1\n".as_bytes(), "b", None).is_err());
+    }
+
+    // ---- edge cases shared by both loaders ------------------------------
+
+    use crate::data::storage::{Backend, StorageOptions};
+
+    /// Text exercising every loader edge case at once: comments, blank
+    /// lines, unsorted 1-based indices, duplicate indices (last write
+    /// wins), trailing whitespace, CRLF, and a final unterminated line.
+    const EDGE: &str = "# leading comment\n\
+        +1 3:3.0 1:1.0 2:2.0   \n\
+        \n\
+        -1 2:5.0 2:7.0\r\n\
+        # mid comment\n\
+        +1 1:-0.5\t4:4.0\n\
+        -1 4:0.125";
+
+    fn write_temp(text: &str) -> std::path::PathBuf {
+        use std::io::Write;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static N: AtomicU64 = AtomicU64::new(0);
+        let p = std::env::temp_dir().join(format!(
+            "greedy-rls-libsvm-test-{}-{}.libsvm",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+        p
+    }
+
+    fn stored_opts() -> Vec<StorageOptions> {
+        let mut all = vec![
+            StorageOptions::default(),
+            StorageOptions::default().chunk_bytes(0), // clamps to the 4 KiB floor
+        ];
+        if cfg!(target_os = "linux") {
+            all.push(StorageOptions::default().backend(Backend::Mmap));
+        }
+        all
+    }
+
+    #[test]
+    fn edge_cases_parse_identically_in_both_loaders() {
+        let path = write_temp(EDGE);
+        let ram = parse_file(&path, None).unwrap();
+        assert_eq!(ram.n_examples(), 4);
+        assert_eq!(ram.n_features(), 4);
+        // unsorted indices landed in the right slots
+        assert_eq!(ram.x[(0, 0)], 1.0);
+        assert_eq!(ram.x[(1, 0)], 2.0);
+        assert_eq!(ram.x[(2, 0)], 3.0);
+        // duplicate index: last write wins
+        assert_eq!(ram.x[(1, 1)], 7.0);
+        // final unterminated line parsed
+        assert_eq!(ram.x[(3, 3)], 0.125);
+        for opts in stored_opts() {
+            let stored = parse_file_stored(&path, None, &opts).unwrap();
+            let got = stored.to_dataset().unwrap();
+            assert_eq!(got.y, ram.y, "{:?}", opts.backend);
+            for (a, b) in got.x.as_slice().iter().zip(ram.x.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", opts.backend);
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stored_loader_rejects_index_beyond_declared_n() {
+        let path = write_temp("+1 5:1.0\n-1 1:2.0\n");
+        for opts in stored_opts() {
+            let err =
+                parse_file_stored(&path, Some(3), &opts).unwrap_err();
+            assert!(
+                err.to_string().contains("exceeds declared n_features"),
+                "{err:#}"
+            );
+        }
+        // and both loaders accept the declared count when it fits
+        assert_eq!(parse_file(&path, Some(8)).unwrap().n_features(), 8);
+        for opts in stored_opts() {
+            let st = parse_file_stored(&path, Some(8), &opts).unwrap();
+            assert_eq!(st.n_features(), 8);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stored_loader_rejects_empty_and_zero_index() {
+        let empty = write_temp("# only comments\n\n");
+        let zero = write_temp("1 0:3.0\n");
+        for opts in stored_opts() {
+            assert!(parse_file_stored(&empty, None, &opts).is_err());
+            let err = parse_file_stored(&zero, None, &opts).unwrap_err();
+            assert!(err.to_string().contains("1-based"), "{err:#}");
+        }
+        std::fs::remove_file(&empty).unwrap();
+        std::fs::remove_file(&zero).unwrap();
+    }
+
+    #[test]
+    fn chunk_boundary_splitting_a_line_is_transparent() {
+        // One example whose line is far longer than the 4 KiB minimum
+        // chunk, so the streaming loader must reassemble it across many
+        // refills; a second short line proves the split didn't desync.
+        let mut text = String::from("+1");
+        for i in 0..2000 {
+            text.push_str(&format!(" {}:{}", i + 1, (i % 13) as f64 + 0.5));
+        }
+        text.push_str("\n-1 1:9.0\n");
+        let path = write_temp(&text);
+        let ram = parse_file(&path, None).unwrap();
+        assert_eq!(ram.n_examples(), 2);
+        assert_eq!(ram.n_features(), 2000);
+        for opts in stored_opts() {
+            let stored = parse_file_stored(&path, None, &opts).unwrap();
+            let got = stored.to_dataset().unwrap();
+            for (a, b) in got.x.as_slice().iter().zip(ram.x.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", opts.backend);
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stored_loader_handles_many_examples_across_windows() {
+        // Enough rows/examples that tiny mmap windows and tiny chunks
+        // both split work repeatedly; values dense enough to cross
+        // flush boundaries.
+        let mut text = String::new();
+        for j in 0..97 {
+            text.push_str(&format!("{}", if j % 2 == 0 { 1 } else { -1 }));
+            for i in 0..23 {
+                if (i + j) % 3 != 0 {
+                    text.push_str(&format!(
+                        " {}:{}",
+                        i + 1,
+                        (i * 97 + j) as f64 * 0.015625
+                    ));
+                }
+            }
+            text.push('\n');
+        }
+        let path = write_temp(&text);
+        let ram = parse_file(&path, None).unwrap();
+        for opts in stored_opts() {
+            let stored = parse_file_stored(&path, None, &opts).unwrap();
+            let got = stored.to_dataset().unwrap();
+            for (a, b) in got.x.as_slice().iter().zip(ram.x.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", opts.backend);
+            }
+            let loaded = load_file(&path, None, &opts).unwrap();
+            for (a, b) in loaded.x.as_slice().iter().zip(ram.x.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", opts.backend);
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -1,14 +1,22 @@
-//! Dataset substrate: in-memory datasets, parsing, splitting, scaling.
+//! Dataset substrate: datasets, parsing, splitting, scaling, and the
+//! out-of-core storage backends.
 //!
 //! Layout convention follows the paper: the design matrix `X` is
 //! **feature-major**, `X[i][j]` = value of feature `i` on example `j`
 //! (an `n × m` [`Matrix`]), so a feature's value vector `v = X_i` is a
 //! contiguous row — exactly what the greedy scoring loop streams.
+//!
+//! A dataset's matrix lives either in RAM ([`Dataset`], the default) or
+//! behind the [`storage`] backends ([`storage::StoredDataset`]), which
+//! keep the same feature-major layout in file-backed scratch accessed
+//! through bounded mmap windows — byte-identical selection results
+//! either way.
 
 pub mod fingerprint;
 pub mod folds;
 pub mod libsvm;
 pub mod registry;
+pub mod storage;
 pub mod synthetic;
 
 use crate::linalg::Matrix;

@@ -1,0 +1,1264 @@
+//! Out-of-core data backends: RAM or memory-mapped storage for the two
+//! O(n·m) buffers of a selection run — the dataset `X` and the greedy
+//! cache Cᵀ — plus the chunked line reader behind the GB-scale libsvm
+//! loader.
+//!
+//! The greedy hot passes are pure streaming at 0.17–0.31 flop/byte
+//! (EXPERIMENTS.md §Perf), exactly the access pattern that tolerates
+//! spilling to disk: this module lets both big matrices live in
+//! file-backed scratch, accessed through bounded **row windows** so the
+//! process' address space stays capped no matter how large the data is
+//! (the CI out-of-core smoke job runs selection under `ulimit -v`
+//! smaller than the dataset).
+//!
+//! Three layers:
+//!
+//! * [`MatrixStore`] — an `n × row_len` f64 store that is either a RAM
+//!   `Vec<f64>` ([`Backend::Ram`], current behavior, bit-identical) or a
+//!   scratch file accessed through short-lived `mmap` windows of at most
+//!   [`StorageOptions::window_bytes`] bytes ([`Backend::Mmap`]).
+//! * [`ReadMap`] — a whole-file read-only mapping that backs a regular
+//!   [`Matrix`], so *every* selector (not just greedy) can consume an
+//!   mmap-backed dataset through the unchanged `Matrix` API.
+//! * [`ChunkedLines`] — a bounded-buffer line splitter over any
+//!   [`Read`], the substrate of `data::libsvm`'s streaming loader (a
+//!   line crossing a chunk boundary is reassembled transparently).
+//!
+//! **Determinism.** Backends change *where bytes live*, never *what
+//! arithmetic runs*: the scan and commit kernels receive the same row
+//! slices in the same order whether a row comes from a `Vec` or a
+//! mapping window, and column tiles only reorder memory traffic across
+//! candidates while each candidate's own accumulator sequence stays the
+//! serial one. Selected sets, criterion curves, and weights are
+//! therefore byte-identical across backends, tile sizes, and thread
+//! counts — enforced by `rust/tests/backend_equivalence.rs`.
+//!
+//! The mmap backend is implemented with raw `extern "C"` bindings (no
+//! new dependencies) and is Linux-only; constructors return a clean
+//! error elsewhere.
+
+use std::fs::{File, OpenOptions};
+use std::io::Read;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::linalg::Matrix;
+
+// ---------------------------------------------------------------------------
+// Backend + options
+// ---------------------------------------------------------------------------
+
+/// Where a [`MatrixStore`] keeps its bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// In-RAM `Vec<f64>` — the historical behavior and the default.
+    #[default]
+    Ram,
+    /// File-backed scratch accessed through bounded mmap windows
+    /// (Linux-only; requires no extra RAM beyond the window budget).
+    Mmap,
+}
+
+impl FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Backend> {
+        match s {
+            "ram" => Ok(Backend::Ram),
+            "mmap" => Ok(Backend::Mmap),
+            other => bail!("unknown backend {other:?} (expected ram|mmap)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Backend::Ram => "ram",
+            Backend::Mmap => "mmap",
+        })
+    }
+}
+
+/// Knobs for the storage layer: backend choice, mapping-window budget,
+/// LLC column-tile width, loader chunk size, and the scratch directory.
+///
+/// ```
+/// use greedy_rls::data::storage::{Backend, StorageOptions};
+///
+/// let opts = StorageOptions::default()
+///     .backend("mmap".parse::<Backend>()?)
+///     .window_bytes(16 << 20)
+///     .chunk_bytes(1 << 20);
+/// assert_eq!(opts.backend, Backend::Mmap);
+/// assert_eq!(opts.window_bytes, 16 << 20);
+/// # anyhow::Ok(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct StorageOptions {
+    /// Backend for the big O(n·m) buffers.
+    pub backend: Backend,
+    /// Upper bound, in bytes, on one mapping window (per worker thread;
+    /// the scan maps one dataset window plus one cache window at a
+    /// time). Ignored by [`Backend::Ram`].
+    pub window_bytes: usize,
+    /// Column-tile width for the LLC-tiled scan/commit kernels:
+    /// `0` = automatic (off for RAM, roofline-derived for mmap — see
+    /// EXPERIMENTS.md §Out-of-core). Rounded down to a multiple of 8 so
+    /// tiling never changes the kernels' accumulator pairing.
+    pub tile_cols: usize,
+    /// Read-chunk size for the streaming libsvm loader.
+    pub chunk_bytes: usize,
+    /// Directory for scratch files (`None` = the system temp dir).
+    /// Scratch files are deleted when their store is dropped.
+    pub scratch: Option<PathBuf>,
+}
+
+impl Default for StorageOptions {
+    fn default() -> Self {
+        StorageOptions {
+            backend: Backend::Ram,
+            window_bytes: 256 << 20,
+            tile_cols: 0,
+            chunk_bytes: 8 << 20,
+            scratch: None,
+        }
+    }
+}
+
+impl StorageOptions {
+    /// Set the backend.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Set the mapping-window budget in bytes (clamped to ≥ 1 MiB so a
+    /// window always holds a useful number of rows).
+    pub fn window_bytes(mut self, bytes: usize) -> Self {
+        self.window_bytes = bytes.max(1 << 20);
+        self
+    }
+
+    /// Set the column-tile width (`0` = automatic).
+    pub fn tile_cols(mut self, cols: usize) -> Self {
+        self.tile_cols = cols;
+        self
+    }
+
+    /// Set the loader read-chunk size in bytes (clamped to ≥ 4 KiB).
+    pub fn chunk_bytes(mut self, bytes: usize) -> Self {
+        self.chunk_bytes = bytes.max(4 << 10);
+        self
+    }
+
+    /// Set the scratch directory.
+    pub fn scratch(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.scratch = Some(dir.into());
+        self
+    }
+
+    /// Resolved scratch directory (`scratch` or the system temp dir).
+    pub fn scratch_dir(&self) -> PathBuf {
+        self.scratch.clone().unwrap_or_else(std::env::temp_dir)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scratch files
+// ---------------------------------------------------------------------------
+
+/// A scratch file that is removed from disk when dropped.
+struct ScratchFile {
+    path: PathBuf,
+}
+
+impl ScratchFile {
+    fn create(dir: &Path) -> anyhow::Result<(ScratchFile, File)> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let id = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!(
+            "greedy-rls-scratch-{}-{id}.bin",
+            std::process::id()
+        ));
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| {
+                format!("creating scratch file {}", path.display())
+            })?;
+        Ok((ScratchFile { path }, file))
+    }
+}
+
+impl Drop for ScratchFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Raw mmap bindings (Linux-only, no external crates)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const MAP_SHARED: i32 = 1;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        fn sysconf(name: i32) -> i64;
+    }
+
+    /// Host page size (`_SC_PAGESIZE`; 4096 if the query fails).
+    pub fn page_size() -> usize {
+        const SC_PAGESIZE: i32 = 30;
+        let v = unsafe { sysconf(SC_PAGESIZE) };
+        if v > 0 {
+            v as usize
+        } else {
+            4096
+        }
+    }
+}
+
+/// One short-lived mapping of byte range `[off, off + len)` of a file.
+/// `off`/`len` are multiples of 8 (callers pass row-aligned f64 ranges);
+/// the mapping itself is widened down to a page boundary.
+#[cfg(target_os = "linux")]
+struct Window {
+    base: *mut u8,
+    map_len: usize,
+    delta: usize,
+    f64_len: usize,
+}
+
+#[cfg(target_os = "linux")]
+impl Window {
+    fn map(
+        file: &File,
+        byte_off: u64,
+        byte_len: usize,
+        writable: bool,
+    ) -> anyhow::Result<Window> {
+        use std::os::unix::io::AsRawFd;
+        ensure!(byte_off % 8 == 0, "window offset must be f64-aligned");
+        ensure!(byte_len % 8 == 0, "window length must be f64-aligned");
+        if byte_len == 0 {
+            return Ok(Window {
+                base: std::ptr::null_mut(),
+                map_len: 0,
+                delta: 0,
+                f64_len: 0,
+            });
+        }
+        let page = sys::page_size() as u64;
+        let aligned_off = byte_off - byte_off % page;
+        let delta = (byte_off - aligned_off) as usize;
+        let map_len = byte_len + delta;
+        let prot = if writable {
+            sys::PROT_READ | sys::PROT_WRITE
+        } else {
+            sys::PROT_READ
+        };
+        let base = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                map_len,
+                prot,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                aligned_off as i64,
+            )
+        };
+        ensure!(
+            !base.is_null() && base as isize != -1,
+            "mmap of {map_len} bytes at offset {aligned_off} failed \
+             (address-space limit or bad file?)"
+        );
+        Ok(Window {
+            base: base as *mut u8,
+            map_len,
+            delta,
+            f64_len: byte_len / 8,
+        })
+    }
+
+    fn slice(&self) -> &[f64] {
+        if self.f64_len == 0 {
+            return &[];
+        }
+        // Alignment: page base + delta, both multiples of 8.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.base.add(self.delta) as *const f64,
+                self.f64_len,
+            )
+        }
+    }
+
+    fn slice_mut(&mut self) -> &mut [f64] {
+        if self.f64_len == 0 {
+            return &mut [];
+        }
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.base.add(self.delta) as *mut f64,
+                self.f64_len,
+            )
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Window {
+    fn drop(&mut self) {
+        if !self.base.is_null() {
+            unsafe {
+                sys::munmap(self.base as *mut std::ffi::c_void, self.map_len);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MatrixStore
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+struct Mapped {
+    file: File,
+    writable: bool,
+    // Keeps the scratch file alive (and deletes it on drop).
+    _scratch: Option<ScratchFile>,
+}
+
+enum Inner {
+    Ram(Vec<f64>),
+    #[cfg(target_os = "linux")]
+    Mapped(Mapped),
+}
+
+/// A dense `rows × row_len` f64 store with a RAM or mmap backend,
+/// accessed through contiguous row ranges.
+///
+/// This is the storage abstraction behind both out-of-core buffers: the
+/// loader builds the dataset `X` into one, and the greedy engine keeps
+/// its cache Cᵀ in another. RAM access is a plain subslice; mmap access
+/// maps a short-lived window per call, so the caller's address-space
+/// footprint is bounded by [`MatrixStore::window_rows`] rows per window
+/// regardless of the store size.
+///
+/// ```
+/// use greedy_rls::data::storage::{Backend, MatrixStore, StorageOptions};
+///
+/// // Exercise the mmap backend where available, RAM elsewhere.
+/// let backend = if cfg!(target_os = "linux") { Backend::Mmap } else { Backend::Ram };
+/// let opts = StorageOptions::default().backend(backend);
+/// let mut store = MatrixStore::zeros(3, 4, &opts)?;
+/// store.write_rows(1..2, |rows| rows.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]))?;
+/// let sum = store.read_rows(0..3, |rows| rows.iter().sum::<f64>())?;
+/// assert_eq!(sum, 10.0);
+/// # anyhow::Ok(())
+/// ```
+pub struct MatrixStore {
+    rows: usize,
+    row_len: usize,
+    window_rows: usize,
+    inner: Inner,
+}
+
+impl MatrixStore {
+    /// A zero-filled store on the backend `opts` selects.
+    pub fn zeros(
+        rows: usize,
+        row_len: usize,
+        opts: &StorageOptions,
+    ) -> anyhow::Result<MatrixStore> {
+        ensure!(row_len > 0, "row_len must be positive");
+        let total = rows
+            .checked_mul(row_len)
+            .and_then(|n| n.checked_mul(8))
+            .context("store size overflows usize")?;
+        let window_rows = Self::window_rows_for(opts, row_len, rows);
+        let inner = match opts.backend {
+            Backend::Ram => Inner::Ram(vec![0.0; total / 8]),
+            #[cfg(target_os = "linux")]
+            Backend::Mmap => {
+                let (scratch, file) = ScratchFile::create(&opts.scratch_dir())?;
+                file.set_len(total as u64).with_context(|| {
+                    format!("sizing scratch store to {total} bytes")
+                })?;
+                Inner::Mapped(Mapped {
+                    file,
+                    writable: true,
+                    _scratch: Some(scratch),
+                })
+            }
+            #[cfg(not(target_os = "linux"))]
+            Backend::Mmap => {
+                bail!("the mmap backend requires linux (raw mmap bindings)")
+            }
+        };
+        Ok(MatrixStore { rows, row_len, window_rows, inner })
+    }
+
+    /// Copy a [`Matrix`] into a fresh store (rows map to rows).
+    pub fn from_matrix(
+        x: &Matrix,
+        opts: &StorageOptions,
+    ) -> anyhow::Result<MatrixStore> {
+        let mut store = MatrixStore::zeros(x.rows(), x.cols(), opts)?;
+        let step = store.window_rows;
+        let mut r0 = 0;
+        while r0 < x.rows() {
+            let r1 = (r0 + step).min(x.rows());
+            store.write_rows(r0..r1, |dst| {
+                dst.copy_from_slice(
+                    &x.as_slice()[r0 * x.cols()..r1 * x.cols()],
+                );
+            })?;
+            r0 = r1;
+        }
+        Ok(store)
+    }
+
+    /// Open an existing dense row-major f64 file read-only through mmap
+    /// windows (Linux-only). The file must hold exactly
+    /// `rows · row_len` f64 values.
+    pub fn open_readonly(
+        path: &Path,
+        rows: usize,
+        row_len: usize,
+        opts: &StorageOptions,
+    ) -> anyhow::Result<MatrixStore> {
+        ensure!(row_len > 0, "row_len must be positive");
+        #[cfg(target_os = "linux")]
+        {
+            let file = File::open(path).with_context(|| {
+                format!("opening dense store {}", path.display())
+            })?;
+            let want = (rows * row_len * 8) as u64;
+            let got = file.metadata()?.len();
+            ensure!(
+                got == want,
+                "dense store {} is {got} bytes, expected {want} \
+                 ({rows} rows × {row_len})",
+                path.display()
+            );
+            Ok(MatrixStore {
+                rows,
+                row_len,
+                window_rows: Self::window_rows_for(opts, row_len, rows),
+                inner: Inner::Mapped(Mapped {
+                    file,
+                    writable: false,
+                    _scratch: None,
+                }),
+            })
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = (path, opts);
+            bail!("the mmap backend requires linux (raw mmap bindings)")
+        }
+    }
+
+    fn window_rows_for(
+        opts: &StorageOptions,
+        row_len: usize,
+        rows: usize,
+    ) -> usize {
+        match opts.backend {
+            Backend::Ram => rows.max(1),
+            Backend::Mmap => (opts.window_bytes / (row_len * 8))
+                .clamp(1, rows.max(1)),
+        }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row length (the number of columns).
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// The backend this store runs on.
+    pub fn backend(&self) -> Backend {
+        match self.inner {
+            Inner::Ram(_) => Backend::Ram,
+            #[cfg(target_os = "linux")]
+            Inner::Mapped(_) => Backend::Mmap,
+        }
+    }
+
+    /// How many rows one mapping window holds — callers chunk long scans
+    /// by this to keep the address-space footprint bounded. RAM stores
+    /// report the full row count (no windowing needed).
+    pub fn window_rows(&self) -> usize {
+        self.window_rows
+    }
+
+    /// Run `f` over the contiguous rows `r` (read-only). One mmap window
+    /// is created for the call on the mmap backend; a subslice on RAM.
+    pub fn read_rows<T>(
+        &self,
+        r: Range<usize>,
+        f: impl FnOnce(&[f64]) -> T,
+    ) -> anyhow::Result<T> {
+        ensure!(
+            r.start <= r.end && r.end <= self.rows,
+            "row range {}..{} out of bounds (rows = {})",
+            r.start,
+            r.end,
+            self.rows
+        );
+        match &self.inner {
+            Inner::Ram(data) => {
+                Ok(f(&data[r.start * self.row_len..r.end * self.row_len]))
+            }
+            #[cfg(target_os = "linux")]
+            Inner::Mapped(map) => {
+                let win = Window::map(
+                    &map.file,
+                    (r.start * self.row_len * 8) as u64,
+                    (r.end - r.start) * self.row_len * 8,
+                    false,
+                )?;
+                Ok(f(win.slice()))
+            }
+        }
+    }
+
+    /// Copy row `i` into `out` (cleared first). The O(m) staging path of
+    /// the stored commit (`v`, `c_b`) and weights.
+    pub fn read_row_into(
+        &self,
+        i: usize,
+        out: &mut Vec<f64>,
+    ) -> anyhow::Result<()> {
+        self.read_rows(i..i + 1, |row| {
+            out.clear();
+            out.extend_from_slice(row);
+        })
+    }
+
+    /// Run `f` over the contiguous rows `r` (read-write).
+    pub fn write_rows<T>(
+        &mut self,
+        r: Range<usize>,
+        f: impl FnOnce(&mut [f64]) -> T,
+    ) -> anyhow::Result<T> {
+        ensure!(
+            r.start <= r.end && r.end <= self.rows,
+            "row range {}..{} out of bounds (rows = {})",
+            r.start,
+            r.end,
+            self.rows
+        );
+        match &mut self.inner {
+            Inner::Ram(data) => {
+                Ok(f(&mut data[r.start * self.row_len..r.end * self.row_len]))
+            }
+            #[cfg(target_os = "linux")]
+            Inner::Mapped(map) => {
+                ensure!(map.writable, "store is read-only");
+                let mut win = Window::map(
+                    &map.file,
+                    (r.start * self.row_len * 8) as u64,
+                    (r.end - r.start) * self.row_len * 8,
+                    true,
+                )?;
+                Ok(f(win.slice_mut()))
+            }
+        }
+    }
+
+    /// Apply `f` to every row block in parallel: `f(first_row, block)`
+    /// where `block` is a row-aligned mutable slab. Rows are sharded
+    /// across `threads` workers exactly like
+    /// [`crate::parallel::for_each_row_chunk`]; on the mmap backend each
+    /// worker walks its shard in windows of at most
+    /// [`MatrixStore::window_rows`] rows, so per-worker address space
+    /// stays bounded. Workers touch disjoint rows, and each row receives
+    /// the identical serial update — bit-identical at any thread count
+    /// and any window size.
+    pub fn par_update_row_blocks(
+        &mut self,
+        threads: usize,
+        f: impl Fn(usize, &mut [f64]) + Sync,
+    ) -> anyhow::Result<()> {
+        let row_len = self.row_len;
+        match &mut self.inner {
+            Inner::Ram(data) => {
+                crate::parallel::for_each_row_chunk(
+                    threads, data, row_len, f,
+                );
+                Ok(())
+            }
+            #[cfg(target_os = "linux")]
+            Inner::Mapped(map) => {
+                ensure!(map.writable, "store is read-only");
+                let rows = self.rows;
+                let window = self.window_rows;
+                let t = crate::parallel::resolve(threads).min(rows.max(1));
+                let ranges = crate::parallel::split_ranges(rows, t);
+                let file = &map.file;
+                let results: Vec<anyhow::Result<()>> =
+                    crate::parallel::map_ranges(&ranges, |r| {
+                        let mut r0 = r.start;
+                        while r0 < r.end {
+                            let r1 = (r0 + window).min(r.end);
+                            let mut win = Window::map(
+                                file,
+                                (r0 * row_len * 8) as u64,
+                                (r1 - r0) * row_len * 8,
+                                true,
+                            )?;
+                            f(r0, win.slice_mut());
+                            r0 = r1;
+                        }
+                        Ok(())
+                    });
+                for res in results {
+                    res?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Materialize the store as an in-RAM [`Matrix`] (test- and
+    /// small-data-sized; the whole store is copied).
+    pub fn to_matrix(&self) -> anyhow::Result<Matrix> {
+        let mut data = Vec::with_capacity(self.rows * self.row_len);
+        let step = self.window_rows;
+        let mut r0 = 0;
+        while r0 < self.rows {
+            let r1 = (r0 + step).min(self.rows);
+            self.read_rows(r0..r1, |rows| data.extend_from_slice(rows))?;
+            r0 = r1;
+        }
+        Ok(Matrix::from_vec(self.rows, self.row_len, data))
+    }
+
+    /// Consume the store into a [`Matrix`]. RAM stores convert for free;
+    /// mmap stores become a whole-file read-only mapping ([`ReadMap`]),
+    /// which lets every selector consume the data through the unchanged
+    /// `Matrix` API (the mapping counts against address space — use the
+    /// windowed store directly where an address-space cap applies).
+    pub fn into_matrix(self) -> anyhow::Result<Matrix> {
+        let (rows, row_len) = (self.rows, self.row_len);
+        match self.inner {
+            Inner::Ram(data) => Ok(Matrix::from_vec(rows, row_len, data)),
+            #[cfg(target_os = "linux")]
+            Inner::Mapped(map) => {
+                let map =
+                    ReadMap::from_parts(map.file, rows * row_len, map._scratch)?;
+                Ok(Matrix::from_mapped(rows, row_len, map))
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MatrixStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MatrixStore")
+            .field("rows", &self.rows)
+            .field("row_len", &self.row_len)
+            .field("backend", &self.backend())
+            .field("window_rows", &self.window_rows)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReadMap — a whole-file read-only mapping backing a Matrix
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+struct MapInner {
+    base: *mut u8,
+    map_len: usize,
+    f64_len: usize,
+    // Deletes the backing scratch file (if any) when the last clone drops.
+    _scratch: Option<ScratchFile>,
+}
+
+// SAFETY: the mapping is read-only for its entire lifetime; concurrent
+// reads from any thread are safe, and the pointer is never exposed
+// mutably.
+#[cfg(target_os = "linux")]
+unsafe impl Send for MapInner {}
+#[cfg(target_os = "linux")]
+unsafe impl Sync for MapInner {}
+
+#[cfg(target_os = "linux")]
+impl Drop for MapInner {
+    fn drop(&mut self) {
+        if !self.base.is_null() {
+            unsafe {
+                sys::munmap(self.base as *mut std::ffi::c_void, self.map_len);
+            }
+        }
+    }
+}
+
+/// A shared, read-only, whole-file f64 mapping — the buffer behind an
+/// mmap-backed [`Matrix`]. Cloning shares the mapping (`Arc`); the
+/// backing scratch file (if the map owns one) is deleted when the last
+/// clone drops.
+#[derive(Clone)]
+pub struct ReadMap {
+    #[cfg(target_os = "linux")]
+    inner: std::sync::Arc<MapInner>,
+    #[cfg(not(target_os = "linux"))]
+    inner: std::sync::Arc<Vec<f64>>,
+}
+
+impl ReadMap {
+    /// Map an existing dense f64 file read-only (Linux-only).
+    pub fn open(path: &Path, f64_len: usize) -> anyhow::Result<ReadMap> {
+        #[cfg(target_os = "linux")]
+        {
+            let file = File::open(path).with_context(|| {
+                format!("opening dense store {}", path.display())
+            })?;
+            let want = (f64_len * 8) as u64;
+            let got = file.metadata()?.len();
+            ensure!(
+                got == want,
+                "dense store {} is {got} bytes, expected {want}",
+                path.display()
+            );
+            ReadMap::from_parts(file, f64_len, None)
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = (path, f64_len);
+            bail!("memory-mapped datasets require linux (raw mmap bindings)")
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    fn from_parts(
+        file: File,
+        f64_len: usize,
+        scratch: Option<ScratchFile>,
+    ) -> anyhow::Result<ReadMap> {
+        use std::os::unix::io::AsRawFd;
+        let map_len = f64_len * 8;
+        if map_len == 0 {
+            return Ok(ReadMap {
+                inner: std::sync::Arc::new(MapInner {
+                    base: std::ptr::null_mut(),
+                    map_len: 0,
+                    f64_len: 0,
+                    _scratch: scratch,
+                }),
+            });
+        }
+        let base = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                map_len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        ensure!(
+            !base.is_null() && base as isize != -1,
+            "mmap of {map_len} bytes failed (address-space limit?)"
+        );
+        Ok(ReadMap {
+            inner: std::sync::Arc::new(MapInner {
+                base: base as *mut u8,
+                map_len,
+                f64_len,
+                _scratch: scratch,
+            }),
+        })
+    }
+
+    /// The mapped values.
+    pub fn as_slice(&self) -> &[f64] {
+        #[cfg(target_os = "linux")]
+        {
+            if self.inner.f64_len == 0 {
+                return &[];
+            }
+            // SAFETY: the mapping is valid for the Arc's lifetime and
+            // page-aligned (offset 0), hence f64-aligned.
+            unsafe {
+                std::slice::from_raw_parts(
+                    self.inner.base as *const f64,
+                    self.inner.f64_len,
+                )
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            &self.inner
+        }
+    }
+
+    /// Number of mapped f64 values.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// Whether the mapping is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::fmt::Debug for ReadMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReadMap").field("len", &self.len()).finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ChunkedLines
+// ---------------------------------------------------------------------------
+
+/// Bounded-buffer line splitter over any [`Read`]: reads fixed-size
+/// chunks and yields `&str` lines, reassembling lines that straddle a
+/// chunk boundary. Memory use is bounded by the chunk size plus the
+/// longest single line — never the file size (there is deliberately no
+/// `read_to_end` anywhere in this module).
+///
+/// Line semantics match [`std::io::BufRead::lines`]: the trailing `\n`
+/// is stripped, then one trailing `\r`; a final line without a newline
+/// is still yielded; invalid UTF-8 is an error.
+///
+/// ```
+/// use greedy_rls::data::storage::ChunkedLines;
+///
+/// // A 5-byte chunk forces the second line to straddle a boundary.
+/// let mut lines = ChunkedLines::new("ab\nlong line\r\nc".as_bytes(), 5);
+/// assert_eq!(lines.next_line()?, Some("ab"));
+/// assert_eq!(lines.next_line()?, Some("long line"));
+/// assert_eq!(lines.next_line()?, Some("c"));
+/// assert_eq!(lines.next_line()?, None);
+/// # anyhow::Ok(())
+/// ```
+pub struct ChunkedLines<R: Read> {
+    src: R,
+    chunk: usize,
+    buf: Vec<u8>,
+    start: usize,
+    eof: bool,
+}
+
+impl<R: Read> ChunkedLines<R> {
+    /// Wrap a reader; `chunk_bytes` is the read granularity (≥ 1).
+    pub fn new(src: R, chunk_bytes: usize) -> ChunkedLines<R> {
+        ChunkedLines {
+            src,
+            chunk: chunk_bytes.max(1),
+            buf: Vec::new(),
+            start: 0,
+            eof: false,
+        }
+    }
+
+    fn refill(&mut self) -> anyhow::Result<()> {
+        // Compact the consumed prefix, then read one bounded chunk.
+        self.buf.drain(..self.start);
+        self.start = 0;
+        let old = self.buf.len();
+        self.buf.resize(old + self.chunk, 0);
+        let got = self
+            .src
+            .read(&mut self.buf[old..])
+            .context("reading input chunk")?;
+        self.buf.truncate(old + got);
+        if got == 0 {
+            self.eof = true;
+        }
+        Ok(())
+    }
+
+    /// The next line, or `None` at end of input.
+    pub fn next_line(&mut self) -> anyhow::Result<Option<&str>> {
+        let range = loop {
+            if let Some(p) =
+                self.buf[self.start..].iter().position(|&b| b == b'\n')
+            {
+                let s = self.start;
+                self.start = s + p + 1;
+                break Some((s, s + p));
+            }
+            if self.eof {
+                if self.start < self.buf.len() {
+                    let s = self.start;
+                    let e = self.buf.len();
+                    self.start = e;
+                    break Some((s, e));
+                }
+                break None;
+            }
+            self.refill()?;
+        };
+        match range {
+            Some((s, mut e)) => {
+                if e > s && self.buf[e - 1] == b'\r' {
+                    e -= 1;
+                }
+                let line = std::str::from_utf8(&self.buf[s..e])
+                    .context("input is not valid UTF-8")?;
+                Ok(Some(line))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StoredDataset
+// ---------------------------------------------------------------------------
+
+/// A dataset whose design matrix lives in a [`MatrixStore`] — the
+/// out-of-core counterpart of [`crate::data::Dataset`]. Labels stay in
+/// RAM (O(m)); only the O(n·m) matrix is storage-backed.
+///
+/// ```
+/// use greedy_rls::data::storage::StorageOptions;
+/// use greedy_rls::data::synthetic::two_gaussians_stored;
+///
+/// let opts = StorageOptions::default();
+/// let mut ds = two_gaussians_stored(30, 8, 3, 1.0, 7, &opts)?;
+/// let stats = ds.standardize()?;
+/// assert_eq!(stats.len(), ds.n_features());
+/// assert_eq!(ds.n_examples(), 30);
+/// # anyhow::Ok(())
+/// ```
+pub struct StoredDataset {
+    /// Feature-major design matrix, `n_features × m_examples`.
+    pub x: MatrixStore,
+    /// Labels, length `m` (±1 for classification).
+    pub y: Vec<f64>,
+    /// Human-readable name (file stem / generator tag).
+    pub name: String,
+}
+
+impl StoredDataset {
+    /// Construct and validate shapes.
+    pub fn new(
+        name: impl Into<String>,
+        x: MatrixStore,
+        y: Vec<f64>,
+    ) -> anyhow::Result<StoredDataset> {
+        ensure!(
+            x.row_len() == y.len(),
+            "X columns ({}) must equal |y| ({})",
+            x.row_len(),
+            y.len()
+        );
+        Ok(StoredDataset { x, y, name: name.into() })
+    }
+
+    /// Number of features `n`.
+    pub fn n_features(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Number of examples `m`.
+    pub fn n_examples(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Standardize every feature to zero mean / unit variance in place,
+    /// streaming over row windows. Per-row arithmetic is exactly
+    /// [`crate::data::Dataset::standardize`]'s, so the result is
+    /// bit-identical to standardizing the same data in RAM.
+    pub fn standardize(&mut self) -> anyhow::Result<Vec<(f64, f64)>> {
+        let m = self.n_examples() as f64;
+        let row_len = self.x.row_len();
+        let n = self.x.rows();
+        let mut stats = Vec::with_capacity(n);
+        let step = self.x.window_rows();
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + step).min(n);
+            self.x.write_rows(r0..r1, |rows| {
+                for row in rows.chunks_exact_mut(row_len) {
+                    let mean = row.iter().sum::<f64>() / m;
+                    let var = row
+                        .iter()
+                        .map(|v| (v - mean).powi(2))
+                        .sum::<f64>()
+                        / m;
+                    let std = if var > 0.0 { var.sqrt() } else { 1.0 };
+                    for v in row.iter_mut() {
+                        *v = (*v - mean) / std;
+                    }
+                    stats.push((mean, std));
+                }
+            })?;
+            r0 = r1;
+        }
+        Ok(stats)
+    }
+
+    /// Streaming dataset fingerprint, equal to
+    /// [`crate::data::fingerprint::fingerprint_xy`] on the same data —
+    /// checkpoints are interchangeable between backends.
+    pub fn fingerprint(&self) -> anyhow::Result<u64> {
+        super::fingerprint::fingerprint_xy_stored(&self.x, &self.y)
+    }
+
+    /// Materialize as an in-RAM [`crate::data::Dataset`] (copies the
+    /// whole matrix — test- and small-data-sized).
+    pub fn to_dataset(&self) -> anyhow::Result<super::Dataset> {
+        Ok(super::Dataset::new(
+            self.name.clone(),
+            self.x.to_matrix()?,
+            self.y.clone(),
+        ))
+    }
+
+    /// Consume into a [`crate::data::Dataset`] whose matrix is a
+    /// whole-file [`ReadMap`] on the mmap backend (zero-copy) or the RAM
+    /// vector on the RAM backend.
+    pub fn into_dataset(self) -> anyhow::Result<super::Dataset> {
+        Ok(super::Dataset::new(self.name, self.x.into_matrix()?, self.y))
+    }
+}
+
+impl std::fmt::Debug for StoredDataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StoredDataset")
+            .field("name", &self.name)
+            .field("x", &self.x)
+            .field("m", &self.y.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn both_backends() -> Vec<StorageOptions> {
+        let mut opts = vec![StorageOptions::default()];
+        if cfg!(target_os = "linux") {
+            // A tiny window forces many mappings per scan.
+            opts.push(
+                StorageOptions::default()
+                    .backend(Backend::Mmap)
+                    .window_bytes(1 << 20),
+            );
+        }
+        opts
+    }
+
+    #[test]
+    fn backend_parses_and_displays() {
+        assert_eq!("ram".parse::<Backend>().unwrap(), Backend::Ram);
+        assert_eq!("mmap".parse::<Backend>().unwrap(), Backend::Mmap);
+        assert!("disk".parse::<Backend>().is_err());
+        assert_eq!(Backend::Mmap.to_string(), "mmap");
+        assert_eq!(Backend::default(), Backend::Ram);
+    }
+
+    #[test]
+    fn store_roundtrip_both_backends() {
+        for opts in both_backends() {
+            let mut st = MatrixStore::zeros(5, 3, &opts).unwrap();
+            st.write_rows(0..5, |rows| {
+                for (i, v) in rows.iter_mut().enumerate() {
+                    *v = i as f64;
+                }
+            })
+            .unwrap();
+            st.write_rows(2..3, |row| row.copy_from_slice(&[9.0, 9.0, 9.0]))
+                .unwrap();
+            let got = st.read_rows(0..5, |r| r.to_vec()).unwrap();
+            let mut want: Vec<f64> = (0..15).map(|i| i as f64).collect();
+            want[6..9].copy_from_slice(&[9.0, 9.0, 9.0]);
+            assert_eq!(got, want, "{:?}", opts.backend);
+            let mut row = Vec::new();
+            st.read_row_into(2, &mut row).unwrap();
+            assert_eq!(row, vec![9.0, 9.0, 9.0]);
+            assert!(st.read_rows(4..6, |_| ()).is_err());
+        }
+    }
+
+    #[test]
+    fn from_matrix_and_to_matrix_are_inverse() {
+        let x = Matrix::from_rows(&[
+            &[1.0, 2.0, 3.0],
+            &[4.0, 5.0, 6.0],
+            &[7.0, 8.0, 9.0],
+        ]);
+        for opts in both_backends() {
+            let st = MatrixStore::from_matrix(&x, &opts).unwrap();
+            assert_eq!(st.to_matrix().unwrap(), x, "{:?}", opts.backend);
+        }
+    }
+
+    #[test]
+    fn par_update_matches_serial_any_thread_count() {
+        let rows = 13;
+        let m = 7;
+        let base: Vec<f64> = (0..rows * m).map(|i| (i as f64).sin()).collect();
+        let x = Matrix::from_vec(rows, m, base.clone());
+        // reference: serial elementwise transform
+        let want: Vec<f64> = base
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v * 2.0 + (i / m) as f64)
+            .collect();
+        for opts in both_backends() {
+            for t in [1usize, 2, 4] {
+                let mut st = MatrixStore::from_matrix(&x, &opts).unwrap();
+                st.par_update_row_blocks(t, |first, block| {
+                    for (r, row) in
+                        block.chunks_exact_mut(m).enumerate()
+                    {
+                        for v in row.iter_mut() {
+                            *v = *v * 2.0 + (first + r) as f64;
+                        }
+                    }
+                })
+                .unwrap();
+                let got = st.read_rows(0..rows, |r| r.to_vec()).unwrap();
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{:?} t={t}",
+                        opts.backend
+                    );
+                }
+            }
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn scratch_file_removed_on_drop() {
+        let opts = StorageOptions::default().backend(Backend::Mmap);
+        let dir = opts.scratch_dir();
+        let before: usize = count_scratch(&dir);
+        {
+            let _st = MatrixStore::zeros(4, 4, &opts).unwrap();
+            assert_eq!(count_scratch(&dir), before + 1);
+        }
+        assert_eq!(count_scratch(&dir), before);
+    }
+
+    #[cfg(target_os = "linux")]
+    fn count_scratch(dir: &Path) -> usize {
+        let pid = std::process::id().to_string();
+        std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let name = e.file_name().to_string_lossy().into_owned();
+                name.starts_with("greedy-rls-scratch-")
+                    && name.contains(&pid)
+            })
+            .count()
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn into_matrix_maps_whole_file() {
+        let x = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let opts = StorageOptions::default().backend(Backend::Mmap);
+        let st = MatrixStore::from_matrix(&x, &opts).unwrap();
+        let mapped = st.into_matrix().unwrap();
+        assert_eq!(mapped, x);
+        assert_eq!(mapped.row(1), &[3.0, 4.0]);
+        // Clones share the mapping.
+        let c = mapped.clone();
+        assert_eq!(c, x);
+    }
+
+    #[test]
+    fn chunked_lines_all_chunk_sizes() {
+        let text = "first\nsecond line\n\n# comment\r\nlast";
+        let want = ["first", "second line", "", "# comment", "last"];
+        for chunk in 1..=40 {
+            let mut lines = ChunkedLines::new(Cursor::new(text), chunk);
+            let mut got = Vec::new();
+            while let Some(l) = lines.next_line().unwrap() {
+                got.push(l.to_string());
+            }
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunked_lines_line_longer_than_chunk() {
+        let long = "x".repeat(100);
+        let text = format!("{long}\nshort\n");
+        let mut lines = ChunkedLines::new(Cursor::new(text), 8);
+        assert_eq!(lines.next_line().unwrap(), Some(long.as_str()));
+        assert_eq!(lines.next_line().unwrap(), Some("short"));
+        assert_eq!(lines.next_line().unwrap(), None);
+        // next_line past EOF stays None
+        let mut empty = ChunkedLines::new(Cursor::new(""), 4);
+        assert_eq!(empty.next_line().unwrap(), None);
+        assert_eq!(empty.next_line().unwrap(), None);
+    }
+
+    #[test]
+    fn chunked_lines_rejects_invalid_utf8() {
+        let mut lines =
+            ChunkedLines::new(Cursor::new(&[0x66u8, 0xff, 0xfe][..]), 2);
+        assert!(lines.next_line().is_err());
+    }
+
+    #[test]
+    fn stored_standardize_matches_ram_bitwise() {
+        let ds = crate::data::synthetic::two_gaussians(23, 9, 3, 1.0, 5);
+        for opts in both_backends() {
+            let x = MatrixStore::from_matrix(&ds.x, &opts).unwrap();
+            let mut sds =
+                StoredDataset::new("t", x, ds.y.clone()).unwrap();
+            let stats = sds.standardize().unwrap();
+            let mut ram = ds.clone();
+            let ram_stats = ram.standardize();
+            assert_eq!(stats.len(), ram_stats.len());
+            for (a, b) in stats.iter().zip(&ram_stats) {
+                assert_eq!(a.0.to_bits(), b.0.to_bits());
+                assert_eq!(a.1.to_bits(), b.1.to_bits());
+            }
+            let got = sds.to_dataset().unwrap();
+            for (a, b) in
+                got.x.as_slice().iter().zip(ram.x.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", opts.backend);
+            }
+        }
+    }
+}

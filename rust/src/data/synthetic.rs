@@ -14,6 +14,7 @@
 //!    rest on (greedy ≫ random, plateau after the informative subset,
 //!    LOO↔test gap driven by the m/n ratio).
 
+use super::storage::{MatrixStore, StorageOptions, StoredDataset};
 use super::Dataset;
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
@@ -53,6 +54,75 @@ pub fn two_gaussians(
         }
     }
     Dataset::new(format!("two_gaussians_m{m}_n{n}"), x, y)
+}
+
+/// [`two_gaussians`] generated straight into a [`MatrixStore`], for
+/// problems too large for a RAM matrix. The RNG is consumed in exactly
+/// the in-RAM generator's order (example-major draws, buffered in
+/// example slabs and scattered to feature-row windows), so for any
+/// `(m, n, informative, separation, seed)` the stored matrix is
+/// **bit-identical** to `two_gaussians`' — the out-of-core smoke test
+/// and the uncapped RAM run select from literally the same data.
+///
+/// Peak RAM is one slab (~`opts.chunk_bytes`) plus `O(n + m)` vectors,
+/// never the `n × m` matrix.
+pub fn two_gaussians_stored(
+    m: usize,
+    n: usize,
+    informative: usize,
+    separation: f64,
+    seed: u64,
+    opts: &StorageOptions,
+) -> anyhow::Result<StoredDataset> {
+    anyhow::ensure!(informative <= n, "informative count {informative} > n {n}");
+    anyhow::ensure!(m > 0 && n > 0, "m and n must be positive");
+    let mut rng = Pcg64::new(seed, 17);
+    // Identical preamble to `two_gaussians`: direction draws come first.
+    let mut mu = vec![0.0; n];
+    let dims = rng.choose_distinct(n, informative.max(1));
+    for &d in &dims {
+        mu[d] = rng.normal();
+    }
+    let norm = crate::linalg::norm2(&mu).max(1e-12);
+    for v in mu.iter_mut() {
+        *v /= norm;
+    }
+
+    let mut x = MatrixStore::zeros(n, m, opts)?;
+    let mut y = vec![0.0; m];
+    // Draw order must stay example-major (j outer, i inner) to match the
+    // RAM generator; a slab of `block` examples buffers the draws, then
+    // each feature-row window receives its slab columns in one mapping.
+    let block = (opts.chunk_bytes / (8 * n)).max(1).min(m);
+    let window = x.window_rows();
+    let mut slab = vec![0.0; block * n];
+    let mut j0 = 0;
+    while j0 < m {
+        let j1 = (j0 + block).min(m);
+        let bw = j1 - j0;
+        for j in j0..j1 {
+            let label = if j % 2 == 0 { 1.0 } else { -1.0 };
+            y[j] = label;
+            for (i, &mui) in mu.iter().enumerate() {
+                slab[i * bw + (j - j0)] =
+                    rng.normal() + 0.5 * separation * label * mui;
+            }
+        }
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + window).min(n);
+            x.write_rows(r0..r1, |rows| {
+                for i in r0..r1 {
+                    let src = &slab[i * bw..i * bw + bw];
+                    let dst_row = &mut rows[(i - r0) * m..(i - r0) * m + m];
+                    dst_row[j0..j1].copy_from_slice(src);
+                }
+            })?;
+            r0 = r1;
+        }
+        j0 = j1;
+    }
+    StoredDataset::new(format!("two_gaussians_m{m}_n{n}"), x, y)
 }
 
 /// Planted-sparse benchmark generator.
@@ -183,6 +253,35 @@ mod tests {
         assert_eq!(a.y, b.y);
         let c = two_gaussians(50, 10, 3, 1.0, 8);
         assert!(a.x.max_abs_diff(&c.x) > 0.0);
+    }
+
+    #[test]
+    fn stored_generator_matches_ram_bitwise() {
+        use crate::data::storage::Backend;
+        let ram = two_gaussians(37, 11, 4, 1.5, 13);
+        // Tiny chunk (4 KiB floor) forces many slabs; tiny window (1 MiB
+        // floor) is still several rows here but exercises the path.
+        let mut all = vec![
+            StorageOptions::default(),
+            StorageOptions::default().chunk_bytes(0),
+        ];
+        if cfg!(target_os = "linux") {
+            all.push(
+                StorageOptions::default()
+                    .backend(Backend::Mmap)
+                    .chunk_bytes(0),
+            );
+        }
+        for opts in all {
+            let stored =
+                two_gaussians_stored(37, 11, 4, 1.5, 13, &opts).unwrap();
+            assert_eq!(stored.name, ram.name);
+            assert_eq!(stored.y, ram.y);
+            let got = stored.to_dataset().unwrap();
+            for (a, b) in got.x.as_slice().iter().zip(ram.x.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", opts.backend);
+            }
+        }
     }
 
     #[test]

@@ -15,18 +15,60 @@ mod lu;
 pub use cholesky::Cholesky;
 pub use lu::{inverse, Lu};
 
+use crate::data::storage::ReadMap;
+
+/// Backing buffer of a [`Matrix`]: an owned RAM vector (the default) or
+/// a shared read-only file mapping. Mutable access to a mapped matrix
+/// transparently promotes the buffer to RAM (copy-on-write), so every
+/// existing `Matrix` consumer works unchanged on mapped data.
+#[derive(Clone, Debug)]
+enum Buf {
+    Ram(Vec<f64>),
+    Mapped(ReadMap),
+}
+
+impl Buf {
+    #[inline]
+    fn as_slice(&self) -> &[f64] {
+        match self {
+            Buf::Ram(v) => v,
+            Buf::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Mutable view, promoting a mapped buffer to RAM first.
+    #[inline]
+    fn make_mut(&mut self) -> &mut [f64] {
+        if let Buf::Mapped(m) = self {
+            *self = Buf::Ram(m.as_slice().to_vec());
+        }
+        match self {
+            Buf::Ram(v) => v,
+            Buf::Mapped(_) => unreachable!("promoted above"),
+        }
+    }
+}
+
 /// Dense row-major matrix of `f64`.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    data: Buf,
+}
+
+impl PartialEq for Matrix {
+    fn eq(&self, other: &Matrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.as_slice() == other.as_slice()
+    }
 }
 
 impl Matrix {
     /// Zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { rows, cols, data: Buf::Ram(vec![0.0; rows * cols]) }
     }
 
     /// Identity.
@@ -41,7 +83,15 @@ impl Matrix {
     /// Matrix from a row-major vector.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
-        Matrix { rows, cols, data }
+        Matrix { rows, cols, data: Buf::Ram(data) }
+    }
+
+    /// Matrix over a shared read-only file mapping (see
+    /// [`crate::data::storage::ReadMap`]). Read access streams straight
+    /// from the mapping; the first mutable access copies to RAM.
+    pub fn from_mapped(rows: usize, cols: usize, map: ReadMap) -> Self {
+        assert_eq!(map.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data: Buf::Mapped(map) }
     }
 
     /// Matrix from nested rows (convenient in tests).
@@ -53,7 +103,7 @@ impl Matrix {
             assert_eq!(row.len(), c, "ragged rows");
             data.extend_from_slice(row);
         }
-        Matrix { rows: r, cols: c, data }
+        Matrix { rows: r, cols: c, data: Buf::Ram(data) }
     }
 
     /// Number of rows (features, in the crate's feature-major layout).
@@ -71,13 +121,14 @@ impl Matrix {
     /// Contiguous row slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
-        &self.data[i * self.cols..(i + 1) * self.cols]
+        &self.data.as_slice()[i * self.cols..(i + 1) * self.cols]
     }
 
     /// Mutable contiguous row slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
-        &mut self.data[i * self.cols..(i + 1) * self.cols]
+        let (cols, i0) = (self.cols, i * self.cols);
+        &mut self.data.make_mut()[i0..i0 + cols]
     }
 
     /// Column copied out (rows are the contiguous axis).
@@ -88,13 +139,14 @@ impl Matrix {
     /// Underlying row-major storage.
     #[inline]
     pub fn as_slice(&self) -> &[f64] {
-        &self.data
+        self.data.as_slice()
     }
 
-    /// Underlying row-major storage, mutably.
+    /// Underlying row-major storage, mutably (promotes a mapped buffer
+    /// to RAM first).
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
-        &mut self.data
+        self.data.make_mut()
     }
 
     /// Transposed copy.
@@ -201,9 +253,9 @@ impl Matrix {
     /// Max |a_ij - b_ij|.
     pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        self.data
+        self.as_slice()
             .iter()
-            .zip(&other.data)
+            .zip(other.as_slice())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f64::max)
     }
@@ -214,7 +266,7 @@ impl std::ops::Index<(usize, usize)> for Matrix {
     #[inline]
     fn index(&self, (i, j): (usize, usize)) -> &f64 {
         debug_assert!(i < self.rows && j < self.cols);
-        &self.data[i * self.cols + j]
+        &self.data.as_slice()[i * self.cols + j]
     }
 }
 
@@ -222,7 +274,8 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     #[inline]
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
         debug_assert!(i < self.rows && j < self.cols);
-        &mut self.data[i * self.cols + j]
+        let idx = i * self.cols + j;
+        &mut self.data.make_mut()[idx]
     }
 }
 
@@ -242,6 +295,49 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     }
     let mut s = s0 + s1 + s2 + s3;
     for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// [`dot`] evaluated tile-by-tile with the four partial sums carried
+/// across tiles. For any `tile` that is a positive multiple of 4 this
+/// performs literally the same multiply/add sequence as [`dot`] — the
+/// quad grouping is unchanged, only the loop is split — so the result
+/// is bit-identical. This is the determinism argument behind the
+/// LLC-tiled out-of-core kernels (ARCHITECTURE.md §Data backends),
+/// stated as a reusable primitive.
+///
+/// ```
+/// use greedy_rls::linalg::{dot, dot_tiled};
+///
+/// let a: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+/// let b: Vec<f64> = (0..100).map(|i| (i as f64).cos()).collect();
+/// assert_eq!(dot_tiled(&a, &b, 16).to_bits(), dot(&a, &b).to_bits());
+/// # anyhow::Ok(())
+/// ```
+#[inline]
+pub fn dot_tiled(a: &[f64], b: &[f64], tile: usize) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(tile > 0 && tile % 4 == 0, "tile must be a multiple of 4");
+    let n = a.len();
+    let quads = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let tile_q = tile / 4;
+    let mut q0 = 0;
+    while q0 < quads {
+        let q1 = (q0 + tile_q).min(quads);
+        for c in q0..q1 {
+            let i = c * 4;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+        }
+        q0 = q1;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in quads * 4..n {
         s += a[i] * b[i];
     }
     s
@@ -394,6 +490,23 @@ mod tests {
         assert_eq!(r, Matrix::from_rows(&[&[7.0, 8.0, 9.0], &[1.0, 2.0, 3.0]]));
         let c = a.select_cols(&[1]);
         assert_eq!(c, Matrix::from_rows(&[&[2.0], &[5.0], &[8.0]]));
+    }
+
+    #[test]
+    fn dot_tiled_matches_dot_bitwise() {
+        let mut rng = Pcg64::seeded(11);
+        for len in [0, 1, 3, 4, 5, 17, 64, 101, 1000] {
+            let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let want = dot(&a, &b).to_bits();
+            for tile in [4, 8, 16, 40, 1024] {
+                assert_eq!(
+                    dot_tiled(&a, &b, tile).to_bits(),
+                    want,
+                    "len {len} tile {tile}"
+                );
+            }
+        }
     }
 
     #[test]

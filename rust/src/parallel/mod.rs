@@ -218,6 +218,62 @@ pub fn rank1_row_update(
     });
 }
 
+/// The per-row body of [`rank1_row_update`], evaluated in column tiles
+/// of `tile` elements (a positive multiple of 4): the dot pass carries
+/// its four partial sums across tiles ([`crate::linalg::dot_tiled`])
+/// and the update pass walks the same tiles elementwise. Both phases
+/// perform literally the serial operation sequence per row, so results
+/// are bit-identical to the untiled update for every tile width.
+///
+/// Exposed separately so the out-of-core store can run it inside its
+/// own windowed row blocks (`MatrixStore::par_update_row_blocks`).
+pub fn rank1_block_update(
+    chunk: &mut [f64],
+    row_len: usize,
+    v: &[f64],
+    u: &[f64],
+    sign: f64,
+    tile: usize,
+) {
+    debug_assert!(tile > 0 && tile % 4 == 0, "tile must be a multiple of 4");
+    for row in chunk.chunks_exact_mut(row_len) {
+        let w = crate::linalg::dot_tiled(v, row, tile);
+        if w != 0.0 {
+            let sw = sign * w;
+            let mut j0 = 0;
+            while j0 < row_len {
+                let j1 = (j0 + tile).min(row_len);
+                for (r, &uj) in row[j0..j1].iter_mut().zip(&u[j0..j1]) {
+                    *r += sw * uj;
+                }
+                j0 = j1;
+            }
+        }
+    }
+}
+
+/// [`rank1_row_update`] with LLC column tiling: `tile == 0` falls back
+/// to the untiled update, otherwise rows run through
+/// [`rank1_block_update`]. Either way the result is bit-identical —
+/// tiling only reorders memory traffic, never arithmetic.
+pub fn rank1_row_update_tiled(
+    threads: usize,
+    buf: &mut [f64],
+    row_len: usize,
+    v: &[f64],
+    u: &[f64],
+    sign: f64,
+    tile: usize,
+) {
+    if tile == 0 {
+        rank1_row_update(threads, buf, row_len, v, u, sign);
+        return;
+    }
+    for_each_row_chunk(threads, buf, row_len, |_, chunk| {
+        rank1_block_update(chunk, row_len, v, u, sign, tile);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -372,6 +428,34 @@ mod tests {
                         b.to_bits(),
                         "sign={sign} t={t} i={i}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_rank1_update_is_bit_identical() {
+        let (rows, m) = (9usize, 23usize);
+        let v: Vec<f64> = (0..m).map(|j| (j as f64 * 0.7).cos()).collect();
+        let u: Vec<f64> = (0..m).map(|j| 1.0 / (j + 3) as f64).collect();
+        let base: Vec<f64> =
+            (0..rows * m).map(|i| (i as f64).sin()).collect();
+        for sign in [-1.0, 1.0] {
+            let mut want = base.clone();
+            rank1_row_update(1, &mut want, m, &v, &u, sign);
+            for tile in [0usize, 4, 8, 16, 40] {
+                for t in [1usize, 2, 4] {
+                    let mut got = base.clone();
+                    rank1_row_update_tiled(
+                        t, &mut got, m, &v, &u, sign, tile,
+                    );
+                    for (a, b) in want.iter().zip(&got) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "sign={sign} tile={tile} t={t}"
+                        );
+                    }
                 }
             }
         }

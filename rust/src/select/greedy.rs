@@ -31,6 +31,7 @@ use super::session::{
     CoreStep, PolicySession, Session, SessionCore, SessionSelector,
 };
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use crate::data::storage::{MatrixStore, StorageOptions};
 use crate::linalg::{dot, Matrix};
 use crate::metrics::Loss;
 
@@ -59,6 +60,14 @@ pub struct GreedyState {
     /// Resolved worker-thread count for the O(mn) passes (≥ 1); set via
     /// [`GreedyState::with_threads`], 1 after [`GreedyState::init`].
     pub threads: usize,
+    /// Column-tile width for the LLC-tiled scan/commit kernels; `0`
+    /// (the default) runs the untiled kernels. Set via
+    /// [`GreedyState::with_tile_cols`], which normalizes the width to a
+    /// multiple of 8 ≥ 8 (or 0). **Every value yields bit-identical
+    /// scores, caches, and selections** — the tiled kernels carry their
+    /// accumulators across tiles, so each candidate sees the serial
+    /// operation sequence exactly; tiling only localizes memory traffic.
+    pub tile_cols: usize,
     /// Ascending active-candidate list, maintained incrementally by
     /// [`GreedyState::commit`] (never rebuilt from `cand_mask` — the
     /// rebuild was an O(n) per-call allocation on the hot path).
@@ -96,6 +105,7 @@ impl GreedyState {
             cand_mask: vec![1.0; n],
             selected: Vec::new(),
             threads: 1,
+            tile_cols: 0,
             active: (0..n).collect(),
             scratch_cb: Vec::with_capacity(m),
             scratch_u: Vec::with_capacity(m),
@@ -108,6 +118,19 @@ impl GreedyState {
     /// [`crate::parallel`].
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = crate::parallel::resolve(threads);
+        self
+    }
+
+    /// Set the column-tile width for the scan and commit kernels. `0`
+    /// keeps the untiled kernels; any other value is rounded **down** to
+    /// a multiple of 8 (floor 8), and widths that cover the whole of `m`
+    /// fall back to 0 because a single tile is the untiled walk. Scores,
+    /// caches, and selections are bit-identical for every setting (the
+    /// tiled kernels carry their accumulators across tiles), so this is
+    /// purely a memory-locality knob — see ARCHITECTURE.md §Data
+    /// backends for the geometry.
+    pub fn with_tile_cols(mut self, tile_cols: usize) -> Self {
+        self.tile_cols = normalize_tile(tile_cols, self.m);
         self
     }
 
@@ -133,6 +156,25 @@ impl GreedyState {
         let per_range = crate::parallel::map_ranges(&ranges, |r| {
             let slice = &active[r];
             let mut out = Vec::with_capacity(slice.len());
+            if self.tile_cols > 0 {
+                let vrows: Vec<&[f64]> =
+                    slice.iter().map(|&i| x.row(i)).collect();
+                let crows: Vec<&[f64]> = slice
+                    .iter()
+                    .map(|&i| &self.ct[i * m..(i + 1) * m])
+                    .collect();
+                score_rows_tiled(
+                    &vrows,
+                    &crows,
+                    &self.a,
+                    &self.d,
+                    y,
+                    loss,
+                    self.tile_cols,
+                    &mut out,
+                );
+                return out;
+            }
             let mut chunks = slice.chunks_exact(4);
             for quad in &mut chunks {
                 let [i0, i1, i2, i3] = [quad[0], quad[1], quad[2], quad[3]];
@@ -250,14 +292,16 @@ impl GreedyState {
 
         // C ← C − u (vᵀ C): per candidate row i of Cᵀ, w_i = v·C[:,i],
         // then ct[i] ← ct[i] − w_i · u. One fused pass per row, rows
-        // sharded across workers.
-        crate::parallel::rank1_row_update(
+        // sharded across workers; tile_cols = 0 dispatches to the
+        // untiled update, any other width is bit-identical to it.
+        crate::parallel::rank1_row_update_tiled(
             self.threads,
             &mut self.ct,
             m,
             v,
             &u,
             -1.0,
+            self.tile_cols,
         );
 
         self.cand_mask[b] = 0.0;
@@ -406,6 +450,654 @@ fn score_candidates4(
     e
 }
 
+/// Normalize a requested tile width against row length `m`: `0` stays 0
+/// (untiled); anything else is floored to a multiple of 8 (minimum 8);
+/// widths covering all of `m` collapse back to 0 because one tile is
+/// exactly the untiled walk. Multiples of 8 keep tile starts even (the
+/// scalar kernel pairs elements) and quad-aligned (the dot kernel runs
+/// 4-wide), which is what makes every width bit-identical.
+fn normalize_tile(tile_cols: usize, m: usize) -> usize {
+    if tile_cols == 0 {
+        return 0;
+    }
+    let t = tile_cols.max(8);
+    let t = t - t % 8;
+    if t >= m {
+        0
+    } else {
+        t
+    }
+}
+
+/// Tiled variant of [`score_candidate`]: walks the example axis in
+/// `tile` wide blocks while **carrying the untiled kernel's accumulators
+/// across tiles**, so the floating-point operation sequence — pairing,
+/// summation order, the post-combine odd tail — is literally the serial
+/// one and the result is bit-identical for every `tile` (a multiple of 8,
+/// which keeps each tile start even so the pair walk never straddles a
+/// boundary).
+fn score_candidate_tiled(
+    v: &[f64],
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+) -> f64 {
+    debug_assert!(tile >= 8 && tile % 8 == 0, "tile must be a multiple of 8");
+    let m = y.len();
+    // pass 1: same 2-pair accumulators as score_candidate, carried
+    // across tiles; tiles have even length except possibly the last, so
+    // the pair grouping matches the untiled chunks_exact(2) walk.
+    let (mut vc0, mut vc1, mut va0, mut va1) = (0.0, 0.0, 0.0, 0.0);
+    let mut j0 = 0;
+    while j0 < m {
+        let j1 = (j0 + tile).min(m);
+        let mut it = v[j0..j1]
+            .chunks_exact(2)
+            .zip(c[j0..j1].chunks_exact(2))
+            .zip(a[j0..j1].chunks_exact(2));
+        for ((vv, cc), aa) in &mut it {
+            vc0 += vv[0] * cc[0];
+            vc1 += vv[1] * cc[1];
+            va0 += vv[0] * aa[0];
+            va1 += vv[1] * aa[1];
+        }
+        j0 = j1;
+    }
+    let (mut vc, mut va) = (vc0 + vc1, va0 + va1);
+    if m % 2 == 1 {
+        vc += v[m - 1] * c[m - 1];
+        va += v[m - 1] * a[m - 1];
+    }
+    let inv_denom = 1.0 / (1.0 + vc);
+    let s = va * inv_denom;
+    // pass 2: per-example bodies identical to score_candidate, visited
+    // in the same j order — tiling only changes slice boundaries.
+    match loss {
+        Loss::Squared => {
+            let mut e = 0.0;
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + tile).min(m);
+                for ((&cj, &aj), &dj) in
+                    c[j0..j1].iter().zip(&a[j0..j1]).zip(&d[j0..j1])
+                {
+                    let at = aj - cj * s;
+                    let dt = dj - cj * cj * inv_denom;
+                    let r = at / dt;
+                    e += r * r;
+                }
+                j0 = j1;
+            }
+            e
+        }
+        Loss::ZeroOne => {
+            let mut e = 0.0;
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + tile).min(m);
+                for (((&cj, &aj), &dj), &yj) in c[j0..j1]
+                    .iter()
+                    .zip(&a[j0..j1])
+                    .zip(&d[j0..j1])
+                    .zip(&y[j0..j1])
+                {
+                    let at = aj - cj * s;
+                    let dt = dj - cj * cj * inv_denom;
+                    if yj * at >= dt {
+                        e += 1.0;
+                    }
+                }
+                j0 = j1;
+            }
+            e
+        }
+    }
+}
+
+/// Tiled variant of [`score_candidates4`]: the per-`j` bodies and the
+/// `vc`/`va`/`e` accumulators are the untiled quad kernel's, visited in
+/// the same order with the accumulators carried across tiles — bit-
+/// identical to it (and hence to four [`score_candidate`] calls) for
+/// every tile width.
+fn score_candidates4_tiled(
+    v: [&[f64]; 4],
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+) -> [f64; 4] {
+    debug_assert!(tile >= 8 && tile % 8 == 0, "tile must be a multiple of 8");
+    let m = y.len();
+    let mut vc = [0.0f64; 4];
+    let mut va = [0.0f64; 4];
+    let mut j0 = 0;
+    while j0 < m {
+        let j1 = (j0 + tile).min(m);
+        for j in j0..j1 {
+            let aj = a[j];
+            for t in 0..4 {
+                vc[t] += v[t][j] * c[t][j];
+                va[t] += v[t][j] * aj;
+            }
+        }
+        j0 = j1;
+    }
+    let mut inv_denom = [0.0f64; 4];
+    let mut s = [0.0f64; 4];
+    for t in 0..4 {
+        inv_denom[t] = 1.0 / (1.0 + vc[t]);
+        s[t] = va[t] * inv_denom[t];
+    }
+    let mut e = [0.0f64; 4];
+    match loss {
+        Loss::Squared => {
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + tile).min(m);
+                for j in j0..j1 {
+                    let (aj, dj) = (a[j], d[j]);
+                    for t in 0..4 {
+                        let cj = c[t][j];
+                        let at = aj - cj * s[t];
+                        let dt = dj - cj * cj * inv_denom[t];
+                        let r = at / dt;
+                        e[t] += r * r;
+                    }
+                }
+                j0 = j1;
+            }
+        }
+        Loss::ZeroOne => {
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + tile).min(m);
+                for j in j0..j1 {
+                    let (aj, dj, yj) = (a[j], d[j], y[j]);
+                    for t in 0..4 {
+                        let cj = c[t][j];
+                        let at = aj - cj * s[t];
+                        let dt = dj - cj * cj * inv_denom[t];
+                        if yj * at >= dt {
+                            e[t] += 1.0;
+                        }
+                    }
+                }
+                j0 = j1;
+            }
+        }
+    }
+    e
+}
+
+/// Score a run of candidates (rows already staged as slices) with the
+/// tiled kernels: quads first, then the scalar remainder — the same
+/// blocks-of-4 grouping as the untiled shard loop, so appending to `out`
+/// yields scores bit-identical to [`GreedyState::score_all`]. Callers
+/// must only pass a non-multiple-of-4 run for the *final* run of the
+/// final shard (where the untiled scan also falls back to scalars).
+#[allow(clippy::too_many_arguments)]
+fn score_rows_tiled(
+    vrows: &[&[f64]],
+    crows: &[&[f64]],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+    out: &mut Vec<f64>,
+) {
+    debug_assert_eq!(vrows.len(), crows.len());
+    let mut vq = vrows.chunks_exact(4);
+    let mut cq = crows.chunks_exact(4);
+    for (v4, c4) in (&mut vq).zip(&mut cq) {
+        let e = score_candidates4_tiled(
+            [v4[0], v4[1], v4[2], v4[3]],
+            [c4[0], c4[1], c4[2], c4[3]],
+            a,
+            d,
+            y,
+            loss,
+            tile,
+        );
+        out.extend_from_slice(&e);
+    }
+    for (v, c) in vq.remainder().iter().zip(cq.remainder()) {
+        out.push(score_candidate_tiled(v, c, a, d, y, loss, tile));
+    }
+}
+
+/// Out-of-core twin of [`GreedyState`]: `X` and the cache matrix Cᵀ live
+/// in [`MatrixStore`]s (RAM or mmap-backed scratch), and the two O(mn)
+/// passes stream them through bounded row windows with the LLC-tiled
+/// kernels. Every floating-point operation lands in the same order as
+/// the in-RAM engine's, so selections, criteria, and weights are
+/// **bit-identical** to [`GreedyState`] at any thread count, window
+/// size, or tile width — the backend-equivalence tests pin this.
+///
+/// Bookkeeping errors surface as `Result`s instead of panics: this type
+/// fronts multi-gigabyte runs where an abort loses hours.
+pub(crate) struct StoredGreedyState {
+    m: usize,
+    n: usize,
+    ct: MatrixStore,
+    a: Vec<f64>,
+    d: Vec<f64>,
+    cand_mask: Vec<f64>,
+    selected: Vec<usize>,
+    threads: usize,
+    /// Always ≥ 8 and a multiple of 8: the stored engine runs the tiled
+    /// kernels unconditionally (they are bit-identical to the untiled
+    /// ones, and windows make untiled walks pointless).
+    tile_cols: usize,
+    active: Vec<usize>,
+    scratch_v: Vec<f64>,
+    scratch_cb: Vec<f64>,
+    scratch_u: Vec<f64>,
+}
+
+/// Default tile width for the stored engine when `opts.tile_cols` is 0:
+/// size the ~11 concurrent f64 streams of a scan quad (4 `v`, 4 `c`,
+/// plus `a`, `d`, `y`) to a 2 MiB LLC slice, floored to a multiple of 8.
+/// ≈ 23 824 columns — see EXPERIMENTS.md §Out-of-core for the roofline
+/// arithmetic behind the 11-stream count.
+const STORED_TILE_AUTO: usize = {
+    let t = (2 << 20) / (8 * 11);
+    t - t % 8
+};
+
+impl StoredGreedyState {
+    /// Algorithm 3 lines 1–4 against stored data: Cᵀ is created as a new
+    /// store with `opts` (so `--backend mmap` keeps the cache out of RAM
+    /// too) and filled window-by-window with `X/λ`.
+    fn init(
+        x: &MatrixStore,
+        y: &[f64],
+        lambda: f64,
+        opts: &StorageOptions,
+    ) -> anyhow::Result<StoredGreedyState> {
+        let n = x.rows();
+        let m = x.row_len();
+        ensure!(m == y.len(), "shape mismatch");
+        ensure!(lambda > 0.0, "λ must be positive");
+        let inv = 1.0 / lambda;
+        let mut ct = MatrixStore::zeros(n, m, opts)?;
+        let step = x.window_rows().min(ct.window_rows()).max(1);
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + step).min(n);
+            x.read_rows(r0..r1, |xs| {
+                ct.write_rows(r0..r1, |cs| {
+                    for (c_, &s) in cs.iter_mut().zip(xs) {
+                        *c_ = s * inv;
+                    }
+                })
+            })??;
+            r0 = r1;
+        }
+        let tile = if opts.tile_cols > 0 {
+            let t = opts.tile_cols.max(8);
+            t - t % 8
+        } else {
+            STORED_TILE_AUTO
+        };
+        Ok(StoredGreedyState {
+            m,
+            n,
+            ct,
+            a: y.iter().map(|&v| v * inv).collect(),
+            d: vec![inv; m],
+            cand_mask: vec![1.0; n],
+            selected: Vec::new(),
+            threads: 1,
+            tile_cols: tile,
+            active: (0..n).collect(),
+            scratch_v: Vec::with_capacity(m),
+            scratch_cb: Vec::with_capacity(m),
+            scratch_u: Vec::with_capacity(m),
+        })
+    }
+
+    fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = crate::parallel::resolve(threads);
+        self
+    }
+
+    /// Windowed, tiled scan — the stored twin of
+    /// [`GreedyState::score_all`]. The active list is sharded at quad
+    /// boundaries exactly like the in-RAM scan; within a shard,
+    /// consecutive quads are greedily grouped while their candidate-row
+    /// span fits one read window of both `X` and Cᵀ, each group is
+    /// scored from the mapped slices, and a quad whose own span exceeds
+    /// the window (sparse active list, tiny window) falls back to
+    /// staging its ≤ 4 rows through per-row copies. Group boundaries
+    /// never change the blocks-of-4 grouping, so scores stay
+    /// bit-identical to the in-RAM engine.
+    fn score_all(
+        &self,
+        x: &MatrixStore,
+        y: &[f64],
+        loss: Loss,
+    ) -> anyhow::Result<Vec<f64>> {
+        let m = self.m;
+        let tile = self.tile_cols;
+        let mut scores = vec![BIG; self.n];
+        let active = &self.active;
+        let wrows = x.window_rows().min(self.ct.window_rows()).max(1);
+        let ranges = crate::parallel::quad_ranges(active.len(), self.threads);
+        let per_range = crate::parallel::map_ranges(&ranges, |r| {
+            let slice = &active[r];
+            let mut out = Vec::with_capacity(slice.len());
+            let mut stage_v: Vec<Vec<f64>> = vec![Vec::new(); 4];
+            let mut stage_c: Vec<Vec<f64>> = vec![Vec::new(); 4];
+            let mut pos = 0;
+            while pos < slice.len() {
+                let unit = 4.min(slice.len() - pos);
+                let lo = slice[pos];
+                if slice[pos + unit - 1] + 1 - lo > wrows {
+                    // Window too small for even one quad's span: stage
+                    // the rows through per-row copies (correct for any
+                    // window size; only hit with sparse active lists).
+                    for t in 0..unit {
+                        x.read_row_into(slice[pos + t], &mut stage_v[t])?;
+                        self.ct
+                            .read_row_into(slice[pos + t], &mut stage_c[t])?;
+                    }
+                    let vrows: Vec<&[f64]> =
+                        stage_v[..unit].iter().map(|v| v.as_slice()).collect();
+                    let crows: Vec<&[f64]> =
+                        stage_c[..unit].iter().map(|c| c.as_slice()).collect();
+                    score_rows_tiled(
+                        &vrows, &crows, &self.a, &self.d, y, loss, tile,
+                        &mut out,
+                    );
+                    // xtask-allow: serial-float-reduction -- usize quad cursor, not a float accumulator
+                    pos += unit;
+                    continue;
+                }
+                // Grow the group by whole quads while the row span fits
+                // one window.
+                let mut end = pos + unit;
+                loop {
+                    let next = 4.min(slice.len() - end);
+                    if next == 0 || slice[end + next - 1] + 1 - lo > wrows {
+                        break;
+                    }
+                    // xtask-allow: serial-float-reduction -- usize quad cursor, not a float accumulator
+                    end += next;
+                }
+                let row0 = lo;
+                let row1 = slice[end - 1] + 1;
+                x.read_rows(row0..row1, |xs| {
+                    self.ct.read_rows(row0..row1, |cs| {
+                        let vrows: Vec<&[f64]> = slice[pos..end]
+                            .iter()
+                            .map(|&i| &xs[(i - row0) * m..(i - row0 + 1) * m])
+                            .collect();
+                        let crows: Vec<&[f64]> = slice[pos..end]
+                            .iter()
+                            .map(|&i| &cs[(i - row0) * m..(i - row0 + 1) * m])
+                            .collect();
+                        score_rows_tiled(
+                            &vrows, &crows, &self.a, &self.d, y, loss, tile,
+                            &mut out,
+                        );
+                    })
+                })??;
+                pos = end;
+            }
+            Ok(out)
+        });
+        for (r, vals) in ranges.iter().zip(per_range) {
+            let vals: Vec<f64> = vals?;
+            for (&i, v) in active[r.clone()].iter().zip(vals) {
+                scores[i] = v;
+            }
+        }
+        Ok(scores)
+    }
+
+    /// Stored twin of [`GreedyState::score_of`]: recompute candidate
+    /// `b`'s quad (or scalar remainder slot) from per-row staged copies.
+    /// O(m) reads; used only for forced rounds (warm-start replay).
+    fn score_of(
+        &self,
+        x: &MatrixStore,
+        y: &[f64],
+        loss: Loss,
+        b: usize,
+    ) -> anyhow::Result<f64> {
+        let active = &self.active;
+        let pos = active
+            .binary_search(&b)
+            .map_err(|_| anyhow::anyhow!("candidate {b} is not active"))?;
+        let quad_start = pos - pos % 4;
+        let unit = 4.min(active.len() - quad_start);
+        let mut stage_v: Vec<Vec<f64>> = vec![Vec::new(); unit];
+        let mut stage_c: Vec<Vec<f64>> = vec![Vec::new(); unit];
+        for t in 0..unit {
+            x.read_row_into(active[quad_start + t], &mut stage_v[t])?;
+            self.ct.read_row_into(active[quad_start + t], &mut stage_c[t])?;
+        }
+        if unit == 4 {
+            let e = score_candidates4(
+                [&stage_v[0], &stage_v[1], &stage_v[2], &stage_v[3]],
+                [&stage_c[0], &stage_c[1], &stage_c[2], &stage_c[3]],
+                &self.a,
+                &self.d,
+                y,
+                loss,
+            );
+            Ok(e[pos - quad_start])
+        } else {
+            let t = pos - quad_start;
+            Ok(score_candidate(
+                &stage_v[t],
+                &stage_c[t],
+                &self.a,
+                &self.d,
+                y,
+                loss,
+            ))
+        }
+    }
+
+    /// Stored twin of [`GreedyState::commit`]: the serial a/d downdate
+    /// runs on staged copies of `x_b` and C[:, b] (bit-identical — `dot`
+    /// over a copy is `dot` over the row), and the O(mn) cache downdate
+    /// streams Cᵀ through writable windows sharded across workers.
+    fn commit(&mut self, x: &MatrixStore, b: usize) -> anyhow::Result<()> {
+        ensure!(
+            self.cand_mask.get(b).copied().unwrap_or(0.0) != 0.0,
+            "feature {b} already selected or out of range"
+        );
+        let m = self.m;
+        let mut v = std::mem::take(&mut self.scratch_v);
+        x.read_row_into(b, &mut v)?;
+        let mut cb = std::mem::take(&mut self.scratch_cb);
+        self.ct.read_row_into(b, &mut cb)?;
+        let denom = 1.0 + dot(&v, &cb);
+        let mut u = std::mem::take(&mut self.scratch_u);
+        u.clear();
+        u.extend(cb.iter().map(|&c| c / denom));
+
+        let va = dot(&v, &self.a);
+        for j in 0..m {
+            self.a[j] -= u[j] * va;
+            self.d[j] -= u[j] * cb[j];
+        }
+
+        let tile = self.tile_cols;
+        self.ct.par_update_row_blocks(self.threads, |_, slab| {
+            crate::parallel::rank1_block_update(slab, m, &v, &u, -1.0, tile);
+        })?;
+
+        self.cand_mask[b] = 0.0;
+        let pos = self
+            .active
+            .binary_search(&b)
+            .map_err(|_| anyhow::anyhow!("feature {b} is not active"))?;
+        self.active.remove(pos);
+        self.selected.push(b);
+        self.scratch_v = v;
+        self.scratch_cb = cb;
+        self.scratch_u = u;
+        Ok(())
+    }
+
+    /// Final weights w = X_S a, one streamed row read per selected
+    /// feature.
+    fn weights(&self, x: &MatrixStore) -> anyhow::Result<Vec<f64>> {
+        let mut buf = Vec::with_capacity(self.m);
+        let mut w = Vec::with_capacity(self.selected.len());
+        for &i in &self.selected {
+            x.read_row_into(i, &mut buf)?;
+            w.push(dot(&buf, &self.a));
+        }
+        Ok(w)
+    }
+}
+
+/// Round-by-round engine over stored (possibly out-of-core) data: owns
+/// its [`MatrixStore`] and labels, mirrors [`GreedyCore`]'s round logic
+/// verbatim. Backs [`GreedyRls::begin_stored`].
+pub(crate) struct StoredGreedyCore {
+    x: MatrixStore,
+    y: Vec<f64>,
+    loss: Loss,
+    k: usize,
+    st: StoredGreedyState,
+    rounds: Vec<Round>,
+}
+
+impl StoredGreedyCore {
+    pub(crate) fn new(
+        x: MatrixStore,
+        y: Vec<f64>,
+        cfg: &SelectionConfig,
+        opts: &StorageOptions,
+    ) -> anyhow::Result<Self> {
+        ensure!(cfg.k <= x.rows(), "k={} > n={}", cfg.k, x.rows());
+        ensure!(cfg.lambda > 0.0, "λ must be positive");
+        ensure!(x.row_len() == y.len(), "shape mismatch");
+        // Streamed finiteness check — same contract and message as the
+        // in-RAM validation, one window at a time.
+        let step = x.window_rows().max(1);
+        let mut r0 = 0;
+        while r0 < x.rows() {
+            let r1 = (r0 + step).min(x.rows());
+            let ok =
+                x.read_rows(r0..r1, |rows| rows.iter().all(|v| v.is_finite()))?;
+            ensure!(ok, "X contains non-finite values");
+            r0 = r1;
+        }
+        ensure!(
+            y.iter().all(|v| v.is_finite()),
+            "y contains non-finite values"
+        );
+        let st = StoredGreedyState::init(&x, &y, cfg.lambda, opts)?
+            .with_threads(cfg.threads);
+        Ok(StoredGreedyCore {
+            loss: cfg.loss,
+            k: cfg.k,
+            st,
+            rounds: Vec::new(),
+            x,
+            y,
+        })
+    }
+}
+
+impl SessionCore for StoredGreedyCore {
+    fn target_reached(&self) -> bool {
+        self.st.selected.len() >= self.k
+    }
+
+    fn round(&mut self, forced: Option<usize>) -> anyhow::Result<CoreStep> {
+        let (b, criterion) = match forced {
+            Some(b) => {
+                ensure!(
+                    b < self.st.n,
+                    "feature {b} out of range (n={})",
+                    self.st.n
+                );
+                ensure!(
+                    self.st.cand_mask[b] != 0.0,
+                    "feature {b} already selected"
+                );
+                (b, self.st.score_of(&self.x, &self.y, self.loss, b)?)
+            }
+            None => {
+                let scores =
+                    self.st.score_all(&self.x, &self.y, self.loss)?;
+                let b = argmin(&scores)
+                    .ok_or_else(|| anyhow::anyhow!("no candidate left"))?;
+                (b, scores[b])
+            }
+        };
+        let round = Round { feature: b, criterion };
+        self.st.commit(&self.x, b)?;
+        self.rounds.push(round.clone());
+        Ok(CoreStep::Committed(round))
+    }
+
+    fn rounds(&self) -> &[Round] {
+        &self.rounds
+    }
+
+    fn selected(&self) -> Vec<usize> {
+        self.st.selected.clone()
+    }
+
+    fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        self.st.weights(&self.x)
+    }
+}
+
+impl GreedyRls {
+    /// Begin a greedy session over **stored** data (the out-of-core
+    /// path): takes ownership of the [`MatrixStore`] and labels, builds
+    /// the Cᵀ cache as a second store with the same `opts`, and returns
+    /// a [`Session`] whose rounds, criteria, and weights are
+    /// bit-identical to [`SessionSelector::begin`] on the same data in
+    /// RAM — at any backend, window size, tile width, or thread count.
+    pub fn begin_stored(
+        &self,
+        x: MatrixStore,
+        y: Vec<f64>,
+        cfg: &SelectionConfig,
+        opts: &StorageOptions,
+    ) -> anyhow::Result<Box<dyn Session + 'static>> {
+        let core = StoredGreedyCore::new(x, y, cfg, opts)?;
+        Ok(Box::new(PolicySession::new(core, cfg)?))
+    }
+
+    /// [`GreedyRls::begin_stored`] warm-started from an already-selected
+    /// prefix: each feature is replayed as a forced round (criteria
+    /// recomputed bit-identically via the O(m) single-candidate path)
+    /// and the stop clock restarts after the replay — the stored twin of
+    /// [`SessionSelector::begin_from`].
+    pub fn begin_stored_from(
+        &self,
+        x: MatrixStore,
+        y: Vec<f64>,
+        cfg: &SelectionConfig,
+        opts: &StorageOptions,
+        selected: &[usize],
+    ) -> anyhow::Result<Box<dyn Session + 'static>> {
+        let mut s = self.begin_stored(x, y, cfg, opts)?;
+        for &f in selected {
+            s.force(f)?;
+        }
+        s.reset_clock();
+        Ok(s)
+    }
+}
+
 /// Round-by-round engine of Algorithm 3: [`GreedyState`] plus the round
 /// log. Owns or borrows its data (`Cow`) so the same core backs both
 /// feature selection (borrowed `X`) and kernel-center selection (owned
@@ -436,8 +1128,9 @@ impl<'a> GreedyCore<'a> {
             y.iter().all(|v| v.is_finite()),
             "y contains non-finite values"
         );
-        let st =
-            GreedyState::init(&x, &y, cfg.lambda).with_threads(cfg.threads);
+        let st = GreedyState::init(&x, &y, cfg.lambda)
+            .with_threads(cfg.threads)
+            .with_tile_cols(cfg.tile_cols);
         Ok(GreedyCore {
             loss: cfg.loss,
             k: cfg.k,
@@ -822,5 +1515,299 @@ mod tests {
         let xs = ds.x.select_rows(&r.selected);
         let w_direct = crate::rls::train(&xs, &ds.y, cfg.lambda);
         assert_close(&r.weights, &w_direct, 1e-7, "final weights");
+    }
+
+    #[test]
+    fn tile_normalization() {
+        assert_eq!(normalize_tile(0, 100), 0);
+        assert_eq!(normalize_tile(7, 100), 8);
+        assert_eq!(normalize_tile(9, 100), 8);
+        assert_eq!(normalize_tile(64, 100), 64);
+        assert_eq!(normalize_tile(64, 50), 0); // covers m: untiled walk
+        assert_eq!(normalize_tile(1, 4), 0);
+    }
+
+    /// Tiled scoring must be bit-identical to the untiled scan for every
+    /// tile width, loss, thread count, and active-list shape — the whole
+    /// tiling contract rests on this.
+    #[test]
+    fn tiled_score_all_is_bit_identical_to_untiled() {
+        forall_seeds(8, |seed| {
+            let mut g = Gen::new(seed + 31_000);
+            let n = 5 + g.size(0, 12);
+            let m = g.size(9, 40);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.labels(m);
+            let mut plain = GreedyState::init(&x, &y, lam);
+            plain.commit(&x, 1); // non-contiguous active list
+            for loss in [Loss::Squared, Loss::ZeroOne] {
+                let want = plain.score_all(&x, &y, loss);
+                for tile in [8usize, 16, 40] {
+                    for threads in [1usize, 3] {
+                        let mut st = GreedyState::init(&x, &y, lam)
+                            .with_threads(threads)
+                            .with_tile_cols(tile);
+                        st.commit(&x, 1);
+                        let got = st.score_all(&x, &y, loss);
+                        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "cand {i} tile={tile} threads={threads}"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// Tiled commits must leave every cache (C, a, d) bit-identical to
+    /// the untiled downdate sequence.
+    #[test]
+    fn tiled_commit_is_bit_identical_to_untiled() {
+        forall_seeds(8, |seed| {
+            let mut g = Gen::new(seed + 32_000);
+            let n = g.size(4, 12);
+            let m = g.size(9, 40);
+            let lam = g.lambda(-1, 1);
+            let x = g.matrix(n, m);
+            let y = g.labels(m);
+            let steps = 3.min(n);
+            let mut plain = GreedyState::init(&x, &y, lam);
+            for step in 0..steps {
+                plain.commit(&x, step);
+            }
+            for tile in [8usize, 16, 40] {
+                for threads in [1usize, 2] {
+                    let mut st = GreedyState::init(&x, &y, lam)
+                        .with_threads(threads)
+                        .with_tile_cols(tile);
+                    for step in 0..steps {
+                        st.commit(&x, step);
+                    }
+                    let eq = |a: &[f64], b: &[f64]| {
+                        a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                    };
+                    assert!(eq(&plain.ct, &st.ct), "ct tile={tile}");
+                    assert!(eq(&plain.a, &st.a), "a tile={tile}");
+                    assert!(eq(&plain.d, &st.d), "d tile={tile}");
+                }
+            }
+        });
+    }
+
+    /// End-to-end selection with a tiled config must reproduce the
+    /// untiled run bit-for-bit (the CLI `--tile-cols` contract).
+    #[test]
+    fn tiled_selection_result_is_bit_identical() {
+        let ds = crate::data::synthetic::two_gaussians(57, 14, 5, 1.2, 21);
+        let base = SelectionConfig::builder()
+            .k(6)
+            .lambda(0.8)
+            .loss(Loss::ZeroOne)
+            .build();
+        let want = GreedyRls.select(&ds.x, &ds.y, &base).unwrap();
+        for tile in [8usize, 16] {
+            let cfg = base.with().tile_cols(tile).build();
+            let got = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+            assert_results_bit_identical(&want, &got, &format!("tile {tile}"));
+        }
+    }
+
+    // ---- stored (out-of-core) engine ------------------------------------
+
+    fn assert_results_bit_identical(
+        a: &SelectionResult,
+        b: &SelectionResult,
+        what: &str,
+    ) {
+        assert_eq!(a.selected, b.selected, "{what}: selected sets differ");
+        assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round counts");
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(ra.feature, rb.feature, "{what}: feature");
+            assert_eq!(
+                ra.criterion.to_bits(),
+                rb.criterion.to_bits(),
+                "{what}: criterion {} vs {}",
+                ra.criterion,
+                rb.criterion
+            );
+        }
+        assert_eq!(a.weights.len(), b.weights.len(), "{what}: weight counts");
+        for (wa, wb) in a.weights.iter().zip(&b.weights) {
+            assert_eq!(
+                wa.to_bits(),
+                wb.to_bits(),
+                "{what}: weights {wa} vs {wb}"
+            );
+        }
+    }
+
+    fn run_stored(
+        ds: &crate::data::Dataset,
+        cfg: &SelectionConfig,
+        opts: &crate::data::storage::StorageOptions,
+    ) -> SelectionResult {
+        let store = MatrixStore::from_matrix(&ds.x, opts).unwrap();
+        let s = GreedyRls
+            .begin_stored(store, ds.y.clone(), cfg, opts)
+            .unwrap();
+        super::super::run_to_completion(s).unwrap()
+    }
+
+    /// The stored engine on the RAM backend must be bit-identical to the
+    /// in-RAM engine for every thread count and tile width (runs on all
+    /// platforms; the mmap twin below adds the Linux-only backend).
+    #[test]
+    fn stored_engine_matches_ram_engine_bitwise() {
+        let ds = crate::data::synthetic::two_gaussians(41, 13, 5, 1.4, 33);
+        let cfg = SelectionConfig::builder()
+            .k(5)
+            .lambda(0.9)
+            .loss(Loss::ZeroOne)
+            .build();
+        let want = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        for tile in [0usize, 8, 16] {
+            for threads in [1usize, 2, 4] {
+                let cfg = cfg.with().threads(threads).build();
+                let opts =
+                    crate::data::storage::StorageOptions::default()
+                        .tile_cols(tile);
+                let got = run_stored(&ds, &cfg, &opts);
+                assert_results_bit_identical(
+                    &want,
+                    &got,
+                    &format!("ram-backend tile={tile} threads={threads}"),
+                );
+            }
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn stored_engine_on_mmap_matches_ram_engine_bitwise() {
+        use crate::data::storage::{Backend, StorageOptions};
+        let ds = crate::data::synthetic::two_gaussians(41, 13, 5, 1.4, 33);
+        let cfg = SelectionConfig::builder()
+            .k(5)
+            .lambda(0.9)
+            .loss(Loss::Squared)
+            .build();
+        let want = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        for threads in [1usize, 2, 4] {
+            let cfg = cfg.with().threads(threads).build();
+            let opts = StorageOptions::default()
+                .backend(Backend::Mmap)
+                .tile_cols(8);
+            let got = run_stored(&ds, &cfg, &opts);
+            assert_results_bit_identical(
+                &want,
+                &got,
+                &format!("mmap-backend threads={threads}"),
+            );
+        }
+    }
+
+    /// Force genuinely windowed scans: with a 1 MiB window and 16 Ki
+    /// examples a window holds 8 rows, so the grouped scan walks several
+    /// windows per shard — results must not move by a bit.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn stored_windowed_scan_matches_ram_engine_bitwise() {
+        use crate::data::storage::{Backend, StorageOptions};
+        let ds = crate::data::synthetic::two_gaussians(16_384, 12, 4, 1.0, 9);
+        let cfg = SelectionConfig::builder()
+            .k(4)
+            .lambda(1.0)
+            .loss(Loss::ZeroOne)
+            .threads(2)
+            .build();
+        let want = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let opts = StorageOptions::default()
+            .backend(Backend::Mmap)
+            .window_bytes(1 << 20);
+        let got = run_stored(&ds, &cfg, &opts);
+        assert_results_bit_identical(&want, &got, "windowed mmap scan");
+    }
+
+    /// Degenerate window (one row per window): every quad takes the
+    /// staged per-row path. Still bit-identical.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn stored_single_row_window_matches_ram_engine_bitwise() {
+        use crate::data::storage::{Backend, StorageOptions};
+        let ds =
+            crate::data::synthetic::two_gaussians(131_072, 5, 2, 1.0, 15);
+        let cfg = SelectionConfig::builder()
+            .k(2)
+            .lambda(1.0)
+            .loss(Loss::Squared)
+            .threads(2)
+            .build();
+        let want = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let opts = StorageOptions::default()
+            .backend(Backend::Mmap)
+            .window_bytes(1 << 20);
+        let got = run_stored(&ds, &cfg, &opts);
+        assert_results_bit_identical(&want, &got, "single-row windows");
+    }
+
+    /// Warm-start replay through the stored engine: forced rounds must
+    /// recompute the same criteria the fresh run logged, on both
+    /// engines.
+    #[test]
+    fn stored_warm_start_replay_is_bit_identical() {
+        let ds = crate::data::synthetic::two_gaussians(37, 11, 4, 1.3, 27);
+        let cfg = SelectionConfig::builder()
+            .k(5)
+            .lambda(0.7)
+            .loss(Loss::ZeroOne)
+            .build();
+        let fresh = GreedyRls.select(&ds.x, &ds.y, &cfg).unwrap();
+        let prefix = &fresh.selected[..2];
+
+        let ram = super::super::run_to_completion(
+            GreedyRls.begin_from(&ds.x, &ds.y, &cfg, prefix).unwrap(),
+        )
+        .unwrap();
+        assert_results_bit_identical(&fresh, &ram, "ram warm start");
+
+        let opts = crate::data::storage::StorageOptions::default();
+        let store = MatrixStore::from_matrix(&ds.x, &opts).unwrap();
+        let stored = super::super::run_to_completion(
+            GreedyRls
+                .begin_stored_from(store, ds.y.clone(), &cfg, &opts, prefix)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_results_bit_identical(&fresh, &stored, "stored warm start");
+    }
+
+    /// The stored core applies the same validation as the in-RAM core,
+    /// including the streamed finiteness check.
+    #[test]
+    fn stored_core_rejects_bad_inputs() {
+        let mut ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 6);
+        let cfg = SelectionConfig::builder()
+            .k(2)
+            .lambda(1.0)
+            .loss(Loss::ZeroOne)
+            .build();
+        let opts = crate::data::storage::StorageOptions::default();
+        ds.x[(1, 3)] = f64::NAN;
+        let store = MatrixStore::from_matrix(&ds.x, &opts).unwrap();
+        let err = GreedyRls
+            .begin_stored(store, ds.y.clone(), &cfg, &opts)
+            .unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+
+        let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 6);
+        let store = MatrixStore::from_matrix(&ds.x, &opts).unwrap();
+        let cfg = cfg.with().k(6).build();
+        assert!(GreedyRls
+            .begin_stored(store, ds.y.clone(), &cfg, &opts)
+            .is_err());
     }
 }

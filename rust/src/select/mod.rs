@@ -90,6 +90,16 @@ pub struct SelectionConfig {
     /// test suite. The PJRT engine ignores this field (its parallelism
     /// lives in the compiled kernels).
     pub threads: usize,
+    /// Column-tile width for the greedy engine's LLC-tiled scan/commit
+    /// kernels: `0` (the default) means untiled on the RAM backend and
+    /// auto-sized on the out-of-core backend; any explicit value is
+    /// rounded down to a multiple of 8. **Tiling never changes results**
+    /// — every tile width yields bit-identical selections (the tiled
+    /// kernels carry their accumulators across tiles, performing the
+    /// serial operation sequence exactly), so this field is excluded
+    /// from checkpoint config fingerprints and checkpoints written at
+    /// one tile width resume under another.
+    pub tile_cols: usize,
 }
 
 impl Default for SelectionConfig {
@@ -100,6 +110,7 @@ impl Default for SelectionConfig {
             loss: Loss::ZeroOne,
             stop: StopPolicy::default(),
             threads: 0,
+            tile_cols: 0,
         }
     }
 }
@@ -164,6 +175,14 @@ impl SelectionConfigBuilder {
     /// selections — see [`SelectionConfig::threads`].
     pub fn threads(mut self, threads: usize) -> Self {
         self.cfg.threads = threads;
+        self
+    }
+
+    /// Column-tile width for the LLC-tiled kernels (`0` = auto; any
+    /// width yields bit-identical selections — see
+    /// [`SelectionConfig::tile_cols`]).
+    pub fn tile_cols(mut self, tile_cols: usize) -> Self {
+        self.cfg.tile_cols = tile_cols;
         self
     }
 
@@ -310,13 +329,16 @@ mod tests {
             .lambda(0.5)
             .loss(Loss::Squared)
             .threads(4)
+            .tile_cols(64)
             .plateau(3, 1e-2)
             .build();
         assert_eq!(cfg.k, 25);
         assert_eq!(cfg.lambda, 0.5);
         assert_eq!(cfg.loss, Loss::Squared);
         assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.tile_cols, 64);
         assert_eq!(SelectionConfig::default().threads, 0);
+        assert_eq!(SelectionConfig::default().tile_cols, 0);
         assert_eq!(
             cfg.stop,
             StopPolicy::Plateau { patience: 3, min_rel_improvement: 1e-2 }

@@ -1,0 +1,312 @@
+//! Backend equivalence — the storage layer must be invisible in the
+//! numbers (integration level).
+//!
+//! The out-of-core contract (ARCHITECTURE.md §Data backends): whether a
+//! dataset lives in RAM, streams through a memory-mapped store, or is
+//! served to selectors as a mapped read-only matrix, the selected sets,
+//! per-round criteria, and final weights are **bit-identical** — at
+//! every thread count, tile width, and window size. These tests drive
+//! the full public surface: the two libsvm loaders, the mapped-matrix
+//! `Dataset` path every selector consumes, the stored greedy engine,
+//! and the cross-backend checkpoint fingerprint.
+
+use greedy_rls::data::storage::{Backend, MatrixStore, StorageOptions};
+use greedy_rls::data::{fingerprint, libsvm, synthetic, Dataset};
+use greedy_rls::metrics::Loss;
+use greedy_rls::select::{
+    greedy::GreedyRls, run_to_completion, SelectionConfig, SelectionResult,
+    Selector,
+};
+
+fn write_temp_libsvm(ds: &Dataset, tag: &str) -> std::path::PathBuf {
+    use std::io::Write;
+    let p = std::env::temp_dir().join(format!(
+        "greedy-rls-beq-{tag}-{}.libsvm",
+        std::process::id()
+    ));
+    let mut f = std::fs::File::create(&p).unwrap();
+    f.write_all(libsvm::to_string(ds).as_bytes()).unwrap();
+    p
+}
+
+fn mmap_opts() -> StorageOptions {
+    StorageOptions::default()
+        .backend(Backend::Mmap)
+        .window_bytes(0) // clamps to the 1 MiB floor: many tiny windows
+        .chunk_bytes(0) // clamps to the 4 KiB floor: many refills
+}
+
+fn assert_bit_identical(a: &SelectionResult, b: &SelectionResult, what: &str) {
+    assert_eq!(a.selected, b.selected, "{what}: selected");
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert_eq!(ra.feature, rb.feature, "{what}: round {i} feature");
+        assert_eq!(
+            ra.criterion.to_bits(),
+            rb.criterion.to_bits(),
+            "{what}: round {i} criterion {} vs {}",
+            ra.criterion,
+            rb.criterion
+        );
+    }
+    assert_eq!(a.weights.len(), b.weights.len(), "{what}: weight count");
+    for (i, (wa, wb)) in a.weights.iter().zip(&b.weights).enumerate() {
+        assert_eq!(
+            wa.to_bits(),
+            wb.to_bits(),
+            "{what}: weight {i} {wa} vs {wb}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loaders: the streaming out-of-core parser and the in-RAM parser must
+// produce byte-identical matrices from the same file.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streamed_loader_matches_inram_loader_bitwise() {
+    let src = synthetic::two_gaussians(41, 13, 4, 1.2, 91);
+    let path = write_temp_libsvm(&src, "loader");
+    let ram = libsvm::parse_file(&path, None).unwrap();
+    let mut all = vec![StorageOptions::default().chunk_bytes(0)];
+    if cfg!(target_os = "linux") {
+        all.push(mmap_opts());
+    }
+    for opts in all {
+        let stored = libsvm::parse_file_stored(&path, None, &opts).unwrap();
+        assert_eq!(stored.name, ram.name, "{:?}", opts.backend);
+        assert_eq!(stored.y, ram.y, "{:?}", opts.backend);
+        let got = stored.to_dataset().unwrap();
+        for (a, b) in got.x.as_slice().iter().zip(ram.x.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{:?}", opts.backend);
+        }
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Mapped-matrix datasets: `load_file` on the mmap backend hands selectors
+// a Dataset whose matrix is a read-only mapping of the scratch file. The
+// whole selector roster must produce bit-identical results on it, at
+// threads {1, 2, 4}.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+fn check_backend_equivalence<S: Selector>(
+    sel: &S,
+    ram: &Dataset,
+    mapped: &Dataset,
+    base: &SelectionConfig,
+) {
+    let name = sel.name();
+    for threads in [1usize, 2, 4] {
+        let cfg = SelectionConfig { threads, ..*base };
+        let a = sel.select(&ram.x, &ram.y, &cfg).unwrap();
+        let b = sel.select(&mapped.x, &mapped.y, &cfg).unwrap();
+        assert_bit_identical(
+            &a,
+            &b,
+            &format!("{name}: ram vs mmap, threads={threads}"),
+        );
+    }
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn every_selector_is_bit_identical_on_a_mapped_dataset() {
+    use greedy_rls::rls::kernel::Kernel;
+    use greedy_rls::select::{
+        backward::BackwardElimination, centers::CenterSelector,
+        floating::FloatingForward, foba::Foba, lowrank::LowRankLsSvm,
+        nfold::NFoldGreedy, random::RandomSelector, rankrls::GreedyRankRls,
+        wrapper::Wrapper,
+    };
+
+    let src = synthetic::two_gaussians(36, 11, 4, 1.5, 55);
+    let path = write_temp_libsvm(&src, "roster");
+    let ram = libsvm::parse_file(&path, None).unwrap();
+    let mapped = libsvm::load_file(&path, None, &mmap_opts()).unwrap();
+    for loss in [Loss::Squared, Loss::ZeroOne] {
+        let base =
+            SelectionConfig { k: 4, lambda: 0.8, loss, ..Default::default() };
+        check_backend_equivalence(&GreedyRls, &ram, &mapped, &base);
+        check_backend_equivalence(&Wrapper::shortcut(), &ram, &mapped, &base);
+        check_backend_equivalence(&LowRankLsSvm, &ram, &mapped, &base);
+        check_backend_equivalence(
+            &RandomSelector { seed: 5 },
+            &ram,
+            &mapped,
+            &base,
+        );
+        check_backend_equivalence(&BackwardElimination, &ram, &mapped, &base);
+        check_backend_equivalence(
+            &FloatingForward::default(),
+            &ram,
+            &mapped,
+            &base,
+        );
+        check_backend_equivalence(&Foba::default(), &ram, &mapped, &base);
+        check_backend_equivalence(
+            &NFoldGreedy { folds: 4, seed: 2 },
+            &ram,
+            &mapped,
+            &base,
+        );
+        check_backend_equivalence(&GreedyRankRls, &ram, &mapped, &base);
+        check_backend_equivalence(
+            &CenterSelector { kernel: Kernel::Rbf { gamma: 0.7 } },
+            &ram,
+            &mapped,
+            &base,
+        );
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Stored greedy engine: the windowed out-of-core scan/commit engine vs
+// the in-RAM engine, across thread counts, tile widths, and warm starts.
+// ---------------------------------------------------------------------------
+
+fn stored_result(
+    src: &Dataset,
+    cfg: &SelectionConfig,
+    opts: &StorageOptions,
+    warm: &[usize],
+) -> SelectionResult {
+    let x = MatrixStore::from_matrix(&src.x, opts).unwrap();
+    let session = if warm.is_empty() {
+        GreedyRls.begin_stored(x, src.y.clone(), cfg, opts).unwrap()
+    } else {
+        GreedyRls
+            .begin_stored_from(x, src.y.clone(), cfg, opts, warm)
+            .unwrap()
+    };
+    run_to_completion(session).unwrap()
+}
+
+#[test]
+fn stored_engine_matches_inram_engine_across_knobs() {
+    let src = synthetic::two_gaussians(44, 14, 5, 1.3, 29);
+    for loss in [Loss::Squared, Loss::ZeroOne] {
+        for threads in [1usize, 2, 4] {
+            let cfg = SelectionConfig {
+                k: 5,
+                lambda: 0.7,
+                loss,
+                threads,
+                ..Default::default()
+            };
+            let ram = GreedyRls.select(&src.x, &src.y, &cfg).unwrap();
+            let mut variants = vec![
+                StorageOptions::default(),
+                StorageOptions::default().tile_cols(16),
+            ];
+            if cfg!(target_os = "linux") {
+                variants.push(mmap_opts());
+                variants.push(mmap_opts().tile_cols(8));
+            }
+            for opts in variants {
+                let got = stored_result(&src, &cfg, &opts, &[]);
+                assert_bit_identical(
+                    &ram,
+                    &got,
+                    &format!(
+                        "stored {:?} tile={} threads={threads}",
+                        opts.backend, opts.tile_cols
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stored_warm_start_continues_the_inram_trajectory() {
+    let src = synthetic::two_gaussians(40, 12, 4, 1.4, 61);
+    let cfg = SelectionConfig {
+        k: 5,
+        lambda: 1.1,
+        loss: Loss::ZeroOne,
+        ..Default::default()
+    };
+    let full = GreedyRls.select(&src.x, &src.y, &cfg).unwrap();
+    let replay: Vec<usize> = full.rounds.iter().map(|r| r.feature).collect();
+    let mut variants = vec![StorageOptions::default()];
+    if cfg!(target_os = "linux") {
+        variants.push(mmap_opts());
+    }
+    for opts in variants {
+        for cut in [1usize, replay.len() / 2] {
+            let got = stored_result(&src, &cfg, &opts, &replay[..cut]);
+            assert_bit_identical(
+                &full,
+                &got,
+                &format!("warm start {:?} at {cut}", opts.backend),
+            );
+        }
+    }
+}
+
+#[test]
+fn tiled_inram_selection_matches_untiled() {
+    // `--tile-cols` on the default RAM path: the same engine, scanning in
+    // LLC-sized column tiles, must reproduce the untiled run bit-for-bit.
+    let src = synthetic::two_gaussians(52, 15, 5, 1.2, 83);
+    for loss in [Loss::Squared, Loss::ZeroOne] {
+        let base = SelectionConfig {
+            k: 5,
+            lambda: 0.9,
+            loss,
+            ..Default::default()
+        };
+        let untiled = GreedyRls.select(&src.x, &src.y, &base).unwrap();
+        for tile_cols in [8usize, 16, 48] {
+            for threads in [1usize, 3] {
+                let cfg =
+                    SelectionConfig { tile_cols, threads, ..base };
+                let tiled = GreedyRls.select(&src.x, &src.y, &cfg).unwrap();
+                assert_bit_identical(
+                    &untiled,
+                    &tiled,
+                    &format!("tile={tile_cols} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-backend durability: standardization and the checkpoint data
+// fingerprint must agree between the RAM and stored pipelines, so
+// checkpoints written by one backend verify under the other.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn standardization_and_fingerprint_interchange_across_backends() {
+    let mut ram = synthetic::two_gaussians(33, 9, 3, 1.6, 17);
+    let mut variants = vec![StorageOptions::default()];
+    if cfg!(target_os = "linux") {
+        variants.push(mmap_opts());
+    }
+    let ram_stats = ram.standardize();
+    let ram_fp = fingerprint::fingerprint_xy(&ram.x, &ram.y);
+    for opts in variants {
+        let mut stored =
+            synthetic::two_gaussians_stored(33, 9, 3, 1.6, 17, &opts)
+                .unwrap();
+        let stats = stored.standardize().unwrap();
+        assert_eq!(stats, ram_stats, "{:?}", opts.backend);
+        assert_eq!(
+            stored.fingerprint().unwrap(),
+            ram_fp,
+            "{:?}",
+            opts.backend
+        );
+        let got = stored.to_dataset().unwrap();
+        for (a, b) in got.x.as_slice().iter().zip(ram.x.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{:?}", opts.backend);
+        }
+    }
+}

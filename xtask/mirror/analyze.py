@@ -223,6 +223,7 @@ def is_hot_path(rel):
         or rel == "rust/src/coordinator/stream.rs"
         or rel.startswith("rust/src/coordinator/fabric/")
         or rel == "rust/src/select/greedy.rs"
+        or rel == "rust/src/data/storage.rs"
     )
 
 
@@ -368,7 +369,38 @@ UNBOUNDED_IO_TOKENS = [
 ]
 
 
+def is_storage_io(rel):
+    return rel == "rust/src/data/storage.rs"
+
+
+STORAGE_IO_TOKENS = [
+    (
+        ".read_to_end(",
+        "unbounded file read in the storage layer — stream through "
+        "fixed-size chunk refills so memory stays capped at the "
+        "configured chunk/window size",
+    ),
+    (
+        ".read_to_string(",
+        "unbounded file read in the storage layer — stream through "
+        "fixed-size chunk refills so memory stays capped at the "
+        "configured chunk/window size",
+    ),
+]
+
+
 def unbounded_io(rel, lines, out):
+    if is_storage_io(rel):
+        for line in lines:
+            if line["in_test"]:
+                continue
+            code = line["code"]
+            for tok, why in STORAGE_IO_TOKENS:
+                if tok in code:
+                    out.append(
+                        finding("no-unbounded-io", rel, line["number"], why)
+                    )
+        return
     if not is_fabric_io(rel):
         return
     connects = False

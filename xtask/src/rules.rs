@@ -27,9 +27,10 @@ pub const RULES: &[RuleInfo] = &[
         name: "no-panic-hot-path",
         invariant: "serving and hot-path modules (serve.rs, stream.rs, \
                     coordinator/fabric/, parallel/, greedy.rs, cli/, \
-                    main.rs) must not call .unwrap()/.expect()/panic! \
-                    outside tests — propagate Results or recover \
-                    (PoisonError::into_inner, resume_unwind)",
+                    main.rs, data/storage.rs) must not call \
+                    .unwrap()/.expect()/panic! outside tests — propagate \
+                    Results or recover (PoisonError::into_inner, \
+                    resume_unwind)",
     },
     RuleInfo {
         name: "no-raw-instant",
@@ -70,7 +71,9 @@ pub const RULES: &[RuleInfo] = &[
                     deadline: no TcpStream::connect (connect_timeout \
                     instead), no read_to_end/read_to_string, no \
                     set_read_timeout(None); a file that connects must \
-                    also arm read timeouts",
+                    also arm read timeouts. data/storage.rs additionally \
+                    must never slurp whole files: no \
+                    read_to_end/read_to_string — stream fixed-size chunks",
     },
     RuleInfo {
         name: "allow-hygiene",
@@ -147,6 +150,7 @@ fn is_hot_path(rel: &str) -> bool {
         || rel == "rust/src/coordinator/stream.rs"
         || rel.starts_with("rust/src/coordinator/fabric/")
         || rel == "rust/src/select/greedy.rs"
+        || rel == "rust/src/data/storage.rs"
 }
 
 fn token_rules(rel: &str, f: &ScannedFile, out: &mut Vec<Finding>) {
@@ -335,11 +339,56 @@ const UNBOUNDED_IO_TOKENS: [(&str, &str); 5] = [
     ),
 ];
 
+/// Out-of-core storage module covered by the bounded-read half of
+/// `no-unbounded-io` — the streaming loader refills fixed-size chunks
+/// so memory stays capped regardless of file size; a whole-file slurp
+/// silently reintroduces the O(file) allocation the backend exists to
+/// avoid. Socket pairing checks do not apply here.
+fn is_storage_io(rel: &str) -> bool {
+    rel == "rust/src/data/storage.rs"
+}
+
+/// `(token, message)` pairs flagged line-by-line in storage code.
+const STORAGE_IO_TOKENS: [(&str, &str); 2] = [
+    (
+        ".read_to_end(",
+        "unbounded file read in the storage layer — stream through \
+         fixed-size chunk refills so memory stays capped at the \
+         configured chunk/window size",
+    ),
+    (
+        ".read_to_string(",
+        "unbounded file read in the storage layer — stream through \
+         fixed-size chunk refills so memory stays capped at the \
+         configured chunk/window size",
+    ),
+];
+
 /// Flag blocking socket calls without deadlines in fabric/serve code,
 /// plus a file-level pairing check: a file that opens connections must
 /// also arm read timeouts somewhere (file-level findings carry line 0
-/// and cannot be allowed away — fix the file).
+/// and cannot be allowed away — fix the file). In data/storage.rs only
+/// the whole-file-read tokens apply.
 fn unbounded_io(rel: &str, f: &ScannedFile, out: &mut Vec<Finding>) {
+    if is_storage_io(rel) {
+        for line in &f.lines {
+            if line.in_test {
+                continue;
+            }
+            let code = line.code.as_str();
+            for (tok, why) in STORAGE_IO_TOKENS {
+                if code.contains(tok) {
+                    out.push(Finding {
+                        rule: "no-unbounded-io".into(),
+                        file: rel.into(),
+                        line: line.number,
+                        message: why.to_string(),
+                    });
+                }
+            }
+        }
+        return;
+    }
     if !is_fabric_io(rel) {
         return;
     }

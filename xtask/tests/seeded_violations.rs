@@ -314,6 +314,69 @@ fn connect_without_read_timeout_fires_at_file_level() {
     assert!(r.findings[0].message.contains("never arms"));
 }
 
+/// Seed `rust/src/data/storage.rs` into a fixture (the clean fixture
+/// does not carry one, keeping its `files_scanned == 6` stable).
+fn seed_storage_rs(dir: &Path, body: &str) {
+    fs::create_dir_all(dir.join("rust/src/data")).unwrap();
+    fs::write(dir.join("rust/src/data/storage.rs"), body).unwrap();
+}
+
+#[test]
+fn seeded_unwrap_in_storage_fires() {
+    let dir = clean_fixture("rule1d");
+    seed_storage_rs(
+        &dir,
+        "pub fn window() -> u64 {\n    let cap: Option<u64> = None;\n    \
+         cap.unwrap()\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["no-panic-hot-path"]);
+}
+
+#[test]
+fn seeded_whole_file_read_in_storage_fires() {
+    let dir = clean_fixture("rule7e");
+    seed_storage_rs(
+        &dir,
+        "use std::io::Read;\n\npub fn slurp(f: &mut std::fs::File) -> \
+         Vec<u8> {\n    let mut buf = Vec::new();\n    let _ = \
+         f.read_to_end(&mut buf);\n    buf\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["no-unbounded-io"]);
+    assert!(r.findings[0].message.contains("storage layer"));
+}
+
+#[test]
+fn storage_scope_skips_socket_pairing_checks() {
+    let dir = clean_fixture("rule7f");
+    // socket tokens and the connect/timeout pairing check are fabric
+    // rules; in storage.rs only the whole-file-read tokens apply
+    seed_storage_rs(
+        &dir,
+        "pub fn dial(a: &std::net::SocketAddr) {\n    let _ = \
+         std::net::TcpStream::connect_timeout(a, \
+         std::time::Duration::from_secs(1));\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "fabric pairing fired in storage: {:?}", r.findings);
+}
+
+#[test]
+fn storage_test_module_reads_are_exempt() {
+    let dir = clean_fixture("rule7g");
+    seed_storage_rs(
+        &dir,
+        "pub fn fine() {}\n\n#[cfg(test)]\nmod tests {\n    use \
+         std::io::Read;\n\n    #[test]\n    fn t() {\n        let mut buf = \
+         Vec::new();\n        let mut f = \
+         std::fs::File::open(\"x\").unwrap();\n        let _ = \
+         f.read_to_end(&mut buf);\n    }\n}\n",
+    );
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "test-mod read must not fire: {:?}", r.findings);
+}
+
 #[test]
 fn unbounded_io_outside_fabric_scope_is_ignored() {
     let dir = clean_fixture("rule7c");
