@@ -12,10 +12,18 @@
 //! the deterministic thread layer (`--threads 1,2,4,...`) to measure the
 //! parallel speedup of both passes.
 //!
+//! The grid also sweeps the **kernel tier**: every row records which
+//! kernel the build dispatches (`scalar`, or `simd` under
+//! `--features simd`) and runs at both cache precisions (`f64` and the
+//! mixed-precision `f32c`, whose cache rows are half the bytes — the
+//! byte model below accounts for that, so GB/s stays comparable).
+//!
 //! Output: the usual table + CSV, plus a machine-readable
 //! `BENCH_hotpath.json` (median ms, GB/s, GFLOP/s, speedup-vs-1-thread
-//! per (m, n, threads)) so the repo's perf trajectory is tracked across
-//! PRs instead of living only in terminal scrollback.
+//! per (m, n, kernel, precision, threads)) so the repo's perf trajectory
+//! is tracked across PRs instead of living only in terminal scrollback —
+//! CI compares it against the committed baseline with
+//! `xtask/mirror/perf_check.py`.
 //!
 //! Flags (after `cargo bench --bench microbench_hotpath --`):
 //! `--threads L` comma-separated thread counts (default `1,2,4` plus the
@@ -24,6 +32,7 @@
 
 use greedy_rls::bench::{time, CellValue, Table};
 use greedy_rls::data::synthetic::two_gaussians;
+use greedy_rls::kernel::{KernelKind, Precision};
 use greedy_rls::metrics::Loss;
 use greedy_rls::parallel;
 use greedy_rls::select::greedy::GreedyState;
@@ -31,6 +40,8 @@ use greedy_rls::select::greedy::GreedyState;
 struct Record {
     m: usize,
     n: usize,
+    kernel: &'static str,
+    precision: &'static str,
     threads: usize,
     score_ms: f64,
     score_gbps: f64,
@@ -88,12 +99,15 @@ fn write_json(records: &[Record]) -> std::io::Result<()> {
     out.push_str("  \"results\": [\n");
     for (i, r) in records.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"m\": {}, \"n\": {}, \"threads\": {}, \
+            "    {{\"m\": {}, \"n\": {}, \"kernel\": \"{}\", \
+             \"precision\": \"{}\", \"threads\": {}, \
              \"score_ms\": {}, \"score_gbps\": {}, \"score_gflops\": {}, \
              \"commit_ms\": {}, \"commit_gbps\": {}, \
              \"score_speedup_vs_1t\": {}}}{}\n",
             r.m,
             r.n,
+            r.kernel,
+            r.precision,
             r.threads,
             json_num(r.score_ms),
             json_num(r.score_gbps),
@@ -108,6 +122,24 @@ fn write_json(records: &[Record]) -> std::io::Result<()> {
     std::fs::write("BENCH_hotpath.json", out)
 }
 
+/// Bytes streamed per (feature, example) pair by the score pass: X row
+/// twice in f64 plus the cache row twice at its storage width.
+fn score_bytes_per_pair(precision: Precision) -> f64 {
+    match precision {
+        Precision::F64 => 4.0 * 8.0,
+        Precision::F32c => 2.0 * 8.0 + 2.0 * 4.0,
+    }
+}
+
+/// Bytes per pair for the commit pass: cache row read + write at its
+/// storage width plus the X row read in f64.
+fn commit_bytes_per_pair(precision: Precision) -> f64 {
+    match precision {
+        Precision::F64 => 3.0 * 8.0,
+        Precision::F32c => 8.0 + 2.0 * 4.0,
+    }
+}
+
 fn main() {
     let (threads, smoke) = parse_args();
     let sizes: Vec<(usize, usize)> = if smoke {
@@ -115,12 +147,16 @@ fn main() {
     } else {
         vec![(1000, 1000), (2000, 1000), (4000, 1000), (2000, 4000)]
     };
+    let kernel = KernelKind::active().as_str();
+    let precisions = [Precision::F64, Precision::F32c];
 
     let mut table = Table::new(
         "Microbench — per-round hot paths",
         &[
             "m",
             "n",
+            "kernel",
+            "precision",
             "threads",
             "score_ms",
             "score_gbps",
@@ -133,59 +169,72 @@ fn main() {
     let mut records: Vec<Record> = Vec::new();
     for &(m, n) in &sizes {
         let ds = two_gaussians(m, n, 50.min(n), 1.0, 3);
-        let mut score_1t_ms = f64::NAN;
-        for &t in &threads {
-            let st = GreedyState::init(&ds.x, &ds.y, 1.0).with_threads(t);
-            let score = time(1, 5, || {
-                std::hint::black_box(st.score_all(&ds.x, &ds.y, Loss::ZeroOne));
-            });
-            // bytes: X row + C row, each m f64, per candidate, streamed
-            // twice (pass 1 dots, pass 2 loss) → 4 × 8 × m × n
-            let score_bytes = 4.0 * 8.0 * m as f64 * n as f64;
-            let score_flops = 10.0 * m as f64 * n as f64;
+        for &prec in &precisions {
+            let mut score_1t_ms = f64::NAN;
+            for &t in &threads {
+                let mut st =
+                    GreedyState::init(&ds.x, &ds.y, 1.0).with_threads(t);
+                if prec == Precision::F32c {
+                    st = st.with_precision(prec);
+                }
+                let score = time(1, 5, || {
+                    std::hint::black_box(
+                        st.score_all(&ds.x, &ds.y, Loss::ZeroOne),
+                    );
+                });
+                let score_bytes =
+                    score_bytes_per_pair(prec) * m as f64 * n as f64;
+                let score_flops = 10.0 * m as f64 * n as f64;
 
-            // pure commit cost: one long-lived state, commit a fresh
-            // feature per repetition (each commit is the same O(mn)
-            // regardless of |S|)
-            let mut st2 =
-                GreedyState::init(&ds.x, &ds.y, 1.0).with_threads(t);
-            let mut next = 0usize;
-            let commit = time(1, 5, || {
-                st2.commit(&ds.x, next);
-                next += 1;
-            });
-            // commit streams every C row read+write plus X row read
-            // ≈ 3×8×mn
-            let commit_bytes = 3.0 * 8.0 * m as f64 * n as f64;
+                // pure commit cost: one long-lived state, commit a fresh
+                // feature per repetition (each commit is the same O(mn)
+                // regardless of |S|)
+                let mut st2 =
+                    GreedyState::init(&ds.x, &ds.y, 1.0).with_threads(t);
+                if prec == Precision::F32c {
+                    st2 = st2.with_precision(prec);
+                }
+                let mut next = 0usize;
+                let commit = time(1, 5, || {
+                    st2.commit(&ds.x, next);
+                    next += 1;
+                });
+                let commit_bytes =
+                    commit_bytes_per_pair(prec) * m as f64 * n as f64;
 
-            let score_ms = score.median_s * 1e3;
-            if t == 1 {
-                score_1t_ms = score_ms;
+                let score_ms = score.median_s * 1e3;
+                if t == 1 {
+                    score_1t_ms = score_ms;
+                }
+                let speedup = score_1t_ms / score_ms;
+                records.push(Record {
+                    m,
+                    n,
+                    kernel,
+                    precision: prec.as_str(),
+                    threads: t,
+                    score_ms,
+                    score_gbps: score_bytes / score.median_s / 1e9,
+                    score_gflops: score_flops / score.median_s / 1e9,
+                    commit_ms: commit.median_s * 1e3,
+                    commit_gbps: commit_bytes / commit.median_s / 1e9,
+                    score_speedup_vs_1t: speedup,
+                });
+                let r = records.last().unwrap();
+                table.row(&Table::cells(&[
+                    CellValue::Usize(m),
+                    CellValue::Usize(n),
+                    CellValue::Str(r.kernel.to_string()),
+                    CellValue::Str(r.precision.to_string()),
+                    CellValue::Usize(t),
+                    CellValue::F3(r.score_ms),
+                    CellValue::F3(r.score_gbps),
+                    CellValue::F3(r.score_gflops),
+                    CellValue::F3(r.commit_ms),
+                    CellValue::F3(r.commit_gbps),
+                    CellValue::F3(r.score_speedup_vs_1t),
+                ]));
             }
-            let speedup = score_1t_ms / score_ms;
-            records.push(Record {
-                m,
-                n,
-                threads: t,
-                score_ms,
-                score_gbps: score_bytes / score.median_s / 1e9,
-                score_gflops: score_flops / score.median_s / 1e9,
-                commit_ms: commit.median_s * 1e3,
-                commit_gbps: commit_bytes / commit.median_s / 1e9,
-                score_speedup_vs_1t: speedup,
-            });
-            let r = records.last().unwrap();
-            table.row(&Table::cells(&[
-                CellValue::Usize(m),
-                CellValue::Usize(n),
-                CellValue::Usize(t),
-                CellValue::F3(r.score_ms),
-                CellValue::F3(r.score_gbps),
-                CellValue::F3(r.score_gflops),
-                CellValue::F3(r.commit_ms),
-                CellValue::F3(r.commit_gbps),
-                CellValue::F3(r.score_speedup_vs_1t),
-            ]));
         }
     }
     table.print();
@@ -195,10 +244,11 @@ fn main() {
         Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
     }
     println!(
-        "score streams 32·m·n bytes per round, commit 24·m·n; achieved \
-         GB/s against this box's streaming bandwidth is the roofline \
-         ratio recorded in EXPERIMENTS.md §Perf. Speedups are vs the \
-         1-thread run of the same (m, n); results are bit-identical at \
-         every thread count."
+        "score streams 32·m·n bytes per round at f64 (24 at f32c), commit \
+         24·m·n (16 at f32c); achieved GB/s against this box's streaming \
+         bandwidth is the roofline ratio recorded in EXPERIMENTS.md §Perf. \
+         Speedups are vs the 1-thread run of the same (m, n, kernel, \
+         precision); results are bit-identical at every thread count \
+         within one (kernel, precision) pair."
     );
 }

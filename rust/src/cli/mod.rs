@@ -167,7 +167,7 @@ COMMANDS
   select     run greedy RLS on a dataset, print/save the sparse model
              --dataset NAME | --synthetic M,N   --k K  [--lambda L]
              [--loss 01|squared] [--engine native|pjrt] [--out FILE]
-             [--seed S] [--full] [--threads T]
+             [--seed S] [--full] [--threads T] [--precision f64|f32c]
              session control: [--stop k|plateau|time] [--patience N]
              [--min-rel-improvement F] [--time-budget-s S]
              [--warm-start I1,I2,...] [--progress]
@@ -215,8 +215,8 @@ COMMANDS
              deterministic pass served by the finished model
              --dataset NAME | --synthetic M,N  --k K  [--lambda L]
              [--loss 01|squared] [--engine native|pjrt] [--threads T]
-             [--serve-threads W] [--batch 64] [--queue-depth Q]
-             [--out FILE] [--progress]
+             [--precision f64|f32c] [--serve-threads W] [--batch 64]
+             [--queue-depth Q] [--out FILE] [--progress]
              session control + durability: same --stop family,
              --warm-start, --checkpoint-dir/--checkpoint-every/--resume
              flags as select (a version reaches the bus only after its
@@ -246,6 +246,12 @@ COMMANDS
 O(mn) per-round scans and cache updates (0 = all hardware threads, the
 default; 1 = serial). Selected features, criterion curves, and weights
 are bit-identical at every thread count — only the wall-clock changes.
+
+--precision f32c stores the greedy scan cache in f32 (halving its
+memory traffic) while accumulating in compensated f64; selections are
+deterministic per run but follow a different — tolerance-gated —
+trajectory than the default f64, so checkpoints never interchange
+across precisions. greedy selector, native engine, ram backend only.
 
 --backend mmap keeps X and the greedy cache in mmap-backed scratch
 files, streamed through per-worker windows of --window-mb MiB (default

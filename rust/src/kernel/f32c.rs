@@ -1,0 +1,272 @@
+//! Mixed-precision kernels: **f32 cache, f64 compensated accumulation**
+//! (`SelectionConfig::precision = F32c`).
+//!
+//! The per-round scan is bandwidth-bound and the cache matrix Cᵀ is the
+//! dominant stream (n×m, re-read every round), so storing it in f32
+//! halves the bytes per round. Everything else — `X`, the duals `a`,
+//! `d`, `y`, and all intermediate arithmetic — stays f64: cache
+//! elements are promoted on load and every contraction over them runs a
+//! Neumaier compensated f64 sum, so the only precision loss is the f32
+//! *storage rounding* of the cache itself (≈1 ulp per element per
+//! commit), not accumulation error.
+//!
+//! **Determinism contract.** These kernels walk each candidate's
+//! examples strictly sequentially (one compensated accumulator, no
+//! quad/pair blocking), so a candidate's score depends only on the
+//! cache bytes — not on tile width or its position in the active list.
+//! That makes thread-count, tile-width, and `score_of`-vs-`score_all`
+//! bit-identity *trivial* for this precision. The trajectory is NOT
+//! bit-comparable to [`super::scalar`] — it is tolerance-gated (see
+//! EXPERIMENTS.md §Mixed precision) and the precision participates in
+//! the checkpoint config fingerprint so runs cannot silently resume
+//! across representations. SIMD never applies here: f32c is
+//! scalar-only by contract, whatever the build features.
+
+use crate::metrics::Loss;
+
+/// Neumaier (improved Kahan) compensated f64 accumulator: tracks a
+/// running compensation for the low-order bits lost by each add. One
+/// extra add + comparison per term; immune to the `sum ≫ term` *and*
+/// `term ≫ sum` cancellation cases.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Neumaier {
+    s: f64,
+    comp: f64,
+}
+
+impl Neumaier {
+    /// Fresh accumulator at 0.
+    #[inline]
+    pub fn new() -> Neumaier {
+        Neumaier { s: 0.0, comp: 0.0 }
+    }
+
+    /// Add one term.
+    #[inline]
+    pub fn add(&mut self, term: f64) {
+        let t = self.s + term;
+        if self.s.abs() >= term.abs() {
+            self.comp += (self.s - t) + term;
+        } else {
+            self.comp += (term - t) + self.s;
+        }
+        self.s = t;
+    }
+
+    /// The compensated total.
+    #[inline]
+    pub fn finish(self) -> f64 {
+        self.s + self.comp
+    }
+}
+
+/// Demote an f64 slice to the f32 cache representation (round to
+/// nearest — the storage rounding the tolerance gate accounts for).
+pub fn demote(src: &[f64]) -> Vec<f32> {
+    src.iter().map(|&v| v as f32).collect()
+}
+
+/// Promote one f32 cache row into a reusable f64 staging buffer
+/// (commit-time `c_b` staging).
+pub fn promote_into(src: &[f32], dst: &mut Vec<f64>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| v as f64));
+}
+
+/// Compensated inner product of two f64 slices — the commit staging
+/// dots (`v·c_b`, `v·a`) of an f32c session.
+#[inline]
+pub fn neumaier_dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = Neumaier::new();
+    for (&x, &y) in a.iter().zip(b) {
+        acc.add(x * y);
+    }
+    acc.finish()
+}
+
+/// Compensated inner product of an f64 slice with an f32 cache row
+/// (elements promoted on load).
+#[inline]
+pub fn dot_promote(v: &[f64], c32: &[f32]) -> f64 {
+    debug_assert_eq!(v.len(), c32.len());
+    let mut acc = Neumaier::new();
+    for (&vj, &cj) in v.iter().zip(c32) {
+        acc.add(vj * (cj as f64));
+    }
+    acc.finish()
+}
+
+/// Score one candidate against an f32 cache row: the mixed-precision
+/// twin of [`super::scalar::score_one`]. Pass 1 accumulates v·c and
+/// v·a with compensated f64 sums; pass 2 accumulates the LOO loss the
+/// same way (the 0-1 count is exact integer arithmetic in f64 and needs
+/// no compensation).
+pub fn score_one(
+    v: &[f64],
+    c32: &[f32],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> f64 {
+    let mut vc = Neumaier::new();
+    let mut va = Neumaier::new();
+    for ((&vj, &cj), &aj) in v.iter().zip(c32).zip(a) {
+        let cj = cj as f64;
+        vc.add(vj * cj);
+        va.add(vj * aj);
+    }
+    let inv_denom = 1.0 / (1.0 + vc.finish());
+    let s = va.finish() * inv_denom;
+    match loss {
+        Loss::Squared => {
+            let mut e = Neumaier::new();
+            for ((&cj, &aj), &dj) in c32.iter().zip(a).zip(d) {
+                let cj = cj as f64;
+                let at = aj - cj * s;
+                let dt = dj - cj * cj * inv_denom;
+                let r = at / dt;
+                e.add(r * r);
+            }
+            e.finish()
+        }
+        Loss::ZeroOne => {
+            let mut e = 0.0;
+            for (((&cj, &aj), &dj), &yj) in
+                c32.iter().zip(a).zip(d).zip(y)
+            {
+                let cj = cj as f64;
+                let at = aj - cj * s;
+                let dt = dj - cj * cj * inv_denom;
+                if yj * at >= dt {
+                    e += 1.0;
+                }
+            }
+            e
+        }
+    }
+}
+
+/// Score a run of staged candidate rows, appending to `out`: one
+/// independent [`score_one`] per row — no quad blocking, so a score
+/// never depends on neighbors in the active list (see the module
+/// determinism contract).
+pub fn score_rows(
+    vrows: &[&[f64]],
+    crows: &[&[f32]],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    out: &mut Vec<f64>,
+) {
+    debug_assert_eq!(vrows.len(), crows.len());
+    for (v, c32) in vrows.iter().zip(crows) {
+        out.push(score_one(v, c32, a, d, y, loss));
+    }
+}
+
+/// Per-row body of the SMW rank-1 downdate on the f32 cache:
+/// `w = v·row` (compensated, promoted), then each element is updated in
+/// f64 and rounded back to f32 — one storage rounding per commit, the
+/// same order every run.
+#[inline]
+pub fn rank1_update_row(row32: &mut [f32], v: &[f64], u: &[f64], sign: f64) {
+    let w = dot_promote(v, row32);
+    if w != 0.0 {
+        let sw = sign * w;
+        for (r, &uj) in row32.iter_mut().zip(u) {
+            *r = ((*r as f64) + sw * uj) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn neumaier_recovers_cancelled_terms() {
+        // naive summation of [1e16, 1, -1e16] loses the 1.0 entirely
+        let mut naive = 0.0;
+        let mut comp = Neumaier::new();
+        for t in [1e16, 1.0, -1e16] {
+            naive += t;
+            comp.add(t);
+        }
+        assert_eq!(naive, 0.0);
+        assert_eq!(comp.finish(), 1.0);
+    }
+
+    #[test]
+    fn f32c_score_tracks_the_f64_reference() {
+        let mut rng = Pcg64::new(0xF32C, 1);
+        let m = 96;
+        let v: Vec<f64> =
+            (0..m).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let c: Vec<f64> =
+            (0..m).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let a: Vec<f64> =
+            (0..m).map(|_| rng.uniform_range(-0.5, 0.5)).collect();
+        let d: Vec<f64> =
+            (0..m).map(|_| rng.uniform_range(0.5, 1.5)).collect();
+        let y: Vec<f64> = (0..m)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let c32 = demote(&c);
+        for loss in [Loss::Squared, Loss::ZeroOne] {
+            let exact = super::super::scalar::score_one(
+                &v, &c, &a, &d, &y, loss,
+            );
+            let mixed = score_one(&v, &c32, &a, &d, &y, loss);
+            let tol = match loss {
+                // storage rounding only: ~1e-7 relative per element
+                Loss::Squared => 1e-4 * exact.abs().max(1.0),
+                // a misclassification count flips only at a boundary
+                Loss::ZeroOne => 1.0 + 1e-12,
+            };
+            assert!(
+                (exact - mixed).abs() <= tol,
+                "{loss:?}: exact={exact} mixed={mixed}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32c_rank1_update_is_deterministic_and_close() {
+        let mut rng = Pcg64::new(0xAB, 7);
+        let m = 64;
+        let base: Vec<f64> =
+            (0..m).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let v: Vec<f64> =
+            (0..m).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let u: Vec<f64> =
+            (0..m).map(|_| rng.uniform_range(-0.25, 0.25)).collect();
+        let mut row_a = demote(&base);
+        let mut row_b = row_a.clone();
+        rank1_update_row(&mut row_a, &v, &u, -1.0);
+        rank1_update_row(&mut row_b, &v, &u, -1.0);
+        assert_eq!(row_a, row_b, "same inputs must give identical bytes");
+        // f64 reference of the same update
+        let w = crate::linalg::dot(&v, &base);
+        for j in 0..m {
+            let reference = base[j] - w * u[j];
+            assert!(
+                (row_a[j] as f64 - reference).abs()
+                    <= 1e-5 * reference.abs().max(1.0),
+                "j={j}"
+            );
+        }
+    }
+
+    #[test]
+    fn promote_demote_round_trip() {
+        let src = vec![0.5, -1.25, 3.0, 0.0];
+        let c32 = demote(&src);
+        let mut back = Vec::new();
+        promote_into(&c32, &mut back);
+        assert_eq!(src, back, "exactly representable values round-trip");
+    }
+}

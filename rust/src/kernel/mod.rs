@@ -1,0 +1,362 @@
+//! The **compute-kernel tier**: every O(mn) inner loop of the selection
+//! engines lives here, behind one dispatch surface.
+//!
+//! Before this tier existed the scan/commit/downdate arithmetic was
+//! hand-copied three times (the in-RAM greedy engine, the LLC-tiled
+//! stored engine, and the `scan_candidates` selectors). Now there is
+//! exactly one implementation per *(kernel, precision)* pair:
+//!
+//! | module | selects | contract |
+//! |---|---|---|
+//! | [`scalar`] | default | **bit-exact reference** — frozen operation order |
+//! | [`simd`] | `--features simd` + [`KernelKind::Simd`] | bit-identical to [`scalar`] (lane layout mirrors the scalar accumulators) |
+//! | [`f32c`] | `SelectionConfig::precision = F32c` | f32 cache, f64 Neumaier accumulation; tolerance-gated vs f64 |
+//!
+//! **Determinism contract.** Dispatch is chosen once per session
+//! ([`KernelKind::active`] at state construction) and never varies
+//! mid-run. Shard boundaries and serial reduction order are owned by
+//! [`crate::parallel`] and are identical for every kernel, so results
+//! are bit-identical across thread counts, tile widths, and backends
+//! *per (kernel, precision) pair* — and the `(Simd, F64)` pair is
+//! additionally bit-identical to `(Scalar, F64)` by construction. See
+//! ARCHITECTURE.md §Compute kernels for the full table.
+
+pub mod f32c;
+pub mod scalar;
+#[cfg(feature = "simd")]
+pub mod simd;
+
+use crate::metrics::Loss;
+
+/// Which instruction-level implementation of the f64 kernels a session
+/// runs. Chosen once at state construction and fixed for the life of
+/// the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The hand-unrolled scalar reference (always available).
+    Scalar,
+    /// Portable `std::simd` lanes (`--features simd`, nightly). In a
+    /// build without the feature this variant still exists so callers
+    /// never need `cfg` — dispatch falls back to [`KernelKind::Scalar`]
+    /// arithmetic (which it equals bitwise anyway).
+    Simd,
+}
+
+impl KernelKind {
+    /// The kind this build activates by default: [`KernelKind::Simd`]
+    /// when compiled with `--features simd`, else
+    /// [`KernelKind::Scalar`].
+    pub fn active() -> KernelKind {
+        #[cfg(feature = "simd")]
+        {
+            KernelKind::Simd
+        }
+        #[cfg(not(feature = "simd"))]
+        {
+            KernelKind::Scalar
+        }
+    }
+
+    /// Stable lowercase name (microbench JSON rows, logs).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+        }
+    }
+}
+
+/// Numeric representation of the candidate cache Cᵀ — the
+/// `SelectionConfig::precision` knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f64 cache: the reference representation, bit-exact across
+    /// kernels/threads/tiles/backends.
+    #[default]
+    F64,
+    /// f32 cache with f64 compensated (Neumaier) accumulation: halves
+    /// cache bytes per round on the bandwidth-bound scan. Deterministic
+    /// per run (bit-identical across threads and tile widths), but a
+    /// *different* trajectory from [`Precision::F64`] — tolerance-gated
+    /// against it, never mixed: checkpoints carry the precision in
+    /// their config fingerprint. Greedy/native only.
+    F32c,
+}
+
+impl Precision {
+    /// Stable lowercase name (CLI value, microbench JSON, fingerprints).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32c => "f32c",
+        }
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Precision> {
+        match s {
+            "f64" => Ok(Precision::F64),
+            "f32c" => Ok(Precision::F32c),
+            other => Err(anyhow::anyhow!(
+                "unknown precision '{other}' (expected f64 or f32c)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Score one candidate (LOO criterion of S ∪ {i}, Algorithm 3 lines
+/// 8–17) with the selected kernel. See [`scalar::score_one`] for the
+/// reference semantics.
+#[inline]
+pub fn score_one(
+    kind: KernelKind,
+    v: &[f64],
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> f64 {
+    match kind {
+        KernelKind::Scalar => scalar::score_one(v, c, a, d, y, loss),
+        #[cfg(feature = "simd")]
+        KernelKind::Simd => simd::score_one(v, c, a, d, y, loss),
+        #[cfg(not(feature = "simd"))]
+        KernelKind::Simd => scalar::score_one(v, c, a, d, y, loss),
+    }
+}
+
+/// Score a quad of candidates in one fused pass with the selected
+/// kernel. See [`scalar::score_quad`].
+#[inline]
+pub fn score_quad(
+    kind: KernelKind,
+    v: [&[f64]; 4],
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> [f64; 4] {
+    match kind {
+        KernelKind::Scalar => scalar::score_quad(v, c, a, d, y, loss),
+        #[cfg(feature = "simd")]
+        KernelKind::Simd => simd::score_quad(v, c, a, d, y, loss),
+        #[cfg(not(feature = "simd"))]
+        KernelKind::Simd => scalar::score_quad(v, c, a, d, y, loss),
+    }
+}
+
+/// Column-tiled [`score_one`]; bit-identical to it for every tile width
+/// (accumulators carried across tiles). See [`scalar::score_one_tiled`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn score_one_tiled(
+    kind: KernelKind,
+    v: &[f64],
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+) -> f64 {
+    match kind {
+        KernelKind::Scalar => scalar::score_one_tiled(v, c, a, d, y, loss, tile),
+        #[cfg(feature = "simd")]
+        KernelKind::Simd => simd::score_one_tiled(v, c, a, d, y, loss, tile),
+        #[cfg(not(feature = "simd"))]
+        KernelKind::Simd => scalar::score_one_tiled(v, c, a, d, y, loss, tile),
+    }
+}
+
+/// Column-tiled [`score_quad`]; bit-identical to it for every tile
+/// width. See [`scalar::score_quad_tiled`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn score_quad_tiled(
+    kind: KernelKind,
+    v: [&[f64]; 4],
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+) -> [f64; 4] {
+    match kind {
+        KernelKind::Scalar => {
+            scalar::score_quad_tiled(v, c, a, d, y, loss, tile)
+        }
+        #[cfg(feature = "simd")]
+        KernelKind::Simd => simd::score_quad_tiled(v, c, a, d, y, loss, tile),
+        #[cfg(not(feature = "simd"))]
+        KernelKind::Simd => {
+            scalar::score_quad_tiled(v, c, a, d, y, loss, tile)
+        }
+    }
+}
+
+/// Score a run of candidates (rows already staged as slices) with the
+/// tiled kernels: quads first, then the scalar remainder — the same
+/// blocks-of-4 grouping as the untiled shard loop, so appending to
+/// `out` yields scores bit-identical to the untiled scan. Callers must
+/// only pass a non-multiple-of-4 run for the *final* run of the final
+/// shard (where the untiled scan also falls back to single candidates).
+#[allow(clippy::too_many_arguments)]
+pub fn score_rows_tiled(
+    kind: KernelKind,
+    vrows: &[&[f64]],
+    crows: &[&[f64]],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+    out: &mut Vec<f64>,
+) {
+    debug_assert_eq!(vrows.len(), crows.len());
+    let mut vq = vrows.chunks_exact(4);
+    let mut cq = crows.chunks_exact(4);
+    for (v4, c4) in (&mut vq).zip(&mut cq) {
+        let e = score_quad_tiled(
+            kind,
+            [v4[0], v4[1], v4[2], v4[3]],
+            [c4[0], c4[1], c4[2], c4[3]],
+            a,
+            d,
+            y,
+            loss,
+            tile,
+        );
+        out.extend_from_slice(&e);
+    }
+    for (v, c) in vq.remainder().iter().zip(cq.remainder()) {
+        out.push(score_one_tiled(kind, v, c, a, d, y, loss, tile));
+    }
+}
+
+/// Per-row body of the SMW rank-1 cache update with the selected
+/// kernel. See [`scalar::rank1_update_row`].
+#[inline]
+pub fn rank1_update_row(
+    kind: KernelKind,
+    row: &mut [f64],
+    v: &[f64],
+    u: &[f64],
+    sign: f64,
+) {
+    match kind {
+        KernelKind::Scalar => scalar::rank1_update_row(row, v, u, sign),
+        #[cfg(feature = "simd")]
+        KernelKind::Simd => simd::rank1_update_row(row, v, u, sign),
+        #[cfg(not(feature = "simd"))]
+        KernelKind::Simd => scalar::rank1_update_row(row, v, u, sign),
+    }
+}
+
+/// Column-tiled [`rank1_update_row`]; bit-identical to it for every
+/// tile width. See [`scalar::rank1_update_row_tiled`].
+#[inline]
+pub fn rank1_update_row_tiled(
+    kind: KernelKind,
+    row: &mut [f64],
+    v: &[f64],
+    u: &[f64],
+    sign: f64,
+    tile: usize,
+) {
+    match kind {
+        KernelKind::Scalar => {
+            scalar::rank1_update_row_tiled(row, v, u, sign, tile)
+        }
+        #[cfg(feature = "simd")]
+        KernelKind::Simd => simd::rank1_update_row_tiled(row, v, u, sign, tile),
+        #[cfg(not(feature = "simd"))]
+        KernelKind::Simd => {
+            scalar::rank1_update_row_tiled(row, v, u, sign, tile)
+        }
+    }
+}
+
+/// Inner product with the selected kernel — the staging dot of the
+/// backward scan and the commit paths. Bit-identical to
+/// [`crate::linalg::dot`] for every kind (the SIMD lanes mirror the
+/// scalar kernel's four partial sums).
+#[inline]
+pub fn dot(kind: KernelKind, x: &[f64], y: &[f64]) -> f64 {
+    match kind {
+        KernelKind::Scalar => crate::linalg::dot(x, y),
+        #[cfg(feature = "simd")]
+        KernelKind::Simd => simd::dot(x, y),
+        #[cfg(not(feature = "simd"))]
+        KernelKind::Simd => crate::linalg::dot(x, y),
+    }
+}
+
+// O(m)-per-round epilogues and fold-block helpers: serial by design
+// (they are not worth lanes and keeping them single-sourced keeps the
+// determinism argument trivial), so they dispatch to scalar for every
+// kernel kind.
+pub use scalar::{
+    fold_block_downdate, fold_tilde, removal_loss, update_a, update_ad,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_round_trips_through_strings() {
+        for p in [Precision::F64, Precision::F32c] {
+            let parsed: Precision = p.as_str().parse().unwrap();
+            assert_eq!(parsed, p);
+            assert_eq!(format!("{p}"), p.as_str());
+        }
+        assert!("f32".parse::<Precision>().is_err());
+        assert!("F64".parse::<Precision>().is_err());
+    }
+
+    #[test]
+    fn default_precision_is_f64() {
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn active_kind_matches_feature() {
+        #[cfg(feature = "simd")]
+        assert_eq!(KernelKind::active(), KernelKind::Simd);
+        #[cfg(not(feature = "simd"))]
+        assert_eq!(KernelKind::active(), KernelKind::Scalar);
+    }
+
+    /// Without the `simd` feature, Simd dispatch must be the scalar
+    /// kernel verbatim (with the feature, the dedicated equivalence
+    /// suite pins lane-vs-scalar bit-identity on real engines).
+    #[test]
+    fn simd_kind_always_resolves() {
+        let v = [0.5, -1.25, 2.0, 0.125, -0.75];
+        let c = [1.0, 0.5, -0.25, 2.0, 1.5];
+        let a = [0.1, -0.2, 0.3, -0.4, 0.5];
+        let d = [1.0, 1.1, 0.9, 1.2, 0.8];
+        let y = [1.0, -1.0, 1.0, -1.0, 1.0];
+        for loss in [Loss::Squared, Loss::ZeroOne] {
+            let s = score_one(KernelKind::Scalar, &v, &c, &a, &d, &y, loss);
+            let q = score_one(KernelKind::Simd, &v, &c, &a, &d, &y, loss);
+            assert_eq!(s.to_bits(), q.to_bits());
+        }
+        assert_eq!(
+            dot(KernelKind::Simd, &v, &c).to_bits(),
+            dot(KernelKind::Scalar, &v, &c).to_bits()
+        );
+    }
+}

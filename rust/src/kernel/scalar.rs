@@ -1,0 +1,497 @@
+//! Scalar f64 kernels — the **bit-exact reference** implementation.
+//!
+//! Every function in this module is the literal inner loop the engines
+//! ran before the kernel tier existed (moved here verbatim from
+//! `select::greedy`, `select::backward`, `select::nfold`, and
+//! `parallel`): the pairing, unroll factors, accumulator layout, and
+//! summation order are frozen. The SIMD module ([`super::simd`]) must
+//! reproduce these outputs bit-for-bit; the mixed-precision module
+//! ([`super::f32c`]) is tolerance-gated against them. Do not "clean up"
+//! the arithmetic here — the operation sequence *is* the contract.
+
+use crate::metrics::Loss;
+
+// ---------------------------------------------------------------------------
+// Greedy forward scan (Algorithm 3 lines 8–17)
+// ---------------------------------------------------------------------------
+
+/// Score one candidate: the O(m) inner body of the greedy scan. Two
+/// fused passes over (v, c): pass 1 accumulates v·c and v·a; pass 2
+/// accumulates the LOO loss.
+#[inline]
+pub fn score_one(
+    v: &[f64],
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> f64 {
+    // Fused pass 1: vc = v·c and va = v·a in one stream over v
+    // (iterator zips elide the bounds checks; 2 accumulator pairs keep
+    // the FMA ports busy).
+    let m = y.len();
+    let (mut vc0, mut vc1, mut va0, mut va1) = (0.0, 0.0, 0.0, 0.0);
+    let mut it = v.chunks_exact(2).zip(c.chunks_exact(2)).zip(a.chunks_exact(2));
+    for ((vv, cc), aa) in &mut it {
+        vc0 += vv[0] * cc[0];
+        vc1 += vv[1] * cc[1];
+        va0 += vv[0] * aa[0];
+        va1 += vv[1] * aa[1];
+    }
+    let (mut vc, mut va) = (vc0 + vc1, va0 + va1);
+    if m % 2 == 1 {
+        vc += v[m - 1] * c[m - 1];
+        va += v[m - 1] * a[m - 1];
+    }
+    // One reciprocal for the whole candidate (divisions are the hot-path
+    // bottleneck on this core — see EXPERIMENTS.md §Perf).
+    let inv_denom = 1.0 / (1.0 + vc);
+    let s = va * inv_denom; // u_j · va = c_j · s
+    loss_pass(c, a, d, y, loss, inv_denom, s)
+}
+
+/// Pass 2 of [`score_one`]: accumulate the LOO loss given the
+/// candidate's `inv_denom` and `s = va · inv_denom`. Split out so the
+/// SIMD kernel can share the exact serial accumulation for the phases
+/// it does not vectorize.
+#[inline]
+pub(super) fn loss_pass(
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    inv_denom: f64,
+    s: f64,
+) -> f64 {
+    match loss {
+        Loss::Squared => {
+            // residual y − p = ã/d̃ — a single division per example
+            let mut e = 0.0;
+            for ((&cj, &aj), &dj) in c.iter().zip(a).zip(d) {
+                let at = aj - cj * s;
+                let dt = dj - cj * cj * inv_denom;
+                let r = at / dt;
+                e += r * r;
+            }
+            e
+        }
+        Loss::ZeroOne => {
+            // division-free: d̃ = diag of an SPD inverse is positive, so
+            //   y·p ≤ 0  ⟺  1 − y·ã/d̃ ≤ 0  ⟺  y·ã ≥ d̃
+            let mut e = 0.0;
+            for (((&cj, &aj), &dj), &yj) in
+                c.iter().zip(a).zip(d).zip(y)
+            {
+                let at = aj - cj * s;
+                let dt = dj - cj * cj * inv_denom;
+                if yj * at >= dt {
+                    e += 1.0;
+                }
+            }
+            e
+        }
+    }
+}
+
+/// Score four candidates in one fused pass: the shared `a`, `d`, `y`
+/// streams are read once for the whole quad. Numerically identical to
+/// four [`score_one`] calls (same operation order per candidate).
+pub fn score_quad(
+    v: [&[f64]; 4],
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> [f64; 4] {
+    let m = y.len();
+    // pass 1: vc_t = v_t·c_t, va_t = v_t·a
+    let mut vc = [0.0f64; 4];
+    let mut va = [0.0f64; 4];
+    for j in 0..m {
+        let aj = a[j];
+        for t in 0..4 {
+            vc[t] += v[t][j] * c[t][j];
+            va[t] += v[t][j] * aj;
+        }
+    }
+    let mut inv_denom = [0.0f64; 4];
+    let mut s = [0.0f64; 4];
+    for t in 0..4 {
+        inv_denom[t] = 1.0 / (1.0 + vc[t]);
+        s[t] = va[t] * inv_denom[t];
+    }
+    // pass 2: loss accumulation, a/d/y loaded once per j
+    let mut e = [0.0f64; 4];
+    match loss {
+        Loss::Squared => {
+            for j in 0..m {
+                let (aj, dj) = (a[j], d[j]);
+                for t in 0..4 {
+                    let cj = c[t][j];
+                    let at = aj - cj * s[t];
+                    let dt = dj - cj * cj * inv_denom[t];
+                    let r = at / dt;
+                    e[t] += r * r;
+                }
+            }
+        }
+        Loss::ZeroOne => {
+            for j in 0..m {
+                let (aj, dj, yj) = (a[j], d[j], y[j]);
+                for t in 0..4 {
+                    let cj = c[t][j];
+                    let at = aj - cj * s[t];
+                    let dt = dj - cj * cj * inv_denom[t];
+                    if yj * at >= dt {
+                        e[t] += 1.0;
+                    }
+                }
+            }
+        }
+    }
+    e
+}
+
+/// Tiled variant of [`score_one`]: walks the example axis in `tile`
+/// wide blocks while **carrying the untiled kernel's accumulators
+/// across tiles**, so the floating-point operation sequence — pairing,
+/// summation order, the post-combine odd tail — is literally the serial
+/// one and the result is bit-identical for every `tile` (a multiple of
+/// 8, which keeps each tile start even so the pair walk never straddles
+/// a boundary).
+pub fn score_one_tiled(
+    v: &[f64],
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+) -> f64 {
+    debug_assert!(tile >= 8 && tile % 8 == 0, "tile must be a multiple of 8");
+    let m = y.len();
+    // pass 1: same 2-pair accumulators as score_one, carried across
+    // tiles; tiles have even length except possibly the last, so the
+    // pair grouping matches the untiled chunks_exact(2) walk.
+    let (mut vc0, mut vc1, mut va0, mut va1) = (0.0, 0.0, 0.0, 0.0);
+    let mut j0 = 0;
+    while j0 < m {
+        let j1 = (j0 + tile).min(m);
+        let mut it = v[j0..j1]
+            .chunks_exact(2)
+            .zip(c[j0..j1].chunks_exact(2))
+            .zip(a[j0..j1].chunks_exact(2));
+        for ((vv, cc), aa) in &mut it {
+            vc0 += vv[0] * cc[0];
+            vc1 += vv[1] * cc[1];
+            va0 += vv[0] * aa[0];
+            va1 += vv[1] * aa[1];
+        }
+        j0 = j1;
+    }
+    let (mut vc, mut va) = (vc0 + vc1, va0 + va1);
+    if m % 2 == 1 {
+        vc += v[m - 1] * c[m - 1];
+        va += v[m - 1] * a[m - 1];
+    }
+    let inv_denom = 1.0 / (1.0 + vc);
+    let s = va * inv_denom;
+    loss_pass_tiled(c, a, d, y, loss, inv_denom, s, tile)
+}
+
+/// Pass 2 of [`score_one_tiled`] (shared with the SIMD kernel): the
+/// per-example bodies are identical to [`loss_pass`], visited in the
+/// same `j` order — tiling only changes slice boundaries.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(super) fn loss_pass_tiled(
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    inv_denom: f64,
+    s: f64,
+    tile: usize,
+) -> f64 {
+    let m = y.len();
+    match loss {
+        Loss::Squared => {
+            let mut e = 0.0;
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + tile).min(m);
+                for ((&cj, &aj), &dj) in
+                    c[j0..j1].iter().zip(&a[j0..j1]).zip(&d[j0..j1])
+                {
+                    let at = aj - cj * s;
+                    let dt = dj - cj * cj * inv_denom;
+                    let r = at / dt;
+                    e += r * r;
+                }
+                j0 = j1;
+            }
+            e
+        }
+        Loss::ZeroOne => {
+            let mut e = 0.0;
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + tile).min(m);
+                for (((&cj, &aj), &dj), &yj) in c[j0..j1]
+                    .iter()
+                    .zip(&a[j0..j1])
+                    .zip(&d[j0..j1])
+                    .zip(&y[j0..j1])
+                {
+                    let at = aj - cj * s;
+                    let dt = dj - cj * cj * inv_denom;
+                    if yj * at >= dt {
+                        e += 1.0;
+                    }
+                }
+                j0 = j1;
+            }
+            e
+        }
+    }
+}
+
+/// Tiled variant of [`score_quad`]: the per-`j` bodies and the
+/// `vc`/`va`/`e` accumulators are the untiled quad kernel's, visited in
+/// the same order with the accumulators carried across tiles — bit-
+/// identical to it (and hence to four [`score_one`] calls) for every
+/// tile width.
+pub fn score_quad_tiled(
+    v: [&[f64]; 4],
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+) -> [f64; 4] {
+    debug_assert!(tile >= 8 && tile % 8 == 0, "tile must be a multiple of 8");
+    let m = y.len();
+    let mut vc = [0.0f64; 4];
+    let mut va = [0.0f64; 4];
+    let mut j0 = 0;
+    while j0 < m {
+        let j1 = (j0 + tile).min(m);
+        for j in j0..j1 {
+            let aj = a[j];
+            for t in 0..4 {
+                vc[t] += v[t][j] * c[t][j];
+                va[t] += v[t][j] * aj;
+            }
+        }
+        j0 = j1;
+    }
+    let mut inv_denom = [0.0f64; 4];
+    let mut s = [0.0f64; 4];
+    for t in 0..4 {
+        inv_denom[t] = 1.0 / (1.0 + vc[t]);
+        s[t] = va[t] * inv_denom[t];
+    }
+    let mut e = [0.0f64; 4];
+    match loss {
+        Loss::Squared => {
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + tile).min(m);
+                for j in j0..j1 {
+                    let (aj, dj) = (a[j], d[j]);
+                    for t in 0..4 {
+                        let cj = c[t][j];
+                        let at = aj - cj * s[t];
+                        let dt = dj - cj * cj * inv_denom[t];
+                        let r = at / dt;
+                        e[t] += r * r;
+                    }
+                }
+                j0 = j1;
+            }
+        }
+        Loss::ZeroOne => {
+            let mut j0 = 0;
+            while j0 < m {
+                let j1 = (j0 + tile).min(m);
+                for j in j0..j1 {
+                    let (aj, dj, yj) = (a[j], d[j], y[j]);
+                    for t in 0..4 {
+                        let cj = c[t][j];
+                        let at = aj - cj * s[t];
+                        let dt = dj - cj * cj * inv_denom[t];
+                        if yj * at >= dt {
+                            e[t] += 1.0;
+                        }
+                    }
+                }
+                j0 = j1;
+            }
+        }
+    }
+    e
+}
+
+// ---------------------------------------------------------------------------
+// Rank-1 cache downdate (Algorithm 3 lines 23–30, and the backward /
+// n-fold mirror images)
+// ---------------------------------------------------------------------------
+
+/// The fused serial a/d downdate of a commit/removal:
+/// `a[j] += sign·u[j]·va; d[j] += sign·u[j]·cb[j]` for every example j.
+/// `sign` is `-1.0` for the forward commit and `+1.0` for backward
+/// elimination's sign-flipped removal; the negation is exact in IEEE
+/// 754, so both directions match their historical fused loops bit-for-
+/// bit.
+#[inline]
+pub fn update_ad(
+    a: &mut [f64],
+    d: &mut [f64],
+    u: &[f64],
+    cb: &[f64],
+    va: f64,
+    sign: f64,
+) {
+    let sva = sign * va;
+    for j in 0..a.len() {
+        a[j] += u[j] * sva;
+        d[j] += sign * (u[j] * cb[j]);
+    }
+}
+
+/// The a-only variant of [`update_ad`] (the n-fold engine maintains
+/// fold blocks instead of `d`).
+#[inline]
+pub fn update_a(a: &mut [f64], u: &[f64], va: f64, sign: f64) {
+    let sva = sign * va;
+    for (aj, &uj) in a.iter_mut().zip(u) {
+        *aj += uj * sva;
+    }
+}
+
+/// Per-row body of the SMW rank-1 cache update:
+/// `w = v·row; if w ≠ 0 { row ← row + sign·w·u }`. The dot runs the
+/// 4-way-unrolled [`crate::linalg::dot`]; the update is elementwise.
+#[inline]
+pub fn rank1_update_row(row: &mut [f64], v: &[f64], u: &[f64], sign: f64) {
+    let w = crate::linalg::dot(v, row);
+    if w != 0.0 {
+        let sw = sign * w;
+        for (r, &uj) in row.iter_mut().zip(u) {
+            *r += sw * uj;
+        }
+    }
+}
+
+/// [`rank1_update_row`] evaluated in column tiles of `tile` elements (a
+/// positive multiple of 4): the dot pass carries its four partial sums
+/// across tiles ([`crate::linalg::dot_tiled`]) and the update pass
+/// walks the same tiles elementwise. Both phases perform literally the
+/// serial operation sequence, so results are bit-identical to the
+/// untiled update for every tile width.
+#[inline]
+pub fn rank1_update_row_tiled(
+    row: &mut [f64],
+    v: &[f64],
+    u: &[f64],
+    sign: f64,
+    tile: usize,
+) {
+    debug_assert!(tile > 0 && tile % 4 == 0, "tile must be a multiple of 4");
+    let row_len = row.len();
+    let w = crate::linalg::dot_tiled(v, row, tile);
+    if w != 0.0 {
+        let sw = sign * w;
+        let mut j0 = 0;
+        while j0 < row_len {
+            let j1 = (j0 + tile).min(row_len);
+            for (r, &uj) in row[j0..j1].iter_mut().zip(&u[j0..j1]) {
+                *r += sw * uj;
+            }
+            j0 = j1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backward elimination (sign-flipped SMW, paper §5)
+// ---------------------------------------------------------------------------
+
+/// Pass 2 of backward elimination's removal score: given `va = v·a` and
+/// the removal denominator `denom = 1 − v·c`, accumulate the LOO loss
+/// of S \ {i} over every example. Moved verbatim from
+/// `BackState::removal_score`.
+#[inline]
+pub fn removal_loss(
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    va: f64,
+    denom: f64,
+) -> f64 {
+    let mut e = 0.0;
+    for j in 0..y.len() {
+        let u = c[j] / denom;
+        let at = a[j] + u * va;
+        let dt = d[j] + u * c[j];
+        let p = y[j] - at / dt;
+        e += loss.eval(y[j], p);
+    }
+    e
+}
+
+// ---------------------------------------------------------------------------
+// n-fold CV criterion (paper §5)
+// ---------------------------------------------------------------------------
+
+/// One fold's tentative SMW downdate for the n-fold scan: for fold
+/// members `h`, compute `ã_H = a_H − u_H·va` into `at` and
+/// `B̃ = B − u_H c_Hᵀ` into `bt` (row-major |H|×|H|), with
+/// `u_r = c[h[r]] / denom`. Moved verbatim from
+/// `NFoldState::score_one`'s inner loop.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn fold_tilde(
+    c: &[f64],
+    a: &[f64],
+    h: &[usize],
+    block: &[f64],
+    denom: f64,
+    va: f64,
+    at: &mut [f64],
+    bt: &mut [f64],
+) {
+    let s = h.len();
+    for (r, &jr) in h.iter().enumerate() {
+        let u_r = c[jr] / denom;
+        at[r] = a[jr] - u_r * va;
+        for (t, &jt) in h.iter().enumerate() {
+            bt[r * s + t] = block[r * s + t] - u_r * c[jt];
+        }
+    }
+}
+
+/// Commit-time fold-block downdate of the n-fold engine:
+/// `B_h[r,t] −= u[h[r]]·cb[h[t]]` for one fold's block. Moved verbatim
+/// from `NFoldState::commit`.
+#[inline]
+pub fn fold_block_downdate(
+    block: &mut [f64],
+    h: &[usize],
+    u: &[f64],
+    cb: &[f64],
+) {
+    let s = h.len();
+    for (r, &jr) in h.iter().enumerate() {
+        for (t, &jt) in h.iter().enumerate() {
+            block[r * s + t] -= u[jr] * cb[jt];
+        }
+    }
+}

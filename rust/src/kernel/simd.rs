@@ -1,0 +1,421 @@
+//! Portable `std::simd` kernels (`--features simd`, nightly toolchain).
+//!
+//! **Bit-identical to [`super::scalar`] by construction.** The scalar
+//! kernels were written with explicit independent partial sums — the
+//! (vc0, vc1) even/odd pairs of the single-candidate scan, the four
+//! per-candidate lanes of the quad scan, the four partial sums of
+//! [`crate::linalg::dot`] — precisely so that each partial sum could
+//! become one SIMD lane. Every function here maps those accumulators
+//! onto `f64x2`/`f64x4` lanes, performs the same IEEE 754 operations
+//! per lane in the same order, and combines lanes with the scalar
+//! kernel's exact summation tree. IEEE 754 arithmetic is deterministic
+//! per operation, so lane-wise evaluation of independent accumulators
+//! is the *same computation*, not an approximation — the
+//! `kernel_equivalence` suite pins `to_bits()` equality across whole
+//! selection trajectories.
+//!
+//! Phases with a single serial accumulator (the loss pass of the
+//! one-candidate kernel) stay on the shared scalar helpers: vectorizing
+//! them would change the summation order and break bit-identity.
+
+use std::simd::cmp::SimdPartialOrd;
+use std::simd::{f64x2, f64x4};
+
+use super::scalar;
+use crate::metrics::Loss;
+
+/// SIMD twin of [`scalar::score_one`]: pass 1 runs the (vc0, vc1) /
+/// (va0, va1) accumulator pairs as `f64x2` lanes; pass 2 is the shared
+/// serial loss pass (single accumulator — kept scalar by contract).
+#[inline]
+pub fn score_one(
+    v: &[f64],
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> f64 {
+    let m = y.len();
+    let pairs = m / 2;
+    let mut vc_v = f64x2::splat(0.0);
+    let mut va_v = f64x2::splat(0.0);
+    for p in 0..pairs {
+        let j = p * 2;
+        let vv = f64x2::from_slice(&v[j..]);
+        let cc = f64x2::from_slice(&c[j..]);
+        let aa = f64x2::from_slice(&a[j..]);
+        vc_v += vv * cc;
+        va_v += vv * aa;
+    }
+    let vc_l = vc_v.to_array();
+    let va_l = va_v.to_array();
+    // lane 0 ≡ vc0/va0, lane 1 ≡ vc1/va1 — combine in the scalar order
+    let (mut vc, mut va) = (vc_l[0] + vc_l[1], va_l[0] + va_l[1]);
+    if m % 2 == 1 {
+        vc += v[m - 1] * c[m - 1];
+        va += v[m - 1] * a[m - 1];
+    }
+    let inv_denom = 1.0 / (1.0 + vc);
+    let s = va * inv_denom;
+    scalar::loss_pass(c, a, d, y, loss, inv_denom, s)
+}
+
+/// SIMD twin of [`scalar::score_one_tiled`]: the `f64x2` pass-1 lanes
+/// are carried across tiles (tile starts stay even — tiles are
+/// multiples of 8), the loss pass is the shared scalar tiled helper.
+pub fn score_one_tiled(
+    v: &[f64],
+    c: &[f64],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+) -> f64 {
+    debug_assert!(tile >= 8 && tile % 8 == 0, "tile must be a multiple of 8");
+    let m = y.len();
+    let mut vc_v = f64x2::splat(0.0);
+    let mut va_v = f64x2::splat(0.0);
+    let mut j0 = 0;
+    while j0 < m {
+        let j1 = (j0 + tile).min(m);
+        let pairs = (j1 - j0) / 2;
+        for p in 0..pairs {
+            let j = j0 + p * 2;
+            let vv = f64x2::from_slice(&v[j..]);
+            let cc = f64x2::from_slice(&c[j..]);
+            let aa = f64x2::from_slice(&a[j..]);
+            vc_v += vv * cc;
+            va_v += vv * aa;
+        }
+        j0 = j1;
+    }
+    let vc_l = vc_v.to_array();
+    let va_l = va_v.to_array();
+    let (mut vc, mut va) = (vc_l[0] + vc_l[1], va_l[0] + va_l[1]);
+    if m % 2 == 1 {
+        vc += v[m - 1] * c[m - 1];
+        va += v[m - 1] * a[m - 1];
+    }
+    let inv_denom = 1.0 / (1.0 + vc);
+    let s = va * inv_denom;
+    scalar::loss_pass_tiled(c, a, d, y, loss, inv_denom, s, tile)
+}
+
+/// SIMD twin of [`scalar::score_quad`]: one candidate per `f64x4` lane
+/// in **both** passes. The scalar quad kernel's `vc[4]`/`va[4]`/`e[4]`
+/// arrays are fully independent per candidate, so lane-wise evaluation
+/// is the identical operation sequence — including the per-lane
+/// divisions.
+pub fn score_quad(
+    v: [&[f64]; 4],
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+) -> [f64; 4] {
+    let m = y.len();
+    let mut vc_v = f64x4::splat(0.0);
+    let mut va_v = f64x4::splat(0.0);
+    for j in 0..m {
+        let vj =
+            f64x4::from_array([v[0][j], v[1][j], v[2][j], v[3][j]]);
+        let cj =
+            f64x4::from_array([c[0][j], c[1][j], c[2][j], c[3][j]]);
+        vc_v += vj * cj;
+        va_v += vj * f64x4::splat(a[j]);
+    }
+    let inv_denom_v = f64x4::splat(1.0) / (f64x4::splat(1.0) + vc_v);
+    let s_v = va_v * inv_denom_v;
+    quad_loss_pass(c, a, d, y, loss, inv_denom_v, s_v, 0, m, f64x4::splat(0.0))
+        .to_array()
+}
+
+/// SIMD twin of [`scalar::score_quad_tiled`]: pass-1 and loss lanes are
+/// carried across tiles exactly like the scalar accumulators.
+pub fn score_quad_tiled(
+    v: [&[f64]; 4],
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    tile: usize,
+) -> [f64; 4] {
+    debug_assert!(tile >= 8 && tile % 8 == 0, "tile must be a multiple of 8");
+    let m = y.len();
+    let mut vc_v = f64x4::splat(0.0);
+    let mut va_v = f64x4::splat(0.0);
+    let mut j0 = 0;
+    while j0 < m {
+        let j1 = (j0 + tile).min(m);
+        for j in j0..j1 {
+            let vj =
+                f64x4::from_array([v[0][j], v[1][j], v[2][j], v[3][j]]);
+            let cj =
+                f64x4::from_array([c[0][j], c[1][j], c[2][j], c[3][j]]);
+            vc_v += vj * cj;
+            va_v += vj * f64x4::splat(a[j]);
+        }
+        j0 = j1;
+    }
+    let inv_denom_v = f64x4::splat(1.0) / (f64x4::splat(1.0) + vc_v);
+    let s_v = va_v * inv_denom_v;
+    let mut e_v = f64x4::splat(0.0);
+    let mut j0 = 0;
+    while j0 < m {
+        let j1 = (j0 + tile).min(m);
+        e_v = quad_loss_pass(c, a, d, y, loss, inv_denom_v, s_v, j0, j1, e_v);
+        j0 = j1;
+    }
+    e_v.to_array()
+}
+
+/// Loss pass of the quad kernels over examples `[j0, j1)`, lanes
+/// accumulating into (and returning) `e_v`. The 0-1 arm adds a
+/// mask-selected 0.0/1.0 per lane: adding +0.0 to a non-negative count
+/// is exact, so lanes match the scalar kernel's conditional `e += 1.0`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn quad_loss_pass(
+    c: [&[f64]; 4],
+    a: &[f64],
+    d: &[f64],
+    y: &[f64],
+    loss: Loss,
+    inv_denom_v: f64x4,
+    s_v: f64x4,
+    j0: usize,
+    j1: usize,
+    mut e_v: f64x4,
+) -> f64x4 {
+    match loss {
+        Loss::Squared => {
+            for j in j0..j1 {
+                let cj = f64x4::from_array([
+                    c[0][j], c[1][j], c[2][j], c[3][j],
+                ]);
+                let at = f64x4::splat(a[j]) - cj * s_v;
+                let dt = f64x4::splat(d[j]) - cj * cj * inv_denom_v;
+                let r = at / dt;
+                e_v += r * r;
+            }
+        }
+        Loss::ZeroOne => {
+            let one = f64x4::splat(1.0);
+            let zero = f64x4::splat(0.0);
+            for j in j0..j1 {
+                let cj = f64x4::from_array([
+                    c[0][j], c[1][j], c[2][j], c[3][j],
+                ]);
+                let at = f64x4::splat(a[j]) - cj * s_v;
+                let dt = f64x4::splat(d[j]) - cj * cj * inv_denom_v;
+                let hit = (f64x4::splat(y[j]) * at).simd_ge(dt);
+                e_v += hit.select(one, zero);
+            }
+        }
+    }
+    e_v
+}
+
+/// SIMD twin of [`crate::linalg::dot`]: the four partial sums s0..s3
+/// become one `f64x4`, combined in the scalar kernel's left-to-right
+/// order, scalar tail unchanged.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut s_v = f64x4::splat(0.0);
+    for ch in 0..chunks {
+        let i = ch * 4;
+        s_v += f64x4::from_slice(&a[i..]) * f64x4::from_slice(&b[i..]);
+    }
+    let l = s_v.to_array();
+    let mut s = l[0] + l[1] + l[2] + l[3];
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// SIMD twin of [`crate::linalg::dot_tiled`]: the `f64x4` partial sums
+/// are carried across tiles, combine + tail as in [`dot`].
+#[inline]
+pub fn dot_tiled(a: &[f64], b: &[f64], tile: usize) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(tile > 0 && tile % 4 == 0, "tile must be a multiple of 4");
+    let n = a.len();
+    let quads = n / 4;
+    let tile_q = tile / 4;
+    let mut s_v = f64x4::splat(0.0);
+    let mut q0 = 0;
+    while q0 < quads {
+        let q1 = (q0 + tile_q).min(quads);
+        for ch in q0..q1 {
+            let i = ch * 4;
+            s_v += f64x4::from_slice(&a[i..]) * f64x4::from_slice(&b[i..]);
+        }
+        q0 = q1;
+    }
+    let l = s_v.to_array();
+    let mut s = l[0] + l[1] + l[2] + l[3];
+    for i in quads * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// SIMD twin of [`scalar::rank1_update_row`]: `w` via [`dot`] (bit-
+/// identical), then the elementwise update in `f64x4` quads + scalar
+/// tail — each element's `row[j] + sign·w·u[j]` is an independent
+/// operation, so vector width cannot change any result bit.
+#[inline]
+pub fn rank1_update_row(row: &mut [f64], v: &[f64], u: &[f64], sign: f64) {
+    let w = dot(v, row);
+    if w != 0.0 {
+        let sw = sign * w;
+        axpy_quads(row, u, sw, 0, row.len());
+    }
+}
+
+/// SIMD twin of [`scalar::rank1_update_row_tiled`]: dot lanes carried
+/// across tiles, elementwise update per tile.
+#[inline]
+pub fn rank1_update_row_tiled(
+    row: &mut [f64],
+    v: &[f64],
+    u: &[f64],
+    sign: f64,
+    tile: usize,
+) {
+    debug_assert!(tile > 0 && tile % 4 == 0, "tile must be a multiple of 4");
+    let row_len = row.len();
+    let w = dot_tiled(v, row, tile);
+    if w != 0.0 {
+        let sw = sign * w;
+        let mut j0 = 0;
+        while j0 < row_len {
+            let j1 = (j0 + tile).min(row_len);
+            axpy_quads(row, u, sw, j0, j1);
+            j0 = j1;
+        }
+    }
+}
+
+/// `row[j] += sw·u[j]` for `j` in `[j0, j1)`, vectorized in quads with
+/// a scalar tail. Elementwise — bit-identical to the serial loop.
+#[inline]
+fn axpy_quads(row: &mut [f64], u: &[f64], sw: f64, j0: usize, j1: usize) {
+    let sw_v = f64x4::splat(sw);
+    let quads = (j1 - j0) / 4;
+    for q in 0..quads {
+        let i = j0 + q * 4;
+        let r = f64x4::from_slice(&row[i..]);
+        let uu = f64x4::from_slice(&u[i..]);
+        (r + sw_v * uu).copy_to_slice(&mut row[i..i + 4]);
+    }
+    for i in (j0 + quads * 4)..j1 {
+        row[i] += sw * u[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn gen_vec(rng: &mut Pcg64, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.uniform_range(-1.0, 1.0)).collect()
+    }
+
+    /// Lane kernels vs scalar reference, every odd/even length, both
+    /// losses, tiled and untiled — `to_bits` equality, no tolerance.
+    #[test]
+    fn simd_kernels_match_scalar_bitwise() {
+        let mut rng = Pcg64::new(0x51AD, 1);
+        for m in [1, 2, 3, 7, 8, 15, 16, 33, 64, 129] {
+            let v: Vec<Vec<f64>> =
+                (0..4).map(|_| gen_vec(&mut rng, m)).collect();
+            let c: Vec<Vec<f64>> =
+                (0..4).map(|_| gen_vec(&mut rng, m)).collect();
+            let a = gen_vec(&mut rng, m);
+            let d: Vec<f64> =
+                (0..m).map(|_| rng.uniform_range(0.5, 1.5)).collect();
+            let y: Vec<f64> = (0..m)
+                .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+                .collect();
+            for loss in [Loss::Squared, Loss::ZeroOne] {
+                let s_ref =
+                    scalar::score_one(&v[0], &c[0], &a, &d, &y, loss);
+                let s_simd = score_one(&v[0], &c[0], &a, &d, &y, loss);
+                assert_eq!(s_ref.to_bits(), s_simd.to_bits(), "m={m}");
+
+                let vq = [&v[0][..], &v[1][..], &v[2][..], &v[3][..]];
+                let cq = [&c[0][..], &c[1][..], &c[2][..], &c[3][..]];
+                let q_ref = scalar::score_quad(vq, cq, &a, &d, &y, loss);
+                let q_simd = score_quad(vq, cq, &a, &d, &y, loss);
+                for t in 0..4 {
+                    assert_eq!(
+                        q_ref[t].to_bits(),
+                        q_simd[t].to_bits(),
+                        "m={m} t={t}"
+                    );
+                }
+                if m > 8 {
+                    let t_ref = scalar::score_one_tiled(
+                        &v[0], &c[0], &a, &d, &y, loss, 8,
+                    );
+                    let t_simd =
+                        score_one_tiled(&v[0], &c[0], &a, &d, &y, loss, 8);
+                    assert_eq!(t_ref.to_bits(), t_simd.to_bits(), "m={m}");
+                    let tq_ref = scalar::score_quad_tiled(
+                        vq, cq, &a, &d, &y, loss, 8,
+                    );
+                    let tq_simd =
+                        score_quad_tiled(vq, cq, &a, &d, &y, loss, 8);
+                    for t in 0..4 {
+                        assert_eq!(tq_ref[t].to_bits(), tq_simd[t].to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dot_and_rank1_match_reference_bitwise() {
+        let mut rng = Pcg64::new(0xD07, 1);
+        for n in [1, 3, 4, 5, 8, 17, 64, 130] {
+            let a = gen_vec(&mut rng, n);
+            let b = gen_vec(&mut rng, n);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                crate::linalg::dot(&a, &b).to_bits(),
+                "n={n}"
+            );
+            if n > 4 {
+                assert_eq!(
+                    dot_tiled(&a, &b, 4).to_bits(),
+                    crate::linalg::dot_tiled(&a, &b, 4).to_bits(),
+                    "n={n}"
+                );
+            }
+            let u = gen_vec(&mut rng, n);
+            let v = gen_vec(&mut rng, n);
+            let mut row_ref = a.clone();
+            let mut row_simd = a.clone();
+            scalar::rank1_update_row(&mut row_ref, &v, &u, -1.0);
+            rank1_update_row(&mut row_simd, &v, &u, -1.0);
+            assert_eq!(row_ref, row_simd, "n={n}");
+            if n > 4 {
+                let mut t_ref = b.clone();
+                let mut t_simd = b.clone();
+                scalar::rank1_update_row_tiled(&mut t_ref, &v, &u, 1.0, 4);
+                rank1_update_row_tiled(&mut t_simd, &v, &u, 1.0, 4);
+                assert_eq!(t_ref, t_simd, "n={n}");
+            }
+        }
+    }
+}

@@ -80,11 +80,13 @@
 //! hot-swap server ([`coordinator::stream`]) — see the module docs.
 
 #![warn(missing_docs)]
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod kernel;
 pub mod linalg;
 pub mod metrics;
 pub mod parallel;

@@ -20,7 +20,8 @@ use greedy_rls::select::checkpoint::{
 };
 use greedy_rls::select::{
     drive, greedy::GreedyRls, lowrank::LowRankLsSvm, run_to_completion,
-    NoopObserver, Observer, SelectionConfig, Selector, Session, StopPolicy,
+    NoopObserver, Observer, Precision, SelectionConfig, Selector, Session,
+    StopPolicy,
 };
 
 fn main() {
@@ -85,8 +86,8 @@ fn open_runtime_if(engine: EngineKind) -> Result<Option<Runtime>> {
 }
 
 /// Parse the shared selection-config flags (`--k/--lambda/--loss/--stop
-/// family/--threads/--tile-cols`) — identical between `select` and
-/// `train-serve`.
+/// family/--threads/--tile-cols/--precision`) — identical between
+/// `select` and `train-serve`.
 fn parse_selection_config(args: &Args) -> Result<SelectionConfig> {
     let stop = cli::parse_stop_policy(args)?;
     Ok(SelectionConfig::builder()
@@ -96,6 +97,7 @@ fn parse_selection_config(args: &Args) -> Result<SelectionConfig> {
         .stop(stop)
         .threads(args.get_or("threads", 0usize)?)
         .tile_cols(args.get_or("tile-cols", 0usize)?)
+        .precision(args.get_or("precision", Precision::F64)?)
         .build())
 }
 
@@ -271,8 +273,11 @@ fn print_problem_header(
         match cfg.stop {
             StopPolicy::KBudget(b) if b == usize::MAX => String::new(),
             other => format!(" stop={other:?}"),
-        }
+        },
     );
+    if cfg.precision != Precision::F64 {
+        println!("precision={}", cfg.precision);
+    }
 }
 
 /// Print the selection outcome lines shared by `select` and

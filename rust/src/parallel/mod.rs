@@ -149,13 +149,16 @@ where
 /// a scoped worker. `f` receives the chunk's first row index and the
 /// mutable chunk. Rows are disjoint and each receives the identical
 /// serial update, so the result is bit-identical at any thread count.
-pub fn for_each_row_chunk<F>(
+/// Generic over the element type so the same sharding drives both the
+/// f64 cache and the mixed-precision f32 cache.
+pub fn for_each_row_chunk<T, F>(
     threads: usize,
-    buf: &mut [f64],
+    buf: &mut [T],
     row_len: usize,
     f: F,
 ) where
-    F: Fn(usize, &mut [f64]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(row_len > 0, "row_len must be positive");
     assert_eq!(buf.len() % row_len, 0, "buffer not row-aligned");
@@ -170,7 +173,7 @@ pub fn for_each_row_chunk<F>(
     }
     let rows_per = (rows + t - 1) / t;
     let fref = &f;
-    let mut chunks: Vec<(usize, &mut [f64])> = Vec::with_capacity(t);
+    let mut chunks: Vec<(usize, &mut [T])> = Vec::with_capacity(t);
     let mut start_row = 0;
     for chunk in buf.chunks_mut(rows_per * row_len) {
         let rows_here = chunk.len() / row_len;
@@ -193,11 +196,15 @@ pub fn for_each_row_chunk<F>(
 /// Shared SMW rank-1 row update — the O(mn) cache downdate of the
 /// greedy-family engines: for every row r of row-major `buf`,
 /// `w = v·r; if w ≠ 0 { r ← r + sign·w·u }`, rows sharded across
-/// `threads` workers. `sign` is `-1.0` for the forward commit downdate
-/// and `+1.0` for backward elimination's sign-flipped removal; the
-/// negation is exact in IEEE 754, so both directions stay bit-identical
-/// to their fused serial loops.
+/// `threads` workers. The per-row arithmetic is
+/// [`crate::kernel::rank1_update_row`] dispatched by `kind` (every kind
+/// is bit-identical — the SIMD lanes mirror the scalar partial sums).
+/// `sign` is `-1.0` for the forward commit downdate and `+1.0` for
+/// backward elimination's sign-flipped removal; the negation is exact
+/// in IEEE 754, so both directions stay bit-identical to their fused
+/// serial loops.
 pub fn rank1_row_update(
+    kind: crate::kernel::KernelKind,
     threads: usize,
     buf: &mut [f64],
     row_len: usize,
@@ -207,27 +214,23 @@ pub fn rank1_row_update(
 ) {
     for_each_row_chunk(threads, buf, row_len, |_, chunk| {
         for row in chunk.chunks_exact_mut(row_len) {
-            let w = crate::linalg::dot(v, row);
-            if w != 0.0 {
-                let sw = sign * w;
-                for (r, &uj) in row.iter_mut().zip(u) {
-                    *r += sw * uj;
-                }
-            }
+            crate::kernel::rank1_update_row(kind, row, v, u, sign);
         }
     });
 }
 
 /// The per-row body of [`rank1_row_update`], evaluated in column tiles
-/// of `tile` elements (a positive multiple of 4): the dot pass carries
-/// its four partial sums across tiles ([`crate::linalg::dot_tiled`])
-/// and the update pass walks the same tiles elementwise. Both phases
-/// perform literally the serial operation sequence per row, so results
-/// are bit-identical to the untiled update for every tile width.
+/// of `tile` elements (a positive multiple of 4) via
+/// [`crate::kernel::rank1_update_row_tiled`]: the dot pass carries its
+/// four partial sums across tiles and the update pass walks the same
+/// tiles elementwise. Both phases perform literally the serial
+/// operation sequence per row, so results are bit-identical to the
+/// untiled update for every tile width.
 ///
 /// Exposed separately so the out-of-core store can run it inside its
 /// own windowed row blocks (`MatrixStore::par_update_row_blocks`).
 pub fn rank1_block_update(
+    kind: crate::kernel::KernelKind,
     chunk: &mut [f64],
     row_len: usize,
     v: &[f64],
@@ -237,18 +240,7 @@ pub fn rank1_block_update(
 ) {
     debug_assert!(tile > 0 && tile % 4 == 0, "tile must be a multiple of 4");
     for row in chunk.chunks_exact_mut(row_len) {
-        let w = crate::linalg::dot_tiled(v, row, tile);
-        if w != 0.0 {
-            let sw = sign * w;
-            let mut j0 = 0;
-            while j0 < row_len {
-                let j1 = (j0 + tile).min(row_len);
-                for (r, &uj) in row[j0..j1].iter_mut().zip(&u[j0..j1]) {
-                    *r += sw * uj;
-                }
-                j0 = j1;
-            }
-        }
+        crate::kernel::rank1_update_row_tiled(kind, row, v, u, sign, tile);
     }
 }
 
@@ -256,7 +248,9 @@ pub fn rank1_block_update(
 /// to the untiled update, otherwise rows run through
 /// [`rank1_block_update`]. Either way the result is bit-identical —
 /// tiling only reorders memory traffic, never arithmetic.
+#[allow(clippy::too_many_arguments)]
 pub fn rank1_row_update_tiled(
+    kind: crate::kernel::KernelKind,
     threads: usize,
     buf: &mut [f64],
     row_len: usize,
@@ -266,11 +260,31 @@ pub fn rank1_row_update_tiled(
     tile: usize,
 ) {
     if tile == 0 {
-        rank1_row_update(threads, buf, row_len, v, u, sign);
+        rank1_row_update(kind, threads, buf, row_len, v, u, sign);
         return;
     }
     for_each_row_chunk(threads, buf, row_len, |_, chunk| {
-        rank1_block_update(chunk, row_len, v, u, sign, tile);
+        rank1_block_update(kind, chunk, row_len, v, u, sign, tile);
+    });
+}
+
+/// Mixed-precision twin of [`rank1_row_update`]: the same row sharding
+/// over an **f32** cache, per-row arithmetic in
+/// [`crate::kernel::f32c::rank1_update_row`] (compensated f64 dot, one
+/// storage rounding per element). Scalar-only by the f32c contract —
+/// there is no kernel-kind dispatch here.
+pub fn rank1_row_update_f32c(
+    threads: usize,
+    buf: &mut [f32],
+    row_len: usize,
+    v: &[f64],
+    u: &[f64],
+    sign: f64,
+) {
+    for_each_row_chunk(threads, buf, row_len, |_, chunk| {
+        for row in chunk.chunks_exact_mut(row_len) {
+            crate::kernel::f32c::rank1_update_row(row, v, u, sign);
+        }
     });
 }
 
@@ -421,7 +435,15 @@ mod tests {
             }
             for t in [1usize, 2, 3, 4] {
                 let mut got = base.clone();
-                rank1_row_update(t, &mut got, m, &v, &u, sign);
+                rank1_row_update(
+                    crate::kernel::KernelKind::active(),
+                    t,
+                    &mut got,
+                    m,
+                    &v,
+                    &u,
+                    sign,
+                );
                 for (i, (a, b)) in want.iter().zip(&got).enumerate() {
                     assert_eq!(
                         a.to_bits(),
@@ -440,14 +462,15 @@ mod tests {
         let u: Vec<f64> = (0..m).map(|j| 1.0 / (j + 3) as f64).collect();
         let base: Vec<f64> =
             (0..rows * m).map(|i| (i as f64).sin()).collect();
+        let kind = crate::kernel::KernelKind::active();
         for sign in [-1.0, 1.0] {
             let mut want = base.clone();
-            rank1_row_update(1, &mut want, m, &v, &u, sign);
+            rank1_row_update(kind, 1, &mut want, m, &v, &u, sign);
             for tile in [0usize, 4, 8, 16, 40] {
                 for t in [1usize, 2, 4] {
                     let mut got = base.clone();
                     rank1_row_update_tiled(
-                        t, &mut got, m, &v, &u, sign, tile,
+                        kind, t, &mut got, m, &v, &u, sign, tile,
                     );
                     for (a, b) in want.iter().zip(&got) {
                         assert_eq!(
@@ -458,6 +481,24 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// The f32 cache downdate must be thread-count independent exactly
+    /// like the f64 one: disjoint rows, identical per-row arithmetic.
+    #[test]
+    fn f32c_rank1_update_matches_serial_at_any_thread_count() {
+        let (rows, m) = (7usize, 13usize);
+        let v: Vec<f64> = (0..m).map(|j| (j as f64 * 0.9).sin()).collect();
+        let u: Vec<f64> = (0..m).map(|j| 1.0 / (j + 2) as f64).collect();
+        let base: Vec<f32> =
+            (0..rows * m).map(|i| (i as f32 * 0.31).cos()).collect();
+        let mut want = base.clone();
+        rank1_row_update_f32c(1, &mut want, m, &v, &u, -1.0);
+        for t in [2usize, 3, 4] {
+            let mut got = base.clone();
+            rank1_row_update_f32c(t, &mut got, m, &v, &u, -1.0);
+            assert_eq!(want, got, "threads={t}");
         }
     }
 

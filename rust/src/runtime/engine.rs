@@ -114,6 +114,13 @@ impl<'a> EngineCore<'a> {
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(m == y.len(), "shape mismatch");
+        // the compiled artifacts are f64-only; mixed precision is the
+        // native in-RAM greedy engine's feature
+        ensure!(
+            cfg.precision == crate::kernel::Precision::F64,
+            "--precision {} is not supported by the pjrt engine",
+            cfg.precision,
+        );
         // Pad feature-major x (n × m) into the (nb rows × mb cols) bucket.
         let mut x_pad = vec![0.0; nb * mb];
         for i in 0..n {

@@ -30,6 +30,7 @@ use super::session::{
     CoreStep, PolicySession, Session, SessionCore, SessionSelector,
 };
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use crate::kernel::{self, KernelKind};
 use crate::linalg::{dot, spd_inverse, Matrix};
 use crate::metrics::Loss;
 
@@ -48,6 +49,9 @@ struct BackState {
     in_s: Vec<bool>,
     /// Resolved worker-thread count for the per-round scans/updates.
     threads: usize,
+    /// Compute-kernel dispatch, fixed at construction
+    /// ([`KernelKind::active`]).
+    kernel: KernelKind,
 }
 
 impl BackState {
@@ -66,7 +70,16 @@ impl BackState {
         }
         let a = g.matvec(y);
         let d = (0..m).map(|j| g[(j, j)]).collect();
-        Ok(BackState { m, n, ct, a, d, in_s: vec![true; n], threads: 1 })
+        Ok(BackState {
+            m,
+            n,
+            ct,
+            a,
+            d,
+            in_s: vec![true; n],
+            threads: 1,
+            kernel: KernelKind::active(),
+        })
     }
 
     /// LOO criterion of S \ {i} for one member i ([`BIG`] when the
@@ -77,21 +90,13 @@ impl BackState {
         let m = self.m;
         let v = x.row(i);
         let c = &self.ct[i * m..(i + 1) * m];
-        let vc = dot(v, c);
-        let va = dot(v, &self.a);
+        let vc = kernel::dot(self.kernel, v, c);
+        let va = kernel::dot(self.kernel, v, &self.a);
         let denom = 1.0 - vc;
         if denom.abs() < 1e-12 {
             return BIG; // numerically unremovable this round
         }
-        let mut e = 0.0;
-        for j in 0..m {
-            let u = c[j] / denom;
-            let at = self.a[j] + u * va;
-            let dt = self.d[j] + u * c[j];
-            let p = y[j] - at / dt;
-            e += loss.eval(y[j], p);
-        }
-        e
+        kernel::removal_loss(c, &self.a, &self.d, y, loss, va, denom)
     }
 
     /// LOO criterion of S \ {i} for every member i — independent per
@@ -111,14 +116,13 @@ impl BackState {
         let m = self.m;
         let v = x.row(b);
         let cb = self.ct[b * m..(b + 1) * m].to_vec();
-        let denom = 1.0 - dot(v, &cb);
+        let denom = 1.0 - kernel::dot(self.kernel, v, &cb);
         let u: Vec<f64> = cb.iter().map(|&c| c / denom).collect();
-        let va = dot(v, &self.a);
-        for j in 0..m {
-            self.a[j] += u[j] * va;
-            self.d[j] += u[j] * cb[j];
-        }
+        let va = kernel::dot(self.kernel, v, &self.a);
+        // sign-flipped commit: a += u·va, d += u∘c_b
+        kernel::update_ad(&mut self.a, &mut self.d, &u, &cb, va, 1.0);
         crate::parallel::rank1_row_update(
+            self.kernel,
             self.threads,
             &mut self.ct,
             m,
@@ -206,6 +210,7 @@ impl SessionSelector for BackwardElimination {
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
+        super::require_f64(cfg, "backward-elimination")?;
         let mut st = BackState::init(x, y, cfg.lambda)?;
         st.threads = crate::parallel::resolve(cfg.threads);
         let core = BackwardCore {

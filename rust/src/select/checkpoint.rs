@@ -90,7 +90,12 @@ pub struct Fingerprint {
 /// `threads` is deliberately **excluded**: the parallel execution layer is
 /// bit-deterministic (see [`crate::parallel`]), so a run checkpointed at
 /// one thread count legitimately resumes at another — the CI gauntlet
-/// exercises exactly that.
+/// exercises exactly that. `tile_cols` is excluded for the same reason.
+/// `precision` **is included** (as a trailing marker, written only when
+/// it differs from the f64 default so every pre-existing fingerprint is
+/// unchanged): an f32c trajectory is deterministic but *different* from
+/// the f64 one, so runs at different precisions must never silently
+/// resume each other.
 pub fn config_hash(cfg: &SelectionConfig) -> u64 {
     let mut h = Fnv64::new();
     h.write(b"greedy-rls-config-v1");
@@ -114,6 +119,10 @@ pub fn config_hash(cfg: &SelectionConfig) -> u64 {
             h.write_usize(patience);
             h.write_f64(min_rel_improvement);
         }
+    }
+    if cfg.precision != crate::kernel::Precision::F64 {
+        h.write(b"precision");
+        h.write(cfg.precision.as_str().as_bytes());
     }
     h.finish()
 }
@@ -919,6 +928,25 @@ mod tests {
             config_hash(&base),
             config_hash(&SelectionConfig {
                 stop: StopPolicy::KBudget(3),
+                ..base
+            })
+        );
+    }
+
+    /// f32c must fingerprint differently from f64 (so mixed-precision
+    /// runs can never resume each other), while the f64 default keeps
+    /// the legacy hash (the marker is written only when non-default).
+    #[test]
+    fn config_hash_separates_precisions_and_keeps_legacy_f64() {
+        use crate::kernel::Precision;
+        let base = cfg(4);
+        assert_eq!(base.precision, Precision::F64);
+        let mixed = SelectionConfig { precision: Precision::F32c, ..base };
+        assert_ne!(config_hash(&base), config_hash(&mixed));
+        assert_eq!(
+            config_hash(&base),
+            config_hash(&SelectionConfig {
+                precision: Precision::F64,
                 ..base
             })
         );

@@ -152,6 +152,7 @@ impl SessionSelector for FloatingForward {
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
+        super::require_f64(cfg, "floating-forward")?;
         let core = FloatingCore {
             x,
             y,

@@ -241,6 +241,7 @@ impl SessionSelector for Foba {
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(self.nu > 0.0, "ν must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
+        super::require_f64(cfg, "foba")?;
         let mut core = FobaCore {
             x,
             y,

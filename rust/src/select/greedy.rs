@@ -20,6 +20,13 @@
 //! engine at any thread count (see EXPERIMENTS.md §Perf for the
 //! serial-vs-parallel measurement protocol).
 //!
+//! The inner loops themselves live in the [`crate::kernel`] tier: this
+//! module owns the *shape* of the passes (sharding, quad grouping,
+//! staging, the active list) and dispatches the arithmetic once per
+//! session by [`KernelKind`] (scalar reference vs opt-in SIMD — bit-
+//! identical) and [`Precision`] (f64 reference vs the f32-cache
+//! mixed-precision representation — tolerance-gated).
+//!
 //! The same state type backs the PJRT engine's numerical cross-checks and
 //! the microbenchmarks, so `GreedyState` is public.
 
@@ -32,6 +39,7 @@ use super::session::{
 };
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
 use crate::data::storage::{MatrixStore, StorageOptions};
+use crate::kernel::{self, KernelKind, Precision};
 use crate::linalg::{dot, Matrix};
 use crate::metrics::Loss;
 
@@ -43,7 +51,9 @@ pub struct GreedyState {
     pub n: usize,
     /// λ.
     pub lambda: f64,
-    /// Cᵀ, row i = C[:, i] (n × m, row-major).
+    /// Cᵀ, row i = C[:, i] (n × m, row-major). **Empty when
+    /// `precision == F32c`** — the cache then lives in the private f32
+    /// buffer and is only reachable through the scoring/commit API.
     pub ct: Vec<f64>,
     /// Dual variables a = G y.
     pub a: Vec<f64>,
@@ -68,6 +78,20 @@ pub struct GreedyState {
     /// accumulators across tiles, so each candidate sees the serial
     /// operation sequence exactly; tiling only localizes memory traffic.
     pub tile_cols: usize,
+    /// Which f64 kernel implementation scores and commits run
+    /// ([`KernelKind::active`] after [`GreedyState::init`]; override via
+    /// [`GreedyState::with_kernel`]). Every kind is bit-identical —
+    /// this exists so equivalence tests can force the scalar reference
+    /// inside a `--features simd` build.
+    pub kernel: KernelKind,
+    /// Cache representation ([`Precision::F64`] after
+    /// [`GreedyState::init`]; switch via
+    /// [`GreedyState::with_precision`]). Read-only reflection — flip it
+    /// only through the builder, which converts the cache.
+    pub precision: Precision,
+    /// The f32 cache (row i = C[:, i]) when `precision == F32c`; empty
+    /// otherwise.
+    ct32: Vec<f32>,
     /// Ascending active-candidate list, maintained incrementally by
     /// [`GreedyState::commit`] (never rebuilt from `cand_mask` — the
     /// rebuild was an O(n) per-call allocation on the hot path).
@@ -106,6 +130,9 @@ impl GreedyState {
             selected: Vec::new(),
             threads: 1,
             tile_cols: 0,
+            kernel: KernelKind::active(),
+            precision: Precision::F64,
+            ct32: Vec::new(),
             active: (0..n).collect(),
             scratch_cb: Vec::with_capacity(m),
             scratch_u: Vec::with_capacity(m),
@@ -134,6 +161,33 @@ impl GreedyState {
         self
     }
 
+    /// Pin the f64 kernel implementation (default:
+    /// [`KernelKind::active`], i.e. SIMD in a `--features simd` build).
+    /// Every kind yields bit-identical scores, caches, and selections —
+    /// the lane kernels mirror the scalar accumulators exactly — so
+    /// this is a test/bench knob, not a semantic one.
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Select the cache representation. [`Precision::F64`] is a no-op;
+    /// [`Precision::F32c`] demotes the cache to f32 **now** (one
+    /// rounding per element) and routes every subsequent scan/commit
+    /// through the compensated mixed-precision kernels
+    /// ([`crate::kernel::f32c`]). Call this once, immediately after
+    /// [`GreedyState::init`], before any rounds — converting a
+    /// mid-session cache would compound rounding with downdate history.
+    /// There is no way back to f64: the dropped bits are gone.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        if precision == Precision::F32c && self.precision == Precision::F64 {
+            self.ct32 = kernel::f32c::demote(&self.ct);
+            self.ct = Vec::new();
+        }
+        self.precision = precision;
+        self
+    }
+
     /// LOO criterion of S ∪ {i} for every candidate i (Algorithm 3 lines
     /// 8–17, all candidates). Selected/masked candidates score [`BIG`].
     ///
@@ -156,6 +210,21 @@ impl GreedyState {
         let per_range = crate::parallel::map_ranges(&ranges, |r| {
             let slice = &active[r];
             let mut out = Vec::with_capacity(slice.len());
+            if self.precision == Precision::F32c {
+                // Mixed precision: every candidate is scored by one
+                // independent sequential pass (no quad coupling), so
+                // shard boundaries can't shift any result bit.
+                let vrows: Vec<&[f64]> =
+                    slice.iter().map(|&i| x.row(i)).collect();
+                let crows: Vec<&[f32]> = slice
+                    .iter()
+                    .map(|&i| &self.ct32[i * m..(i + 1) * m])
+                    .collect();
+                kernel::f32c::score_rows(
+                    &vrows, &crows, &self.a, &self.d, y, loss, &mut out,
+                );
+                return out;
+            }
             if self.tile_cols > 0 {
                 let vrows: Vec<&[f64]> =
                     slice.iter().map(|&i| x.row(i)).collect();
@@ -163,7 +232,8 @@ impl GreedyState {
                     .iter()
                     .map(|&i| &self.ct[i * m..(i + 1) * m])
                     .collect();
-                score_rows_tiled(
+                kernel::score_rows_tiled(
+                    self.kernel,
                     &vrows,
                     &crows,
                     &self.a,
@@ -178,7 +248,8 @@ impl GreedyState {
             let mut chunks = slice.chunks_exact(4);
             for quad in &mut chunks {
                 let [i0, i1, i2, i3] = [quad[0], quad[1], quad[2], quad[3]];
-                let e = score_candidates4(
+                let e = kernel::score_quad(
+                    self.kernel,
                     [x.row(i0), x.row(i1), x.row(i2), x.row(i3)],
                     [
                         &self.ct[i0 * m..(i0 + 1) * m],
@@ -196,7 +267,15 @@ impl GreedyState {
             for &i in chunks.remainder() {
                 let v = x.row(i);
                 let c = &self.ct[i * m..(i + 1) * m];
-                out.push(score_candidate(v, c, &self.a, &self.d, y, loss));
+                out.push(kernel::score_one(
+                    self.kernel,
+                    v,
+                    c,
+                    &self.a,
+                    &self.d,
+                    y,
+                    loss,
+                ));
             }
             out
         });
@@ -233,6 +312,14 @@ impl GreedyState {
             // xtask-allow: no-panic-hot-path -- documented panic contract:
             // callers only pass candidates drawn from the active set.
             .expect("candidate must be active");
+        if self.precision == Precision::F32c {
+            // f32c scores are per-candidate sequential passes — no quad
+            // coupling, so the single-candidate call IS the score_all
+            // arithmetic for `b`.
+            let v = x.row(b);
+            let c = &self.ct32[b * m..(b + 1) * m];
+            return kernel::f32c::score_one(v, c, &self.a, &self.d, y, loss);
+        }
         let quad_start = pos - pos % 4;
         if quad_start + 4 <= active.len() {
             let [i0, i1, i2, i3] = [
@@ -241,7 +328,8 @@ impl GreedyState {
                 active[quad_start + 2],
                 active[quad_start + 3],
             ];
-            let e = score_candidates4(
+            let e = kernel::score_quad(
+                self.kernel,
                 [x.row(i0), x.row(i1), x.row(i2), x.row(i3)],
                 [
                     &self.ct[i0 * m..(i0 + 1) * m],
@@ -258,7 +346,7 @@ impl GreedyState {
         } else {
             let v = x.row(b);
             let c = &self.ct[b * m..(b + 1) * m];
-            score_candidate(v, c, &self.a, &self.d, y, loss)
+            kernel::score_one(self.kernel, v, c, &self.a, &self.d, y, loss)
         }
     }
 
@@ -276,33 +364,55 @@ impl GreedyState {
         let m = self.m;
         let v = x.row(b);
         let mut cb = std::mem::take(&mut self.scratch_cb);
-        cb.clear();
-        cb.extend_from_slice(&self.ct[b * m..(b + 1) * m]);
-        let denom = 1.0 + dot(v, &cb);
+        let (denom, va) = if self.precision == Precision::F32c {
+            // Stage c_b promoted to f64 once; the f32-sourced dots run
+            // the compensated accumulator like the scan.
+            kernel::f32c::promote_into(&self.ct32[b * m..(b + 1) * m], &mut cb);
+            (
+                1.0 + kernel::f32c::neumaier_dot(v, &cb),
+                kernel::f32c::neumaier_dot(v, &self.a),
+            )
+        } else {
+            cb.clear();
+            cb.extend_from_slice(&self.ct[b * m..(b + 1) * m]);
+            (
+                1.0 + kernel::dot(self.kernel, v, &cb),
+                kernel::dot(self.kernel, v, &self.a),
+            )
+        };
         let mut u = std::mem::take(&mut self.scratch_u);
         u.clear();
         u.extend(cb.iter().map(|&c| c / denom));
 
-        // a ← a − u (vᵀ a);  d ← d − u ∘ c_b
-        let va = dot(v, &self.a);
-        for j in 0..m {
-            self.a[j] -= u[j] * va;
-            self.d[j] -= u[j] * cb[j];
-        }
+        // a ← a − u (vᵀ a);  d ← d − u ∘ c_b (fused, serial — the O(m)
+        // epilogue stays on the scalar kernel for every kind/precision)
+        kernel::update_ad(&mut self.a, &mut self.d, &u, &cb, va, -1.0);
 
         // C ← C − u (vᵀ C): per candidate row i of Cᵀ, w_i = v·C[:,i],
         // then ct[i] ← ct[i] − w_i · u. One fused pass per row, rows
         // sharded across workers; tile_cols = 0 dispatches to the
         // untiled update, any other width is bit-identical to it.
-        crate::parallel::rank1_row_update_tiled(
-            self.threads,
-            &mut self.ct,
-            m,
-            v,
-            &u,
-            -1.0,
-            self.tile_cols,
-        );
+        if self.precision == Precision::F32c {
+            crate::parallel::rank1_row_update_f32c(
+                self.threads,
+                &mut self.ct32,
+                m,
+                v,
+                &u,
+                -1.0,
+            );
+        } else {
+            crate::parallel::rank1_row_update_tiled(
+                self.kernel,
+                self.threads,
+                &mut self.ct,
+                m,
+                v,
+                &u,
+                -1.0,
+                self.tile_cols,
+            );
+        }
 
         self.cand_mask[b] = 0.0;
         let pos = self
@@ -327,129 +437,6 @@ impl GreedyState {
     }
 }
 
-/// Score one candidate: the O(m) inner body shared by the native engine
-/// and the microbenchmarks. Two fused passes over (v, c):
-/// pass 1 accumulates v·c and v·a; pass 2 accumulates the LOO loss.
-#[inline]
-pub fn score_candidate(
-    v: &[f64],
-    c: &[f64],
-    a: &[f64],
-    d: &[f64],
-    y: &[f64],
-    loss: Loss,
-) -> f64 {
-    // Fused pass 1: vc = v·c and va = v·a in one stream over v
-    // (iterator zips elide the bounds checks; 2 accumulator pairs keep
-    // the FMA ports busy).
-    let m = y.len();
-    let (mut vc0, mut vc1, mut va0, mut va1) = (0.0, 0.0, 0.0, 0.0);
-    let mut it = v.chunks_exact(2).zip(c.chunks_exact(2)).zip(a.chunks_exact(2));
-    for ((vv, cc), aa) in &mut it {
-        vc0 += vv[0] * cc[0];
-        vc1 += vv[1] * cc[1];
-        va0 += vv[0] * aa[0];
-        va1 += vv[1] * aa[1];
-    }
-    let (mut vc, mut va) = (vc0 + vc1, va0 + va1);
-    if m % 2 == 1 {
-        vc += v[m - 1] * c[m - 1];
-        va += v[m - 1] * a[m - 1];
-    }
-    // One reciprocal for the whole candidate (divisions are the hot-path
-    // bottleneck on this core — see EXPERIMENTS.md §Perf).
-    let inv_denom = 1.0 / (1.0 + vc);
-    let s = va * inv_denom; // u_j · va = c_j · s
-    match loss {
-        Loss::Squared => {
-            // residual y − p = ã/d̃ — a single division per example
-            let mut e = 0.0;
-            for ((&cj, &aj), &dj) in c.iter().zip(a).zip(d) {
-                let at = aj - cj * s;
-                let dt = dj - cj * cj * inv_denom;
-                let r = at / dt;
-                e += r * r;
-            }
-            e
-        }
-        Loss::ZeroOne => {
-            // division-free: d̃ = diag of an SPD inverse is positive, so
-            //   y·p ≤ 0  ⟺  1 − y·ã/d̃ ≤ 0  ⟺  y·ã ≥ d̃
-            let mut e = 0.0;
-            for (((&cj, &aj), &dj), &yj) in
-                c.iter().zip(a).zip(d).zip(y)
-            {
-                let at = aj - cj * s;
-                let dt = dj - cj * cj * inv_denom;
-                if yj * at >= dt {
-                    e += 1.0;
-                }
-            }
-            e
-        }
-    }
-}
-
-/// Score four candidates in one fused pass: the shared `a`, `d`, `y`
-/// streams are read once for the whole quad. Numerically identical to
-/// four [`score_candidate`] calls (same operation order per candidate).
-fn score_candidates4(
-    v: [&[f64]; 4],
-    c: [&[f64]; 4],
-    a: &[f64],
-    d: &[f64],
-    y: &[f64],
-    loss: Loss,
-) -> [f64; 4] {
-    let m = y.len();
-    // pass 1: vc_t = v_t·c_t, va_t = v_t·a
-    let mut vc = [0.0f64; 4];
-    let mut va = [0.0f64; 4];
-    for j in 0..m {
-        let aj = a[j];
-        for t in 0..4 {
-            vc[t] += v[t][j] * c[t][j];
-            va[t] += v[t][j] * aj;
-        }
-    }
-    let mut inv_denom = [0.0f64; 4];
-    let mut s = [0.0f64; 4];
-    for t in 0..4 {
-        inv_denom[t] = 1.0 / (1.0 + vc[t]);
-        s[t] = va[t] * inv_denom[t];
-    }
-    // pass 2: loss accumulation, a/d/y loaded once per j
-    let mut e = [0.0f64; 4];
-    match loss {
-        Loss::Squared => {
-            for j in 0..m {
-                let (aj, dj) = (a[j], d[j]);
-                for t in 0..4 {
-                    let cj = c[t][j];
-                    let at = aj - cj * s[t];
-                    let dt = dj - cj * cj * inv_denom[t];
-                    let r = at / dt;
-                    e[t] += r * r;
-                }
-            }
-        }
-        Loss::ZeroOne => {
-            for j in 0..m {
-                let (aj, dj, yj) = (a[j], d[j], y[j]);
-                for t in 0..4 {
-                    let cj = c[t][j];
-                    let at = aj - cj * s[t];
-                    let dt = dj - cj * cj * inv_denom[t];
-                    if yj * at >= dt {
-                        e[t] += 1.0;
-                    }
-                }
-            }
-        }
-    }
-    e
-}
-
 /// Normalize a requested tile width against row length `m`: `0` stays 0
 /// (untiled); anything else is floored to a multiple of 8 (minimum 8);
 /// widths covering all of `m` collapse back to 0 because one tile is
@@ -466,208 +453,6 @@ fn normalize_tile(tile_cols: usize, m: usize) -> usize {
         0
     } else {
         t
-    }
-}
-
-/// Tiled variant of [`score_candidate`]: walks the example axis in
-/// `tile` wide blocks while **carrying the untiled kernel's accumulators
-/// across tiles**, so the floating-point operation sequence — pairing,
-/// summation order, the post-combine odd tail — is literally the serial
-/// one and the result is bit-identical for every `tile` (a multiple of 8,
-/// which keeps each tile start even so the pair walk never straddles a
-/// boundary).
-fn score_candidate_tiled(
-    v: &[f64],
-    c: &[f64],
-    a: &[f64],
-    d: &[f64],
-    y: &[f64],
-    loss: Loss,
-    tile: usize,
-) -> f64 {
-    debug_assert!(tile >= 8 && tile % 8 == 0, "tile must be a multiple of 8");
-    let m = y.len();
-    // pass 1: same 2-pair accumulators as score_candidate, carried
-    // across tiles; tiles have even length except possibly the last, so
-    // the pair grouping matches the untiled chunks_exact(2) walk.
-    let (mut vc0, mut vc1, mut va0, mut va1) = (0.0, 0.0, 0.0, 0.0);
-    let mut j0 = 0;
-    while j0 < m {
-        let j1 = (j0 + tile).min(m);
-        let mut it = v[j0..j1]
-            .chunks_exact(2)
-            .zip(c[j0..j1].chunks_exact(2))
-            .zip(a[j0..j1].chunks_exact(2));
-        for ((vv, cc), aa) in &mut it {
-            vc0 += vv[0] * cc[0];
-            vc1 += vv[1] * cc[1];
-            va0 += vv[0] * aa[0];
-            va1 += vv[1] * aa[1];
-        }
-        j0 = j1;
-    }
-    let (mut vc, mut va) = (vc0 + vc1, va0 + va1);
-    if m % 2 == 1 {
-        vc += v[m - 1] * c[m - 1];
-        va += v[m - 1] * a[m - 1];
-    }
-    let inv_denom = 1.0 / (1.0 + vc);
-    let s = va * inv_denom;
-    // pass 2: per-example bodies identical to score_candidate, visited
-    // in the same j order — tiling only changes slice boundaries.
-    match loss {
-        Loss::Squared => {
-            let mut e = 0.0;
-            let mut j0 = 0;
-            while j0 < m {
-                let j1 = (j0 + tile).min(m);
-                for ((&cj, &aj), &dj) in
-                    c[j0..j1].iter().zip(&a[j0..j1]).zip(&d[j0..j1])
-                {
-                    let at = aj - cj * s;
-                    let dt = dj - cj * cj * inv_denom;
-                    let r = at / dt;
-                    e += r * r;
-                }
-                j0 = j1;
-            }
-            e
-        }
-        Loss::ZeroOne => {
-            let mut e = 0.0;
-            let mut j0 = 0;
-            while j0 < m {
-                let j1 = (j0 + tile).min(m);
-                for (((&cj, &aj), &dj), &yj) in c[j0..j1]
-                    .iter()
-                    .zip(&a[j0..j1])
-                    .zip(&d[j0..j1])
-                    .zip(&y[j0..j1])
-                {
-                    let at = aj - cj * s;
-                    let dt = dj - cj * cj * inv_denom;
-                    if yj * at >= dt {
-                        e += 1.0;
-                    }
-                }
-                j0 = j1;
-            }
-            e
-        }
-    }
-}
-
-/// Tiled variant of [`score_candidates4`]: the per-`j` bodies and the
-/// `vc`/`va`/`e` accumulators are the untiled quad kernel's, visited in
-/// the same order with the accumulators carried across tiles — bit-
-/// identical to it (and hence to four [`score_candidate`] calls) for
-/// every tile width.
-fn score_candidates4_tiled(
-    v: [&[f64]; 4],
-    c: [&[f64]; 4],
-    a: &[f64],
-    d: &[f64],
-    y: &[f64],
-    loss: Loss,
-    tile: usize,
-) -> [f64; 4] {
-    debug_assert!(tile >= 8 && tile % 8 == 0, "tile must be a multiple of 8");
-    let m = y.len();
-    let mut vc = [0.0f64; 4];
-    let mut va = [0.0f64; 4];
-    let mut j0 = 0;
-    while j0 < m {
-        let j1 = (j0 + tile).min(m);
-        for j in j0..j1 {
-            let aj = a[j];
-            for t in 0..4 {
-                vc[t] += v[t][j] * c[t][j];
-                va[t] += v[t][j] * aj;
-            }
-        }
-        j0 = j1;
-    }
-    let mut inv_denom = [0.0f64; 4];
-    let mut s = [0.0f64; 4];
-    for t in 0..4 {
-        inv_denom[t] = 1.0 / (1.0 + vc[t]);
-        s[t] = va[t] * inv_denom[t];
-    }
-    let mut e = [0.0f64; 4];
-    match loss {
-        Loss::Squared => {
-            let mut j0 = 0;
-            while j0 < m {
-                let j1 = (j0 + tile).min(m);
-                for j in j0..j1 {
-                    let (aj, dj) = (a[j], d[j]);
-                    for t in 0..4 {
-                        let cj = c[t][j];
-                        let at = aj - cj * s[t];
-                        let dt = dj - cj * cj * inv_denom[t];
-                        let r = at / dt;
-                        e[t] += r * r;
-                    }
-                }
-                j0 = j1;
-            }
-        }
-        Loss::ZeroOne => {
-            let mut j0 = 0;
-            while j0 < m {
-                let j1 = (j0 + tile).min(m);
-                for j in j0..j1 {
-                    let (aj, dj, yj) = (a[j], d[j], y[j]);
-                    for t in 0..4 {
-                        let cj = c[t][j];
-                        let at = aj - cj * s[t];
-                        let dt = dj - cj * cj * inv_denom[t];
-                        if yj * at >= dt {
-                            e[t] += 1.0;
-                        }
-                    }
-                }
-                j0 = j1;
-            }
-        }
-    }
-    e
-}
-
-/// Score a run of candidates (rows already staged as slices) with the
-/// tiled kernels: quads first, then the scalar remainder — the same
-/// blocks-of-4 grouping as the untiled shard loop, so appending to `out`
-/// yields scores bit-identical to [`GreedyState::score_all`]. Callers
-/// must only pass a non-multiple-of-4 run for the *final* run of the
-/// final shard (where the untiled scan also falls back to scalars).
-#[allow(clippy::too_many_arguments)]
-fn score_rows_tiled(
-    vrows: &[&[f64]],
-    crows: &[&[f64]],
-    a: &[f64],
-    d: &[f64],
-    y: &[f64],
-    loss: Loss,
-    tile: usize,
-    out: &mut Vec<f64>,
-) {
-    debug_assert_eq!(vrows.len(), crows.len());
-    let mut vq = vrows.chunks_exact(4);
-    let mut cq = crows.chunks_exact(4);
-    for (v4, c4) in (&mut vq).zip(&mut cq) {
-        let e = score_candidates4_tiled(
-            [v4[0], v4[1], v4[2], v4[3]],
-            [c4[0], c4[1], c4[2], c4[3]],
-            a,
-            d,
-            y,
-            loss,
-            tile,
-        );
-        out.extend_from_slice(&e);
-    }
-    for (v, c) in vq.remainder().iter().zip(cq.remainder()) {
-        out.push(score_candidate_tiled(v, c, a, d, y, loss, tile));
     }
 }
 
@@ -694,6 +479,11 @@ pub(crate) struct StoredGreedyState {
     /// kernels unconditionally (they are bit-identical to the untiled
     /// ones, and windows make untiled walks pointless).
     tile_cols: usize,
+    /// f64 kernel dispatch, fixed at init ([`KernelKind::active`]);
+    /// every kind is bit-identical, so the stored engine matches the
+    /// in-RAM engine whatever the build features. The stored engine is
+    /// f64-only — [`StoredGreedyCore::new`] rejects `F32c`.
+    kernel: KernelKind,
     active: Vec<usize>,
     scratch_v: Vec<f64>,
     scratch_cb: Vec<f64>,
@@ -755,6 +545,7 @@ impl StoredGreedyState {
             selected: Vec::new(),
             threads: 1,
             tile_cols: tile,
+            kernel: KernelKind::active(),
             active: (0..n).collect(),
             scratch_v: Vec::with_capacity(m),
             scratch_cb: Vec::with_capacity(m),
@@ -811,9 +602,9 @@ impl StoredGreedyState {
                         stage_v[..unit].iter().map(|v| v.as_slice()).collect();
                     let crows: Vec<&[f64]> =
                         stage_c[..unit].iter().map(|c| c.as_slice()).collect();
-                    score_rows_tiled(
-                        &vrows, &crows, &self.a, &self.d, y, loss, tile,
-                        &mut out,
+                    kernel::score_rows_tiled(
+                        self.kernel, &vrows, &crows, &self.a, &self.d, y,
+                        loss, tile, &mut out,
                     );
                     // xtask-allow: serial-float-reduction -- usize quad cursor, not a float accumulator
                     pos += unit;
@@ -842,9 +633,9 @@ impl StoredGreedyState {
                             .iter()
                             .map(|&i| &cs[(i - row0) * m..(i - row0 + 1) * m])
                             .collect();
-                        score_rows_tiled(
-                            &vrows, &crows, &self.a, &self.d, y, loss, tile,
-                            &mut out,
+                        kernel::score_rows_tiled(
+                            self.kernel, &vrows, &crows, &self.a, &self.d,
+                            y, loss, tile, &mut out,
                         );
                     })
                 })??;
@@ -884,7 +675,8 @@ impl StoredGreedyState {
             self.ct.read_row_into(active[quad_start + t], &mut stage_c[t])?;
         }
         if unit == 4 {
-            let e = score_candidates4(
+            let e = kernel::score_quad(
+                self.kernel,
                 [&stage_v[0], &stage_v[1], &stage_v[2], &stage_v[3]],
                 [&stage_c[0], &stage_c[1], &stage_c[2], &stage_c[3]],
                 &self.a,
@@ -895,7 +687,8 @@ impl StoredGreedyState {
             Ok(e[pos - quad_start])
         } else {
             let t = pos - quad_start;
-            Ok(score_candidate(
+            Ok(kernel::score_one(
+                self.kernel,
                 &stage_v[t],
                 &stage_c[t],
                 &self.a,
@@ -920,20 +713,20 @@ impl StoredGreedyState {
         x.read_row_into(b, &mut v)?;
         let mut cb = std::mem::take(&mut self.scratch_cb);
         self.ct.read_row_into(b, &mut cb)?;
-        let denom = 1.0 + dot(&v, &cb);
+        let denom = 1.0 + kernel::dot(self.kernel, &v, &cb);
         let mut u = std::mem::take(&mut self.scratch_u);
         u.clear();
         u.extend(cb.iter().map(|&c| c / denom));
 
-        let va = dot(&v, &self.a);
-        for j in 0..m {
-            self.a[j] -= u[j] * va;
-            self.d[j] -= u[j] * cb[j];
-        }
+        let va = kernel::dot(self.kernel, &v, &self.a);
+        kernel::update_ad(&mut self.a, &mut self.d, &u, &cb, va, -1.0);
 
         let tile = self.tile_cols;
+        let kind = self.kernel;
         self.ct.par_update_row_blocks(self.threads, |_, slab| {
-            crate::parallel::rank1_block_update(slab, m, &v, &u, -1.0, tile);
+            crate::parallel::rank1_block_update(
+                kind, slab, m, &v, &u, -1.0, tile,
+            );
         })?;
 
         self.cand_mask[b] = 0.0;
@@ -984,6 +777,11 @@ impl StoredGreedyCore {
         ensure!(cfg.k <= x.rows(), "k={} > n={}", cfg.k, x.rows());
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.row_len() == y.len(), "shape mismatch");
+        ensure!(
+            cfg.precision == Precision::F64,
+            "--precision f32c runs on the in-RAM backend only (the stored \
+             cache streams f64 windows)"
+        );
         // Streamed finiteness check — same contract and message as the
         // in-RAM validation, one window at a time.
         let step = x.window_rows().max(1);
@@ -1130,7 +928,8 @@ impl<'a> GreedyCore<'a> {
         );
         let st = GreedyState::init(&x, &y, cfg.lambda)
             .with_threads(cfg.threads)
-            .with_tile_cols(cfg.tile_cols);
+            .with_tile_cols(cfg.tile_cols)
+            .with_precision(cfg.precision);
         Ok(GreedyCore {
             loss: cfg.loss,
             k: cfg.k,
@@ -1317,8 +1116,9 @@ mod tests {
                 for i in 0..n {
                     let v = x.row(i);
                     let c = &st.ct[i * m..(i + 1) * m];
-                    slow[i] =
-                        score_candidate(v, c, &st.a, &st.d, &y, loss);
+                    slow[i] = crate::kernel::scalar::score_one(
+                        v, c, &st.a, &st.d, &y, loss,
+                    );
                 }
                 assert_close(&fast, &slow, 1e-12, "quad vs scalar");
             }
@@ -1809,5 +1609,110 @@ mod tests {
         assert!(GreedyRls
             .begin_stored(store, ds.y.clone(), &cfg, &opts)
             .is_err());
+    }
+
+    /// Forcing the scalar kernel must not change anything: in a default
+    /// build it IS the dispatch target, and in a `--features simd` build
+    /// the lane kernels are pinned bit-identical to it.
+    #[test]
+    fn forced_scalar_kernel_matches_active_kernel_bitwise() {
+        let ds = crate::data::synthetic::two_gaussians(60, 14, 4, 1.0, 11);
+        for loss in [Loss::Squared, Loss::ZeroOne] {
+            let mut st_a = GreedyState::init(&ds.x, &ds.y, 0.5);
+            let mut st_s = GreedyState::init(&ds.x, &ds.y, 0.5)
+                .with_kernel(KernelKind::Scalar);
+            for _ in 0..4 {
+                let sa = st_a.score_all(&ds.x, &ds.y, loss);
+                let ss = st_s.score_all(&ds.x, &ds.y, loss);
+                for (p, q) in sa.iter().zip(&ss) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+                let b = argmin(&sa).unwrap();
+                st_a.commit(&ds.x, b);
+                st_s.commit(&ds.x, b);
+                for (p, q) in st_a.ct.iter().zip(&st_s.ct) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+            }
+        }
+    }
+
+    /// The f32c engine's own determinism contract: scores and commits
+    /// are bit-identical across thread counts, and `score_of` equals
+    /// `score_all` for every candidate (there is no quad coupling to
+    /// recompute).
+    #[test]
+    fn f32c_is_bit_deterministic_across_threads_and_score_of() {
+        let ds = crate::data::synthetic::two_gaussians(50, 13, 4, 1.0, 23);
+        for loss in [Loss::Squared, Loss::ZeroOne] {
+            let mut base = GreedyState::init(&ds.x, &ds.y, 1.0)
+                .with_precision(Precision::F32c);
+            assert!(base.ct.is_empty(), "f64 cache must be dropped");
+            for _ in 0..3 {
+                let s1 = base.score_all(&ds.x, &ds.y, loss);
+                for t in [2usize, 4] {
+                    let mut st = GreedyState::init(&ds.x, &ds.y, 1.0)
+                        .with_precision(Precision::F32c)
+                        .with_threads(t);
+                    for &f in &base.selected {
+                        st.commit(&ds.x, f);
+                    }
+                    let s2 = st.score_all(&ds.x, &ds.y, loss);
+                    for (i, (p, q)) in s1.iter().zip(&s2).enumerate() {
+                        assert_eq!(p.to_bits(), q.to_bits(), "t={t} i={i}");
+                    }
+                }
+                for i in 0..base.n {
+                    if base.cand_mask[i] == 0.0 {
+                        continue;
+                    }
+                    let one = base.score_of(&ds.x, &ds.y, loss, i);
+                    assert_eq!(one.to_bits(), s1[i].to_bits(), "cand {i}");
+                }
+                let b = argmin(&s1).unwrap();
+                base.commit(&ds.x, b);
+            }
+        }
+    }
+
+    /// f32c vs f64 criterion trajectories on a well-conditioned problem:
+    /// same features selected, criteria within the documented tolerance
+    /// (EXPERIMENTS.md §Mixed precision).
+    #[test]
+    fn f32c_trajectory_tracks_f64_within_tolerance() {
+        let ds = crate::data::synthetic::two_gaussians(80, 16, 5, 1.0, 7);
+        let mut st64 = GreedyState::init(&ds.x, &ds.y, 1.0);
+        let mut st32 = GreedyState::init(&ds.x, &ds.y, 1.0)
+            .with_precision(Precision::F32c);
+        for round in 0..5 {
+            let s64 = st64.score_all(&ds.x, &ds.y, Loss::Squared);
+            let s32 = st32.score_all(&ds.x, &ds.y, Loss::Squared);
+            let b64 = argmin(&s64).unwrap();
+            let b32 = argmin(&s32).unwrap();
+            assert_eq!(b64, b32, "round {round}: selection diverged");
+            let rel = (s64[b64] - s32[b32]).abs()
+                / s64[b64].abs().max(1.0);
+            assert!(
+                rel <= 1e-4,
+                "round {round}: criterion rel err {rel} above gate"
+            );
+            st64.commit(&ds.x, b64);
+            st32.commit(&ds.x, b32);
+        }
+    }
+
+    #[test]
+    fn stored_engine_rejects_f32c() {
+        let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 6);
+        let opts = crate::data::storage::StorageOptions::default();
+        let store = MatrixStore::from_matrix(&ds.x, &opts).unwrap();
+        let cfg = SelectionConfig::builder()
+            .k(2)
+            .precision(Precision::F32c)
+            .build();
+        let err = GreedyRls
+            .begin_stored(store, ds.y.clone(), &cfg, &opts)
+            .unwrap_err();
+        assert!(err.to_string().contains("f32c"), "{err}");
     }
 }

@@ -48,6 +48,10 @@ impl LowRankCore<'_> {
             let f = gv[r] / denom;
             let row = gt.row_mut(r);
             for (c_, &gvc) in row.iter_mut().zip(&gv) {
+                // xtask-allow: scan-via-kernel -- Algorithm 2's explicit
+                // O(m²) G~ downdate, kept quadratic on purpose as the
+                // paper-faithful baseline the linear engine is tested
+                // against; deliberately not on the kernel tier
                 *c_ -= f * gvc;
             }
         }
@@ -99,6 +103,8 @@ impl SessionCore for LowRankCore<'_> {
             let f = gv[r] / denom;
             let row = self.g.row_mut(r);
             for (c_, &gvc) in row.iter_mut().zip(&gv) {
+                // xtask-allow: scan-via-kernel -- quadratic SMW commit of
+                // the same O(m²) baseline; see the downdate above
                 *c_ -= f * gvc;
             }
         }
@@ -143,6 +149,7 @@ impl SessionSelector for LowRankLsSvm {
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(m == y.len(), "shape mismatch");
+        super::require_f64(cfg, "lowrank-lssvm")?;
 
         // lines 1–3: S = ∅, a = λ⁻¹y, G = λ⁻¹I
         let inv = 1.0 / cfg.lambda;

@@ -54,6 +54,8 @@ pub use session::{
     StepOutcome, StopPolicy, StopReason,
 };
 
+pub use crate::kernel::{KernelKind, Precision};
+
 use crate::linalg::Matrix;
 use crate::metrics::Loss;
 use crate::rls::Predictor;
@@ -100,6 +102,19 @@ pub struct SelectionConfig {
     /// from checkpoint config fingerprints and checkpoints written at
     /// one tile width resume under another.
     pub tile_cols: usize,
+    /// Numeric representation of the candidate cache
+    /// ([`Precision::F64`], the default, or [`Precision::F32c`]).
+    ///
+    /// `F32c` halves the bytes the bandwidth-bound scan streams per
+    /// round by storing Cᵀ in f32 while accumulating in compensated
+    /// f64. It is deterministic per run (bit-identical across threads
+    /// and tile widths) but follows a *different* trajectory from
+    /// `F64`, so — unlike `threads`/`tile_cols` — it participates in
+    /// checkpoint config fingerprints: runs at different precisions can
+    /// never silently resume each other. Supported by the greedy
+    /// selector on the in-RAM backend only; every other selector, the
+    /// stored backend, and the PJRT engine reject it at `begin`.
+    pub precision: Precision,
 }
 
 impl Default for SelectionConfig {
@@ -111,6 +126,7 @@ impl Default for SelectionConfig {
             stop: StopPolicy::default(),
             threads: 0,
             tile_cols: 0,
+            precision: Precision::F64,
         }
     }
 }
@@ -183,6 +199,14 @@ impl SelectionConfigBuilder {
     /// [`SelectionConfig::tile_cols`]).
     pub fn tile_cols(mut self, tile_cols: usize) -> Self {
         self.cfg.tile_cols = tile_cols;
+        self
+    }
+
+    /// Numeric representation of the candidate cache — see
+    /// [`SelectionConfig::precision`] for the determinism and support
+    /// matrix.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.cfg.precision = precision;
         self
     }
 
@@ -284,6 +308,23 @@ where
     scores
 }
 
+/// Guard for selectors whose engines run f64-only: every selector other
+/// than in-RAM greedy RLS rejects `--precision f32c` at `begin` with a
+/// uniform error, instead of silently computing in full precision under
+/// a config that claims otherwise.
+pub(crate) fn require_f64(
+    cfg: &SelectionConfig,
+    selector: &str,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        cfg.precision == Precision::F64,
+        "--precision {} is not supported by the {selector} selector \
+         (mixed precision runs on the in-RAM greedy-rls engine only)",
+        cfg.precision,
+    );
+    Ok(())
+}
+
 /// Strict-argmin over candidate scores; ties break to the lowest index
 /// (every implementation in the repo and the Python reference must agree
 /// on this rule for the equivalence tests to be exact).
@@ -352,6 +393,19 @@ mod tests {
             t.stop,
             StopPolicy::TimeBudget(std::time::Duration::from_secs(5))
         );
+    }
+
+    #[test]
+    fn builder_sets_precision_and_guard_rejects_f32c() {
+        assert_eq!(SelectionConfig::default().precision, Precision::F64);
+        let cfg = SelectionConfig::builder()
+            .precision(Precision::F32c)
+            .build();
+        assert_eq!(cfg.precision, Precision::F32c);
+        assert!(require_f64(&SelectionConfig::default(), "x").is_ok());
+        let err = require_f64(&cfg, "backward-elimination").unwrap_err();
+        assert!(err.to_string().contains("backward-elimination"), "{err}");
+        assert!(err.to_string().contains("f32c"), "{err}");
     }
 
     #[test]

@@ -23,6 +23,7 @@ use super::session::{
     CoreStep, PolicySession, Session, SessionCore, SessionSelector,
 };
 use super::{argmin, Round, SelectionConfig, SelectionResult, Selector, BIG};
+use crate::kernel::{self, KernelKind};
 use crate::linalg::{dot, Cholesky, Matrix};
 use crate::metrics::Loss;
 use crate::rng::Pcg64;
@@ -67,6 +68,9 @@ struct NFoldState {
     selected: Vec<usize>,
     /// Resolved worker-thread count for the per-round scans/downdates.
     threads: usize,
+    /// Compute-kernel dispatch, fixed at construction
+    /// ([`KernelKind::active`]).
+    kernel: KernelKind,
 }
 
 impl NFoldState {
@@ -104,6 +108,7 @@ impl NFoldState {
             cand_mask: vec![1.0; n],
             selected: Vec::new(),
             threads: 1,
+            kernel: KernelKind::active(),
         }
     }
 
@@ -115,21 +120,17 @@ impl NFoldState {
         let m = self.m;
         let v = x.row(i);
         let c = &self.ct[i * m..(i + 1) * m];
-        let denom = 1.0 + dot(v, c);
-        let va = dot(v, &self.a);
+        let denom = 1.0 + kernel::dot(self.kernel, v, c);
+        let va = kernel::dot(self.kernel, v, &self.a);
         let mut e = 0.0;
         for (h, block) in self.folds.iter().zip(&self.blocks) {
             let s = h.len();
             // B̃ = B − u_H c_Hᵀ,  ã_H = a_H − u_H·va
             let mut bt = vec![0.0; s * s];
             let mut at = vec![0.0; s];
-            for (r, &jr) in h.iter().enumerate() {
-                let u_r = c[jr] / denom;
-                at[r] = self.a[jr] - u_r * va;
-                for (t, &jt) in h.iter().enumerate() {
-                    bt[r * s + t] = block[r * s + t] - u_r * c[jt];
-                }
-            }
+            kernel::fold_tilde(
+                c, &self.a, h, block, denom, va, &mut at, &mut bt,
+            );
             // p_H = y_H − B̃⁻¹ ã_H
             let bmat = Matrix::from_vec(s, s, bt);
             let Some(ch) = Cholesky::factor(&bmat) else {
@@ -160,22 +161,16 @@ impl NFoldState {
         let m = self.m;
         let v = x.row(b);
         let cb = self.ct[b * m..(b + 1) * m].to_vec();
-        let denom = 1.0 + dot(v, &cb);
+        let denom = 1.0 + kernel::dot(self.kernel, v, &cb);
         let u: Vec<f64> = cb.iter().map(|&c| c / denom).collect();
-        let va = dot(v, &self.a);
-        for j in 0..m {
-            self.a[j] -= u[j] * va;
-        }
+        let va = kernel::dot(self.kernel, v, &self.a);
+        kernel::update_a(&mut self.a, &u, va, -1.0);
         for (h, block) in self.folds.iter().zip(self.blocks.iter_mut()) {
-            let s = h.len();
-            for (r, &jr) in h.iter().enumerate() {
-                for (t, &jt) in h.iter().enumerate() {
-                    block[r * s + t] -= u[jr] * cb[jt];
-                }
-            }
+            kernel::fold_block_downdate(block, h, &u, &cb);
         }
         // the O(mn) cache downdate: rows are independent, shard them
         crate::parallel::rank1_row_update(
+            self.kernel,
             self.threads,
             &mut self.ct,
             m,
@@ -263,6 +258,7 @@ impl SessionSelector for NFoldGreedy {
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(self.folds >= 2 && self.folds <= m, "bad fold count");
         ensure!(m == y.len(), "shape mismatch");
+        super::require_f64(cfg, "nfold-greedy")?;
 
         let fold_vec = self.fold_assignment(m);
         let mut st = NFoldState::init(x, y, cfg.lambda, fold_vec);

@@ -102,10 +102,15 @@ impl RankRlsCore<'_> {
             let row = self.x.row(s_idx);
             let wv = w_new[t];
             for (fj, &xv) in f.iter_mut().zip(row) {
+                // xtask-allow: scan-via-kernel -- O(km) bordered-model
+                // rescore faithful to the RankRLS paper; not a per-round
+                // O(mn) hot path, stays off the kernel tier
                 *fj += wv * xv;
             }
         }
         for (fj, &xv) in f.iter_mut().zip(self.x.row(i)) {
+            // xtask-allow: scan-via-kernel -- same bordered-model
+            // baseline as above; quadratic reference, not a hot path
             *fj += wi * xv;
         }
         pairwise_risk(self.y, &f)
@@ -182,6 +187,7 @@ impl SessionSelector for GreedyRankRls {
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(m == y.len(), "shape mismatch");
+        super::require_f64(cfg, "greedy-rankrls")?;
 
         // precompute L-products that never change: Lx_i rows and Ly
         let lx: Vec<Vec<f64>> =

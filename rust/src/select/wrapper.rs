@@ -151,6 +151,7 @@ impl SessionSelector for Wrapper {
         ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
+        super::require_f64(cfg, "wrapper")?;
         let core = WrapperCore {
             x,
             y,

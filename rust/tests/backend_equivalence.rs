@@ -310,3 +310,45 @@ fn standardization_and_fingerprint_interchange_across_backends() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Kernel tier × backends: both backends dispatch the same active kernel
+// (see rust/tests/kernel_equivalence.rs for the forced-scalar pin), and
+// the precision knob must behave identically across them — f64 results
+// interchange, f32c is rejected by the stored engine with the same
+// uniform fence everywhere.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn precision_knob_is_uniform_across_backends() {
+    use greedy_rls::select::Precision;
+    let src = synthetic::two_gaussians(36, 10, 3, 1.2, 47);
+    let f64_cfg = SelectionConfig {
+        k: 3,
+        lambda: 1.0,
+        loss: Loss::ZeroOne,
+        ..Default::default()
+    };
+    // the f64 default: ram and stored agree bitwise (kernel dispatch is
+    // per-build, identical on both backends)
+    let ram = GreedyRls.select(&src.x, &src.y, &f64_cfg).unwrap();
+    let stored =
+        stored_result(&src, &f64_cfg, &StorageOptions::default(), &[]);
+    assert_bit_identical(&ram, &stored, "f64 ram vs stored");
+    // f32c: accepted in RAM, rejected by the stored engine on every
+    // backend variant (its cache streams f64 windows)
+    let f32_cfg =
+        SelectionConfig { precision: Precision::F32c, ..f64_cfg };
+    assert!(GreedyRls.select(&src.x, &src.y, &f32_cfg).is_ok());
+    let mut variants = vec![StorageOptions::default()];
+    if cfg!(target_os = "linux") {
+        variants.push(mmap_opts());
+    }
+    for opts in variants {
+        let x = MatrixStore::from_matrix(&src.x, &opts).unwrap();
+        let err = GreedyRls
+            .begin_stored(x, src.y.clone(), &f32_cfg, &opts)
+            .unwrap_err();
+        assert!(err.to_string().contains("f32c"), "{:?}: {err}", opts.backend);
+    }
+}

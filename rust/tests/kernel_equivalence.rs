@@ -1,0 +1,229 @@
+//! Kernel-tier equivalence — the dispatch surface must be invisible in
+//! the numbers (integration level).
+//!
+//! The kernel contract (ARCHITECTURE.md §Compute kernels): every
+//! *(kernel, precision)* pair is bit-deterministic across thread counts,
+//! tile widths, and data backends; the `(Simd, F64)` pair is
+//! additionally bit-identical to the `(Scalar, F64)` reference; and the
+//! `(Scalar, F32c)` pair follows a different trajectory that is
+//! tolerance-gated against f64 (EXPERIMENTS.md §Mixed precision) and
+//! fenced off from every engine that does not implement it.
+//!
+//! The `#[cfg(feature = "simd")]` half of this suite is the pin that
+//! keeps the nightly SIMD build honest: it runs whole selector
+//! trajectories with the kernel forced to scalar and compares them
+//! bitwise against the build's active (SIMD) dispatch, on both the
+//! in-RAM and the stored backend.
+
+use greedy_rls::data::storage::{MatrixStore, StorageOptions};
+use greedy_rls::data::synthetic;
+use greedy_rls::kernel::{KernelKind, Precision};
+use greedy_rls::metrics::Loss;
+use greedy_rls::select::backward::BackwardElimination;
+use greedy_rls::select::checkpoint::config_hash;
+use greedy_rls::select::floating::FloatingForward;
+use greedy_rls::select::foba::Foba;
+use greedy_rls::select::greedy::{GreedyRls, GreedyState};
+use greedy_rls::select::nfold::NFoldGreedy;
+use greedy_rls::select::{
+    argmin, run_to_completion, SelectionConfig, SelectionResult, Selector,
+};
+
+fn assert_bit_identical(a: &SelectionResult, b: &SelectionResult, what: &str) {
+    assert_eq!(a.selected, b.selected, "{what}: selected");
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert_eq!(ra.feature, rb.feature, "{what}: round {i} feature");
+        assert_eq!(
+            ra.criterion.to_bits(),
+            rb.criterion.to_bits(),
+            "{what}: round {i} criterion {} vs {}",
+            ra.criterion,
+            rb.criterion
+        );
+    }
+    for (i, (wa, wb)) in a.weights.iter().zip(&b.weights).enumerate() {
+        assert_eq!(wa.to_bits(), wb.to_bits(), "{what}: weight {i}");
+    }
+}
+
+/// Every scan-based selector must produce bit-identical trajectories at
+/// threads {1, 2, 4} on whatever kernel this build dispatches — the
+/// per-(kernel, precision) determinism half of the contract. (The
+/// default CI build runs this on the scalar reference; the nightly
+/// `--features simd` job runs the identical test on the lane kernels.)
+#[test]
+fn selectors_bit_identical_across_threads_on_the_active_kernel() {
+    let ds = synthetic::two_gaussians(48, 12, 4, 1.2, 17);
+    let selectors: Vec<Box<dyn Selector>> = vec![
+        Box::new(GreedyRls),
+        Box::new(BackwardElimination),
+        Box::new(NFoldGreedy::default()),
+        Box::new(Foba::default()),
+        Box::new(FloatingForward::default()),
+    ];
+    for sel in &selectors {
+        for loss in [Loss::Squared, Loss::ZeroOne] {
+            let base = SelectionConfig::builder()
+                .k(4)
+                .lambda(1.0)
+                .loss(loss)
+                .threads(1)
+                .build();
+            let serial = sel.select(&ds.x, &ds.y, &base).unwrap();
+            for threads in [2usize, 4] {
+                let cfg = base.with().threads(threads).build();
+                let par = sel.select(&ds.x, &ds.y, &cfg).unwrap();
+                assert_bit_identical(
+                    &serial,
+                    &par,
+                    &format!("{} t={threads} {loss:?}", sel.name()),
+                );
+            }
+        }
+    }
+}
+
+/// `--precision f32c` on the greedy selector: deterministic across
+/// thread counts (bit-identical), and tolerance-gated against the f64
+/// trajectory — same selected features on a well-conditioned problem,
+/// per-round criteria within the 1e-4 relative gate documented in
+/// EXPERIMENTS.md §Mixed precision.
+#[test]
+fn f32c_session_is_deterministic_and_tracks_f64() {
+    let ds = synthetic::two_gaussians(90, 18, 5, 1.0, 41);
+    let f64_cfg = SelectionConfig::builder()
+        .k(5)
+        .lambda(1.0)
+        .loss(Loss::Squared)
+        .threads(1)
+        .build();
+    let f32_cfg = f64_cfg.with().precision(Precision::F32c).build();
+    let exact = GreedyRls.select(&ds.x, &ds.y, &f64_cfg).unwrap();
+    let mixed = GreedyRls.select(&ds.x, &ds.y, &f32_cfg).unwrap();
+    for threads in [2usize, 4] {
+        let par = GreedyRls
+            .select(&ds.x, &ds.y, &f32_cfg.with().threads(threads).build())
+            .unwrap();
+        assert_bit_identical(&mixed, &par, &format!("f32c t={threads}"));
+    }
+    assert_eq!(exact.selected, mixed.selected, "selection diverged");
+    for (i, (re, rm)) in exact.rounds.iter().zip(&mixed.rounds).enumerate() {
+        let rel = (re.criterion - rm.criterion).abs()
+            / re.criterion.abs().max(1.0);
+        assert!(
+            rel <= 1e-4,
+            "round {i}: criterion rel err {rel} above the documented gate"
+        );
+    }
+}
+
+/// The precision knob is fenced: every selector but in-RAM greedy, and
+/// the stored backend, must reject f32c at `begin` — and the checkpoint
+/// config fingerprint must separate the two precisions so their
+/// checkpoints can never silently resume each other.
+#[test]
+fn f32c_is_fenced_to_the_inram_greedy_engine() {
+    let ds = synthetic::two_gaussians(30, 8, 3, 1.0, 5);
+    let cfg = SelectionConfig::builder()
+        .k(3)
+        .precision(Precision::F32c)
+        .build();
+    let rejecting: Vec<Box<dyn Selector>> = vec![
+        Box::new(BackwardElimination),
+        Box::new(NFoldGreedy::default()),
+        Box::new(Foba::default()),
+        Box::new(FloatingForward::default()),
+    ];
+    for sel in &rejecting {
+        let err = sel.select(&ds.x, &ds.y, &cfg).unwrap_err();
+        assert!(
+            err.to_string().contains("f32c"),
+            "{}: {err}",
+            sel.name()
+        );
+    }
+    let opts = StorageOptions::default();
+    let store = MatrixStore::from_matrix(&ds.x, &opts).unwrap();
+    let err = GreedyRls
+        .begin_stored(store, ds.y.clone(), &cfg, &opts)
+        .unwrap_err();
+    assert!(err.to_string().contains("f32c"), "stored: {err}");
+    // and the one engine that accepts it fingerprints it distinctly
+    let f64_cfg = cfg.with().precision(Precision::F64).build();
+    assert_ne!(config_hash(&cfg), config_hash(&f64_cfg));
+    assert!(GreedyRls.select(&ds.x, &ds.y, &cfg).is_ok());
+}
+
+/// Drive a raw [`GreedyState`] with an explicitly chosen kernel through
+/// `k` rounds, returning (selected, criterion bits).
+fn state_trajectory(
+    ds: &greedy_rls::data::Dataset,
+    kind: Option<KernelKind>,
+    threads: usize,
+    loss: Loss,
+    k: usize,
+) -> (Vec<usize>, Vec<u64>) {
+    let mut st =
+        GreedyState::init(&ds.x, &ds.y, 1.0).with_threads(threads);
+    if let Some(kind) = kind {
+        st = st.with_kernel(kind);
+    }
+    let mut crits = Vec::new();
+    for _ in 0..k {
+        let scores = st.score_all(&ds.x, &ds.y, loss);
+        let b = argmin(&scores).unwrap();
+        crits.push(scores[b].to_bits());
+        st.commit(&ds.x, b);
+    }
+    (st.selected.clone(), crits)
+}
+
+/// Forcing the scalar kernel must never change anything relative to the
+/// build's active dispatch. In the default build this is trivially true
+/// (active == scalar); under `--features simd` it is the full-trajectory
+/// SIMD-vs-scalar bit-identity pin, across thread counts and losses.
+#[test]
+fn active_kernel_matches_forced_scalar_bitwise() {
+    let ds = synthetic::two_gaussians(64, 15, 5, 1.1, 23);
+    for loss in [Loss::Squared, Loss::ZeroOne] {
+        let reference =
+            state_trajectory(&ds, Some(KernelKind::Scalar), 1, loss, 5);
+        for threads in [1usize, 2, 4] {
+            let active = state_trajectory(&ds, None, threads, loss, 5);
+            assert_eq!(reference, active, "t={threads} {loss:?}");
+        }
+    }
+}
+
+/// The stored (out-of-core capable) engine runs the build's active
+/// kernel too; its trajectory must match the forced-scalar in-RAM
+/// reference bitwise — under `--features simd` this pins the SIMD tiled
+/// kernels through the second backend.
+#[test]
+fn stored_backend_matches_forced_scalar_reference() {
+    let ds = synthetic::two_gaussians(52, 13, 4, 1.3, 31);
+    for loss in [Loss::Squared, Loss::ZeroOne] {
+        let (sel_ref, crit_ref) =
+            state_trajectory(&ds, Some(KernelKind::Scalar), 2, loss, 4);
+        let cfg = SelectionConfig::builder()
+            .k(4)
+            .lambda(1.0)
+            .loss(loss)
+            .threads(2)
+            .build();
+        let opts = StorageOptions::default();
+        let store = MatrixStore::from_matrix(&ds.x, &opts).unwrap();
+        let stored = run_to_completion(
+            GreedyRls.begin_stored(store, ds.y.clone(), &cfg, &opts).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(stored.selected, sel_ref, "{loss:?}: selected");
+        let crit_stored: Vec<u64> = stored
+            .rounds
+            .iter()
+            .map(|r| r.criterion.to_bits())
+            .collect();
+        assert_eq!(crit_stored, crit_ref, "{loss:?}: criteria");
+    }
+}

@@ -333,6 +333,39 @@ def scan_call_extent(rel, lines, start_line, start_off, out):
         li += 1
 
 
+def is_kernel_scope(rel):
+    return (
+        rel.startswith("rust/src/select/")
+        or rel == "rust/src/data/storage.rs"
+    )
+
+
+def has_raw_axpy(code):
+    for op in ["+=", "-="]:
+        p = code.find(op)
+        if p >= 0 and "*" in code[p + len(op) :]:
+            return True
+    return False
+
+
+def scan_via_kernel(rel, lines, out):
+    if not is_kernel_scope(rel):
+        return
+    for line in lines:
+        if line["in_test"]:
+            continue
+        if has_raw_axpy(line["code"]):
+            out.append(
+                finding(
+                    "scan-via-kernel",
+                    rel,
+                    line["number"],
+                    "raw multiply-accumulate loop in selector/storage "
+                    "code — route the inner loop through crate::kernel",
+                )
+            )
+
+
 def is_fabric_io(rel):
     return (
         rel.startswith("rust/src/coordinator/fabric/")
@@ -758,6 +791,7 @@ def analyze(root):
         token_rules(rel, lines, raw)
         float_reduction(rel, lines, raw)
         unbounded_io(rel, lines, raw)
+        scan_via_kernel(rel, lines, raw)
     usage_drift(root, raw)
     checkpoint_pin(root, raw)
     findings, suppressed = resolve_allows(scans, raw)

@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Tolerance-banded perf-regression comparator for BENCH_hotpath.json.
+
+CI runs the microbench in smoke mode and hands the fresh
+`BENCH_hotpath.json` to this script together with the committed
+baseline (`xtask/perf_baseline/BENCH_hotpath.json`). Rows are matched
+on (m, n, kernel, precision, threads); a row regresses when its median
+`score_ms` or `commit_ms` exceeds the baseline by more than the
+tolerance band. The band is wide on purpose: smoke problems are tiny
+and shared runners are noisy — this gate catches multi-x cliffs (an
+accidentally quadratic scan, a lost parallel path), not 3% drift.
+
+Bootstrap: if the baseline file does not exist the comparison is
+SKIPPED with a visible notice and exit 0. The baseline must be a real
+measured artifact from a trusted CI run, reviewed and committed —
+never a hand-written number.
+
+Grid-shape rules: rows present only in the current run (a new kernel
+or precision in the sweep) are reported and ignored; rows present only
+in the baseline fail, because a silently shrunken grid would let a
+regression hide by not being measured.
+
+Usage:
+    python3 xtask/mirror/perf_check.py --baseline PATH --current PATH
+        [--tolerance 0.5]
+    python3 xtask/mirror/perf_check.py --self-test
+"""
+
+import json
+import os
+import sys
+
+METRICS = ["score_ms", "commit_ms"]
+
+
+def row_key(row):
+    return (
+        row["m"],
+        row["n"],
+        row.get("kernel", "scalar"),
+        row.get("precision", "f64"),
+        row["threads"],
+    )
+
+
+def fmt_key(key):
+    m, n, kernel, precision, threads = key
+    return f"m={m} n={n} kernel={kernel} precision={precision} t={threads}"
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {row_key(r): r for r in doc["results"]}
+
+
+def compare(baseline, current, tolerance):
+    """Returns (regressions, notes) — regressions is a list of strings;
+    non-empty means fail."""
+    regressions, notes = [], []
+    for key, base_row in sorted(baseline.items()):
+        cur_row = current.get(key)
+        if cur_row is None:
+            regressions.append(
+                f"{fmt_key(key)}: row vanished from the current run — "
+                "the measured grid must not shrink"
+            )
+            continue
+        for metric in METRICS:
+            base, cur = base_row.get(metric), cur_row.get(metric)
+            if base is None or cur is None or base <= 0.0:
+                continue
+            limit = base * (1.0 + tolerance)
+            if cur > limit:
+                regressions.append(
+                    f"{fmt_key(key)}: {metric} {cur:.3f}ms exceeds "
+                    f"baseline {base:.3f}ms by more than "
+                    f"{tolerance:.0%} (limit {limit:.3f}ms)"
+                )
+    for key in sorted(set(current) - set(baseline)):
+        notes.append(
+            f"{fmt_key(key)}: new row (not in baseline) — measured but "
+            "not gated; re-pin the baseline to start gating it"
+        )
+    return regressions, notes
+
+
+def self_test():
+    base = {
+        (200, 64, "scalar", "f64", 1): {
+            "m": 200, "n": 64, "kernel": "scalar", "precision": "f64",
+            "threads": 1, "score_ms": 1.0, "commit_ms": 0.5,
+        },
+        (200, 64, "scalar", "f64", 2): {
+            "m": 200, "n": 64, "kernel": "scalar", "precision": "f64",
+            "threads": 2, "score_ms": 0.6, "commit_ms": 0.3,
+        },
+    }
+    # within band: +40% under a 50% band passes
+    cur_ok = {
+        k: dict(v, score_ms=v["score_ms"] * 1.4, commit_ms=v["commit_ms"])
+        for k, v in base.items()
+    }
+    reg, _ = compare(base, cur_ok, 0.5)
+    assert not reg, reg
+    # outside band: +60% fails, and names the row and metric
+    cur_bad = {
+        k: dict(v, score_ms=v["score_ms"] * 1.6)
+        for k, v in base.items()
+    }
+    reg, _ = compare(base, cur_bad, 0.5)
+    assert len(reg) == 2 and "score_ms" in reg[0], reg
+    # a vanished row fails even when every surviving row is faster
+    cur_shrunk = {
+        k: dict(v, score_ms=v["score_ms"] * 0.5)
+        for k, v in list(base.items())[:1]
+    }
+    reg, _ = compare(base, cur_shrunk, 0.5)
+    assert len(reg) == 1 and "vanished" in reg[0], reg
+    # new rows are notes, not failures
+    extra_key = (200, 64, "simd", "f64", 1)
+    cur_grown = dict(cur_ok)
+    cur_grown[extra_key] = dict(
+        base[(200, 64, "scalar", "f64", 1)], kernel="simd"
+    )
+    reg, notes = compare(base, cur_grown, 0.5)
+    assert not reg and len(notes) == 1 and "new row" in notes[0], (reg, notes)
+    print("perf_check: self-test OK")
+
+
+def main():
+    argv = sys.argv[1:]
+    baseline_path = current_path = None
+    tolerance = 0.5
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--baseline":
+            baseline_path = argv[i + 1]
+            i += 2
+        elif argv[i] == "--current":
+            current_path = argv[i + 1]
+            i += 2
+        elif argv[i] == "--tolerance":
+            tolerance = float(argv[i + 1])
+            i += 2
+        elif argv[i] == "--self-test":
+            self_test()
+            return
+        else:
+            sys.exit(f"unknown argument {argv[i]!r}")
+    if baseline_path is None or current_path is None:
+        sys.exit("perf_check: --baseline and --current are required")
+    if not os.path.exists(baseline_path):
+        print(
+            f"perf_check: SKIP — no baseline at {baseline_path}; commit a "
+            "reviewed BENCH_hotpath.json from a trusted CI run to arm "
+            "this gate"
+        )
+        return
+    baseline = load_rows(baseline_path)
+    current = load_rows(current_path)
+    regressions, notes = compare(baseline, current, tolerance)
+    for note in notes:
+        print(f"perf_check: note: {note}")
+    for reg in regressions:
+        print(f"perf_check: REGRESSION: {reg}")
+    print(
+        f"perf_check: {len(baseline)} baseline row(s), "
+        f"{len(regressions)} regression(s), tolerance {tolerance:.0%}"
+    )
+    sys.exit(1 if regressions else 0)
+
+
+if __name__ == "__main__":
+    main()

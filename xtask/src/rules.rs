@@ -55,6 +55,14 @@ pub const RULES: &[RuleInfo] = &[
                     breaks",
     },
     RuleInfo {
+        name: "scan-via-kernel",
+        invariant: "select/ and data/storage.rs must route O(mn) \
+                    multiply-accumulate inner loops through the kernel \
+                    tier (crate::kernel) — raw `x += a * b` loops dodge \
+                    the SIMD/precision dispatch; quadratic reference \
+                    baselines need a justified xtask-allow",
+    },
+    RuleInfo {
         name: "usage-drift",
         invariant: "README.md §CLI reference and cli/mod.rs USAGE must \
                     agree on the command and flag inventory",
@@ -107,6 +115,7 @@ pub fn analyze(root: &Path) -> io::Result<Report> {
         token_rules(rel, scanned, &mut raw);
         float_reduction(rel, scanned, &mut raw);
         unbounded_io(rel, scanned, &mut raw);
+        scan_via_kernel(rel, scanned, &mut raw);
     }
     usage_drift(root, &mut raw)?;
     checkpoint_pin(root, &mut raw)?;
@@ -428,6 +437,61 @@ fn unbounded_io(rel: &str, f: &ScannedFile, out: &mut Vec<Finding>) {
                       peer would block its readers forever"
                 .into(),
         });
+    }
+}
+
+// ---------------------------------------------------------------------
+// rule: scan-via-kernel
+
+/// Modules whose O(mn) inner loops must live in the kernel tier: the
+/// selector layer and the out-of-core storage scans. `kernel/` itself
+/// and `parallel/` (which only shards and delegates) are out of scope.
+fn is_kernel_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/select/") || rel == "rust/src/data/storage.rs"
+}
+
+/// A raw multiply-accumulate: a `+=`/`-=` compound assignment with a
+/// `*` anywhere after it on the same line — the shape of every
+/// hand-rolled dot-product/axpy inner loop. Plain accumulation
+/// (`acc += v`) and integer bookkeeping without a multiply are fine.
+fn has_raw_axpy(code: &str) -> bool {
+    for op in ["+=", "-="] {
+        if let Some(p) = code.find(op) {
+            if code[p + op.len()..].contains('*') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Flag hand-rolled multiply-accumulate loops in selector/storage code —
+/// they bypass the kernel tier's single dispatch point, so a SIMD or
+/// mixed-precision build would silently run them scalar-f64 and the
+/// per-(kernel, precision) bit-identity contract loses its meaning.
+/// Quadratic reference baselines (faithful to the paper's O(m²)
+/// algorithms, deliberately not on the hot path) justify an xtask-allow.
+fn scan_via_kernel(rel: &str, f: &ScannedFile, out: &mut Vec<Finding>) {
+    if !is_kernel_scope(rel) {
+        return;
+    }
+    for line in &f.lines {
+        if line.in_test {
+            continue;
+        }
+        if has_raw_axpy(line.code.as_str()) {
+            out.push(Finding {
+                rule: "scan-via-kernel".into(),
+                file: rel.into(),
+                line: line.number,
+                message: "raw multiply-accumulate loop in selector/storage \
+                          code — route the inner loop through \
+                          crate::kernel so SIMD and mixed-precision \
+                          dispatch stay centralized, or justify a \
+                          quadratic baseline with an xtask-allow"
+                    .into(),
+            });
+        }
     }
 }
 
@@ -832,6 +896,25 @@ mod tests {
         assert!(has_config_literal("SelectionConfig{k:1}"));
         assert!(!has_config_literal("SelectionConfig::builder().build()"));
         assert!(!has_config_literal("fn f(c: &SelectionConfig) {}"));
+    }
+
+    #[test]
+    fn raw_axpy_detected() {
+        assert!(has_raw_axpy("s += a[j] * b[j];"));
+        assert!(has_raw_axpy("*c_ -= f * gvc;"));
+        assert!(has_raw_axpy("acc += x * y"));
+        assert!(!has_raw_axpy("i += 1;"));
+        assert!(!has_raw_axpy("acc += v;"));
+        assert!(!has_raw_axpy("let p = a * b;"));
+        assert!(!has_raw_axpy("*fj += wv;"));
+    }
+
+    #[test]
+    fn kernel_scope_paths() {
+        assert!(is_kernel_scope("rust/src/select/greedy.rs"));
+        assert!(is_kernel_scope("rust/src/data/storage.rs"));
+        assert!(!is_kernel_scope("rust/src/kernel/scalar.rs"));
+        assert!(!is_kernel_scope("rust/src/parallel/mod.rs"));
     }
 
     #[test]

@@ -407,6 +407,67 @@ fn justified_allow_suppresses_unbounded_io() {
 }
 
 #[test]
+fn seeded_raw_axpy_in_selector_fires() {
+    let dir = clean_fixture("rule8");
+    fs::write(
+        dir.join("rust/src/select/scan.rs"),
+        "pub fn dot(a: &[f64], b: &[f64]) -> f64 {\n    let mut s = 0.0;\n    \
+         for (x, y) in a.iter().zip(b) {\n        s += x * y;\n    }\n    \
+         s\n}\n",
+    )
+    .unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["scan-via-kernel"]);
+}
+
+#[test]
+fn raw_axpy_in_kernel_tier_is_exempt() {
+    let dir = clean_fixture("rule8b");
+    // the kernel tier is where these loops are SUPPOSED to live
+    fs::create_dir_all(dir.join("rust/src/kernel")).unwrap();
+    fs::write(
+        dir.join("rust/src/kernel/scalar.rs"),
+        "pub fn axpy(a: &mut [f64], u: &[f64], s: f64) {\n    for (x, &v) \
+         in a.iter_mut().zip(u) {\n        *x += s * v;\n    }\n}\n",
+    )
+    .unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "kernel-tier axpy must not fire: {:?}", r.findings);
+}
+
+#[test]
+fn raw_axpy_in_selector_test_module_is_exempt() {
+    let dir = clean_fixture("rule8c");
+    fs::write(
+        dir.join("rust/src/select/scan.rs"),
+        "pub fn fine() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    \
+         fn brute_force_reference() {\n        let mut s = 0.0;\n        \
+         for i in 0..4 {\n            s += i as f64 * 2.0;\n        }\n        \
+         assert!(s > 0.0);\n    }\n}\n",
+    )
+    .unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "test-mod axpy must not fire: {:?}", r.findings);
+}
+
+#[test]
+fn justified_allow_suppresses_raw_axpy() {
+    let dir = clean_fixture("rule8d");
+    fs::write(
+        dir.join("rust/src/select/scan.rs"),
+        "pub fn downdate(g: &mut [f64], gv: &[f64], f: f64) {\n    for \
+         (c, &v) in g.iter_mut().zip(gv) {\n        // xtask-allow: \
+         scan-via-kernel -- fixture quadratic baseline\n        *c -= f * \
+         v;\n    }\n}\n",
+    )
+    .unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert!(r.clean(), "justified allow must suppress: {:?}", r.findings);
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.suppressed[0].rule, "scan-via-kernel");
+}
+
+#[test]
 fn justified_allow_suppresses() {
     let dir = clean_fixture("allow1");
     append(
