@@ -171,6 +171,11 @@ COMMANDS
              session control: [--stop k|plateau|time] [--patience N]
              [--min-rel-improvement F] [--time-budget-s S]
              [--warm-start I1,I2,...] [--progress]
+             sketched preselection: [--preselect P] [--sketch-dim D]
+             (filter to the top-P approximate ridge leverage scores,
+             then run exact greedy on the survivors; D=0 scores
+             exactly, D>0 scores through a seeded random projection;
+             greedy engine only, p >= n is a no-op identity filter)
              data backend: [--backend ram|mmap] [--tile-cols C]
              [--window-mb MB] [--chunk-mb MB] [--scratch DIR]  (mmap
              streams X and the greedy cache through bounded windows so
@@ -183,6 +188,8 @@ COMMANDS
   cv         paper §4.2 protocol: stratified CV accuracy curves
              --dataset NAME [--folds 10] [--kmax K] [--seed S] [--full]
              [--threads T] [--engine native|pjrt] [--tile-cols C]
+             [--preselect P] [--sketch-dim D]  (filters the greedy
+             sessions only; fixed-order baselines stay unfiltered)
              [--checkpoint-dir DIR]  (fold-level resume)
              sweep stopping: [--stop k|plateau|time] [--patience N]
              [--min-rel-improvement F] [--time-budget-s S]  (one wall
@@ -230,11 +237,21 @@ COMMANDS
              --dataset NAME | --synthetic M,N  --k K  [--seed S]
              [--servers 2] [--kill-one] [--scratch DIR] [--queries Q]
              [--batch 16] [--heartbeat-ms MS]
-  compare    run every selection algorithm on one dataset side by side
+  compare    quality-vs-time frontier: every selection algorithm on one
+             dataset side by side, one row per selector with wall-clock,
+             per-round time, rounds, scan-op count, final criterion, and
+             held-out accuracy
              --dataset NAME | --synthetic M,N  [--k 5] [--lambda 1.0]
-             [--threads T] [--engine native|pjrt]  (pjrt compares the
+             [--loss 01|squared] [--seed S] [--threads T]
+             [--engine native|pjrt] [--json FILE]  (writes the frontier
+             rows as a JSON array)
+             [--preselect P] [--sketch-dim D]  (sizes the
+             sketched-greedy row; default keeps half the features)
+             same --stop family as select: a zero budget still emits a
+             well-formed row per selector (pjrt compares the
              artifact-backed selectors: greedy, foba, nfold, backward,
-             floating)
+             floating; sketched-greedy and dropping-foba are
+             native-only)
   datasets   print the benchmark registry (paper Table 1)
   check      verify artifacts: compile all buckets, cross-check every
              artifact-backed selector (greedy, backward, nfold, foba,

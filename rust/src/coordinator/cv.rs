@@ -32,7 +32,7 @@ use crate::metrics::{accuracy, mean_std, Loss};
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
 use crate::select::checkpoint;
-use crate::select::{SelectionConfig, StepOutcome, StopPolicy};
+use crate::select::{PreselectConfig, SelectionConfig, StepOutcome, StopPolicy};
 
 /// How the next feature is chosen each round.
 #[derive(Clone, Debug)]
@@ -76,6 +76,12 @@ pub struct CurveSpec {
     /// knob — curves are bit-identical at every setting. Ignored by the
     /// PJRT engine.
     pub tile_cols: usize,
+    /// Sketched preselection filter for the *greedy* sessions (`None`
+    /// disables). Fixed-order baseline sessions always run unfiltered:
+    /// they force an arbitrary permutation, which must stay valid, and
+    /// the baseline should sample the same feature universe the paper's
+    /// does. Native engine only.
+    pub preselect: Option<PreselectConfig>,
 }
 
 impl CurveSpec {
@@ -88,6 +94,7 @@ impl CurveSpec {
             stop: StopPolicy::default(),
             engine: EngineKind::Native,
             tile_cols: 0,
+            preselect: None,
         }
     }
 }
@@ -154,6 +161,11 @@ pub fn selection_curve_spec(
         .threads(spec.threads)
         .stop(spec.stop)
         .tile_cols(spec.tile_cols)
+        .preselect(match order {
+            // forced permutations must stay valid — baselines never filter
+            Order::Greedy => spec.preselect,
+            Order::Fixed(_) => None,
+        })
         .build();
     let mut session = super::begin_with_engine(
         spec.engine,
@@ -246,6 +258,11 @@ pub struct CvOptions {
     /// Scan tile width for every fold's sessions (`0` = untiled);
     /// bit-identical at every setting, native engine only.
     pub tile_cols: usize,
+    /// Sketched preselection for the greedy curves (`None` disables);
+    /// the fixed-order baseline curves always run unfiltered — see
+    /// [`CurveSpec::preselect`]. Participates in the fold fingerprint
+    /// via a trailing marker (legacy fold files stay valid when unset).
+    pub preselect: Option<PreselectConfig>,
 }
 
 impl Default for CvOptions {
@@ -258,6 +275,7 @@ impl Default for CvOptions {
             stop: StopPolicy::default(),
             engine: EngineKind::Native,
             tile_cols: 0,
+            preselect: None,
         }
     }
 }
@@ -362,6 +380,7 @@ fn compute_folds_at(
                 stop: opts.stop,
                 engine: EngineKind::Native,
                 tile_cols: opts.tile_cols,
+                preselect: opts.preselect,
             };
             crate::parallel::par_map(outer, indices.len(), |j| {
                 let i = indices[j];
@@ -382,6 +401,9 @@ fn compute_folds_at(
                 stop: opts.stop,
                 engine: EngineKind::Pjrt,
                 tile_cols: opts.tile_cols,
+                // rejected upstream if combined with --preselect (the
+                // PJRT engine has no filter lowering)
+                preselect: opts.preselect,
             };
             indices
                 .iter()
@@ -531,6 +553,14 @@ fn cv_fingerprint(ds: &Dataset, opts: &CvOptions, k_max: usize) -> u64 {
     }
     if opts.engine == EngineKind::Pjrt {
         h.write(b"engine-pjrt");
+    }
+    if let Some(ps) = opts.preselect {
+        // trailing marker, like the checkpoint config hash: unset
+        // filters keep every pre-existing fold file valid
+        h.write(b"preselect");
+        h.write_usize(ps.p);
+        h.write_usize(ps.sketch_dim);
+        h.write_u64(ps.seed);
     }
     h.finish()
 }

@@ -303,6 +303,20 @@ pub fn dot(kind: KernelKind, x: &[f64], y: &[f64]) -> f64 {
     }
 }
 
+/// `y += alpha * x` with the selected kernel. A serial O(m) epilogue
+/// like [`update_a`]: the sketch accumulation passes it serves (Gram
+/// and projection builds in [`crate::select::sketch`]) are outside the
+/// per-round hot loop, so it dispatches to [`crate::linalg::axpy`] for
+/// every kind and the determinism argument stays trivial.
+#[inline]
+pub fn axpy(kind: KernelKind, alpha: f64, x: &[f64], y: &mut [f64]) {
+    match kind {
+        KernelKind::Scalar | KernelKind::Simd => {
+            crate::linalg::axpy(alpha, x, y)
+        }
+    }
+}
+
 // O(m)-per-round epilogues and fold-block helpers: serial by design
 // (they are not worth lanes and keeping them single-sourced keeps the
 // determinism argument trivial), so they dispatch to scalar for every

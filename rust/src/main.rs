@@ -20,8 +20,8 @@ use greedy_rls::select::checkpoint::{
 };
 use greedy_rls::select::{
     drive, greedy::GreedyRls, lowrank::LowRankLsSvm, run_to_completion,
-    NoopObserver, Observer, Precision, SelectionConfig, Selector, Session,
-    StopPolicy,
+    sketch, NoopObserver, Observer, Precision, PreselectConfig,
+    SelectionConfig, Selector, Session, StopPolicy,
 };
 
 fn main() {
@@ -86,8 +86,8 @@ fn open_runtime_if(engine: EngineKind) -> Result<Option<Runtime>> {
 }
 
 /// Parse the shared selection-config flags (`--k/--lambda/--loss/--stop
-/// family/--threads/--tile-cols/--precision`) — identical between
-/// `select` and `train-serve`.
+/// family/--threads/--tile-cols/--precision/--preselect family`) —
+/// identical between `select` and `train-serve`.
 fn parse_selection_config(args: &Args) -> Result<SelectionConfig> {
     let stop = cli::parse_stop_policy(args)?;
     Ok(SelectionConfig::builder()
@@ -98,7 +98,32 @@ fn parse_selection_config(args: &Args) -> Result<SelectionConfig> {
         .threads(args.get_or("threads", 0usize)?)
         .tile_cols(args.get_or("tile-cols", 0usize)?)
         .precision(args.get_or("precision", Precision::F64)?)
+        .preselect(parse_preselect(args)?)
         .build())
+}
+
+/// Parse the sketched-preselection flags (`--preselect P` with an
+/// optional `--sketch-dim D`), shared by `select`, `cv`, and `compare`.
+/// The sketch seed is the dataset `--seed` (default 42), so one flag
+/// pins generation, splits, and the sketch together. Without
+/// `--preselect`, a stray `--sketch-dim` is rejected instead of
+/// silently ignored (same contract as the stop-policy and mmap flag
+/// families).
+fn parse_preselect(args: &Args) -> Result<Option<PreselectConfig>> {
+    let Some(p) = args.get("preselect") else {
+        ensure!(
+            args.get("sketch-dim").is_none(),
+            "--sketch-dim requires --preselect"
+        );
+        return Ok(None);
+    };
+    let ps = PreselectConfig {
+        p: p.parse().context("--preselect P")?,
+        sketch_dim: args.get_or("sketch-dim", 0usize)?,
+        seed: args.get_or("seed", 42u64)?,
+    };
+    sketch::validate(&ps)?;
+    Ok(Some(ps))
 }
 
 /// Parse the `--backend` family into [`StorageOptions`] (shared by
@@ -278,6 +303,12 @@ fn print_problem_header(
     if cfg.precision != Precision::F64 {
         println!("precision={}", cfg.precision);
     }
+    if let Some(ps) = cfg.preselect {
+        println!(
+            "preselect p={} sketch_dim={} seed={}",
+            ps.p, ps.sketch_dim, ps.seed
+        );
+    }
 }
 
 /// Print the selection outcome lines shared by `select` and
@@ -426,6 +457,12 @@ fn cmd_select_stored(args: &Args) -> Result<()> {
             other => format!(" stop={other:?}"),
         }
     );
+    if let Some(ps) = cfg.preselect {
+        println!(
+            "preselect p={} sketch_dim={} seed={}",
+            ps.p, ps.sketch_dim, ps.seed
+        );
+    }
     // xtask-allow: no-raw-instant -- whole-command wall clock for the
     // outcome line; the session separately bills selection time
     let t0 = std::time::Instant::now();
@@ -433,7 +470,12 @@ fn cmd_select_stored(args: &Args) -> Result<()> {
     // autosaver; skipped entirely when the run is not checkpointed.
     let fp = match &ckpt.dir {
         Some(_) => Some(checkpoint::Fingerprint {
-            config: checkpoint::config_hash(&cfg),
+            // n-aware: an identity preselect filter (p >= n) leaves no
+            // marker, so its checkpoints interchange with plain greedy
+            config: checkpoint::config_hash_for(
+                &cfg,
+                Some(ds.n_features()),
+            ),
             data: ds.fingerprint()?,
         }),
         None => None,
@@ -655,6 +697,7 @@ fn cmd_cv(args: &Args) -> Result<()> {
         stop,
         engine,
         tile_cols: args.get_or("tile-cols", 0usize)?,
+        preselect: parse_preselect(args)?,
     };
     println!(
         "# cv dataset={} m={} n={} folds={folds} kmax={kmax} \
@@ -1138,16 +1181,35 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `compare`: the quality-vs-time frontier over the selector zoo. Every
+/// row runs as a session behind a [`TimingObserver`] and the library's
+/// scan-op counter, so the table reports honest per-selector wall-clock,
+/// rounds, and scan work at any `--stop` policy — a zero budget still
+/// emits every row, with `-` in the criterion/accuracy cells.
+/// `--preselect P` (plus optional `--sketch-dim D`) configures the
+/// sketched-greedy row; absent the flag it keeps half the features
+/// (never fewer than k) with exact leverage scores, so the row is a
+/// real frontier point out of the box. `--json FILE` writes the table
+/// as a JSON array (the CI sketch-smoke job uploads it as
+/// `BENCH_frontier.json`).
 fn cmd_compare(args: &Args) -> Result<()> {
+    use greedy_rls::bench::TimingObserver;
     use greedy_rls::data::folds::train_test_split;
     use greedy_rls::rng::Pcg64;
     use greedy_rls::runtime::engine::{
         PjrtBackward, PjrtFloating, PjrtFoba, PjrtGreedy, PjrtNFold,
     };
     use greedy_rls::select::{
-        backward::BackwardElimination, floating::FloatingForward, foba::Foba,
-        lowrank::LowRankLsSvm, nfold::NFoldGreedy, random::RandomSelector,
+        backward::BackwardElimination,
+        floating::FloatingForward,
+        foba::{DroppingFoba, Foba},
+        lowrank::LowRankLsSvm,
+        nfold::NFoldGreedy,
+        random::RandomSelector,
+        scan_ops,
+        sketch::SketchedGreedy,
         wrapper::Wrapper,
+        SessionSelector,
     };
 
     let ds = load_dataset(args)?;
@@ -1156,14 +1218,28 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let loss: Loss = args.get_or("loss", Loss::ZeroOne)?;
     let seed: u64 = args.get_or("seed", 42u64)?;
     let threads: usize = args.get_or("threads", 0usize)?;
+    let stop = cli::parse_stop_policy(args)?;
     let engine: EngineKind = args.get_or("engine", EngineKind::Native)?;
     let rt = open_runtime_if(engine)?;
     let cfg = SelectionConfig::builder()
         .k(k)
         .lambda(lambda)
         .loss(loss)
+        .stop(stop)
         .threads(threads)
         .build();
+    // The sketched row keeps the flagged survivor count, or defaults to
+    // half the features (never fewer than k) so the frontier always has
+    // a genuinely filtered data point.
+    let preselect = match parse_preselect(args)? {
+        Some(ps) => ps,
+        None => PreselectConfig {
+            p: (ds.n_features() / 2).max(k),
+            sketch_dim: 0,
+            seed,
+        },
+    };
+    let sketched_cfg = cfg.with().preselect(Some(preselect)).build();
 
     let mut rng = Pcg64::new(seed, 91);
     let (tr, te) = train_test_split(ds.n_examples(), 0.25, &mut rng);
@@ -1175,74 +1251,154 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let fast_only = train.n_examples() > 2000 || ds.n_features() > 300;
     let nfold_params =
         NFoldGreedy { folds: 10.min(train.n_examples()), seed };
-    let mut selectors: Vec<Box<dyn Selector + '_>> = match engine {
+    // One (name, session selector, config) triple per frontier row; the
+    // config rides along because sketched-greedy needs the preselect
+    // variant while every other selector rejects it.
+    type Row<'a> =
+        (&'static str, Box<dyn SessionSelector + 'a>, SelectionConfig);
+    let mut rows: Vec<Row<'_>> = match engine {
         EngineKind::Native => vec![
-            Box::new(GreedyRls),
-            Box::new(RandomSelector { seed }),
-            Box::new(Foba::default()),
-            Box::new(nfold_params),
+            ("greedy-rls", Box::new(GreedyRls), cfg),
+            ("sketched-greedy", Box::new(SketchedGreedy), sketched_cfg),
+            ("random", Box::new(RandomSelector { seed }), cfg),
+            ("foba", Box::new(Foba::default()), cfg),
+            ("dropping-foba", Box::new(DroppingFoba::default()), cfg),
+            ("nfold-greedy", Box::new(nfold_params), cfg),
         ],
         EngineKind::Pjrt => {
             let rt = rt
                 .as_ref()
                 .with_context(|| "pjrt engine requires an open runtime")?;
             vec![
-                Box::new(PjrtGreedy::new(rt)),
-                Box::new(PjrtFoba::new(rt)),
-                Box::new(PjrtNFold::with_params(rt, nfold_params)),
+                ("greedy-rls-pjrt", Box::new(PjrtGreedy::new(rt)), cfg),
+                ("foba-pjrt", Box::new(PjrtFoba::new(rt)), cfg),
+                (
+                    "nfold-greedy-pjrt",
+                    Box::new(PjrtNFold::with_params(rt, nfold_params)),
+                    cfg,
+                ),
             ]
         }
     };
     if !fast_only {
         match engine {
             EngineKind::Native => {
-                selectors.push(Box::new(LowRankLsSvm));
-                selectors.push(Box::new(Wrapper::shortcut()));
-                selectors.push(Box::new(BackwardElimination));
-                selectors.push(Box::new(FloatingForward::default()));
+                rows.push(("lowrank-lssvm", Box::new(LowRankLsSvm), cfg));
+                rows.push((
+                    "wrapper-shortcut",
+                    Box::new(Wrapper::shortcut()),
+                    cfg,
+                ));
+                rows.push((
+                    "backward-elimination",
+                    Box::new(BackwardElimination),
+                    cfg,
+                ));
+                rows.push((
+                    "floating-forward",
+                    Box::new(FloatingForward::default()),
+                    cfg,
+                ));
             }
             EngineKind::Pjrt => {
                 let rt = rt
                     .as_ref()
                     .with_context(|| "pjrt engine requires an open runtime")?;
-                selectors.push(Box::new(PjrtBackward::new(rt)));
-                selectors.push(Box::new(PjrtFloating::new(rt)));
+                rows.push((
+                    "backward-elimination-pjrt",
+                    Box::new(PjrtBackward::new(rt)),
+                    cfg,
+                ));
+                rows.push((
+                    "floating-forward-pjrt",
+                    Box::new(PjrtFloating::new(rt)),
+                    cfg,
+                ));
             }
         }
     }
 
     println!(
         "# compare dataset={} m_train={} n={} k={k} lambda={lambda} \
-         engine={engine:?}",
+         engine={engine:?} preselect_p={} sketch_dim={}{}",
         ds.name,
         train.n_examples(),
-        ds.n_features()
+        ds.n_features(),
+        preselect.p,
+        preselect.sketch_dim,
+        match stop {
+            StopPolicy::KBudget(b) if b == usize::MAX => String::new(),
+            other => format!(" stop={other:?}"),
+        }
     );
     if engine == EngineKind::Pjrt {
         println!(
             "# pjrt parity: wrapper's trajectory is served by the greedy \
              engine; random/lowrank/rankrls/centers are native-only"
         );
+        println!(
+            "# sketched-greedy and dropping-foba rows are native-only \
+             (the pjrt engine fences --preselect)"
+        );
     }
-    println!("selector\tseconds\ttest_acc\tselected");
-    for s in &selectors {
+    println!(
+        "selector\tseconds\tround_s\trounds\tscan_ops\tcriterion\t\
+         test_acc\tselected"
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for (name, sel, row_cfg) in &rows {
+        scan_ops::reset();
+        let mut obs = TimingObserver::default();
         let mut result = None;
+        // one clock over setup + drive + finish; the observer splits out
+        // the per-round share so truncated (--stop) rows stay honest
         let secs = time_once(|| {
-            result = Some(s.select(&train.x, &train.y, &cfg));
+            result = Some(sel.begin(&train.x, &train.y, row_cfg).and_then(
+                |mut s| {
+                    drive(s.as_mut(), &mut obs)?;
+                    s.finish()
+                },
+            ));
         });
+        let ops = scan_ops::total();
+        let round_s = obs.total_s();
         // time_once runs the closure exactly once, so `result` is Some.
         let Some(outcome) = result else { continue };
         match outcome {
             Ok(r) => {
-                let p = r.predictor().predict_matrix(&test.x);
-                let acc = greedy_rls::metrics::accuracy(&test.y, &p);
+                let crit = r.criterion_curve().last().copied();
+                let acc = if r.selected.is_empty() {
+                    None
+                } else {
+                    let p = r.predictor().predict_matrix(&test.x);
+                    Some(greedy_rls::metrics::accuracy(&test.y, &p))
+                };
+                let crit_cell = match crit {
+                    Some(c) => format!("{c:.6}"),
+                    None => "-".into(),
+                };
+                let acc_cell = match acc {
+                    Some(a) => format!("{a:.4}"),
+                    None => "-".into(),
+                };
                 println!(
-                    "{}\t{secs:.3}\t{acc:.4}\t{:?}",
-                    s.name(),
+                    "{name}\t{secs:.3}\t{round_s:.3}\t{}\t{ops}\t\
+                     {crit_cell}\t{acc_cell}\t{:?}",
+                    r.rounds.len(),
                     r.selected
                 );
+                json_rows.push(format!(
+                    "{{\"selector\":\"{name}\",\"seconds\":{secs:.6},\
+                     \"round_s\":{round_s:.6},\"rounds\":{},\
+                     \"scan_ops\":{ops},\"criterion\":{},\
+                     \"test_acc\":{},\"selected\":{:?}}}",
+                    r.rounds.len(),
+                    crit.map_or("null".into(), |c| format!("{c:.6}")),
+                    acc.map_or("null".into(), |a| format!("{a:.4}")),
+                    r.selected
+                ));
             }
-            Err(e) => println!("{}\tfailed: {e}", s.name()),
+            Err(e) => println!("{name}\tfailed: {e}"),
         }
     }
     if fast_only {
@@ -1250,6 +1406,11 @@ fn cmd_compare(args: &Args) -> Result<()> {
             "# quadratic baselines skipped (large problem); pass a smaller \
              dataset to include them"
         );
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, format!("[\n{}\n]\n", json_rows.join(",\n")))
+            .with_context(|| format!("writing {path}"))?;
+        println!("# frontier rows written to {path}");
     }
     Ok(())
 }

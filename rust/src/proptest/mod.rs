@@ -17,6 +17,9 @@
 //! });
 //! ```
 
+#[cfg(test)]
+mod sketch_props;
+
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 

@@ -121,6 +121,15 @@ impl<'a> EngineCore<'a> {
             "--precision {} is not supported by the pjrt engine",
             cfg.precision,
         );
+        // candidate masking lives in the compiled artifacts' BIG
+        // sentinel path; a pre-round survivor filter has no lowering
+        // yet, so the engine rejects it instead of silently scanning
+        // every candidate under a config that claims otherwise
+        ensure!(
+            cfg.preselect.is_none(),
+            "--preselect is not supported by the pjrt engine (sketched \
+             preselection runs on the native greedy-rls engine)",
+        );
         // Pad feature-major x (n × m) into the (nb rows × mb cols) bucket.
         let mut x_pad = vec![0.0; nb * mb];
         for i in 0..n {

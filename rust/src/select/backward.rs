@@ -211,6 +211,7 @@ impl SessionSelector for BackwardElimination {
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
         super::require_f64(cfg, "backward-elimination")?;
+        super::require_no_preselect(cfg, "backward-elimination")?;
         let mut st = BackState::init(x, y, cfg.lambda)?;
         st.threads = crate::parallel::resolve(cfg.threads);
         let core = BackwardCore {

@@ -75,6 +75,7 @@ impl SessionSelector for CenterSelector {
         ensure!(x.cols() == y.len(), "shape mismatch");
         ensure!(cfg.k <= x.cols(), "k={} > m={}", cfg.k, x.cols());
         super::require_f64(cfg, "greedy-centers")?;
+        super::require_no_preselect(cfg, "greedy-centers")?;
         // candidate "feature" matrix: kernel gram, one row per center
         // (rows are candidates exactly like features in Algorithm 3;
         // K is symmetric so rows == columns)

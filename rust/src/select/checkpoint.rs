@@ -96,7 +96,25 @@ pub struct Fingerprint {
 /// unchanged): an f32c trajectory is deterministic but *different* from
 /// the f64 one, so runs at different precisions must never silently
 /// resume each other.
+///
+/// `preselect` **is included** the same way — a filtered trajectory is
+/// deterministic but different, so its marker (`p`, `sketch_dim`,
+/// `seed`) trails the hash when a filter is configured. This variant
+/// hashes the config as declared; [`config_hash_for`] additionally
+/// normalizes identity filters away when the candidate count is known.
 pub fn config_hash(cfg: &SelectionConfig) -> u64 {
+    config_hash_for(cfg, None)
+}
+
+/// [`config_hash`] with the candidate count `n` when the caller knows
+/// it: a filter that keeps everything (`p >= n`) reproduces the exact
+/// greedy trajectory bitwise, so its marker is **not** written — the
+/// checkpoint is byte-identical to an unfiltered run's and the two
+/// resume each other freely, which is what the p = n acceptance
+/// gate checks. With `n = None` the marker is written for any
+/// configured filter (the conservative choice for callers that never
+/// see the data, e.g. cv sweep manifests).
+pub fn config_hash_for(cfg: &SelectionConfig, n: Option<usize>) -> u64 {
     let mut h = Fnv64::new();
     h.write(b"greedy-rls-config-v1");
     h.write_usize(cfg.k);
@@ -124,16 +142,29 @@ pub fn config_hash(cfg: &SelectionConfig) -> u64 {
         h.write(b"precision");
         h.write(cfg.precision.as_str().as_bytes());
     }
+    if let Some(ps) = cfg.preselect {
+        if n.map_or(true, |nn| ps.p < nn) {
+            h.write(b"preselect");
+            h.write_usize(ps.p);
+            h.write_usize(ps.sketch_dim);
+            h.write_u64(ps.seed);
+        }
+    }
     h.finish()
 }
 
-/// Fingerprint a selection problem (config + data).
+/// Fingerprint a selection problem (config + data). Knows the
+/// candidate count, so identity preselect filters hash like no filter
+/// at all — see [`config_hash_for`].
 pub fn fingerprint(
     x: &Matrix,
     y: &[f64],
     cfg: &SelectionConfig,
 ) -> Fingerprint {
-    Fingerprint { config: config_hash(cfg), data: fingerprint_xy(x, y) }
+    Fingerprint {
+        config: config_hash_for(cfg, Some(x.rows())),
+        data: fingerprint_xy(x, y),
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -153,6 +153,7 @@ impl SessionSelector for FloatingForward {
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
         super::require_f64(cfg, "floating-forward")?;
+        super::require_no_preselect(cfg, "floating-forward")?;
         let core = FloatingCore {
             x,
             y,

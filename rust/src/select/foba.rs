@@ -14,6 +14,14 @@
 //! than ν × the last forward gain). Criterion: the same LOO loss used by
 //! greedy RLS, so the selector composes with the rest of the framework
 //! and inherits its equivalence tests in the ν→∞ (never-delete) limit.
+//!
+//! [`DroppingFoba`] is the group-drop variant (arXiv 1910.08007): the
+//! backward pass ranks every deletion in **one** scan and drops the
+//! whole set of ν-qualifying weak features at once (shrinking the group
+//! from its costliest member until the joint drop fits the threshold),
+//! instead of re-scanning after every single deletion. On data where no
+//! deletion qualifies the two selectors take identical trajectories —
+//! the cross-selector equivalence suite pins that.
 
 use anyhow::ensure;
 
@@ -58,6 +66,9 @@ struct FobaCore<'a> {
     swap: bool,
     max_steps: usize,
     threads: usize,
+    /// Group-drop backward pass ([`DroppingFoba`]) instead of the
+    /// one-at-a-time deletion loop.
+    drop_group: bool,
     s: Vec<usize>,
     rounds: Vec<Round>,
     steps: usize,
@@ -90,6 +101,7 @@ impl FobaCore<'_> {
     }
 
     fn deletion_scores(&self) -> Vec<f64> {
+        super::scan_ops::add(self.s.len() as u64);
         crate::parallel::par_map(self.threads, self.s.len(), |pos| {
             let mut t = self.s.clone();
             t.remove(pos);
@@ -128,7 +140,9 @@ impl FobaCore<'_> {
         self.cur = score_b;
         let round = Round { feature: b, criterion: self.cur };
         self.rounds.push(round.clone());
-        if fwd_gain > 0.0 {
+        if fwd_gain > 0.0 && self.drop_group {
+            self.group_drop(b, fwd_gain);
+        } else if fwd_gain > 0.0 {
             // delete while cheap relative to the forward gain
             while self.s.len() > 1 && self.steps < self.max_steps {
                 self.steps += 1;
@@ -143,6 +157,45 @@ impl FobaCore<'_> {
             }
         }
         Ok(CoreStep::Committed(round))
+    }
+
+    /// Group-drop backward pass (arXiv 1910.08007): one ranked deletion
+    /// scan per forward step; every previously selected feature whose
+    /// *individual* removal costs < ν × the forward gain joins the drop
+    /// group (cheapest first, position ties low — deterministic). The
+    /// joint drop is then verified against the same threshold on the
+    /// recomputed criterion, shedding the group's costliest member and
+    /// retrying until it fits (each recompute bills one step). `b` — the
+    /// feature the forward step just added — never drops, and at least
+    /// one feature always remains.
+    fn group_drop(&mut self, b: usize, fwd_gain: f64) {
+        if self.s.len() <= 1 || self.steps >= self.max_steps {
+            return;
+        }
+        self.steps += 1;
+        let del = self.deletion_scores();
+        let thresh = self.nu * fwd_gain;
+        let mut group: Vec<usize> = (0..self.s.len())
+            .filter(|&pos| self.s[pos] != b && del[pos] - self.cur < thresh)
+            .collect();
+        group.sort_by(|&p, &q| del[p].total_cmp(&del[q]).then(p.cmp(&q)));
+        group.truncate(self.s.len() - 1);
+        while !group.is_empty() && self.steps < self.max_steps {
+            self.steps += 1;
+            let keep: Vec<usize> = (0..self.s.len())
+                .filter(|pos| !group.contains(pos))
+                .map(|pos| self.s[pos])
+                .collect();
+            let c = self.criterion(&keep);
+            if c - self.cur < thresh {
+                self.s = keep;
+                self.cur = c;
+                return;
+            }
+            // the group jointly costs too much — shed its most
+            // expensive member and retry
+            group.pop();
+        }
     }
 
     /// Swap step at |S| = k: overshoot to k+1 with the best addition,
@@ -229,6 +282,47 @@ impl SessionCore for FobaCore<'_> {
     }
 }
 
+/// Shared `begin` body of [`Foba`] and [`DroppingFoba`] — identical
+/// validation and core wiring, differing only in the backward pass.
+#[allow(clippy::too_many_arguments)]
+fn begin_foba<'a>(
+    x: &'a Matrix,
+    y: &'a [f64],
+    cfg: &SelectionConfig,
+    name: &str,
+    nu: f64,
+    swap: bool,
+    max_steps: usize,
+    drop_group: bool,
+) -> anyhow::Result<Box<dyn Session + 'a>> {
+    let n = x.rows();
+    ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
+    ensure!(cfg.lambda > 0.0, "λ must be positive");
+    ensure!(nu > 0.0, "ν must be positive");
+    ensure!(x.cols() == y.len(), "shape mismatch");
+    super::require_f64(cfg, name)?;
+    super::require_no_preselect(cfg, name)?;
+    let mut core = FobaCore {
+        x,
+        y,
+        lambda: cfg.lambda,
+        loss: cfg.loss,
+        k: cfg.k,
+        nu,
+        swap,
+        max_steps,
+        threads: crate::parallel::resolve(cfg.threads),
+        drop_group,
+        s: Vec::new(),
+        rounds: Vec::new(),
+        steps: 0,
+        cur: 0.0,
+        stable: false,
+    };
+    core.cur = core.criterion(&[]);
+    Ok(Box::new(PolicySession::new(core, cfg)?))
+}
+
 impl SessionSelector for Foba {
     fn begin<'a>(
         &self,
@@ -236,36 +330,72 @@ impl SessionSelector for Foba {
         y: &'a [f64],
         cfg: &SelectionConfig,
     ) -> anyhow::Result<Box<dyn Session + 'a>> {
-        let n = x.rows();
-        ensure!(cfg.k <= n, "k={} > n={}", cfg.k, n);
-        ensure!(cfg.lambda > 0.0, "λ must be positive");
-        ensure!(self.nu > 0.0, "ν must be positive");
-        ensure!(x.cols() == y.len(), "shape mismatch");
-        super::require_f64(cfg, "foba")?;
-        let mut core = FobaCore {
-            x,
-            y,
-            lambda: cfg.lambda,
-            loss: cfg.loss,
-            k: cfg.k,
-            nu: self.nu,
-            swap: self.swap,
-            max_steps: self.max_steps,
-            threads: crate::parallel::resolve(cfg.threads),
-            s: Vec::new(),
-            rounds: Vec::new(),
-            steps: 0,
-            cur: 0.0,
-            stable: false,
-        };
-        core.cur = core.criterion(&[]);
-        Ok(Box::new(PolicySession::new(core, cfg)?))
+        begin_foba(
+            x, y, cfg, "foba", self.nu, self.swap, self.max_steps, false,
+        )
     }
 }
 
 impl Selector for Foba {
     fn name(&self) -> &'static str {
         "foba"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<SelectionResult> {
+        super::run_to_completion(self.begin(x, y, cfg)?)
+    }
+}
+
+/// Dropping Forward-Backward selection (arXiv 1910.08007): [`Foba`]
+/// whose backward pass drops the whole group of ν-qualifying weak
+/// features per forward step in one ranked deletion scan — see
+/// [`FobaCore::group_drop`]. Same criterion, stop policies, threading,
+/// and session surface as `foba`.
+#[derive(Clone, Copy, Debug)]
+pub struct DroppingFoba {
+    /// Deletion threshold ν ∈ (0, 1] shared with [`Foba::nu`]; here it
+    /// gates both group membership and the joint-drop verification.
+    pub nu: f64,
+    /// Enable the swap phase at |S| = k (identical to [`Foba::swap`]).
+    pub swap: bool,
+    /// Step budget guard.
+    pub max_steps: usize,
+}
+
+impl Default for DroppingFoba {
+    fn default() -> Self {
+        DroppingFoba { nu: 0.5, swap: true, max_steps: 10_000 }
+    }
+}
+
+impl SessionSelector for DroppingFoba {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> anyhow::Result<Box<dyn Session + 'a>> {
+        begin_foba(
+            x,
+            y,
+            cfg,
+            "dropping-foba",
+            self.nu,
+            self.swap,
+            self.max_steps,
+            true,
+        )
+    }
+}
+
+impl Selector for DroppingFoba {
+    fn name(&self) -> &'static str {
+        "dropping-foba"
     }
 
     fn select(
@@ -335,6 +465,52 @@ mod tests {
         let mut sel = foba.selected.clone();
         sel.sort_unstable();
         assert_eq!(sel, vec![0, 1], "FoBa must drop the bait: {sel:?}");
+    }
+
+    #[test]
+    fn dropping_foba_also_drops_the_bait() {
+        // the group-drop backward pass must shed the bait feature just
+        // like the one-at-a-time pass does
+        let mut rng = crate::rng::Pcg64::new(5, 301);
+        let m = 120;
+        let mut x = Matrix::zeros(3, m);
+        let mut y = vec![0.0; m];
+        for j in 0..m {
+            let a = rng.normal();
+            let b = rng.normal();
+            x[(0, j)] = a;
+            x[(1, j)] = b;
+            x[(2, j)] = 0.9 * (a + b) + 0.30 * rng.normal();
+            y[j] = a + b;
+        }
+        let cfg = SelectionConfig { k: 2, lambda: 1e-3, loss: Loss::Squared, ..Default::default() };
+        let df = DroppingFoba { nu: 0.9, swap: true, max_steps: 10_000 }
+            .select(&x, &y, &cfg)
+            .unwrap();
+        let mut sel = df.selected.clone();
+        sel.sort_unstable();
+        assert_eq!(sel, vec![0, 1], "group drop must shed the bait: {sel:?}");
+    }
+
+    #[test]
+    fn foba_rejects_preselect() {
+        let ds = crate::data::synthetic::two_gaussians(20, 5, 2, 1.0, 1);
+        let cfg = SelectionConfig::builder()
+            .k(2)
+            .preselect(Some(crate::select::PreselectConfig {
+                p: 3,
+                sketch_dim: 0,
+                seed: 0,
+            }))
+            .build();
+        for (name, r) in [
+            ("foba", Foba::default().select(&ds.x, &ds.y, &cfg)),
+            ("dropping-foba", DroppingFoba::default().select(&ds.x, &ds.y, &cfg)),
+        ] {
+            let err = r.unwrap_err();
+            assert!(err.to_string().contains(name), "{err}");
+            assert!(err.to_string().contains("--preselect"), "{err}");
+        }
     }
 
     #[test]

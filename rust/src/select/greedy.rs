@@ -188,6 +188,33 @@ impl GreedyState {
         self
     }
 
+    /// Restrict the candidate set to `survivors` (ascending, in-range)
+    /// before any rounds — the sketched-preselection entry point
+    /// ([`super::sketch`]). Non-survivors are masked exactly the way
+    /// [`GreedyState::commit`] retires selected features (mask zeroed,
+    /// dropped from the active list), so scans skip them, commits and
+    /// forced rounds reject them, and every downstream path — sessions,
+    /// checkpoints, warm starts, the PJRT mask reflection — works
+    /// unchanged.
+    ///
+    /// Panics if any round already ran: restriction is a pre-round
+    /// configuration step, like [`GreedyState::with_precision`].
+    pub fn restrict_to(mut self, survivors: &[usize]) -> Self {
+        assert!(
+            self.selected.is_empty(),
+            "candidate restriction must precede the first round"
+        );
+        for v in self.cand_mask.iter_mut() {
+            *v = 0.0;
+        }
+        for &i in survivors {
+            assert!(i < self.n, "survivor {i} out of range (n={})", self.n);
+            self.cand_mask[i] = 1.0;
+        }
+        self.active = survivors.to_vec();
+        self
+    }
+
     /// LOO criterion of S ∪ {i} for every candidate i (Algorithm 3 lines
     /// 8–17, all candidates). Selected/masked candidates score [`BIG`].
     ///
@@ -204,6 +231,7 @@ impl GreedyState {
     /// [`GreedyState::score_of`].
     pub fn score_all(&self, x: &Matrix, y: &[f64], loss: Loss) -> Vec<f64> {
         let m = self.m;
+        super::scan_ops::add(self.active.len() as u64);
         let mut scores = vec![BIG; self.n];
         let active = &self.active;
         let ranges = crate::parallel::quad_ranges(active.len(), self.threads);
@@ -306,6 +334,7 @@ impl GreedyState {
         b: usize,
     ) -> f64 {
         let m = self.m;
+        super::scan_ops::add(1);
         let active = &self.active;
         let pos = active
             .binary_search(&b)
@@ -558,6 +587,24 @@ impl StoredGreedyState {
         self
     }
 
+    /// Stored twin of [`GreedyState::restrict_to`] — same invariants,
+    /// surfaced as a `Result` like the rest of this engine.
+    fn restrict_to(mut self, survivors: &[usize]) -> anyhow::Result<Self> {
+        ensure!(
+            self.selected.is_empty(),
+            "candidate restriction must precede the first round"
+        );
+        for v in self.cand_mask.iter_mut() {
+            *v = 0.0;
+        }
+        for &i in survivors {
+            ensure!(i < self.n, "survivor {i} out of range (n={})", self.n);
+            self.cand_mask[i] = 1.0;
+        }
+        self.active = survivors.to_vec();
+        Ok(self)
+    }
+
     /// Windowed, tiled scan — the stored twin of
     /// [`GreedyState::score_all`]. The active list is sharded at quad
     /// boundaries exactly like the in-RAM scan; within a shard,
@@ -576,6 +623,7 @@ impl StoredGreedyState {
     ) -> anyhow::Result<Vec<f64>> {
         let m = self.m;
         let tile = self.tile_cols;
+        super::scan_ops::add(self.active.len() as u64);
         let mut scores = vec![BIG; self.n];
         let active = &self.active;
         let wrows = x.window_rows().min(self.ct.window_rows()).max(1);
@@ -662,6 +710,7 @@ impl StoredGreedyState {
         loss: Loss,
         b: usize,
     ) -> anyhow::Result<f64> {
+        super::scan_ops::add(1);
         let active = &self.active;
         let pos = active
             .binary_search(&b)
@@ -797,8 +846,17 @@ impl StoredGreedyCore {
             y.iter().all(|v| v.is_finite()),
             "y contains non-finite values"
         );
-        let st = StoredGreedyState::init(&x, &y, cfg.lambda, opts)?
+        let mut st = StoredGreedyState::init(&x, &y, cfg.lambda, opts)?
             .with_threads(cfg.threads);
+        if let Some(keep) = super::sketch::survivors_stored(&x, cfg)? {
+            ensure!(
+                cfg.k <= keep.len(),
+                "k={} exceeds the preselect survivor count p={}",
+                cfg.k,
+                keep.len()
+            );
+            st = st.restrict_to(&keep)?;
+        }
         Ok(StoredGreedyCore {
             loss: cfg.loss,
             k: cfg.k,
@@ -926,10 +984,19 @@ impl<'a> GreedyCore<'a> {
             y.iter().all(|v| v.is_finite()),
             "y contains non-finite values"
         );
-        let st = GreedyState::init(&x, &y, cfg.lambda)
+        let mut st = GreedyState::init(&x, &y, cfg.lambda)
             .with_threads(cfg.threads)
             .with_tile_cols(cfg.tile_cols)
             .with_precision(cfg.precision);
+        if let Some(keep) = super::sketch::survivors(&x, cfg)? {
+            ensure!(
+                cfg.k <= keep.len(),
+                "k={} exceeds the preselect survivor count p={}",
+                cfg.k,
+                keep.len()
+            );
+            st = st.restrict_to(&keep);
+        }
         Ok(GreedyCore {
             loss: cfg.loss,
             k: cfg.k,

@@ -150,6 +150,7 @@ impl SessionSelector for LowRankLsSvm {
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(m == y.len(), "shape mismatch");
         super::require_f64(cfg, "lowrank-lssvm")?;
+        super::require_no_preselect(cfg, "lowrank-lssvm")?;
 
         // lines 1–3: S = ∅, a = λ⁻¹y, G = λ⁻¹I
         let inv = 1.0 / cfg.lambda;

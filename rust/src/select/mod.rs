@@ -15,6 +15,7 @@
 //! | [`nfold`] | greedy forward with n-fold-CV criterion (§5) | O(kmn) |
 //! | [`centers`] | reduced-set / RBF-center selection for kernel RLS (§5) | O(km²) |
 //! | [`rankrls`] | greedy forward selection for RankRLS (§5, refs \[32, 33\]) | O(kn(k² + km)) |
+//! | [`sketch`] | sketched preselection: leverage-score filter → exact greedy (Paul & Drineas) | O(dmn) once + O(kmp) |
 //!
 //! All selectors consume the same feature-major `X` (n × m) and return a
 //! [`SelectionResult`]; equivalence across Algorithms 1–3 is enforced by
@@ -42,6 +43,7 @@ pub mod nfold;
 pub mod random;
 pub mod rankrls;
 pub mod session;
+pub mod sketch;
 pub mod wrapper;
 
 pub use checkpoint::{
@@ -53,6 +55,8 @@ pub use session::{
     Observers, Session, SessionSelector, SessionState, StateObserver,
     StepOutcome, StopPolicy, StopReason,
 };
+
+pub use sketch::{PreselectConfig, SketchedGreedy};
 
 pub use crate::kernel::{KernelKind, Precision};
 
@@ -115,6 +119,23 @@ pub struct SelectionConfig {
     /// selector on the in-RAM backend only; every other selector, the
     /// stored backend, and the PJRT engine reject it at `begin`.
     pub precision: Precision,
+    /// Optional sketched preselection filter (see [`sketch`]): before
+    /// round one, approximate ridge leverage scores rank all `n`
+    /// candidates and only the top `p` survive, turning the per-round
+    /// O(mn) scan into O(mp). `None` (the default) scans every
+    /// candidate — the pre-sketch behavior.
+    ///
+    /// Supported by the greedy engine on both backends (the survivors
+    /// become the engine's initial candidate mask, so checkpoints, warm
+    /// starts, observers, threads, and precision work unchanged); every
+    /// other selector and the PJRT engine reject it at `begin`. A
+    /// filter that keeps everything (`p >= n`) is the identity — it
+    /// consumes no RNG and reproduces the exact greedy trajectory
+    /// bitwise, checkpoint bytes included. Participates in checkpoint
+    /// config fingerprints via a trailing marker (legacy hashes are
+    /// preserved when `None` or when `p >= n` normalizes the filter
+    /// away).
+    pub preselect: Option<PreselectConfig>,
 }
 
 impl Default for SelectionConfig {
@@ -127,6 +148,7 @@ impl Default for SelectionConfig {
             threads: 0,
             tile_cols: 0,
             precision: Precision::F64,
+            preselect: None,
         }
     }
 }
@@ -210,6 +232,14 @@ impl SelectionConfigBuilder {
         self
     }
 
+    /// Sketched preselection filter (`None` disables) — see
+    /// [`SelectionConfig::preselect`] for the support matrix and
+    /// fingerprint semantics.
+    pub fn preselect(mut self, preselect: Option<PreselectConfig>) -> Self {
+        self.cfg.preselect = preselect;
+        self
+    }
+
     /// Finalize the configuration.
     pub fn build(self) -> SelectionConfig {
         self.cfg
@@ -287,6 +317,7 @@ where
     S: Fn(usize) -> f64 + Sync,
 {
     let idx: Vec<usize> = (0..n).filter(|&i| active(i)).collect();
+    scan_ops::add(idx.len() as u64);
     let mut scores = vec![BIG; n];
     let t = crate::parallel::resolve(threads).min(idx.len());
     if t <= 1 {
@@ -323,6 +354,53 @@ pub(crate) fn require_f64(
         cfg.precision,
     );
     Ok(())
+}
+
+/// Guard for engines that scan every candidate: every selector other
+/// than the (sketched) greedy engine rejects `--preselect` at `begin`
+/// with a uniform error, instead of silently ignoring the filter.
+pub(crate) fn require_no_preselect(
+    cfg: &SelectionConfig,
+    selector: &str,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        cfg.preselect.is_none(),
+        "--preselect is not supported by the {selector} selector \
+         (sketched preselection runs on the greedy-rls engine only)",
+    );
+    Ok(())
+}
+
+/// Per-thread tally of candidate-scoring operations — the scan-work
+/// column of the `compare` frontier table.
+///
+/// One "op" is one candidate scored: every per-round scan
+/// ([`scan_candidates`], the greedy engines' `score_all`/`score_of`,
+/// FoBa's deletion pass) adds its candidate count **on the calling
+/// thread before dispatching workers**, so the counter is exact
+/// whenever selection is driven from one thread (as `compare` does)
+/// regardless of how many workers the scan itself fans out to.
+pub mod scan_ops {
+    use std::cell::Cell;
+
+    thread_local! {
+        static OPS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Zero this thread's tally (call before a measured run).
+    pub fn reset() {
+        OPS.with(|c| c.set(0));
+    }
+
+    /// This thread's tally since the last [`reset`].
+    pub fn total() -> u64 {
+        OPS.with(|c| c.get())
+    }
+
+    /// Record `n` candidate-scoring operations.
+    pub(crate) fn add(n: u64) {
+        OPS.with(|c| c.set(c.get() + n));
+    }
 }
 
 /// Strict-argmin over candidate scores; ties break to the lowest index

@@ -259,6 +259,7 @@ impl SessionSelector for NFoldGreedy {
         ensure!(self.folds >= 2 && self.folds <= m, "bad fold count");
         ensure!(m == y.len(), "shape mismatch");
         super::require_f64(cfg, "nfold-greedy")?;
+        super::require_no_preselect(cfg, "nfold-greedy")?;
 
         let fold_vec = self.fold_assignment(m);
         let mut st = NFoldState::init(x, y, cfg.lambda, fold_vec);

@@ -117,6 +117,7 @@ impl SessionSelector for RandomSelector {
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
         super::require_f64(cfg, "random")?;
+        super::require_no_preselect(cfg, "random")?;
         let mut rng = Pcg64::new(self.seed, 31);
         let order = rng.choose_distinct(n, cfg.k);
         let core = RandomCore {

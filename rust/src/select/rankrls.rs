@@ -188,6 +188,7 @@ impl SessionSelector for GreedyRankRls {
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(m == y.len(), "shape mismatch");
         super::require_f64(cfg, "greedy-rankrls")?;
+        super::require_no_preselect(cfg, "greedy-rankrls")?;
 
         // precompute L-products that never change: Lx_i rows and Ly
         let lx: Vec<Vec<f64>> =

@@ -1,0 +1,411 @@
+//! Sketched preselection: a seeded leverage-score filter in front of
+//! the exact greedy engine (ROADMAP "Sketched preselection"; Paul &
+//! Drineas, arXiv 1506.05173).
+//!
+//! The paper's greedy scan is O(mn) per round. Ridge leverage scores
+//! rank how much each feature row can matter to *any* regularized
+//! least-squares fit, so computing them once and keeping only the top
+//! `p` candidates turns every subsequent scan into O(mp) while the
+//! exact LOO machinery — stop policies, checkpoints, warm starts,
+//! observers, threads, precision, both data backends — runs unchanged
+//! on the survivor set.
+//!
+//! Two score paths share one accumulation kernel:
+//!
+//! * **Exact** (`sketch_dim == 0`, or `>= n` where a projection could
+//!   not compress anything): τ_i = x_iᵀ (XᵀX + λI)⁻¹ x_i — the ridge
+//!   leverage score itself, and the reference oracle the property
+//!   tests compare the projected path against.
+//! * **Sketched** (`0 < sketch_dim < n`): a seeded Rademacher
+//!   projection `B = ΠX` (d × m, signs ±1/√d from a dedicated
+//!   [`Pcg64`] stream) stands in for `X`, and the Woodbury identity
+//!   evaluates τ̃_i = x_iᵀ (BᵀB + λI)⁻¹ x_i as
+//!   (‖x_i‖² − b_iᵀ (BBᵀ + λI)⁻¹ b_i) / λ with b_i = B x_i, keeping
+//!   the whole pass linear in both n and m: O(nmd) total.
+//!
+//! **Determinism.** Projection signs are drawn feature-major from
+//! `Pcg64::new(seed, SKETCH_STREAM)` in a serial build loop, so they
+//! depend only on `seed`. The per-feature score pass goes through
+//! [`scan_candidates`] (candidates are scored independently — the
+//! assembled vector is bit-identical at every thread count), the
+//! stored backend stages each row through `read_row_into` into the
+//! same arithmetic, and every accumulation routes through the
+//! [`kernel`] tier (`axpy`/`dot`, bit-identical across kinds). Hence
+//! scores — and the survivor set — are bit-identical across threads,
+//! tile widths, kernel kinds, and backends. A filter that keeps
+//! everything (`p >= n`) is the identity: it consumes no RNG and the
+//! run reproduces the exact greedy trajectory bitwise, checkpoint
+//! bytes included (the config-fingerprint marker normalizes away with
+//! it — see [`super::checkpoint`]).
+
+use anyhow::{ensure, Context, Result};
+
+use super::greedy::GreedyRls;
+use super::{
+    run_to_completion, scan_candidates, SelectionConfig, SelectionResult,
+    Selector, Session, SessionSelector,
+};
+use crate::data::storage::MatrixStore;
+use crate::kernel::{self, KernelKind};
+use crate::linalg::{spd_inverse, Matrix};
+use crate::rng::Pcg64;
+
+/// Dedicated RNG stream for projection signs so the sketch never
+/// entangles with data-generation or split streams sharing a seed.
+const SKETCH_STREAM: u64 = 0x6c65_7665; // "leve"
+
+/// Sketched-preselection parameters, carried by
+/// [`SelectionConfig::preselect`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PreselectConfig {
+    /// Survivor count: the top-`p` features by approximate leverage
+    /// score pass the filter. `p >= n` keeps every candidate — the
+    /// identity filter (no RNG consumed, exact greedy bitwise).
+    pub p: usize,
+    /// Rademacher projection rows `d`. `0` (the CLI default) means no
+    /// projection: compute exact ridge leverage scores — O(nm²), the
+    /// oracle path, right for small problems and tests. Values `>= n`
+    /// also take the exact path (a projection that large compresses
+    /// nothing).
+    pub sketch_dim: usize,
+    /// Seed of the sketch's own RNG stream (only the projected path
+    /// consumes it).
+    pub seed: u64,
+}
+
+/// Reject degenerate filters before any work happens.
+pub fn validate(ps: &PreselectConfig) -> Result<()> {
+    ensure!(
+        ps.p >= 1,
+        "--preselect must keep at least one candidate (got p = 0)"
+    );
+    Ok(())
+}
+
+/// Approximate ridge leverage scores of every feature row of the
+/// in-RAM matrix `x` (n × m, feature-major), one per row. Exact when
+/// `ps.sketch_dim` is `0` or `>= n`. Scores are clamped at zero (the
+/// Woodbury subtraction can round a true zero a few ulp negative).
+pub fn leverage_scores(
+    x: &Matrix,
+    lambda: f64,
+    ps: &PreselectConfig,
+    threads: usize,
+    kind: KernelKind,
+) -> Result<Vec<f64>> {
+    let plan = SketchPlan::build(x.rows(), x.cols(), lambda, ps, kind, |i, out| {
+        out.clear();
+        out.extend_from_slice(x.row(i));
+        Ok(())
+    })?;
+    Ok(scan_candidates(x.rows(), threads, |_| true, |i| {
+        plan.score(x.row(i))
+    }))
+}
+
+/// [`leverage_scores`] for the stored backend: rows are staged through
+/// `read_row_into` into the identical arithmetic, so scores are
+/// bit-identical to the in-RAM path on the same data. The score pass
+/// is serial (row reads can fail, and the sketch build already
+/// streamed the store once); it bills the same
+/// [`super::scan_ops`] count as the parallel path.
+pub fn leverage_scores_stored(
+    x: &MatrixStore,
+    lambda: f64,
+    ps: &PreselectConfig,
+    kind: KernelKind,
+) -> Result<Vec<f64>> {
+    let (n, m) = (x.rows(), x.row_len());
+    let plan =
+        SketchPlan::build(n, m, lambda, ps, kind, |i, out| x.read_row_into(i, out))?;
+    super::scan_ops::add(n as u64);
+    let mut buf = vec![0.0; m];
+    let mut scores = Vec::with_capacity(n);
+    for i in 0..n {
+        x.read_row_into(i, &mut buf)?;
+        scores.push(plan.score(&buf));
+    }
+    Ok(scores)
+}
+
+/// Indices of the top-`p` scores — descending by score, ties to the
+/// lowest index (the repo-wide tie rule) — returned ascending, the
+/// order the greedy engines keep their active sets in.
+pub fn top_p(scores: &[f64], p: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    idx.truncate(p);
+    idx.sort_unstable();
+    idx
+}
+
+/// Survivor set for `cfg` on the in-RAM backend: `None` when no filter
+/// is configured or it is the identity (`p >= n`), otherwise the
+/// ascending top-`p` candidate indices.
+pub(crate) fn survivors(
+    x: &Matrix,
+    cfg: &SelectionConfig,
+) -> Result<Option<Vec<usize>>> {
+    let Some(ps) = cfg.preselect else {
+        return Ok(None);
+    };
+    validate(&ps)?;
+    if ps.p >= x.rows() {
+        return Ok(None);
+    }
+    let scores =
+        leverage_scores(x, cfg.lambda, &ps, cfg.threads, KernelKind::active())?;
+    Ok(Some(top_p(&scores, ps.p)))
+}
+
+/// [`survivors`] for the stored backend — same decisions, same bits.
+pub(crate) fn survivors_stored(
+    x: &MatrixStore,
+    cfg: &SelectionConfig,
+) -> Result<Option<Vec<usize>>> {
+    let Some(ps) = cfg.preselect else {
+        return Ok(None);
+    };
+    validate(&ps)?;
+    if ps.p >= x.rows() {
+        return Ok(None);
+    }
+    let scores =
+        leverage_scores_stored(x, cfg.lambda, &ps, KernelKind::active())?;
+    Ok(Some(top_p(&scores, ps.p)))
+}
+
+/// The factored score pass: everything the per-feature closure needs,
+/// built once per filter invocation by streaming the data a single
+/// time through a caller-supplied row accessor.
+enum SketchPlan {
+    /// Exact path: `K⁻¹ = (XᵀX + λI)⁻¹` (m × m).
+    Exact { kinv: Matrix, kind: KernelKind },
+    /// Projected path: `B = ΠX` (d × m) and `S⁻¹ = (BBᵀ + λI)⁻¹`
+    /// (d × d), evaluated through the Woodbury identity.
+    Projected { b: Matrix, sinv: Matrix, lambda: f64, kind: KernelKind },
+}
+
+impl SketchPlan {
+    fn build<F>(
+        n: usize,
+        m: usize,
+        lambda: f64,
+        ps: &PreselectConfig,
+        kind: KernelKind,
+        mut row: F,
+    ) -> Result<SketchPlan>
+    where
+        F: FnMut(usize, &mut Vec<f64>) -> Result<()>,
+    {
+        validate(ps)?;
+        ensure!(
+            lambda > 0.0,
+            "lambda must be positive for leverage scores (got {lambda})"
+        );
+        ensure!(n > 0 && m > 0, "empty matrix has no leverage scores");
+        let mut buf = vec![0.0; m];
+        let d = ps.sketch_dim;
+        if d == 0 || d >= n {
+            // Exact Gram accumulation: K = Σ_i x_i x_iᵀ + λI. One
+            // kernel-tier axpy per output row keeps the serial
+            // operation sequence single-sourced.
+            let mut k = Matrix::zeros(m, m);
+            for i in 0..n {
+                row(i, &mut buf)?;
+                for r in 0..m {
+                    kernel::axpy(kind, buf[r], &buf, k.row_mut(r));
+                }
+            }
+            k.add_diag(lambda);
+            let kinv = spd_inverse(&k).context(
+                "ridge Gram matrix is not positive definite — is λ > 0 \
+                 and the data finite?",
+            )?;
+            Ok(SketchPlan::Exact { kinv, kind })
+        } else {
+            // B = ΠX, accumulated feature-major so each row is
+            // streamed off the backend exactly once; the sign sequence
+            // is a pure function of the seed.
+            let scale = 1.0 / (d as f64).sqrt();
+            let mut rng = Pcg64::new(ps.seed, SKETCH_STREAM);
+            let mut b = Matrix::zeros(d, m);
+            for i in 0..n {
+                row(i, &mut buf)?;
+                for r in 0..d {
+                    kernel::axpy(kind, rng.sign() * scale, &buf, b.row_mut(r));
+                }
+            }
+            // S = BBᵀ + λI is d × d — small by construction.
+            let mut s = Matrix::zeros(d, d);
+            for r in 0..d {
+                for q in 0..d {
+                    s.row_mut(r)[q] = kernel::dot(kind, b.row(r), b.row(q));
+                }
+            }
+            s.add_diag(lambda);
+            let sinv = spd_inverse(&s).context(
+                "sketch Gram matrix is not positive definite — is λ > 0 \
+                 and the data finite?",
+            )?;
+            Ok(SketchPlan::Projected { b, sinv, lambda, kind })
+        }
+    }
+
+    /// τ̃ of one feature row. Pure in `xi` and `self` — safe to fan out
+    /// across scan workers.
+    fn score(&self, xi: &[f64]) -> f64 {
+        match self {
+            SketchPlan::Exact { kinv, kind } => {
+                kernel::dot(*kind, xi, &kinv.matvec(xi)).max(0.0)
+            }
+            SketchPlan::Projected { b, sinv, lambda, kind } => {
+                let bi = b.matvec(xi);
+                let ss = kernel::dot(*kind, xi, xi);
+                let proj = kernel::dot(*kind, &bi, &sinv.matvec(&bi));
+                ((ss - proj) / lambda).max(0.0)
+            }
+        }
+    }
+}
+
+/// Filter-then-exact session selector: requires a configured
+/// [`PreselectConfig`], then delegates to [`GreedyRls`] — the greedy
+/// cores apply the filter themselves whenever `cfg.preselect` is set,
+/// so sessions behave exactly like greedy sessions (checkpoints, warm
+/// starts, observers, threads, precision, ram and mmap backends).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SketchedGreedy;
+
+impl SessionSelector for SketchedGreedy {
+    fn begin<'a>(
+        &self,
+        x: &'a Matrix,
+        y: &'a [f64],
+        cfg: &SelectionConfig,
+    ) -> Result<Box<dyn Session + 'a>> {
+        ensure!(
+            cfg.preselect.is_some(),
+            "sketched-greedy requires --preselect (an unfiltered run is \
+             plain greedy-rls)"
+        );
+        GreedyRls.begin(x, y, cfg)
+    }
+}
+
+impl Selector for SketchedGreedy {
+    fn name(&self) -> &'static str {
+        "sketched-greedy"
+    }
+
+    fn select(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &SelectionConfig,
+    ) -> Result<SelectionResult> {
+        run_to_completion(SessionSelector::begin(self, x, y, cfg)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::assert_close;
+
+    fn ps(p: usize, d: usize, seed: u64) -> PreselectConfig {
+        PreselectConfig { p, sketch_dim: d, seed }
+    }
+
+    #[test]
+    fn validate_rejects_empty_filter() {
+        assert!(validate(&ps(0, 0, 7)).is_err());
+        assert!(validate(&ps(1, 0, 7)).is_ok());
+    }
+
+    #[test]
+    fn exact_scores_match_hand_computed_oracle() {
+        // Feature rows (1, 0) and (0, 2); K = diag(1, 4) + I, so
+        // τ₀ = 1/2 and τ₁ = 4/5.
+        let x = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let t =
+            leverage_scores(&x, 1.0, &ps(1, 0, 0), 1, KernelKind::Scalar)
+                .unwrap();
+        assert_close(&t, &[0.5, 0.8], 1e-12, "tau");
+    }
+
+    #[test]
+    fn big_sketch_dim_takes_the_exact_path() {
+        let x = Matrix::from_rows(&[&[1.0, 0.5], &[0.25, 2.0], &[3.0, 1.0]]);
+        let exact =
+            leverage_scores(&x, 0.5, &ps(2, 0, 3), 1, KernelKind::Scalar)
+                .unwrap();
+        // d >= n compresses nothing: identical bits, and the seed is
+        // irrelevant because no RNG is consumed on the exact path.
+        for d in [3, 4, 100] {
+            let t = leverage_scores(
+                &x,
+                0.5,
+                &ps(2, d, 99),
+                1,
+                KernelKind::Scalar,
+            )
+            .unwrap();
+            for (a, b) in exact.iter().zip(&t) {
+                assert_eq!(a.to_bits(), b.to_bits(), "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn sketched_scores_are_seed_deterministic() {
+        let mut rng = Pcg64::seeded(11);
+        let rows: Vec<Vec<f64>> = (0..12)
+            .map(|_| (0..6).map(|_| rng.normal()).collect())
+            .collect();
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs);
+        let a = leverage_scores(&x, 1.0, &ps(4, 3, 42), 1, KernelKind::Scalar)
+            .unwrap();
+        let b = leverage_scores(&x, 1.0, &ps(4, 3, 42), 4, KernelKind::Scalar)
+            .unwrap();
+        let c = leverage_scores(&x, 1.0, &ps(4, 3, 43), 1, KernelKind::Scalar)
+            .unwrap();
+        assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
+        assert!(
+            a.iter().zip(&c).any(|(p, q)| p.to_bits() != q.to_bits()),
+            "different sketch seeds should disagree somewhere"
+        );
+        assert!(a.iter().all(|&t| t >= 0.0 && t.is_finite()));
+    }
+
+    #[test]
+    fn top_p_breaks_ties_low_and_returns_ascending() {
+        let scores = [1.0, 3.0, 3.0, 0.5, 2.0];
+        assert_eq!(top_p(&scores, 2), vec![1, 2]);
+        assert_eq!(top_p(&scores, 3), vec![1, 2, 4]);
+        assert_eq!(top_p(&scores, 99), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn identity_filter_yields_no_survivor_set() {
+        let x = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let cfg = SelectionConfig::builder()
+            .preselect(Some(ps(2, 0, 0)))
+            .build();
+        assert!(survivors(&x, &cfg).unwrap().is_none());
+        let cfg = cfg.with().preselect(Some(ps(1, 0, 0))).build();
+        assert_eq!(survivors(&x, &cfg).unwrap(), Some(vec![1]));
+        let cfg = cfg.with().preselect(None).build();
+        assert!(survivors(&x, &cfg).unwrap().is_none());
+    }
+
+    #[test]
+    fn sketched_greedy_requires_a_filter() {
+        let x = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]);
+        let y = [1.0, -1.0];
+        let cfg = SelectionConfig::builder().k(1).build();
+        let err = SketchedGreedy.select(&x, &y, &cfg).unwrap_err();
+        assert!(err.to_string().contains("--preselect"), "{err}");
+    }
+}

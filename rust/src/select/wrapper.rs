@@ -152,6 +152,7 @@ impl SessionSelector for Wrapper {
         ensure!(cfg.lambda > 0.0, "λ must be positive");
         ensure!(x.cols() == y.len(), "shape mismatch");
         super::require_f64(cfg, "wrapper")?;
+        super::require_no_preselect(cfg, "wrapper")?;
         let core = WrapperCore {
             x,
             y,

@@ -338,6 +338,83 @@ fn compare_runs_all_selectors() {
     }
 }
 
+/// Regression (frontier accounting): `compare` must emit a well-formed
+/// row for every selector even when a zero time budget truncates every
+/// run at round 0 — empty-trajectory cells print "-" instead of
+/// panicking or dropping the row.
+#[test]
+fn compare_zero_time_budget_emits_well_formed_table() {
+    let (ok, stdout, stderr) = run(&[
+        "compare",
+        "--synthetic",
+        "80,20",
+        "--k",
+        "3",
+        "--stop",
+        "time",
+        "--time-budget-s",
+        "0",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let header = stdout
+        .lines()
+        .find(|l| l.starts_with("selector\t"))
+        .unwrap_or_else(|| panic!("no table header:\n{stdout}"));
+    let columns = header.split('\t').count();
+    assert_eq!(columns, 8, "unexpected header: {header}");
+    let mut rows = 0;
+    for name in ["greedy-rls", "sketched-greedy", "random", "foba",
+                 "dropping-foba", "nfold-greedy"] {
+        let line = stdout
+            .lines()
+            .find(|l| l.starts_with(name))
+            .unwrap_or_else(|| panic!("missing {name}:\n{stdout}"));
+        assert!(!line.contains("failed:"), "{line}");
+        assert_eq!(
+            line.split('\t').count(),
+            columns,
+            "ragged row: {line}"
+        );
+        rows += 1;
+    }
+    assert!(rows >= 2, "frontier needs at least two selectors");
+}
+
+/// `compare --preselect --json` writes the frontier artifact with both
+/// sketched selectors in it.
+#[test]
+fn compare_preselect_writes_frontier_json() {
+    let json = std::env::temp_dir().join("greedy_rls_cli_frontier.json");
+    let _ = std::fs::remove_file(&json);
+    let (ok, stdout, stderr) = run(&[
+        "compare",
+        "--synthetic",
+        "80,20",
+        "--k",
+        "3",
+        "--preselect",
+        "8",
+        "--sketch-dim",
+        "4",
+        "--json",
+        json.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("preselect_p=8"), "{stdout}");
+    assert!(stdout.contains("sketch_dim=4"), "{stdout}");
+    let text = std::fs::read_to_string(&json).unwrap();
+    assert!(text.trim_start().starts_with('['), "{text}");
+    assert!(text.trim_end().ends_with(']'), "{text}");
+    for name in ["greedy-rls", "sketched-greedy", "dropping-foba"] {
+        assert!(
+            text.contains(&format!("\"selector\":\"{name}\"")),
+            "missing {name} in:\n{text}"
+        );
+    }
+    assert!(text.contains("\"scan_ops\":"), "{text}");
+    let _ = std::fs::remove_file(&json);
+}
+
 #[test]
 fn threads_flag_is_deterministic_end_to_end() {
     // the same problem at --threads 1, 2, 4 must print the identical

@@ -912,6 +912,7 @@ mod tests {
     #[test]
     fn kernel_scope_paths() {
         assert!(is_kernel_scope("rust/src/select/greedy.rs"));
+        assert!(is_kernel_scope("rust/src/select/sketch.rs"));
         assert!(is_kernel_scope("rust/src/data/storage.rs"));
         assert!(!is_kernel_scope("rust/src/kernel/scalar.rs"));
         assert!(!is_kernel_scope("rust/src/parallel/mod.rs"));

@@ -421,6 +421,22 @@ fn seeded_raw_axpy_in_selector_fires() {
 }
 
 #[test]
+fn seeded_raw_axpy_in_sketch_module_fires() {
+    // the preselection scorer is in kernel scope like every selector
+    // file: a hand-rolled Gram accumulation must route through the
+    // kernel tier
+    let dir = clean_fixture("rule8e");
+    fs::write(
+        dir.join("rust/src/select/sketch.rs"),
+        "pub fn gram_row(k: &mut [f64], xi: &[f64], w: f64) {\n    for \
+         (g, &v) in k.iter_mut().zip(xi) {\n        *g += w * v;\n    }\n}\n",
+    )
+    .unwrap();
+    let r = xtask::analyze(&dir).unwrap();
+    assert_eq!(rules_found(&r), ["scan-via-kernel"]);
+}
+
+#[test]
 fn raw_axpy_in_kernel_tier_is_exempt() {
     let dir = clean_fixture("rule8b");
     // the kernel tier is where these loops are SUPPOSED to live
